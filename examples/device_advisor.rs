@@ -1,0 +1,70 @@
+//! Device advisor: which engine should you deploy for *this* forest on
+//! *that* device?
+//!
+//! The paper's conclusion is that the best implementation depends on the
+//! (forest × device) combination. This example makes the advice concrete:
+//! it trains forests of several shapes, scores all ten engine variants with
+//! the per-device cost models (Cortex-A53 / Exynos-5422 big / A7 LITTLE),
+//! and prints a recommendation matrix.
+//!
+//! ```sh
+//! cargo run --release --example device_advisor
+//! ```
+
+use arbors::coordinator::select_engine;
+use arbors::data::DatasetId;
+use arbors::device::DeviceProfile;
+use arbors::forest::builder::{train_random_forest, RfParams, TreeParams};
+
+fn main() -> anyhow::Result<()> {
+    let devices = [
+        DeviceProfile::cortex_a53(),
+        DeviceProfile::exynos_5422_big(),
+        DeviceProfile::exynos_5422_little(),
+    ];
+    let shapes = [(64usize, 32usize), (64, 64), (256, 64)];
+    let datasets = [DatasetId::Magic, DatasetId::Adult, DatasetId::Mnist];
+
+    println!(
+        "{:<9} {:<10} {:<28} {:<8} {:>14}",
+        "dataset", "forest", "device", "best", "est µs/inst"
+    );
+    println!("{}", "-".repeat(75));
+
+    for id in datasets {
+        let ds = id.generate(2500.min(id.default_n()), 7);
+        let (train, test) = ds.split(0.2, 3);
+        for (trees, leaves) in shapes {
+            let f = train_random_forest(
+                &train.x,
+                &train.labels,
+                train.d,
+                train.n_classes,
+                RfParams {
+                    n_trees: trees,
+                    tree: TreeParams { max_leaves: leaves, min_samples_leaf: 2, mtry: 0 },
+                    ..Default::default()
+                },
+            );
+            for dev in &devices {
+                let sel =
+                    select_engine(&f, &test.x[..test.d * 128], Some(dev), 2)?;
+                let best = sel.best();
+                println!(
+                    "{:<9} {:<10} {:<28} {:<8} {:>14.2}",
+                    id.name(),
+                    format!("{trees}x{leaves}"),
+                    dev.name,
+                    best.name,
+                    best.device_us_per_instance.unwrap()
+                );
+            }
+        }
+    }
+    println!(
+        "\n(estimates from the per-microarchitecture cost model; see DESIGN.md\n\
+         §Substitutions — the finding under reproduction is that the winner\n\
+         changes with the device and the forest, Figure 2 / §6.3)"
+    );
+    Ok(())
+}

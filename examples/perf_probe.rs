@@ -1,0 +1,24 @@
+//! Perf probe: stable median-of-15 timing of the hot engines (used only by
+//! the §Perf optimization loop; see EXPERIMENTS.md).
+use arbors::bench::harness::{build_engine_arc, cached_rf, eval_batch, time_per_instance, Scale};
+use arbors::data::DatasetId;
+use arbors::engine::{EngineKind, Precision};
+
+fn main() {
+    let scale = Scale::from_env();
+    let ds = DatasetId::Magic.generate(DatasetId::Magic.default_n(), 0xD5 ^ 64);
+    let (train, _) = ds.split(0.2, 7);
+    let f = cached_rf(&train, scale.cls_trees, 64);
+    let x = eval_batch(&ds, 256);
+    for (label, kind, prec) in [
+        ("QS", EngineKind::Qs, Precision::F32),
+        ("VQS", EngineKind::Vqs, Precision::F32),
+        ("RS", EngineKind::Rs, Precision::F32),
+        ("qRS", EngineKind::Rs, Precision::I16),
+        ("NA", EngineKind::Naive, Precision::F32),
+    ] {
+        let e = build_engine_arc(kind, prec, &f).unwrap();
+        let t = time_per_instance(e.as_ref(), &x, 15);
+        println!("{label:<5} {t:.3} us/inst");
+    }
+}

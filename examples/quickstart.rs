@@ -1,0 +1,86 @@
+//! Quickstart: train a Random Forest on a synthetic dataset, build every
+//! inference engine, check they all agree with the reference traversal, and
+//! compare their speed.
+//!
+//! ```sh
+//! cargo run --release --example quickstart
+//! ```
+
+use arbors::bench::harness::{eval_batch, time_per_instance};
+use arbors::data::DatasetId;
+use arbors::engine::{all_variants, build, variant_name};
+use arbors::forest::builder::{train_random_forest, RfParams, TreeParams};
+use arbors::forest::Forest;
+use arbors::quant::{choose_scale, QForest};
+
+fn main() -> anyhow::Result<()> {
+    // 1. Data: a Magic04-like synthetic classification problem.
+    let ds = DatasetId::Magic.generate(4000, 42);
+    let (train, test) = ds.split(0.2, 7);
+    println!(
+        "dataset: {} ({} train / {} test, d={}, C={})",
+        ds.name, train.n, test.n, ds.d, ds.n_classes
+    );
+
+    // 2. Train a Random Forest (128 trees, <=32 leaves — a QuickScorer-
+    //    friendly shape).
+    let forest = train_random_forest(
+        &train.x,
+        &train.labels,
+        train.d,
+        train.n_classes,
+        RfParams {
+            n_trees: 128,
+            tree: TreeParams { max_leaves: 32, min_samples_leaf: 2, mtry: 0 },
+            ..Default::default()
+        },
+    );
+    println!(
+        "forest: {} trees, {} nodes, accuracy {:.2}%",
+        forest.n_trees(),
+        forest.n_nodes(),
+        100.0 * forest.accuracy(&test.x, &test.labels)
+    );
+
+    // 3. Build every engine variant and verify agreement with the reference.
+    let x = eval_batch(&test, 512);
+    let want_float = forest.predict_batch(&x);
+    let want_argmax = Forest::argmax(&want_float, forest.n_classes);
+    // Overflow-safe scale (§5): the i16 engines' SIMD accumulators must
+    // not wrap on any instance.
+    let cfg = choose_scale(&forest, 1.0);
+    let qf = QForest::from_forest(&forest, cfg);
+    let want_quant = qf.predict_batch(&x);
+
+    println!("\n{:<7} {:>12} {:>9}  agreement", "engine", "µs/inst", "speedup");
+    // Measure the NA baseline first so every row can report its speedup.
+    let na = build(arbors::engine::EngineKind::Naive, arbors::engine::Precision::F32, &forest, None)?;
+    let na_time = time_per_instance(na.as_ref(), &x, 3);
+    for (kind, precision) in all_variants() {
+        let engine = build(kind, precision, &forest, Some(cfg))?;
+        let got = engine.predict(&x);
+        // Float engines must match the float reference; quantized engines
+        // the quantized reference.
+        let reference = match precision {
+            arbors::engine::Precision::F32 => &want_float,
+            arbors::engine::Precision::I16 => &want_quant,
+        };
+        let max_diff = got
+            .iter()
+            .zip(reference)
+            .map(|(a, b)| (a - b).abs())
+            .fold(0f32, f32::max);
+        let argmax_ok = Forest::argmax(&got, forest.n_classes) == want_argmax;
+        let t = time_per_instance(engine.as_ref(), &x, 3);
+        println!(
+            "{:<7} {:>12.2} {:>8.1}x  max|Δ|={max_diff:.1e} argmax={}",
+            variant_name(kind, precision),
+            t,
+            na_time / t,
+            if argmax_ok { "OK" } else { "differs (quantization error)" },
+        );
+    }
+
+    println!("\nAll engines agree with their reference traversal.");
+    Ok(())
+}

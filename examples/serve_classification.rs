@@ -1,0 +1,136 @@
+//! End-to-end serving driver (the repo's E2E validation run; results are
+//! recorded in EXPERIMENTS.md §E2E).
+//!
+//! Trains a real Random Forest on the Magic-like dataset, auto-selects the
+//! best engine, deploys it behind the coordinator's dynamic batcher, and
+//! drives it with concurrent open-loop clients. Reports throughput, latency
+//! percentiles, achieved batch sizes, and model accuracy over the served
+//! traffic.
+//!
+//! ```sh
+//! cargo run --release --example serve_classification [-- <requests> <clients>]
+//! ```
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Arc;
+
+use arbors::coordinator::{BatchConfig, Server};
+use arbors::data::DatasetId;
+use arbors::forest::builder::{train_random_forest, RfParams, TreeParams};
+use arbors::forest::Forest;
+use arbors::util::Stopwatch;
+
+fn main() -> anyhow::Result<()> {
+    let args: Vec<String> = std::env::args().collect();
+    let n_requests: usize = args.get(1).and_then(|s| s.parse().ok()).unwrap_or(50_000);
+    let n_clients: usize = args.get(2).and_then(|s| s.parse().ok()).unwrap_or(4);
+
+    // --- model ----------------------------------------------------------
+    let ds = DatasetId::Magic.generate(6000, 42);
+    let (train, test) = ds.split(0.2, 7);
+    eprintln!("training RF 256x64 on {} ({} rows)...", train.name, train.n);
+    let forest = train_random_forest(
+        &train.x,
+        &train.labels,
+        train.d,
+        train.n_classes,
+        RfParams {
+            n_trees: 256,
+            tree: TreeParams { max_leaves: 64, min_samples_leaf: 2, mtry: 0 },
+            ..Default::default()
+        },
+    );
+    eprintln!(
+        "model accuracy (offline): {:.2}%",
+        100.0 * forest.accuracy(&test.x, &test.labels)
+    );
+
+    // --- deploy with auto-selected engine --------------------------------
+    let server = Arc::new(Server::new());
+    let sel = server.deploy_auto(
+        "magic",
+        &forest,
+        &test.x[..test.d * 512],
+        BatchConfig {
+            max_batch: 128,
+            max_delay: std::time::Duration::from_micros(200),
+            queue_cap: 65_536,
+            workers: 2,
+        },
+    )?;
+    eprint!("{}", sel.report());
+    eprintln!("deployed with engine: {}\n", sel.best().name);
+
+    // --- drive ------------------------------------------------------------
+    let correct = Arc::new(AtomicUsize::new(0));
+    let errors = Arc::new(AtomicUsize::new(0));
+    let test = Arc::new(test);
+    let sw = Stopwatch::start();
+    let mut clients = Vec::new();
+    for cid in 0..n_clients {
+        let server = server.clone();
+        let test = test.clone();
+        let correct = correct.clone();
+        let errors = errors.clone();
+        clients.push(std::thread::spawn(move || {
+            let dep = server.model("magic").unwrap();
+            let per_client = n_requests / n_clients;
+            let mut inflight = Vec::with_capacity(256);
+            for r in 0..per_client {
+                let i = (cid + r * n_clients) % test.n;
+                match dep.batcher.submit(test.row(i).to_vec()) {
+                    Ok(rx) => inflight.push((i, rx)),
+                    Err(_) => {
+                        errors.fetch_add(1, Ordering::Relaxed);
+                    }
+                }
+                if inflight.len() >= 256 || r + 1 == per_client {
+                    for (i, rx) in inflight.drain(..) {
+                        match rx.recv() {
+                            Ok(Ok(scores)) => {
+                                let pred =
+                                    Forest::argmax(&scores, test.n_classes)[0];
+                                if pred == test.labels[i] {
+                                    correct.fetch_add(1, Ordering::Relaxed);
+                                }
+                            }
+                            _ => {
+                                errors.fetch_add(1, Ordering::Relaxed);
+                            }
+                        }
+                    }
+                }
+            }
+        }));
+    }
+    for c in clients {
+        c.join().unwrap();
+    }
+    let elapsed_s = sw.micros() / 1e6;
+
+    // --- report -----------------------------------------------------------
+    let dep = server.model("magic").unwrap();
+    let m = &dep.batcher.metrics;
+    let lat = m.latency_summary();
+    let done = m.completed.load(Ordering::Relaxed);
+    println!("=== serve_classification E2E ===");
+    println!("engine:            {}", dep.engine_name);
+    println!("requests:          {n_requests} via {n_clients} clients");
+    println!("completed:         {done} (errors/rejected: {})", errors.load(Ordering::Relaxed));
+    println!("wall time:         {elapsed_s:.2} s");
+    println!("throughput:        {:.0} req/s", done as f64 / elapsed_s);
+    println!(
+        "latency µs:        p50={:.0} p95={:.0} p99={:.0} max={:.0}",
+        lat.median, lat.p95, lat.p99, lat.max
+    );
+    println!(
+        "batching:          {} batches, mean size {:.1}",
+        m.batches.load(Ordering::Relaxed),
+        m.mean_batch_size()
+    );
+    println!(
+        "served accuracy:   {:.2}%",
+        100.0 * correct.load(Ordering::Relaxed) as f64 / done.max(1) as f64
+    );
+    Ok(())
+}

@@ -1,0 +1,67 @@
+//! Tensor offload: serve a forest through the AOT JAX/Pallas → HLO → PJRT
+//! path and cross-check it against the native Rust engines.
+//!
+//! Requires `make artifacts` (Python runs once at build time; this binary
+//! never invokes Python).
+//!
+//! ```sh
+//! make artifacts && cargo run --release --example tensor_offload
+//! ```
+
+use std::path::PathBuf;
+
+use arbors::bench::harness::time_per_instance;
+use arbors::engine::tensor::TensorEngine;
+use arbors::engine::{build, Engine, EngineKind, Precision};
+use arbors::forest::io;
+use arbors::runtime::load_manifest;
+use arbors::util::Pcg32;
+
+fn main() -> anyhow::Result<()> {
+    let dir = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    anyhow::ensure!(
+        dir.join("manifest.json").exists(),
+        "artifacts missing — run `make artifacts` first"
+    );
+
+    for name in ["rf_f32_b64", "rf_i16_b64"] {
+        let metas = load_manifest(&dir)?;
+        let meta = metas.iter().find(|m| m.name == name).unwrap();
+        let forest = io::load(&dir.join(&meta.forest))?;
+        println!(
+            "== artifact {name}: M={} K={} L={} d={} C={} batch={} dtype={:?} ==",
+            meta.n_trees, meta.k, meta.leaf_words, meta.d, meta.c, meta.batch, meta.dtype
+        );
+
+        let tensor = TensorEngine::from_artifact(&dir, name, &forest)?;
+        let qs = build(EngineKind::Qs, Precision::F32, &forest, None)?;
+        let rs = build(EngineKind::Rs, Precision::F32, &forest, None)?;
+
+        // Numerics: tensor path vs native QS on random inputs.
+        let mut rng = Pcg32::seeded(0x0FF);
+        let n = meta.batch * 4;
+        let x: Vec<f32> = (0..n * forest.n_features).map(|_| rng.f32()).collect();
+        let t_scores = tensor.predict(&x);
+        let q_scores = qs.predict(&x);
+        let max_diff = t_scores
+            .iter()
+            .zip(&q_scores)
+            .map(|(a, b)| (a - b).abs())
+            .fold(0f32, f32::max);
+        println!("  max |XLA - QS| over {n} instances: {max_diff:.2e}");
+        if meta.scale <= 1.0 {
+            anyhow::ensure!(max_diff < 1e-3, "tensor path diverged from native");
+        }
+
+        // Throughput comparison.
+        for (label, engine) in
+            [("XLA", &tensor as &dyn Engine), ("QS", qs.as_ref()), ("RS", rs.as_ref())]
+        {
+            let t = time_per_instance(engine, &x, 3);
+            println!("  {label:<4} {t:>9.2} µs/instance");
+        }
+        println!();
+    }
+    println!("tensor offload OK: AOT path and native engines agree.");
+    Ok(())
+}

@@ -1,0 +1,177 @@
+"""AOT pipeline: lower the L2 forest-evaluation graph to HLO text artifacts.
+
+Python runs ONCE at build time (`make artifacts`); the Rust coordinator loads
+the HLO via PJRT and Python never appears on the request path.
+
+Interchange format is **HLO text**, not a serialized HloModuleProto: jax
+≥ 0.5 emits protos with 64-bit instruction ids which the published `xla`
+crate's xla_extension 0.5.1 rejects (`proto.id() <= INT_MAX`); the text
+parser reassigns ids and round-trips cleanly (see /opt/xla-example/README.md
+and gen_hlo.py there).
+
+Outputs in `artifacts/`:
+  <name>.hlo.txt      — the lowered module (entry: x, thr, fid, mask_lo,
+                        mask_hi, leaves → (scores,))
+  <name>.forest.json  — the fixture forest in `arbors-forest-v1` format
+  manifest.json       — shapes/dtypes for every artifact (read by rust)
+
+Usage:
+  python -m compile.aot --out-dir ../artifacts                 # defaults
+  python -m compile.aot --forest f.json --batch 64 --name my   # custom
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from .forest import Forest, encode_qs, random_forest, save_forest
+from .kernels.quickscorer import vmem_bytes
+from .model import forest_eval, quantize_tensors
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO → XlaComputation → HLO text (see module docstring)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_forest(
+    forest: Forest,
+    batch: int,
+    *,
+    dtype: str = "f32",
+    scale: float = 32768.0,
+    block_b: int | None = None,
+    block_m: int | None = None,
+):
+    """Lower one forest shape; returns (hlo_text, meta dict)."""
+    t = encode_qs(forest)
+    m, k = t.thr.shape
+    _, l, c = t.leaves.shape
+    d = forest.n_features
+
+    if dtype == "f32":
+        x_spec = jax.ShapeDtypeStruct((batch, d), jnp.float32)
+        thr_spec = jax.ShapeDtypeStruct((m, k), jnp.float32)
+        leaves_spec = jax.ShapeDtypeStruct((m, l, c), jnp.float32)
+    elif dtype == "i16":
+        x_spec = jax.ShapeDtypeStruct((batch, d), jnp.int16)
+        thr_spec = jax.ShapeDtypeStruct((m, k), jnp.int16)
+        leaves_spec = jax.ShapeDtypeStruct((m, l, c), jnp.int16)
+    else:
+        raise ValueError(dtype)
+
+    fid_spec = jax.ShapeDtypeStruct((m, k), jnp.int32)
+    mask_spec = jax.ShapeDtypeStruct((m, k), jnp.uint32)
+
+    def fn(x, thr, fid, mlo, mhi, leaves):
+        return forest_eval(x, thr, fid, mlo, mhi, leaves, block_b=block_b, block_m=block_m)
+
+    lowered = jax.jit(fn).lower(
+        x_spec, thr_spec, fid_spec, mask_spec, mask_spec, leaves_spec
+    )
+    hlo = to_hlo_text(lowered)
+    meta = {
+        "batch": batch,
+        "n_trees": m,
+        "k": k,
+        "leaf_words": l,
+        "d": d,
+        "c": c,
+        "dtype": dtype,
+        "scale": scale if dtype == "i16" else 1.0,
+        "block_b": block_b or batch,
+        "block_m": block_m or m,
+        "vmem_bytes": vmem_bytes(
+            block_b or batch, block_m or m, d, k, l, c, 4 if dtype == "f32" else 2
+        ),
+    }
+    return hlo, meta
+
+
+def build_default_artifacts(out_dir: str) -> dict:
+    """The fixture artifact set: a float and an int16 model of the same
+    random forest, plus a larger L=64 float model."""
+    os.makedirs(out_dir, exist_ok=True)
+    manifest: dict = {"format": "arbors-artifacts-v1", "models": []}
+
+    configs = [
+        # (name, trees, features, classes, max_leaves, batch, dtype, Bb, Mb)
+        ("rf_f32_b64", 128, 32, 2, 32, 64, "f32", 32, 32),
+        ("rf_i16_b64", 128, 32, 2, 32, 64, "i16", 32, 32),
+        ("rf_f32_l64_b32", 64, 16, 3, 64, 32, "f32", 16, 16),
+    ]
+    for name, n_trees, d, c, max_leaves, batch, dtype, bb, mb in configs:
+        forest = random_forest(
+            seed=hash(name) % (2**31), n_trees=n_trees, n_features=d,
+            n_classes=c, max_leaves=max_leaves,
+        )
+        hlo, meta = lower_forest(forest, batch, dtype=dtype, block_b=bb, block_m=mb)
+        hlo_path = f"{name}.hlo.txt"
+        forest_path = f"{name}.forest.json"
+        with open(os.path.join(out_dir, hlo_path), "w") as f:
+            f.write(hlo)
+        save_forest(forest, os.path.join(out_dir, forest_path))
+        meta.update({"name": name, "hlo": hlo_path, "forest": forest_path})
+        manifest["models"].append(meta)
+        print(f"wrote {hlo_path}: {meta}")
+
+    with open(os.path.join(out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2)
+    return manifest
+
+
+def build_custom(out_dir: str, forest_path: str, name: str, batch: int,
+                 dtype: str, scale: float) -> None:
+    from .forest import load_forest
+
+    os.makedirs(out_dir, exist_ok=True)
+    forest = load_forest(forest_path)
+    hlo, meta = lower_forest(forest, batch, dtype=dtype, scale=scale)
+    hlo_path = f"{name}.hlo.txt"
+    with open(os.path.join(out_dir, hlo_path), "w") as f:
+        f.write(hlo)
+    fj = f"{name}.forest.json"
+    save_forest(forest, os.path.join(out_dir, fj))
+    meta.update({"name": name, "hlo": hlo_path, "forest": fj})
+    manifest_path = os.path.join(out_dir, "manifest.json")
+    manifest = {"format": "arbors-artifacts-v1", "models": []}
+    if os.path.exists(manifest_path):
+        with open(manifest_path) as f:
+            manifest = json.load(f)
+    manifest["models"] = [m for m in manifest["models"] if m["name"] != name]
+    manifest["models"].append(meta)
+    with open(manifest_path, "w") as f:
+        json.dump(manifest, f, indent=2)
+    print(f"wrote {hlo_path}: {meta}")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--out", default=None, help="legacy single-file mode (unused)")
+    ap.add_argument("--forest", default=None, help="compile a custom forest JSON")
+    ap.add_argument("--name", default="custom")
+    ap.add_argument("--batch", type=int, default=64)
+    ap.add_argument("--dtype", choices=["f32", "i16"], default="f32")
+    ap.add_argument("--scale", type=float, default=32768.0)
+    args = ap.parse_args()
+
+    if args.forest:
+        build_custom(args.out_dir, args.forest, args.name, args.batch, args.dtype, args.scale)
+    else:
+        build_default_artifacts(args.out_dir)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,265 @@
+"""Forest structures on the Python side of the build pipeline.
+
+Mirrors the Rust `arbors-forest-v1` JSON format (rust/src/forest/io.rs):
+trees with flat node arrays, children encoded as ``>= 0`` (inner-node index)
+or ``-(leaf+1)`` (leaf id), leaves numbered left-to-right, leaf values
+row-major ``[n_leaves, n_classes]``.
+
+Provides:
+
+* loading/saving the shared JSON format,
+* a seeded random-forest generator (for artifact fixtures and kernel tests),
+* the QuickScorer tensor encoding consumed by the L1 Pallas kernel:
+  thresholds/feature-ids ``[M, K]``, bitvector masks as two uint32 planes
+  (bit *i* of the 64-bit concatenation = leaf *i*; zeros over a false node's
+  left-subtree leaves), and the padded leaf table ``[M, L, C]``.
+"""
+
+from __future__ import annotations
+
+import json
+from dataclasses import dataclass, field
+
+import numpy as np
+
+
+@dataclass
+class Tree:
+    feature: np.ndarray  # [n_nodes] int32
+    threshold: np.ndarray  # [n_nodes] float32
+    left: np.ndarray  # [n_nodes] int32 (child encoding)
+    right: np.ndarray  # [n_nodes] int32
+    leaf_values: np.ndarray  # [n_leaves, n_classes] float32
+
+    @property
+    def n_leaves(self) -> int:
+        return self.leaf_values.shape[0]
+
+    @property
+    def n_nodes(self) -> int:
+        return len(self.feature)
+
+    def exit_leaf(self, x: np.ndarray) -> int:
+        """Reference walk for one instance (split: x[k] <= t goes left)."""
+        if self.n_nodes == 0:
+            return 0
+        cur = 0
+        while True:
+            nxt = (
+                self.left[cur]
+                if x[self.feature[cur]] <= self.threshold[cur]
+                else self.right[cur]
+            )
+            if nxt < 0:
+                return -int(nxt) - 1
+            cur = int(nxt)
+
+    def left_leaf_ranges(self) -> list[tuple[int, int]]:
+        """Per inner node: the [begin, end) leaf range of its left subtree."""
+        out = [(0, 0)] * self.n_nodes
+        if self.n_nodes == 0:
+            return out
+
+        def span(child: int) -> tuple[int, int]:
+            if child < 0:
+                leaf = -child - 1
+                return leaf, leaf + 1
+            lb, le = span(int(self.left[child]))
+            rb, re = span(int(self.right[child]))
+            assert le == rb, "leaves must be numbered left-to-right"
+            out[child] = (lb, le)
+            return lb, re
+
+        span(0)
+        return out
+
+
+@dataclass
+class Forest:
+    trees: list[Tree]
+    n_features: int
+    n_classes: int
+    task: str = "classification"
+    base_score: np.ndarray = field(default_factory=lambda: np.zeros(0, np.float32))
+
+    @property
+    def n_trees(self) -> int:
+        return len(self.trees)
+
+    @property
+    def max_leaves(self) -> int:
+        return max(t.n_leaves for t in self.trees)
+
+
+def load_forest(path: str) -> Forest:
+    with open(path) as f:
+        j = json.load(f)
+    assert j["format"] == "arbors-forest-v1", j.get("format")
+    trees = [
+        Tree(
+            feature=np.asarray(t["feature"], np.int32),
+            threshold=np.asarray(t["threshold"], np.float32),
+            left=np.asarray(t["left"], np.int32),
+            right=np.asarray(t["right"], np.int32),
+            leaf_values=np.asarray(t["leaf_values"], np.float32).reshape(
+                t["n_leaves"], j["n_classes"]
+            ),
+        )
+        for t in j["trees"]
+    ]
+    return Forest(
+        trees=trees,
+        n_features=j["n_features"],
+        n_classes=j["n_classes"],
+        task=j["task"],
+        base_score=np.asarray(j["base_score"], np.float32),
+    )
+
+
+def save_forest(forest: Forest, path: str) -> None:
+    j = {
+        "format": "arbors-forest-v1",
+        "task": forest.task,
+        "n_features": forest.n_features,
+        "n_classes": forest.n_classes,
+        "base_score": [float(v) for v in forest.base_score],
+        "trees": [
+            {
+                "feature": t.feature.tolist(),
+                "threshold": [float(v) for v in t.threshold],
+                "left": t.left.tolist(),
+                "right": t.right.tolist(),
+                "leaf_values": [float(v) for v in t.leaf_values.reshape(-1)],
+                "n_leaves": int(t.n_leaves),
+            }
+            for t in forest.trees
+        ],
+    }
+    with open(path, "w") as f:
+        json.dump(j, f)
+
+
+def random_tree(rng: np.random.Generator, n_features: int, n_classes: int,
+                n_leaves: int) -> Tree:
+    """Grow a random tree with exactly `n_leaves` leaves by repeatedly
+    splitting a random leaf; leaves are renumbered left-to-right at the end.
+    """
+    # Structure as nested lists: node = [feature, thr, left, right];
+    # leaf = None placeholder replaced by ids later.
+    tree: list = ["leaf"]
+
+    def count_leaves(node) -> int:
+        if node[0] == "leaf":
+            return 1
+        return count_leaves(node[2]) + count_leaves(node[3])
+
+    def split_random_leaf(node) -> bool:
+        if node[0] == "leaf":
+            node[:] = [
+                int(rng.integers(n_features)),
+                float(rng.uniform(0.05, 0.95)),
+                ["leaf"],
+                ["leaf"],
+            ]
+            return True
+        branch = node[2] if rng.random() < 0.5 else node[3]
+        return split_random_leaf(branch)
+
+    while count_leaves(tree) < n_leaves:
+        split_random_leaf(tree)
+
+    feature, threshold, left, right = [], [], [], []
+    leaf_values: list[np.ndarray] = []
+
+    def emit(node) -> int:
+        """Returns the child encoding of this subtree."""
+        if node[0] == "leaf":
+            leaf_values.append(rng.normal(size=n_classes).astype(np.float32) * 0.1)
+            return -(len(leaf_values) - 1) - 1
+        idx = len(feature)
+        feature.append(node[0])
+        threshold.append(node[1])
+        left.append(0)
+        right.append(0)
+        left[idx] = emit(node[2])
+        right[idx] = emit(node[3])
+        return idx
+
+    emit(tree)
+    return Tree(
+        feature=np.asarray(feature, np.int32),
+        threshold=np.asarray(threshold, np.float32),
+        left=np.asarray(left, np.int32),
+        right=np.asarray(right, np.int32),
+        leaf_values=np.stack(leaf_values),
+    )
+
+
+def random_forest(seed: int, n_trees: int, n_features: int, n_classes: int,
+                  max_leaves: int) -> Forest:
+    """Seeded random forest for fixtures: tree i has 2..max_leaves leaves."""
+    rng = np.random.default_rng(seed)
+    trees = [
+        random_tree(rng, n_features, n_classes,
+                    int(rng.integers(2, max_leaves + 1)))
+        for _ in range(n_trees)
+    ]
+    return Forest(
+        trees=trees,
+        n_features=n_features,
+        n_classes=n_classes,
+        base_score=np.zeros(n_classes, np.float32),
+    )
+
+
+@dataclass
+class QsTensors:
+    """QuickScorer tensor encoding with static shapes (see module docs)."""
+
+    thr: np.ndarray  # [M, K] float32 (+inf padding)
+    fid: np.ndarray  # [M, K] int32
+    mask_lo: np.ndarray  # [M, K] uint32 (bits 0..31 of the leaf bitvector)
+    mask_hi: np.ndarray  # [M, K] uint32 (bits 32..63)
+    leaves: np.ndarray  # [M, L, C] float32 (padded rows zero)
+    leaf_words: int  # 32 or 64
+
+    @property
+    def shapes(self) -> dict:
+        m, k = self.thr.shape
+        _, l, c = self.leaves.shape
+        return {"n_trees": m, "k": k, "leaf_words": l, "c": c}
+
+
+def encode_qs(forest: Forest) -> QsTensors:
+    """Encode a forest into the dense QuickScorer tensors.
+
+    Unlike the scalar algorithm, the tensorized kernel AND-reduces over *all*
+    nodes (no early exit), so node order within a tree is irrelevant; trees
+    with fewer nodes are padded with `thr = +inf` (never a false node).
+    """
+    leaf_words = 32 if forest.max_leaves <= 32 else 64
+    assert forest.max_leaves <= 64, "QuickScorer tensors support <= 64 leaves"
+    m = forest.n_trees
+    k = max(max(t.n_nodes for t in forest.trees), 1)
+    c = forest.n_classes
+
+    thr = np.full((m, k), np.inf, np.float32)
+    fid = np.zeros((m, k), np.int32)
+    mask_lo = np.full((m, k), 0xFFFFFFFF, np.uint32)
+    mask_hi = np.full((m, k), 0xFFFFFFFF, np.uint32)
+    leaves = np.zeros((m, leaf_words, c), np.float32)
+
+    for ti, t in enumerate(forest.trees):
+        ranges = t.left_leaf_ranges()
+        for ni in range(t.n_nodes):
+            b, e = ranges[ni]
+            width = e - b
+            ones = (1 << width) - 1
+            mask64 = ~(ones << b) & 0xFFFFFFFFFFFFFFFF
+            thr[ti, ni] = t.threshold[ni]
+            fid[ti, ni] = t.feature[ni]
+            mask_lo[ti, ni] = mask64 & 0xFFFFFFFF
+            mask_hi[ti, ni] = (mask64 >> 32) & 0xFFFFFFFF
+        leaves[ti, : t.n_leaves] = t.leaf_values
+
+    return QsTensors(thr, fid, mask_lo, mask_hi, leaves, leaf_words)

@@ -1,0 +1,150 @@
+"""L1 alternative: tree traversal as matrix multiplication (MXU variant).
+
+The bitvector kernel (`quickscorer.py`) is a VPU workload — compares and
+masks, no matmul. TPUs, however, earn their FLOPs on the MXU systolic
+array, and the paper's related work (Nakandala et al. 2020, "Hummingbird")
+shows tree traversal can be recast as dense tensor algebra. This module
+implements that GEMM formulation as a second Pallas kernel so the repo can
+quantify the trade-off the paper alludes to: *"mapping DT traversal to
+tensor operations usually leads to an increase in computation, but this
+increase is justified due to the availability of more efficient tensor
+hardware."*
+
+Encoding (per tree, padded to the forest maxima):
+
+* ``A``  [d, K]      one-hot: A[f, n] = 1 if node n tests feature f
+* ``t``  [K]         node thresholds
+* ``B``  [K, L]      path matrix: B[n, l] = +1 if leaf l is in n's left
+                     subtree, -1 if in its right subtree, else 0
+* ``cnt`` [L]        number of internal nodes on the path to leaf l
+
+Evaluation for an instance x:
+
+1. ``s = step(tᵀ - xᵀA)``  — s[n] = 1 if x goes left at node n (x ≤ t)
+2. ``r = (2s - 1) B``      — r[l] counts path agreements minus disagreements
+3. exit leaf = argmax over l of (r[l] == cnt[l])  (exactly one leaf matches
+   all of its path decisions)
+4. score = leaf_values[exit leaf]
+
+Steps 1 and 2 are batched matmuls → MXU work. The kernel tiles over
+(batch × trees) like the bitvector kernel. On real TPU the matmuls would run
+in bf16 with f32 accumulation; interpret mode executes them as f32.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+
+from ..forest import Forest
+
+
+def encode_gemm(forest: Forest):
+    """Encode a forest into the GEMM tensors.
+
+    Returns dict of numpy arrays: A [M, d, K], thr [M, K], B [M, K, L],
+    cnt [M, L], leaves [M, L, C].
+    """
+    m = forest.n_trees
+    d = forest.n_features
+    k = max(max(t.n_nodes for t in forest.trees), 1)
+    l = forest.max_leaves
+    c = forest.n_classes
+
+    a = np.zeros((m, d, k), np.float32)
+    thr = np.full((m, k), np.float32(np.finfo(np.float32).max / 2), np.float32)
+    b = np.zeros((m, k, l), np.float32)
+    cnt = np.zeros((m, l), np.float32)
+    leaves = np.zeros((m, l, c), np.float32)
+
+    for ti, tree in enumerate(forest.trees):
+        leaves[ti, : tree.n_leaves] = tree.leaf_values
+        # Walk every root-to-leaf path collecting (node, direction).
+        def walk(child: int, path):
+            if child < 0:
+                leaf = -child - 1
+                cnt[ti, leaf] = len(path)
+                for node, went_left in path:
+                    b[ti, node, leaf] = 1.0 if went_left else -1.0
+                return
+            walk(int(tree.left[child]), path + [(child, True)])
+            walk(int(tree.right[child]), path + [(child, False)])
+
+        if tree.n_nodes:
+            walk(0, [])
+            for n in range(tree.n_nodes):
+                a[ti, tree.feature[n], n] = 1.0
+                thr[ti, n] = tree.threshold[n]
+        else:
+            cnt[ti, 0] = 0.0
+    return {"a": a, "thr": thr, "b": b, "cnt": cnt, "leaves": leaves}
+
+
+def _kernel(x_ref, a_ref, thr_ref, b_ref, cnt_ref, leaves_ref, o_ref):
+    m_idx = pl.program_id(1)
+    x = x_ref[...]  # [Bb, d]
+    a = a_ref[...]  # [Mb, d, K]
+    thr = thr_ref[...]  # [Mb, K]
+    b = b_ref[...]  # [Mb, K, L]
+    cnt = cnt_ref[...]  # [Mb, L]
+    leaves = leaves_ref[...]  # [Mb, L, C]
+
+    # Step 1 — feature selection matmul (MXU): xa[m, i, n] = x[i] · A[m].
+    xa = jnp.einsum("id,mdk->mik", x, a)  # [Mb, Bb, K]
+    s = (xa <= thr[:, None, :]).astype(jnp.float32)  # left decisions
+
+    # Step 2 — path-agreement matmul (MXU).
+    r = jnp.einsum("mik,mkl->mil", 2.0 * s - 1.0, b)  # [Mb, Bb, L]
+
+    # Step 3 — the exit leaf matches all its path decisions.
+    hit = (r == cnt[:, None, :]).astype(jnp.float32)  # [Mb, Bb, L]
+
+    # Step 4 — gather = one more matmul: scores[m, i, c] = hit · leaves[m].
+    partial = jnp.einsum("mil,mlc->ic", hit, leaves)  # [Bb, C]
+
+    @pl.when(m_idx == 0)
+    def _init():
+        o_ref[...] = partial
+
+    @pl.when(m_idx != 0)
+    def _acc():
+        o_ref[...] += partial
+
+
+def gemm_forest_eval(x, a, thr, b, cnt, leaves, *, block_b=None, block_m=None,
+                     interpret: bool = True):
+    """Evaluate the GEMM-encoded forest; returns [B, C] f32 scores."""
+    bsz, d = x.shape
+    m, _, k = a.shape
+    _, l, c = leaves.shape
+    block_b = block_b or bsz
+    block_m = block_m or m
+    assert bsz % block_b == 0 and m % block_m == 0
+
+    grid = (bsz // block_b, m // block_m)
+    return pl.pallas_call(
+        functools.partial(_kernel),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_b, d), lambda i, mm: (i, 0)),
+            pl.BlockSpec((block_m, d, k), lambda i, mm: (mm, 0, 0)),
+            pl.BlockSpec((block_m, k), lambda i, mm: (mm, 0)),
+            pl.BlockSpec((block_m, k, l), lambda i, mm: (mm, 0, 0)),
+            pl.BlockSpec((block_m, l), lambda i, mm: (mm, 0)),
+            pl.BlockSpec((block_m, l, c), lambda i, mm: (mm, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((block_b, c), lambda i, mm: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((bsz, c), jnp.float32),
+        interpret=interpret,
+    )(x, a, thr, b, cnt, leaves)
+
+
+def gemm_flops(batch: int, m: int, d: int, k: int, l: int, c: int) -> int:
+    """MACs per batch for the three matmuls — the 'increase in computation'
+    the tensor formulation pays (compare against ~nodes-visited for
+    QuickScorer)."""
+    return batch * m * (d * k + k * l + l * c)

@@ -1,0 +1,166 @@
+"""L1: the QuickScorer traversal as a Pallas kernel.
+
+Hardware adaptation (DESIGN.md §Hardware-Adaptation): the paper vectorizes
+QuickScorer across v instances in 128-bit NEON registers. On TPU the same
+insight — *replace pointer-chasing descent with feature compares + bitvector
+AND-masking over dense node arrays* — maps to the VPU: the batch dimension
+plays the role of the NEON lanes, one broadcast compare tests a whole
+(batch-tile × node-tile) block, masks combine with a bitwise AND reduction,
+and the exit leaf falls out of a count-trailing-zeros (`lax.clz`) instead of
+NEON's `vrbitq`+`vclzq` trick.
+
+Bitvector encoding: leaf `i` of a tree is bit `i` of a 64-bit word stored as
+two uint32 planes (`mask_lo` = bits 0..31, `mask_hi` = bits 32..63). A false
+node (x[k] > t) contributes zeros over its left subtree's leaf range; the
+exit leaf is the lowest set bit of the AND of all contributions — computed
+per (instance, tree) without any branching.
+
+The kernel runs under ``interpret=True``: the CPU PJRT plugin cannot execute
+Mosaic custom-calls, so interpret mode is both the correctness path and what
+``aot.py`` lowers into the artifacts (see /opt/xla-example/README.md). The
+BlockSpec structure (HBM→VMEM tiles over batch × trees) is still the real
+TPU schedule; EXPERIMENTS.md §Perf derives the VMEM footprint from it.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.experimental import pallas as pl
+
+_FULL = 0xFFFFFFFF
+
+
+def _tz32(w):
+    """Index of the lowest set bit of a uint32; 32 when w == 0.
+
+    ctz(w) = 31 - clz(w & -w); the NEON equivalent is Alg. 4's
+    vclzq(vrbitq(b)) byte trick.
+    """
+    isolated = jnp.bitwise_and(w, jnp.bitwise_not(w) + jnp.uint32(1))
+    return jnp.where(
+        w == jnp.uint32(0),
+        jnp.int32(32),
+        jnp.int32(31) - lax.clz(isolated).astype(jnp.int32),
+    )
+
+
+def _kernel(x_ref, thr_ref, fid_ref, mlo_ref, mhi_ref, leaves_ref, o_ref, *, acc_dtype):
+    """One (batch-tile, tree-tile) block of the traversal."""
+    m_idx = pl.program_id(1)
+    x = x_ref[...]  # [Bb, d]
+    thr = thr_ref[...]  # [Mb, K]
+    fid = fid_ref[...]  # [Mb, K]  int32
+    mlo = mlo_ref[...]  # [Mb, K]  uint32
+    mhi = mhi_ref[...]
+    leaves = leaves_ref[...]  # [Mb, L, C]
+
+    bb = x.shape[0]
+    mb, k = thr.shape
+
+    # Gather the tested feature of every node for every instance:
+    # xk[b, m, n] = x[b, fid[m, n]].
+    xk = jnp.take(x, fid.reshape(-1), axis=1).reshape(bb, mb, k)
+
+    # Mask computation: false nodes contribute their bitvector, true nodes
+    # contribute all-ones (identity of AND). Padded nodes have thr=+inf
+    # (float) / 32767 (int16) and are never false.
+    cond = xk > thr[None, :, :]
+    full = jnp.uint32(_FULL)
+    lo = jnp.where(cond, mlo[None, :, :], full)
+    hi = jnp.where(cond, mhi[None, :, :], full)
+    lo = lax.reduce(lo, full, lax.bitwise_and, dimensions=[2])  # [Bb, Mb]
+    hi = lax.reduce(hi, full, lax.bitwise_and, dimensions=[2])
+
+    # Exit leaf: lowest set bit across the 64-bit (hi:lo) concatenation.
+    j = jnp.where(lo != jnp.uint32(0), _tz32(lo), jnp.int32(32) + _tz32(hi))
+
+    # Score: gather each (instance, tree)'s leaf row and sum over the tile's
+    # trees.
+    vals = leaves[jnp.arange(mb)[None, :], j]  # [Bb, Mb, C]
+    partial = jnp.sum(vals.astype(acc_dtype), axis=1)  # [Bb, C]
+
+    @pl.when(m_idx == 0)
+    def _init():
+        o_ref[...] = partial
+
+    @pl.when(m_idx != 0)
+    def _acc():
+        o_ref[...] += partial
+
+
+def quickscorer(
+    x,
+    thr,
+    fid,
+    mask_lo,
+    mask_hi,
+    leaves,
+    *,
+    block_b: int | None = None,
+    block_m: int | None = None,
+    interpret: bool = True,
+):
+    """Evaluate a QuickScorer-encoded forest on a batch.
+
+    Args:
+        x: [B, d] features — float32 for the float model, int16 for the
+           fixed-point model (pre-quantized with the model's scale).
+        thr: [M, K] node thresholds (same dtype as ``x``; padding +inf /
+           int16 max).
+        fid: [M, K] int32 feature ids.
+        mask_lo / mask_hi: [M, K] uint32 bitvector planes.
+        leaves: [M, L, C] leaf values — float32 or int16.
+        block_b / block_m: VMEM tile sizes (must divide B and M); default
+           whole array.
+        interpret: run the Pallas interpreter (required on CPU PJRT).
+
+    Returns:
+        [B, C] scores — float32 for float models, int32 (undescaled) for
+        int16 models.
+    """
+    b, _ = x.shape
+    m, k = thr.shape
+    _, l, c = leaves.shape
+    block_b = block_b or b
+    block_m = block_m or m
+    assert b % block_b == 0, (b, block_b)
+    assert m % block_m == 0, (m, block_m)
+    assert x.dtype == thr.dtype, (x.dtype, thr.dtype)
+
+    acc_dtype = jnp.float32 if leaves.dtype == jnp.float32 else jnp.int32
+    grid = (b // block_b, m // block_m)
+    d = x.shape[1]
+
+    return pl.pallas_call(
+        functools.partial(_kernel, acc_dtype=acc_dtype),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_b, d), lambda i, mm: (i, 0)),
+            pl.BlockSpec((block_m, k), lambda i, mm: (mm, 0)),
+            pl.BlockSpec((block_m, k), lambda i, mm: (mm, 0)),
+            pl.BlockSpec((block_m, k), lambda i, mm: (mm, 0)),
+            pl.BlockSpec((block_m, k), lambda i, mm: (mm, 0)),
+            pl.BlockSpec((block_m, l, c), lambda i, mm: (mm, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((block_b, c), lambda i, mm: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, c), acc_dtype),
+        interpret=interpret,
+    )(x, thr, fid, mask_lo, mask_hi, leaves)
+
+
+def vmem_bytes(block_b: int, block_m: int, d: int, k: int, l: int, c: int,
+               dtype_bytes: int = 4) -> int:
+    """Estimated VMEM footprint of one kernel invocation (for the §Perf
+    tables): input tiles + output tile + the [Bb, Mb, K] gather intermediate
+    that dominates."""
+    x_tile = block_b * d * dtype_bytes
+    node_tiles = block_m * k * (dtype_bytes + 4 + 4 + 4)
+    leaf_tile = block_m * l * c * dtype_bytes
+    out_tile = block_b * c * 4
+    gather = block_b * block_m * k * dtype_bytes
+    masks = 2 * block_b * block_m * 4
+    return x_tile + node_tiles + leaf_tile + out_tile + gather + masks

@@ -1,0 +1,72 @@
+"""Pure-numpy correctness oracle for the QuickScorer Pallas kernel.
+
+Deliberately *independent* of the kernel's tensor encoding: it walks each
+tree node-by-node from the structural (children-array) representation, so a
+bug in `encode_qs` or in the kernel's bitvector math cannot cancel out.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from ..forest import Forest
+
+
+def predict_forest(forest: Forest, x: np.ndarray) -> np.ndarray:
+    """Reference scores: walk every tree for every instance.
+
+    Args:
+        forest: structural forest.
+        x: [B, d] float32.
+
+    Returns:
+        [B, C] float32 scores (sum of leaf vectors + base score).
+    """
+    b = x.shape[0]
+    base = (
+        forest.base_score.astype(np.float32)
+        if forest.base_score.size
+        else np.zeros(forest.n_classes, np.float32)
+    )
+    out = np.tile(base, (b, 1))
+    for t in forest.trees:
+        for i in range(b):
+            leaf = t.exit_leaf(x[i])
+            out[i] += t.leaf_values[leaf]
+    return out
+
+
+def predict_forest_quant(forest: Forest, x: np.ndarray, scale: float) -> np.ndarray:
+    """Reference for the int16 fixed-point path (paper eq. 3): thresholds,
+    leaves and features quantized with ``q(v) = floor(scale * v)`` saturated
+    to i16; scores accumulate in i32 and descale at the end."""
+
+    def q(v: np.ndarray) -> np.ndarray:
+        return np.clip(np.floor(scale * np.asarray(v, np.float64)), -32768, 32767).astype(
+            np.int16
+        )
+
+    b = x.shape[0]
+    qx = q(x)
+    acc = np.zeros((b, forest.n_classes), np.int32)
+    for t in forest.trees:
+        qthr = q(t.threshold)
+        qleaf = q(t.leaf_values)
+        for i in range(b):
+            if t.n_nodes == 0:
+                leaf = 0
+            else:
+                cur = 0
+                while True:
+                    nxt = (
+                        t.left[cur]
+                        if qx[i, t.feature[cur]] <= qthr[cur]
+                        else t.right[cur]
+                    )
+                    if nxt < 0:
+                        leaf = -int(nxt) - 1
+                        break
+                    cur = int(nxt)
+            acc[i] += qleaf[leaf].astype(np.int32)
+    base = np.floor(scale * forest.base_score).astype(np.int32)
+    return (acc + base).astype(np.float32) / np.float32(scale)

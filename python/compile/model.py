@@ -1,0 +1,83 @@
+"""L2: the forest-evaluation compute graph.
+
+Two equivalent paths:
+
+* :func:`forest_eval` — calls the L1 Pallas kernel (this is what `aot.py`
+  lowers into the serving artifacts);
+* :func:`forest_eval_jnp` — the same math in plain jnp (XLA-fused tensor
+  ops), used as the L2 cross-check and as the "tensor-compiler baseline" in
+  the ablation bench (cf. Nakandala et al. 2020 in the paper's related work).
+
+Both are pure functions of `(x, thr, fid, mask_lo, mask_hi, leaves)` so the
+lowered HLO takes the forest as runtime inputs: one artifact per *shape*
+(B, M, K, L, C), reusable across forests of that shape.
+
+The int16 fixed-point model (paper §5) takes pre-quantized i16 features and
+returns undescaled i32 scores — the request path stays integer-only, the
+Rust side descales.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+from jax import lax
+
+from .kernels.quickscorer import quickscorer
+
+_FULL = 0xFFFFFFFF
+
+
+def forest_eval(x, thr, fid, mask_lo, mask_hi, leaves, *, block_b=None, block_m=None):
+    """Pallas-kernel forest evaluation; returns a 1-tuple for AOT lowering
+    (the HLO bridge unwraps `to_tuple1` on the Rust side)."""
+    scores = quickscorer(
+        x, thr, fid, mask_lo, mask_hi, leaves, block_b=block_b, block_m=block_m
+    )
+    return (scores,)
+
+
+def forest_eval_jnp(x, thr, fid, mask_lo, mask_hi, leaves):
+    """Plain-jnp reference of the same tensorized traversal."""
+    b = x.shape[0]
+    m, k = thr.shape
+    xk = jnp.take(x, fid.reshape(-1), axis=1).reshape(b, m, k)
+    cond = xk > thr[None, :, :]
+    full = jnp.uint32(_FULL)
+    lo = lax.reduce(jnp.where(cond, mask_lo[None], full), full, lax.bitwise_and, dimensions=[2])
+    hi = lax.reduce(jnp.where(cond, mask_hi[None], full), full, lax.bitwise_and, dimensions=[2])
+
+    def tz32(w):
+        isolated = jnp.bitwise_and(w, jnp.bitwise_not(w) + jnp.uint32(1))
+        return jnp.where(
+            w == jnp.uint32(0),
+            jnp.int32(32),
+            jnp.int32(31) - lax.clz(isolated).astype(jnp.int32),
+        )
+
+    j = jnp.where(lo != jnp.uint32(0), tz32(lo), jnp.int32(32) + tz32(hi))
+    vals = leaves[jnp.arange(m)[None, :], j]  # [B, M, C]
+    acc_dtype = jnp.float32 if leaves.dtype == jnp.float32 else jnp.int32
+    return (jnp.sum(vals.astype(acc_dtype), axis=1),)
+
+
+def quantize_tensors(thr, leaves, scale: float):
+    """Fixed-point model tensors (paper eq. 3): q(v) = floor(scale * v),
+    saturated to int16. Padded +inf thresholds map to int16 max, preserving
+    the 'never false' property."""
+    import numpy as np
+
+    def q(v):
+        return np.clip(np.floor(scale * np.asarray(v, np.float64)), -32768, 32767).astype(
+            np.int16
+        )
+
+    return q(thr), q(leaves)
+
+
+def quantize_features(x, scale: float):
+    """Quantize a feature batch for the int16 model."""
+    import numpy as np
+
+    return np.clip(np.floor(scale * np.asarray(x, np.float64)), -32768, 32767).astype(
+        np.int16
+    )

@@ -1,0 +1,54 @@
+"""AOT pipeline tests: lowering produces loadable HLO text whose numerics
+match the oracle when executed through jax itself (the Rust integration test
+covers the PJRT side)."""
+
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from compile.aot import lower_forest, to_hlo_text
+from compile.forest import encode_qs, random_forest
+from compile.kernels.ref import predict_forest
+from compile.model import forest_eval
+
+
+def test_lowered_hlo_is_parseable_text():
+    f = random_forest(seed=1, n_trees=8, n_features=6, n_classes=2, max_leaves=32)
+    hlo, meta = lower_forest(f, batch=16)
+    assert "ENTRY" in hlo and "HloModule" in hlo
+    assert meta["n_trees"] == 8
+    assert meta["leaf_words"] == 32
+    assert meta["dtype"] == "f32"
+    # XLA's own parser must accept it (same API the rust crate wraps).
+    # xla_client exposes the text parser indirectly through the HLO module
+    # printer; a structural sanity check keeps this dependency-light:
+    assert hlo.count("parameter(") >= 6
+
+
+def test_lowered_i16_has_integer_entry():
+    f = random_forest(seed=2, n_trees=4, n_features=4, n_classes=2, max_leaves=16)
+    hlo, meta = lower_forest(f, batch=8, dtype="i16")
+    assert "s16" in hlo, "int16 parameters must appear in the module"
+    assert meta["dtype"] == "i16"
+
+
+def test_roundtrip_execution_via_jax_matches_oracle():
+    """Execute the same jitted function that was lowered and compare to the
+    oracle — guards against the lowering wrapper disagreeing with the model
+    function (shape mixups, block sizing)."""
+    f = random_forest(seed=3, n_trees=10, n_features=5, n_classes=2, max_leaves=32)
+    t = encode_qs(f)
+    rng = np.random.default_rng(4)
+    x = rng.uniform(0, 1, size=(16, 5)).astype(np.float32)
+    got = np.asarray(
+        forest_eval(x, t.thr, t.fid, t.mask_lo, t.mask_hi, t.leaves,
+                    block_b=8, block_m=5)[0]
+    )
+    ref = predict_forest(f, x)
+    np.testing.assert_allclose(got, ref, rtol=1e-5, atol=1e-5)
+
+
+def test_vmem_meta_present():
+    f = random_forest(seed=5, n_trees=8, n_features=6, n_classes=2, max_leaves=32)
+    _, meta = lower_forest(f, batch=16, block_b=8, block_m=4)
+    assert meta["vmem_bytes"] > 0
+    assert meta["block_b"] == 8 and meta["block_m"] == 4

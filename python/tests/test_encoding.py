@@ -1,0 +1,82 @@
+"""Structural tests of the forest generator and QuickScorer tensor encoding."""
+
+import json
+
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from compile.forest import (
+    Forest,
+    encode_qs,
+    load_forest,
+    random_forest,
+    save_forest,
+)
+
+
+@settings(max_examples=20, deadline=None)
+@given(seed=st.integers(0, 10_000), max_leaves=st.integers(2, 64))
+def test_random_tree_leaf_numbering_inorder(seed, max_leaves):
+    f = random_forest(seed=seed, n_trees=3, n_features=4, n_classes=2,
+                      max_leaves=max_leaves)
+    for t in f.trees:
+        # left_leaf_ranges asserts in-order numbering internally.
+        ranges = t.left_leaf_ranges()
+        assert len(ranges) == t.n_nodes
+        for b, e in ranges:
+            assert e > b
+
+
+def test_encode_masks_zero_exactly_left_subtree():
+    f = random_forest(seed=5, n_trees=2, n_features=3, n_classes=1, max_leaves=16)
+    t = encode_qs(f)
+    for ti, tree in enumerate(f.trees):
+        ranges = tree.left_leaf_ranges()
+        for ni, (b, e) in enumerate(ranges):
+            mask = int(t.mask_lo[ti, ni]) | (int(t.mask_hi[ti, ni]) << 32)
+            for bit in range(64):
+                expect = 0 if b <= bit < e else 1
+                assert (mask >> bit) & 1 == expect, (ti, ni, bit)
+
+
+def test_encode_padding_is_inert():
+    f = random_forest(seed=6, n_trees=4, n_features=3, n_classes=2, max_leaves=32)
+    t = encode_qs(f)
+    for ti, tree in enumerate(f.trees):
+        for ni in range(tree.n_nodes, t.thr.shape[1]):
+            assert np.isinf(t.thr[ti, ni])
+            assert t.mask_lo[ti, ni] == 0xFFFFFFFF
+            assert t.mask_hi[ti, ni] == 0xFFFFFFFF
+        # Padded leaf rows are zero.
+        assert not t.leaves[ti, tree.n_leaves:].any()
+
+
+def test_forest_json_roundtrip(tmp_path):
+    f = random_forest(seed=7, n_trees=3, n_features=5, n_classes=3, max_leaves=16)
+    p = tmp_path / "f.json"
+    save_forest(f, str(p))
+    f2 = load_forest(str(p))
+    assert f2.n_trees == f.n_trees
+    for a, b in zip(f.trees, f2.trees):
+        np.testing.assert_array_equal(a.feature, b.feature)
+        np.testing.assert_allclose(a.threshold, b.threshold, rtol=1e-6)
+        np.testing.assert_allclose(a.leaf_values, b.leaf_values, rtol=1e-6)
+    # And the format field matches the Rust loader's expectation.
+    j = json.loads(p.read_text())
+    assert j["format"] == "arbors-forest-v1"
+
+
+def test_exit_leaf_boundary_semantics():
+    """Split is x <= t: exactly-at-threshold goes left."""
+    import numpy as np
+    from compile.forest import Tree
+
+    t = Tree(
+        feature=np.array([0], np.int32),
+        threshold=np.array([0.5], np.float32),
+        left=np.array([-1], np.int32),   # leaf 0
+        right=np.array([-2], np.int32),  # leaf 1
+        leaf_values=np.array([[1.0], [2.0]], np.float32),
+    )
+    assert t.exit_leaf(np.array([0.5], np.float32)) == 0
+    assert t.exit_leaf(np.array([0.5000001], np.float32)) == 1

@@ -1,0 +1,68 @@
+"""GEMM (MXU-variant) kernel vs the tree-walk oracle."""
+
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from compile.forest import encode_qs, random_forest
+from compile.kernels.gemm import encode_gemm, gemm_flops, gemm_forest_eval
+from compile.kernels.ref import predict_forest
+from compile.model import forest_eval
+
+
+def _run(f, x, **kw):
+    t = encode_gemm(f)
+    return np.asarray(
+        gemm_forest_eval(x, t["a"], t["thr"], t["b"], t["cnt"], t["leaves"], **kw)
+    )
+
+
+def test_gemm_matches_oracle_basic():
+    f = random_forest(seed=1, n_trees=10, n_features=7, n_classes=3, max_leaves=16)
+    rng = np.random.default_rng(2)
+    x = rng.uniform(0, 1, size=(24, 7)).astype(np.float32)
+    got = _run(f, x)
+    ref = predict_forest(f, x)
+    np.testing.assert_allclose(got, ref, rtol=1e-4, atol=1e-4)
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    seed=st.integers(0, 5000),
+    n_trees=st.integers(1, 12),
+    d=st.integers(1, 10),
+    c=st.integers(1, 4),
+    max_leaves=st.sampled_from([2, 8, 16, 32]),
+)
+def test_gemm_matches_oracle_sweep(seed, n_trees, d, c, max_leaves):
+    f = random_forest(seed=seed, n_trees=n_trees, n_features=d, n_classes=c,
+                      max_leaves=max_leaves)
+    rng = np.random.default_rng(seed + 1)
+    x = rng.uniform(0, 1, size=(12, d)).astype(np.float32)
+    got = _run(f, x)
+    ref = predict_forest(f, x)
+    np.testing.assert_allclose(got, ref, rtol=1e-4, atol=1e-4)
+
+
+def test_gemm_equals_bitvector_kernel():
+    """The two L1 formulations (VPU bitvector vs MXU GEMM) must agree."""
+    f = random_forest(seed=9, n_trees=8, n_features=5, n_classes=2, max_leaves=32)
+    rng = np.random.default_rng(10)
+    x = rng.uniform(0, 1, size=(16, 5)).astype(np.float32)
+    g = _run(f, x)
+    t = encode_qs(f)
+    q = np.asarray(forest_eval(x, t.thr, t.fid, t.mask_lo, t.mask_hi, t.leaves)[0])
+    np.testing.assert_allclose(g, q, rtol=1e-4, atol=1e-4)
+
+
+def test_gemm_tiling_invariant():
+    f = random_forest(seed=11, n_trees=8, n_features=4, n_classes=2, max_leaves=8)
+    rng = np.random.default_rng(12)
+    x = rng.uniform(0, 1, size=(8, 4)).astype(np.float32)
+    whole = _run(f, x)
+    tiled = _run(f, x, block_b=4, block_m=2)
+    np.testing.assert_allclose(tiled, whole, rtol=1e-5, atol=1e-6)
+
+
+def test_flops_accounting():
+    # The tensor formulation's compute blow-up is explicit and positive.
+    assert gemm_flops(64, 128, 32, 31, 32, 2) > 64 * 128 * 31

@@ -1,0 +1,135 @@
+"""L1 correctness: the Pallas QuickScorer kernel vs the numpy tree-walk
+oracle, with hypothesis sweeping forest shapes, batch sizes, tilings and
+dtypes. This is the CORE correctness signal of the compile path."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.forest import encode_qs, random_forest
+from compile.kernels.ref import predict_forest, predict_forest_quant
+from compile.model import (
+    forest_eval,
+    forest_eval_jnp,
+    quantize_features,
+    quantize_tensors,
+)
+
+
+def _make(seed, n_trees, d, c, max_leaves):
+    f = random_forest(seed=seed, n_trees=n_trees, n_features=d, n_classes=c,
+                      max_leaves=max_leaves)
+    t = encode_qs(f)
+    return f, t
+
+
+def _x(seed, b, d):
+    rng = np.random.default_rng(seed)
+    return rng.uniform(0, 1, size=(b, d)).astype(np.float32)
+
+
+def test_kernel_matches_oracle_basic():
+    f, t = _make(1, 12, 8, 2, 32)
+    x = _x(2, 32, 8)
+    ref = predict_forest(f, x)
+    got = np.asarray(forest_eval(x, t.thr, t.fid, t.mask_lo, t.mask_hi, t.leaves)[0])
+    np.testing.assert_allclose(got, ref, rtol=1e-5, atol=1e-5)
+
+
+def test_kernel_l64_two_planes():
+    f, t = _make(3, 6, 5, 2, 64)
+    assert f.max_leaves > 32, "fixture must exercise the hi mask plane"
+    assert t.leaf_words == 64
+    x = _x(4, 16, 5)
+    ref = predict_forest(f, x)
+    got = np.asarray(forest_eval(x, t.thr, t.fid, t.mask_lo, t.mask_hi, t.leaves)[0])
+    np.testing.assert_allclose(got, ref, rtol=1e-5, atol=1e-5)
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    seed=st.integers(0, 10_000),
+    n_trees=st.integers(1, 24),
+    d=st.integers(1, 20),
+    c=st.integers(1, 5),
+    max_leaves=st.sampled_from([2, 4, 8, 16, 32, 48, 64]),
+    b=st.integers(1, 40),
+)
+def test_kernel_matches_oracle_sweep(seed, n_trees, d, c, max_leaves, b):
+    f, t = _make(seed, n_trees, d, c, max_leaves)
+    x = _x(seed + 1, b, d)
+    ref = predict_forest(f, x)
+    got = np.asarray(forest_eval(x, t.thr, t.fid, t.mask_lo, t.mask_hi, t.leaves)[0])
+    np.testing.assert_allclose(got, ref, rtol=1e-4, atol=1e-4)
+
+
+@settings(max_examples=10, deadline=None)
+@given(
+    seed=st.integers(0, 1000),
+    block_b=st.sampled_from([1, 2, 4, 8]),
+    block_m=st.sampled_from([1, 2, 4, 8]),
+)
+def test_kernel_tiling_invariant(seed, block_b, block_m):
+    """Scores must not depend on the BlockSpec tiling."""
+    f, t = _make(seed, 8, 6, 2, 32)
+    x = _x(seed, 8, 6)
+    whole = np.asarray(forest_eval(x, t.thr, t.fid, t.mask_lo, t.mask_hi, t.leaves)[0])
+    tiled = np.asarray(
+        forest_eval(x, t.thr, t.fid, t.mask_lo, t.mask_hi, t.leaves,
+                    block_b=block_b, block_m=block_m)[0]
+    )
+    np.testing.assert_allclose(tiled, whole, rtol=1e-5, atol=1e-6)
+
+
+def test_kernel_int16_matches_quant_oracle():
+    scale = 32768.0
+    f, t = _make(7, 10, 6, 2, 32)
+    x = _x(8, 24, 6)
+    qthr, qleaves = quantize_tensors(t.thr, t.leaves, scale)
+    qx = quantize_features(x, scale)
+    got_i32 = np.asarray(
+        forest_eval(qx, qthr, t.fid, t.mask_lo, t.mask_hi, qleaves)[0]
+    )
+    assert got_i32.dtype == np.int32
+    got = got_i32.astype(np.float32) / scale
+    ref = predict_forest_quant(f, x, scale)
+    np.testing.assert_allclose(got, ref, rtol=1e-6, atol=1e-6)
+
+
+@settings(max_examples=12, deadline=None)
+@given(seed=st.integers(0, 5000), max_leaves=st.sampled_from([8, 32, 64]))
+def test_kernel_int16_sweep(seed, max_leaves):
+    scale = 4096.0  # coarser scale: exercises real quantization collisions
+    f, t = _make(seed, 6, 5, 3, max_leaves)
+    x = _x(seed + 9, 12, 5)
+    qthr, qleaves = quantize_tensors(t.thr, t.leaves, scale)
+    qx = quantize_features(x, scale)
+    got = np.asarray(forest_eval(qx, qthr, t.fid, t.mask_lo, t.mask_hi, qleaves)[0])
+    ref = predict_forest_quant(f, x, scale)
+    np.testing.assert_allclose(got.astype(np.float32) / scale, ref, rtol=1e-6, atol=1e-6)
+
+
+def test_jnp_path_equals_kernel_path():
+    f, t = _make(11, 9, 7, 4, 32)
+    x = _x(12, 20, 7)
+    a = np.asarray(forest_eval(x, t.thr, t.fid, t.mask_lo, t.mask_hi, t.leaves)[0])
+    b = np.asarray(forest_eval_jnp(x, t.thr, t.fid, t.mask_lo, t.mask_hi, t.leaves)[0])
+    np.testing.assert_allclose(a, b, rtol=1e-6, atol=1e-6)
+
+
+def test_threshold_boundary_goes_left():
+    """x exactly at a threshold must take the left branch (x <= t)."""
+    f, t = _make(13, 4, 3, 1, 8)
+    # Build an instance hitting thresholds exactly.
+    x = np.full((1, 3), t.thr[0, 0], np.float32)
+    ref = predict_forest(f, x)
+    got = np.asarray(forest_eval(x, t.thr, t.fid, t.mask_lo, t.mask_hi, t.leaves)[0])
+    np.testing.assert_allclose(got, ref, rtol=1e-5, atol=1e-6)
+
+
+def test_single_node_trees():
+    f, t = _make(14, 5, 4, 2, 2)
+    x = _x(15, 10, 4)
+    ref = predict_forest(f, x)
+    got = np.asarray(forest_eval(x, t.thr, t.fid, t.mask_lo, t.mask_hi, t.leaves)[0])
+    np.testing.assert_allclose(got, ref, rtol=1e-5, atol=1e-5)

@@ -1,0 +1,7 @@
+//! Extra: RapidScorer design ablation (node merging on/off vs VQS/QS).
+fn main() {
+    let scale = arbors::bench::harness::Scale::from_env();
+    let text = arbors::bench::experiments::ablation_rs(&scale);
+    arbors::bench::experiments::archive("ablation_rs", &text);
+    println!("{text}");
+}

@@ -1,0 +1,35 @@
+//! Microbenchmark: µs/instance per engine over batch sizes — the profiling
+//! entry point for the §Perf optimization loop.
+use arbors::bench::harness::{build_engine_arc, cached_rf, eval_batch, time_per_instance, Scale};
+use arbors::data::DatasetId;
+use arbors::engine::{all_variants, variant_name};
+
+fn main() {
+    let scale = Scale::from_env();
+    let ds = DatasetId::Magic.generate(DatasetId::Magic.default_n(), 0xD5 ^ 64);
+    let (train, _) = ds.split(0.2, 7);
+    let f = cached_rf(&train, scale.cls_trees, 64);
+    let mut out = String::new();
+    out.push_str(&format!(
+        "engine micro (magic, {} trees x 64 leaves), host µs/instance\n\n{:<8}",
+        scale.cls_trees, "batch"
+    ));
+    let variants = all_variants();
+    for &(k, p) in &variants {
+        out.push_str(&format!("{:>9}", variant_name(k, p)));
+    }
+    out.push('\n');
+    for batch in [1usize, 4, 16, 64, 256, 1024] {
+        let x = eval_batch(&ds, batch);
+        out.push_str(&format!("{batch:<8}"));
+        for &(k, p) in &variants {
+            match build_engine_arc(k, p, &f) {
+                Some(e) => out.push_str(&format!("{:>9.2}", time_per_instance(e.as_ref(), &x, scale.repeats))),
+                None => out.push_str(&format!("{:>9}", "-")),
+            }
+        }
+        out.push('\n');
+    }
+    arbors::bench::experiments::archive("engine_micro", &out);
+    println!("{out}");
+}

@@ -1,0 +1,7 @@
+//! Regenerates paper Figure 1 (mean speedup vs NA over tree counts).
+fn main() {
+    let scale = arbors::bench::harness::Scale::from_env();
+    let text = arbors::bench::experiments::fig1(&scale);
+    arbors::bench::experiments::archive("fig1", &text);
+    println!("{text}");
+}

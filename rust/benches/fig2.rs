@@ -1,0 +1,7 @@
+//! Regenerates paper Figure 2 (critical-difference diagrams per device).
+fn main() {
+    let scale = arbors::bench::harness::Scale::from_env();
+    let text = arbors::bench::experiments::fig2(&scale);
+    arbors::bench::experiments::archive("fig2", &text);
+    println!("{text}");
+}

@@ -1,0 +1,7 @@
+//! Extra: resident model size per engine + energy-per-inference estimates.
+fn main() {
+    let scale = arbors::bench::harness::Scale::from_env();
+    let text = arbors::bench::experiments::memory_energy(&scale);
+    arbors::bench::experiments::archive("memory_energy", &text);
+    println!("{text}");
+}

@@ -1,0 +1,8 @@
+//! Regenerates paper Table 2 (ranking runtimes). `ARBORS_SCALE=full` for
+//! paper-scale forests.
+fn main() {
+    let scale = arbors::bench::harness::Scale::from_env();
+    let text = arbors::bench::experiments::table2(&scale);
+    arbors::bench::experiments::archive("table2", &text);
+    println!("{text}");
+}

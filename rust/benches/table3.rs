@@ -1,0 +1,7 @@
+//! Regenerates paper Table 3 (accuracy under fixed-point quantization).
+fn main() {
+    let scale = arbors::bench::harness::Scale::from_env();
+    let text = arbors::bench::experiments::table3(&scale);
+    arbors::bench::experiments::archive("table3", &text);
+    println!("{text}");
+}

@@ -1,0 +1,7 @@
+//! Regenerates paper Table 4 (% unique nodes after RapidScorer merging).
+fn main() {
+    let scale = arbors::bench::harness::Scale::from_env();
+    let text = arbors::bench::experiments::table4(&scale);
+    arbors::bench::experiments::archive("table4", &text);
+    println!("{text}");
+}

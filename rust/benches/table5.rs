@@ -1,0 +1,11 @@
+//! Regenerates paper Table 5 (classification runtimes, 10 engine variants)
+//! for L=64 (main text) and L=32 (appendix).
+fn main() {
+    let scale = arbors::bench::harness::Scale::from_env();
+    let t64 = arbors::bench::experiments::table5(&scale, 64);
+    arbors::bench::experiments::archive("table5", &t64);
+    println!("{t64}");
+    let t32 = arbors::bench::experiments::table5(&scale, 32);
+    arbors::bench::experiments::archive("table5_l32", &t32);
+    println!("{t32}");
+}

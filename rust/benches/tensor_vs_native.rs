@@ -1,0 +1,12 @@
+//! Extra: native Rust engines vs the AOT JAX/Pallas tensor path (PJRT).
+//! Requires `make artifacts`.
+fn main() {
+    let scale = arbors::bench::harness::Scale::from_env();
+    match arbors::bench::experiments::tensor_vs_native(scale.repeats) {
+        Ok(text) => {
+            arbors::bench::experiments::archive("tensor_vs_native", &text);
+            println!("{text}");
+        }
+        Err(e) => eprintln!("skipped: {e:#}"),
+    }
+}

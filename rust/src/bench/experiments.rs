@@ -1,0 +1,605 @@
+//! Experiment implementations — one function per paper table/figure
+//! (DESIGN.md §3 experiment index). Each returns the rendered text that the
+//! `rust/benches/*` binaries print and archive under `results/`.
+//!
+//! Per-device numbers are cost-model *estimates* (we have no ARM hardware;
+//! see `crate::device`); the "host" group is measured wall-clock on this
+//! machine. The claims under reproduction are relative orderings and
+//! speedup factors, not absolute µs.
+
+use crate::data::{ranking::msn_like, DatasetId};
+use crate::device::{model_working_set, DeviceProfile};
+use crate::engine::{all_variants, variant_name, Engine, EngineKind, Precision};
+use crate::forest::Forest;
+use crate::quant::{accuracy_with_parts, merge, QForest, QuantConfig, QuantParts};
+use crate::stats::cd_analysis;
+
+use super::harness::{
+    build_engine_arc, cached_gbt_ranking, classification_workloads, eval_batch,
+    forest_prefix, time_per_instance, Scale, TableWriter,
+};
+
+/// µs/instance for one engine: host measurement + per-device estimates.
+struct Timing {
+    host: f64,
+    devices: Vec<f64>,
+}
+
+fn measure(
+    engine: &dyn Engine,
+    x: &[f32],
+    forest: &Forest,
+    precision: Precision,
+    devices: &[DeviceProfile],
+    repeats: usize,
+) -> Timing {
+    let host = time_per_instance(engine, x, repeats);
+    let n = x.len() / engine.n_features();
+    // Trace a subset (counting walks are slow) and scale per instance.
+    let trace_n = n.clamp(1, 128);
+    let trace = engine.count_ops(&x[..trace_n * engine.n_features()]);
+    let bytes = match precision {
+        Precision::F32 => 4,
+        Precision::I16 => 2,
+    };
+    let ws = model_working_set(
+        forest.n_nodes(),
+        forest.n_trees(),
+        forest.max_leaves().next_power_of_two().max(32),
+        forest.n_classes,
+        bytes,
+    );
+    let devices = devices
+        .iter()
+        .map(|d| d.estimate_us(&trace, ws) / trace_n as f64)
+        .collect();
+    Timing { host, devices }
+}
+
+fn fmt_speedup(us: f64, na_us: f64) -> String {
+    format!("{us:.1} ({:.1}x)", na_us / us)
+}
+
+// ---------------------------------------------------------------------------
+// Table 2 — ranking runtimes (MSN-like GBT, float engines)
+// ---------------------------------------------------------------------------
+
+/// Paper Table 2: runtime per instance for QS/VQS/RS/IE/NA on the ranking
+/// forests, per device, over tree counts × {32, 64} leaves.
+pub fn table2(scale: &Scale) -> String {
+    let devices = DeviceProfile::paper_devices();
+    let kinds = [EngineKind::Rs, EngineKind::Vqs, EngineKind::Qs, EngineKind::IfElse, EngineKind::Naive];
+    let eval = msn_like(scale.eval_n / 10 + 1, 10, 0xEE);
+    let mut out = String::new();
+    out.push_str(&format!(
+        "Table 2 reproduction (scale={}, trees={:?})\n\
+         ranking runtime per instance in µs (speedup vs NA in parens)\n\n",
+        scale.name, scale.ranking_trees
+    ));
+
+    // Train the largest forest once per leaf count; prefixes give the rest.
+    for &leaves in &[32usize, 64] {
+        let max_trees = *scale.ranking_trees.iter().max().unwrap();
+        let full = cached_gbt_ranking(scale.msn_queries, scale.msn_docs, max_trees, leaves);
+        // rows: per device then host; columns: tree counts.
+        for (di, dev_name) in devices
+            .iter()
+            .map(|d| d.name.to_string())
+            .chain(["host (measured)".to_string()])
+            .enumerate()
+        {
+            out.push_str(&format!("== L={leaves}  {dev_name} ==\n"));
+            let mut tw = TableWriter::new(vec![5; 1 + scale.ranking_trees.len()].into_iter()
+                .enumerate().map(|(i, _)| if i == 0 { 5 } else { 18 }).collect());
+            let mut header = vec!["".to_string()];
+            header.extend(scale.ranking_trees.iter().map(|t| t.to_string()));
+            tw.row(&header);
+            tw.sep();
+
+            // Collect timings: engine × tree-count.
+            let mut na_times = vec![0f64; scale.ranking_trees.len()];
+            let mut rows: Vec<(String, Vec<f64>)> = Vec::new();
+            for kind in kinds {
+                let mut vals = Vec::new();
+                for &nt in &scale.ranking_trees {
+                    let f = forest_prefix(&full, nt);
+                    let Some(engine) = build_engine_arc(kind, Precision::F32, &f) else {
+                        vals.push(f64::NAN);
+                        continue;
+                    };
+                    let x = &eval.x[..scale.eval_n.min(eval.n) * eval.d];
+                    let t = measure(engine.as_ref(), x, &f, Precision::F32, &devices, scale.repeats);
+                    let us = if di < devices.len() { t.devices[di] } else { t.host };
+                    vals.push(us);
+                }
+                if kind == EngineKind::Naive {
+                    na_times = vals.clone();
+                }
+                rows.push((kind.short().to_string(), vals));
+            }
+            for (name, vals) in rows {
+                let mut cells = vec![name.clone()];
+                for (i, &v) in vals.iter().enumerate() {
+                    cells.push(if name == "NA" {
+                        format!("{v:.1} (-)")
+                    } else {
+                        fmt_speedup(v, na_times[i])
+                    });
+                }
+                tw.row(&cells);
+            }
+            out.push_str(&tw.finish());
+            out.push('\n');
+        }
+    }
+    out
+}
+
+// ---------------------------------------------------------------------------
+// Table 3 — accuracy under quantization
+// ---------------------------------------------------------------------------
+
+/// Paper Table 3: accuracy of the four {float,int16}² split/leaf combos.
+pub fn table3(scale: &Scale) -> String {
+    let mut out = String::new();
+    out.push_str(&format!(
+        "Table 3 reproduction (scale={}, RF {} trees, 64 leaves, s=2^15)\n\n",
+        scale.name, scale.cls_trees
+    ));
+    let mut tw = TableWriter::new(vec![8, 14, 14, 14, 14]);
+    tw.row_str(&["dataset", "f-split/f-leaf", "f-split/q-leaf", "q-split/f-leaf", "q-split/q-leaf"]);
+    tw.sep();
+    let cfg = QuantConfig::paper_default();
+    for id in DatasetId::ALL {
+        let ds = id.generate(id.default_n(), 0xD5 ^ 64);
+        let (train, test) = ds.split(0.2, 7);
+        let f = super::harness::cached_rf(&train, scale.cls_trees, 64);
+        let accs = [
+            QuantParts::NONE,
+            QuantParts::LEAVES_ONLY,
+            QuantParts::SPLITS_ONLY,
+            QuantParts::BOTH,
+        ]
+        .map(|p| accuracy_with_parts(&f, cfg, p, &test.x, &test.labels));
+        tw.row(&[
+            id.name().to_string(),
+            format!("{:.2}%", accs[0] * 100.0),
+            format!("{:.2}%", accs[1] * 100.0),
+            format!("{:.2}%", accs[2] * 100.0),
+            format!("{:.2}%", accs[3] * 100.0),
+        ]);
+    }
+    out.push_str(&tw.finish());
+    out
+}
+
+// ---------------------------------------------------------------------------
+// Table 4 — node merging
+// ---------------------------------------------------------------------------
+
+/// Paper Table 4: % unique nodes kept after RapidScorer merging, float vs
+/// quantized, over tree counts.
+pub fn table4(scale: &Scale) -> String {
+    let mut out = String::new();
+    out.push_str(&format!(
+        "Table 4 reproduction (scale={}, trees={:?}, 64 leaves)\n\
+         %% of unique nodes kept after merging equivalent nodes\n\n",
+        scale.name, scale.merge_trees
+    ));
+    let mut tw = TableWriter::new(vec![8, 6, 9, 9, 9, 9]);
+    let mut header = vec!["dataset".to_string(), "type".to_string()];
+    header.extend(scale.merge_trees.iter().map(|t| t.to_string()));
+    tw.row(&header);
+    tw.sep();
+    let cfg = QuantConfig::paper_default();
+    let max_trees = *scale.merge_trees.iter().max().unwrap();
+    for id in DatasetId::ALL {
+        let ds = id.generate(id.default_n(), 0xD5 ^ 64);
+        let (train, _) = ds.split(0.2, 7);
+        let full = super::harness::cached_rf(&train, max_trees.max(scale.cls_trees), 64);
+        for (ty, quant) in [("float", false), ("quant", true)] {
+            let mut cells = vec![id.name().to_string(), ty.to_string()];
+            for &nt in &scale.merge_trees {
+                let f = forest_prefix(&full, nt);
+                let frac = if quant {
+                    merge::unique_node_fraction_quant(&QForest::from_forest(&f, cfg))
+                } else {
+                    merge::unique_node_fraction(&f)
+                };
+                cells.push(format!("{:.1}%", frac * 100.0));
+            }
+            tw.row(&cells);
+        }
+    }
+    out.push_str(&tw.finish());
+    out
+}
+
+// ---------------------------------------------------------------------------
+// Table 5 — classification runtimes (10 engines × 5 datasets × devices)
+// ---------------------------------------------------------------------------
+
+/// The Table-5 measurement matrix: per device (+host), engine × dataset
+/// µs/instance. Shared by `table5` and `fig2`.
+pub struct Table5Data {
+    pub engines: Vec<String>,
+    pub datasets: Vec<String>,
+    /// `[device][engine][dataset]` µs/instance; devices = paper devices ++ host.
+    pub us: Vec<Vec<Vec<f64>>>,
+    pub device_names: Vec<String>,
+}
+
+pub fn table5_data(scale: &Scale, max_leaves: usize) -> Table5Data {
+    let devices = DeviceProfile::paper_devices();
+    let workloads = classification_workloads(scale, max_leaves);
+    let variants = all_variants();
+    let engines: Vec<String> =
+        variants.iter().map(|&(k, p)| variant_name(k, p)).collect();
+    let datasets: Vec<String> = workloads.iter().map(|(ds, _)| ds.name.clone()).collect();
+    let n_dev = devices.len() + 1;
+    let mut us = vec![vec![vec![f64::NAN; datasets.len()]; engines.len()]; n_dev];
+
+    for (dsi, (ds, f)) in workloads.iter().enumerate() {
+        let x = eval_batch(ds, scale.eval_n);
+        for (ei, &(kind, precision)) in variants.iter().enumerate() {
+            let Some(engine) = build_engine_arc(kind, precision, f) else { continue };
+            let t = measure(engine.as_ref(), &x, f, precision, &devices, scale.repeats);
+            for di in 0..devices.len() {
+                us[di][ei][dsi] = t.devices[di];
+            }
+            us[devices.len()][ei][dsi] = t.host;
+        }
+    }
+    let mut device_names: Vec<String> = devices.iter().map(|d| d.name.to_string()).collect();
+    device_names.push("host (measured)".into());
+    Table5Data { engines, datasets, us, device_names }
+}
+
+/// Paper Table 5: classification runtime/instance, all ten engine variants.
+pub fn table5(scale: &Scale, max_leaves: usize) -> String {
+    let data = table5_data(scale, max_leaves);
+    let mut out = String::new();
+    out.push_str(&format!(
+        "Table 5 reproduction (scale={}, RF {} trees, {max_leaves} leaves)\n\
+         runtime per instance in µs (speedup vs float NA in parens)\n\n",
+        scale.name, scale.cls_trees
+    ));
+    let na_idx = data.engines.iter().position(|e| e == "NA").unwrap();
+    for (di, dev) in data.device_names.iter().enumerate() {
+        out.push_str(&format!("== {dev} ==\n"));
+        let mut widths = vec![6usize];
+        widths.extend(std::iter::repeat(16).take(data.datasets.len()));
+        let mut tw = TableWriter::new(widths);
+        let mut header = vec!["".to_string()];
+        header.extend(data.datasets.iter().cloned());
+        tw.row(&header);
+        tw.sep();
+        for (ei, en) in data.engines.iter().enumerate() {
+            let mut cells = vec![en.clone()];
+            for dsi in 0..data.datasets.len() {
+                let v = data.us[di][ei][dsi];
+                let na = data.us[di][na_idx][dsi];
+                cells.push(if en == "NA" {
+                    format!("{v:.1} (-)")
+                } else {
+                    fmt_speedup(v, na)
+                });
+            }
+            tw.row(&cells);
+        }
+        out.push_str(&tw.finish());
+        out.push('\n');
+    }
+    out
+}
+
+// ---------------------------------------------------------------------------
+// Figure 1 — average speedup over tree counts
+// ---------------------------------------------------------------------------
+
+/// Paper Figure 1: mean speedup over NA as a function of the number of
+/// trees; float panel (top) and quantized panel (bottom). Averaged over the
+/// 5 datasets × {32, 64} leaves × the two device estimates.
+pub fn fig1(scale: &Scale) -> String {
+    let devices = DeviceProfile::paper_devices();
+    let variants = all_variants();
+    let mut out = String::new();
+    out.push_str(&format!(
+        "Figure 1 reproduction (scale={}, trees={:?})\n\
+         mean speedup vs float NA (± std) across 5 datasets x {{32,64}} leaves x 2 devices\n\n",
+        scale.name, scale.fig_trees
+    ));
+
+    // Pre-train the max forest per (dataset, leaves).
+    let max_trees = *scale.fig_trees.iter().max().unwrap();
+    let mut workloads = Vec::new();
+    for &leaves in &[32usize, 64] {
+        for id in DatasetId::ALL {
+            let ds = id.generate(id.default_n(), 0xD5 ^ leaves as u64);
+            let (train, _) = ds.split(0.2, 7);
+            let f = super::harness::cached_rf(&train, max_trees.max(scale.cls_trees), leaves);
+            workloads.push((ds, f));
+        }
+    }
+
+    for (panel, precisions) in
+        [("float engines", Precision::F32), ("quantized engines", Precision::I16)]
+    {
+        out.push_str(&format!("-- {panel} --\n"));
+        let mut widths = vec![7usize];
+        widths.extend(std::iter::repeat(14).take(variants.len() / 2));
+        let mut tw = TableWriter::new(widths);
+        let names: Vec<String> = variants
+            .iter()
+            .filter(|&&(_, p)| p == precisions)
+            .map(|&(k, p)| variant_name(k, p))
+            .collect();
+        let mut header = vec!["trees".to_string()];
+        header.extend(names.iter().cloned());
+        tw.row(&header);
+        tw.sep();
+        for &nt in &scale.fig_trees {
+            let mut cells = vec![nt.to_string()];
+            for &(kind, precision) in variants.iter().filter(|&&(_, p)| p == precisions) {
+                let mut speedups = Vec::new();
+                for (ds, full) in &workloads {
+                    let f = forest_prefix(full, nt);
+                    let x = eval_batch(ds, scale.eval_n / 2);
+                    let Some(engine) = build_engine_arc(kind, precision, &f) else { continue };
+                    let Some(na) = build_engine_arc(EngineKind::Naive, Precision::F32, &f)
+                    else {
+                        continue;
+                    };
+                    let te = measure(engine.as_ref(), &x, &f, precision, &devices, scale.repeats);
+                    let tn = measure(na.as_ref(), &x, &f, Precision::F32, &devices, scale.repeats);
+                    for di in 0..devices.len() {
+                        speedups.push(tn.devices[di] / te.devices[di]);
+                    }
+                }
+                let n = speedups.len() as f64;
+                let mean = speedups.iter().sum::<f64>() / n;
+                let std = (speedups.iter().map(|s| (s - mean) * (s - mean)).sum::<f64>() / n)
+                    .sqrt();
+                cells.push(format!("{mean:.2}±{std:.2}"));
+            }
+            tw.row(&cells);
+        }
+        out.push_str(&tw.finish());
+        out.push('\n');
+    }
+    out
+}
+
+// ---------------------------------------------------------------------------
+// Figure 2 — critical-difference diagrams
+// ---------------------------------------------------------------------------
+
+/// Paper Figure 2: CD diagram of the ten engines per device, ranks over the
+/// classification datasets (5 datasets × {32, 64} leaves = 10 rows).
+pub fn fig2(scale: &Scale) -> String {
+    let mut out = String::new();
+    out.push_str(&format!(
+        "Figure 2 reproduction (scale={}): critical-difference diagrams\n\
+         (avg rank of runtime/instance; lower rank = faster; p = 0.95)\n\n",
+        scale.name
+    ));
+    let d32 = table5_data(scale, 32);
+    let d64 = table5_data(scale, 64);
+    for (di, dev) in d32.device_names.iter().enumerate() {
+        // rows = dataset × leaves, columns = engines
+        let mut rows = Vec::new();
+        for data in [&d32, &d64] {
+            for dsi in 0..data.datasets.len() {
+                rows.push(
+                    (0..data.engines.len()).map(|ei| data.us[di][ei][dsi]).collect::<Vec<f64>>(),
+                );
+            }
+        }
+        let cd = cd_analysis(&d32.engines, &rows, 0.05);
+        out.push_str(&format!("== {dev} ==\n{}\n", cd.render()));
+    }
+    out
+}
+
+// ---------------------------------------------------------------------------
+// Ablation — RapidScorer design choices
+// ---------------------------------------------------------------------------
+
+/// Extra B: RS ablation — node merging on/off, vs VQS (no epitome/transpose)
+/// and QS (scalar). Shows where RapidScorer's wins come from.
+pub fn ablation_rs(scale: &Scale) -> String {
+    use crate::engine::rapidscorer::RsEngine;
+    let mut out = String::new();
+    out.push_str(&format!(
+        "RS ablation (scale={}): merging & layout contributions, host µs/instance\n\n",
+        scale.name
+    ));
+    let mut tw = TableWriter::new(vec![8, 10, 14, 12, 10, 10]);
+    tw.row_str(&["dataset", "RS", "RS(no-merge)", "groups/nodes", "VQS", "QS"]);
+    tw.sep();
+    for id in [DatasetId::Adult, DatasetId::Eeg, DatasetId::Magic, DatasetId::Mnist] {
+        let ds = id.generate(id.default_n(), 0xAB);
+        let (train, _) = ds.split(0.2, 7);
+        let f = super::harness::cached_rf(&train, scale.cls_trees, 64);
+        let x = eval_batch(&ds, scale.eval_n);
+        let rs = RsEngine::new(&f);
+        let rs_nm = RsEngine::new_unmerged(&f);
+        let vqs = build_engine_arc(EngineKind::Vqs, Precision::F32, &f).unwrap();
+        let qs = build_engine_arc(EngineKind::Qs, Precision::F32, &f).unwrap();
+        let t_rs = time_per_instance(&rs, &x, scale.repeats);
+        let t_nm = time_per_instance(&rs_nm, &x, scale.repeats);
+        let t_v = time_per_instance(vqs.as_ref(), &x, scale.repeats);
+        let t_q = time_per_instance(qs.as_ref(), &x, scale.repeats);
+        tw.row(&[
+            id.name().to_string(),
+            format!("{t_rs:.1}"),
+            format!("{t_nm:.1}"),
+            format!("{:.1}%", 100.0 * rs.model().n_groups() as f64 / f.n_nodes() as f64),
+            format!("{t_v:.1}"),
+            format!("{t_q:.1}"),
+        ]);
+    }
+    out.push_str(&tw.finish());
+    out
+}
+
+// ---------------------------------------------------------------------------
+// Extra A — rust engines vs the AOT tensor path
+// ---------------------------------------------------------------------------
+
+/// Extra A: native Rust engines vs the XLA tensor engine on the artifact
+/// fixture forest (requires `make artifacts`).
+pub fn tensor_vs_native(repeats: usize) -> anyhow::Result<String> {
+    use crate::engine::tensor::TensorEngine;
+    let dir = std::path::PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    anyhow::ensure!(dir.join("manifest.json").exists(), "run `make artifacts` first");
+    let metas = crate::runtime::load_manifest(&dir)?;
+    let meta = metas
+        .iter()
+        .find(|m| m.name == "rf_f32_b64")
+        .ok_or_else(|| anyhow::anyhow!("fixture artifact missing"))?;
+    let forest = crate::forest::io::load(&dir.join(&meta.forest))?;
+
+    let mut rng = crate::util::Pcg32::seeded(0xAA);
+    let n = meta.batch * 8;
+    let x: Vec<f32> = (0..n * forest.n_features).map(|_| rng.f32()).collect();
+
+    let mut out = String::new();
+    out.push_str("Tensor (XLA/PJRT, AOT pallas kernel) vs native Rust engines\n");
+    out.push_str(&format!(
+        "fixture: M={} L={} d={} C={} batch={}\n\n",
+        meta.n_trees, meta.leaf_words, meta.d, meta.c, meta.batch
+    ));
+    let mut tw = TableWriter::new(vec![14, 14]);
+    tw.row_str(&["engine", "µs/instance"]);
+    tw.sep();
+
+    let tensor = TensorEngine::from_artifact(&dir, "rf_f32_b64", &forest)?;
+    let t = time_per_instance(&tensor, &x, repeats);
+    tw.row(&["XLA".to_string(), format!("{t:.2}")]);
+
+    for kind in [EngineKind::Rs, EngineKind::Vqs, EngineKind::Qs, EngineKind::Naive] {
+        if let Some(e) = build_engine_arc(kind, Precision::F32, &forest) {
+            let te = time_per_instance(e.as_ref(), &x, repeats);
+            tw.row(&[kind.short().to_string(), format!("{te:.2}")]);
+        }
+    }
+    out.push_str(&tw.finish());
+    Ok(out)
+}
+
+
+// ---------------------------------------------------------------------------
+// Extra C — model memory footprint & energy
+// ---------------------------------------------------------------------------
+
+/// Extra C: resident model bytes per engine (the paper's memory-footprint
+/// discussion: RapidScorer's epitome compactness, int16 halving) plus
+/// estimated energy per inference on each device.
+pub fn memory_energy(scale: &Scale) -> String {
+    let devices = DeviceProfile::paper_devices();
+    let mut out = String::new();
+    out.push_str(&format!(
+        "Model memory & energy (scale={}, RF {} trees x 64 leaves)\n\n",
+        scale.name, scale.cls_trees
+    ));
+    for id in [DatasetId::Adult, DatasetId::Magic] {
+        let ds = id.generate(id.default_n(), 0xD5 ^ 64);
+        let (train, _) = ds.split(0.2, 7);
+        let f = super::harness::cached_rf(&train, scale.cls_trees, 64);
+        let x = eval_batch(&ds, scale.eval_n / 2);
+        out.push_str(&format!(
+            "== {} ({} nodes) ==\n",
+            id.name(),
+            f.n_nodes()
+        ));
+        let mut tw = TableWriter::new(vec![6, 12, 14, 16]);
+        tw.row_str(&["engine", "model KiB", "µJ/inst (A53)", "µJ/inst (Exynos)"]);
+        tw.sep();
+        for (kind, precision) in all_variants() {
+            let Some(e) = build_engine_arc(kind, precision, &f) else { continue };
+            let kib = e.memory_bytes() as f64 / 1024.0;
+            let trace_n = 64.min(x.len() / e.n_features());
+            let trace = e.count_ops(&x[..trace_n * e.n_features()]);
+            let ws = e.memory_bytes() as f64;
+            let uj: Vec<f64> = devices
+                .iter()
+                .map(|d| d.estimate_energy_uj(&trace, ws) / trace_n as f64)
+                .collect();
+            tw.row(&[
+                variant_name(kind, precision),
+                format!("{kib:.1}"),
+                format!("{:.2}", uj[0]),
+                format!("{:.2}", uj[1]),
+            ]);
+        }
+        out.push_str(&tw.finish());
+        out.push('\n');
+    }
+    out.push_str(
+        "notes: quantized models are ~half the float size (int16 payloads);\n\
+         RapidScorer stores merged groups + epitomes instead of per-node\n\
+         masks, so its size shrinks with the dataset's merge rate (adult\n\
+         vs magic).\n",
+    );
+    out
+}
+
+/// Archive a result under `results/<name>.txt`.
+pub fn archive(name: &str, text: &str) {
+    let path = super::harness::results_dir().join(format!("{name}.txt"));
+    if let Err(e) = std::fs::write(&path, text) {
+        eprintln!("warning: could not archive {name}: {e}");
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn quick() -> Scale {
+        Scale {
+            name: "test",
+            ranking_trees: vec![8],
+            cls_trees: 8,
+            fig_trees: vec![4, 8],
+            merge_trees: vec![4, 8],
+            eval_n: 48,
+            repeats: 1,
+            msn_queries: 12,
+            msn_docs: 8,
+        }
+    }
+
+    #[test]
+    fn table3_runs() {
+        let s = table3(&quick());
+        assert!(s.contains("magic") && s.contains('%'));
+    }
+
+    #[test]
+    fn table4_runs() {
+        let s = table4(&quick());
+        assert!(s.contains("eeg") && s.contains("quant"));
+    }
+
+    #[test]
+    fn table5_runs_and_has_all_engines() {
+        let s = table5(&quick(), 32);
+        for e in ["RS", "VQS", "QS", "IE", "NA", "qRS", "qVQS", "qQS", "qIE", "qNA"] {
+            assert!(s.contains(e), "{e} missing:\n{s}");
+        }
+    }
+
+    #[test]
+    fn memory_energy_runs() {
+        let s = memory_energy(&quick());
+        assert!(s.contains("model KiB") && s.contains("qRS"));
+    }
+
+    #[test]
+    fn ablation_runs() {
+        let s = ablation_rs(&quick());
+        assert!(s.contains("no-merge") || s.contains("RS(no-merge)"));
+    }
+}

@@ -1,0 +1,264 @@
+//! Timing and workload helpers for the benchmark suite.
+
+use std::path::PathBuf;
+use std::sync::Arc;
+
+use crate::data::{Dataset, DatasetId};
+use crate::engine::Engine;
+use crate::forest::builder::{
+    train_gbt, train_random_forest, GbtParams, RfParams, TreeParams,
+};
+use crate::forest::{io, Forest};
+use crate::util::Stopwatch;
+
+/// Experiment scale. The paper's full forest sizes take hours to train on
+/// this testbed; the default scale preserves every *shape* (who wins, by
+/// what factor, where crossovers fall) at tractable sizes. Set
+/// `ARBORS_SCALE=full` for paper-scale runs and `ARBORS_SCALE=quick` for
+/// smoke runs.
+#[derive(Debug, Clone)]
+pub struct Scale {
+    pub name: &'static str,
+    /// Tree counts for the ranking experiment (paper: 1k/5k/10k/20k).
+    pub ranking_trees: Vec<usize>,
+    /// RF size for Tables 3 & 5 (paper: 1024).
+    pub cls_trees: usize,
+    /// Tree counts for Figure 1 (paper: 100..1000).
+    pub fig_trees: Vec<usize>,
+    /// Tree counts for Table 4 (paper: 128/256/512/1024).
+    pub merge_trees: Vec<usize>,
+    /// Instances timed per measurement.
+    pub eval_n: usize,
+    /// Median-of-k repeats.
+    pub repeats: usize,
+    /// Ranking training rows (queries × docs).
+    pub msn_queries: usize,
+    pub msn_docs: usize,
+}
+
+impl Scale {
+    pub fn from_env() -> Scale {
+        match std::env::var("ARBORS_SCALE").as_deref() {
+            Ok("full") => Scale {
+                name: "full",
+                ranking_trees: vec![1000, 5000, 10000, 20000],
+                cls_trees: 1024,
+                fig_trees: vec![128, 256, 512, 1024],
+                merge_trees: vec![128, 256, 512, 1024],
+                eval_n: 1024,
+                repeats: 5,
+                msn_queries: 300,
+                msn_docs: 25,
+            },
+            Ok("quick") => Scale {
+                name: "quick",
+                ranking_trees: vec![32, 64],
+                cls_trees: 64,
+                fig_trees: vec![16, 32, 64],
+                merge_trees: vec![16, 32, 64],
+                eval_n: 128,
+                repeats: 2,
+                msn_queries: 40,
+                msn_docs: 15,
+            },
+            _ => Scale {
+                name: "default",
+                ranking_trees: vec![100, 250, 500, 1000],
+                cls_trees: 256,
+                fig_trees: vec![32, 64, 128, 256],
+                merge_trees: vec![32, 64, 128, 256],
+                eval_n: 512,
+                repeats: 3,
+                msn_queries: 100,
+                msn_docs: 20,
+            },
+        }
+    }
+}
+
+/// Model cache directory (gitignored) so each forest trains exactly once
+/// across bench invocations.
+pub fn model_cache_dir() -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("models")
+}
+
+/// Results directory for archived bench outputs.
+pub fn results_dir() -> PathBuf {
+    let dir = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("results");
+    std::fs::create_dir_all(&dir).ok();
+    dir
+}
+
+/// Train (or load from cache) an RF for a classification dataset.
+pub fn cached_rf(ds: &Dataset, n_trees: usize, max_leaves: usize) -> Forest {
+    let key = format!("rf_{}_t{}_l{}_n{}", ds.name, n_trees, max_leaves, ds.n);
+    io::cached(&model_cache_dir(), &key, || {
+        train_random_forest(
+            &ds.x,
+            &ds.labels,
+            ds.d,
+            ds.n_classes,
+            RfParams {
+                n_trees,
+                tree: TreeParams { max_leaves, min_samples_leaf: 2, mtry: 0 },
+                seed: 0x5eed ^ n_trees as u64,
+                ..Default::default()
+            },
+        )
+    })
+}
+
+/// Train (or load) a GBT ranking model on the MSN-like data.
+pub fn cached_gbt_ranking(
+    queries: usize,
+    docs: usize,
+    n_trees: usize,
+    max_leaves: usize,
+) -> Forest {
+    let key = format!("gbt_msn_q{queries}x{docs}_t{n_trees}_l{max_leaves}");
+    io::cached(&model_cache_dir(), &key, || {
+        let ds = crate::data::ranking::msn_like(queries, docs, 0x35b1);
+        train_gbt(
+            &ds.x,
+            &ds.relevance,
+            ds.d,
+            GbtParams {
+                n_trees,
+                tree: TreeParams { max_leaves, min_samples_leaf: 2, mtry: 32 },
+                learning_rate: 0.1,
+                subsample: 0.7,
+                seed: 0xb005,
+            },
+        )
+    })
+}
+
+/// A forest prefix (first `k` trees) — valid for runtime benchmarking
+/// because RF trees are i.i.d. and boosting prefixes are proper models;
+/// leaf scaling is uniform so argmax/runtime are unaffected.
+pub fn forest_prefix(f: &Forest, k: usize) -> Forest {
+    let mut out = f.clone();
+    out.trees.truncate(k);
+    out
+}
+
+/// Median wall-clock µs per instance for an engine on a batch.
+pub fn time_per_instance(engine: &dyn Engine, x: &[f32], repeats: usize) -> f64 {
+    let n = x.len() / engine.n_features();
+    let mut out = vec![0f32; n * engine.n_classes()];
+    engine.predict_batch(x, &mut out); // warmup
+    let mut times: Vec<f64> = (0..repeats.max(1))
+        .map(|_| {
+            let sw = Stopwatch::start();
+            engine.predict_batch(x, &mut out);
+            sw.micros() / n as f64
+        })
+        .collect();
+    times.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    times[times.len() / 2]
+}
+
+/// Build an evaluation batch from a dataset (first `n` rows, cycled).
+pub fn eval_batch(ds: &Dataset, n: usize) -> Vec<f32> {
+    let mut x = Vec::with_capacity(n * ds.d);
+    for i in 0..n {
+        x.extend_from_slice(ds.row(i % ds.n));
+    }
+    x
+}
+
+/// Standard classification workloads at a given tree count.
+pub fn classification_workloads(scale: &Scale, max_leaves: usize) -> Vec<(Dataset, Forest)> {
+    DatasetId::ALL
+        .iter()
+        .map(|id| {
+            let ds = id.generate(id.default_n(), 0xD5 ^ max_leaves as u64);
+            let (train, _test) = ds.split(0.2, 7);
+            let f = cached_rf(&train, scale.cls_trees, max_leaves);
+            (ds, f)
+        })
+        .collect()
+}
+
+/// Simple fixed-width table writer for bench output.
+pub struct TableWriter {
+    widths: Vec<usize>,
+    out: String,
+}
+
+impl TableWriter {
+    pub fn new(widths: Vec<usize>) -> TableWriter {
+        TableWriter { widths, out: String::new() }
+    }
+
+    pub fn row(&mut self, cells: &[String]) {
+        for (i, cell) in cells.iter().enumerate() {
+            let w = self.widths.get(i).copied().unwrap_or(12);
+            self.out.push_str(&format!("{cell:>w$} "));
+        }
+        self.out.push('\n');
+    }
+
+    pub fn row_str(&mut self, cells: &[&str]) {
+        self.row(&cells.iter().map(|s| s.to_string()).collect::<Vec<_>>());
+    }
+
+    pub fn sep(&mut self) {
+        let total: usize = self.widths.iter().sum::<usize>() + self.widths.len();
+        self.out.push_str(&"-".repeat(total));
+        self.out.push('\n');
+    }
+
+    pub fn finish(self) -> String {
+        self.out
+    }
+}
+
+/// Pre-built engine handle for sweeps.
+pub fn build_engine_arc(
+    kind: crate::engine::EngineKind,
+    precision: crate::engine::Precision,
+    forest: &Forest,
+) -> Option<Arc<dyn Engine>> {
+    crate::engine::build(kind, precision, forest, None).ok().map(Arc::from)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::engine::{EngineKind, Precision};
+
+    #[test]
+    fn scales_parse() {
+        let s = Scale::from_env();
+        assert!(!s.ranking_trees.is_empty());
+    }
+
+    #[test]
+    fn timing_positive() {
+        let ds = DatasetId::Magic.generate(300, 91);
+        let f = cached_rf(&ds, 4, 8);
+        let e = build_engine_arc(EngineKind::Naive, Precision::F32, &f).unwrap();
+        let x = eval_batch(&ds, 64);
+        let t = time_per_instance(e.as_ref(), &x, 2);
+        assert!(t > 0.0);
+    }
+
+    #[test]
+    fn prefix_is_valid_forest() {
+        let ds = DatasetId::Magic.generate(300, 92);
+        let f = cached_rf(&ds, 8, 8);
+        let p = forest_prefix(&f, 3);
+        assert_eq!(p.n_trees(), 3);
+        p.validate().unwrap();
+    }
+
+    #[test]
+    fn table_writer_aligns() {
+        let mut t = TableWriter::new(vec![6, 8]);
+        t.row_str(&["a", "b"]);
+        t.sep();
+        let s = t.finish();
+        assert!(s.contains('a') && s.contains('-'));
+    }
+}

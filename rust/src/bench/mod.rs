@@ -1,0 +1,12 @@
+//! Benchmark harness (DESIGN.md system S17): workload preparation, timing,
+//! table formatting, and the experiment implementations that regenerate
+//! every table and figure of the paper's evaluation (§6).
+//!
+//! `criterion` is unavailable offline, so `rust/benches/*.rs` are
+//! `harness = false` binaries that call into [`experiments`]; results print
+//! to stdout and are archived under `results/`.
+
+pub mod experiments;
+pub mod harness;
+
+pub use harness::{time_per_instance, Scale, TableWriter};

@@ -1,0 +1,148 @@
+//! Minimal command-line argument parser (no `clap` offline).
+//!
+//! Grammar: `arbors <command> [positional...] [--key value]... [--switch]...`
+//! Flags may use `--key=value` or `--key value`. Unknown flags are collected
+//! and reported by `finish()` so typos fail loudly.
+
+use std::collections::{BTreeMap, BTreeSet};
+
+/// Parsed arguments.
+#[derive(Debug, Default)]
+pub struct Args {
+    pub command: String,
+    pub positional: Vec<String>,
+    flags: BTreeMap<String, String>,
+    switches: BTreeSet<String>,
+    consumed: std::cell::RefCell<BTreeSet<String>>,
+}
+
+impl Args {
+    /// Parse from `std::env::args()` (skipping argv[0]).
+    pub fn from_env() -> Args {
+        Self::parse(std::env::args().skip(1))
+    }
+
+    pub fn parse(iter: impl IntoIterator<Item = String>) -> Args {
+        let mut args = Args::default();
+        let mut it = iter.into_iter().peekable();
+        if let Some(cmd) = it.peek() {
+            if !cmd.starts_with("--") {
+                args.command = it.next().unwrap();
+            }
+        }
+        while let Some(a) = it.next() {
+            if let Some(stripped) = a.strip_prefix("--") {
+                if let Some((k, v)) = stripped.split_once('=') {
+                    args.flags.insert(k.to_string(), v.to_string());
+                } else if it.peek().map_or(false, |n| !n.starts_with("--")) {
+                    args.flags.insert(stripped.to_string(), it.next().unwrap());
+                } else {
+                    args.switches.insert(stripped.to_string());
+                }
+            } else {
+                args.positional.push(a);
+            }
+        }
+        args
+    }
+
+    /// String flag.
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.consumed.borrow_mut().insert(key.to_string());
+        self.flags.get(key).map(|s| s.as_str())
+    }
+
+    pub fn get_or(&self, key: &str, default: &str) -> String {
+        self.get(key).unwrap_or(default).to_string()
+    }
+
+    /// Numeric flag with default.
+    pub fn usize_or(&self, key: &str, default: usize) -> anyhow::Result<usize> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| anyhow::anyhow!("--{key} expects an integer, got '{v}'")),
+        }
+    }
+
+    pub fn f64_or(&self, key: &str, default: f64) -> anyhow::Result<f64> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| anyhow::anyhow!("--{key} expects a number, got '{v}'")),
+        }
+    }
+
+    /// Boolean switch.
+    pub fn switch(&self, key: &str) -> bool {
+        self.consumed.borrow_mut().insert(key.to_string());
+        self.switches.contains(key)
+    }
+
+    /// Error on unknown flags (call after reading all expected ones).
+    pub fn finish(&self) -> anyhow::Result<()> {
+        let consumed = self.consumed.borrow();
+        let unknown: Vec<&String> = self
+            .flags
+            .keys()
+            .chain(self.switches.iter())
+            .filter(|k| !consumed.contains(k.as_str()))
+            .collect();
+        if unknown.is_empty() {
+            Ok(())
+        } else {
+            anyhow::bail!("unknown flag(s): {unknown:?}")
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Args {
+        Args::parse(s.split_whitespace().map(String::from))
+    }
+
+    #[test]
+    fn basic_grammar() {
+        // Note: a bare token after `--switch` would parse as its value, so
+        // positionals come before switches (documented grammar).
+        let a = parse("train file.json --dataset magic --trees 64 --quant");
+        assert_eq!(a.command, "train");
+        assert_eq!(a.get("dataset"), Some("magic"));
+        assert_eq!(a.usize_or("trees", 1).unwrap(), 64);
+        assert!(a.switch("quant"));
+        assert_eq!(a.positional, vec!["file.json"]);
+        a.finish().unwrap();
+    }
+
+    #[test]
+    fn equals_form() {
+        let a = parse("bench --exp=table5");
+        assert_eq!(a.get("exp"), Some("table5"));
+        a.finish().unwrap();
+    }
+
+    #[test]
+    fn unknown_flags_rejected() {
+        let a = parse("train --bogus 1");
+        let _ = a.get("dataset");
+        assert!(a.finish().is_err());
+    }
+
+    #[test]
+    fn bad_number_reported() {
+        let a = parse("x --trees nope");
+        assert!(a.usize_or("trees", 1).is_err());
+    }
+
+    #[test]
+    fn switch_vs_flag_disambiguation() {
+        let a = parse("x --quant --out file");
+        assert!(a.switch("quant"));
+        assert_eq!(a.get("out"), Some("file"));
+    }
+}

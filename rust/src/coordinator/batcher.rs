@@ -1,0 +1,320 @@
+//! Dynamic batcher: groups single-instance requests into SIMD-width-aligned
+//! batches under a latency budget.
+//!
+//! The paper's SIMD engines evaluate `v` instances per block (VQS v=4/8,
+//! RS v=16); serving one request at a time would waste (v-1)/v of each
+//! register. The batcher collects requests until either `max_batch` is
+//! reached or the oldest request has waited `max_delay`, then hands the
+//! assembled batch to the execution workers. Backpressure is a bounded
+//! queue: when full, `submit` fails fast instead of queueing unboundedly.
+
+use std::sync::atomic::Ordering;
+use std::sync::mpsc::{self, Receiver, RecvTimeoutError, SyncSender, TrySendError};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use super::metrics::Metrics;
+use crate::engine::Engine;
+use crate::util::Stopwatch;
+
+/// Batching configuration.
+#[derive(Debug, Clone, Copy)]
+pub struct BatchConfig {
+    /// Maximum instances per executed batch (rounded up to the engine's
+    /// lane width internally).
+    pub max_batch: usize,
+    /// Maximum time the oldest queued request may wait before a flush.
+    pub max_delay: Duration,
+    /// Bounded queue capacity (backpressure limit).
+    pub queue_cap: usize,
+    /// Execution worker threads.
+    pub workers: usize,
+}
+
+impl Default for BatchConfig {
+    fn default() -> Self {
+        BatchConfig {
+            max_batch: 64,
+            max_delay: Duration::from_micros(500),
+            queue_cap: 4096,
+            workers: 1,
+        }
+    }
+}
+
+/// One queued request.
+pub struct Request {
+    pub x: Vec<f32>,
+    pub enqueued: Instant,
+    pub reply: mpsc::Sender<Result<Vec<f32>, ServeError>>,
+}
+
+/// Serving errors surfaced to clients.
+#[derive(Debug, Clone, thiserror::Error, PartialEq, Eq)]
+pub enum ServeError {
+    #[error("queue full (backpressure)")]
+    Overloaded,
+    #[error("model is shutting down")]
+    Shutdown,
+    #[error("bad input: {0}")]
+    BadInput(String),
+}
+
+/// A running batcher for one engine.
+pub struct Batcher {
+    tx: SyncSender<Request>,
+    collector: Option<std::thread::JoinHandle<()>>,
+    workers: Vec<std::thread::JoinHandle<()>>,
+    pub metrics: Arc<Metrics>,
+    n_features: usize,
+}
+
+impl Batcher {
+    pub fn start(engine: Arc<dyn Engine>, config: BatchConfig) -> Batcher {
+        let metrics = Arc::new(Metrics::new());
+        let (tx, rx) = mpsc::sync_channel::<Request>(config.queue_cap);
+        let (batch_tx, batch_rx) = mpsc::channel::<Vec<Request>>();
+        let batch_rx = Arc::new(std::sync::Mutex::new(batch_rx));
+
+        // Round the batch size up to a lane multiple so SIMD blocks are full.
+        let lanes = engine.lanes().max(1);
+        let max_batch = config.max_batch.div_ceil(lanes) * lanes;
+
+        let collector = {
+            let metrics = metrics.clone();
+            std::thread::Builder::new()
+                .name("batcher-collector".into())
+                .spawn(move || collect_loop(rx, batch_tx, max_batch, config.max_delay, metrics))
+                .expect("spawn collector")
+        };
+
+        let workers = (0..config.workers.max(1))
+            .map(|wi| {
+                let engine = engine.clone();
+                let metrics = metrics.clone();
+                let batch_rx = batch_rx.clone();
+                std::thread::Builder::new()
+                    .name(format!("batcher-worker-{wi}"))
+                    .spawn(move || worker_loop(engine, batch_rx, metrics))
+                    .expect("spawn worker")
+            })
+            .collect();
+
+        Batcher {
+            tx,
+            collector: Some(collector),
+            workers,
+            metrics,
+            n_features: engine.n_features(),
+        }
+    }
+
+    /// Submit one instance; returns the reply channel. Fails fast under
+    /// backpressure.
+    pub fn submit(&self, x: Vec<f32>) -> Result<mpsc::Receiver<Result<Vec<f32>, ServeError>>, ServeError> {
+        if x.len() != self.n_features {
+            return Err(ServeError::BadInput(format!(
+                "expected {} features, got {}",
+                self.n_features,
+                x.len()
+            )));
+        }
+        self.metrics.requests.fetch_add(1, Ordering::Relaxed);
+        let (reply_tx, reply_rx) = mpsc::channel();
+        let req = Request { x, enqueued: Instant::now(), reply: reply_tx };
+        match self.tx.try_send(req) {
+            Ok(()) => Ok(reply_rx),
+            Err(TrySendError::Full(_)) => {
+                self.metrics.rejected.fetch_add(1, Ordering::Relaxed);
+                Err(ServeError::Overloaded)
+            }
+            Err(TrySendError::Disconnected(_)) => Err(ServeError::Shutdown),
+        }
+    }
+
+    /// Submit and wait for the scores (convenience).
+    pub fn predict(&self, x: Vec<f32>) -> Result<Vec<f32>, ServeError> {
+        let rx = self.submit(x)?;
+        rx.recv().map_err(|_| ServeError::Shutdown)?
+    }
+}
+
+impl Drop for Batcher {
+    fn drop(&mut self) {
+        // Closing `tx` ends the collector; it drops `batch_tx`, ending the
+        // workers.
+        drop(std::mem::replace(&mut self.tx, {
+            let (t, _r) = mpsc::sync_channel(1);
+            t
+        }));
+        if let Some(c) = self.collector.take() {
+            let _ = c.join();
+        }
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+    }
+}
+
+fn collect_loop(
+    rx: Receiver<Request>,
+    batch_tx: mpsc::Sender<Vec<Request>>,
+    max_batch: usize,
+    max_delay: Duration,
+    _metrics: Arc<Metrics>,
+) {
+    let mut pending: Vec<Request> = Vec::with_capacity(max_batch);
+    loop {
+        if pending.is_empty() {
+            // Block for the first request (or shutdown).
+            match rx.recv() {
+                Ok(r) => pending.push(r),
+                Err(_) => return,
+            }
+        }
+        // Fill until max_batch or the oldest request's deadline.
+        let deadline = pending[0].enqueued + max_delay;
+        while pending.len() < max_batch {
+            let now = Instant::now();
+            if now >= deadline {
+                break;
+            }
+            match rx.recv_timeout(deadline - now) {
+                Ok(r) => pending.push(r),
+                Err(RecvTimeoutError::Timeout) => break,
+                Err(RecvTimeoutError::Disconnected) => {
+                    if !pending.is_empty() {
+                        let _ = batch_tx.send(std::mem::take(&mut pending));
+                    }
+                    return;
+                }
+            }
+        }
+        if batch_tx.send(std::mem::take(&mut pending)).is_err() {
+            return;
+        }
+    }
+}
+
+fn worker_loop(
+    engine: Arc<dyn Engine>,
+    batch_rx: Arc<std::sync::Mutex<Receiver<Vec<Request>>>>,
+    metrics: Arc<Metrics>,
+) {
+    let d = engine.n_features();
+    let c = engine.n_classes();
+    loop {
+        let batch = {
+            let rx = batch_rx.lock().unwrap();
+            match rx.recv() {
+                Ok(b) => b,
+                Err(_) => return,
+            }
+        };
+        let n = batch.len();
+        let mut x = Vec::with_capacity(n * d);
+        for r in &batch {
+            x.extend_from_slice(&r.x);
+        }
+        let sw = Stopwatch::start();
+        let mut out = vec![0f32; n * c];
+        engine.predict_batch(&x, &mut out);
+        metrics.record_batch(n, sw.micros());
+        let now = Instant::now();
+        for (i, r) in batch.into_iter().enumerate() {
+            let scores = out[i * c..(i + 1) * c].to_vec();
+            metrics
+                .record_latency(now.duration_since(r.enqueued).as_secs_f64() * 1e6);
+            let _ = r.reply.send(Ok(scores));
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::DatasetId;
+    use crate::engine::{build, EngineKind, Precision};
+    use crate::forest::builder::{train_random_forest, RfParams, TreeParams};
+
+    fn engine() -> (Arc<dyn Engine>, crate::data::Dataset) {
+        let ds = DatasetId::Magic.generate(400, 55);
+        let f = train_random_forest(
+            &ds.x,
+            &ds.labels,
+            ds.d,
+            ds.n_classes,
+            RfParams {
+                n_trees: 8,
+                tree: TreeParams { max_leaves: 16, min_samples_leaf: 2, mtry: 0 },
+                ..Default::default()
+            },
+        );
+        (Arc::from(build(EngineKind::Rs, Precision::F32, &f, None).unwrap()), ds)
+    }
+
+    #[test]
+    fn batched_results_match_direct() {
+        let (eng, ds) = engine();
+        let direct = eng.predict(&ds.x[..ds.d * 20]);
+        let b = Batcher::start(eng.clone(), BatchConfig::default());
+        // Submit 20 requests concurrently, gather replies in order.
+        let replies: Vec<_> =
+            (0..20).map(|i| b.submit(ds.row(i).to_vec()).unwrap()).collect();
+        for (i, r) in replies.into_iter().enumerate() {
+            let scores = r.recv().unwrap().unwrap();
+            assert_eq!(&scores[..], &direct[i * ds.n_classes..(i + 1) * ds.n_classes]);
+        }
+    }
+
+    #[test]
+    fn rejects_wrong_width() {
+        let (eng, _) = engine();
+        let b = Batcher::start(eng, BatchConfig::default());
+        let err = b.submit(vec![0.0; 3]).unwrap_err();
+        assert!(matches!(err, ServeError::BadInput(_)));
+    }
+
+    #[test]
+    fn backpressure_rejects_when_full() {
+        let (eng, ds) = engine();
+        // Tiny queue + long delay so the queue definitely fills.
+        let b = Batcher::start(
+            eng,
+            BatchConfig {
+                max_batch: 1024,
+                max_delay: Duration::from_millis(250),
+                queue_cap: 4,
+                workers: 1,
+            },
+        );
+        let mut overloaded = false;
+        let mut replies = Vec::new();
+        for i in 0..64 {
+            match b.submit(ds.row(i % ds.n).to_vec()) {
+                Ok(r) => replies.push(r),
+                Err(ServeError::Overloaded) => {
+                    overloaded = true;
+                    break;
+                }
+                Err(e) => panic!("unexpected {e}"),
+            }
+        }
+        assert!(overloaded, "queue_cap=4 must trigger backpressure");
+        // Queued requests still complete.
+        for r in replies {
+            r.recv().unwrap().unwrap();
+        }
+    }
+
+    #[test]
+    fn metrics_progress() {
+        let (eng, ds) = engine();
+        let b = Batcher::start(eng, BatchConfig::default());
+        for i in 0..10 {
+            b.predict(ds.row(i).to_vec()).unwrap();
+        }
+        assert_eq!(b.metrics.completed.load(Ordering::Relaxed), 10);
+        assert!(b.metrics.mean_batch_size() >= 1.0);
+    }
+}

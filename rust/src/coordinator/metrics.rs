@@ -1,0 +1,102 @@
+//! Serving metrics: counters and latency reservoirs, lock-cheap enough for
+//! the request path.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+
+use crate::util::Summary;
+
+/// Per-model serving metrics.
+#[derive(Debug, Default)]
+pub struct Metrics {
+    pub requests: AtomicU64,
+    pub completed: AtomicU64,
+    pub rejected: AtomicU64,
+    pub batches: AtomicU64,
+    pub batched_instances: AtomicU64,
+    /// End-to-end request latencies in µs (bounded reservoir).
+    latencies_us: Mutex<Vec<f64>>,
+    /// Batch execution times in µs.
+    batch_us: Mutex<Vec<f64>>,
+}
+
+const RESERVOIR: usize = 65_536;
+
+impl Metrics {
+    pub fn new() -> Metrics {
+        Metrics::default()
+    }
+
+    pub fn record_latency(&self, us: f64) {
+        self.completed.fetch_add(1, Ordering::Relaxed);
+        let mut l = self.latencies_us.lock().unwrap();
+        if l.len() < RESERVOIR {
+            l.push(us);
+        }
+    }
+
+    pub fn record_batch(&self, size: usize, us: f64) {
+        self.batches.fetch_add(1, Ordering::Relaxed);
+        self.batched_instances.fetch_add(size as u64, Ordering::Relaxed);
+        let mut b = self.batch_us.lock().unwrap();
+        if b.len() < RESERVOIR {
+            b.push(us);
+        }
+    }
+
+    /// Latency summary (µs).
+    pub fn latency_summary(&self) -> Summary {
+        Summary::of(&self.latencies_us.lock().unwrap())
+    }
+
+    /// Batch-execution summary (µs).
+    pub fn batch_summary(&self) -> Summary {
+        Summary::of(&self.batch_us.lock().unwrap())
+    }
+
+    /// Mean instances per executed batch.
+    pub fn mean_batch_size(&self) -> f64 {
+        let b = self.batches.load(Ordering::Relaxed);
+        if b == 0 {
+            0.0
+        } else {
+            self.batched_instances.load(Ordering::Relaxed) as f64 / b as f64
+        }
+    }
+
+    /// One-line human report.
+    pub fn report(&self) -> String {
+        let lat = self.latency_summary();
+        format!(
+            "req={} done={} rej={} batches={} mean_batch={:.1} lat_us(p50={:.0} p95={:.0} p99={:.0} max={:.0})",
+            self.requests.load(Ordering::Relaxed),
+            self.completed.load(Ordering::Relaxed),
+            self.rejected.load(Ordering::Relaxed),
+            self.batches.load(Ordering::Relaxed),
+            self.mean_batch_size(),
+            lat.median,
+            lat.p95,
+            lat.p99,
+            lat.max,
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn records_and_reports() {
+        let m = Metrics::new();
+        m.requests.fetch_add(3, Ordering::Relaxed);
+        m.record_latency(100.0);
+        m.record_latency(200.0);
+        m.record_batch(2, 150.0);
+        assert_eq!(m.completed.load(Ordering::Relaxed), 2);
+        assert_eq!(m.mean_batch_size(), 2.0);
+        let s = m.latency_summary();
+        assert_eq!(s.n, 2);
+        assert!(m.report().contains("batches=1"));
+    }
+}

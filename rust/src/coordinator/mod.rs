@@ -1,0 +1,238 @@
+//! L3 coordinator: the serving layer (DESIGN.md system S9).
+//!
+//! A [`Server`] hosts named models. Each model gets an [`Engine`] (picked
+//! explicitly or by the auto-[`selector`]), a SIMD-width-aware dynamic
+//! [`batcher`] with bounded-queue backpressure, and per-model [`metrics`].
+//! Clients submit single instances and receive score vectors; the batcher
+//! turns the request stream into full SIMD blocks, which is where the
+//! paper's engines earn their speedups.
+
+pub mod batcher;
+pub mod metrics;
+pub mod net;
+pub mod selector;
+
+pub use batcher::{BatchConfig, Batcher, ServeError};
+pub use metrics::Metrics;
+pub use net::{NetClient, NetServer};
+pub use selector::{select_engine, Candidate, Selection};
+
+use std::collections::HashMap;
+use std::sync::{Arc, RwLock};
+
+use crate::engine::{build, Engine, EngineKind, Precision};
+use crate::forest::{Forest, Task};
+
+/// A deployed model: its engine's batcher plus descriptive metadata.
+pub struct Deployment {
+    pub batcher: Batcher,
+    pub engine_name: String,
+    pub n_features: usize,
+    pub n_classes: usize,
+    pub task: Task,
+}
+
+/// The serving coordinator: model registry + per-model batchers.
+#[derive(Default)]
+pub struct Server {
+    models: RwLock<HashMap<String, Arc<Deployment>>>,
+}
+
+impl Server {
+    pub fn new() -> Server {
+        Server::default()
+    }
+
+    /// Deploy a forest under `name` with an explicit engine choice.
+    pub fn deploy(
+        &self,
+        name: &str,
+        forest: &Forest,
+        kind: EngineKind,
+        precision: Precision,
+        config: BatchConfig,
+    ) -> anyhow::Result<()> {
+        let engine: Arc<dyn Engine> = Arc::from(build(kind, precision, forest, None)?);
+        self.deploy_engine(name, forest, engine, config)
+    }
+
+    /// Deploy with a pre-built engine (e.g. a tensor engine or a
+    /// selector-chosen one).
+    pub fn deploy_engine(
+        &self,
+        name: &str,
+        forest: &Forest,
+        engine: Arc<dyn Engine>,
+        config: BatchConfig,
+    ) -> anyhow::Result<()> {
+        let dep = Deployment {
+            engine_name: engine.name(),
+            n_features: engine.n_features(),
+            n_classes: engine.n_classes(),
+            task: forest.task,
+            batcher: Batcher::start(engine, config),
+        };
+        self.models.write().unwrap().insert(name.to_string(), Arc::new(dep));
+        Ok(())
+    }
+
+    /// Deploy using the auto-selector on a calibration batch.
+    pub fn deploy_auto(
+        &self,
+        name: &str,
+        forest: &Forest,
+        calibration: &[f32],
+        config: BatchConfig,
+    ) -> anyhow::Result<Selection> {
+        let sel = select_engine(forest, calibration, None, 3)?;
+        let best = sel.best();
+        self.deploy(name, forest, best.kind, best.precision, config)?;
+        Ok(sel)
+    }
+
+    /// Look up a deployment.
+    pub fn model(&self, name: &str) -> Option<Arc<Deployment>> {
+        self.models.read().unwrap().get(name).cloned()
+    }
+
+    /// Remove a deployment (its batcher drains and stops on drop).
+    pub fn undeploy(&self, name: &str) -> bool {
+        self.models.write().unwrap().remove(name).is_some()
+    }
+
+    pub fn list(&self) -> Vec<String> {
+        let mut v: Vec<String> = self.models.read().unwrap().keys().cloned().collect();
+        v.sort();
+        v
+    }
+
+    /// Blocking single prediction against a deployed model.
+    pub fn predict(&self, name: &str, x: Vec<f32>) -> Result<Vec<f32>, ServeError> {
+        let dep = self
+            .model(name)
+            .ok_or_else(|| ServeError::BadInput(format!("unknown model '{name}'")))?;
+        dep.batcher.predict(x)
+    }
+
+    /// Classification helper: argmax over the score vector.
+    pub fn classify(&self, name: &str, x: Vec<f32>) -> Result<u32, ServeError> {
+        let scores = self.predict(name, x)?;
+        let mut best = 0usize;
+        for (i, &s) in scores.iter().enumerate() {
+            if s > scores[best] {
+                best = i;
+            }
+        }
+        Ok(best as u32)
+    }
+
+    /// Metrics report for every deployed model.
+    pub fn report(&self) -> String {
+        let mut out = String::new();
+        for name in self.list() {
+            if let Some(dep) = self.model(&name) {
+                out.push_str(&format!(
+                    "{name} [{}] {}\n",
+                    dep.engine_name,
+                    dep.batcher.metrics.report()
+                ));
+            }
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::DatasetId;
+    use crate::forest::builder::{train_random_forest, RfParams, TreeParams};
+
+    fn forest() -> (Forest, crate::data::Dataset) {
+        let ds = DatasetId::Magic.generate(500, 61);
+        let f = train_random_forest(
+            &ds.x,
+            &ds.labels,
+            ds.d,
+            ds.n_classes,
+            RfParams {
+                n_trees: 12,
+                tree: TreeParams { max_leaves: 16, min_samples_leaf: 2, mtry: 0 },
+                ..Default::default()
+            },
+        );
+        (f, ds)
+    }
+
+    #[test]
+    fn deploy_predict_undeploy() {
+        let (f, ds) = forest();
+        let server = Server::new();
+        server
+            .deploy("magic", &f, EngineKind::Vqs, Precision::F32, BatchConfig::default())
+            .unwrap();
+        assert_eq!(server.list(), vec!["magic".to_string()]);
+        let scores = server.predict("magic", ds.row(0).to_vec()).unwrap();
+        let want = f.predict_batch(ds.row(0));
+        crate::testing::assert_close(&scores, &want, 1e-5, 1e-5).unwrap();
+        assert!(server.undeploy("magic"));
+        assert!(server.predict("magic", ds.row(0).to_vec()).is_err());
+    }
+
+    #[test]
+    fn concurrent_clients_agree_with_reference() {
+        let (f, ds) = forest();
+        let server = Arc::new(Server::new());
+        server
+            .deploy("m", &f, EngineKind::Rs, Precision::F32, BatchConfig::default())
+            .unwrap();
+        let want = f.predict_batch(&ds.x);
+        let mut handles = Vec::new();
+        for t in 0..4 {
+            let server = server.clone();
+            let ds = ds.clone();
+            let want = want.clone();
+            handles.push(std::thread::spawn(move || {
+                for i in (t..80).step_by(4) {
+                    let got = server.predict("m", ds.row(i).to_vec()).unwrap();
+                    crate::testing::assert_close(
+                        &got,
+                        &want[i * ds.n_classes..(i + 1) * ds.n_classes],
+                        1e-5,
+                        1e-5,
+                    )
+                    .unwrap();
+                }
+            }));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+        let dep = server.model("m").unwrap();
+        assert_eq!(dep.batcher.metrics.completed.load(std::sync::atomic::Ordering::Relaxed), 80);
+    }
+
+    #[test]
+    fn auto_deploy_picks_something() {
+        let (f, ds) = forest();
+        let server = Server::new();
+        let sel = server
+            .deploy_auto("auto", &f, &ds.x[..ds.d * 128], BatchConfig::default())
+            .unwrap();
+        assert_eq!(sel.candidates.len(), 10);
+        let c = server.classify("auto", ds.row(3).to_vec()).unwrap();
+        assert!(c < 2);
+    }
+
+    #[test]
+    fn classify_matches_argmax() {
+        let (f, ds) = forest();
+        let server = Server::new();
+        server
+            .deploy("m", &f, EngineKind::Qs, Precision::F32, BatchConfig::default())
+            .unwrap();
+        let scores = f.predict_batch(ds.row(7));
+        let want = Forest::argmax(&scores, f.n_classes)[0];
+        assert_eq!(server.classify("m", ds.row(7).to_vec()).unwrap(), want);
+    }
+}

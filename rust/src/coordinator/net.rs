@@ -1,0 +1,293 @@
+//! Network front end: newline-delimited JSON over TCP.
+//!
+//! A deliberately small wire protocol (no HTTP stack offline) that makes the
+//! coordinator an actual network service:
+//!
+//! ```text
+//! → {"model": "magic", "x": [0.1, 0.2, ...]}
+//! ← {"scores": [0.93, 0.07], "class": 0}
+//! → {"cmd": "list"}
+//! ← {"models": ["magic"]}
+//! → {"cmd": "stats", "model": "magic"}
+//! ← {"report": "..."}
+//! ```
+//!
+//! One line per request/response; errors come back as `{"error": "..."}`.
+//! Each connection gets a handler thread; prediction itself goes through the
+//! dynamic batcher, so concurrent connections share SIMD blocks.
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::{TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+
+use crate::forest::Forest;
+use crate::util::Json;
+
+use super::Server;
+
+/// A running TCP front end.
+pub struct NetServer {
+    addr: std::net::SocketAddr,
+    stop: Arc<AtomicBool>,
+    accept_thread: Option<std::thread::JoinHandle<()>>,
+}
+
+impl NetServer {
+    /// Start listening; `addr` like `"127.0.0.1:0"` (port 0 = ephemeral).
+    pub fn start(server: Arc<Server>, addr: &str) -> anyhow::Result<NetServer> {
+        let listener = TcpListener::bind(addr)?;
+        let local = listener.local_addr()?;
+        let stop = Arc::new(AtomicBool::new(false));
+        let stop2 = stop.clone();
+        listener.set_nonblocking(true)?;
+        let accept_thread = std::thread::Builder::new()
+            .name("net-accept".into())
+            .spawn(move || {
+                while !stop2.load(Ordering::Relaxed) {
+                    match listener.accept() {
+                        Ok((stream, _)) => {
+                            let server = server.clone();
+                            // Handler threads are detached: they exit when
+                            // their client hangs up. Joining them here would
+                            // deadlock shutdown against still-connected
+                            // clients.
+                            std::thread::spawn(move || {
+                                let _ = handle_conn(server, stream);
+                            });
+                        }
+                        Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                            std::thread::sleep(std::time::Duration::from_millis(5));
+                        }
+                        Err(_) => break,
+                    }
+                }
+            })?;
+        Ok(NetServer { addr: local, stop, accept_thread: Some(accept_thread) })
+    }
+
+    pub fn addr(&self) -> std::net::SocketAddr {
+        self.addr
+    }
+
+    /// Signal shutdown and join the accept loop.
+    pub fn shutdown(mut self) {
+        self.stop.store(true, Ordering::Relaxed);
+        if let Some(h) = self.accept_thread.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for NetServer {
+    fn drop(&mut self) {
+        self.stop.store(true, Ordering::Relaxed);
+        if let Some(h) = self.accept_thread.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+fn handle_conn(server: Arc<Server>, stream: TcpStream) -> std::io::Result<()> {
+    stream.set_nodelay(true)?;
+    let mut writer = stream.try_clone()?;
+    let reader = BufReader::new(stream);
+    for line in reader.lines() {
+        let line = line?;
+        if line.trim().is_empty() {
+            continue;
+        }
+        let response = handle_line(&server, &line);
+        writer.write_all(response.dump().as_bytes())?;
+        writer.write_all(b"\n")?;
+    }
+    Ok(())
+}
+
+/// Process one request line (exposed for tests).
+pub fn handle_line(server: &Server, line: &str) -> Json {
+    let err = |msg: String| Json::from_pairs(vec![("error", Json::Str(msg))]);
+    let req = match Json::parse(line) {
+        Ok(j) => j,
+        Err(e) => return err(format!("bad json: {e}")),
+    };
+    match req.get("cmd").and_then(|c| c.as_str()) {
+        Some("list") => {
+            let models = server.list().into_iter().map(Json::Str).collect();
+            Json::from_pairs(vec![("models", Json::Arr(models))])
+        }
+        Some("stats") => {
+            let name = req.get("model").and_then(|m| m.as_str()).unwrap_or("");
+            match server.model(name) {
+                Some(dep) => Json::from_pairs(vec![(
+                    "report",
+                    Json::Str(format!("[{}] {}", dep.engine_name, dep.batcher.metrics.report())),
+                )]),
+                None => err(format!("unknown model '{name}'")),
+            }
+        }
+        Some(other) => err(format!("unknown cmd '{other}'")),
+        None => {
+            // Prediction request.
+            let Some(name) = req.get("model").and_then(|m| m.as_str()) else {
+                return err("missing 'model'".into());
+            };
+            let Some(x) = req.get("x").and_then(|x| x.to_f32_vec()) else {
+                return err("missing or non-numeric 'x'".into());
+            };
+            match server.predict(name, x) {
+                Ok(scores) => {
+                    let class = Forest::argmax(&scores, scores.len())[0];
+                    Json::from_pairs(vec![
+                        ("scores", Json::array_f32(&scores)),
+                        ("class", Json::Num(class as f64)),
+                    ])
+                }
+                Err(e) => err(e.to_string()),
+            }
+        }
+    }
+}
+
+/// Minimal blocking client for examples/tests.
+pub struct NetClient {
+    reader: BufReader<TcpStream>,
+    writer: TcpStream,
+}
+
+impl NetClient {
+    pub fn connect(addr: std::net::SocketAddr) -> anyhow::Result<NetClient> {
+        let stream = TcpStream::connect(addr)?;
+        stream.set_nodelay(true)?;
+        Ok(NetClient { writer: stream.try_clone()?, reader: BufReader::new(stream) })
+    }
+
+    pub fn request(&mut self, req: &Json) -> anyhow::Result<Json> {
+        self.writer.write_all(req.dump().as_bytes())?;
+        self.writer.write_all(b"\n")?;
+        let mut line = String::new();
+        self.reader.read_line(&mut line)?;
+        Ok(Json::parse(&line).map_err(|e| anyhow::anyhow!("bad response: {e}"))?)
+    }
+
+    pub fn predict(&mut self, model: &str, x: &[f32]) -> anyhow::Result<Vec<f32>> {
+        let req = Json::from_pairs(vec![
+            ("model", Json::Str(model.to_string())),
+            ("x", Json::array_f32(x)),
+        ]);
+        let resp = self.request(&req)?;
+        if let Some(e) = resp.get("error").and_then(|e| e.as_str()) {
+            anyhow::bail!("server error: {e}");
+        }
+        resp.get("scores")
+            .and_then(|s| s.to_f32_vec())
+            .ok_or_else(|| anyhow::anyhow!("no scores in response"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::BatchConfig;
+    use crate::data::DatasetId;
+    use crate::engine::{EngineKind, Precision};
+    use crate::forest::builder::{train_random_forest, RfParams, TreeParams};
+
+    fn serving() -> (Arc<Server>, Forest, crate::data::Dataset) {
+        let ds = DatasetId::Magic.generate(400, 0x7C9);
+        let f = train_random_forest(
+            &ds.x,
+            &ds.labels,
+            ds.d,
+            ds.n_classes,
+            RfParams {
+                n_trees: 6,
+                tree: TreeParams { max_leaves: 8, min_samples_leaf: 2, mtry: 0 },
+                ..Default::default()
+            },
+        );
+        let server = Arc::new(Server::new());
+        server
+            .deploy("magic", &f, EngineKind::Vqs, Precision::F32, BatchConfig::default())
+            .unwrap();
+        (server, f, ds)
+    }
+
+    #[test]
+    fn end_to_end_over_tcp() {
+        let (server, f, ds) = serving();
+        let net = NetServer::start(server, "127.0.0.1:0").unwrap();
+        let mut client = NetClient::connect(net.addr()).unwrap();
+        for i in 0..10 {
+            let scores = client.predict("magic", ds.row(i)).unwrap();
+            let want = f.predict_batch(ds.row(i));
+            crate::testing::assert_close(&scores, &want, 1e-5, 1e-5).unwrap();
+        }
+        net.shutdown();
+    }
+
+    #[test]
+    fn protocol_commands() {
+        let (server, _, ds) = serving();
+        // list
+        let r = handle_line(&server, r#"{"cmd": "list"}"#);
+        assert_eq!(r.get("models").unwrap().as_arr().unwrap().len(), 1);
+        // stats
+        let r = handle_line(&server, r#"{"cmd": "stats", "model": "magic"}"#);
+        assert!(r.get("report").is_some());
+        // predict via handle_line
+        let req = Json::from_pairs(vec![
+            ("model", Json::Str("magic".into())),
+            ("x", Json::array_f32(ds.row(0))),
+        ]);
+        let r = handle_line(&server, &req.dump());
+        assert!(r.get("scores").is_some());
+        assert!(r.get("class").unwrap().as_usize().unwrap() < 2);
+    }
+
+    #[test]
+    fn protocol_errors() {
+        let (server, _, _) = serving();
+        assert!(handle_line(&server, "not json").get("error").is_some());
+        assert!(handle_line(&server, r#"{"x": [1]}"#).get("error").is_some());
+        assert!(handle_line(&server, r#"{"model": "nope", "x": [1]}"#)
+            .get("error")
+            .is_some());
+        assert!(handle_line(&server, r#"{"cmd": "bogus"}"#).get("error").is_some());
+        // wrong feature count
+        assert!(handle_line(&server, r#"{"model": "magic", "x": [1, 2]}"#)
+            .get("error")
+            .is_some());
+    }
+
+    #[test]
+    fn concurrent_clients() {
+        let (server, f, ds) = serving();
+        let net = NetServer::start(server, "127.0.0.1:0").unwrap();
+        let addr = net.addr();
+        let want = Arc::new(f.predict_batch(&ds.x));
+        let ds = Arc::new(ds);
+        let mut handles = Vec::new();
+        for t in 0..4 {
+            let want = want.clone();
+            let ds = ds.clone();
+            handles.push(std::thread::spawn(move || {
+                let mut client = NetClient::connect(addr).unwrap();
+                for i in (t..40).step_by(4) {
+                    let got = client.predict("magic", ds.row(i)).unwrap();
+                    crate::testing::assert_close(
+                        &got,
+                        &want[i * ds.n_classes..(i + 1) * ds.n_classes],
+                        1e-5,
+                        1e-5,
+                    )
+                    .unwrap();
+                }
+            }));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+        net.shutdown();
+    }
+}

@@ -1,0 +1,173 @@
+//! Engine auto-selection.
+//!
+//! The paper's central operational finding: *"for the best performance, the
+//! combination between forest, device and implementation is important"*
+//! (§6.1) — no engine wins everywhere. The selector makes that executable:
+//! given a forest and a calibration batch it measures every candidate
+//! engine on the host and/or scores them with a device cost model, and
+//! returns a ranked recommendation.
+
+use std::sync::Arc;
+
+use crate::device::{model_working_set, DeviceProfile};
+use crate::engine::{build, variant_name, Engine, EngineKind, Precision};
+use crate::forest::Forest;
+use crate::util::Stopwatch;
+
+/// How a candidate scored.
+#[derive(Debug, Clone)]
+pub struct Candidate {
+    pub name: String,
+    pub kind: EngineKind,
+    pub precision: Precision,
+    /// Measured host wall-clock per instance (µs).
+    pub host_us_per_instance: f64,
+    /// Cost-model estimate per instance (µs) for the target device, if one
+    /// was given.
+    pub device_us_per_instance: Option<f64>,
+}
+
+/// Selection report: candidates sorted best-first by the active criterion.
+#[derive(Debug, Clone)]
+pub struct Selection {
+    pub candidates: Vec<Candidate>,
+    pub device: Option<String>,
+}
+
+impl Selection {
+    pub fn best(&self) -> &Candidate {
+        &self.candidates[0]
+    }
+
+    pub fn report(&self) -> String {
+        let mut out = String::new();
+        let target = self.device.as_deref().unwrap_or("host");
+        out.push_str(&format!("engine selection (target: {target})\n"));
+        out.push_str(&format!(
+            "  {:<6} {:>14} {:>16}\n",
+            "engine", "host µs/inst", "device µs/inst"
+        ));
+        for c in &self.candidates {
+            out.push_str(&format!(
+                "  {:<6} {:>14.2} {:>16}\n",
+                c.name,
+                c.host_us_per_instance,
+                c.device_us_per_instance
+                    .map(|v| format!("{v:.2}"))
+                    .unwrap_or_else(|| "-".into()),
+            ));
+        }
+        out
+    }
+}
+
+/// Measure every engine variant on `calibration` (row-major batch) and rank.
+///
+/// With a `device` profile, ranking uses the cost-model estimate (the
+/// deployment target); otherwise host wall-clock. `repeats` controls the
+/// median-of-k timing.
+pub fn select_engine(
+    forest: &Forest,
+    calibration: &[f32],
+    device: Option<&DeviceProfile>,
+    repeats: usize,
+) -> anyhow::Result<Selection> {
+    let n = calibration.len() / forest.n_features;
+    anyhow::ensure!(n > 0, "calibration batch is empty");
+    let mut candidates = Vec::new();
+    for (kind, precision) in crate::engine::all_variants() {
+        let engine: Arc<dyn Engine> = match build(kind, precision, forest, None) {
+            Ok(e) => Arc::from(e),
+            Err(_) => continue, // e.g. >64 leaves: QS family unavailable
+        };
+        let mut out = vec![0f32; n * forest.n_classes];
+        // Warmup + median-of-k.
+        engine.predict_batch(calibration, &mut out);
+        let mut times = Vec::with_capacity(repeats);
+        for _ in 0..repeats.max(1) {
+            let sw = Stopwatch::start();
+            engine.predict_batch(calibration, &mut out);
+            times.push(sw.micros() / n as f64);
+        }
+        times.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let host = times[times.len() / 2];
+        let device_est = device.map(|dev| {
+            let trace = engine.count_ops(calibration);
+            let bytes_per_scalar = match precision {
+                Precision::F32 => 4,
+                Precision::I16 => 2,
+            };
+            let ws = model_working_set(
+                forest.n_nodes(),
+                forest.n_trees(),
+                forest.max_leaves().next_power_of_two().max(32),
+                forest.n_classes,
+                bytes_per_scalar,
+            );
+            dev.estimate_us(&trace, ws) / n as f64
+        });
+        candidates.push(Candidate {
+            name: variant_name(kind, precision),
+            kind,
+            precision,
+            host_us_per_instance: host,
+            device_us_per_instance: device_est,
+        });
+    }
+    candidates.sort_by(|a, b| {
+        let ka = a.device_us_per_instance.unwrap_or(a.host_us_per_instance);
+        let kb = b.device_us_per_instance.unwrap_or(b.host_us_per_instance);
+        ka.partial_cmp(&kb).unwrap()
+    });
+    Ok(Selection { candidates, device: device.map(|d| d.name.to_string()) })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::DatasetId;
+    use crate::forest::builder::{train_random_forest, RfParams, TreeParams};
+
+    #[test]
+    fn selects_and_ranks() {
+        let ds = DatasetId::Magic.generate(600, 21);
+        let f = train_random_forest(
+            &ds.x,
+            &ds.labels,
+            ds.d,
+            ds.n_classes,
+            RfParams {
+                n_trees: 24,
+                tree: TreeParams { max_leaves: 32, min_samples_leaf: 2, mtry: 0 },
+                ..Default::default()
+            },
+        );
+        let sel = select_engine(&f, &ds.x[..ds.d * 256], None, 3).unwrap();
+        assert_eq!(sel.candidates.len(), 10);
+        // sorted ascending by µs/instance
+        for w in sel.candidates.windows(2) {
+            assert!(w[0].host_us_per_instance <= w[1].host_us_per_instance);
+        }
+        assert!(sel.report().contains("engine selection"));
+    }
+
+    #[test]
+    fn device_estimates_populated() {
+        let ds = DatasetId::Eeg.generate(400, 22);
+        let f = train_random_forest(
+            &ds.x,
+            &ds.labels,
+            ds.d,
+            ds.n_classes,
+            RfParams {
+                n_trees: 8,
+                tree: TreeParams { max_leaves: 16, min_samples_leaf: 2, mtry: 0 },
+                ..Default::default()
+            },
+        );
+        let dev = DeviceProfile::cortex_a53();
+        let sel = select_engine(&f, &ds.x[..ds.d * 64], Some(&dev), 1).unwrap();
+        assert!(sel.candidates.iter().all(|c| c.device_us_per_instance.is_some()));
+        assert!(sel.device.as_deref().unwrap().contains("A53"));
+    }
+}

@@ -1,0 +1,114 @@
+//! Tiny CSV reader/writer so users can bring their own datasets to the CLI
+//! (`arbors train --data file.csv`) and export predictions.
+//!
+//! Format: optional header row, comma-separated numeric fields, label in the
+//! last column for classification data. No quoting (numeric data only).
+
+use std::path::Path;
+
+use super::Dataset;
+
+/// Write a dataset to CSV with a generated header (`f0..f{d-1},label`).
+pub fn write_dataset(ds: &Dataset, path: &Path) -> anyhow::Result<()> {
+    if let Some(dir) = path.parent() {
+        std::fs::create_dir_all(dir)?;
+    }
+    let mut out = String::new();
+    for f in 0..ds.d {
+        out.push_str(&format!("f{f},"));
+    }
+    out.push_str("label\n");
+    for i in 0..ds.n {
+        for v in ds.row(i) {
+            out.push_str(&format!("{v},"));
+        }
+        out.push_str(&format!("{}\n", ds.labels[i]));
+    }
+    std::fs::write(path, out)?;
+    Ok(())
+}
+
+/// Read a CSV of numeric features with the label in the last column.
+/// A non-numeric first row is treated as a header and skipped.
+pub fn read_dataset(path: &Path, name: &str) -> anyhow::Result<Dataset> {
+    let text = std::fs::read_to_string(path)?;
+    let mut x = Vec::new();
+    let mut labels = Vec::new();
+    let mut d = 0usize;
+    for (lineno, line) in text.lines().enumerate() {
+        let line = line.trim();
+        if line.is_empty() {
+            continue;
+        }
+        let fields: Vec<&str> = line.split(',').collect();
+        if lineno == 0 && fields[0].parse::<f32>().is_err() {
+            continue; // header
+        }
+        if fields.len() < 2 {
+            anyhow::bail!("{path:?}:{}: need at least one feature + label", lineno + 1);
+        }
+        let row_d = fields.len() - 1;
+        if d == 0 {
+            d = row_d;
+        } else if d != row_d {
+            anyhow::bail!("{path:?}:{}: ragged row ({row_d} vs {d} features)", lineno + 1);
+        }
+        for f in &fields[..row_d] {
+            x.push(
+                f.parse::<f32>()
+                    .map_err(|_| anyhow::anyhow!("{path:?}:{}: bad number '{f}'", lineno + 1))?,
+            );
+        }
+        labels.push(
+            fields[row_d]
+                .parse::<f32>()
+                .map_err(|_| anyhow::anyhow!("{path:?}:{}: bad label", lineno + 1))? as u32,
+        );
+    }
+    if labels.is_empty() {
+        anyhow::bail!("{path:?}: empty dataset");
+    }
+    let n = labels.len();
+    let n_classes = labels.iter().copied().max().unwrap_or(0) as usize + 1;
+    Ok(Dataset { name: name.to_string(), x, labels, n, d, n_classes })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::DatasetId;
+
+    #[test]
+    fn roundtrip() {
+        let ds = DatasetId::Magic.generate(40, 2);
+        let path = std::env::temp_dir().join(format!("arbors_csv_{}.csv", std::process::id()));
+        write_dataset(&ds, &path).unwrap();
+        let ds2 = read_dataset(&path, "magic").unwrap();
+        assert_eq!(ds.n, ds2.n);
+        assert_eq!(ds.d, ds2.d);
+        assert_eq!(ds.labels, ds2.labels);
+        for (a, b) in ds.x.iter().zip(&ds2.x) {
+            assert!((a - b).abs() < 1e-5);
+        }
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn rejects_ragged() {
+        let path = std::env::temp_dir().join(format!("arbors_rag_{}.csv", std::process::id()));
+        std::fs::write(&path, "1,2,0\n1,0\n").unwrap();
+        assert!(read_dataset(&path, "x").is_err());
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn skips_header() {
+        let path = std::env::temp_dir().join(format!("arbors_hdr_{}.csv", std::process::id()));
+        std::fs::write(&path, "a,b,label\n0.5,1.5,1\n").unwrap();
+        let ds = read_dataset(&path, "x").unwrap();
+        assert_eq!(ds.n, 1);
+        assert_eq!(ds.d, 2);
+        assert_eq!(ds.labels, vec![1]);
+        std::fs::remove_file(&path).ok();
+    }
+}

@@ -1,0 +1,223 @@
+//! Datasets: containers, normalization, splits, and the synthetic generators
+//! standing in for the paper's public datasets (offline environment — see
+//! DESIGN.md §1 "Substitutions").
+//!
+//! Each generator is matched to its real counterpart in dimensionality, class
+//! count and — crucially for the paper's findings — *threshold distribution*:
+//!
+//! * `magic_like`  — d=10, C=2, smooth continuous features (Magic04).
+//! * `adult_like`  — d=108, C=2, mostly one-hot binary features (Adult after
+//!   one-hot encoding), so split thresholds collapse onto ~one value per
+//!   feature → heavy RapidScorer node merging (paper Table 4: 6% unique).
+//! * `eeg_like`    — d=14, C=2, continuous with extreme outliers; min-max
+//!   normalization squeezes the informative range into a tiny band, so int16
+//!   fixed-point quantization collides thresholds → the paper's EEG accuracy
+//!   drop (Table 3) and merge collapse (Table 4).
+//! * `mnist_like` / `fashion_like` — d=784, C=10, pixel features on a 256
+//!   level grid (levels spaced 1/255 ≫ 2⁻¹⁵, so quantization is lossless,
+//!   matching the paper's unchanged MNIST/Fashion rows).
+//! * `msn_like`    — learning-to-rank: 136 features, graded relevance 0–4,
+//!   query groups (MSLR-WEB10K shape).
+
+pub mod csv;
+pub mod ranking;
+pub mod synth;
+
+pub use ranking::RankingDataset;
+
+use crate::util::Pcg32;
+
+/// A dense classification dataset (row-major features).
+#[derive(Debug, Clone)]
+pub struct Dataset {
+    pub name: String,
+    /// Row-major `[n × d]`.
+    pub x: Vec<f32>,
+    pub labels: Vec<u32>,
+    pub n: usize,
+    pub d: usize,
+    pub n_classes: usize,
+}
+
+impl Dataset {
+    pub fn row(&self, i: usize) -> &[f32] {
+        &self.x[i * self.d..(i + 1) * self.d]
+    }
+
+    /// Min-max normalize every feature to `[0, 1]` in place; constant
+    /// features map to 0. Returns the per-feature `(min, max)` used, so the
+    /// same affine map can be applied at serving time.
+    ///
+    /// This is the preprocessing the paper's fixed-point pipeline assumes:
+    /// `q(x) = ⌊s·x⌋` with `s = 2^15` stored in an int16 requires `|x| ≤ 1`.
+    pub fn normalize(&mut self) -> Vec<(f32, f32)> {
+        let mut ranges = vec![(f32::INFINITY, f32::NEG_INFINITY); self.d];
+        for i in 0..self.n {
+            for f in 0..self.d {
+                let v = self.x[i * self.d + f];
+                ranges[f].0 = ranges[f].0.min(v);
+                ranges[f].1 = ranges[f].1.max(v);
+            }
+        }
+        for i in 0..self.n {
+            for f in 0..self.d {
+                let (lo, hi) = ranges[f];
+                let v = &mut self.x[i * self.d + f];
+                *v = if hi > lo { (*v - lo) / (hi - lo) } else { 0.0 };
+            }
+        }
+        ranges
+    }
+
+    /// Apply a previously computed normalization to a feature row.
+    pub fn apply_normalization(row: &mut [f32], ranges: &[(f32, f32)]) {
+        for (v, &(lo, hi)) in row.iter_mut().zip(ranges) {
+            *v = if hi > lo { ((*v - lo) / (hi - lo)).clamp(0.0, 1.0) } else { 0.0 };
+        }
+    }
+
+    /// Deterministic shuffled `train/test` split; `test_frac` in `(0,1)`.
+    pub fn split(&self, test_frac: f64, seed: u64) -> (Dataset, Dataset) {
+        let mut idx: Vec<usize> = (0..self.n).collect();
+        let mut rng = Pcg32::seeded(seed);
+        rng.shuffle(&mut idx);
+        let n_test = ((self.n as f64) * test_frac).round() as usize;
+        let (test_idx, train_idx) = idx.split_at(n_test);
+        (self.subset(train_idx, "train"), self.subset(test_idx, "test"))
+    }
+
+    fn subset(&self, idx: &[usize], suffix: &str) -> Dataset {
+        let mut x = Vec::with_capacity(idx.len() * self.d);
+        let mut labels = Vec::with_capacity(idx.len());
+        for &i in idx {
+            x.extend_from_slice(self.row(i));
+            labels.push(self.labels[i]);
+        }
+        Dataset {
+            name: format!("{}-{}", self.name, suffix),
+            x,
+            labels,
+            n: idx.len(),
+            d: self.d,
+            n_classes: self.n_classes,
+        }
+    }
+
+    /// Class frequency histogram.
+    pub fn class_counts(&self) -> Vec<usize> {
+        let mut counts = vec![0usize; self.n_classes];
+        for &l in &self.labels {
+            counts[l as usize] += 1;
+        }
+        counts
+    }
+}
+
+/// The five classification benchmarks by paper name.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum DatasetId {
+    Magic,
+    Adult,
+    Eeg,
+    Mnist,
+    Fashion,
+}
+
+impl DatasetId {
+    pub const ALL: [DatasetId; 5] =
+        [DatasetId::Magic, DatasetId::Mnist, DatasetId::Adult, DatasetId::Eeg, DatasetId::Fashion];
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            DatasetId::Magic => "magic",
+            DatasetId::Adult => "adult",
+            DatasetId::Eeg => "eeg",
+            DatasetId::Mnist => "mnist",
+            DatasetId::Fashion => "fashion",
+        }
+    }
+
+    pub fn from_name(s: &str) -> Option<DatasetId> {
+        Self::ALL.iter().copied().find(|d| d.name() == s)
+    }
+
+    /// Generate the dataset at its default size (normalized to `[0,1]`).
+    pub fn generate(&self, n: usize, seed: u64) -> Dataset {
+        let mut ds = match self {
+            DatasetId::Magic => synth::magic_like(n, seed),
+            DatasetId::Adult => synth::adult_like(n, seed),
+            DatasetId::Eeg => synth::eeg_like(n, seed),
+            DatasetId::Mnist => synth::mnist_like(n, seed),
+            DatasetId::Fashion => synth::fashion_like(n, seed),
+        };
+        ds.normalize();
+        ds
+    }
+
+    /// Default sample count used by the experiment suite (scaled-down
+    /// stand-ins for the real dataset sizes).
+    pub fn default_n(&self) -> usize {
+        match self {
+            DatasetId::Magic => 6000,
+            DatasetId::Adult => 6000,
+            DatasetId::Eeg => 6000,
+            DatasetId::Mnist => 3000,
+            DatasetId::Fashion => 3000,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn all_generators_shape() {
+        for id in DatasetId::ALL {
+            let ds = id.generate(200, 1);
+            assert_eq!(ds.n, 200);
+            assert_eq!(ds.x.len(), ds.n * ds.d);
+            assert_eq!(ds.labels.len(), ds.n);
+            assert!(ds.labels.iter().all(|&l| (l as usize) < ds.n_classes));
+            // normalized
+            assert!(ds.x.iter().all(|&v| (0.0..=1.0).contains(&v)), "{}", id.name());
+        }
+    }
+
+    #[test]
+    fn expected_dims() {
+        assert_eq!(DatasetId::Magic.generate(50, 0).d, 10);
+        assert_eq!(DatasetId::Adult.generate(50, 0).d, 108);
+        assert_eq!(DatasetId::Eeg.generate(50, 0).d, 14);
+        assert_eq!(DatasetId::Mnist.generate(50, 0).d, 784);
+        assert_eq!(DatasetId::Fashion.generate(50, 0).d, 784);
+        assert_eq!(DatasetId::Mnist.generate(50, 0).n_classes, 10);
+    }
+
+    #[test]
+    fn split_partitions() {
+        let ds = DatasetId::Magic.generate(500, 3);
+        let (train, test) = ds.split(0.2, 9);
+        assert_eq!(train.n + test.n, 500);
+        assert_eq!(test.n, 100);
+        assert_eq!(train.d, ds.d);
+    }
+
+    #[test]
+    fn deterministic() {
+        let a = DatasetId::Eeg.generate(100, 42);
+        let b = DatasetId::Eeg.generate(100, 42);
+        assert_eq!(a.x, b.x);
+        assert_eq!(a.labels, b.labels);
+    }
+
+    #[test]
+    fn both_classes_present() {
+        for id in DatasetId::ALL {
+            let ds = id.generate(400, 5);
+            let counts = ds.class_counts();
+            let nonzero = counts.iter().filter(|&&c| c > 0).count();
+            assert!(nonzero >= 2, "{}: {counts:?}", id.name());
+        }
+    }
+}

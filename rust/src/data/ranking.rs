@@ -1,0 +1,215 @@
+//! MSN/MSLR-like learning-to-rank dataset (paper §6, Q1).
+//!
+//! The real MSN dataset has 136 features per query-document pair and graded
+//! relevance labels 0–4 grouped by query. The generator reproduces that
+//! shape: a hidden scoring function (sparse linear + pairwise interactions +
+//! per-query bias) produces a latent score that is bucketed into the five
+//! relevance grades.
+
+use super::Dataset;
+use crate::util::Pcg32;
+
+/// A query-grouped ranking dataset.
+#[derive(Debug, Clone)]
+pub struct RankingDataset {
+    /// Row-major `[n × d]` feature matrix.
+    pub x: Vec<f32>,
+    /// Graded relevance 0..=4 per row (stored as f32 — regression target).
+    pub relevance: Vec<f32>,
+    /// Query id per row (rows of one query are contiguous).
+    pub query_ids: Vec<u32>,
+    pub n: usize,
+    pub d: usize,
+}
+
+impl RankingDataset {
+    pub fn row(&self, i: usize) -> &[f32] {
+        &self.x[i * self.d..(i + 1) * self.d]
+    }
+
+    /// Offsets of each query group: `groups()[q]..groups()[q+1]`.
+    pub fn groups(&self) -> Vec<usize> {
+        let mut out = vec![0usize];
+        for i in 1..self.n {
+            if self.query_ids[i] != self.query_ids[i - 1] {
+                out.push(i);
+            }
+        }
+        out.push(self.n);
+        out
+    }
+
+    /// View as a plain dataset (for feature normalization reuse).
+    pub fn as_dataset(&self) -> Dataset {
+        Dataset {
+            name: "msn".into(),
+            x: self.x.clone(),
+            labels: self.relevance.iter().map(|&r| r as u32).collect(),
+            n: self.n,
+            d: self.d,
+            n_classes: 5,
+        }
+    }
+
+    /// NDCG@k averaged over queries for a score vector (higher = better).
+    pub fn ndcg(&self, scores: &[f32], k: usize) -> f64 {
+        assert_eq!(scores.len(), self.n);
+        let groups = self.groups();
+        let mut total = 0f64;
+        let mut n_q = 0usize;
+        for w in groups.windows(2) {
+            let (lo, hi) = (w[0], w[1]);
+            let m = hi - lo;
+            let mut order: Vec<usize> = (lo..hi).collect();
+            order.sort_by(|&a, &b| scores[b].partial_cmp(&scores[a]).unwrap());
+            let dcg: f64 = order
+                .iter()
+                .take(k.min(m))
+                .enumerate()
+                .map(|(r, &i)| (2f64.powf(self.relevance[i] as f64) - 1.0) / (r as f64 + 2.0).log2())
+                .sum();
+            let mut ideal: Vec<f32> = self.relevance[lo..hi].to_vec();
+            ideal.sort_by(|a, b| b.partial_cmp(a).unwrap());
+            let idcg: f64 = ideal
+                .iter()
+                .take(k.min(m))
+                .enumerate()
+                .map(|(r, &rel)| (2f64.powf(rel as f64) - 1.0) / (r as f64 + 2.0).log2())
+                .sum();
+            if idcg > 0.0 {
+                total += dcg / idcg;
+                n_q += 1;
+            }
+        }
+        if n_q == 0 {
+            0.0
+        } else {
+            total / n_q as f64
+        }
+    }
+}
+
+/// Generate an MSLR-shaped ranking dataset: `n_queries` queries ×
+/// `docs_per_query` documents, 136 features in `[0,1]`, relevance 0–4.
+pub fn msn_like(n_queries: usize, docs_per_query: usize, seed: u64) -> RankingDataset {
+    let d = 136;
+    let mut rng = Pcg32::seeded(seed ^ MSN_SEED_SALT);
+    // Hidden scorer: sparse linear weights + a few interaction pairs.
+    let mut w = vec![0f64; d];
+    for i in rng.sample_indices(d, 24) {
+        w[i] = rng.normal();
+    }
+    let pairs: Vec<(usize, usize, f64)> =
+        (0..8).map(|_| (rng.below(d), rng.below(d), rng.normal())).collect();
+
+    let n = n_queries * docs_per_query;
+    let mut x = Vec::with_capacity(n * d);
+    let mut relevance = Vec::with_capacity(n);
+    let mut query_ids = Vec::with_capacity(n);
+
+    for q in 0..n_queries {
+        let qbias = 0.4 * rng.normal();
+        for _ in 0..docs_per_query {
+            let row_start = x.len();
+            for _ in 0..d {
+                x.push(rng.f32());
+            }
+            let row = &x[row_start..row_start + d];
+            let mut s = qbias;
+            // Centered terms so the latent score is ~N(0, 1.5) regardless of
+            // the drawn weights — keeps all five grades populated.
+            for (i, &v) in row.iter().enumerate() {
+                s += w[i] * (v as f64 - 0.5);
+            }
+            for &(a, b, c) in &pairs {
+                s += c * ((row[a] as f64) * (row[b] as f64) - 0.25);
+            }
+            s += 0.3 * rng.normal();
+            // Bucket latent score into grades with an uneven prior like the
+            // real MSLR label distribution (mostly 0/1, few 4s).
+            let rel = if s < -0.8 {
+                0.0
+            } else if s < 0.2 {
+                1.0
+            } else if s < 1.0 {
+                2.0
+            } else if s < 1.8 {
+                3.0
+            } else {
+                4.0
+            };
+            relevance.push(rel);
+            query_ids.push(q as u32);
+        }
+    }
+    RankingDataset { x, relevance, query_ids, n, d }
+}
+
+/// Seed salt so ranking data never collides with a classification stream.
+const MSN_SEED_SALT: u64 = 0x35b1;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::forest::builder::{train_gbt, GbtParams, TreeParams};
+
+    #[test]
+    fn shape_and_grouping() {
+        let ds = msn_like(10, 20, 1);
+        assert_eq!(ds.n, 200);
+        assert_eq!(ds.d, 136);
+        assert_eq!(ds.groups().len(), 11);
+        assert!(ds.relevance.iter().all(|&r| (0.0..=4.0).contains(&r)));
+    }
+
+    #[test]
+    fn grades_are_diverse() {
+        let ds = msn_like(40, 25, 2);
+        let mut seen = [false; 5];
+        for &r in &ds.relevance {
+            seen[r as usize] = true;
+        }
+        assert!(seen.iter().filter(|&&s| s).count() >= 4, "{seen:?}");
+    }
+
+    #[test]
+    fn ndcg_of_perfect_ranking_is_one() {
+        let ds = msn_like(5, 10, 3);
+        let scores: Vec<f32> = ds.relevance.clone();
+        let ndcg = ds.ndcg(&scores, 10);
+        assert!((ndcg - 1.0).abs() < 1e-9, "{ndcg}");
+    }
+
+    #[test]
+    fn gbt_beats_random_ranking() {
+        let ds = msn_like(30, 20, 5);
+        let f = train_gbt(
+            &ds.x,
+            &ds.relevance,
+            ds.d,
+            GbtParams {
+                n_trees: 40,
+                tree: TreeParams { max_leaves: 16, min_samples_leaf: 2, mtry: 24 },
+                learning_rate: 0.2,
+                ..Default::default()
+            },
+        );
+        let pred = f.predict_batch(&ds.x);
+        let model_ndcg = ds.ndcg(&pred, 10);
+        let mut rng = crate::util::Pcg32::seeded(1);
+        let random: Vec<f32> = (0..ds.n).map(|_| rng.f32()).collect();
+        let random_ndcg = ds.ndcg(&random, 10);
+        assert!(
+            model_ndcg > random_ndcg + 0.1,
+            "model {model_ndcg} vs random {random_ndcg}"
+        );
+    }
+
+    #[test]
+    fn deterministic() {
+        let a = msn_like(3, 5, 9);
+        let b = msn_like(3, 5, 9);
+        assert_eq!(a.x, b.x);
+        assert_eq!(a.relevance, b.relevance);
+    }
+}

@@ -1,0 +1,330 @@
+//! Shared model-preparation structures for the QuickScorer engine family.
+//!
+//! QuickScorer (§3) re-organizes a forest into *feature-ordered node lists*:
+//! for each feature `k`, all nodes of all trees testing `k`, sorted by
+//! ascending threshold, each carrying the bitvector mask of leaves its
+//! "false" outcome removes. Leaf `i` of a tree maps to bit `i` of the
+//! bitvector (bit 0 = leftmost leaf), so the exit leaf — the *leftmost*
+//! remaining leaf — is the lowest set bit.
+
+use crate::forest::Forest;
+use crate::quant::QForest;
+
+/// Maximum leaves supported by the bitvector engines (one u64 word).
+pub const MAX_LEAVES: usize = 64;
+
+/// Feature-ordered node lists plus the leaf-value table, generic over the
+/// threshold scalar `T` (f32 or i16) and leaf scalar `V` (f32 or i16).
+#[derive(Debug, Clone)]
+pub struct QsModel<T: Copy, V: Copy> {
+    pub n_features: usize,
+    pub n_classes: usize,
+    pub n_trees: usize,
+    /// Bitvector width: 32 if every tree has ≤ 32 leaves, else 64 — chooses
+    /// between the u32 and u64 SIMD paths, as the paper distinguishes
+    /// L=32 / L=64.
+    pub leaf_words: usize,
+    /// Leaf-dimension padding (`L` = `leaf_words`): leaf tables are
+    /// `[n_trees × L × n_classes]`.
+    pub offsets: Vec<u32>,
+    /// Node thresholds, ascending within each feature's segment.
+    pub thresholds: Vec<T>,
+    /// Owning tree of each node.
+    pub tree_ids: Vec<u32>,
+    /// Bitvector masks: zeros over the node's left-subtree leaves, ones
+    /// elsewhere (bits ≥ L stay 1).
+    pub masks: Vec<u64>,
+    /// Row-major `[n_trees × L × n_classes]` leaf values (padded rows are 0).
+    pub leaf_values: Vec<V>,
+    /// Base score added to every prediction (f32 engines) or its quantized
+    /// i32 counterpart (i16 engines use `base_i32`).
+    pub base_f32: Vec<f32>,
+    pub base_i32: Vec<i32>,
+    /// Dequantization scale for i16 models (1.0 for float models).
+    pub scale: f32,
+}
+
+/// Compute the mask for a false node whose left subtree covers leaves
+/// `[begin, end)`.
+#[inline]
+pub fn left_range_mask(begin: u32, end: u32) -> u64 {
+    debug_assert!(end > begin && end <= 64);
+    let width = end - begin;
+    let ones = if width == 64 { u64::MAX } else { (1u64 << width) - 1 };
+    !(ones << begin)
+}
+
+/// Items collected per node before sorting into feature lists.
+struct RawNode<T> {
+    feature: u32,
+    threshold: T,
+    tree: u32,
+    mask: u64,
+}
+
+fn build_lists<T: Copy + PartialOrd>(
+    n_features: usize,
+    mut raw: Vec<RawNode<T>>,
+) -> (Vec<u32>, Vec<T>, Vec<u32>, Vec<u64>) {
+    // Sort by (feature, threshold) — stable so equal thresholds keep tree
+    // order, which RapidScorer's merging relies on.
+    raw.sort_by(|a, b| {
+        a.feature.cmp(&b.feature).then(a.threshold.partial_cmp(&b.threshold).unwrap())
+    });
+    let mut offsets = vec![0u32; n_features + 1];
+    let mut thresholds = Vec::with_capacity(raw.len());
+    let mut tree_ids = Vec::with_capacity(raw.len());
+    let mut masks = Vec::with_capacity(raw.len());
+    for n in &raw {
+        offsets[n.feature as usize + 1] += 1;
+        thresholds.push(n.threshold);
+        tree_ids.push(n.tree);
+        masks.push(n.mask);
+    }
+    for f in 0..n_features {
+        offsets[f + 1] += offsets[f];
+    }
+    (offsets, thresholds, tree_ids, masks)
+}
+
+fn leaf_words_for(max_leaves: usize) -> usize {
+    assert!(max_leaves <= MAX_LEAVES, "QuickScorer engines support <= 64 leaves");
+    if max_leaves <= 32 {
+        32
+    } else {
+        64
+    }
+}
+
+impl QsModel<f32, f32> {
+    /// Prepare the float QuickScorer structures from a forest.
+    pub fn from_forest(f: &Forest) -> QsModel<f32, f32> {
+        let leaf_words = leaf_words_for(f.max_leaves());
+        let c = f.n_classes;
+        let mut raw = Vec::with_capacity(f.n_nodes());
+        let mut leaf_values = vec![0f32; f.n_trees() * leaf_words * c];
+        for (ti, t) in f.trees.iter().enumerate() {
+            let ranges = t.left_leaf_ranges();
+            for (n, &(b, e)) in t.nodes.iter().zip(&ranges) {
+                raw.push(RawNode {
+                    feature: n.feature,
+                    threshold: n.threshold,
+                    tree: ti as u32,
+                    mask: left_range_mask(b, e),
+                });
+            }
+            let dst = &mut leaf_values[ti * leaf_words * c..];
+            dst[..t.leaf_values.len()].copy_from_slice(&t.leaf_values);
+        }
+        let (offsets, thresholds, tree_ids, masks) = build_lists(f.n_features, raw);
+        QsModel {
+            n_features: f.n_features,
+            n_classes: c,
+            n_trees: f.n_trees(),
+            leaf_words,
+            offsets,
+            thresholds,
+            tree_ids,
+            masks,
+            leaf_values,
+            base_f32: f.base_score.clone(),
+            base_i32: Vec::new(),
+            scale: 1.0,
+        }
+    }
+}
+
+impl QsModel<i16, i16> {
+    /// Prepare the int16 QuickScorer structures from a quantized forest.
+    pub fn from_qforest(qf: &QForest) -> QsModel<i16, i16> {
+        let leaf_words = leaf_words_for(qf.max_leaves());
+        let c = qf.n_classes;
+        let mut raw = Vec::new();
+        let mut leaf_values = vec![0i16; qf.trees.len() * leaf_words * c];
+        for (ti, t) in qf.trees.iter().enumerate() {
+            let ranges = qtree_left_ranges(t);
+            for i in 0..t.features.len() {
+                let (b, e) = ranges[i];
+                raw.push(RawNode {
+                    feature: t.features[i],
+                    threshold: t.thresholds[i],
+                    tree: ti as u32,
+                    mask: left_range_mask(b, e),
+                });
+            }
+            let dst = &mut leaf_values[ti * leaf_words * c..];
+            dst[..t.leaf_values.len()].copy_from_slice(&t.leaf_values);
+        }
+        let (offsets, thresholds, tree_ids, masks) = build_lists(qf.n_features, raw);
+        QsModel {
+            n_features: qf.n_features,
+            n_classes: c,
+            n_trees: qf.trees.len(),
+            leaf_words,
+            offsets,
+            thresholds,
+            tree_ids,
+            masks,
+            leaf_values,
+            base_f32: Vec::new(),
+            base_i32: qf.base_score.clone(),
+            scale: qf.config.scale,
+        }
+    }
+}
+
+/// Left-subtree leaf ranges for a quantized tree (same walk as
+/// [`crate::forest::Tree::left_leaf_ranges`], over the QTree layout).
+pub fn qtree_left_ranges(t: &crate::quant::QTree) -> Vec<(u32, u32)> {
+    use crate::forest::Child;
+    let mut out = vec![(0u32, 0u32); t.features.len()];
+    if t.features.is_empty() {
+        return out;
+    }
+    fn span(
+        t: &crate::quant::QTree,
+        c: Child,
+        out: &mut Vec<(u32, u32)>,
+    ) -> (u32, u32) {
+        match c {
+            Child::Leaf(l) => (l, l + 1),
+            Child::Inner(i) => {
+                let i = i as usize;
+                let (lb, le) = span(t, t.left[i], out);
+                let (_, re) = span(t, t.right[i], out);
+                out[i] = (lb, le);
+                (lb, re)
+            }
+        }
+    }
+    span(t, Child::Inner(0), &mut out);
+    out
+}
+
+impl<T: Copy, V: Copy> QsModel<T, V> {
+    /// Nodes testing feature `k`, as an index range.
+    #[inline]
+    pub fn feature_range(&self, k: usize) -> std::ops::Range<usize> {
+        self.offsets[k] as usize..self.offsets[k + 1] as usize
+    }
+
+    /// Leaf-value row for `(tree, leaf)`.
+    #[inline]
+    pub fn leaf_row(&self, tree: usize, leaf: usize) -> &[V] {
+        let c = self.n_classes;
+        let start = (tree * self.leaf_words + leaf) * c;
+        &self.leaf_values[start..start + c]
+    }
+
+    /// Bytes of one node entry in the feature lists (for stream-load
+    /// accounting in op traces).
+    pub fn node_entry_bytes(&self) -> u64 {
+        (std::mem::size_of::<T>() + std::mem::size_of::<u32>() + std::mem::size_of::<u64>()) as u64
+    }
+
+    /// Resident bytes of the prepared model.
+    pub fn memory_bytes(&self) -> usize {
+        self.offsets.len() * 4
+            + self.thresholds.len() * std::mem::size_of::<T>()
+            + self.tree_ids.len() * 4
+            + self.masks.len() * 8
+            + self.leaf_values.len() * std::mem::size_of::<V>()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::DatasetId;
+    use crate::forest::builder::{train_random_forest, RfParams, TreeParams};
+
+    #[test]
+    fn mask_shapes() {
+        // Node whose left subtree covers leaves [1,3): zeros at bits 1,2.
+        assert_eq!(left_range_mask(1, 3), !0b110u64);
+        assert_eq!(left_range_mask(0, 1), !1u64);
+        assert_eq!(left_range_mask(0, 64), 0);
+    }
+
+    fn model() -> (Forest, QsModel<f32, f32>) {
+        let ds = DatasetId::Magic.generate(500, 5);
+        let f = train_random_forest(
+            &ds.x,
+            &ds.labels,
+            ds.d,
+            ds.n_classes,
+            RfParams {
+                n_trees: 8,
+                tree: TreeParams { max_leaves: 16, min_samples_leaf: 2, mtry: 0 },
+                ..Default::default()
+            },
+        );
+        let m = QsModel::from_forest(&f);
+        (f, m)
+    }
+
+    #[test]
+    fn thresholds_ascend_per_feature() {
+        let (_, m) = model();
+        for k in 0..m.n_features {
+            let r = m.feature_range(k);
+            let th = &m.thresholds[r];
+            for w in th.windows(2) {
+                assert!(w[0] <= w[1]);
+            }
+        }
+    }
+
+    #[test]
+    fn node_count_preserved() {
+        let (f, m) = model();
+        assert_eq!(m.thresholds.len(), f.n_nodes());
+        assert_eq!(*m.offsets.last().unwrap() as usize, f.n_nodes());
+    }
+
+    #[test]
+    fn scalar_qs_on_lists_matches_tree_walk() {
+        // Emulate Algorithm 1 directly on the prepared lists and check the
+        // exit leaf against the tree oracle for a few instances.
+        let (f, m) = model();
+        let ds = DatasetId::Magic.generate(40, 6);
+        for i in 0..ds.n {
+            let x = ds.row(i);
+            let mut leafidx = vec![u64::MAX; m.n_trees];
+            for k in 0..m.n_features {
+                for idx in m.feature_range(k) {
+                    if x[k] > m.thresholds[idx] {
+                        leafidx[m.tree_ids[idx] as usize] &= m.masks[idx];
+                    } else {
+                        break;
+                    }
+                }
+            }
+            for (ti, t) in f.trees.iter().enumerate() {
+                let expect = t.exit_leaf(x);
+                let got = leafidx[ti].trailing_zeros() as usize;
+                assert_eq!(got, expect, "instance {i} tree {ti}");
+            }
+        }
+    }
+
+    #[test]
+    fn leaf_rows_padded() {
+        let (f, m) = model();
+        assert_eq!(m.leaf_words, 32);
+        // Row for a real leaf matches the tree's leaf table.
+        let t0 = &f.trees[0];
+        for leaf in 0..t0.n_leaves {
+            assert_eq!(m.leaf_row(0, leaf), t0.leaf_row(leaf));
+        }
+    }
+
+    #[test]
+    fn i16_model_buildable() {
+        let (f, _) = model();
+        let qf = crate::quant::QForest::from_forest(&f, crate::quant::QuantConfig::paper_default());
+        let qm = QsModel::from_qforest(&qf);
+        assert_eq!(qm.thresholds.len(), f.n_nodes());
+        assert!(qm.scale > 1.0);
+    }
+}

@@ -1,0 +1,335 @@
+//! IE — the "If-Else" baseline: each tree decomposed into its branch
+//! structure (Asadi et al. 2014).
+//!
+//! The paper's IE is *generated C++* — nested `if/else` blocks with
+//! thresholds embedded as immediates, statically compiled per model
+//! (FastInference). Without runtime codegen we model the same traversal
+//! shape with a pointer-linked node graph walked by direct branching: like
+//! compiled if-else, there is no index arithmetic and the children are
+//! reached by following the branch taken; unlike NA's flat arrays, node
+//! records live wherever the allocator placed them (an instruction-cache
+//! analogue of scattered basic blocks). The substitution is recorded in
+//! DESIGN.md §1.
+
+use super::Engine;
+use crate::forest::{Child, Forest};
+use crate::neon::OpTrace;
+use crate::quant::{QForest, QuantConfig};
+
+/// A boxed branch-structure node.
+enum IeNode<T: Copy, V: Copy> {
+    Split { feature: u32, threshold: T, left: Box<IeNode<T, V>>, right: Box<IeNode<T, V>> },
+    Leaf { value: Vec<V> },
+}
+
+impl<T: Copy, V: Copy> IeNode<T, V> {
+    #[inline]
+    fn walk(&self, le: &impl Fn(u32, T) -> bool) -> &[V] {
+        let mut cur = self;
+        loop {
+            match cur {
+                IeNode::Leaf { value } => return value,
+                IeNode::Split { feature, threshold, left, right } => {
+                    cur = if le(*feature, *threshold) { left } else { right };
+                }
+            }
+        }
+    }
+
+    fn depth_walk(&self, le: &impl Fn(u32, T) -> bool) -> u64 {
+        let mut cur = self;
+        let mut depth = 0;
+        loop {
+            match cur {
+                IeNode::Leaf { .. } => return depth,
+                IeNode::Split { feature, threshold, left, right } => {
+                    depth += 1;
+                    cur = if le(*feature, *threshold) { left } else { right };
+                }
+            }
+        }
+    }
+}
+
+fn build_f32(t: &crate::forest::Tree, c: Child) -> IeNode<f32, f32> {
+    match c {
+        Child::Leaf(l) => IeNode::Leaf { value: t.leaf_row(l as usize).to_vec() },
+        Child::Inner(i) => {
+            let n = &t.nodes[i as usize];
+            IeNode::Split {
+                feature: n.feature,
+                threshold: n.threshold,
+                left: Box::new(build_f32(t, n.left)),
+                right: Box::new(build_f32(t, n.right)),
+            }
+        }
+    }
+}
+
+fn build_i16(t: &crate::quant::QTree, c: Child, n_classes: usize) -> IeNode<i16, i16> {
+    match c {
+        Child::Leaf(l) => {
+            let l = l as usize;
+            IeNode::Leaf { value: t.leaf_values[l * n_classes..(l + 1) * n_classes].to_vec() }
+        }
+        Child::Inner(i) => {
+            let i = i as usize;
+            IeNode::Split {
+                feature: t.features[i],
+                threshold: t.thresholds[i],
+                left: Box::new(build_i16(t, t.left[i], n_classes)),
+                right: Box::new(build_i16(t, t.right[i], n_classes)),
+            }
+        }
+    }
+}
+
+/// Float IE engine.
+pub struct IfElseEngine {
+    roots: Vec<IeNode<f32, f32>>,
+    base: Vec<f32>,
+    n_features: usize,
+    n_classes: usize,
+    mem_bytes: usize,
+}
+
+impl IfElseEngine {
+    pub fn new(f: &Forest) -> IfElseEngine {
+        let roots = f
+            .trees
+            .iter()
+            .map(|t| {
+                if t.nodes.is_empty() {
+                    IeNode::Leaf { value: t.leaf_values.clone() }
+                } else {
+                    build_f32(t, Child::Inner(0))
+                }
+            })
+            .collect();
+        // Pointer-linked nodes: each split is a boxed enum (~32 B + two
+        // child pointers), each leaf a boxed Vec of C values.
+        let splits = f.n_nodes();
+        let leaves: usize = f.trees.iter().map(|t| t.n_leaves).sum();
+        let mem_bytes = splits * 40 + leaves * (32 + f.n_classes * 4);
+        IfElseEngine {
+            roots,
+            base: f.base_score.clone(),
+            n_features: f.n_features,
+            n_classes: f.n_classes,
+            mem_bytes,
+        }
+    }
+}
+
+impl Engine for IfElseEngine {
+    fn name(&self) -> String {
+        "IE".into()
+    }
+
+    fn lanes(&self) -> usize {
+        1
+    }
+
+    fn n_features(&self) -> usize {
+        self.n_features
+    }
+
+    fn n_classes(&self) -> usize {
+        self.n_classes
+    }
+
+    fn predict_batch(&self, x: &[f32], out: &mut [f32]) {
+        let d = self.n_features;
+        let c = self.n_classes;
+        let n = x.len() / d;
+        for i in 0..n {
+            let row = &x[i * d..(i + 1) * d];
+            let o = &mut out[i * c..(i + 1) * c];
+            o.copy_from_slice(&self.base);
+            let le = |f: u32, t: f32| row[f as usize] <= t;
+            for root in &self.roots {
+                for (dst, &v) in o.iter_mut().zip(root.walk(&le)) {
+                    *dst += v;
+                }
+            }
+        }
+    }
+
+    fn count_ops(&self, x: &[f32]) -> OpTrace {
+        let d = self.n_features;
+        let c = self.n_classes as u64;
+        let n = x.len() / d;
+        let mut tr = OpTrace::new();
+        for i in 0..n {
+            let row = &x[i * d..(i + 1) * d];
+            let le = |f: u32, t: f32| row[f as usize] <= t;
+            for root in &self.roots {
+                let depth = root.depth_walk(&le);
+                // Codegen if-else: threshold is an immediate (no data load),
+                // but taken-branch-heavy code with poor prediction; x access
+                // is one load per node.
+                tr.random_loads += depth;
+                tr.scalar_fp += depth;
+                tr.branch += 2 * depth; // if + jump-over-else
+                tr.branch_mispredictable += depth / 2;
+                tr.scalar_fp += c;
+            }
+        }
+        tr
+    }
+
+    fn memory_bytes(&self) -> usize {
+        self.mem_bytes
+    }
+}
+
+/// Quantized IE engine (qIE).
+pub struct QIfElseEngine {
+    roots: Vec<IeNode<i16, i16>>,
+    base: Vec<i32>,
+    config: QuantConfig,
+    n_features: usize,
+    n_classes: usize,
+    mem_bytes: usize,
+}
+
+impl QIfElseEngine {
+    pub fn new(qf: &QForest) -> QIfElseEngine {
+        let roots = qf
+            .trees
+            .iter()
+            .map(|t| {
+                if t.features.is_empty() {
+                    IeNode::Leaf { value: t.leaf_values.clone() }
+                } else {
+                    build_i16(t, Child::Inner(0), qf.n_classes)
+                }
+            })
+            .collect();
+        let splits: usize = qf.trees.iter().map(|t| t.features.len()).sum();
+        let leaves: usize = qf.trees.iter().map(|t| t.n_leaves).sum();
+        let mem_bytes = splits * 40 + leaves * (32 + qf.n_classes * 2);
+        QIfElseEngine {
+            roots,
+            base: qf.base_score.clone(),
+            config: qf.config,
+            n_features: qf.n_features,
+            n_classes: qf.n_classes,
+            mem_bytes,
+        }
+    }
+}
+
+impl Engine for QIfElseEngine {
+    fn name(&self) -> String {
+        "qIE".into()
+    }
+
+    fn lanes(&self) -> usize {
+        1
+    }
+
+    fn n_features(&self) -> usize {
+        self.n_features
+    }
+
+    fn n_classes(&self) -> usize {
+        self.n_classes
+    }
+
+    fn predict_batch(&self, x: &[f32], out: &mut [f32]) {
+        let d = self.n_features;
+        let c = self.n_classes;
+        let n = x.len() / d;
+        let mut qx = Vec::with_capacity(x.len());
+        self.config.q_slice(x, &mut qx);
+        let mut acc = vec![0i32; c];
+        for i in 0..n {
+            let row = &qx[i * d..(i + 1) * d];
+            acc.copy_from_slice(&self.base);
+            let le = |f: u32, t: i16| row[f as usize] <= t;
+            for root in &self.roots {
+                for (dst, &v) in acc.iter_mut().zip(root.walk(&le)) {
+                    *dst += v as i32;
+                }
+            }
+            for (o, &a) in out[i * c..(i + 1) * c].iter_mut().zip(acc.iter()) {
+                *o = self.config.dq(a);
+            }
+        }
+    }
+
+    fn count_ops(&self, x: &[f32]) -> OpTrace {
+        let d = self.n_features;
+        let c = self.n_classes as u64;
+        let n = x.len() / d;
+        let mut qx = Vec::new();
+        self.config.q_slice(x, &mut qx);
+        let mut tr = OpTrace::new();
+        tr.scalar_fp += (n * d) as u64 * 2; // feature quantization
+        tr.store_bytes += (n * d * 2) as u64;
+        for i in 0..n {
+            let row = &qx[i * d..(i + 1) * d];
+            let le = |f: u32, t: i16| row[f as usize] <= t;
+            for root in &self.roots {
+                let depth = root.depth_walk(&le);
+                tr.random_loads += depth;
+                tr.scalar_alu += depth;
+                tr.branch += 2 * depth;
+                tr.branch_mispredictable += depth / 2;
+                tr.scalar_alu += c;
+            }
+        }
+        tr
+    }
+
+    fn memory_bytes(&self) -> usize {
+        self.mem_bytes
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::DatasetId;
+    use crate::forest::builder::{train_random_forest, RfParams, TreeParams};
+
+    fn setup() -> (Forest, crate::data::Dataset) {
+        let ds = DatasetId::Eeg.generate(400, 13);
+        let f = train_random_forest(
+            &ds.x,
+            &ds.labels,
+            ds.d,
+            ds.n_classes,
+            RfParams {
+                n_trees: 10,
+                tree: TreeParams { max_leaves: 32, min_samples_leaf: 2, mtry: 0 },
+                ..Default::default()
+            },
+        );
+        (f, ds)
+    }
+
+    #[test]
+    fn ie_matches_reference() {
+        let (f, ds) = setup();
+        let e = IfElseEngine::new(&f);
+        assert_eq!(e.predict(&ds.x), f.predict_batch(&ds.x));
+    }
+
+    #[test]
+    fn qie_matches_qforest() {
+        let (f, ds) = setup();
+        let qf = QForest::from_forest(&f, QuantConfig::paper_default());
+        let e = QIfElseEngine::new(&qf);
+        assert_eq!(e.predict(&ds.x), qf.predict_batch(&ds.x));
+    }
+
+    #[test]
+    fn ie_and_na_agree() {
+        let (f, ds) = setup();
+        let ie = IfElseEngine::new(&f);
+        let na = super::super::naive::NaiveEngine::new(&f);
+        assert_eq!(ie.predict(&ds.x), na.predict(&ds.x));
+    }
+}

@@ -1,0 +1,189 @@
+//! Inference engines — the paper's five traversal strategies in float32 and
+//! int16 fixed-point variants (DESIGN.md system S6).
+//!
+//! | engine | paper name      | strategy                                            |
+//! |--------|-----------------|-----------------------------------------------------|
+//! | NA     | Native/PRED     | while-loop over contiguous node arrays              |
+//! | IE     | If-Else         | branchy per-node structure (codegen'd if-else analogue) |
+//! | QS     | QuickScorer     | feature-ordered scan + bitvector masking (Alg. 1)   |
+//! | VQS    | V-QuickScorer   | QS vectorized over v=4 (f32) / v=8 (i16) instances (Alg. 2) |
+//! | RS     | RapidScorer     | epitomes + node merging + byte-transposed leafidx, v=16 (Alg. 3/4) |
+//!
+//! Prefix `q` (e.g. `qRS`) marks the int16 fixed-point variant (§5).
+//! All engines implement [`Engine`] and must agree with the naive reference
+//! ([`crate::forest::Forest::predict_batch`] /
+//! [`crate::quant::QForest::predict_batch`]) — enforced by the integration
+//! and property test suites.
+
+pub mod common;
+pub mod ifelse;
+pub mod naive;
+pub mod quickscorer;
+pub mod rapidscorer;
+pub mod tensor;
+pub mod vqs;
+
+use crate::forest::Forest;
+use crate::neon::OpTrace;
+use crate::quant::{choose_scale, QForest, QuantConfig};
+
+/// A prepared tree-ensemble inference engine.
+///
+/// Engines are immutable once built (`Send + Sync`), so the coordinator can
+/// serve one model from many worker threads.
+pub trait Engine: Send + Sync {
+    /// Short display name, e.g. `"RS"` or `"qVQS"`.
+    fn name(&self) -> String;
+
+    /// Preferred batch width: the number of instances processed per SIMD
+    /// block (1 for scalar engines). The coordinator's batcher pads/pools to
+    /// a multiple of this.
+    fn lanes(&self) -> usize;
+
+    fn n_features(&self) -> usize;
+    fn n_classes(&self) -> usize;
+
+    /// Predict a row-major batch `[n × n_features]` into row-major scores
+    /// `[n × n_classes]`. `out` must be exactly `n * n_classes` long.
+    fn predict_batch(&self, x: &[f32], out: &mut [f32]);
+
+    /// Convenience allocating wrapper.
+    fn predict(&self, x: &[f32]) -> Vec<f32> {
+        let n = x.len() / self.n_features();
+        let mut out = vec![0f32; n * self.n_classes()];
+        self.predict_batch(x, &mut out);
+        out
+    }
+
+    /// Exact dynamic operation counts for evaluating this batch — consumed
+    /// by the per-device cost model ([`crate::device`]). Runs *outside* the
+    /// hot path. Default: no trace available.
+    fn count_ops(&self, _x: &[f32]) -> OpTrace {
+        OpTrace::default()
+    }
+
+    /// Resident model size in bytes (prepared data structures, excluding
+    /// per-batch scratch). Grounds the paper's memory-footprint discussion
+    /// (RapidScorer's epitomes/merging vs QuickScorer's full masks; int16
+    /// halving, §5). Default: unknown (0).
+    fn memory_bytes(&self) -> usize {
+        0
+    }
+}
+
+/// The five traversal strategies.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum EngineKind {
+    Naive,
+    IfElse,
+    Qs,
+    Vqs,
+    Rs,
+}
+
+impl EngineKind {
+    pub const ALL: [EngineKind; 5] =
+        [EngineKind::Rs, EngineKind::Vqs, EngineKind::Qs, EngineKind::IfElse, EngineKind::Naive];
+
+    pub fn short(&self) -> &'static str {
+        match self {
+            EngineKind::Naive => "NA",
+            EngineKind::IfElse => "IE",
+            EngineKind::Qs => "QS",
+            EngineKind::Vqs => "VQS",
+            EngineKind::Rs => "RS",
+        }
+    }
+
+    pub fn from_short(s: &str) -> Option<EngineKind> {
+        let up = s.trim_start_matches('q').to_ascii_uppercase();
+        Self::ALL.iter().copied().find(|k| k.short() == up)
+    }
+}
+
+/// Numeric representation (paper §5: float vs 16-bit fixed point).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Precision {
+    F32,
+    I16,
+}
+
+/// Build an engine for `forest`. For [`Precision::I16`], the forest is
+/// quantized with `quant` (or an automatically chosen scale, §5).
+///
+/// Fails if the forest shape is unsupported (QuickScorer-family engines
+/// require ≤ 64 leaves per tree).
+pub fn build(
+    kind: EngineKind,
+    precision: Precision,
+    forest: &Forest,
+    quant: Option<QuantConfig>,
+) -> anyhow::Result<Box<dyn Engine>> {
+    let max_leaves = forest.max_leaves();
+    if matches!(kind, EngineKind::Qs | EngineKind::Vqs | EngineKind::Rs) && max_leaves > 64 {
+        anyhow::bail!(
+            "{} requires <= 64 leaves per tree (forest has {max_leaves})",
+            kind.short()
+        );
+    }
+    Ok(match precision {
+        Precision::F32 => match kind {
+            EngineKind::Naive => Box::new(naive::NaiveEngine::new(forest)),
+            EngineKind::IfElse => Box::new(ifelse::IfElseEngine::new(forest)),
+            EngineKind::Qs => Box::new(quickscorer::QsEngine::new(forest)),
+            EngineKind::Vqs => Box::new(vqs::VqsEngine::new(forest)),
+            EngineKind::Rs => Box::new(rapidscorer::RsEngine::new(forest)),
+        },
+        Precision::I16 => {
+            let cfg = quant.unwrap_or_else(|| choose_scale(forest, 1.0));
+            let qf = QForest::from_forest(forest, cfg);
+            match kind {
+                EngineKind::Naive => Box::new(naive::QNaiveEngine::new(&qf)),
+                EngineKind::IfElse => Box::new(ifelse::QIfElseEngine::new(&qf)),
+                EngineKind::Qs => Box::new(quickscorer::QQsEngine::new(&qf)),
+                EngineKind::Vqs => Box::new(vqs::QVqsEngine::new(&qf)),
+                EngineKind::Rs => Box::new(rapidscorer::QRsEngine::new(&qf)),
+            }
+        }
+    })
+}
+
+/// All ten (kind, precision) combinations the paper benchmarks in Table 5.
+pub fn all_variants() -> Vec<(EngineKind, Precision)> {
+    let mut out = Vec::new();
+    for p in [Precision::F32, Precision::I16] {
+        for k in EngineKind::ALL {
+            out.push((k, p));
+        }
+    }
+    out
+}
+
+/// Display name for a variant, paper-style (`qRS` = quantized RapidScorer).
+pub fn variant_name(kind: EngineKind, precision: Precision) -> String {
+    match precision {
+        Precision::F32 => kind.short().to_string(),
+        Precision::I16 => format!("q{}", kind.short()),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn kind_roundtrip() {
+        for k in EngineKind::ALL {
+            assert_eq!(EngineKind::from_short(k.short()), Some(k));
+        }
+        assert_eq!(EngineKind::from_short("qRS"), Some(EngineKind::Rs));
+        assert_eq!(EngineKind::from_short("nope"), None);
+    }
+
+    #[test]
+    fn ten_variants() {
+        assert_eq!(all_variants().len(), 10);
+        assert_eq!(variant_name(EngineKind::Rs, Precision::I16), "qRS");
+        assert_eq!(variant_name(EngineKind::Naive, Precision::F32), "NA");
+    }
+}

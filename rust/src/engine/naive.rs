@@ -1,0 +1,369 @@
+//! NA — the "Native" baseline (Asadi et al.'s PRED): a while-loop over
+//! contiguous node arrays (struct-of-arrays layout for data locality).
+//!
+//! This is the reference implementation every speed-up in the paper's tables
+//! is measured against.
+
+use super::common::QsModel; // only for sizing helpers in traces
+use super::Engine;
+use crate::forest::{Child, Forest};
+use crate::neon::OpTrace;
+use crate::quant::{QForest, QuantConfig};
+
+/// Child encoded as i32: `>= 0` → node index, `< 0` → leaf `-(v+1)`.
+#[inline]
+fn enc(c: Child) -> i32 {
+    match c {
+        Child::Inner(i) => i as i32,
+        Child::Leaf(l) => -(l as i32) - 1,
+    }
+}
+
+/// Flattened struct-of-arrays forest for while-loop traversal.
+struct FlatForest<T: Copy, V: Copy> {
+    /// Per-tree start offset into the node arrays; `tree_offsets[M]` = total.
+    tree_offsets: Vec<u32>,
+    features: Vec<u32>,
+    thresholds: Vec<T>,
+    left: Vec<i32>,
+    right: Vec<i32>,
+    /// Per-tree start offset into `leaf_values` (in rows).
+    leaf_offsets: Vec<u32>,
+    leaf_values: Vec<V>,
+    n_features: usize,
+    n_classes: usize,
+}
+
+impl<T: Copy, V: Copy> FlatForest<T, V> {
+    /// Walk tree `ti` for quantifiable features via a comparison closure.
+    #[inline]
+    fn exit_leaf(&self, ti: usize, le: impl Fn(u32, T) -> bool) -> usize {
+        let base = self.tree_offsets[ti] as usize;
+        let end = self.tree_offsets[ti + 1] as usize;
+        if base == end {
+            return 0; // single-leaf tree
+        }
+        let mut cur = 0i32;
+        loop {
+            let i = base + cur as usize;
+            cur = if le(self.features[i], self.thresholds[i]) { self.left[i] } else { self.right[i] };
+            if cur < 0 {
+                return (-cur - 1) as usize;
+            }
+        }
+    }
+
+    /// Depth walked for tree `ti` (for op traces).
+    fn walk_depth(&self, ti: usize, le: impl Fn(u32, T) -> bool) -> u64 {
+        let base = self.tree_offsets[ti] as usize;
+        let end = self.tree_offsets[ti + 1] as usize;
+        if base == end {
+            return 0;
+        }
+        let mut cur = 0i32;
+        let mut depth = 0u64;
+        loop {
+            let i = base + cur as usize;
+            depth += 1;
+            cur = if le(self.features[i], self.thresholds[i]) { self.left[i] } else { self.right[i] };
+            if cur < 0 {
+                return depth;
+            }
+        }
+    }
+
+    fn n_trees(&self) -> usize {
+        self.tree_offsets.len() - 1
+    }
+
+    fn leaf_row(&self, ti: usize, leaf: usize) -> &[V] {
+        let start = (self.leaf_offsets[ti] as usize + leaf) * self.n_classes;
+        &self.leaf_values[start..start + self.n_classes]
+    }
+}
+
+impl<T: Copy, V: Copy> FlatForest<T, V> {
+    fn memory_bytes(&self) -> usize {
+        self.tree_offsets.len() * 4
+            + self.features.len() * 4
+            + self.thresholds.len() * std::mem::size_of::<T>()
+            + (self.left.len() + self.right.len()) * 4
+            + self.leaf_offsets.len() * 4
+            + self.leaf_values.len() * std::mem::size_of::<V>()
+    }
+}
+
+fn flatten_f32(f: &Forest) -> FlatForest<f32, f32> {
+    let mut out = FlatForest {
+        tree_offsets: vec![0],
+        features: Vec::new(),
+        thresholds: Vec::new(),
+        left: Vec::new(),
+        right: Vec::new(),
+        leaf_offsets: vec![0],
+        leaf_values: Vec::new(),
+        n_features: f.n_features,
+        n_classes: f.n_classes,
+    };
+    for t in &f.trees {
+        for n in &t.nodes {
+            out.features.push(n.feature);
+            out.thresholds.push(n.threshold);
+            out.left.push(enc(n.left));
+            out.right.push(enc(n.right));
+        }
+        out.tree_offsets.push(out.features.len() as u32);
+        out.leaf_values.extend_from_slice(&t.leaf_values);
+        out.leaf_offsets.push(out.leaf_offsets.last().unwrap() + t.n_leaves as u32);
+    }
+    out
+}
+
+fn flatten_i16(qf: &QForest) -> FlatForest<i16, i16> {
+    let mut out = FlatForest {
+        tree_offsets: vec![0],
+        features: Vec::new(),
+        thresholds: Vec::new(),
+        left: Vec::new(),
+        right: Vec::new(),
+        leaf_offsets: vec![0],
+        leaf_values: Vec::new(),
+        n_features: qf.n_features,
+        n_classes: qf.n_classes,
+    };
+    for t in &qf.trees {
+        for i in 0..t.features.len() {
+            out.features.push(t.features[i]);
+            out.thresholds.push(t.thresholds[i]);
+            out.left.push(enc(t.left[i]));
+            out.right.push(enc(t.right[i]));
+        }
+        out.tree_offsets.push(out.features.len() as u32);
+        out.leaf_values.extend_from_slice(&t.leaf_values);
+        out.leaf_offsets.push(out.leaf_offsets.last().unwrap() + t.n_leaves as u32);
+    }
+    out
+}
+
+/// Float NA engine.
+pub struct NaiveEngine {
+    flat: FlatForest<f32, f32>,
+    base: Vec<f32>,
+}
+
+impl NaiveEngine {
+    pub fn new(f: &Forest) -> NaiveEngine {
+        NaiveEngine { flat: flatten_f32(f), base: f.base_score.clone() }
+    }
+}
+
+impl Engine for NaiveEngine {
+    fn name(&self) -> String {
+        "NA".into()
+    }
+
+    fn lanes(&self) -> usize {
+        1
+    }
+
+    fn n_features(&self) -> usize {
+        self.flat.n_features
+    }
+
+    fn n_classes(&self) -> usize {
+        self.flat.n_classes
+    }
+
+    fn predict_batch(&self, x: &[f32], out: &mut [f32]) {
+        let d = self.flat.n_features;
+        let c = self.flat.n_classes;
+        let n = x.len() / d;
+        debug_assert_eq!(out.len(), n * c);
+        for i in 0..n {
+            let row = &x[i * d..(i + 1) * d];
+            let o = &mut out[i * c..(i + 1) * c];
+            o.copy_from_slice(&self.base);
+            for ti in 0..self.flat.n_trees() {
+                let leaf = self.flat.exit_leaf(ti, |f, t| row[f as usize] <= t);
+                for (dst, &v) in o.iter_mut().zip(self.flat.leaf_row(ti, leaf)) {
+                    *dst += v;
+                }
+            }
+        }
+    }
+
+    fn count_ops(&self, x: &[f32]) -> OpTrace {
+        let d = self.flat.n_features;
+        let c = self.flat.n_classes as u64;
+        let n = x.len() / d;
+        let mut tr = OpTrace::new();
+        for i in 0..n {
+            let row = &x[i * d..(i + 1) * d];
+            for ti in 0..self.flat.n_trees() {
+                let depth = self.flat.walk_depth(ti, |f, t| row[f as usize] <= t);
+                // Per node: load node record (16B, data-dependent), load
+                // feature, fp compare, data-dependent branch.
+                tr.random_loads += 2 * depth;
+                tr.scalar_fp += depth;
+                tr.branch += depth;
+                tr.branch_mispredictable += depth / 2; // ~random directions
+                // Leaf: load row + C adds.
+                tr.random_loads += 1;
+                tr.scalar_fp += c;
+            }
+        }
+        tr
+    }
+
+    fn memory_bytes(&self) -> usize {
+        self.flat.memory_bytes()
+    }
+}
+
+/// Quantized NA engine (qNA): int16 thresholds/leaves, i32 accumulation,
+/// features quantized once per batch.
+pub struct QNaiveEngine {
+    flat: FlatForest<i16, i16>,
+    base: Vec<i32>,
+    config: QuantConfig,
+}
+
+impl QNaiveEngine {
+    pub fn new(qf: &QForest) -> QNaiveEngine {
+        QNaiveEngine { flat: flatten_i16(qf), base: qf.base_score.clone(), config: qf.config }
+    }
+}
+
+impl Engine for QNaiveEngine {
+    fn name(&self) -> String {
+        "qNA".into()
+    }
+
+    fn lanes(&self) -> usize {
+        1
+    }
+
+    fn n_features(&self) -> usize {
+        self.flat.n_features
+    }
+
+    fn n_classes(&self) -> usize {
+        self.flat.n_classes
+    }
+
+    fn predict_batch(&self, x: &[f32], out: &mut [f32]) {
+        let d = self.flat.n_features;
+        let c = self.flat.n_classes;
+        let n = x.len() / d;
+        debug_assert_eq!(out.len(), n * c);
+        let mut qx = Vec::with_capacity(x.len());
+        self.config.q_slice(x, &mut qx);
+        let mut acc = vec![0i32; c];
+        for i in 0..n {
+            let row = &qx[i * d..(i + 1) * d];
+            acc.copy_from_slice(&self.base);
+            for ti in 0..self.flat.n_trees() {
+                let leaf = self.flat.exit_leaf(ti, |f, t| row[f as usize] <= t);
+                for (dst, &v) in acc.iter_mut().zip(self.flat.leaf_row(ti, leaf)) {
+                    *dst += v as i32;
+                }
+            }
+            for (o, &a) in out[i * c..(i + 1) * c].iter_mut().zip(acc.iter()) {
+                *o = self.config.dq(a);
+            }
+        }
+    }
+
+    fn count_ops(&self, x: &[f32]) -> OpTrace {
+        let d = self.flat.n_features;
+        let c = self.flat.n_classes as u64;
+        let n = x.len() / d;
+        let mut qx = Vec::new();
+        self.config.q_slice(x, &mut qx);
+        let mut tr = OpTrace::new();
+        // Feature quantization: one fp mul + floor + store per value.
+        tr.scalar_fp += (n * d) as u64 * 2;
+        tr.store_bytes += (n * d * 2) as u64;
+        for i in 0..n {
+            let row = &qx[i * d..(i + 1) * d];
+            for ti in 0..self.flat.n_trees() {
+                let depth = self.flat.walk_depth(ti, |f, t| row[f as usize] <= t);
+                tr.random_loads += 2 * depth;
+                tr.scalar_alu += depth; // integer compares — no FPU
+                tr.branch += depth;
+                tr.branch_mispredictable += depth / 2;
+                tr.random_loads += 1;
+                tr.scalar_alu += c;
+            }
+        }
+        tr
+    }
+
+    fn memory_bytes(&self) -> usize {
+        self.flat.memory_bytes()
+    }
+}
+
+// Silence unused-import lint for the doc reference above.
+#[allow(unused)]
+fn _doc(_: &QsModel<f32, f32>) {}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::DatasetId;
+    use crate::forest::builder::{train_random_forest, RfParams, TreeParams};
+
+    fn setup() -> (Forest, crate::data::Dataset) {
+        let ds = DatasetId::Magic.generate(400, 31);
+        let f = train_random_forest(
+            &ds.x,
+            &ds.labels,
+            ds.d,
+            ds.n_classes,
+            RfParams {
+                n_trees: 12,
+                tree: TreeParams { max_leaves: 16, min_samples_leaf: 2, mtry: 0 },
+                ..Default::default()
+            },
+        );
+        (f, ds)
+    }
+
+    #[test]
+    fn na_matches_reference() {
+        let (f, ds) = setup();
+        let e = NaiveEngine::new(&f);
+        let got = e.predict(&ds.x);
+        let want = f.predict_batch(&ds.x);
+        assert_eq!(got, want); // identical op order -> bitwise equal
+    }
+
+    #[test]
+    fn qna_matches_qforest_reference() {
+        let (f, ds) = setup();
+        let qf = QForest::from_forest(&f, QuantConfig::paper_default());
+        let e = QNaiveEngine::new(&qf);
+        let got = e.predict(&ds.x);
+        let want = qf.predict_batch(&ds.x);
+        assert_eq!(got, want);
+    }
+
+    #[test]
+    fn trace_nonempty_and_scales() {
+        let (f, ds) = setup();
+        let e = NaiveEngine::new(&f);
+        let t1 = e.count_ops(&ds.x[..ds.d * 4]);
+        let t2 = e.count_ops(&ds.x[..ds.d * 8]);
+        assert!(t1.scalar_fp > 0);
+        assert!(t2.total_ops() > t1.total_ops());
+    }
+
+    #[test]
+    fn single_leaf_tree_ok() {
+        let mut f = Forest::new(2, 1, crate::forest::Task::Ranking);
+        f.trees.push(crate::forest::Tree::leaf(vec![2.5]));
+        let e = NaiveEngine::new(&f);
+        assert_eq!(e.predict(&[0.0, 0.0]), vec![2.5]);
+    }
+}

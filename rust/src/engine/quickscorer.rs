@@ -1,0 +1,311 @@
+//! QS — QuickScorer (Lucchese et al. 2015), scalar version (paper Alg. 1).
+//!
+//! The forest is traversed feature-wise: for each feature `k`, the nodes of
+//! *all* trees testing `k` are scanned in ascending-threshold order. Every
+//! node with `x[k] > t` is a "false node": the leaves of its left subtree
+//! cannot be the exit leaf, so the tree's bitvector is ANDed with the node's
+//! mask. Since thresholds ascend, the scan `break`s at the first true node.
+//! The exit leaf of each tree is then the lowest set bit of its bitvector,
+//! and a table lookup accumulates the score. Classification (C ≥ 2) adds the
+//! per-class inner loop of §4.2.
+
+use super::common::QsModel;
+use super::Engine;
+use crate::forest::Forest;
+use crate::neon::OpTrace;
+use crate::quant::{QForest, QuantConfig};
+
+/// Float scalar QuickScorer.
+pub struct QsEngine {
+    m: QsModel<f32, f32>,
+}
+
+impl QsEngine {
+    pub fn new(f: &Forest) -> QsEngine {
+        QsEngine { m: QsModel::from_forest(f) }
+    }
+
+    /// Access to the prepared model (used by benches/ablations).
+    pub fn model(&self) -> &QsModel<f32, f32> {
+        &self.m
+    }
+}
+
+/// Shared mask-computation + trace logic, generic over the scalar type.
+/// Returns the per-tree exit-leaf bitvectors in `leafidx`.
+#[inline]
+fn mask_computation<T: Copy + PartialOrd>(
+    m: &QsModel<T, impl Copy>,
+    row: impl Fn(usize) -> T,
+    leafidx: &mut [u64],
+) {
+    leafidx.fill(u64::MAX);
+    for k in 0..m.n_features {
+        let r = m.feature_range(k);
+        if r.is_empty() {
+            continue;
+        }
+        let x = row(k);
+        // Zipped slice iteration: one bounds check per feature instead of
+        // three per node (§Perf iteration 1).
+        let ths = &m.thresholds[r.clone()];
+        let trees = &m.tree_ids[r.clone()];
+        let masks = &m.masks[r];
+        for ((&t, &tree), &mask) in ths.iter().zip(trees).zip(masks) {
+            // Thresholds ascend, so the first `x <= t` terminates the
+            // feature (all later nodes are true nodes).
+            if x > t {
+                leafidx[tree as usize] &= mask;
+            } else {
+                break;
+            }
+        }
+    }
+}
+
+/// Count visited nodes per feature for trace purposes.
+fn visited_nodes<T: Copy + PartialOrd>(
+    m: &QsModel<T, impl Copy>,
+    row: impl Fn(usize) -> T,
+) -> (u64, u64) {
+    let mut visited = 0u64;
+    let mut false_nodes = 0u64;
+    for k in 0..m.n_features {
+        for idx in m.feature_range(k) {
+            visited += 1;
+            if row(k) > m.thresholds[idx] {
+                false_nodes += 1;
+            } else {
+                break;
+            }
+        }
+    }
+    (visited, false_nodes)
+}
+
+impl Engine for QsEngine {
+    fn name(&self) -> String {
+        "QS".into()
+    }
+
+    fn lanes(&self) -> usize {
+        1
+    }
+
+    fn n_features(&self) -> usize {
+        self.m.n_features
+    }
+
+    fn n_classes(&self) -> usize {
+        self.m.n_classes
+    }
+
+    fn predict_batch(&self, x: &[f32], out: &mut [f32]) {
+        let d = self.m.n_features;
+        let c = self.m.n_classes;
+        let n = x.len() / d;
+        let mut leafidx = vec![u64::MAX; self.m.n_trees];
+        for i in 0..n {
+            let row = &x[i * d..(i + 1) * d];
+            mask_computation(&self.m, |k| row[k], &mut leafidx);
+            // Score computation (Alg. 1 lines 15-20, classification §4.2).
+            let o = &mut out[i * c..(i + 1) * c];
+            o.copy_from_slice(&self.m.base_f32);
+            for (ti, &bits) in leafidx.iter().enumerate() {
+                let j = bits.trailing_zeros() as usize;
+                for (dst, &v) in o.iter_mut().zip(self.m.leaf_row(ti, j)) {
+                    *dst += v;
+                }
+            }
+        }
+    }
+
+    fn count_ops(&self, x: &[f32]) -> OpTrace {
+        qs_trace(&self.m, x, false)
+    }
+
+    fn memory_bytes(&self) -> usize {
+        self.m.memory_bytes()
+    }
+}
+
+/// Quantized scalar QuickScorer (qQS).
+pub struct QQsEngine {
+    m: QsModel<i16, i16>,
+    config: QuantConfig,
+}
+
+impl QQsEngine {
+    pub fn new(qf: &QForest) -> QQsEngine {
+        QQsEngine { m: QsModel::from_qforest(qf), config: qf.config }
+    }
+}
+
+impl Engine for QQsEngine {
+    fn name(&self) -> String {
+        "qQS".into()
+    }
+
+    fn lanes(&self) -> usize {
+        1
+    }
+
+    fn n_features(&self) -> usize {
+        self.m.n_features
+    }
+
+    fn n_classes(&self) -> usize {
+        self.m.n_classes
+    }
+
+    fn predict_batch(&self, x: &[f32], out: &mut [f32]) {
+        let d = self.m.n_features;
+        let c = self.m.n_classes;
+        let n = x.len() / d;
+        let mut qx = Vec::with_capacity(x.len());
+        self.config.q_slice(x, &mut qx);
+        let mut leafidx = vec![u64::MAX; self.m.n_trees];
+        let mut acc = vec![0i32; c];
+        for i in 0..n {
+            let row = &qx[i * d..(i + 1) * d];
+            mask_computation(&self.m, |k| row[k], &mut leafidx);
+            acc.copy_from_slice(&self.m.base_i32);
+            for (ti, &bits) in leafidx.iter().enumerate() {
+                let j = bits.trailing_zeros() as usize;
+                for (dst, &v) in acc.iter_mut().zip(self.m.leaf_row(ti, j)) {
+                    *dst += v as i32;
+                }
+            }
+            for (o, &a) in out[i * c..(i + 1) * c].iter_mut().zip(acc.iter()) {
+                *o = self.config.dq(a);
+            }
+        }
+    }
+
+    fn count_ops(&self, x: &[f32]) -> OpTrace {
+        let mut qx = Vec::new();
+        self.config.q_slice(x, &mut qx);
+        let d = self.m.n_features;
+        let n = x.len() / d;
+        let mut tr = qsi_trace(&self.m, &qx, n);
+        tr.scalar_fp += (n * d) as u64 * 2; // feature quantization
+        tr.store_bytes += (n * d * 2) as u64;
+        tr
+    }
+
+    fn memory_bytes(&self) -> usize {
+        self.m.memory_bytes()
+    }
+}
+
+fn qs_trace(m: &QsModel<f32, f32>, x: &[f32], _quant: bool) -> OpTrace {
+    let d = m.n_features;
+    let c = m.n_classes as u64;
+    let n = x.len() / d;
+    let mut tr = OpTrace::new();
+    let entry = m.node_entry_bytes();
+    for i in 0..n {
+        let row = &x[i * d..(i + 1) * d];
+        let (visited, false_nodes) = visited_nodes(m, |k| row[k]);
+        tr.stream_load_bytes += visited * entry;
+        tr.scalar_fp += visited; // compares
+        tr.branch += visited;
+        tr.branch_mispredictable += d as u64; // one break misprediction/feature
+        tr.scalar_alu += false_nodes; // AND + leafidx update
+        tr.store_bytes += 8 * (m.n_trees as u64); // leafidx init
+        // Score computation.
+        tr.scalar_alu += m.n_trees as u64; // trailing_zeros
+        tr.random_loads += m.n_trees as u64; // leaf rows
+        tr.scalar_fp += m.n_trees as u64 * c;
+    }
+    tr
+}
+
+fn qsi_trace(m: &QsModel<i16, i16>, qx: &[i16], n: usize) -> OpTrace {
+    let d = m.n_features;
+    let c = m.n_classes as u64;
+    let mut tr = OpTrace::new();
+    let entry = m.node_entry_bytes();
+    for i in 0..n {
+        let row = &qx[i * d..(i + 1) * d];
+        let (visited, false_nodes) = visited_nodes(m, |k| row[k]);
+        tr.stream_load_bytes += visited * entry;
+        tr.scalar_alu += visited; // integer compares
+        tr.branch += visited;
+        tr.branch_mispredictable += d as u64;
+        tr.scalar_alu += false_nodes;
+        tr.store_bytes += 8 * (m.n_trees as u64);
+        tr.scalar_alu += m.n_trees as u64;
+        tr.random_loads += m.n_trees as u64;
+        tr.scalar_alu += m.n_trees as u64 * c;
+    }
+    tr
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::DatasetId;
+    use crate::forest::builder::{train_random_forest, RfParams, TreeParams};
+    use crate::testing::assert_close;
+
+    fn setup(leaves: usize, seed: u64) -> (Forest, crate::data::Dataset) {
+        let ds = DatasetId::Magic.generate(900, seed);
+        let f = train_random_forest(
+            &ds.x,
+            &ds.labels,
+            ds.d,
+            ds.n_classes,
+            RfParams {
+                n_trees: 14,
+                tree: TreeParams { max_leaves: leaves, min_samples_leaf: 2, mtry: 0 },
+                seed,
+                ..Default::default()
+            },
+        );
+        (f, ds)
+    }
+
+    #[test]
+    fn qs_matches_reference_l32() {
+        let (f, ds) = setup(32, 1);
+        let e = QsEngine::new(&f);
+        assert_close(&e.predict(&ds.x), &f.predict_batch(&ds.x), 1e-5, 1e-5).unwrap();
+    }
+
+    #[test]
+    fn qs_matches_reference_l64() {
+        let (f, ds) = setup(64, 2);
+        assert!(f.max_leaves() > 32, "want an L=64 forest");
+        let e = QsEngine::new(&f);
+        assert_close(&e.predict(&ds.x), &f.predict_batch(&ds.x), 1e-5, 1e-5).unwrap();
+    }
+
+    #[test]
+    fn qqs_matches_qforest() {
+        let (f, ds) = setup(32, 3);
+        let qf = QForest::from_forest(&f, QuantConfig::paper_default());
+        let e = QQsEngine::new(&qf);
+        assert_eq!(e.predict(&ds.x), qf.predict_batch(&ds.x));
+    }
+
+    #[test]
+    fn argmax_agreement_with_naive() {
+        let (f, ds) = setup(64, 4);
+        let e = QsEngine::new(&f);
+        let got = Forest::argmax(&e.predict(&ds.x), f.n_classes);
+        let want = Forest::argmax(&f.predict_batch(&ds.x), f.n_classes);
+        assert_eq!(got, want);
+    }
+
+    #[test]
+    fn trace_counts_reasonable() {
+        let (f, ds) = setup(32, 5);
+        let e = QsEngine::new(&f);
+        let tr = e.count_ops(&ds.x[..ds.d * 4]);
+        assert!(tr.scalar_fp > 0);
+        assert!(tr.stream_load_bytes > 0);
+        // QS never visits more nodes than the forest has, per instance.
+        assert!(tr.scalar_fp <= 4 * (f.n_nodes() as u64 + f.n_trees() as u64 * 2 + 100));
+    }
+}

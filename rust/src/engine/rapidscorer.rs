@@ -1,0 +1,750 @@
+//! RS — RapidScorer (Ye et al. 2018) on ARM NEON (paper §3, §4.1, §5.1).
+//!
+//! RapidScorer improves V-QuickScorer threefold:
+//!
+//! 1. **Epitomes**: a node's bitvector mask is stored as only the byte range
+//!    that actually contains zeros, shrinking the model and the number of
+//!    byte rows touched per false node.
+//! 2. **Node merging**: all nodes in the forest testing the same
+//!    `(feature, threshold)` are merged into one group — the threshold
+//!    comparison executes once per group instead of once per node.
+//! 3. **Byte-transposed leafidx** (`leafidx↓`): with v = 16 instances, byte
+//!    `m` of every instance's bitvector lives in one `uint8x16_t` register
+//!    (instance = column), so mask application and the exit-leaf search run
+//!    as bytewise NEON ops across all 16 instances at once.
+//!
+//! The exit-leaf search is the paper's Algorithm 4 — `vtstq_u8`/`vceqq_u8`/
+//! `vbslq_u8` to find the first non-zero byte per column, then
+//! `vclzq_u8(vrbitq_u8(b))` for the first set bit within it (the paper's
+//! line 7 prints the two intrinsics in the reverse order; as printed it
+//! would compute `rbit(clz(b))`, which is not a bit index — we use the
+//! evidently intended composition), and `vmlaq_u8` to combine byte and bit
+//! indices.
+//!
+//! Float thresholds compare 16 instances via 4 × `vcgtq_f32`; int16
+//! fixed-point needs only 2 × `vcgtq_s16` (§5.1) — the promised halving of
+//! comparison work.
+
+use super::common::{qtree_left_ranges, left_range_mask, QsModel};
+use super::Engine;
+use crate::forest::Forest;
+use crate::neon::*;
+use crate::quant::{QForest, QuantConfig};
+
+/// Instances per RapidScorer block: one byte lane per instance.
+pub(crate) const V_RS: usize = 16;
+
+/// One merged node group: a unique `(feature, threshold)` with the epitomes
+/// it applies on a false outcome.
+#[derive(Debug, Clone)]
+struct Group<T> {
+    threshold: T,
+    /// Range into the entry arrays.
+    entries: std::ops::Range<u32>,
+}
+
+/// One epitome entry, packed into 16 bytes: the owning tree, the first
+/// bitvector byte row the epitome touches, its length, and the epitome
+/// bytes inline (a 64-leaf mask spans at most 8 bytes). Inline storage
+/// keeps the false-node hot loop on a single cache stream (§Perf it. 2).
+#[derive(Debug, Clone, Copy)]
+struct RsEntry {
+    tree: u32,
+    row: u8,
+    len: u8,
+    bytes: [u8; 8],
+}
+
+/// The RapidScorer model: merged feature-ordered groups + epitome store +
+/// padded leaf table (shared shape with [`QsModel`]).
+pub struct RsModel<T: Copy, V: Copy> {
+    n_features: usize,
+    n_classes: usize,
+    n_trees: usize,
+    leaf_words: usize,
+    /// Per-feature offsets into `groups`.
+    feat_offsets: Vec<u32>,
+    groups: Vec<Group<T>>,
+    entries: Vec<RsEntry>,
+    leaf_values: Vec<V>,
+    base_f32: Vec<f32>,
+    base_i32: Vec<i32>,
+}
+
+/// Build the merged epitome model from raw per-node lists. `merge = false`
+/// disables node merging (each node is its own group) — the ablation knob
+/// for quantifying RapidScorer's merging contribution (Table 4's mechanism).
+fn build_rs<T: Copy + PartialEq + PartialOrd, V: Copy>(
+    n_features: usize,
+    n_classes: usize,
+    n_trees: usize,
+    leaf_words: usize,
+    // (feature, threshold, tree, mask) sorted by (feature, threshold).
+    nodes: &[(u32, T, u32, u64)],
+    leaf_values: Vec<V>,
+    base_f32: Vec<f32>,
+    base_i32: Vec<i32>,
+    merge: bool,
+) -> RsModel<T, V> {
+    let mut m = RsModel {
+        n_features,
+        n_classes,
+        n_trees,
+        leaf_words,
+        feat_offsets: vec![0u32; n_features + 1],
+        groups: Vec::new(),
+        entries: Vec::new(),
+        leaf_values,
+        base_f32,
+        base_i32,
+    };
+
+    let mut i = 0usize;
+    while i < nodes.len() {
+        let (feat, thr, _, _) = nodes[i];
+        // Collect the merged group [i, j): same feature & threshold.
+        let mut j = i;
+        // Per-tree combined mask: equivalent nodes of the *same* tree are
+        // false together, so their masks AND into one epitome.
+        let mut per_tree: Vec<(u32, u64)> = Vec::new();
+        let limit = if merge { nodes.len() } else { i + 1 };
+        while j < limit.min(nodes.len()) && nodes[j].0 == feat && nodes[j].1 == thr {
+            let (_, _, tree, mask) = nodes[j];
+            match per_tree.iter_mut().find(|(t, _)| *t == tree) {
+                Some((_, m)) => *m &= mask,
+                None => per_tree.push((tree, mask)),
+            }
+            j += 1;
+        }
+        let entry_start = m.entries.len() as u32;
+        for (tree, mask) in per_tree {
+            // Epitome: byte range [lo, hi] containing all zero bits.
+            let zeros = !mask;
+            debug_assert!(zeros != 0);
+            let lo = (zeros.trailing_zeros() / 8) as usize;
+            let hi = (63 - zeros.leading_zeros()) as usize / 8;
+            let all = mask.to_le_bytes();
+            let mut bytes = [0u8; 8];
+            bytes[..hi - lo + 1].copy_from_slice(&all[lo..=hi]);
+            m.entries.push(RsEntry { tree, row: lo as u8, len: (hi - lo + 1) as u8, bytes });
+        }
+        m.groups.push(Group { threshold: thr, entries: entry_start..m.entries.len() as u32 });
+        m.feat_offsets[feat as usize + 1] += 1;
+        i = j;
+    }
+    for f in 0..n_features {
+        m.feat_offsets[f + 1] += m.feat_offsets[f];
+    }
+    m
+}
+
+impl<T: Copy, V: Copy> RsModel<T, V> {
+    #[inline]
+    fn feature_groups(&self, k: usize) -> std::ops::Range<usize> {
+        self.feat_offsets[k] as usize..self.feat_offsets[k + 1] as usize
+    }
+
+    /// Kept as the readable reference for the offset arithmetic inlined in
+    /// the score loops (§Perf iteration 3).
+    #[allow(dead_code)]
+    #[inline]
+    fn leaf_row(&self, tree: usize, leaf: usize) -> &[V] {
+        let c = self.n_classes;
+        let start = (tree * self.leaf_words + leaf) * c;
+        &self.leaf_values[start..start + c]
+    }
+
+    /// Bitvector byte rows per tree.
+    #[inline]
+    fn rows(&self) -> usize {
+        self.leaf_words / 8
+    }
+
+    /// Merged-group count (the paper's "unique nodes kept", Table 4).
+    pub fn n_groups(&self) -> usize {
+        self.groups.len()
+    }
+
+    /// Resident bytes: groups + packed epitome entries + leaf table.
+    pub fn memory_bytes(&self) -> usize {
+        self.feat_offsets.len() * 4
+            + self.groups.len() * (std::mem::size_of::<T>() + 8)
+            + self.entries.len() * std::mem::size_of::<RsEntry>()
+            + self.leaf_values.len() * std::mem::size_of::<V>()
+    }
+}
+
+impl RsModel<f32, f32> {
+    pub fn from_forest(f: &Forest) -> RsModel<f32, f32> {
+        Self::from_forest_opts(f, true)
+    }
+
+    /// `merge = false` builds the no-merging ablation variant.
+    pub fn from_forest_opts(f: &Forest, merge: bool) -> RsModel<f32, f32> {
+        // Reuse QsModel prep for sorting + leaf padding, then merge.
+        let qs = QsModel::<f32, f32>::from_forest(f);
+        let mut nodes = Vec::with_capacity(qs.thresholds.len());
+        for k in 0..qs.n_features {
+            for idx in qs.feature_range(k) {
+                nodes.push((k as u32, qs.thresholds[idx], qs.tree_ids[idx], qs.masks[idx]));
+            }
+        }
+        build_rs(
+            qs.n_features,
+            qs.n_classes,
+            qs.n_trees,
+            qs.leaf_words,
+            &nodes,
+            qs.leaf_values,
+            qs.base_f32,
+            Vec::new(),
+            merge,
+        )
+    }
+}
+
+impl RsModel<i16, i16> {
+    pub fn from_qforest(qf: &QForest) -> RsModel<i16, i16> {
+        let qs = QsModel::<i16, i16>::from_qforest(qf);
+        let mut nodes = Vec::with_capacity(qs.thresholds.len());
+        for k in 0..qs.n_features {
+            for idx in qs.feature_range(k) {
+                nodes.push((k as u32, qs.thresholds[idx], qs.tree_ids[idx], qs.masks[idx]));
+            }
+        }
+        build_rs(
+            qs.n_features,
+            qs.n_classes,
+            qs.n_trees,
+            qs.leaf_words,
+            &nodes,
+            qs.leaf_values,
+            Vec::new(),
+            qs.base_i32,
+            true,
+        )
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Shared block machinery
+// ---------------------------------------------------------------------------
+
+/// Apply one merged group's epitomes to the transposed leafidx under the
+/// 16-lane byte mask.
+#[inline]
+fn apply_group<T: Copy, V: Copy>(
+    m: &RsModel<T, V>,
+    g: &Group<T>,
+    mask: U8x16,
+    leafidx: &mut [U8x16],
+) {
+    let rows = m.rows();
+    let entries = &m.entries[g.entries.start as usize..g.entries.end as usize];
+    for e in entries {
+        let base = e.tree as usize * rows + e.row as usize;
+        for (r, &byte) in e.bytes[..e.len as usize].iter().enumerate() {
+            let cur = leafidx[base + r];
+            let y = vandq_u8(vdupq_n_u8(byte), cur);
+            leafidx[base + r] = vbslq_u8(mask, y, cur);
+        }
+    }
+}
+
+/// VECTORIZED_FINDLEAFINDEX (paper Algorithm 4): the exit-leaf index of all
+/// 16 instances for one tree, from its transposed bitvector rows.
+#[inline]
+fn find_leaf_index(rows: &[U8x16]) -> U8x16 {
+    let ones = vdupq_n_u8(0xFF);
+    let zero = vdupq_n_u8(0);
+    let mut b = zero;
+    let mut c1 = zero;
+    for (mi, &row) in rows.iter().enumerate() {
+        // y: lanes whose byte m is non-zero.
+        let y = vtstq_u8(row, ones);
+        // z: lanes that are non-zero now and had no byte selected yet.
+        let z = vandq_u8(y, vceqq_u8(b, zero));
+        b = vbslq_u8(z, row, b);
+        c1 = vbslq_u8(z, vdupq_n_u8(mi as u8), c1);
+    }
+    // First set bit within the selected byte: ctz = clz ∘ rbit.
+    let c2 = vclzq_u8(vrbitq_u8(b));
+    // leaf = c1 * 8 + c2.
+    vmlaq_u8(c2, c1, vdupq_n_u8(8))
+}
+
+/// Reset the transposed bitvectors to all-ones.
+#[inline]
+fn reset_leafidx(leafidx: &mut [U8x16]) {
+    leafidx.fill(vdupq_n_u8(0xFF));
+}
+
+/// Combine 4 f32 compare masks into a 16-lane byte mask.
+#[inline]
+fn bytes_mask_f32(xt: &[f32], k: usize, gamma: f32) -> U8x16 {
+    let g = vdupq_n_f32(gamma);
+    let m0 = vcgtq_f32(vld1q_f32(&xt[k * V_RS..]), g);
+    let m1 = vcgtq_f32(vld1q_f32(&xt[k * V_RS + 4..]), g);
+    let m2 = vcgtq_f32(vld1q_f32(&xt[k * V_RS + 8..]), g);
+    let m3 = vcgtq_f32(vld1q_f32(&xt[k * V_RS + 12..]), g);
+    let lo = vcombine_u16(vmovn_u32(m0), vmovn_u32(m1));
+    let hi = vcombine_u16(vmovn_u32(m2), vmovn_u32(m3));
+    vcombine_u8(vmovn_u16(lo), vmovn_u16(hi))
+}
+
+/// Combine 2 i16 compare masks into a 16-lane byte mask (§5.1: half the
+/// comparisons of the float path).
+#[inline]
+fn bytes_mask_i16(xt: &[i16], k: usize, gamma: i16) -> U8x16 {
+    let g = vdupq_n_s16(gamma);
+    let m0 = vcgtq_s16(vld1q_s16(&xt[k * V_RS..]), g);
+    let m1 = vcgtq_s16(vld1q_s16(&xt[k * V_RS + 8..]), g);
+    vcombine_u8(vmovn_u16(m0), vmovn_u16(m1))
+}
+
+fn transpose_rs<T: Copy>(x: &[T], d: usize, n: usize, base: usize, xt: &mut [T]) {
+    for lane in 0..V_RS {
+        let i = (base + lane).min(n - 1);
+        let row = &x[i * d..(i + 1) * d];
+        for k in 0..d {
+            xt[k * V_RS + lane] = row[k];
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Float RS engine
+// ---------------------------------------------------------------------------
+
+/// Float RapidScorer.
+pub struct RsEngine {
+    m: RsModel<f32, f32>,
+}
+
+impl RsEngine {
+    pub fn new(f: &Forest) -> RsEngine {
+        RsEngine { m: RsModel::from_forest(f) }
+    }
+
+    /// Ablation variant with node merging disabled (one group per node).
+    pub fn new_unmerged(f: &Forest) -> RsEngine {
+        RsEngine { m: RsModel::from_forest_opts(f, false) }
+    }
+
+    pub fn model(&self) -> &RsModel<f32, f32> {
+        &self.m
+    }
+}
+
+impl Engine for RsEngine {
+    fn name(&self) -> String {
+        "RS".into()
+    }
+
+    fn lanes(&self) -> usize {
+        V_RS
+    }
+
+    fn n_features(&self) -> usize {
+        self.m.n_features
+    }
+
+    fn n_classes(&self) -> usize {
+        self.m.n_classes
+    }
+
+    fn predict_batch(&self, x: &[f32], out: &mut [f32]) {
+        let m = &self.m;
+        let d = m.n_features;
+        let c = m.n_classes;
+        let n = x.len() / d;
+        let rows = m.rows();
+        let mut xt = vec![0f32; d * V_RS];
+        let mut leafidx = vec![U8x16([0; 16]); m.n_trees * rows];
+        let mut acc = vec![[F32x4([0.0; 4]); 4]; c];
+
+        let mut base = 0usize;
+        while base < n {
+            transpose_rs(x, d, n, base, &mut xt);
+            reset_leafidx(&mut leafidx);
+            // Mask computation over merged groups.
+            for k in 0..d {
+                let gr = m.feature_groups(k);
+                if gr.is_empty() {
+                    continue;
+                }
+                for gi in gr {
+                    let g = &m.groups[gi];
+                    let mask = bytes_mask_f32(&xt, k, g.threshold);
+                    if vmaxvq_u8(mask) == 0 {
+                        break;
+                    }
+                    apply_group(m, g, mask, &mut leafidx);
+                }
+            }
+            // Score computation: Alg. 4 per tree, then per-class gather+add.
+            acc.iter_mut().for_each(|a| *a = [F32x4([0.0; 4]); 4]);
+            for ti in 0..m.n_trees {
+                let leaves = find_leaf_index(&leafidx[ti * rows..(ti + 1) * rows]);
+                // Row offsets once per tree (not per class per lane).
+                let mut offs = [0usize; V_RS];
+                for (lane, o) in offs.iter_mut().enumerate() {
+                    *o = (ti * m.leaf_words + vgetq_lane_u8(leaves, lane) as usize) * c;
+                }
+                for (cls, a) in acc.iter_mut().enumerate() {
+                    for q in 0..4 {
+                        let vals = F32x4([
+                            m.leaf_values[offs[q * 4] + cls],
+                            m.leaf_values[offs[q * 4 + 1] + cls],
+                            m.leaf_values[offs[q * 4 + 2] + cls],
+                            m.leaf_values[offs[q * 4 + 3] + cls],
+                        ]);
+                        a[q] = vaddq_f32(a[q], vals);
+                    }
+                }
+            }
+            for lane in 0..V_RS {
+                let i = base + lane;
+                if i >= n {
+                    break;
+                }
+                for cls in 0..c {
+                    out[i * c + cls] = acc[cls][lane / 4].0[lane % 4] + m.base_f32[cls];
+                }
+            }
+            base += V_RS;
+        }
+    }
+
+    fn count_ops(&self, x: &[f32]) -> OpTrace {
+        rs_trace(&self.m, x, |xt, k, thr| {
+            (0..V_RS).any(|lane| xt[k * V_RS + lane] > thr)
+        }, 4)
+    }
+
+    fn memory_bytes(&self) -> usize {
+        self.m.memory_bytes()
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Quantized RS engine
+// ---------------------------------------------------------------------------
+
+/// Quantized RapidScorer (qRS): int16 thresholds (2 compares per group) and
+/// int16 leaf values accumulated in 16-bit lanes.
+pub struct QRsEngine {
+    m: RsModel<i16, i16>,
+    config: QuantConfig,
+}
+
+impl QRsEngine {
+    pub fn new(qf: &QForest) -> QRsEngine {
+        QRsEngine { m: RsModel::from_qforest(qf), config: qf.config }
+    }
+
+    pub fn model(&self) -> &RsModel<i16, i16> {
+        &self.m
+    }
+}
+
+impl Engine for QRsEngine {
+    fn name(&self) -> String {
+        "qRS".into()
+    }
+
+    fn lanes(&self) -> usize {
+        V_RS
+    }
+
+    fn n_features(&self) -> usize {
+        self.m.n_features
+    }
+
+    fn n_classes(&self) -> usize {
+        self.m.n_classes
+    }
+
+    fn predict_batch(&self, x: &[f32], out: &mut [f32]) {
+        let m = &self.m;
+        let d = m.n_features;
+        let c = m.n_classes;
+        let n = x.len() / d;
+        let rows = m.rows();
+        let mut qx = Vec::with_capacity(x.len());
+        self.config.q_slice(x, &mut qx);
+        let mut xt = vec![0i16; d * V_RS];
+        let mut leafidx = vec![U8x16([0; 16]); m.n_trees * rows];
+        let mut acc = vec![[I16x8([0; 8]); 2]; c];
+
+        let mut base = 0usize;
+        while base < n {
+            transpose_rs(&qx, d, n, base, &mut xt);
+            reset_leafidx(&mut leafidx);
+            for k in 0..d {
+                for gi in m.feature_groups(k) {
+                    let g = &m.groups[gi];
+                    let mask = bytes_mask_i16(&xt, k, g.threshold);
+                    if vmaxvq_u8(mask) == 0 {
+                        break;
+                    }
+                    apply_group(m, g, mask, &mut leafidx);
+                }
+            }
+            // Score: two I16x8 accumulators per class (16 lanes).
+            acc.iter_mut().for_each(|a| *a = [I16x8([0; 8]); 2]);
+            for ti in 0..m.n_trees {
+                let leaves = find_leaf_index(&leafidx[ti * rows..(ti + 1) * rows]);
+                let mut offs = [0usize; V_RS];
+                for (lane, o) in offs.iter_mut().enumerate() {
+                    *o = (ti * m.leaf_words + vgetq_lane_u8(leaves, lane) as usize) * c;
+                }
+                for (cls, a) in acc.iter_mut().enumerate() {
+                    for h in 0..2 {
+                        let mut vals = I16x8([0; 8]);
+                        for lane in 0..8 {
+                            vals.0[lane] = m.leaf_values[offs[h * 8 + lane] + cls];
+                        }
+                        a[h] = vaddq_s16(a[h], vals);
+                    }
+                }
+            }
+            for lane in 0..V_RS {
+                let i = base + lane;
+                if i >= n {
+                    break;
+                }
+                for cls in 0..c {
+                    let v = acc[cls][lane / 8].0[lane % 8] as i32 + m.base_i32[cls];
+                    out[i * c + cls] = self.config.dq(v);
+                }
+            }
+            base += V_RS;
+        }
+    }
+
+    fn count_ops(&self, x: &[f32]) -> OpTrace {
+        let mut qx = Vec::new();
+        self.config.q_slice(x, &mut qx);
+        let d = self.m.n_features;
+        let n = x.len() / d;
+        let mut tr = rs_trace_q(&self.m, &qx, n);
+        tr.scalar_fp += (n * d) as u64 * 2;
+        tr.store_bytes += (n * d * 2) as u64;
+        tr
+    }
+
+    fn memory_bytes(&self) -> usize {
+        self.m.memory_bytes()
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Op traces
+// ---------------------------------------------------------------------------
+
+fn rs_trace<V: Copy>(
+    m: &RsModel<f32, V>,
+    x: &[f32],
+    any_gt: impl Fn(&[f32], usize, f32) -> bool,
+    compares_per_group: u64,
+) -> OpTrace {
+    let d = m.n_features;
+    let n = x.len() / d;
+    let c = m.n_classes as u64;
+    let mut tr = OpTrace::new();
+    let mut xt = vec![0f32; d * V_RS];
+    let rows = m.rows() as u64;
+    let mut base = 0usize;
+    while base < n {
+        transpose_rs(x, d, n, base, &mut xt);
+        for k in 0..d {
+            for gi in m.feature_groups(k) {
+                let g = &m.groups[gi];
+                tr.neon_fp += compares_per_group; // vcgtq per sub-register
+                tr.neon_horiz += 3; // narrow/combine chain
+                tr.neon_horiz += 1; // vmaxvq
+                tr.branch += 1;
+                tr.stream_load_bytes += 8; // group record
+                if !any_gt(&xt, k, g.threshold) {
+                    break;
+                }
+                for e in &m.entries[g.entries.start as usize..g.entries.end as usize] {
+                    let len = e.len as u64;
+                    tr.neon_alu += 3 * len; // dup + and + bsl per byte row
+                    tr.stream_load_bytes += 16; // packed entry
+                    tr.store_bytes += 16 * len;
+                }
+            }
+        }
+        // Alg. 4 + score.
+        tr.neon_alu += m.n_trees as u64 * (4 * rows + 3);
+        tr.random_loads += m.n_trees as u64 * V_RS as u64;
+        tr.neon_fp += m.n_trees as u64 * c * 4;
+        tr.store_bytes += m.n_trees as u64 * rows * 16; // leafidx reset
+        tr.scalar_alu += (d * V_RS) as u64; // transpose
+        base += V_RS;
+    }
+    tr
+}
+
+fn rs_trace_q(m: &RsModel<i16, i16>, qx: &[i16], n: usize) -> OpTrace {
+    let d = m.n_features;
+    let c = m.n_classes as u64;
+    let mut tr = OpTrace::new();
+    let mut xt = vec![0i16; d * V_RS];
+    let rows = m.rows() as u64;
+    let mut base = 0usize;
+    while base < n {
+        transpose_rs(qx, d, n, base, &mut xt);
+        for k in 0..d {
+            for gi in m.feature_groups(k) {
+                let g = &m.groups[gi];
+                tr.neon_alu += 2; // 2 × vcgtq_s16 (§5.1)
+                tr.neon_horiz += 2; // narrow + combine (one step fewer)
+                tr.branch += 1;
+                tr.stream_load_bytes += 6;
+                if !(0..V_RS).any(|lane| xt[k * V_RS + lane] > g.threshold) {
+                    break;
+                }
+                for e in &m.entries[g.entries.start as usize..g.entries.end as usize] {
+                    let len = e.len as u64;
+                    tr.neon_alu += 3 * len;
+                    tr.stream_load_bytes += 16;
+                    tr.store_bytes += 16 * len;
+                }
+            }
+        }
+        tr.neon_alu += m.n_trees as u64 * (4 * rows + 3);
+        tr.random_loads += m.n_trees as u64 * V_RS as u64;
+        tr.neon_alu += m.n_trees as u64 * c * 2; // vaddq_s16 pair
+        tr.store_bytes += m.n_trees as u64 * rows * 16;
+        tr.scalar_alu += (d * V_RS) as u64;
+        base += V_RS;
+    }
+    tr
+}
+
+// Re-exported for the ablation bench: a RS variant with merging disabled is
+// constructed by perturbing thresholds so no two are equal; see
+// rust/benches/ablation_rs.rs.
+#[allow(unused)]
+fn _keep(_: fn(u32, u32) -> u64) {}
+const _: () = {
+    let _ = left_range_mask;
+    let _: fn(&crate::quant::QTree) -> Vec<(u32, u32)> = qtree_left_ranges;
+};
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::DatasetId;
+    use crate::forest::builder::{train_random_forest, RfParams, TreeParams};
+    use crate::testing::assert_close;
+
+    fn setup(ds_id: DatasetId, leaves: usize, seed: u64, n: usize) -> (Forest, crate::data::Dataset) {
+        // Train on a bigger sample so max_leaves=64 trees really exceed 32
+        // leaves; evaluation uses the first `n` rows.
+        let ds = ds_id.generate(n.max(900), seed);
+        let f = train_random_forest(
+            &ds.x,
+            &ds.labels,
+            ds.d,
+            ds.n_classes,
+            RfParams {
+                n_trees: 11,
+                tree: TreeParams { max_leaves: leaves, min_samples_leaf: 2, mtry: 0 },
+                seed,
+                ..Default::default()
+            },
+        );
+        (f, ds)
+    }
+
+    #[test]
+    fn rs_matches_reference_l32() {
+        let (f, ds) = setup(DatasetId::Magic, 32, 1, 150); // non-multiple of 16
+        let e = RsEngine::new(&f);
+        let x = &ds.x[..ds.d * 150];
+        assert_close(&e.predict(x), &f.predict_batch(x), 1e-5, 1e-5).unwrap();
+    }
+
+    #[test]
+    fn rs_matches_reference_l64() {
+        let (f, ds) = setup(DatasetId::Magic, 64, 2, 100);
+        assert!(f.max_leaves() > 32);
+        let e = RsEngine::new(&f);
+        let x = &ds.x[..ds.d * 100];
+        assert_close(&e.predict(x), &f.predict_batch(x), 1e-5, 1e-5).unwrap();
+    }
+
+    #[test]
+    fn rs_merging_on_adult() {
+        // Binary features -> heavy merging. With few trees the effect is
+        // smaller than the paper's 128-tree 12%, but must be clearly present.
+        let (f, _) = setup(DatasetId::Adult, 32, 3, 400);
+        let e = RsEngine::new(&f);
+        let total_nodes = f.n_nodes();
+        assert!(
+            (e.model().n_groups() as f64) < 0.8 * total_nodes as f64,
+            "groups {} vs nodes {total_nodes}",
+            e.model().n_groups()
+        );
+    }
+
+    #[test]
+    fn qrs_matches_qforest_l32() {
+        let (f, ds) = setup(DatasetId::Eeg, 32, 4, 77);
+        let qf = QForest::from_forest(&f, QuantConfig::paper_default());
+        let e = QRsEngine::new(&qf);
+        let x = &ds.x[..ds.d * 77];
+        assert_eq!(e.predict(x), qf.predict_batch(x));
+    }
+
+    #[test]
+    fn qrs_matches_qforest_l64() {
+        let (f, ds) = setup(DatasetId::Magic, 64, 5, 49);
+        let qf = QForest::from_forest(&f, QuantConfig::paper_default());
+        let e = QRsEngine::new(&qf);
+        let x = &ds.x[..ds.d * 49];
+        assert_eq!(e.predict(x), qf.predict_batch(x));
+    }
+
+    #[test]
+    fn find_leaf_index_matches_scalar() {
+        // Random bitvectors: Alg. 4 must equal trailing_zeros.
+        let mut rng = crate::util::Pcg32::seeded(8);
+        for _ in 0..200 {
+            let rows_n = if rng.bool(0.5) { 4 } else { 8 };
+            let mut bits = [0u64; 16];
+            let mut rows = vec![U8x16([0; 16]); rows_n];
+            for lane in 0..16 {
+                // Ensure at least one set bit in the valid range.
+                let l = rows_n * 8;
+                let b = rng.below(l);
+                bits[lane] = (rng.next_u64() | (1u64 << b)) & if l == 64 { u64::MAX } else { (1u64 << l) - 1 };
+                let bytes = bits[lane].to_le_bytes();
+                for r in 0..rows_n {
+                    rows[r].0[lane] = bytes[r];
+                }
+            }
+            let leaves = find_leaf_index(&rows);
+            for lane in 0..16 {
+                assert_eq!(
+                    leaves.0[lane] as u32,
+                    bits[lane].trailing_zeros(),
+                    "lane {lane} bits {:#x}",
+                    bits[lane]
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn trace_counts_present() {
+        let (f, ds) = setup(DatasetId::Magic, 32, 6, 32);
+        let e = RsEngine::new(&f);
+        let tr = e.count_ops(&ds.x);
+        assert!(tr.neon_fp > 0 && tr.neon_alu > 0 && tr.neon_horiz > 0);
+    }
+}

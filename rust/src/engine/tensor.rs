@@ -1,0 +1,361 @@
+//! XLA tensor engine: the L1/L2 AOT path exposed as an [`Engine`].
+//!
+//! The forest is encoded into the QuickScorer tensors the Pallas kernel
+//! consumes (same encoding as `python/compile/forest.py::encode_qs`), the
+//! HLO artifact is compiled on the PJRT CPU client, and batches execute as
+//! one tensor call. This mirrors the "compile tree traversal to tensor ops"
+//! line of related work the paper discusses (Nakandala et al. 2020) and lets
+//! the coordinator route between Rust-native traversal and the AOT path.
+//!
+//! Threading: the `xla` crate's client types are `Rc`-based (`!Send`), so a
+//! dedicated worker thread owns the runtime, executable and parameter
+//! literals; the engine facade is a `Send + Sync` channel handle.
+
+use std::sync::mpsc;
+use std::sync::Mutex;
+
+use anyhow::{bail, Context, Result};
+
+use super::Engine;
+use crate::forest::Forest;
+use crate::quant::QuantConfig;
+use crate::runtime::{self, ArtifactDtype, ModelMeta, Runtime};
+
+/// QuickScorer tensor encoding (Rust twin of Python `encode_qs`).
+#[derive(Debug, Clone)]
+pub struct QsTensors {
+    pub thr: Vec<f32>,
+    pub fid: Vec<i32>,
+    pub mask_lo: Vec<u32>,
+    pub mask_hi: Vec<u32>,
+    pub leaves: Vec<f32>,
+    pub m: usize,
+    pub k: usize,
+    pub leaf_words: usize,
+    pub c: usize,
+}
+
+/// Encode a forest into dense `[M, K]` node tensors and a `[M, L, C]` leaf
+/// table, padded to the artifact's static shape `(m_pad, k_pad, l_pad)`.
+pub fn encode_qs_padded(
+    f: &Forest,
+    m_pad: usize,
+    k_pad: usize,
+    l_pad: usize,
+) -> Result<QsTensors> {
+    let max_nodes = f.trees.iter().map(|t| t.nodes.len()).max().unwrap_or(0);
+    if f.n_trees() > m_pad || max_nodes > k_pad || f.max_leaves() > l_pad {
+        bail!(
+            "forest (M={}, K={}, L={}) exceeds artifact shape (M={m_pad}, K={k_pad}, L={l_pad})",
+            f.n_trees(),
+            max_nodes,
+            f.max_leaves()
+        );
+    }
+    let c = f.n_classes;
+    let mut t = QsTensors {
+        thr: vec![f32::INFINITY; m_pad * k_pad],
+        fid: vec![0; m_pad * k_pad],
+        mask_lo: vec![u32::MAX; m_pad * k_pad],
+        mask_hi: vec![u32::MAX; m_pad * k_pad],
+        leaves: vec![0.0; m_pad * l_pad * c],
+        m: m_pad,
+        k: k_pad,
+        leaf_words: l_pad,
+        c,
+    };
+    for (ti, tree) in f.trees.iter().enumerate() {
+        let ranges = tree.left_leaf_ranges();
+        for (ni, (node, &(b, e))) in tree.nodes.iter().zip(&ranges).enumerate() {
+            let idx = ti * k_pad + ni;
+            let mask = super::common::left_range_mask(b, e);
+            t.thr[idx] = node.threshold;
+            t.fid[idx] = node.feature as i32;
+            t.mask_lo[idx] = mask as u32;
+            t.mask_hi[idx] = (mask >> 32) as u32;
+        }
+        let dst = &mut t.leaves[ti * l_pad * c..];
+        dst[..tree.leaf_values.len()].copy_from_slice(&tree.leaf_values);
+    }
+    Ok(t)
+}
+
+enum Job {
+    Predict { x: Vec<f32>, n: usize, reply: mpsc::Sender<Result<Vec<f32>>> },
+    Shutdown,
+}
+
+/// The AOT tensor engine.
+pub struct TensorEngine {
+    tx: Mutex<mpsc::Sender<Job>>,
+    handle: Option<std::thread::JoinHandle<()>>,
+    name: String,
+    n_features: usize,
+    n_classes: usize,
+    batch: usize,
+    base_score: Vec<f32>,
+}
+
+impl TensorEngine {
+    /// Build from an artifact (by manifest name) and the forest to serve.
+    /// The forest must fit the artifact's static shapes.
+    pub fn from_artifact(
+        artifacts_dir: &std::path::Path,
+        model_name: &str,
+        forest: &Forest,
+    ) -> Result<TensorEngine> {
+        let metas = runtime::load_manifest(artifacts_dir)?;
+        let meta = metas
+            .iter()
+            .find(|m| m.name == model_name)
+            .with_context(|| format!("artifact '{model_name}' not in manifest"))?
+            .clone();
+        if forest.n_features != meta.d || forest.n_classes != meta.c {
+            bail!(
+                "forest (d={}, c={}) does not match artifact (d={}, c={})",
+                forest.n_features,
+                forest.n_classes,
+                meta.d,
+                meta.c
+            );
+        }
+        let tensors = encode_qs_padded(forest, meta.n_trees, meta.k, meta.leaf_words)?;
+        let (tx, rx) = mpsc::channel::<Job>();
+        let (init_tx, init_rx) = mpsc::channel::<Result<()>>();
+        let dir = artifacts_dir.to_path_buf();
+        let meta2 = meta.clone();
+        let handle = std::thread::Builder::new()
+            .name(format!("tensor-engine-{model_name}"))
+            .spawn(move || worker(dir, meta2, tensors, rx, init_tx))
+            .context("spawning tensor worker")?;
+        init_rx.recv().context("tensor worker died during init")??;
+        Ok(TensorEngine {
+            tx: Mutex::new(tx),
+            handle: Some(handle),
+            name: format!("XLA:{model_name}"),
+            n_features: meta.d,
+            n_classes: meta.c,
+            batch: meta.batch,
+            base_score: forest.base_score.clone(),
+        })
+    }
+}
+
+/// Worker owning all `!Send` XLA state.
+fn worker(
+    dir: std::path::PathBuf,
+    meta: ModelMeta,
+    t: QsTensors,
+    rx: mpsc::Receiver<Job>,
+    init_tx: mpsc::Sender<Result<()>>,
+) {
+    // --- init ---------------------------------------------------------
+    let setup = (|| -> Result<_> {
+        let rt = Runtime::cpu(&dir)?;
+        let model = rt.load(&meta)?;
+        let quant = QuantConfig { scale: meta.scale };
+        // Parameter literals are built once.
+        let mk = [t.m, t.k];
+        let fid = runtime::lit_i32(&t.fid, &mk)?;
+        let mlo = runtime::lit_u32(&t.mask_lo, &mk)?;
+        let mhi = runtime::lit_u32(&t.mask_hi, &mk)?;
+        let (thr, leaves) = match meta.dtype {
+            ArtifactDtype::F32 => (
+                runtime::lit_f32(&t.thr, &mk)?,
+                runtime::lit_f32(&t.leaves, &[t.m, t.leaf_words, t.c])?,
+            ),
+            ArtifactDtype::I16 => {
+                let qthr: Vec<i16> = t.thr.iter().map(|&v| quant.q(v)).collect();
+                let qleaves: Vec<i16> = t.leaves.iter().map(|&v| quant.q(v)).collect();
+                (
+                    runtime::lit_i16(&qthr, &mk)?,
+                    runtime::lit_i16(&qleaves, &[t.m, t.leaf_words, t.c])?,
+                )
+            }
+        };
+        Ok((rt, model, quant, thr, fid, mlo, mhi, leaves))
+    })();
+    let (_rt, model, quant, thr, fid, mlo, mhi, leaves) = match setup {
+        Ok(v) => {
+            let _ = init_tx.send(Ok(()));
+            v
+        }
+        Err(e) => {
+            let _ = init_tx.send(Err(e));
+            return;
+        }
+    };
+
+    // --- serve ---------------------------------------------------------
+    let b = meta.batch;
+    let d = meta.d;
+    let c = meta.c;
+    while let Ok(job) = rx.recv() {
+        match job {
+            Job::Shutdown => break,
+            Job::Predict { x, n, reply } => {
+                let result = (|| -> Result<Vec<f32>> {
+                    debug_assert_eq!(x.len(), b * d);
+                    let out = match meta.dtype {
+                        ArtifactDtype::F32 => {
+                            let xl = runtime::lit_f32(&x, &[b, d])?;
+                            let lit = model.execute(&[
+                                xl,
+                                thr.clone(),
+                                fid.clone(),
+                                mlo.clone(),
+                                mhi.clone(),
+                                leaves.clone(),
+                            ])?;
+                            lit.to_vec::<f32>()?
+                        }
+                        ArtifactDtype::I16 => {
+                            let qx: Vec<i16> = x.iter().map(|&v| quant.q(v)).collect();
+                            let xl = runtime::lit_i16(&qx, &[b, d])?;
+                            let lit = model.execute(&[
+                                xl,
+                                thr.clone(),
+                                fid.clone(),
+                                mlo.clone(),
+                                mhi.clone(),
+                                leaves.clone(),
+                            ])?;
+                            lit.to_vec::<i32>()?.iter().map(|&v| quant.dq(v)).collect()
+                        }
+                    };
+                    Ok(out[..n * c].to_vec())
+                })();
+                let _ = reply.send(result);
+            }
+        }
+    }
+}
+
+impl Drop for TensorEngine {
+    fn drop(&mut self) {
+        if let Ok(tx) = self.tx.lock() {
+            let _ = tx.send(Job::Shutdown);
+        }
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Engine for TensorEngine {
+    fn name(&self) -> String {
+        self.name.clone()
+    }
+
+    fn lanes(&self) -> usize {
+        self.batch
+    }
+
+    fn n_features(&self) -> usize {
+        self.n_features
+    }
+
+    fn n_classes(&self) -> usize {
+        self.n_classes
+    }
+
+    fn predict_batch(&self, x: &[f32], out: &mut [f32]) {
+        let d = self.n_features;
+        let c = self.n_classes;
+        let n = x.len() / d;
+        let b = self.batch;
+        let mut base = 0usize;
+        while base < n {
+            let chunk = (n - base).min(b);
+            // Pad the chunk to the artifact's static batch.
+            let mut xb = vec![0f32; b * d];
+            xb[..chunk * d].copy_from_slice(&x[base * d..(base + chunk) * d]);
+            let (reply_tx, reply_rx) = mpsc::channel();
+            {
+                let tx = self.tx.lock().expect("tensor engine poisoned");
+                tx.send(Job::Predict { x: xb, n: chunk, reply: reply_tx })
+                    .expect("tensor worker gone");
+            }
+            let scores = reply_rx
+                .recv()
+                .expect("tensor worker gone")
+                .expect("tensor execution failed");
+            for i in 0..chunk {
+                for cls in 0..c {
+                    out[(base + i) * c + cls] = scores[i * c + cls] + self.base_score[cls];
+                }
+            }
+            base += chunk;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::forest::io::load;
+
+    fn artifacts() -> std::path::PathBuf {
+        std::path::PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+    }
+
+    fn have_artifacts() -> bool {
+        artifacts().join("manifest.json").exists()
+    }
+
+    #[test]
+    fn tensor_engine_matches_rust_reference() {
+        if !have_artifacts() {
+            eprintln!("skipping: artifacts not built");
+            return;
+        }
+        // Load the same fixture forest the artifact was compiled against.
+        let metas = runtime::load_manifest(&artifacts()).unwrap();
+        let meta = metas.iter().find(|m| m.name == "rf_f32_b64").unwrap();
+        let forest = load(&artifacts().join(&meta.forest)).unwrap();
+        let eng = TensorEngine::from_artifact(&artifacts(), "rf_f32_b64", &forest).unwrap();
+
+        let mut rng = crate::util::Pcg32::seeded(77);
+        let n = 100; // non-multiple of the artifact batch
+        let x: Vec<f32> = (0..n * forest.n_features).map(|_| rng.f32()).collect();
+        let got = eng.predict(&x);
+        let want = forest.predict_batch(&x);
+        crate::testing::assert_close(&got, &want, 1e-4, 1e-4).unwrap();
+    }
+
+    #[test]
+    fn tensor_engine_i16_close_to_quant_reference() {
+        if !have_artifacts() {
+            eprintln!("skipping: artifacts not built");
+            return;
+        }
+        let metas = runtime::load_manifest(&artifacts()).unwrap();
+        let meta = metas.iter().find(|m| m.name == "rf_i16_b64").unwrap();
+        let forest = load(&artifacts().join(&meta.forest)).unwrap();
+        let eng = TensorEngine::from_artifact(&artifacts(), "rf_i16_b64", &forest).unwrap();
+
+        let qf = crate::quant::QForest::from_forest(
+            &forest,
+            crate::quant::QuantConfig { scale: meta.scale },
+        );
+        let mut rng = crate::util::Pcg32::seeded(78);
+        let n = 64;
+        let x: Vec<f32> = (0..n * forest.n_features).map(|_| rng.f32()).collect();
+        let got = eng.predict(&x);
+        let want = qf.predict_batch(&x);
+        crate::testing::assert_close(&got, &want, 1e-4, 1e-4).unwrap();
+    }
+
+    #[test]
+    fn rejects_oversized_forest() {
+        // A forest with more trees than the pad must fail.
+        let mut f2 = crate::forest::Forest::new(2, 1, crate::forest::Task::Ranking);
+        for _ in 0..5 {
+            f2.trees.push(crate::forest::Tree::leaf(vec![0.0]));
+        }
+        assert!(encode_qs_padded(&f2, 4, 4, 32).is_err());
+        // An empty forest fits anything.
+        let f = crate::forest::Forest::new(9, 2, crate::forest::Task::Classification);
+        assert!(encode_qs_padded(&f, 4, 4, 32).is_ok());
+    }
+}

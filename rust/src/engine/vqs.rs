@@ -1,0 +1,613 @@
+//! VQS — V-QuickScorer (Lucchese et al. 2016) on ARM NEON (paper §4.1, §5.1).
+//!
+//! The mask-computation loop of QuickScorer is vectorized over instances:
+//! one NEON register holds the same feature of `v` instances, one compare
+//! (`vcgtq_f32` / `vcgtq_s16`) tests them against the node threshold, and the
+//! node's bitvector mask is applied per-lane with `vandq` + `vbslq`
+//! (Algorithm 2 lines 9–16). With NEON's 128-bit registers:
+//!
+//! * float32 → **v = 4** instances;
+//! * int16 fixed-point → **v = 8** instances (§5.1) — masks are widened to
+//!   the 32/64-bit bitvector lanes via the `vget_low/high` + `vmovl` chain.
+//!
+//! The feature scan `break`s only when *every* lane is a true node
+//! (`mask == 0`), so vectorized traversal can visit more nodes than scalar
+//! QS for divergent instances — the price of lockstep execution.
+
+use super::common::QsModel;
+use super::Engine;
+use crate::forest::Forest;
+use crate::neon::*;
+use crate::quant::{QForest, QuantConfig};
+
+/// Transpose `v` rows of `x` (row-major, `d` columns) starting at `base`
+/// into feature-major `xt[k*v + lane]`. Rows beyond `n` replicate row
+/// `n - 1` (tail padding; outputs for padded lanes are discarded).
+fn transpose_block<T: Copy>(x: &[T], d: usize, n: usize, base: usize, v: usize, xt: &mut [T]) {
+    for lane in 0..v {
+        let i = (base + lane).min(n - 1);
+        let row = &x[i * d..(i + 1) * d];
+        for k in 0..d {
+            xt[k * v + lane] = row[k];
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Float VQS (v = 4)
+// ---------------------------------------------------------------------------
+
+/// Float V-QuickScorer.
+pub struct VqsEngine {
+    m: QsModel<f32, f32>,
+}
+
+impl VqsEngine {
+    pub fn new(f: &Forest) -> VqsEngine {
+        VqsEngine { m: QsModel::from_forest(f) }
+    }
+}
+
+pub(crate) const V_F32: usize = 4;
+
+impl Engine for VqsEngine {
+    fn name(&self) -> String {
+        "VQS".into()
+    }
+
+    fn lanes(&self) -> usize {
+        V_F32
+    }
+
+    fn n_features(&self) -> usize {
+        self.m.n_features
+    }
+
+    fn n_classes(&self) -> usize {
+        self.m.n_classes
+    }
+
+    fn predict_batch(&self, x: &[f32], out: &mut [f32]) {
+        let m = &self.m;
+        let d = m.n_features;
+        let n = x.len() / d;
+        let mut xt = vec![0f32; d * V_F32];
+        // leafidx: per tree, 4 lanes of u32 (L<=32) or u64 (L<=64).
+        let mut idx32 = vec![U32x4([0; 4]); if m.leaf_words == 32 { m.n_trees } else { 0 }];
+        let mut idx64 = vec![[U64x2([0; 2]); 2]; if m.leaf_words == 64 { m.n_trees } else { 0 }];
+
+        let mut base = 0usize;
+        while base < n {
+            transpose_block(x, d, n, base, V_F32, &mut xt);
+            if m.leaf_words == 32 {
+                self.block32(&xt, &mut idx32, out, base, n);
+            } else {
+                self.block64(&xt, &mut idx64, out, base, n);
+            }
+            base += V_F32;
+        }
+    }
+
+    fn count_ops(&self, x: &[f32]) -> OpTrace {
+        vqs_trace_f32(&self.m, x)
+    }
+
+    fn memory_bytes(&self) -> usize {
+        self.m.memory_bytes()
+    }
+}
+
+impl VqsEngine {
+    /// Mask + score computation for one block of 4 instances, L ≤ 32.
+    fn block32(&self, xt: &[f32], leafidx: &mut [U32x4], out: &mut [f32], base: usize, n: usize) {
+        let m = &self.m;
+        leafidx.fill(vdupq_n_u32(u32::MAX));
+        // {Mask Computation} — Alg. 2 lines 7-21.
+        for k in 0..m.n_features {
+            let r = m.feature_range(k);
+            if r.is_empty() {
+                continue;
+            }
+            let xv = vld1q_f32(&xt[k * V_F32..]);
+            let ths = &m.thresholds[r.clone()];
+            let trees = &m.tree_ids[r.clone()];
+            let masks = &m.masks[r];
+            for ((&t, &tree), &mk) in ths.iter().zip(trees).zip(masks) {
+                let gamma = vdupq_n_f32(t);
+                let mask = vcgtq_f32(xv, gamma);
+                if vmaxvq_u32(mask) == 0 {
+                    break;
+                }
+                let tree = tree as usize;
+                let mvec = vdupq_n_u32(mk as u32);
+                let b = leafidx[tree];
+                let y = vandq_u32(mvec, b);
+                leafidx[tree] = vbslq_u32(mask, y, b);
+            }
+        }
+        self.score32(leafidx, out, base, n);
+    }
+
+    /// Score computation (Alg. 2 lines 22-31) for L ≤ 32.
+    fn score32(&self, leafidx: &[U32x4], out: &mut [f32], base: usize, n: usize) {
+        let m = &self.m;
+        let c = m.n_classes;
+        // Per-class SIMD accumulators over the 4 lanes (§4.2 transposed
+        // score layout).
+        let mut acc = vec![F32x4([0.0; 4]); c];
+        for (ti, idx) in leafidx.iter().enumerate() {
+            // Leaf-row offsets once per tree.
+            let mut offs = [0usize; V_F32];
+            for (lane, o) in offs.iter_mut().enumerate() {
+                let j = vgetq_lane_u32(*idx, lane).trailing_zeros() as usize;
+                *o = (ti * m.leaf_words + j) * c;
+            }
+            for (cls, a) in acc.iter_mut().enumerate() {
+                let vals = F32x4([
+                    m.leaf_values[offs[0] + cls],
+                    m.leaf_values[offs[1] + cls],
+                    m.leaf_values[offs[2] + cls],
+                    m.leaf_values[offs[3] + cls],
+                ]);
+                *a = vaddq_f32(*a, vals);
+            }
+        }
+        write_scores_f32(&acc, &m.base_f32, out, base, n, c);
+    }
+
+    /// Mask + score computation for one block of 4 instances, L ≤ 64:
+    /// the u32 compare mask is widened to two u64-lane registers.
+    fn block64(
+        &self,
+        xt: &[f32],
+        leafidx: &mut [[U64x2; 2]],
+        out: &mut [f32],
+        base: usize,
+        n: usize,
+    ) {
+        let m = &self.m;
+        leafidx.fill([vdupq_n_u64(u64::MAX); 2]);
+        for k in 0..m.n_features {
+            let r = m.feature_range(k);
+            if r.is_empty() {
+                continue;
+            }
+            let xv = vld1q_f32(&xt[k * V_F32..]);
+            let ths = &m.thresholds[r.clone()];
+            let trees = &m.tree_ids[r.clone()];
+            let masks = &m.masks[r];
+            for ((&t, &tree), &mk) in ths.iter().zip(trees).zip(masks) {
+                let gamma = vdupq_n_f32(t);
+                let mask = vcgtq_f32(xv, gamma);
+                if vmaxvq_u32(mask) == 0 {
+                    break;
+                }
+                // Widen 4×u32 mask → 2 × (2×u64) — the §5.1 extension chain.
+                let mlo = vmovl_mask_u32(vget_low_u32(mask));
+                let mhi = vmovl_mask_u32(vget_high_u32(mask));
+                let tree = tree as usize;
+                let mvec = vdupq_n_u64(mk);
+                let [b0, b1] = leafidx[tree];
+                let y0 = vandq_u64(mvec, b0);
+                let y1 = vandq_u64(mvec, b1);
+                leafidx[tree] = [vbslq_u64(mlo, y0, b0), vbslq_u64(mhi, y1, b1)];
+            }
+        }
+        // Score computation.
+        let c = m.n_classes;
+        let mut acc = vec![F32x4([0.0; 4]); c];
+        for (ti, regs) in leafidx.iter().enumerate() {
+            let mut js = [0usize; 4];
+            for lane in 0..2 {
+                js[lane] = vgetq_lane_u64(regs[0], lane).trailing_zeros() as usize;
+                js[2 + lane] = vgetq_lane_u64(regs[1], lane).trailing_zeros() as usize;
+            }
+            for cls in 0..c {
+                let mut vals = F32x4([0.0; 4]);
+                for lane in 0..V_F32 {
+                    vals = vsetq_lane_f32(self.m.leaf_row(ti, js[lane])[cls], vals, lane);
+                }
+                acc[cls] = vaddq_f32(acc[cls], vals);
+            }
+        }
+        write_scores_f32(&acc, &m.base_f32, out, base, n, c);
+    }
+}
+
+fn write_scores_f32(
+    acc: &[F32x4],
+    base_score: &[f32],
+    out: &mut [f32],
+    base: usize,
+    n: usize,
+    c: usize,
+) {
+    for lane in 0..V_F32 {
+        let i = base + lane;
+        if i >= n {
+            break; // padded tail lane
+        }
+        for cls in 0..c {
+            out[i * c + cls] = acc[cls].0[lane] + base_score[cls];
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Quantized VQS (v = 8, int16)
+// ---------------------------------------------------------------------------
+
+/// Quantized V-QuickScorer: 8 instances per block (§5.1).
+pub struct QVqsEngine {
+    m: QsModel<i16, i16>,
+    config: QuantConfig,
+}
+
+pub(crate) const V_I16: usize = 8;
+
+impl QVqsEngine {
+    pub fn new(qf: &QForest) -> QVqsEngine {
+        QVqsEngine { m: QsModel::from_qforest(qf), config: qf.config }
+    }
+}
+
+impl Engine for QVqsEngine {
+    fn name(&self) -> String {
+        "qVQS".into()
+    }
+
+    fn lanes(&self) -> usize {
+        V_I16
+    }
+
+    fn n_features(&self) -> usize {
+        self.m.n_features
+    }
+
+    fn n_classes(&self) -> usize {
+        self.m.n_classes
+    }
+
+    fn predict_batch(&self, x: &[f32], out: &mut [f32]) {
+        let m = &self.m;
+        let d = m.n_features;
+        let c = m.n_classes;
+        let n = x.len() / d;
+        let mut qx = Vec::with_capacity(x.len());
+        self.config.q_slice(x, &mut qx);
+        let mut xt = vec![0i16; d * V_I16];
+        let mut idx32 = vec![[U32x4([0; 4]); 2]; if m.leaf_words == 32 { m.n_trees } else { 0 }];
+        let mut idx64 = vec![[U64x2([0; 2]); 4]; if m.leaf_words == 64 { m.n_trees } else { 0 }];
+
+        let mut base = 0usize;
+        while base < n {
+            transpose_block(&qx, d, n, base, V_I16, &mut xt);
+            if m.leaf_words == 32 {
+                self.block32(&xt, &mut idx32, out, base, n, c);
+            } else {
+                self.block64(&xt, &mut idx64, out, base, n, c);
+            }
+            base += V_I16;
+        }
+    }
+
+    fn count_ops(&self, x: &[f32]) -> OpTrace {
+        let mut qx = Vec::new();
+        self.config.q_slice(x, &mut qx);
+        let d = self.m.n_features;
+        let n = x.len() / d;
+        let mut tr = vqs_trace_i16(&self.m, &qx, n);
+        tr.scalar_fp += (n * d) as u64 * 2;
+        tr.store_bytes += (n * d * 2) as u64;
+        tr
+    }
+
+    fn memory_bytes(&self) -> usize {
+        self.m.memory_bytes()
+    }
+}
+
+impl QVqsEngine {
+    /// L ≤ 32: each tree's 8 lanes live in two u32x4 registers; the i16
+    /// compare mask widens through `vmovl_s16` (§5.1).
+    fn block32(
+        &self,
+        xt: &[i16],
+        leafidx: &mut [[U32x4; 2]],
+        out: &mut [f32],
+        base: usize,
+        n: usize,
+        c: usize,
+    ) {
+        let m = &self.m;
+        leafidx.fill([vdupq_n_u32(u32::MAX); 2]);
+        for k in 0..m.n_features {
+            let r = m.feature_range(k);
+            if r.is_empty() {
+                continue;
+            }
+            let xv = vld1q_s16(&xt[k * V_I16..]);
+            let ths = &m.thresholds[r.clone()];
+            let trees = &m.tree_ids[r.clone()];
+            let masks = &m.masks[r];
+            for ((&t, &tree), &mk) in ths.iter().zip(trees).zip(masks) {
+                let gamma = vdupq_n_s16(t);
+                let mask = vcgtq_s16(xv, gamma);
+                if vmaxvq_u16(mask) == 0 {
+                    break;
+                }
+                let mi = vreinterpretq_s16_u16(mask);
+                let mlo = vreinterpretq_u32_s32(vmovl_s16(vget_low_s16(mi)));
+                let mhi = vreinterpretq_u32_s32(vmovl_s16(vget_high_s16(mi)));
+                let tree = tree as usize;
+                let mvec = vdupq_n_u32(mk as u32);
+                let [b0, b1] = leafidx[tree];
+                leafidx[tree] = [
+                    vbslq_u32(mlo, vandq_u32(mvec, b0), b0),
+                    vbslq_u32(mhi, vandq_u32(mvec, b1), b1),
+                ];
+            }
+        }
+        // Score: per-class i16 accumulation over 8 lanes (vaddq_s16 —
+        // "adding eight 16 bit values at once", §5.1).
+        let mut acc = vec![I16x8([0; 8]); c];
+        for (ti, regs) in leafidx.iter().enumerate() {
+            let mut vals = vec![I16x8([0; 8]); c];
+            for lane in 0..V_I16 {
+                let word = vgetq_lane_u32(regs[lane / 4], lane % 4);
+                let j = word.trailing_zeros() as usize;
+                let row = m.leaf_row(ti, j);
+                for cls in 0..c {
+                    vals[cls].0[lane] = row[cls];
+                }
+            }
+            for cls in 0..c {
+                acc[cls] = vaddq_s16(acc[cls], vals[cls]);
+            }
+        }
+        self.write_scores(&acc, out, base, n, c);
+    }
+
+    /// L ≤ 64: four u64x2 registers per tree; the mask widens twice
+    /// (s16 → s32 → s64, §5.1).
+    fn block64(
+        &self,
+        xt: &[i16],
+        leafidx: &mut [[U64x2; 4]],
+        out: &mut [f32],
+        base: usize,
+        n: usize,
+        c: usize,
+    ) {
+        let m = &self.m;
+        leafidx.fill([vdupq_n_u64(u64::MAX); 4]);
+        for k in 0..m.n_features {
+            let r = m.feature_range(k);
+            if r.is_empty() {
+                continue;
+            }
+            let xv = vld1q_s16(&xt[k * V_I16..]);
+            let ths = &m.thresholds[r.clone()];
+            let trees = &m.tree_ids[r.clone()];
+            let masks = &m.masks[r];
+            for ((&t, &tree), &mk) in ths.iter().zip(trees).zip(masks) {
+                let gamma = vdupq_n_s16(t);
+                let mask = vcgtq_s16(xv, gamma);
+                if vmaxvq_u16(mask) == 0 {
+                    break;
+                }
+                let mi = vreinterpretq_s16_u16(mask);
+                let m32 = [
+                    vmovl_s16(vget_low_s16(mi)),
+                    vmovl_s16(vget_high_s16(mi)),
+                ];
+                let tree = tree as usize;
+                let mvec = vdupq_n_u64(mk);
+                let regs = leafidx[tree];
+                let mut next = regs;
+                for half in 0..2 {
+                    let lo64 = vreinterpretq_u64_s64(vmovl_s32(vget_low_s32(m32[half])));
+                    let hi64 = vreinterpretq_u64_s64(vmovl_s32(vget_high_s32(m32[half])));
+                    let b0 = regs[half * 2];
+                    let b1 = regs[half * 2 + 1];
+                    next[half * 2] = vbslq_u64(lo64, vandq_u64(mvec, b0), b0);
+                    next[half * 2 + 1] = vbslq_u64(hi64, vandq_u64(mvec, b1), b1);
+                }
+                leafidx[tree] = next;
+            }
+        }
+        let mut acc = vec![I16x8([0; 8]); c];
+        for (ti, regs) in leafidx.iter().enumerate() {
+            let mut vals = vec![I16x8([0; 8]); c];
+            for lane in 0..V_I16 {
+                let word = vgetq_lane_u64(regs[lane / 2], lane % 2);
+                let j = word.trailing_zeros() as usize;
+                let row = m.leaf_row(ti, j);
+                for cls in 0..c {
+                    vals[cls].0[lane] = row[cls];
+                }
+            }
+            for cls in 0..c {
+                acc[cls] = vaddq_s16(acc[cls], vals[cls]);
+            }
+        }
+        self.write_scores(&acc, out, base, n, c);
+    }
+
+    fn write_scores(&self, acc: &[I16x8], out: &mut [f32], base: usize, n: usize, c: usize) {
+        for lane in 0..V_I16 {
+            let i = base + lane;
+            if i >= n {
+                break;
+            }
+            for cls in 0..c {
+                let total = self.m.base_i32[cls] + acc[cls].0[lane] as i32;
+                out[i * c + cls] = self.config.dq(total);
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Op traces
+// ---------------------------------------------------------------------------
+
+/// Nodes visited per feature for a block: scan until *all* lanes are true
+/// nodes (the vectorized break condition).
+fn block_visits<T: Copy + PartialOrd>(
+    m: &QsModel<T, impl Copy>,
+    xt: &[T],
+    v: usize,
+) -> (u64, u64) {
+    let mut visited = 0u64;
+    let mut applied = 0u64;
+    for k in 0..m.n_features {
+        for idx in m.feature_range(k) {
+            visited += 1;
+            let any = (0..v).any(|lane| xt[k * v + lane] > m.thresholds[idx]);
+            if any {
+                applied += 1;
+            } else {
+                break;
+            }
+        }
+    }
+    (visited, applied)
+}
+
+fn vqs_trace_f32(m: &QsModel<f32, f32>, x: &[f32]) -> OpTrace {
+    let d = m.n_features;
+    let n = x.len() / d;
+    let c = m.n_classes as u64;
+    let mut tr = OpTrace::new();
+    let mut xt = vec![0f32; d * V_F32];
+    let regs_per_tree = if m.leaf_words == 32 { 1 } else { 2 };
+    let mut base = 0;
+    while base < n {
+        transpose_block(x, d, n, base, V_F32, &mut xt);
+        let (visited, applied) = block_visits(m, &xt, V_F32);
+        tr.stream_load_bytes += visited * m.node_entry_bytes();
+        tr.neon_fp += visited; // vcgtq_f32
+        tr.neon_horiz += visited; // vmaxvq
+        tr.branch += visited;
+        tr.neon_alu += applied * (2 * regs_per_tree + 1); // dup + and + bsl
+        tr.store_bytes += 16 * regs_per_tree * m.n_trees as u64; // leafidx init
+        // Scores.
+        tr.scalar_alu += m.n_trees as u64 * V_F32 as u64; // tz + extracts
+        tr.random_loads += m.n_trees as u64 * V_F32 as u64;
+        tr.neon_fp += m.n_trees as u64 * c;
+        // Transpose.
+        tr.scalar_alu += (d * V_F32) as u64;
+        base += V_F32;
+    }
+    tr
+}
+
+fn vqs_trace_i16(m: &QsModel<i16, i16>, qx: &[i16], n: usize) -> OpTrace {
+    let d = m.n_features;
+    let c = m.n_classes as u64;
+    let mut tr = OpTrace::new();
+    let mut xt = vec![0i16; d * V_I16];
+    let regs_per_tree: u64 = if m.leaf_words == 32 { 2 } else { 4 };
+    let mut base = 0;
+    while base < n {
+        transpose_block(qx, d, n, base, V_I16, &mut xt);
+        let (visited, applied) = block_visits(m, &xt, V_I16);
+        tr.stream_load_bytes += visited * m.node_entry_bytes();
+        tr.neon_alu += visited; // vcgtq_s16 (integer pipe)
+        tr.neon_horiz += visited; // vmaxvq + widening
+        tr.branch += visited;
+        tr.neon_horiz += applied * regs_per_tree; // vmovl widen chain
+        tr.neon_alu += applied * (2 * regs_per_tree + 1);
+        tr.store_bytes += 16 * regs_per_tree * m.n_trees as u64;
+        tr.scalar_alu += m.n_trees as u64 * V_I16 as u64;
+        tr.random_loads += m.n_trees as u64 * V_I16 as u64;
+        tr.neon_alu += m.n_trees as u64 * c; // vaddq_s16
+        tr.scalar_alu += (d * V_I16) as u64;
+        base += V_I16;
+    }
+    tr
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::DatasetId;
+    use crate::forest::builder::{train_random_forest, RfParams, TreeParams};
+    use crate::testing::assert_close;
+
+    fn setup(leaves: usize, seed: u64, n: usize) -> (Forest, crate::data::Dataset) {
+        // Train on a bigger sample so max_leaves=64 trees really exceed 32
+        // leaves; evaluate on the first `n` rows.
+        let ds = DatasetId::Magic.generate(n.max(900), seed);
+        let f = train_random_forest(
+            &ds.x,
+            &ds.labels,
+            ds.d,
+            ds.n_classes,
+            RfParams {
+                n_trees: 13,
+                tree: TreeParams { max_leaves: leaves, min_samples_leaf: 2, mtry: 0 },
+                seed,
+                ..Default::default()
+            },
+        );
+        (f, ds)
+    }
+
+    #[test]
+    fn vqs_matches_reference_l32() {
+        let (f, ds) = setup(32, 1, 203); // non-multiple of 4: tests padding
+        let e = VqsEngine::new(&f);
+        let x = &ds.x[..ds.d * 203];
+        assert_close(&e.predict(x), &f.predict_batch(x), 1e-5, 1e-5).unwrap();
+    }
+
+    #[test]
+    fn vqs_matches_reference_l64() {
+        let (f, ds) = setup(64, 2, 120);
+        assert!(f.max_leaves() > 32);
+        let e = VqsEngine::new(&f);
+        let x = &ds.x[..ds.d * 119];
+        assert_close(&e.predict(x), &f.predict_batch(x), 1e-5, 1e-5).unwrap();
+    }
+
+    #[test]
+    fn qvqs_matches_qforest_l32() {
+        let (f, ds) = setup(32, 3, 101); // non-multiple of 8
+        let qf = QForest::from_forest(&f, QuantConfig::paper_default());
+        let e = QVqsEngine::new(&qf);
+        let x = &ds.x[..ds.d * 101];
+        assert_eq!(e.predict(x), qf.predict_batch(x));
+    }
+
+    #[test]
+    fn qvqs_matches_qforest_l64() {
+        let (f, ds) = setup(64, 4, 96);
+        let qf = QForest::from_forest(&f, QuantConfig::paper_default());
+        let e = QVqsEngine::new(&qf);
+        let x = &ds.x[..ds.d * 93]; // non-multiple of 8
+        assert_eq!(e.predict(x), qf.predict_batch(x));
+    }
+
+    #[test]
+    fn single_instance_batch() {
+        let (f, ds) = setup(32, 5, 40);
+        let e = VqsEngine::new(&f);
+        let got = e.predict(&ds.x[..ds.d]);
+        let want = f.predict_batch(&ds.x[..ds.d]);
+        assert_close(&got, &want, 1e-5, 1e-5).unwrap();
+    }
+
+    #[test]
+    fn traces_present() {
+        let (f, ds) = setup(32, 6, 32);
+        let e = VqsEngine::new(&f);
+        let tr = e.count_ops(&ds.x);
+        assert!(tr.neon_fp > 0 && tr.neon_alu > 0);
+        let qf = QForest::from_forest(&f, QuantConfig::paper_default());
+        let qe = QVqsEngine::new(&qf);
+        let qtr = qe.count_ops(&ds.x);
+        assert!(qtr.neon_alu > 0);
+    }
+}

@@ -1,0 +1,779 @@
+//! Forest trainers: CART, Random Forest, gradient-boosted trees.
+//!
+//! The paper trains its models with scikit-learn (Random Forests for
+//! classification) and XGBoost (gradient-boosted trees for MSN ranking); this
+//! module provides equivalent from-scratch trainers, since only the
+//! *pre-trained model artifact* matters for inference benchmarking
+//! (DESIGN.md §1 "Substitutions").
+//!
+//! Trees are grown **best-first** (highest impurity decrease next), bounded
+//! by `max_leaves` — the same growth strategy as scikit-learn's
+//! `max_leaf_nodes` and LightGBM's `num_leaves`, and the one that produces the
+//! paper's "at most {32, 64} leaves" forests. Split thresholds are midpoints
+//! between consecutive distinct feature values, so threshold distributions
+//! (and therefore RapidScorer node-merging behaviour, Table 4) match
+//! exact-split trainers rather than histogram-binned ones.
+
+use super::tree::{Child, Node, Tree};
+use super::{Forest, Task};
+use crate::util::Pcg32;
+
+/// Per-tree growth parameters.
+#[derive(Debug, Clone, Copy)]
+pub struct TreeParams {
+    /// Maximum number of leaves (best-first growth stops here).
+    pub max_leaves: usize,
+    /// Minimum samples on each side of a split.
+    pub min_samples_leaf: usize,
+    /// Number of candidate features per split; `0` means all features
+    /// (boosting default). Random Forests use `sqrt(d)`.
+    pub mtry: usize,
+}
+
+impl Default for TreeParams {
+    fn default() -> Self {
+        TreeParams { max_leaves: 64, min_samples_leaf: 1, mtry: 0 }
+    }
+}
+
+/// Random-Forest training parameters.
+#[derive(Debug, Clone, Copy)]
+pub struct RfParams {
+    pub n_trees: usize,
+    pub tree: TreeParams,
+    /// Bootstrap sample size as a fraction of N.
+    pub bootstrap_frac: f64,
+    pub seed: u64,
+}
+
+impl Default for RfParams {
+    fn default() -> Self {
+        RfParams { n_trees: 128, tree: TreeParams::default(), bootstrap_frac: 1.0, seed: 0x5eed }
+    }
+}
+
+/// Gradient-boosting parameters (squared loss, pointwise — the setup the
+/// paper's MSN ranking forests approximate).
+#[derive(Debug, Clone, Copy)]
+pub struct GbtParams {
+    pub n_trees: usize,
+    pub tree: TreeParams,
+    pub learning_rate: f32,
+    /// Row subsample per boosting round (stochastic gradient boosting).
+    pub subsample: f64,
+    pub seed: u64,
+}
+
+impl Default for GbtParams {
+    fn default() -> Self {
+        GbtParams {
+            n_trees: 100,
+            tree: TreeParams { max_leaves: 64, min_samples_leaf: 1, mtry: 0 },
+            learning_rate: 0.1,
+            subsample: 1.0,
+            seed: 0xb005,
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// CART (single tree, best-first)
+// ---------------------------------------------------------------------------
+
+/// Node in the growth arena (pre leaf-renumbering).
+enum Grown {
+    Leaf { value: Vec<f32> },
+    Split { feature: u32, threshold: f32, left: usize, right: usize },
+}
+
+struct Candidate {
+    arena_slot: usize,
+    samples: Vec<u32>,
+    gain: f64,
+    feature: u32,
+    threshold: f32,
+}
+
+/// Target abstraction so one grower serves both gini classification and
+/// mse regression.
+trait Target {
+    /// Leaf prediction vector for the given samples.
+    fn leaf_value(&self, samples: &[u32]) -> Vec<f32>;
+    /// Impurity * n for the given samples (so gain = parent - left - right).
+    /// Exposed for diagnostics; split search uses the fused incremental
+    /// version in `best_split`.
+    #[allow(dead_code)]
+    fn weighted_impurity(&self, samples: &[u32]) -> f64;
+    /// Best split of `samples` on `feature`: returns (gain, threshold).
+    fn best_split(&self, xcol: impl Fn(u32) -> f32, samples: &[u32], min_leaf: usize)
+        -> Option<(f64, f32)>;
+}
+
+/// Gini-impurity classification target; leaf value = class distribution
+/// scaled by `leaf_scale` (RF pre-scales the 1/M vote weight into leaves).
+struct GiniTarget<'a> {
+    labels: &'a [u32],
+    n_classes: usize,
+    leaf_scale: f32,
+}
+
+impl Target for GiniTarget<'_> {
+    fn leaf_value(&self, samples: &[u32]) -> Vec<f32> {
+        let mut counts = vec![0f64; self.n_classes];
+        for &s in samples {
+            counts[self.labels[s as usize] as usize] += 1.0;
+        }
+        let total = samples.len() as f64;
+        counts.iter().map(|&c| (c / total) as f32 * self.leaf_scale).collect()
+    }
+
+    fn weighted_impurity(&self, samples: &[u32]) -> f64 {
+        let mut counts = vec![0f64; self.n_classes];
+        for &s in samples {
+            counts[self.labels[s as usize] as usize] += 1.0;
+        }
+        let n = samples.len() as f64;
+        let sq: f64 = counts.iter().map(|c| c * c).sum();
+        n - sq / n // n * gini
+    }
+
+    fn best_split(
+        &self,
+        xcol: impl Fn(u32) -> f32,
+        samples: &[u32],
+        min_leaf: usize,
+    ) -> Option<(f64, f32)> {
+        let n = samples.len();
+        let mut vals: Vec<(f32, u32)> =
+            samples.iter().map(|&s| (xcol(s), self.labels[s as usize])).collect();
+        vals.sort_unstable_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
+
+        let mut total = vec![0f64; self.n_classes];
+        for &(_, l) in &vals {
+            total[l as usize] += 1.0;
+        }
+        let total_sq: f64 = total.iter().map(|c| c * c).sum();
+        let parent = n as f64 - total_sq / n as f64;
+
+        let mut left = vec![0f64; self.n_classes];
+        let mut left_sq = 0f64;
+        let mut best: Option<(f64, f32)> = None;
+        for i in 0..n - 1 {
+            let l = vals[i].1 as usize;
+            // Incremental sum-of-squares update.
+            left_sq += 2.0 * left[l] + 1.0;
+            left[l] += 1.0;
+            if vals[i].0 == vals[i + 1].0 {
+                continue; // can't split between equal values
+            }
+            let nl = (i + 1) as f64;
+            let nr = (n - i - 1) as f64;
+            if (i + 1) < min_leaf || (n - i - 1) < min_leaf {
+                continue;
+            }
+            // right counts sq = sum (total-left)^2 = total_sq - 2*dot + left_sq
+            let dot: f64 = total.iter().zip(&left).map(|(t, l)| t * l).sum();
+            let right_sq = total_sq - 2.0 * dot + left_sq;
+            let child = nl - left_sq / nl + nr - right_sq / nr;
+            let gain = parent - child;
+            let thr = midpoint(vals[i].0, vals[i + 1].0);
+            if best.map_or(true, |(g, _)| gain > g) {
+                best = Some((gain, thr));
+            }
+        }
+        best.filter(|&(g, _)| g > 1e-12)
+    }
+}
+
+/// Variance-reduction regression target (squared loss); leaf value =
+/// `leaf_scale * mean(target)`.
+struct MseTarget<'a> {
+    y: &'a [f32],
+    leaf_scale: f32,
+}
+
+impl Target for MseTarget<'_> {
+    fn leaf_value(&self, samples: &[u32]) -> Vec<f32> {
+        let sum: f64 = samples.iter().map(|&s| self.y[s as usize] as f64).sum();
+        vec![(sum / samples.len() as f64) as f32 * self.leaf_scale]
+    }
+
+    fn weighted_impurity(&self, samples: &[u32]) -> f64 {
+        let n = samples.len() as f64;
+        let sum: f64 = samples.iter().map(|&s| self.y[s as usize] as f64).sum();
+        let sq: f64 = samples.iter().map(|&s| (self.y[s as usize] as f64).powi(2)).sum();
+        sq - sum * sum / n // n * variance
+    }
+
+    fn best_split(
+        &self,
+        xcol: impl Fn(u32) -> f32,
+        samples: &[u32],
+        min_leaf: usize,
+    ) -> Option<(f64, f32)> {
+        let n = samples.len();
+        let mut vals: Vec<(f32, f32)> =
+            samples.iter().map(|&s| (xcol(s), self.y[s as usize])).collect();
+        vals.sort_unstable_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
+
+        let total_sum: f64 = vals.iter().map(|&(_, y)| y as f64).sum();
+        let total_sq: f64 = vals.iter().map(|&(_, y)| (y as f64).powi(2)).sum();
+        let parent = total_sq - total_sum * total_sum / n as f64;
+
+        let mut lsum = 0f64;
+        let mut lsq = 0f64;
+        let mut best: Option<(f64, f32)> = None;
+        for i in 0..n - 1 {
+            let y = vals[i].1 as f64;
+            lsum += y;
+            lsq += y * y;
+            if vals[i].0 == vals[i + 1].0 {
+                continue;
+            }
+            let nl = (i + 1) as f64;
+            let nr = (n - i - 1) as f64;
+            if (i + 1) < min_leaf || (n - i - 1) < min_leaf {
+                continue;
+            }
+            let rsum = total_sum - lsum;
+            let rsq = total_sq - lsq;
+            let child = (lsq - lsum * lsum / nl) + (rsq - rsum * rsum / nr);
+            let gain = parent - child;
+            let thr = midpoint(vals[i].0, vals[i + 1].0);
+            if best.map_or(true, |(g, _)| gain > g) {
+                best = Some((gain, thr));
+            }
+        }
+        best.filter(|&(g, _)| g > 1e-12)
+    }
+}
+
+fn midpoint(a: f32, b: f32) -> f32 {
+    let m = a + (b - a) * 0.5;
+    // Guard against rounding collapsing the midpoint onto `b` (split is
+    // `x <= t`, so t must be < b to separate the two).
+    if m >= b {
+        a
+    } else {
+        m
+    }
+}
+
+/// Grow one tree with best-first expansion; generic over the target.
+fn grow_tree<T: Target>(
+    x: &[f32],
+    n_features: usize,
+    target: &T,
+    samples: Vec<u32>,
+    params: TreeParams,
+    rng: &mut Pcg32,
+) -> Tree {
+    let xcol = |f: u32| move |s: u32| x[s as usize * n_features + f as usize];
+
+    let mut arena: Vec<Grown> = Vec::new();
+    // Best-first frontier (simple vec-scan max; frontier is tiny: <= leaves).
+    let mut frontier: Vec<Candidate> = Vec::new();
+    let mut n_leaves = 1usize;
+
+    arena.push(Grown::Leaf { value: target.leaf_value(&samples) });
+    if let Some(c) = make_candidate(x, n_features, target, 0, samples, params, rng) {
+        frontier.push(c);
+    }
+
+    while n_leaves < params.max_leaves {
+        // Pop highest-gain candidate.
+        let Some(best_idx) = frontier
+            .iter()
+            .enumerate()
+            .max_by(|a, b| a.1.gain.partial_cmp(&b.1.gain).unwrap())
+            .map(|(i, _)| i)
+        else {
+            break;
+        };
+        let cand = frontier.swap_remove(best_idx);
+
+        // Partition samples.
+        let f = cand.feature;
+        let t = cand.threshold;
+        let (ls, rs): (Vec<u32>, Vec<u32>) =
+            cand.samples.iter().partition(|&&s| xcol(f)(s) <= t);
+        debug_assert!(!ls.is_empty() && !rs.is_empty());
+
+        let li = arena.len();
+        arena.push(Grown::Leaf { value: target.leaf_value(&ls) });
+        let ri = arena.len();
+        arena.push(Grown::Leaf { value: target.leaf_value(&rs) });
+        arena[cand.arena_slot] =
+            Grown::Split { feature: f, threshold: t, left: li, right: ri };
+        n_leaves += 1;
+
+        if let Some(c) = make_candidate(x, n_features, target, li, ls, params, rng) {
+            frontier.push(c);
+        }
+        if let Some(c) = make_candidate(x, n_features, target, ri, rs, params, rng) {
+            frontier.push(c);
+        }
+    }
+
+    arena_to_tree(&arena)
+}
+
+fn make_candidate<T: Target>(
+    x: &[f32],
+    n_features: usize,
+    target: &T,
+    arena_slot: usize,
+    samples: Vec<u32>,
+    params: TreeParams,
+    rng: &mut Pcg32,
+) -> Option<Candidate> {
+    if samples.len() < 2 * params.min_samples_leaf.max(1) {
+        return None;
+    }
+    let mtry = if params.mtry == 0 { n_features } else { params.mtry.min(n_features) };
+    let feats: Vec<usize> = if mtry == n_features {
+        (0..n_features).collect()
+    } else {
+        rng.sample_indices(n_features, mtry)
+    };
+    let mut best: Option<(f64, u32, f32)> = None;
+    for f in feats {
+        let col = |s: u32| x[s as usize * n_features + f];
+        if let Some((gain, thr)) = target.best_split(col, &samples, params.min_samples_leaf) {
+            if best.map_or(true, |(g, _, _)| gain > g) {
+                best = Some((gain, f as u32, thr));
+            }
+        }
+    }
+    best.map(|(gain, feature, threshold)| Candidate {
+        arena_slot,
+        samples,
+        gain,
+        feature,
+        threshold,
+    })
+}
+
+/// Convert the growth arena into the canonical [`Tree`] representation with
+/// left-to-right leaf numbering.
+fn arena_to_tree(arena: &[Grown]) -> Tree {
+    let n_classes = match &arena[0] {
+        Grown::Leaf { value } => value.len(),
+        _ => arena
+            .iter()
+            .find_map(|g| match g {
+                Grown::Leaf { value } => Some(value.len()),
+                _ => None,
+            })
+            .unwrap(),
+    };
+    let mut nodes: Vec<Node> = Vec::new();
+    let mut leaf_values: Vec<f32> = Vec::new();
+    let mut n_leaves = 0u32;
+
+    fn convert(
+        arena: &[Grown],
+        slot: usize,
+        nodes: &mut Vec<Node>,
+        leaf_values: &mut Vec<f32>,
+        n_leaves: &mut u32,
+    ) -> Child {
+        match &arena[slot] {
+            Grown::Leaf { value } => {
+                let id = *n_leaves;
+                *n_leaves += 1;
+                leaf_values.extend_from_slice(value);
+                Child::Leaf(id)
+            }
+            Grown::Split { feature, threshold, left, right } => {
+                let idx = nodes.len();
+                nodes.push(Node {
+                    feature: *feature,
+                    threshold: *threshold,
+                    left: Child::Leaf(u32::MAX), // patched below
+                    right: Child::Leaf(u32::MAX),
+                });
+                let l = convert(arena, *left, nodes, leaf_values, n_leaves);
+                let r = convert(arena, *right, nodes, leaf_values, n_leaves);
+                nodes[idx].left = l;
+                nodes[idx].right = r;
+                Child::Inner(idx as u32)
+            }
+        }
+    }
+
+    convert(arena, 0, &mut nodes, &mut leaf_values, &mut n_leaves);
+    Tree { nodes, leaf_values, n_leaves: n_leaves as usize, n_classes }
+}
+
+// ---------------------------------------------------------------------------
+// Random Forest
+// ---------------------------------------------------------------------------
+
+/// Train a Random Forest classifier. Leaf values are class-probability
+/// vectors pre-scaled by `1/n_trees`, so the forest sum is the ensemble's
+/// soft majority vote (paper §2).
+pub fn train_random_forest(
+    x: &[f32],
+    labels: &[u32],
+    n_features: usize,
+    n_classes: usize,
+    params: RfParams,
+) -> Forest {
+    assert_eq!(x.len(), labels.len() * n_features);
+    let n = labels.len();
+    let mut rng = Pcg32::seeded(params.seed);
+    let mut forest = Forest::new(n_features, n_classes, Task::Classification);
+    let mtry = if params.tree.mtry == 0 {
+        (n_features as f64).sqrt().ceil() as usize
+    } else {
+        params.tree.mtry
+    };
+    let tree_params = TreeParams { mtry, ..params.tree };
+    let leaf_scale = 1.0 / params.n_trees as f32;
+    let boot = ((n as f64) * params.bootstrap_frac).round().max(1.0) as usize;
+
+    for _ in 0..params.n_trees {
+        let mut trng = rng.split();
+        let samples: Vec<u32> = (0..boot).map(|_| trng.below(n) as u32).collect();
+        let target = GiniTarget { labels, n_classes, leaf_scale };
+        let tree = grow_tree(x, n_features, &target, samples, tree_params, &mut trng);
+        forest.trees.push(tree);
+    }
+    forest
+}
+
+// ---------------------------------------------------------------------------
+// Gradient boosting (squared loss)
+// ---------------------------------------------------------------------------
+
+/// Train gradient-boosted regression trees on scalar targets (used for the
+/// MSN-style ranking experiments; graded relevance is regressed pointwise).
+/// Learning rate is pre-scaled into leaf values; `base_score` is the target
+/// mean.
+pub fn train_gbt(x: &[f32], y: &[f32], n_features: usize, params: GbtParams) -> Forest {
+    assert_eq!(x.len(), y.len() * n_features);
+    let n = y.len();
+    let mut rng = Pcg32::seeded(params.seed);
+    let mut forest = Forest::new(n_features, 1, Task::Ranking);
+
+    let base = y.iter().map(|&v| v as f64).sum::<f64>() / n as f64;
+    forest.base_score = vec![base as f32];
+
+    // Current prediction per sample.
+    let mut pred = vec![base as f32; n];
+    let mut residual = vec![0f32; n];
+
+    for _ in 0..params.n_trees {
+        let mut trng = rng.split();
+        for i in 0..n {
+            residual[i] = y[i] - pred[i];
+        }
+        let samples: Vec<u32> = if params.subsample >= 1.0 {
+            (0..n as u32).collect()
+        } else {
+            let k = ((n as f64) * params.subsample).round().max(2.0) as usize;
+            trng.sample_indices(n, k).into_iter().map(|i| i as u32).collect()
+        };
+        let target = MseTarget { y: &residual, leaf_scale: params.learning_rate };
+        let tree = grow_tree(x, n_features, &target, samples, params.tree, &mut trng);
+        // Update predictions with the new (already lr-scaled) tree.
+        for i in 0..n {
+            let mut out = [0f32];
+            tree.predict_into(&x[i * n_features..(i + 1) * n_features], &mut out);
+            pred[i] += out[0];
+        }
+        forest.trees.push(tree);
+    }
+    forest
+}
+
+
+// ---------------------------------------------------------------------------
+// AdaBoost (SAMME)
+// ---------------------------------------------------------------------------
+
+/// AdaBoost parameters (SAMME, resampling variant).
+#[derive(Debug, Clone, Copy)]
+pub struct AdaBoostParams {
+    pub n_trees: usize,
+    pub tree: TreeParams,
+    pub seed: u64,
+}
+
+impl Default for AdaBoostParams {
+    fn default() -> Self {
+        AdaBoostParams {
+            n_trees: 64,
+            tree: TreeParams { max_leaves: 8, min_samples_leaf: 1, mtry: 0 },
+            seed: 0xada,
+        }
+    }
+}
+
+/// Train an AdaBoost.SAMME classifier — the paper's §2 "weighted ensemble"
+/// case (`f(x) = Σ w_i h'_i(x)`): each round trains a shallow tree on a
+/// weight-resampled bootstrap, and the stage weight `α_m` is **pre-scaled
+/// into the leaf values** (leaf vector = α_m · onehot(leaf majority class)),
+/// so inference stays the plain unweighted sum every engine implements.
+pub fn train_adaboost(
+    x: &[f32],
+    labels: &[u32],
+    n_features: usize,
+    n_classes: usize,
+    params: AdaBoostParams,
+) -> Forest {
+    assert!(n_classes >= 2);
+    let n = labels.len();
+    let mut rng = Pcg32::seeded(params.seed);
+    let mut forest = Forest::new(n_features, n_classes, Task::Classification);
+    let mut weights = vec![1.0f64 / n as f64; n];
+
+    for _ in 0..params.n_trees {
+        let mut trng = rng.split();
+        // Weighted resampling via the cumulative distribution.
+        let mut cum = Vec::with_capacity(n);
+        let mut acc = 0f64;
+        for &w in &weights {
+            acc += w;
+            cum.push(acc);
+        }
+        let total = acc.max(1e-300);
+        let samples: Vec<u32> = (0..n)
+            .map(|_| {
+                let u = trng.f64() * total;
+                cum.partition_point(|&c| c < u).min(n - 1) as u32
+            })
+            .collect();
+
+        // Unit-scale tree on the resample; gini target.
+        let target = GiniTarget { labels, n_classes, leaf_scale: 1.0 };
+        let tree = grow_tree(x, n_features, &target, samples, params.tree, &mut trng);
+
+        // Weighted error of the hard prediction on the full set.
+        let mut predicted = vec![0u32; n];
+        let mut err = 0f64;
+        for i in 0..n {
+            let leaf = tree.exit_leaf(&x[i * n_features..(i + 1) * n_features]);
+            let row = tree.leaf_row(leaf);
+            let mut best = 0usize;
+            for (c, &v) in row.iter().enumerate() {
+                if v > row[best] {
+                    best = c;
+                }
+            }
+            predicted[i] = best as u32;
+            if predicted[i] != labels[i] {
+                err += weights[i];
+            }
+        }
+        err = err.clamp(1e-10, 1.0 - 1e-10);
+        let alpha = (((1.0 - err) / err).ln() + ((n_classes - 1) as f64).ln()).max(0.0);
+        if alpha == 0.0 {
+            continue; // worse than chance: skip this stage (weights untouched)
+        }
+
+        // Re-weight: misclassified samples up by e^alpha; renormalize.
+        for i in 0..n {
+            if predicted[i] != labels[i] {
+                weights[i] *= alpha.exp();
+            }
+        }
+        let z: f64 = weights.iter().sum();
+        weights.iter_mut().for_each(|w| *w /= z);
+
+        // Stage tree: leaves become alpha * onehot(majority class).
+        let mut stage = tree;
+        let mut new_leaves = vec![0f32; stage.n_leaves * n_classes];
+        for leaf in 0..stage.n_leaves {
+            let row = stage.leaf_row(leaf);
+            let mut best = 0usize;
+            for (c, &v) in row.iter().enumerate() {
+                if v > row[best] {
+                    best = c;
+                }
+            }
+            new_leaves[leaf * n_classes + best] = alpha as f32;
+        }
+        stage.leaf_values = new_leaves;
+        forest.trees.push(stage);
+    }
+    forest
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Pcg32;
+
+    /// Tiny 2-class dataset separable on feature 0.
+    fn toy_classification(n: usize) -> (Vec<f32>, Vec<u32>) {
+        let mut rng = Pcg32::seeded(99);
+        let mut x = Vec::with_capacity(n * 3);
+        let mut y = Vec::with_capacity(n);
+        for _ in 0..n {
+            let label = rng.below(2) as u32;
+            let f0 = if label == 0 { rng.f32() * 0.4 } else { 0.6 + rng.f32() * 0.4 };
+            x.extend_from_slice(&[f0, rng.f32(), rng.f32()]);
+            y.push(label);
+        }
+        (x, y)
+    }
+
+    #[test]
+    fn rf_learns_separable_data() {
+        let (x, y) = toy_classification(400);
+        let params = RfParams {
+            n_trees: 16,
+            tree: TreeParams { max_leaves: 8, min_samples_leaf: 1, mtry: 0 },
+            ..Default::default()
+        };
+        let f = train_random_forest(&x, &y, 3, 2, params);
+        assert_eq!(f.n_trees(), 16);
+        f.validate().unwrap();
+        assert!(f.accuracy(&x, &y) > 0.95, "acc = {}", f.accuracy(&x, &y));
+    }
+
+    #[test]
+    fn rf_respects_max_leaves() {
+        let (x, y) = toy_classification(300);
+        let params = RfParams {
+            n_trees: 8,
+            tree: TreeParams { max_leaves: 4, min_samples_leaf: 1, mtry: 0 },
+            ..Default::default()
+        };
+        let f = train_random_forest(&x, &y, 3, 2, params);
+        assert!(f.trees.iter().all(|t| t.n_leaves <= 4));
+    }
+
+    #[test]
+    fn rf_leaf_values_sum_to_vote() {
+        // With leaf scale 1/M, summed class scores are a probability dist.
+        let (x, y) = toy_classification(200);
+        let f = train_random_forest(
+            &x,
+            &y,
+            3,
+            2,
+            RfParams { n_trees: 8, ..Default::default() },
+        );
+        let scores = f.predict_batch(&x[..3 * 5]);
+        for row in scores.chunks(2) {
+            let s: f32 = row.iter().sum();
+            assert!((s - 1.0).abs() < 1e-4, "row sums to {s}");
+        }
+    }
+
+    #[test]
+    fn gbt_fits_linear_target() {
+        let mut rng = Pcg32::seeded(4);
+        let n = 500;
+        let mut x = Vec::with_capacity(n * 2);
+        let mut y = Vec::with_capacity(n);
+        for _ in 0..n {
+            let a = rng.f32();
+            let b = rng.f32();
+            x.extend_from_slice(&[a, b]);
+            y.push(2.0 * a - b);
+        }
+        let params = GbtParams {
+            n_trees: 60,
+            tree: TreeParams { max_leaves: 8, min_samples_leaf: 2, mtry: 0 },
+            learning_rate: 0.2,
+            ..Default::default()
+        };
+        let f = train_gbt(&x, &y, 2, params);
+        f.validate().unwrap();
+        let pred = f.predict_batch(&x);
+        let mse: f64 = pred
+            .iter()
+            .zip(&y)
+            .map(|(&p, &t)| ((p - t) as f64).powi(2))
+            .sum::<f64>()
+            / n as f64;
+        assert!(mse < 0.01, "mse = {mse}");
+    }
+
+    #[test]
+    fn trees_are_valid_and_leaves_in_order() {
+        let (x, y) = toy_classification(300);
+        let f = train_random_forest(
+            &x,
+            &y,
+            3,
+            2,
+            RfParams { n_trees: 4, ..Default::default() },
+        );
+        for t in &f.trees {
+            t.validate().unwrap();
+            // left ranges must be computable (asserts in-order numbering)
+            let _ = t.left_leaf_ranges();
+        }
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let (x, y) = toy_classification(200);
+        let p = RfParams { n_trees: 4, seed: 7, ..Default::default() };
+        let f1 = train_random_forest(&x, &y, 3, 2, p);
+        let f2 = train_random_forest(&x, &y, 3, 2, p);
+        assert_eq!(f1, f2);
+    }
+
+
+    #[test]
+    fn adaboost_learns_separable_data() {
+        let (x, y) = toy_classification(500);
+        let f = train_adaboost(
+            &x,
+            &y,
+            3,
+            2,
+            AdaBoostParams {
+                n_trees: 24,
+                tree: TreeParams { max_leaves: 4, min_samples_leaf: 2, mtry: 0 },
+                seed: 1,
+            },
+        );
+        f.validate().unwrap();
+        assert!(f.n_trees() > 0);
+        let acc = f.accuracy(&x, &y);
+        assert!(acc > 0.95, "acc {acc}");
+    }
+
+    #[test]
+    fn adaboost_leaves_are_alpha_onehot() {
+        let (x, y) = toy_classification(300);
+        let f = train_adaboost(&x, &y, 3, 2, AdaBoostParams::default());
+        for t in &f.trees {
+            for leaf in 0..t.n_leaves {
+                let row = t.leaf_row(leaf);
+                let nonzero = row.iter().filter(|&&v| v != 0.0).count();
+                assert!(nonzero <= 1, "leaf must be alpha * onehot: {row:?}");
+                assert!(row.iter().all(|&v| v >= 0.0));
+            }
+        }
+    }
+
+    #[test]
+    fn adaboost_engines_agree() {
+        // The weighted ensemble runs through the same engines untouched.
+        let (x, y) = toy_classification(300);
+        let f = train_adaboost(&x, &y, 3, 2, AdaBoostParams::default());
+        let want = f.predict_batch(&x[..3 * 50]);
+        for kind in crate::engine::EngineKind::ALL {
+            let e = crate::engine::build(kind, crate::engine::Precision::F32, &f, None).unwrap();
+            let got = e.predict(&x[..3 * 50]);
+            crate::testing::assert_close(&got, &want, 1e-4, 1e-4)
+                .unwrap_or_else(|m| panic!("{}: {m}", kind.short()));
+        }
+    }
+
+    #[test]
+    fn midpoint_never_reaches_upper() {
+        let a = 1.0f32;
+        let b = a + f32::EPSILON;
+        let m = midpoint(a, b);
+        assert!(m < b);
+    }
+}

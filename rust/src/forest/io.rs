@@ -1,0 +1,223 @@
+//! Forest (de)serialization.
+//!
+//! Forests are stored as JSON — one object per forest with flat per-tree
+//! arrays — so the same model file is consumed by the Rust engines, the
+//! Python AOT pipeline (`python/compile/aot.py --forest`), and the examples.
+//! A small binary cache layer keys trained models by their configuration so
+//! the benchmark suite trains each forest exactly once.
+
+use std::path::Path;
+
+use super::tree::{Child, Node, Tree};
+use super::{Forest, Task};
+use crate::util::Json;
+
+/// Encode a child reference: inner nodes as non-negative ids, leaf `l` as
+/// `-(l+1)` (a compact convention shared with the Python loader).
+fn child_to_num(c: Child) -> f64 {
+    match c {
+        Child::Inner(i) => i as f64,
+        Child::Leaf(l) => -((l as f64) + 1.0),
+    }
+}
+
+fn num_to_child(n: f64) -> Child {
+    if n >= 0.0 {
+        Child::Inner(n as u32)
+    } else {
+        Child::Leaf((-n - 1.0) as u32)
+    }
+}
+
+/// Serialize a forest to a JSON value.
+pub fn forest_to_json(f: &Forest) -> Json {
+    let trees: Vec<Json> = f
+        .trees
+        .iter()
+        .map(|t| {
+            Json::from_pairs(vec![
+                (
+                    "feature",
+                    Json::Arr(t.nodes.iter().map(|n| Json::Num(n.feature as f64)).collect()),
+                ),
+                (
+                    "threshold",
+                    Json::Arr(t.nodes.iter().map(|n| Json::Num(n.threshold as f64)).collect()),
+                ),
+                ("left", Json::Arr(t.nodes.iter().map(|n| Json::Num(child_to_num(n.left))).collect())),
+                (
+                    "right",
+                    Json::Arr(t.nodes.iter().map(|n| Json::Num(child_to_num(n.right))).collect()),
+                ),
+                ("leaf_values", Json::array_f32(&t.leaf_values)),
+                ("n_leaves", Json::Num(t.n_leaves as f64)),
+            ])
+        })
+        .collect();
+    Json::from_pairs(vec![
+        ("format", Json::Str("arbors-forest-v1".into())),
+        ("task", Json::Str(f.task.as_str().into())),
+        ("n_features", Json::Num(f.n_features as f64)),
+        ("n_classes", Json::Num(f.n_classes as f64)),
+        ("base_score", Json::array_f32(&f.base_score)),
+        ("trees", Json::Arr(trees)),
+    ])
+}
+
+/// Deserialize a forest from a JSON value; validates the result.
+pub fn forest_from_json(j: &Json) -> Result<Forest, String> {
+    let fmt = j.get("format").and_then(|v| v.as_str()).unwrap_or("");
+    if fmt != "arbors-forest-v1" {
+        return Err(format!("unknown forest format '{fmt}'"));
+    }
+    let task = Task::from_str(j.req("task").map_err(|e| e.to_string())?.as_str().unwrap_or(""))
+        .ok_or("bad task")?;
+    let n_features = j.req("n_features").map_err(|e| e.to_string())?.as_usize().ok_or("n_features")?;
+    let n_classes = j.req("n_classes").map_err(|e| e.to_string())?.as_usize().ok_or("n_classes")?;
+    let base_score = j.req("base_score").map_err(|e| e.to_string())?.to_f32_vec().ok_or("base_score")?;
+    let mut forest = Forest::new(n_features, n_classes, task);
+    forest.base_score = base_score;
+
+    for (ti, tj) in j.req("trees").map_err(|e| e.to_string())?.as_arr().ok_or("trees")?.iter().enumerate()
+    {
+        let feature = tj.req("feature").map_err(|e| e.to_string())?.to_usize_vec().ok_or("feature")?;
+        let threshold = tj.req("threshold").map_err(|e| e.to_string())?.to_f32_vec().ok_or("threshold")?;
+        let left: Vec<f64> = tj
+            .req("left")
+            .map_err(|e| e.to_string())?
+            .as_arr()
+            .ok_or("left")?
+            .iter()
+            .map(|v| v.as_f64().ok_or("left"))
+            .collect::<Result<_, _>>()?;
+        let right: Vec<f64> = tj
+            .req("right")
+            .map_err(|e| e.to_string())?
+            .as_arr()
+            .ok_or("right")?
+            .iter()
+            .map(|v| v.as_f64().ok_or("right"))
+            .collect::<Result<_, _>>()?;
+        let leaf_values = tj.req("leaf_values").map_err(|e| e.to_string())?.to_f32_vec().ok_or("leaf_values")?;
+        let n_leaves = tj.req("n_leaves").map_err(|e| e.to_string())?.as_usize().ok_or("n_leaves")?;
+        if feature.len() != threshold.len() || feature.len() != left.len() || feature.len() != right.len() {
+            return Err(format!("tree {ti}: ragged node arrays"));
+        }
+        let nodes: Vec<Node> = (0..feature.len())
+            .map(|i| Node {
+                feature: feature[i] as u32,
+                threshold: threshold[i],
+                left: num_to_child(left[i]),
+                right: num_to_child(right[i]),
+            })
+            .collect();
+        forest.trees.push(Tree { nodes, leaf_values, n_leaves, n_classes });
+    }
+    forest.validate()?;
+    Ok(forest)
+}
+
+/// Save a forest to a file (compact JSON).
+pub fn save(f: &Forest, path: &Path) -> anyhow::Result<()> {
+    if let Some(dir) = path.parent() {
+        std::fs::create_dir_all(dir)?;
+    }
+    std::fs::write(path, forest_to_json(f).dump())?;
+    Ok(())
+}
+
+/// Load a forest from a file.
+pub fn load(path: &Path) -> anyhow::Result<Forest> {
+    let text = std::fs::read_to_string(path)?;
+    let j = Json::parse(&text).map_err(|e| anyhow::anyhow!("{path:?}: {e}"))?;
+    forest_from_json(&j).map_err(|e| anyhow::anyhow!("{path:?}: {e}"))
+}
+
+/// Load from cache or train-and-save: the bench suite's "train once" helper.
+pub fn cached<F: FnOnce() -> Forest>(cache_dir: &Path, key: &str, train: F) -> Forest {
+    let path = cache_dir.join(format!("{key}.json"));
+    if path.exists() {
+        if let Ok(f) = load(&path) {
+            return f;
+        }
+        // Corrupt cache entry: retrain below.
+    }
+    let f = train();
+    if let Err(e) = save(&f, &path) {
+        eprintln!("warning: could not cache model {key}: {e}");
+    }
+    f
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::forest::builder::{train_random_forest, RfParams};
+    use crate::util::Pcg32;
+
+    fn small_forest() -> Forest {
+        let mut rng = Pcg32::seeded(21);
+        let n = 120;
+        let d = 4;
+        let mut x = Vec::new();
+        let mut y = Vec::new();
+        for _ in 0..n {
+            let label = rng.below(3) as u32;
+            for f in 0..d {
+                x.push(rng.f32() + if f == 0 { label as f32 } else { 0.0 });
+            }
+            y.push(label);
+        }
+        train_random_forest(&x, &y, d, 3, RfParams { n_trees: 5, ..Default::default() })
+    }
+
+    #[test]
+    fn json_roundtrip_exact() {
+        let f = small_forest();
+        let j = forest_to_json(&f);
+        let f2 = forest_from_json(&j).unwrap();
+        // Thresholds go through f64 in JSON; f32 -> f64 -> f32 is exact.
+        assert_eq!(f, f2);
+    }
+
+    #[test]
+    fn file_roundtrip() {
+        let f = small_forest();
+        let dir = std::env::temp_dir().join("arbors_io_test");
+        let path = dir.join("forest.json");
+        save(&f, &path).unwrap();
+        let f2 = load(&path).unwrap();
+        assert_eq!(f, f2);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn rejects_bad_format() {
+        let j = Json::parse(r#"{"format": "nope"}"#).unwrap();
+        assert!(forest_from_json(&j).is_err());
+    }
+
+    #[test]
+    fn cached_trains_once() {
+        let dir = std::env::temp_dir().join(format!("arbors_cache_{}", std::process::id()));
+        let mut calls = 0;
+        let f1 = cached(&dir, "k", || {
+            calls += 1;
+            small_forest()
+        });
+        let f2 = cached(&dir, "k", || {
+            calls += 1;
+            small_forest()
+        });
+        assert_eq!(calls, 1);
+        assert_eq!(f1, f2);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn child_encoding_roundtrip() {
+        for c in [Child::Inner(0), Child::Inner(7), Child::Leaf(0), Child::Leaf(31)] {
+            assert_eq!(num_to_child(child_to_num(c)), c);
+        }
+    }
+}

@@ -1,0 +1,242 @@
+//! Additive tree ensembles (paper §2, eq. 1).
+//!
+//! A [`Forest`] is a sum of trees: `f(x) = Σ_i h_i(x)`. Ensemble weights (RF
+//! majority vote `1/M`, boosting learning rate) are **pre-scaled into the leaf
+//! values** during construction, exactly as the paper describes in §2, so
+//! inference is a plain unweighted sum — "the only arithmetic operation
+//! required to execute the entire tree ensemble" (§5).
+
+pub mod builder;
+pub mod io;
+pub mod tree;
+
+pub use builder::{AdaBoostParams, GbtParams, RfParams, TreeParams};
+pub use tree::{Child, Node, Tree};
+
+/// What the ensemble was trained for; decides how raw scores are interpreted.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Task {
+    /// `n_classes >= 2`, scores are (soft) votes; prediction = argmax.
+    Classification,
+    /// `n_classes == 1`, score is the ranking/regression output.
+    Ranking,
+}
+
+impl Task {
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            Task::Classification => "classification",
+            Task::Ranking => "ranking",
+        }
+    }
+
+    pub fn from_str(s: &str) -> Option<Task> {
+        match s {
+            "classification" => Some(Task::Classification),
+            "ranking" => Some(Task::Ranking),
+            _ => None,
+        }
+    }
+}
+
+/// An additive ensemble of axis-aligned decision trees.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Forest {
+    pub trees: Vec<Tree>,
+    pub n_features: usize,
+    pub n_classes: usize,
+    pub task: Task,
+    /// Added to every prediction (e.g. boosting base score); length
+    /// `n_classes`.
+    pub base_score: Vec<f32>,
+}
+
+impl Forest {
+    pub fn new(n_features: usize, n_classes: usize, task: Task) -> Forest {
+        Forest { trees: Vec::new(), n_features, n_classes, task, base_score: vec![0.0; n_classes] }
+    }
+
+    pub fn n_trees(&self) -> usize {
+        self.trees.len()
+    }
+
+    /// Maximum leaf count over all trees — the `L` that sizes QuickScorer
+    /// bitvectors.
+    pub fn max_leaves(&self) -> usize {
+        self.trees.iter().map(|t| t.n_leaves).max().unwrap_or(1)
+    }
+
+    /// Total inner-node count.
+    pub fn n_nodes(&self) -> usize {
+        self.trees.iter().map(|t| t.nodes.len()).sum()
+    }
+
+    /// Reference prediction for one instance into `out` (len `n_classes`).
+    pub fn predict_into(&self, x: &[f32], out: &mut [f32]) {
+        out.copy_from_slice(&self.base_score);
+        for t in &self.trees {
+            t.predict_into(x, out);
+        }
+    }
+
+    /// Reference prediction for a row-major batch `[n × n_features]`;
+    /// returns row-major scores `[n × n_classes]`.
+    pub fn predict_batch(&self, x: &[f32]) -> Vec<f32> {
+        assert_eq!(x.len() % self.n_features, 0);
+        let n = x.len() / self.n_features;
+        let mut out = vec![0.0f32; n * self.n_classes];
+        for i in 0..n {
+            self.predict_into(
+                &x[i * self.n_features..(i + 1) * self.n_features],
+                &mut out[i * self.n_classes..(i + 1) * self.n_classes],
+            );
+        }
+        out
+    }
+
+    /// Argmax class per instance from a score matrix.
+    pub fn argmax(scores: &[f32], n_classes: usize) -> Vec<u32> {
+        scores
+            .chunks(n_classes)
+            .map(|row| {
+                let mut best = 0usize;
+                for (c, &v) in row.iter().enumerate() {
+                    if v > row[best] {
+                        best = c;
+                    }
+                }
+                best as u32
+            })
+            .collect()
+    }
+
+    /// Classification accuracy of this forest on `(x, labels)`.
+    pub fn accuracy(&self, x: &[f32], labels: &[u32]) -> f64 {
+        let scores = self.predict_batch(x);
+        let preds = Self::argmax(&scores, self.n_classes);
+        let correct = preds.iter().zip(labels).filter(|(p, l)| p == l).count();
+        correct as f64 / labels.len() as f64
+    }
+
+    /// Validate every tree and the forest-level invariants.
+    pub fn validate(&self) -> Result<(), String> {
+        if self.base_score.len() != self.n_classes {
+            return Err("base_score length != n_classes".into());
+        }
+        for (i, t) in self.trees.iter().enumerate() {
+            if t.n_classes != self.n_classes {
+                return Err(format!("tree {i}: n_classes {} != {}", t.n_classes, self.n_classes));
+            }
+            for n in &t.nodes {
+                if n.feature as usize >= self.n_features {
+                    return Err(format!("tree {i}: feature {} out of range", n.feature));
+                }
+            }
+            t.validate().map_err(|e| format!("tree {i}: {e}"))?;
+        }
+        Ok(())
+    }
+
+    /// Histogram of (min, mean, max) leaf counts — used in reports.
+    pub fn leaf_stats(&self) -> (usize, f64, usize) {
+        let mut min = usize::MAX;
+        let mut max = 0usize;
+        let mut sum = 0usize;
+        for t in &self.trees {
+            min = min.min(t.n_leaves);
+            max = max.max(t.n_leaves);
+            sum += t.n_leaves;
+        }
+        if self.trees.is_empty() {
+            (0, 0.0, 0)
+        } else {
+            (min, sum as f64 / self.trees.len() as f64, max)
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::tree::{Child, Node};
+    use super::*;
+
+    fn two_tree_forest() -> Forest {
+        let t1 = Tree {
+            nodes: vec![Node {
+                feature: 0,
+                threshold: 0.5,
+                left: Child::Leaf(0),
+                right: Child::Leaf(1),
+            }],
+            leaf_values: vec![1.0, 0.0, 0.0, 1.0],
+            n_leaves: 2,
+            n_classes: 2,
+        };
+        let t2 = Tree {
+            nodes: vec![Node {
+                feature: 1,
+                threshold: 0.0,
+                left: Child::Leaf(0),
+                right: Child::Leaf(1),
+            }],
+            leaf_values: vec![0.5, 0.5, 0.0, 1.0],
+            n_leaves: 2,
+            n_classes: 2,
+        };
+        Forest {
+            trees: vec![t1, t2],
+            n_features: 2,
+            n_classes: 2,
+            task: Task::Classification,
+            base_score: vec![0.0, 0.0],
+        }
+    }
+
+    #[test]
+    fn forest_sums_trees() {
+        let f = two_tree_forest();
+        let mut out = vec![0.0; 2];
+        f.predict_into(&[0.0, 1.0], &mut out);
+        assert_eq!(out, vec![1.0, 1.0]); // t1 -> [1,0], t2 -> [0,1]
+    }
+
+    #[test]
+    fn batch_matches_single() {
+        let f = two_tree_forest();
+        let x = vec![0.0, 1.0, 0.9, -1.0];
+        let batch = f.predict_batch(&x);
+        let mut single = vec![0.0; 2];
+        f.predict_into(&x[2..4], &mut single);
+        assert_eq!(&batch[2..4], &single[..]);
+    }
+
+    #[test]
+    fn argmax_ties_pick_first() {
+        assert_eq!(Forest::argmax(&[0.5, 0.5, 0.2, 0.7], 2), vec![0, 1]);
+    }
+
+    #[test]
+    fn validate_catches_bad_feature() {
+        let mut f = two_tree_forest();
+        f.trees[0].nodes[0].feature = 99;
+        assert!(f.validate().is_err());
+    }
+
+    #[test]
+    fn accuracy_perfect_on_trivial() {
+        let f = two_tree_forest();
+        // class = 1 iff x1 > 0 for x0<=0.5 region combined with t1
+        let x = vec![0.0, -1.0, 0.0, 1.0];
+        let acc = f.accuracy(&x, &[0, 1]);
+        assert!(acc >= 0.5);
+    }
+
+    #[test]
+    fn base_score_applied() {
+        let mut f = two_tree_forest();
+        f.base_score = vec![10.0, 20.0];
+        let mut out = vec![0.0; 2];
+        f.predict_into(&[0.0, 1.0], &mut out);
+        assert_eq!(out, vec![11.0, 21.0]);
+    }
+}

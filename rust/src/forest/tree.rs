@@ -1,0 +1,274 @@
+//! Axis-aligned binary decision trees (paper §2, eq. 2).
+//!
+//! A tree is stored as a flat array of inner nodes plus a flat leaf-value
+//! table. Leaves are numbered **left-to-right** (in-order over the tree
+//! structure); this ordering is what makes the QuickScorer bitvector encoding
+//! work: the exit leaf is the *leftmost* leaf not masked out, i.e. the lowest
+//! set bit when leaf `i` maps to bit `i`.
+
+/// Child reference: either another inner node or a leaf id.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Child {
+    /// Index into [`Tree::nodes`].
+    Inner(u32),
+    /// Index into the leaf table (`0..n_leaves`).
+    Leaf(u32),
+}
+
+/// An inner node performing the axis-aligned split `x[feature] <= threshold`
+/// (true ⇒ go left, false ⇒ go right — the paper's `1{x_k ≤ t}` convention).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Node {
+    pub feature: u32,
+    pub threshold: f32,
+    pub left: Child,
+    pub right: Child,
+}
+
+/// A single decision tree with `C`-dimensional leaf predictions.
+///
+/// `leaf_values` is row-major `[n_leaves × n_classes]`. A degenerate tree with
+/// no inner nodes has exactly one leaf.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Tree {
+    pub nodes: Vec<Node>,
+    pub leaf_values: Vec<f32>,
+    pub n_leaves: usize,
+    pub n_classes: usize,
+}
+
+impl Tree {
+    /// A single-leaf tree predicting `value`.
+    pub fn leaf(value: Vec<f32>) -> Tree {
+        let n_classes = value.len();
+        Tree { nodes: Vec::new(), leaf_values: value, n_leaves: 1, n_classes }
+    }
+
+    /// Leaf prediction row.
+    #[inline]
+    pub fn leaf_row(&self, leaf: usize) -> &[f32] {
+        &self.leaf_values[leaf * self.n_classes..(leaf + 1) * self.n_classes]
+    }
+
+    /// Walk the tree for one instance; returns the exit-leaf id.
+    ///
+    /// This is the *oracle* traversal every optimized engine is tested
+    /// against.
+    pub fn exit_leaf(&self, x: &[f32]) -> usize {
+        if self.nodes.is_empty() {
+            return 0;
+        }
+        let mut cur = Child::Inner(0);
+        loop {
+            match cur {
+                Child::Leaf(l) => return l as usize,
+                Child::Inner(i) => {
+                    let n = &self.nodes[i as usize];
+                    cur = if x[n.feature as usize] <= n.threshold { n.left } else { n.right };
+                }
+            }
+        }
+    }
+
+    /// Accumulate this tree's prediction for `x` into `out` (len `n_classes`).
+    pub fn predict_into(&self, x: &[f32], out: &mut [f32]) {
+        let leaf = self.exit_leaf(x);
+        for (o, v) in out.iter_mut().zip(self.leaf_row(leaf)) {
+            *o += v;
+        }
+    }
+
+    /// Maximum root-to-leaf depth (leaf-only tree has depth 0).
+    pub fn depth(&self) -> usize {
+        fn go(t: &Tree, c: Child) -> usize {
+            match c {
+                Child::Leaf(_) => 0,
+                Child::Inner(i) => {
+                    1 + go(t, t.nodes[i as usize].left).max(go(t, t.nodes[i as usize].right))
+                }
+            }
+        }
+        if self.nodes.is_empty() {
+            0
+        } else {
+            go(self, Child::Inner(0))
+        }
+    }
+
+    /// For every inner node, the contiguous range `[begin, end)` of leaf ids
+    /// in its **left** subtree. This is exactly the set of leaves a
+    /// QuickScorer "false node" (one with `x[k] > t`) removes from the
+    /// candidate set (paper §3, Algorithm 1 line 8).
+    pub fn left_leaf_ranges(&self) -> Vec<(u32, u32)> {
+        let mut out = vec![(0u32, 0u32); self.nodes.len()];
+        if !self.nodes.is_empty() {
+            self.leaf_span(Child::Inner(0), &mut out);
+        }
+        out
+    }
+
+    /// Leaf span `[begin, end)` of the subtree rooted at `c`, filling
+    /// left-subtree ranges along the way.
+    fn leaf_span(&self, c: Child, out: &mut Vec<(u32, u32)>) -> (u32, u32) {
+        match c {
+            Child::Leaf(l) => (l, l + 1),
+            Child::Inner(i) => {
+                let n = self.nodes[i as usize];
+                let (lb, le) = self.leaf_span(n.left, out);
+                let (rb, re) = self.leaf_span(n.right, out);
+                debug_assert_eq!(le, rb, "leaves must be numbered left-to-right");
+                out[i as usize] = (lb, le);
+                (lb, re)
+            }
+        }
+    }
+
+    /// Structural validation: every leaf id in `0..n_leaves` appears exactly
+    /// once, children indices are in range, leaf numbering is in-order, and
+    /// the leaf table has the right shape. Returns a description of the first
+    /// violation.
+    pub fn validate(&self) -> Result<(), String> {
+        if self.leaf_values.len() != self.n_leaves * self.n_classes {
+            return Err(format!(
+                "leaf table shape {} != {}x{}",
+                self.leaf_values.len(),
+                self.n_leaves,
+                self.n_classes
+            ));
+        }
+        if self.nodes.is_empty() {
+            return if self.n_leaves == 1 { Ok(()) } else { Err("no nodes but >1 leaf".into()) };
+        }
+        if self.nodes.len() + 1 != self.n_leaves {
+            return Err(format!(
+                "binary tree must have n_leaves = n_nodes+1 ({} vs {})",
+                self.n_leaves,
+                self.nodes.len()
+            ));
+        }
+        // In-order walk must visit leaves 0,1,2,... and each inner node once.
+        let mut next_leaf = 0u32;
+        let mut visited = vec![false; self.nodes.len()];
+        let mut err = None;
+        self.walk_inorder(Child::Inner(0), &mut next_leaf, &mut visited, &mut err);
+        if let Some(e) = err {
+            return Err(e);
+        }
+        if next_leaf as usize != self.n_leaves {
+            return Err(format!("visited {next_leaf} leaves, expected {}", self.n_leaves));
+        }
+        if !visited.iter().all(|&v| v) {
+            return Err("unreachable inner node".into());
+        }
+        Ok(())
+    }
+
+    fn walk_inorder(
+        &self,
+        c: Child,
+        next_leaf: &mut u32,
+        visited: &mut [bool],
+        err: &mut Option<String>,
+    ) {
+        if err.is_some() {
+            return;
+        }
+        match c {
+            Child::Leaf(l) => {
+                if l != *next_leaf {
+                    *err = Some(format!("leaf {l} out of order (expected {next_leaf})"));
+                }
+                *next_leaf += 1;
+            }
+            Child::Inner(i) => {
+                let i = i as usize;
+                if i >= self.nodes.len() {
+                    *err = Some(format!("node index {i} out of range"));
+                    return;
+                }
+                if visited[i] {
+                    *err = Some(format!("node {i} visited twice"));
+                    return;
+                }
+                visited[i] = true;
+                self.walk_inorder(self.nodes[i].left, next_leaf, visited, err);
+                self.walk_inorder(self.nodes[i].right, next_leaf, visited, err);
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// A hand-built 4-leaf tree:
+    ///          n0: x0 <= 0.5
+    ///         /            \
+    ///    n1: x1 <= 0.25    n2: x0 <= 0.75
+    ///    /      \          /      \
+    ///  L0       L1       L2       L3
+    pub fn sample_tree() -> Tree {
+        Tree {
+            nodes: vec![
+                Node { feature: 0, threshold: 0.5, left: Child::Inner(1), right: Child::Inner(2) },
+                Node { feature: 1, threshold: 0.25, left: Child::Leaf(0), right: Child::Leaf(1) },
+                Node { feature: 0, threshold: 0.75, left: Child::Leaf(2), right: Child::Leaf(3) },
+            ],
+            leaf_values: vec![1.0, 2.0, 3.0, 4.0],
+            n_leaves: 4,
+            n_classes: 1,
+        }
+    }
+
+    #[test]
+    fn exit_leaves() {
+        let t = sample_tree();
+        assert_eq!(t.exit_leaf(&[0.0, 0.0]), 0);
+        assert_eq!(t.exit_leaf(&[0.0, 0.9]), 1);
+        assert_eq!(t.exit_leaf(&[0.6, 0.0]), 2);
+        assert_eq!(t.exit_leaf(&[0.9, 0.0]), 3);
+    }
+
+    #[test]
+    fn boundary_goes_left() {
+        let t = sample_tree();
+        // split is x <= t, so exactly-at-threshold goes left
+        assert_eq!(t.exit_leaf(&[0.5, 0.25]), 0);
+    }
+
+    #[test]
+    fn left_ranges() {
+        let t = sample_tree();
+        assert_eq!(t.left_leaf_ranges(), vec![(0, 2), (0, 1), (2, 3)]);
+    }
+
+    #[test]
+    fn validates() {
+        assert!(sample_tree().validate().is_ok());
+        assert!(Tree::leaf(vec![1.0]).validate().is_ok());
+    }
+
+    #[test]
+    fn invalid_leaf_order_detected() {
+        let mut t = sample_tree();
+        // Swap leaf ids 0 and 1 -> out of order.
+        t.nodes[1].left = Child::Leaf(1);
+        t.nodes[1].right = Child::Leaf(0);
+        assert!(t.validate().is_err());
+    }
+
+    #[test]
+    fn depth() {
+        assert_eq!(sample_tree().depth(), 2);
+        assert_eq!(Tree::leaf(vec![0.0]).depth(), 0);
+    }
+
+    #[test]
+    fn predict_accumulates() {
+        let t = sample_tree();
+        let mut out = vec![10.0];
+        t.predict_into(&[0.9, 0.0], &mut out);
+        assert_eq!(out, vec![14.0]);
+    }
+}

@@ -1,0 +1,36 @@
+//! # arbors — fast inference of tree ensembles
+//!
+//! A reproduction of *"Fast Inference of Tree Ensembles on ARM Devices"*
+//! (Koschel, Buschjäger, Lucchese, Morik, 2023) as a three-layer
+//! Rust + JAX + Pallas system:
+//!
+//! * **Engines** ([`engine`]): the paper's five traversal strategies —
+//!   Naive (NA), If-Else (IE), QuickScorer (QS), V-QuickScorer (VQS),
+//!   RapidScorer (RS) — in float32 and int16 fixed-point variants, the SIMD
+//!   ones executing the paper's ARM NEON algorithms on a bit-exact NEON
+//!   simulator ([`neon`]).
+//! * **Coordinator** ([`coordinator`]): a serving layer with dynamic
+//!   batching, a model registry, and an engine auto-selector.
+//! * **Tensor path** ([`runtime`], `engine::tensor`): forests AOT-compiled
+//!   through JAX/Pallas to HLO and executed via PJRT.
+//! * **Substrates**: forest trainers ([`forest::builder`]), synthetic
+//!   datasets ([`data`]), quantization ([`quant`]), per-device cost models
+//!   ([`device`]), rank statistics ([`stats`]), and utility layers built
+//!   from scratch for the offline environment ([`util`], [`testing`]).
+//!
+//! See DESIGN.md for the full system inventory and EXPERIMENTS.md for the
+//! paper-vs-measured record.
+
+pub mod bench;
+pub mod cli;
+pub mod coordinator;
+pub mod data;
+pub mod neon;
+pub mod device;
+pub mod engine;
+pub mod quant;
+pub mod runtime;
+pub mod stats;
+pub mod forest;
+pub mod testing;
+pub mod util;

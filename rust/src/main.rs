@@ -1,0 +1,329 @@
+//! `arbors` — CLI entrypoint for the tree-ensemble inference system.
+//!
+//! Commands:
+//!   train      train a Random Forest / GBT and save it as JSON
+//!   predict    run a saved model over a CSV with a chosen engine
+//!   accuracy   accuracy of a model (float + quantized variants)
+//!   select     auto-select the best engine for a model (+ device profiles)
+//!   bench      regenerate a paper table/figure (table2..5, fig1, fig2, ...)
+//!   serve      demo serving loop with the dynamic batcher
+//!   datasets   list the built-in synthetic datasets
+//!
+//! Run `arbors <command> --help` semantics are documented in README.md.
+
+use std::path::PathBuf;
+use std::sync::atomic::Ordering;
+
+use anyhow::{bail, Context, Result};
+
+use arbors::bench::experiments;
+use arbors::bench::harness::Scale;
+use arbors::cli::Args;
+use arbors::coordinator::{select_engine, BatchConfig, Server};
+use arbors::data::{csv, DatasetId};
+use arbors::device::DeviceProfile;
+use arbors::engine::{build, EngineKind, Precision};
+use arbors::forest::builder::{
+    train_gbt, train_random_forest, GbtParams, RfParams, TreeParams,
+};
+use arbors::forest::{io, Forest};
+use arbors::quant::{accuracy_with_parts, QuantConfig, QuantParts};
+
+fn main() {
+    let args = Args::from_env();
+    let result = match args.command.as_str() {
+        "train" => cmd_train(&args),
+        "predict" => cmd_predict(&args),
+        "accuracy" => cmd_accuracy(&args),
+        "select" => cmd_select(&args),
+        "bench" => cmd_bench(&args),
+        "serve" => cmd_serve(&args),
+        "datasets" => cmd_datasets(&args),
+        "" | "help" | "--help" => {
+            print!("{}", USAGE);
+            Ok(())
+        }
+        other => Err(anyhow::anyhow!("unknown command '{other}'\n{USAGE}")),
+    };
+    if let Err(e) = result {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+const USAGE: &str = "\
+arbors — fast inference of tree ensembles (QuickScorer family on simulated ARM NEON)
+
+USAGE: arbors <command> [flags]
+
+  train    --dataset <magic|adult|eeg|mnist|fashion|msn> | --data <csv>
+           --trees N --leaves N --out model.json [--gbt] [--n N] [--seed S]
+  predict  --model model.json --data in.csv --engine <NA|IE|QS|VQS|RS> [--quant]
+           [--out scores.csv]
+  accuracy --model model.json --dataset <name> | --data <csv>
+  select   --model model.json [--device a53|exynos] [--n N]
+  bench    --exp <table2|table3|table4|table5|fig1|fig2|ablation|tensor>
+           (scale via ARBORS_SCALE=quick|default|full)
+  serve    --dataset <name> [--engine E] [--quant] [--requests N]
+           [--listen 127.0.0.1:7878]   (JSON-over-TCP protocol; see coordinator::net)
+  datasets
+";
+
+fn scale() -> Scale {
+    Scale::from_env()
+}
+
+fn load_or_generate(args: &Args) -> Result<arbors::data::Dataset> {
+    if let Some(path) = args.get("data") {
+        return csv::read_dataset(&PathBuf::from(path), "csv");
+    }
+    let name = args.get_or("dataset", "magic");
+    let id = DatasetId::from_name(&name)
+        .with_context(|| format!("unknown dataset '{name}'"))?;
+    let n = args.usize_or("n", id.default_n())?;
+    Ok(id.generate(n, args.usize_or("seed", 0xD5)? as u64))
+}
+
+fn cmd_train(args: &Args) -> Result<()> {
+    let trees = args.usize_or("trees", 128)?;
+    let leaves = args.usize_or("leaves", 64)?;
+    let seed = args.usize_or("seed", 0x5eed)? as u64;
+    let out = PathBuf::from(args.get_or("out", "model.json"));
+    let forest = if args.get_or("dataset", "") == "msn" || args.switch("gbt") {
+        let q = args.usize_or("queries", 100)?;
+        let docs = args.usize_or("docs", 20)?;
+        let ds = arbors::data::ranking::msn_like(q, docs, seed);
+        args.finish()?;
+        println!("training GBT: {trees} trees x {leaves} leaves on msn-like ({} rows)", ds.n);
+        train_gbt(
+            &ds.x,
+            &ds.relevance,
+            ds.d,
+            GbtParams {
+                n_trees: trees,
+                tree: TreeParams { max_leaves: leaves, min_samples_leaf: 2, mtry: 32 },
+                learning_rate: 0.1,
+                subsample: 0.7,
+                seed,
+            },
+        )
+    } else {
+        let ds = load_or_generate(args)?;
+        args.finish()?;
+        println!("training RF: {trees} trees x {leaves} leaves on {} (n={})", ds.name, ds.n);
+        train_random_forest(
+            &ds.x,
+            &ds.labels,
+            ds.d,
+            ds.n_classes,
+            RfParams {
+                n_trees: trees,
+                tree: TreeParams { max_leaves: leaves, min_samples_leaf: 2, mtry: 0 },
+                seed,
+                ..Default::default()
+            },
+        )
+    };
+    io::save(&forest, &out)?;
+    let (lmin, lmean, lmax) = forest.leaf_stats();
+    println!(
+        "saved {out:?}: {} trees, {} nodes, leaves/tree {lmin}/{lmean:.1}/{lmax}",
+        forest.n_trees(),
+        forest.n_nodes()
+    );
+    Ok(())
+}
+
+fn cmd_predict(args: &Args) -> Result<()> {
+    let model = io::load(&PathBuf::from(
+        args.get("model").context("--model required")?,
+    ))?;
+    let ds = csv::read_dataset(
+        &PathBuf::from(args.get("data").context("--data required")?),
+        "input",
+    )?;
+    if ds.d != model.n_features {
+        bail!("model expects {} features, data has {}", model.n_features, ds.d);
+    }
+    let kind = EngineKind::from_short(&args.get_or("engine", "RS"))
+        .context("bad --engine")?;
+    let precision = if args.switch("quant") { Precision::I16 } else { Precision::F32 };
+    let out_path = args.get("out").map(PathBuf::from);
+    args.finish()?;
+
+    let engine = build(kind, precision, &model, None)?;
+    let scores = engine.predict(&ds.x);
+    let preds = Forest::argmax(&scores, model.n_classes);
+    if let Some(p) = out_path {
+        let mut text = String::from("prediction\n");
+        for v in &preds {
+            text.push_str(&format!("{v}\n"));
+        }
+        std::fs::write(&p, text)?;
+        println!("wrote {} predictions to {p:?}", preds.len());
+    } else {
+        for v in preds.iter().take(20) {
+            println!("{v}");
+        }
+        if preds.len() > 20 {
+            println!("... ({} total; use --out to save all)", preds.len());
+        }
+    }
+    Ok(())
+}
+
+fn cmd_accuracy(args: &Args) -> Result<()> {
+    let model = io::load(&PathBuf::from(
+        args.get("model").context("--model required")?,
+    ))?;
+    let ds = load_or_generate(args)?;
+    args.finish()?;
+    let cfg = QuantConfig::paper_default();
+    println!("accuracy of {} on {} (n={}):", model.n_trees(), ds.name, ds.n);
+    for (label, parts) in [
+        ("float/float", QuantParts::NONE),
+        ("float/int16", QuantParts::LEAVES_ONLY),
+        ("int16/float", QuantParts::SPLITS_ONLY),
+        ("int16/int16", QuantParts::BOTH),
+    ] {
+        let acc = accuracy_with_parts(&model, cfg, parts, &ds.x, &ds.labels);
+        println!("  split/leaf {label}: {:.2}%", acc * 100.0);
+    }
+    Ok(())
+}
+
+fn cmd_select(args: &Args) -> Result<()> {
+    let model = io::load(&PathBuf::from(
+        args.get("model").context("--model required")?,
+    ))?;
+    let device = match args.get("device") {
+        None => None,
+        Some("a53") => Some(DeviceProfile::cortex_a53()),
+        Some("exynos") => Some(DeviceProfile::exynos_5422_big()),
+        Some("a7") => Some(DeviceProfile::exynos_5422_little()),
+        Some(other) => bail!("unknown device '{other}' (a53|exynos|a7)"),
+    };
+    let n = args.usize_or("n", 256)?;
+    args.finish()?;
+    let mut rng = arbors::util::Pcg32::seeded(0xCA11);
+    let calibration: Vec<f32> =
+        (0..n * model.n_features).map(|_| rng.f32()).collect();
+    let sel = select_engine(&model, &calibration, device.as_ref(), 3)?;
+    print!("{}", sel.report());
+    println!("recommended: {}", sel.best().name);
+    Ok(())
+}
+
+fn cmd_bench(args: &Args) -> Result<()> {
+    let exp = args.get_or("exp", "table5");
+    args.finish()?;
+    let s = scale();
+    let text = match exp.as_str() {
+        "table2" => experiments::table2(&s),
+        "table3" => experiments::table3(&s),
+        "table4" => experiments::table4(&s),
+        "table5" => experiments::table5(&s, 64),
+        "table5-l32" => experiments::table5(&s, 32),
+        "fig1" => experiments::fig1(&s),
+        "fig2" => experiments::fig2(&s),
+        "ablation" => experiments::ablation_rs(&s),
+        "tensor" => experiments::tensor_vs_native(s.repeats)?,
+        other => bail!("unknown experiment '{other}'"),
+    };
+    experiments::archive(&exp, &text);
+    println!("{text}");
+    Ok(())
+}
+
+fn cmd_serve(args: &Args) -> Result<()> {
+    let ds = load_or_generate(args)?;
+    let trees = args.usize_or("trees", 128)?;
+    let leaves = args.usize_or("leaves", 64)?;
+    let kind = EngineKind::from_short(&args.get_or("engine", "RS"))
+        .context("bad --engine")?;
+    let precision = if args.switch("quant") { Precision::I16 } else { Precision::F32 };
+    let n_requests = args.usize_or("requests", 10_000)?;
+    let listen = args.get("listen").map(str::to_string);
+    args.finish()?;
+
+    if let Some(addr) = listen {
+        // Network mode: train, deploy, and serve the JSON-over-TCP protocol
+        // until interrupted.
+        let (train, _test) = ds.split(0.2, 7);
+        println!("training {trees} x {leaves} RF on {} ...", train.name);
+        let forest = arbors::bench::harness::cached_rf(&train, trees, leaves);
+        let server = std::sync::Arc::new(Server::new());
+        server.deploy("model", &forest, kind, precision, BatchConfig::default())?;
+        let net = arbors::coordinator::NetServer::start(server.clone(), &addr)?;
+        println!(
+            "serving model 'model' on {} — protocol: {{\"model\": \"model\", \"x\": [...]}}",
+            net.addr()
+        );
+        loop {
+            std::thread::sleep(std::time::Duration::from_secs(10));
+            print!("{}", server.report());
+        }
+    }
+
+    let (train, test) = ds.split(0.2, 7);
+    println!("training {} x {} RF on {} ...", trees, leaves, train.name);
+    let forest = arbors::bench::harness::cached_rf(&train, trees, leaves);
+    let server = Server::new();
+    server.deploy("model", &forest, kind, precision, BatchConfig::default())?;
+    println!("serving {n_requests} requests through the dynamic batcher ...");
+
+    let dep = server.model("model").unwrap();
+    let sw = arbors::util::Stopwatch::start();
+    let mut correct = 0usize;
+    let mut replies = Vec::with_capacity(1024);
+    for i in 0..n_requests {
+        let row = test.row(i % test.n).to_vec();
+        replies.push((i % test.n, dep.batcher.submit(row)));
+        if replies.len() == 1024 || i + 1 == n_requests {
+            for (j, r) in replies.drain(..) {
+                let scores = r?.recv().map_err(|_| anyhow::anyhow!("server gone"))??;
+                let pred = Forest::argmax(&scores, forest.n_classes)[0];
+                if pred == test.labels[j] {
+                    correct += 1;
+                }
+            }
+        }
+    }
+    let total_s = sw.micros() / 1e6;
+    println!(
+        "done: {:.0} req/s, accuracy {:.2}%",
+        n_requests as f64 / total_s,
+        100.0 * correct as f64 / n_requests as f64
+    );
+    println!("{}", server.report());
+    let m = &dep.batcher.metrics;
+    println!(
+        "batches executed: {} (mean size {:.1})",
+        m.batches.load(Ordering::Relaxed),
+        m.mean_batch_size()
+    );
+    Ok(())
+}
+
+fn cmd_datasets(args: &Args) -> Result<()> {
+    args.finish()?;
+    println!("{:<10} {:>6} {:>8} {:>8}  notes", "name", "d", "classes", "default_n");
+    for id in DatasetId::ALL {
+        let ds = id.generate(200, 1);
+        println!(
+            "{:<10} {:>6} {:>8} {:>8}  {}",
+            id.name(),
+            ds.d,
+            ds.n_classes,
+            id.default_n(),
+            match id {
+                DatasetId::Adult => "one-hot binary features (heavy RS merging)",
+                DatasetId::Eeg => "narrow band + outliers (quantization collapse)",
+                DatasetId::Mnist | DatasetId::Fashion => "256-level pixel grid",
+                DatasetId::Magic => "smooth continuous features",
+            }
+        );
+    }
+    println!("{:<10} {:>6} {:>8} {:>8}  ranking (graded relevance, query groups)", "msn", 136, 5, 2000);
+    Ok(())
+}

@@ -1,0 +1,17 @@
+//! ARM NEON instruction-set simulation (DESIGN.md system S1).
+//!
+//! The paper's contribution is the *conversion* of the QuickScorer family to
+//! ARM NEON; its SIMD algorithms are specified as NEON intrinsic sequences
+//! (Algorithms 2 and 4, §5.1). Since this build environment has no ARM
+//! hardware, [`types`] and [`ops`] model the NEON Q/D registers and the
+//! needed intrinsics bit-exactly, so the engines in [`crate::engine`] execute
+//! the paper's instruction sequences verbatim. [`trace`] provides the
+//! operation-count substrate the per-device cost model consumes.
+
+pub mod ops;
+pub mod trace;
+pub mod types;
+
+pub use ops::*;
+pub use trace::OpTrace;
+pub use types::*;

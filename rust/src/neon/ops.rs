@@ -1,0 +1,589 @@
+//! NEON intrinsics, simulated bit-exactly.
+//!
+//! Function names and semantics follow the ARM C Language Extensions (ACLE);
+//! each function documents the AArch64 instruction it models. Only the
+//! intrinsics used by the paper's Algorithms 2 and 4, its §5.1 quantized
+//! variants, and our engines are provided — this is an engine substrate, not
+//! a complete ISA.
+//!
+//! All functions are `#[inline]` and operate on plain arrays, so LLVM
+//! vectorizes them into native SSE/AVX; the *algorithms* stay exactly the
+//! NEON ones.
+
+use super::types::*;
+
+// ---------------------------------------------------------------------------
+// Broadcast / load / store
+// ---------------------------------------------------------------------------
+
+/// `DUP Vd.16B, rn` — broadcast a u8 to all 16 lanes.
+#[inline]
+pub fn vdupq_n_u8(v: u8) -> U8x16 {
+    U8x16([v; 16])
+}
+
+/// `DUP Vd.8H, rn` — broadcast an i16 to all 8 lanes.
+#[inline]
+pub fn vdupq_n_s16(v: i16) -> I16x8 {
+    I16x8([v; 8])
+}
+
+/// `DUP Vd.4S, rn` — broadcast a u32 to all 4 lanes.
+#[inline]
+pub fn vdupq_n_u32(v: u32) -> U32x4 {
+    U32x4([v; 4])
+}
+
+/// `DUP Vd.4S, vn` — broadcast an f32 to all 4 lanes.
+#[inline]
+pub fn vdupq_n_f32(v: f32) -> F32x4 {
+    F32x4([v; 4])
+}
+
+/// `DUP Vd.2D, rn` — broadcast a u64 to both lanes.
+#[inline]
+pub fn vdupq_n_u64(v: u64) -> U64x2 {
+    U64x2([v; 2])
+}
+
+/// `LD1 {Vt.4S}` — load 4 contiguous f32.
+#[inline]
+pub fn vld1q_f32(p: &[f32]) -> F32x4 {
+    F32x4([p[0], p[1], p[2], p[3]])
+}
+
+/// `LD1 {Vt.8H}` — load 8 contiguous i16.
+#[inline]
+pub fn vld1q_s16(p: &[i16]) -> I16x8 {
+    I16x8([p[0], p[1], p[2], p[3], p[4], p[5], p[6], p[7]])
+}
+
+/// `LD1 {Vt.16B}` — load 16 contiguous u8.
+#[inline]
+pub fn vld1q_u8(p: &[u8]) -> U8x16 {
+    let mut out = [0u8; 16];
+    out.copy_from_slice(&p[..16]);
+    U8x16(out)
+}
+
+/// `LD1 {Vt.4S}` — load 4 contiguous u32.
+#[inline]
+pub fn vld1q_u32(p: &[u32]) -> U32x4 {
+    U32x4([p[0], p[1], p[2], p[3]])
+}
+
+/// `LD1 {Vt.2D}` — load 2 contiguous u64.
+#[inline]
+pub fn vld1q_u64(p: &[u64]) -> U64x2 {
+    U64x2([p[0], p[1]])
+}
+
+/// `ST1 {Vt.16B}` — store 16 u8.
+#[inline]
+pub fn vst1q_u8(p: &mut [u8], v: U8x16) {
+    p[..16].copy_from_slice(&v.0);
+}
+
+/// `ST1 {Vt.4S}` — store 4 u32.
+#[inline]
+pub fn vst1q_u32(p: &mut [u32], v: U32x4) {
+    p[..4].copy_from_slice(&v.0);
+}
+
+/// `ST1 {Vt.2D}` — store 2 u64.
+#[inline]
+pub fn vst1q_u64(p: &mut [u64], v: U64x2) {
+    p[..2].copy_from_slice(&v.0);
+}
+
+/// `ST1 {Vt.8H}` — store 8 i16.
+#[inline]
+pub fn vst1q_s16(p: &mut [i16], v: I16x8) {
+    p[..8].copy_from_slice(&v.0);
+}
+
+/// `ST1 {Vt.4S}` — store 4 f32.
+#[inline]
+pub fn vst1q_f32(p: &mut [f32], v: F32x4) {
+    p[..4].copy_from_slice(&v.0);
+}
+
+// ---------------------------------------------------------------------------
+// Lane access
+// ---------------------------------------------------------------------------
+
+/// `UMOV` — extract u8 lane.
+#[inline]
+pub fn vgetq_lane_u8(v: U8x16, lane: usize) -> u8 {
+    v.0[lane]
+}
+
+/// `UMOV` — extract u32 lane.
+#[inline]
+pub fn vgetq_lane_u32(v: U32x4, lane: usize) -> u32 {
+    v.0[lane]
+}
+
+/// `UMOV` — extract u64 lane.
+#[inline]
+pub fn vgetq_lane_u64(v: U64x2, lane: usize) -> u64 {
+    v.0[lane]
+}
+
+/// `INS` — insert f32 lane.
+#[inline]
+pub fn vsetq_lane_f32(v: f32, vec: F32x4, lane: usize) -> F32x4 {
+    let mut out = vec;
+    out.0[lane] = v;
+    out
+}
+
+// ---------------------------------------------------------------------------
+// Comparisons (result lanes are all-ones on true, zero on false)
+// ---------------------------------------------------------------------------
+
+/// `FCMGT Vd.4S` — per-lane `a > b` for f32.
+#[inline]
+pub fn vcgtq_f32(a: F32x4, b: F32x4) -> U32x4 {
+    let mut out = [0u32; 4];
+    for i in 0..4 {
+        out[i] = if a.0[i] > b.0[i] { u32::MAX } else { 0 };
+    }
+    U32x4(out)
+}
+
+/// `CMGT Vd.8H` — per-lane `a > b` for i16.
+#[inline]
+pub fn vcgtq_s16(a: I16x8, b: I16x8) -> U16x8 {
+    let mut out = [0u16; 8];
+    for i in 0..8 {
+        out[i] = if a.0[i] > b.0[i] { u16::MAX } else { 0 };
+    }
+    U16x8(out)
+}
+
+/// `CMEQ Vd.16B` — per-lane `a == b` for u8.
+#[inline]
+pub fn vceqq_u8(a: U8x16, b: U8x16) -> U8x16 {
+    let mut out = [0u8; 16];
+    for i in 0..16 {
+        out[i] = if a.0[i] == b.0[i] { u8::MAX } else { 0 };
+    }
+    U8x16(out)
+}
+
+/// `CMTST Vd.16B` — per-lane `(a & b) != 0` for u8 (the paper's Alg. 4 uses
+/// this against an all-ones vector to fuse "compare ≠ 0" with the negation).
+#[inline]
+pub fn vtstq_u8(a: U8x16, b: U8x16) -> U8x16 {
+    let mut out = [0u8; 16];
+    for i in 0..16 {
+        out[i] = if a.0[i] & b.0[i] != 0 { u8::MAX } else { 0 };
+    }
+    U8x16(out)
+}
+
+// ---------------------------------------------------------------------------
+// Bitwise
+// ---------------------------------------------------------------------------
+
+macro_rules! bitwise {
+    ($and:ident, $orr:ident, $mvn:ident, $ty:ident, $n:expr) => {
+        /// `AND Vd` — bitwise and.
+        #[inline]
+        pub fn $and(a: $ty, b: $ty) -> $ty {
+            let mut out = a;
+            for i in 0..$n {
+                out.0[i] &= b.0[i];
+            }
+            out
+        }
+
+        /// `ORR Vd` — bitwise or.
+        #[inline]
+        pub fn $orr(a: $ty, b: $ty) -> $ty {
+            let mut out = a;
+            for i in 0..$n {
+                out.0[i] |= b.0[i];
+            }
+            out
+        }
+
+        /// `MVN Vd` — bitwise not.
+        #[inline]
+        pub fn $mvn(a: $ty) -> $ty {
+            let mut out = a;
+            for i in 0..$n {
+                out.0[i] = !out.0[i];
+            }
+            out
+        }
+    };
+}
+
+bitwise!(vandq_u8, vorrq_u8, vmvnq_u8, U8x16, 16);
+bitwise!(vandq_u16, vorrq_u16, vmvnq_u16, U16x8, 8);
+bitwise!(vandq_u32, vorrq_u32, vmvnq_u32, U32x4, 4);
+bitwise!(vandq_u64, vorrq_u64, vmvnq_u64, U64x2, 2);
+
+/// `BSL Vd.16B` — bitwise select: for each *bit*, `sel ? a : b`.
+#[inline]
+pub fn vbslq_u8(sel: U8x16, a: U8x16, b: U8x16) -> U8x16 {
+    let mut out = [0u8; 16];
+    for i in 0..16 {
+        out[i] = (sel.0[i] & a.0[i]) | (!sel.0[i] & b.0[i]);
+    }
+    U8x16(out)
+}
+
+/// `BSL` on 32-bit lanes.
+#[inline]
+pub fn vbslq_u32(sel: U32x4, a: U32x4, b: U32x4) -> U32x4 {
+    let mut out = [0u32; 4];
+    for i in 0..4 {
+        out[i] = (sel.0[i] & a.0[i]) | (!sel.0[i] & b.0[i]);
+    }
+    U32x4(out)
+}
+
+/// `BSL` on 64-bit lanes.
+#[inline]
+pub fn vbslq_u64(sel: U64x2, a: U64x2, b: U64x2) -> U64x2 {
+    let mut out = [0u64; 2];
+    for i in 0..2 {
+        out[i] = (sel.0[i] & a.0[i]) | (!sel.0[i] & b.0[i]);
+    }
+    U64x2(out)
+}
+
+// ---------------------------------------------------------------------------
+// Bit manipulation (the Alg. 4 exit-leaf search)
+// ---------------------------------------------------------------------------
+
+/// `RBIT Vd.16B` — reverse the bits *within each byte*.
+#[inline]
+pub fn vrbitq_u8(a: U8x16) -> U8x16 {
+    let mut out = [0u8; 16];
+    for i in 0..16 {
+        out[i] = a.0[i].reverse_bits();
+    }
+    U8x16(out)
+}
+
+/// `CLZ Vd.16B` — count leading zeros per byte.
+#[inline]
+pub fn vclzq_u8(a: U8x16) -> U8x16 {
+    let mut out = [0u8; 16];
+    for i in 0..16 {
+        out[i] = a.0[i].leading_zeros() as u8;
+    }
+    U8x16(out)
+}
+
+// ---------------------------------------------------------------------------
+// Arithmetic
+// ---------------------------------------------------------------------------
+
+/// `MLA Vd.16B` — multiply-accumulate: `a + b * c` per u8 lane (wrapping).
+#[inline]
+pub fn vmlaq_u8(a: U8x16, b: U8x16, c: U8x16) -> U8x16 {
+    let mut out = [0u8; 16];
+    for i in 0..16 {
+        out[i] = a.0[i].wrapping_add(b.0[i].wrapping_mul(c.0[i]));
+    }
+    U8x16(out)
+}
+
+/// `FADD Vd.4S` — f32 add.
+#[inline]
+pub fn vaddq_f32(a: F32x4, b: F32x4) -> F32x4 {
+    F32x4([a.0[0] + b.0[0], a.0[1] + b.0[1], a.0[2] + b.0[2], a.0[3] + b.0[3]])
+}
+
+/// `ADD Vd.8H` — i16 add (wrapping, as on hardware).
+#[inline]
+pub fn vaddq_s16(a: I16x8, b: I16x8) -> I16x8 {
+    let mut out = [0i16; 8];
+    for i in 0..8 {
+        out[i] = a.0[i].wrapping_add(b.0[i]);
+    }
+    I16x8(out)
+}
+
+/// `ADD Vd.4S` — i32 add (wrapping).
+#[inline]
+pub fn vaddq_s32(a: I32x4, b: I32x4) -> I32x4 {
+    let mut out = [0i32; 4];
+    for i in 0..4 {
+        out[i] = a.0[i].wrapping_add(b.0[i]);
+    }
+    I32x4(out)
+}
+
+// ---------------------------------------------------------------------------
+// Narrowing / widening / halves (the §5.1 mask-extension chain)
+// ---------------------------------------------------------------------------
+
+/// `DUP Vd.1D` (lower half) — low 4 i16 lanes.
+#[inline]
+pub fn vget_low_s16(a: I16x8) -> I16x4 {
+    I16x4([a.0[0], a.0[1], a.0[2], a.0[3]])
+}
+
+/// Upper 4 i16 lanes.
+#[inline]
+pub fn vget_high_s16(a: I16x8) -> I16x4 {
+    I16x4([a.0[4], a.0[5], a.0[6], a.0[7]])
+}
+
+/// `SSHLL` — sign-extend 4 i16 to 4 i32. Applied to comparison masks
+/// (all-ones/zero) this yields 32-bit all-ones/zero lanes, which is exactly
+/// how §5.1 widens an int16 compare mask to cover 32-bit bitvector words.
+#[inline]
+pub fn vmovl_s16(a: I16x4) -> I32x4 {
+    I32x4([a.0[0] as i32, a.0[1] as i32, a.0[2] as i32, a.0[3] as i32])
+}
+
+/// Low 2 i32 lanes.
+#[inline]
+pub fn vget_low_s32(a: I32x4) -> I32x2 {
+    I32x2([a.0[0], a.0[1]])
+}
+
+/// High 2 i32 lanes.
+#[inline]
+pub fn vget_high_s32(a: I32x4) -> I32x2 {
+    I32x2([a.0[2], a.0[3]])
+}
+
+/// `SSHLL` — sign-extend 2 i32 to 2 i64.
+#[inline]
+pub fn vmovl_s32(a: I32x2) -> I64x2 {
+    I64x2([a.0[0] as i64, a.0[1] as i64])
+}
+
+/// Low/high u32 halves (for widening f32-compare masks to u64 bitvectors).
+#[inline]
+pub fn vget_low_u32(a: U32x4) -> U32x2 {
+    U32x2([a.0[0], a.0[1]])
+}
+
+/// High 2 u32 lanes.
+#[inline]
+pub fn vget_high_u32(a: U32x4) -> U32x2 {
+    U32x2([a.0[2], a.0[3]])
+}
+
+/// `USHLL` — zero-extend... but for *masks* we sign-extend so all-ones stays
+/// all-ones: implemented as arithmetic extension of the mask semantics.
+#[inline]
+pub fn vmovl_mask_u32(a: U32x2) -> U64x2 {
+    U64x2([
+        if a.0[0] != 0 { u64::MAX } else { 0 },
+        if a.0[1] != 0 { u64::MAX } else { 0 },
+    ])
+}
+
+/// `XTN` — narrow 4 u32 lanes to 4 u16 lanes (truncating).
+#[inline]
+pub fn vmovn_u32(a: U32x4) -> U16x4 {
+    U16x4([a.0[0] as u16, a.0[1] as u16, a.0[2] as u16, a.0[3] as u16])
+}
+
+/// `XTN` — narrow 8 u16 lanes to 8 u8 lanes (truncating).
+#[inline]
+pub fn vmovn_u16(a: U16x8) -> U8x8 {
+    let mut out = [0u8; 8];
+    for i in 0..8 {
+        out[i] = a.0[i] as u8;
+    }
+    U8x8(out)
+}
+
+/// Combine two D registers into a Q register.
+#[inline]
+pub fn vcombine_u16(lo: U16x4, hi: U16x4) -> U16x8 {
+    U16x8([lo.0[0], lo.0[1], lo.0[2], lo.0[3], hi.0[0], hi.0[1], hi.0[2], hi.0[3]])
+}
+
+/// Combine two u8 D registers.
+#[inline]
+pub fn vcombine_u8(lo: U8x8, hi: U8x8) -> U8x16 {
+    let mut out = [0u8; 16];
+    out[..8].copy_from_slice(&lo.0);
+    out[8..].copy_from_slice(&hi.0);
+    U8x16(out)
+}
+
+// ---------------------------------------------------------------------------
+// Horizontal reductions (mask-nonzero checks)
+// ---------------------------------------------------------------------------
+
+/// `UMAXV Bd, Vn.16B` — max across u8 lanes.
+#[inline]
+pub fn vmaxvq_u8(a: U8x16) -> u8 {
+    a.0.iter().copied().max().unwrap()
+}
+
+/// `UMAXV Hd, Vn.8H` — max across u16 lanes.
+#[inline]
+pub fn vmaxvq_u16(a: U16x8) -> u16 {
+    a.0.iter().copied().max().unwrap()
+}
+
+/// `UMAXV Sd, Vn.4S` — max across u32 lanes.
+#[inline]
+pub fn vmaxvq_u32(a: U32x4) -> u32 {
+    a.0.iter().copied().max().unwrap()
+}
+
+/// `FADDP`-chain — horizontal f32 sum (used in score reduction).
+#[inline]
+pub fn vaddvq_f32(a: F32x4) -> f32 {
+    (a.0[0] + a.0[1]) + (a.0[2] + a.0[3])
+}
+
+// ---------------------------------------------------------------------------
+// Reinterpret casts (free on hardware)
+// ---------------------------------------------------------------------------
+
+/// `vreinterpretq_u8_u16` — no-op register cast.
+#[inline]
+pub fn vreinterpretq_u8_u16(a: U16x8) -> U8x16 {
+    U8x16::from_bytes(a.to_bytes())
+}
+
+/// `vreinterpretq_u8_u32` — no-op register cast.
+#[inline]
+pub fn vreinterpretq_u8_u32(a: U32x4) -> U8x16 {
+    U8x16::from_bytes(a.to_bytes())
+}
+
+/// `vreinterpretq_u32_s32` — no-op register cast.
+#[inline]
+pub fn vreinterpretq_u32_s32(a: I32x4) -> U32x4 {
+    U32x4::from_bytes(a.to_bytes())
+}
+
+/// `vreinterpretq_u64_s64` — no-op register cast.
+#[inline]
+pub fn vreinterpretq_u64_s64(a: I64x2) -> U64x2 {
+    U64x2::from_bytes(a.to_bytes())
+}
+
+/// `vreinterpretq_u16_s16`-of-compare: the u16 mask viewed as i16 lanes
+/// (for feeding `vmovl_s16`).
+#[inline]
+pub fn vreinterpretq_s16_u16(a: U16x8) -> I16x8 {
+    I16x8::from_bytes(a.to_bytes())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn compare_masks_all_ones() {
+        let m = vcgtq_f32(F32x4([1.0, 0.0, 2.0, -1.0]), vdupq_n_f32(0.5));
+        assert_eq!(m, U32x4([u32::MAX, 0, u32::MAX, 0]));
+        let m = vcgtq_s16(I16x8([1, 0, -5, 7, 8, -1, 3, 2]), vdupq_n_s16(2));
+        assert_eq!(m.0, [0, 0, 0, u16::MAX, u16::MAX, 0, u16::MAX, 0]);
+    }
+
+    #[test]
+    fn nan_compares_false() {
+        let m = vcgtq_f32(F32x4([f32::NAN, 1.0, f32::NAN, 2.0]), vdupq_n_f32(0.0));
+        assert_eq!(m.0, [0, u32::MAX, 0, u32::MAX]);
+    }
+
+    #[test]
+    fn tst_vs_ceq() {
+        let a = U8x16([0, 1, 2, 0, 255, 0, 0, 0, 0, 0, 0, 0, 0, 0, 0, 4]);
+        let ones = vdupq_n_u8(0xFF);
+        // vtstq(a, ones) = "a != 0" mask — the fused negated-compare trick.
+        let t = vtstq_u8(a, ones);
+        let expect: Vec<u8> = a.0.iter().map(|&v| if v != 0 { 255 } else { 0 }).collect();
+        assert_eq!(&t.0[..], &expect[..]);
+        // and equals NOT(vceq(a, 0))
+        let e = vmvnq_u8(vceqq_u8(a, vdupq_n_u8(0)));
+        assert_eq!(t, e);
+    }
+
+    #[test]
+    fn bsl_selects_bitwise() {
+        let sel = U8x16([0xF0; 16]);
+        let a = vdupq_n_u8(0xAA);
+        let b = vdupq_n_u8(0x55);
+        let r = vbslq_u8(sel, a, b);
+        assert_eq!(r.0[0], (0xF0 & 0xAA) | (0x0F & 0x55));
+    }
+
+    #[test]
+    fn rbit_clz_finds_lowest_set_bit() {
+        // ctz(b) == clz(rbit(b)) — Alg. 4 line 7.
+        for b in [1u8, 2, 4, 0b1010_0000, 0b0001_1000, 255] {
+            let v = vdupq_n_u8(b);
+            let ctz = vclzq_u8(vrbitq_u8(v));
+            assert_eq!(ctz.0[0] as u32, b.trailing_zeros(), "byte {b:#010b}");
+        }
+    }
+
+    #[test]
+    fn clz_of_zero_is_eight() {
+        assert_eq!(vclzq_u8(vdupq_n_u8(0)).0[0], 8);
+    }
+
+    #[test]
+    fn mla_formula() {
+        // c = c1 * 8 + c2 — the exit-leaf index combine (Alg. 4 line 8).
+        let c2 = U8x16([3; 16]);
+        let c1 = U8x16([2; 16]);
+        let r = vmlaq_u8(c2, c1, vdupq_n_u8(8));
+        assert_eq!(r.0[0], 19);
+    }
+
+    #[test]
+    fn widening_mask_chain_s16() {
+        // int16 compare mask -> two 32-bit masks, as §5.1 describes.
+        let m = vcgtq_s16(I16x8([5, 0, 5, 0, 5, 0, 5, 0]), vdupq_n_s16(1));
+        let mi = vreinterpretq_s16_u16(m);
+        let lo = vreinterpretq_u32_s32(vmovl_s16(vget_low_s16(mi)));
+        let hi = vreinterpretq_u32_s32(vmovl_s16(vget_high_s16(mi)));
+        assert_eq!(lo, U32x4([u32::MAX, 0, u32::MAX, 0]));
+        assert_eq!(hi, U32x4([u32::MAX, 0, u32::MAX, 0]));
+        // ... and on to 64-bit masks for L=64.
+        let lolo = vreinterpretq_u64_s64(vmovl_s32(vget_low_s32(
+            super::super::ops::i32x4_from_u32(lo),
+        )));
+        assert_eq!(lolo, U64x2([u64::MAX, 0]));
+    }
+
+    #[test]
+    fn narrow_combine_roundtrip() {
+        let m0 = U32x4([u32::MAX, 0, u32::MAX, 0]);
+        let m1 = U32x4([0, 0, u32::MAX, u32::MAX]);
+        let n = vcombine_u16(vmovn_u32(m0), vmovn_u32(m1));
+        assert_eq!(n.0, [0xFFFF, 0, 0xFFFF, 0, 0, 0, 0xFFFF, 0xFFFF]);
+        let b = vmovn_u16(n);
+        assert_eq!(b.0, [0xFF, 0, 0xFF, 0, 0, 0, 0xFF, 0xFF]);
+    }
+
+    #[test]
+    fn reductions() {
+        assert_eq!(vmaxvq_u8(vdupq_n_u8(0)), 0);
+        assert_eq!(vmaxvq_u32(U32x4([0, 1, 0, 7])), 7);
+        assert!((vaddvq_f32(F32x4([1.0, 2.0, 3.0, 4.0])) - 10.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn wrapping_adds() {
+        let r = vaddq_s16(vdupq_n_s16(i16::MAX), vdupq_n_s16(1));
+        assert_eq!(r.0[0], i16::MIN);
+    }
+}
+
+/// Helper used in tests: view a u32 mask register as i32 lanes.
+#[inline]
+pub fn i32x4_from_u32(a: U32x4) -> I32x4 {
+    I32x4::from_bytes(a.to_bytes())
+}

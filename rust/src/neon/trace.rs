@@ -1,0 +1,119 @@
+//! Operation traces for the device cost model.
+//!
+//! We do not own a Raspberry Pi or an Odroid-XU4, so per-device runtimes are
+//! *estimated*: each engine can produce an [`OpTrace`] — exact dynamic counts
+//! of the operations it would execute for a given batch — and
+//! [`crate::device`] converts traces into cycle/time estimates using
+//! per-microarchitecture cost tables. Counting lives outside the hot path
+//! (separate `count_ops` walks), so benchmarks measure undisturbed code.
+
+/// Dynamic operation counts for one engine invocation.
+///
+/// Categories are chosen to match the cost-table granularity of the ARM
+/// software optimization guides: scalar ALU/branch/FP, NEON ALU/MUL/FP,
+/// horizontal (cross-lane) NEON ops, and memory accesses split by expected
+/// locality (sequential stream vs. data-dependent random access).
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct OpTrace {
+    /// Scalar integer ALU ops (add/and/shift/compare).
+    pub scalar_alu: u64,
+    /// Scalar float compares/adds (the NA/IE/QS per-node work).
+    pub scalar_fp: u64,
+    /// Conditional branches executed (tree-descent and loop branches).
+    pub branch: u64,
+    /// ... of which are hard-to-predict (data-dependent direction).
+    pub branch_mispredictable: u64,
+    /// 128-bit NEON integer/bitwise ops.
+    pub neon_alu: u64,
+    /// 128-bit NEON multiplies / multiply-accumulates.
+    pub neon_mul: u64,
+    /// 128-bit NEON float ops (compares, adds).
+    pub neon_fp: u64,
+    /// Cross-lane NEON ops (reductions, narrow/widen, combines).
+    pub neon_horiz: u64,
+    /// Sequential-stream loads (node arrays scanned in order), in bytes.
+    pub stream_load_bytes: u64,
+    /// Data-dependent loads (leaf-value gathers, pointer chasing), count.
+    pub random_loads: u64,
+    /// Stores, in bytes.
+    pub store_bytes: u64,
+}
+
+impl OpTrace {
+    pub fn new() -> OpTrace {
+        OpTrace::default()
+    }
+
+    /// Element-wise sum of two traces.
+    pub fn add(&self, other: &OpTrace) -> OpTrace {
+        OpTrace {
+            scalar_alu: self.scalar_alu + other.scalar_alu,
+            scalar_fp: self.scalar_fp + other.scalar_fp,
+            branch: self.branch + other.branch,
+            branch_mispredictable: self.branch_mispredictable + other.branch_mispredictable,
+            neon_alu: self.neon_alu + other.neon_alu,
+            neon_mul: self.neon_mul + other.neon_mul,
+            neon_fp: self.neon_fp + other.neon_fp,
+            neon_horiz: self.neon_horiz + other.neon_horiz,
+            stream_load_bytes: self.stream_load_bytes + other.stream_load_bytes,
+            random_loads: self.random_loads + other.random_loads,
+            store_bytes: self.store_bytes + other.store_bytes,
+        }
+    }
+
+    /// Scale all counts (e.g. per-instance trace × batch size).
+    pub fn scale(&self, k: f64) -> OpTrace {
+        let s = |v: u64| (v as f64 * k).round() as u64;
+        OpTrace {
+            scalar_alu: s(self.scalar_alu),
+            scalar_fp: s(self.scalar_fp),
+            branch: s(self.branch),
+            branch_mispredictable: s(self.branch_mispredictable),
+            neon_alu: s(self.neon_alu),
+            neon_mul: s(self.neon_mul),
+            neon_fp: s(self.neon_fp),
+            neon_horiz: s(self.neon_horiz),
+            stream_load_bytes: s(self.stream_load_bytes),
+            random_loads: s(self.random_loads),
+            store_bytes: s(self.store_bytes),
+        }
+    }
+
+    /// Total dynamic instruction estimate (memory counted per 16B line-ish
+    /// access).
+    pub fn total_ops(&self) -> u64 {
+        self.scalar_alu
+            + self.scalar_fp
+            + self.branch
+            + self.neon_alu
+            + self.neon_mul
+            + self.neon_fp
+            + self.neon_horiz
+            + self.stream_load_bytes / 16
+            + self.random_loads
+            + self.store_bytes / 16
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn add_and_scale() {
+        let a = OpTrace { scalar_alu: 10, neon_fp: 4, ..Default::default() };
+        let b = OpTrace { scalar_alu: 5, branch: 2, ..Default::default() };
+        let c = a.add(&b);
+        assert_eq!(c.scalar_alu, 15);
+        assert_eq!(c.neon_fp, 4);
+        assert_eq!(c.branch, 2);
+        let d = c.scale(2.0);
+        assert_eq!(d.scalar_alu, 30);
+    }
+
+    #[test]
+    fn total_counts_memory_in_lines() {
+        let t = OpTrace { stream_load_bytes: 160, ..Default::default() };
+        assert_eq!(t.total_ops(), 10);
+    }
+}

@@ -1,0 +1,167 @@
+//! ARM NEON 128-bit vector types, simulated as fixed-size arrays.
+//!
+//! The paper's V-QuickScorer and RapidScorer are specified directly in terms
+//! of NEON registers and intrinsics (Algorithms 2 and 4). To execute those
+//! algorithms *as written* on non-ARM hardware, this module models the
+//! Q-register types (`float32x4_t`, `int16x8_t`, `uint8x16_t`, …) and the
+//! D-register halves used by the widening moves (`int16x4_t`, `int32x2_t`).
+//!
+//! The simulation is bit-exact with the AArch64 semantics for every
+//! intrinsic in [`super::ops`]; rustc/LLVM auto-vectorizes the arrays into
+//! SSE/AVX on x86, so the simulated engines keep SIMD-like performance.
+
+/// 16 × u8 (NEON `uint8x16_t`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+#[repr(transparent)]
+pub struct U8x16(pub [u8; 16]);
+
+/// 8 × i16 (NEON `int16x8_t`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+#[repr(transparent)]
+pub struct I16x8(pub [i16; 8]);
+
+/// 8 × u16 (NEON `uint16x8_t`) — comparison-mask results for i16 lanes.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+#[repr(transparent)]
+pub struct U16x8(pub [u16; 8]);
+
+/// 4 × i32 (NEON `int32x4_t`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+#[repr(transparent)]
+pub struct I32x4(pub [i32; 4]);
+
+/// 4 × u32 (NEON `uint32x4_t`) — comparison-mask results for f32 lanes and
+/// QuickScorer bitvectors with L ≤ 32.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+#[repr(transparent)]
+pub struct U32x4(pub [u32; 4]);
+
+/// 4 × f32 (NEON `float32x4_t`).
+#[derive(Debug, Clone, Copy, PartialEq, Default)]
+#[repr(transparent)]
+pub struct F32x4(pub [f32; 4]);
+
+/// 2 × u64 (NEON `uint64x2_t`) — QuickScorer bitvectors with L ≤ 64.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+#[repr(transparent)]
+pub struct U64x2(pub [u64; 2]);
+
+/// 2 × i64 (NEON `int64x2_t`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+#[repr(transparent)]
+pub struct I64x2(pub [i64; 2]);
+
+// --------------------------------------------------------------- D registers
+
+/// 4 × i16 (NEON `int16x4_t`, a D register half).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+#[repr(transparent)]
+pub struct I16x4(pub [i16; 4]);
+
+/// 2 × i32 (NEON `int32x2_t`, a D register half).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+#[repr(transparent)]
+pub struct I32x2(pub [i32; 2]);
+
+/// 8 × u8 (NEON `uint8x8_t`, a D register half).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+#[repr(transparent)]
+pub struct U8x8(pub [u8; 8]);
+
+/// 4 × u16 (NEON `uint16x4_t`, a D register half).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+#[repr(transparent)]
+pub struct U16x4(pub [u16; 4]);
+
+/// 2 × u32 (NEON `uint32x2_t`, a D register half).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+#[repr(transparent)]
+pub struct U32x2(pub [u32; 2]);
+
+/// ACLE-style aliases so engine code reads like the paper's listings.
+#[allow(non_camel_case_types)]
+pub mod acle {
+    pub type uint8x16_t = super::U8x16;
+    pub type int16x8_t = super::I16x8;
+    pub type uint16x8_t = super::U16x8;
+    pub type int32x4_t = super::I32x4;
+    pub type uint32x4_t = super::U32x4;
+    pub type float32x4_t = super::F32x4;
+    pub type uint64x2_t = super::U64x2;
+    pub type int64x2_t = super::I64x2;
+    pub type int16x4_t = super::I16x4;
+    pub type int32x2_t = super::I32x2;
+    pub type uint8x8_t = super::U8x8;
+    pub type uint16x4_t = super::U16x4;
+    pub type uint32x2_t = super::U32x2;
+}
+
+macro_rules! impl_bytes {
+    ($ty:ident, $elem:ty, $n:expr) => {
+        impl $ty {
+            /// Reinterpret as the raw 16 register bytes (little-endian lanes,
+            /// matching AArch64 memory order).
+            #[inline]
+            pub fn to_bytes(self) -> [u8; 16] {
+                let mut out = [0u8; 16];
+                for (i, v) in self.0.iter().enumerate() {
+                    let b = v.to_le_bytes();
+                    out[i * (16 / $n)..(i + 1) * (16 / $n)].copy_from_slice(&b);
+                }
+                out
+            }
+
+            /// Build from raw register bytes.
+            #[inline]
+            pub fn from_bytes(bytes: [u8; 16]) -> Self {
+                let mut out = [<$elem>::default(); $n];
+                for i in 0..$n {
+                    let w = 16 / $n;
+                    let mut b = [0u8; 16 / $n];
+                    b.copy_from_slice(&bytes[i * w..(i + 1) * w]);
+                    out[i] = <$elem>::from_le_bytes(b);
+                }
+                $ty(out)
+            }
+        }
+    };
+}
+
+impl_bytes!(U8x16, u8, 16);
+impl_bytes!(I16x8, i16, 8);
+impl_bytes!(U16x8, u16, 8);
+impl_bytes!(I32x4, i32, 4);
+impl_bytes!(U32x4, u32, 4);
+impl_bytes!(F32x4, f32, 4);
+impl_bytes!(U64x2, u64, 2);
+impl_bytes!(I64x2, i64, 2);
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn byte_reinterpret_roundtrip() {
+        let v = U32x4([0x01020304, 0xAABBCCDD, 0, u32::MAX]);
+        assert_eq!(U32x4::from_bytes(v.to_bytes()), v);
+        let w = I16x8([1, -2, 3, -4, 5, -6, 7, i16::MIN]);
+        assert_eq!(I16x8::from_bytes(w.to_bytes()), w);
+    }
+
+    #[test]
+    fn lane_order_little_endian() {
+        // Lane 0 occupies the lowest bytes, as on AArch64.
+        let v = U32x4([0x11223344, 0, 0, 0]);
+        let b = v.to_bytes();
+        assert_eq!(&b[0..4], &[0x44, 0x33, 0x22, 0x11]);
+    }
+
+    #[test]
+    fn cross_type_reinterpret() {
+        // u32 mask 0xFFFFFFFF reinterpreted as u8 lanes = 4 × 0xFF.
+        let v = U32x4([u32::MAX, 0, 0, 0]);
+        let u = U8x16::from_bytes(v.to_bytes());
+        assert_eq!(&u.0[0..4], &[255, 255, 255, 255]);
+        assert_eq!(&u.0[4..8], &[0, 0, 0, 0]);
+    }
+}

@@ -1,0 +1,126 @@
+//! Node-merging statistics (paper Table 4).
+//!
+//! RapidScorer merges "equivalent nodes" — nodes across the whole forest
+//! testing the same `(feature, threshold)` pair — so only one comparison is
+//! executed per unique pair (§3). Quantization can *collapse* formerly
+//! distinct thresholds into one fixed-point value, increasing merging; on
+//! datasets whose informative thresholds live in a narrow band (EEG) this is
+//! dramatic and costs accuracy (Tables 3 & 4).
+
+use std::collections::HashSet;
+
+use crate::forest::Forest;
+use crate::quant::QForest;
+
+/// Fraction of nodes that remain after merging equivalent `(feature,
+/// threshold)` float nodes, i.e. `unique pairs / total nodes`.
+pub fn unique_node_fraction(f: &Forest) -> f64 {
+    let mut set: HashSet<(u32, u32)> = HashSet::new();
+    let mut total = 0usize;
+    for t in &f.trees {
+        for n in &t.nodes {
+            set.insert((n.feature, n.threshold.to_bits()));
+            total += 1;
+        }
+    }
+    if total == 0 {
+        1.0
+    } else {
+        set.len() as f64 / total as f64
+    }
+}
+
+/// Same statistic on the quantized forest (int16 thresholds).
+pub fn unique_node_fraction_quant(qf: &QForest) -> f64 {
+    let mut set: HashSet<(u32, i16)> = HashSet::new();
+    let mut total = 0usize;
+    for t in &qf.trees {
+        for (&f, &thr) in t.features.iter().zip(&t.thresholds) {
+            set.insert((f, thr));
+            total += 1;
+        }
+    }
+    if total == 0 {
+        1.0
+    } else {
+        set.len() as f64 / total as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::DatasetId;
+    use crate::forest::builder::{train_random_forest, RfParams, TreeParams};
+    use crate::quant::QuantConfig;
+
+    fn rf(ds: &crate::data::Dataset, n_trees: usize, seed: u64) -> Forest {
+        train_random_forest(
+            &ds.x,
+            &ds.labels,
+            ds.d,
+            ds.n_classes,
+            RfParams {
+                n_trees,
+                tree: TreeParams { max_leaves: 16, min_samples_leaf: 2, mtry: 0 },
+                seed,
+                ..Default::default()
+            },
+        )
+    }
+
+    #[test]
+    fn fraction_in_unit_interval() {
+        let ds = DatasetId::Magic.generate(600, 3);
+        let f = rf(&ds, 8, 1);
+        let u = unique_node_fraction(&f);
+        assert!(u > 0.0 && u <= 1.0);
+    }
+
+    #[test]
+    fn adult_merges_more_than_magic() {
+        // Binary one-hot features => few unique thresholds (paper Table 4:
+        // Adult 6-12% vs Magic 58-89%).
+        let adult = DatasetId::Adult.generate(800, 3);
+        let magic = DatasetId::Magic.generate(800, 3);
+        let fa = rf(&adult, 12, 2);
+        let fm = rf(&magic, 12, 2);
+        let ua = unique_node_fraction(&fa);
+        let um = unique_node_fraction(&fm);
+        assert!(ua < um, "adult {ua} should merge more than magic {um}");
+    }
+
+    #[test]
+    fn quantization_only_decreases_uniqueness() {
+        let ds = DatasetId::Eeg.generate(800, 4);
+        let f = rf(&ds, 12, 5);
+        let qf = QForest::from_forest(&f, QuantConfig::paper_default());
+        let u = unique_node_fraction(&f);
+        let uq = unique_node_fraction_quant(&qf);
+        assert!(uq <= u + 1e-12, "quant {uq} vs float {u}");
+    }
+
+    #[test]
+    fn eeg_collapses_under_quantization() {
+        // The paper's EEG anomaly: quantization halves the unique-node
+        // fraction (Table 4: 52.2% -> 28.6% at 128 trees).
+        let ds = DatasetId::Eeg.generate(1500, 7);
+        let f = rf(&ds, 16, 6);
+        let qf = QForest::from_forest(&f, QuantConfig::paper_default());
+        let u = unique_node_fraction(&f);
+        let uq = unique_node_fraction_quant(&qf);
+        assert!(uq < 0.75 * u, "expected collapse: float {u}, quant {uq}");
+    }
+
+    #[test]
+    fn mnist_unaffected_by_quantization() {
+        // Pixel grid spacing (1/255) is far above the quantization step
+        // (2^-15), so uniqueness barely moves (paper: identical columns).
+        let ds = DatasetId::Mnist.generate(400, 8);
+        let f = rf(&ds, 8, 7);
+        let qf = QForest::from_forest(&f, QuantConfig::paper_default());
+        let u = unique_node_fraction(&f);
+        let uq = unique_node_fraction_quant(&qf);
+        assert!((u - uq).abs() < 0.02, "float {u} vs quant {uq}");
+    }
+}

@@ -1,0 +1,376 @@
+//! Fixed-point quantization of tree ensembles (paper §5).
+//!
+//! Quantization maps floats to integers via `q(x) = ⌊s·x⌋` (eq. 3) with a
+//! positive scale `s`, applied to split thresholds, leaf values, and — at
+//! inference time — feature values. The paper stores 16-bit integers
+//! (`short`), which (a) removes all floating-point arithmetic from the
+//! traversal (relevant on FPU-less MCUs, Table 1) and (b) doubles SIMD lane
+//! parallelism: 8 int16 comparisons per NEON register instead of 4 float32
+//! (§5.1).
+//!
+//! Scale selection (§5): `s ∈ [M, 2^B]`. The lower bound keeps RF leaf
+//! probabilities (already scaled by 1/M) from flushing to zero; the upper
+//! bound is representability. We additionally bound `s` so the *accumulated*
+//! score cannot overflow an i16 accumulator — the paper's V-QuickScorer adds
+//! scores with 8-lane 16-bit adds, so the whole forest sum must fit i16.
+
+pub mod merge;
+
+use crate::forest::{Forest, Task, Tree};
+
+/// Fixed-point configuration.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct QuantConfig {
+    /// The scale constant `s` in `q(x) = ⌊s·x⌋`.
+    pub scale: f32,
+}
+
+impl QuantConfig {
+    /// The paper's default for normalized features: `s = 2^15`.
+    pub fn paper_default() -> QuantConfig {
+        QuantConfig { scale: 32768.0 }
+    }
+
+    /// Quantize one value to i16 with saturation.
+    #[inline]
+    pub fn q(&self, x: f32) -> i16 {
+        let v = (self.scale * x).floor();
+        v.clamp(i16::MIN as f32, i16::MAX as f32) as i16
+    }
+
+    /// Quantize a feature row/batch.
+    pub fn q_slice(&self, xs: &[f32], out: &mut Vec<i16>) {
+        out.clear();
+        out.extend(xs.iter().map(|&x| self.q(x)));
+    }
+
+    /// Dequantize a score.
+    #[inline]
+    pub fn dq(&self, v: i32) -> f32 {
+        v as f32 / self.scale
+    }
+}
+
+/// Which parts of the forest are quantized — Table 3 evaluates all four
+/// combinations of {float, int16} splits × leaves.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct QuantParts {
+    pub splits: bool,
+    pub leaves: bool,
+}
+
+impl QuantParts {
+    pub const BOTH: QuantParts = QuantParts { splits: true, leaves: true };
+    pub const SPLITS_ONLY: QuantParts = QuantParts { splits: true, leaves: false };
+    pub const LEAVES_ONLY: QuantParts = QuantParts { splits: false, leaves: true };
+    pub const NONE: QuantParts = QuantParts { splits: false, leaves: false };
+}
+
+/// A fully int16-quantized forest (thresholds and leaf values), preserving
+/// the float forest's topology. This is the model format the quantized
+/// engines (qNA/qIE/qQS/qVQS/qRS) consume.
+#[derive(Debug, Clone, PartialEq)]
+pub struct QForest {
+    pub trees: Vec<QTree>,
+    pub n_features: usize,
+    pub n_classes: usize,
+    pub task: Task,
+    /// Quantized base score (i32 — it participates in the i32 descale path).
+    pub base_score: Vec<i32>,
+    pub config: QuantConfig,
+}
+
+/// One quantized tree: same `Child` topology as [`Tree`], int16 payloads.
+#[derive(Debug, Clone, PartialEq)]
+pub struct QTree {
+    pub features: Vec<u32>,
+    pub thresholds: Vec<i16>,
+    pub left: Vec<crate::forest::Child>,
+    pub right: Vec<crate::forest::Child>,
+    pub leaf_values: Vec<i16>,
+    pub n_leaves: usize,
+}
+
+impl QForest {
+    /// Quantize a forest with the given scale.
+    pub fn from_forest(f: &Forest, config: QuantConfig) -> QForest {
+        let trees = f
+            .trees
+            .iter()
+            .map(|t| QTree {
+                features: t.nodes.iter().map(|n| n.feature).collect(),
+                thresholds: t.nodes.iter().map(|n| config.q(n.threshold)).collect(),
+                left: t.nodes.iter().map(|n| n.left).collect(),
+                right: t.nodes.iter().map(|n| n.right).collect(),
+                leaf_values: t.leaf_values.iter().map(|&v| config.q(v)).collect(),
+                n_leaves: t.n_leaves,
+            })
+            .collect();
+        QForest {
+            trees,
+            n_features: f.n_features,
+            n_classes: f.n_classes,
+            task: f.task,
+            base_score: f.base_score.iter().map(|&v| (config.scale * v).floor() as i32).collect(),
+            config,
+        }
+    }
+
+    /// Reference (naive-traversal) prediction on float inputs: features are
+    /// quantized on the fly, scores accumulate in i32 and are descaled.
+    /// Every quantized engine must agree with this bit-for-bit on scores
+    /// before descaling.
+    pub fn predict_batch(&self, x: &[f32]) -> Vec<f32> {
+        let n = x.len() / self.n_features;
+        let c = self.n_classes;
+        let mut out = vec![0f32; n * c];
+        let mut qx = Vec::new();
+        for i in 0..n {
+            self.config.q_slice(&x[i * self.n_features..(i + 1) * self.n_features], &mut qx);
+            let mut acc = vec![0i32; c];
+            for (j, &b) in self.base_score.iter().enumerate() {
+                acc[j] = b;
+            }
+            for t in &self.trees {
+                let leaf = t.exit_leaf_q(&qx);
+                for j in 0..c {
+                    acc[j] += t.leaf_values[leaf * c + j] as i32;
+                }
+            }
+            for j in 0..c {
+                out[i * c + j] = self.config.dq(acc[j]);
+            }
+        }
+        out
+    }
+
+    /// Max leaf count (the QuickScorer `L`).
+    pub fn max_leaves(&self) -> usize {
+        self.trees.iter().map(|t| t.n_leaves).max().unwrap_or(1)
+    }
+}
+
+impl QTree {
+    /// Walk with already-quantized features (split is `q(x) <= q(t)`).
+    pub fn exit_leaf_q(&self, qx: &[i16]) -> usize {
+        use crate::forest::Child;
+        if self.features.is_empty() {
+            return 0;
+        }
+        let mut cur = Child::Inner(0);
+        loop {
+            match cur {
+                Child::Leaf(l) => return l as usize,
+                Child::Inner(i) => {
+                    let i = i as usize;
+                    cur = if qx[self.features[i] as usize] <= self.thresholds[i] {
+                        self.left[i]
+                    } else {
+                        self.right[i]
+                    };
+                }
+            }
+        }
+    }
+}
+
+/// Evaluate accuracy under a partial quantization (Table 3): splits and/or
+/// leaves quantized, naive traversal. Float features are quantized only for
+/// the split comparison when `parts.splits` is set.
+pub fn accuracy_with_parts(
+    f: &Forest,
+    config: QuantConfig,
+    parts: QuantParts,
+    x: &[f32],
+    labels: &[u32],
+) -> f64 {
+    let n = labels.len();
+    let c = f.n_classes;
+    let mut correct = 0usize;
+    let mut qx = Vec::new();
+    for i in 0..n {
+        let row = &x[i * f.n_features..(i + 1) * f.n_features];
+        config.q_slice(row, &mut qx);
+        let mut scores = vec![0f64; c];
+        for t in &f.trees {
+            let leaf = exit_leaf_parts(t, row, &qx, config, parts.splits);
+            for j in 0..c {
+                let v = t.leaf_values[leaf * c + j];
+                scores[j] += if parts.leaves { config.q(v) as f64 / config.scale as f64 } else { v as f64 };
+            }
+        }
+        let mut best = 0usize;
+        for j in 1..c {
+            if scores[j] > scores[best] {
+                best = j;
+            }
+        }
+        if best as u32 == labels[i] {
+            correct += 1;
+        }
+    }
+    correct as f64 / n as f64
+}
+
+fn exit_leaf_parts(
+    t: &Tree,
+    row: &[f32],
+    qrow: &[i16],
+    config: QuantConfig,
+    quant_splits: bool,
+) -> usize {
+    use crate::forest::Child;
+    if t.nodes.is_empty() {
+        return 0;
+    }
+    let mut cur = Child::Inner(0);
+    loop {
+        match cur {
+            Child::Leaf(l) => return l as usize,
+            Child::Inner(i) => {
+                let n = &t.nodes[i as usize];
+                let go_left = if quant_splits {
+                    qrow[n.feature as usize] <= config.q(n.threshold)
+                } else {
+                    row[n.feature as usize] <= n.threshold
+                };
+                cur = if go_left { n.left } else { n.right };
+            }
+        }
+    }
+}
+
+/// The largest scale for which the quantized engines' 16-bit SIMD score
+/// accumulation (§5.1: `vaddq_s16`, 8 values at once) provably cannot wrap:
+/// `i16::MAX / (|base| + Σ_trees max_leaf |v|)`, also bounding thresholds by
+/// the feature range. Scales above this are *representable* but an
+/// adversarial instance can overflow the i16 accumulator — exactly as it
+/// would on the paper's hardware.
+pub fn max_safe_scale(f: &Forest, max_abs_feature: f32) -> f32 {
+    // Worst-case |score|: base + Σ_trees max_leaf |v|.
+    let mut worst: f32 = f.base_score.iter().map(|v| v.abs()).fold(0.0, f32::max);
+    for t in &f.trees {
+        let mx = t.leaf_values.iter().map(|v| v.abs()).fold(0f32, f32::max);
+        worst += mx;
+    }
+    let bound_scores = if worst > 0.0 { (i16::MAX as f32) / worst } else { f32::INFINITY };
+    let bound_thresholds =
+        if max_abs_feature > 0.0 { (i16::MAX as f32) / max_abs_feature } else { f32::INFINITY };
+    bound_scores.min(bound_thresholds)
+}
+
+/// Choose a scale for a forest per §5: as large as possible within
+/// `[M, 2^15]` while guaranteeing (a) thresholds fit i16 given the feature
+/// range `max_abs_feature`, and (b) the worst-case accumulated score fits an
+/// i16 SIMD accumulator (V-QuickScorer adds scores with 16-bit lanes).
+pub fn choose_scale(f: &Forest, max_abs_feature: f32) -> QuantConfig {
+    let m = f.n_trees().max(1) as f32;
+    let s = max_safe_scale(f, max_abs_feature).min(32768.0).max(m);
+    QuantConfig { scale: s }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::DatasetId;
+    use crate::forest::builder::{train_random_forest, RfParams, TreeParams};
+
+    fn trained() -> (Forest, crate::data::Dataset) {
+        let ds = DatasetId::Magic.generate(800, 17);
+        let f = train_random_forest(
+            &ds.x,
+            &ds.labels,
+            ds.d,
+            ds.n_classes,
+            RfParams {
+                n_trees: 16,
+                tree: TreeParams { max_leaves: 16, min_samples_leaf: 2, mtry: 0 },
+                ..Default::default()
+            },
+        );
+        (f, ds)
+    }
+
+    #[test]
+    fn q_floor_semantics() {
+        let c = QuantConfig { scale: 8.0 };
+        assert_eq!(c.q(0.99), 7); // floor(7.92)
+        assert_eq!(c.q(1.0), 8);
+        assert_eq!(c.q(-0.1), -1); // floor(-0.8) = -1
+        assert_eq!(c.q(0.0), 0);
+    }
+
+    #[test]
+    fn q_saturates() {
+        let c = QuantConfig::paper_default();
+        assert_eq!(c.q(2.0), i16::MAX);
+        assert_eq!(c.q(-2.0), i16::MIN);
+    }
+
+    #[test]
+    fn qforest_predictions_close_to_float() {
+        let (f, ds) = trained();
+        let qf = QForest::from_forest(&f, QuantConfig::paper_default());
+        let float_scores = f.predict_batch(&ds.x[..ds.d * 64]);
+        let q_scores = qf.predict_batch(&ds.x[..ds.d * 64]);
+        // Quantized scores should be close (not identical).
+        let max_diff = float_scores
+            .iter()
+            .zip(&q_scores)
+            .map(|(a, b)| (a - b).abs())
+            .fold(0f32, f32::max);
+        assert!(max_diff < 0.05, "max diff {max_diff}");
+    }
+
+    #[test]
+    fn accuracy_parts_none_matches_float() {
+        let (f, ds) = trained();
+        let cfg = QuantConfig::paper_default();
+        let a_float = f.accuracy(&ds.x, &ds.labels);
+        let a_none = accuracy_with_parts(&f, cfg, QuantParts::NONE, &ds.x, &ds.labels);
+        assert!((a_float - a_none).abs() < 1e-12);
+    }
+
+    #[test]
+    fn accuracy_quantized_near_float() {
+        let (f, ds) = trained();
+        let cfg = QuantConfig::paper_default();
+        let a_float = f.accuracy(&ds.x, &ds.labels);
+        let a_q = accuracy_with_parts(&f, cfg, QuantParts::BOTH, &ds.x, &ds.labels);
+        assert!((a_float - a_q).abs() < 0.03, "float {a_float} vs quant {a_q}");
+    }
+
+    #[test]
+    fn choose_scale_bounds() {
+        let (f, _) = trained();
+        let cfg = choose_scale(&f, 1.0);
+        assert!(cfg.scale >= f.n_trees() as f32);
+        assert!(cfg.scale <= 32768.0);
+        // RF leaves are probs/M; worst total <= 1+eps so score bound allows
+        // a large scale.
+        assert!(cfg.scale > 1024.0, "scale {}", cfg.scale);
+    }
+
+    #[test]
+    fn scores_fit_i16_accumulator() {
+        let (f, ds) = trained();
+        let cfg = choose_scale(&f, 1.0);
+        let qf = QForest::from_forest(&f, cfg);
+        // Accumulate worst-case per-instance scores and check i16 range.
+        for i in 0..64 {
+            let row = &ds.x[i * ds.d..(i + 1) * ds.d];
+            let mut qx = Vec::new();
+            cfg.q_slice(row, &mut qx);
+            let mut acc = vec![0i32; qf.n_classes];
+            for t in &qf.trees {
+                let leaf = t.exit_leaf_q(&qx);
+                for j in 0..qf.n_classes {
+                    acc[j] += t.leaf_values[leaf * qf.n_classes + j] as i32;
+                }
+            }
+            for &a in &acc {
+                assert!(a >= i16::MIN as i32 && a <= i16::MAX as i32, "overflow {a}");
+            }
+        }
+    }
+}

@@ -1,0 +1,243 @@
+//! PJRT runtime: load AOT artifacts (HLO text lowered by
+//! `python/compile/aot.py`) and execute them on the CPU PJRT client via the
+//! `xla` crate (DESIGN.md system S10).
+//!
+//! HLO *text* is the interchange format — jax ≥ 0.5 serializes protos with
+//! 64-bit instruction ids that xla_extension 0.5.1 rejects; the text parser
+//! reassigns ids (see /opt/xla-example/README.md). Python never runs on the
+//! request path: artifacts are compiled once at startup and executed from
+//! the Rust hot loop.
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+
+use crate::util::Json;
+
+/// Numeric representation of an artifact (mirrors `Precision`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ArtifactDtype {
+    F32,
+    I16,
+}
+
+/// One entry of `artifacts/manifest.json`.
+#[derive(Debug, Clone)]
+pub struct ModelMeta {
+    pub name: String,
+    pub hlo: String,
+    pub forest: String,
+    pub batch: usize,
+    pub n_trees: usize,
+    pub k: usize,
+    pub leaf_words: usize,
+    pub d: usize,
+    pub c: usize,
+    pub dtype: ArtifactDtype,
+    pub scale: f32,
+    pub vmem_bytes: usize,
+}
+
+/// Parse `manifest.json` from an artifacts directory.
+pub fn load_manifest(dir: &Path) -> Result<Vec<ModelMeta>> {
+    let path = dir.join("manifest.json");
+    let text = std::fs::read_to_string(&path)
+        .with_context(|| format!("reading {path:?}; run `make artifacts` first"))?;
+    let j = Json::parse(&text).map_err(|e| anyhow::anyhow!("{path:?}: {e}"))?;
+    if j.get("format").and_then(|v| v.as_str()) != Some("arbors-artifacts-v1") {
+        bail!("{path:?}: unknown manifest format");
+    }
+    let mut out = Vec::new();
+    for m in j.req("models").map_err(|e| anyhow::anyhow!("{e}"))?.as_arr().unwrap_or(&[]) {
+        let s = |k: &str| -> Result<String> {
+            Ok(m.req(k).map_err(|e| anyhow::anyhow!("{e}"))?.as_str().unwrap_or("").to_string())
+        };
+        let u = |k: &str| -> Result<usize> {
+            m.req(k)
+                .map_err(|e| anyhow::anyhow!("{e}"))?
+                .as_usize()
+                .ok_or_else(|| anyhow::anyhow!("manifest field {k} not a number"))
+        };
+        let dtype = match s("dtype")?.as_str() {
+            "f32" => ArtifactDtype::F32,
+            "i16" => ArtifactDtype::I16,
+            other => bail!("unknown artifact dtype {other}"),
+        };
+        out.push(ModelMeta {
+            name: s("name")?,
+            hlo: s("hlo")?,
+            forest: s("forest")?,
+            batch: u("batch")?,
+            n_trees: u("n_trees")?,
+            k: u("k")?,
+            leaf_words: u("leaf_words")?,
+            d: u("d")?,
+            c: u("c")?,
+            dtype,
+            scale: m.get("scale").and_then(|v| v.as_f32()).unwrap_or(1.0),
+            vmem_bytes: m.get("vmem_bytes").and_then(|v| v.as_usize()).unwrap_or(0),
+        });
+    }
+    Ok(out)
+}
+
+/// A PJRT client plus the artifact directory it loads from.
+pub struct Runtime {
+    client: xla::PjRtClient,
+    pub artifacts_dir: PathBuf,
+}
+
+/// A compiled executable with its manifest entry.
+pub struct LoadedModel {
+    exe: xla::PjRtLoadedExecutable,
+    pub meta: ModelMeta,
+}
+
+impl Runtime {
+    /// Create a CPU PJRT client rooted at an artifacts directory.
+    pub fn cpu(artifacts_dir: &Path) -> Result<Runtime> {
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        Ok(Runtime { client, artifacts_dir: artifacts_dir.to_path_buf() })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Load + compile one manifest entry.
+    pub fn load(&self, meta: &ModelMeta) -> Result<LoadedModel> {
+        let path = self.artifacts_dir.join(&meta.hlo);
+        let proto = xla::HloModuleProto::from_text_file(path.to_str().unwrap())
+            .with_context(|| format!("parsing HLO text {path:?}"))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self.client.compile(&comp).with_context(|| format!("compiling {path:?}"))?;
+        Ok(LoadedModel { exe, meta: meta.clone() })
+    }
+
+    /// Load every model in the manifest.
+    pub fn load_all(&self) -> Result<Vec<LoadedModel>> {
+        load_manifest(&self.artifacts_dir)?.iter().map(|m| self.load(m)).collect()
+    }
+}
+
+impl LoadedModel {
+    /// Execute with the given input literals; the lowered entry returns a
+    /// 1-tuple whose only element is the score matrix.
+    pub fn execute(&self, inputs: &[xla::Literal]) -> Result<xla::Literal> {
+        let result = self.exe.execute::<xla::Literal>(inputs)?;
+        let lit = result[0][0].to_literal_sync()?;
+        Ok(lit.to_tuple1()?)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Literal constructors for the dtypes the artifacts use
+// ---------------------------------------------------------------------------
+
+fn bytes_of<T: Copy>(data: &[T]) -> &[u8] {
+    unsafe {
+        std::slice::from_raw_parts(data.as_ptr() as *const u8, std::mem::size_of_val(data))
+    }
+}
+
+/// `f32[dims]` literal from a flat slice.
+pub fn lit_f32(data: &[f32], dims: &[usize]) -> Result<xla::Literal> {
+    Ok(xla::Literal::create_from_shape_and_untyped_data(
+        xla::ElementType::F32,
+        dims,
+        bytes_of(data),
+    )?)
+}
+
+/// `s32[dims]` literal.
+pub fn lit_i32(data: &[i32], dims: &[usize]) -> Result<xla::Literal> {
+    Ok(xla::Literal::create_from_shape_and_untyped_data(
+        xla::ElementType::S32,
+        dims,
+        bytes_of(data),
+    )?)
+}
+
+/// `u32[dims]` literal.
+pub fn lit_u32(data: &[u32], dims: &[usize]) -> Result<xla::Literal> {
+    Ok(xla::Literal::create_from_shape_and_untyped_data(
+        xla::ElementType::U32,
+        dims,
+        bytes_of(data),
+    )?)
+}
+
+/// `s16[dims]` literal.
+pub fn lit_i16(data: &[i16], dims: &[usize]) -> Result<xla::Literal> {
+    Ok(xla::Literal::create_from_shape_and_untyped_data(
+        xla::ElementType::S16,
+        dims,
+        bytes_of(data),
+    )?)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn artifacts() -> PathBuf {
+        // Tests run from the crate root; `make artifacts` must have run.
+        PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+    }
+
+    fn have_artifacts() -> bool {
+        artifacts().join("manifest.json").exists()
+    }
+
+    #[test]
+    fn manifest_parses() {
+        if !have_artifacts() {
+            eprintln!("skipping: artifacts not built");
+            return;
+        }
+        let models = load_manifest(&artifacts()).unwrap();
+        assert!(!models.is_empty());
+        assert!(models.iter().any(|m| m.dtype == ArtifactDtype::F32));
+        assert!(models.iter().any(|m| m.dtype == ArtifactDtype::I16));
+    }
+
+    #[test]
+    fn literal_roundtrip() {
+        let lit = lit_f32(&[1.0, 2.0, 3.0, 4.0], &[2, 2]).unwrap();
+        assert_eq!(lit.to_vec::<f32>().unwrap(), vec![1.0, 2.0, 3.0, 4.0]);
+        let lit = lit_u32(&[7, 8], &[2]).unwrap();
+        assert_eq!(lit.to_vec::<u32>().unwrap(), vec![7, 8]);
+        let lit = lit_i16(&[-1, 5], &[2]).unwrap();
+        assert_eq!(lit.to_vec::<i16>().unwrap(), vec![-1, 5]);
+    }
+
+    #[test]
+    fn load_and_execute_artifact() {
+        if !have_artifacts() {
+            eprintln!("skipping: artifacts not built");
+            return;
+        }
+        let rt = Runtime::cpu(&artifacts()).unwrap();
+        let metas = load_manifest(&artifacts()).unwrap();
+        let meta = metas.iter().find(|m| m.dtype == ArtifactDtype::F32).unwrap();
+        let model = rt.load(meta).unwrap();
+        // Zero inputs of the right shapes execute and give a [B, C] output.
+        let x = lit_f32(&vec![0.0; meta.batch * meta.d], &[meta.batch, meta.d]).unwrap();
+        let thr = lit_f32(&vec![f32::INFINITY; meta.n_trees * meta.k], &[meta.n_trees, meta.k])
+            .unwrap();
+        let fid = lit_i32(&vec![0; meta.n_trees * meta.k], &[meta.n_trees, meta.k]).unwrap();
+        let mask = lit_u32(&vec![u32::MAX; meta.n_trees * meta.k], &[meta.n_trees, meta.k])
+            .unwrap();
+        let mask2 = lit_u32(&vec![u32::MAX; meta.n_trees * meta.k], &[meta.n_trees, meta.k])
+            .unwrap();
+        let leaves = lit_f32(
+            &vec![0.0; meta.n_trees * meta.leaf_words * meta.c],
+            &[meta.n_trees, meta.leaf_words, meta.c],
+        )
+        .unwrap();
+        let out = model.execute(&[x, thr, fid, mask, mask2, leaves]).unwrap();
+        let v = out.to_vec::<f32>().unwrap();
+        assert_eq!(v.len(), meta.batch * meta.c);
+        assert!(v.iter().all(|&s| s == 0.0));
+    }
+}

@@ -1,0 +1,217 @@
+//! Critical-difference diagrams (Demšar 2006), rendered as monospace text —
+//! the paper's Figure 2.
+//!
+//! Pipeline: Friedman omnibus test → if significant, pairwise Wilcoxon
+//! signed-rank tests with Holm correction → methods whose pairwise
+//! differences are *not* significant are connected by a clique bar.
+
+use super::friedman::{friedman_test, Friedman};
+use super::wilcoxon::{holm_adjust, wilcoxon_signed_rank};
+
+/// A computed CD analysis.
+#[derive(Debug, Clone)]
+pub struct CdDiagram {
+    pub method_names: Vec<String>,
+    pub friedman: Friedman,
+    /// Maximal groups (by method index) that are statistically
+    /// indistinguishable at `alpha`.
+    pub cliques: Vec<Vec<usize>>,
+    pub alpha: f64,
+}
+
+/// Build the CD analysis from a `datasets × methods` result matrix
+/// (lower = better) at significance level `alpha` (the paper uses p = 0.95,
+/// i.e. alpha = 0.05).
+pub fn cd_analysis(names: &[String], results: &[Vec<f64>], alpha: f64) -> CdDiagram {
+    let k = names.len();
+    assert!(results.iter().all(|r| r.len() == k));
+    let friedman = friedman_test(results);
+
+    // Pairwise Wilcoxon p-values, Holm-adjusted.
+    let mut pairs = Vec::new();
+    let mut raw_p = Vec::new();
+    for i in 0..k {
+        for j in i + 1..k {
+            let a: Vec<f64> = results.iter().map(|r| r[i]).collect();
+            let b: Vec<f64> = results.iter().map(|r| r[j]).collect();
+            pairs.push((i, j));
+            raw_p.push(wilcoxon_signed_rank(&a, &b).p_value);
+        }
+    }
+    let adj = holm_adjust(&raw_p);
+    let mut indistinct = vec![vec![false; k]; k];
+    // If the omnibus test is not significant, everything is one clique.
+    let omnibus_significant = friedman.p_value < alpha;
+    for (idx, &(i, j)) in pairs.iter().enumerate() {
+        let nd = !omnibus_significant || adj[idx] >= alpha;
+        indistinct[i][j] = nd;
+        indistinct[j][i] = nd;
+    }
+
+    // Sort methods by average rank; cliques are maximal rank-contiguous
+    // intervals whose pairs are all indistinct (the standard CD rendering).
+    let mut order: Vec<usize> = (0..k).collect();
+    order.sort_by(|&a, &b| friedman.avg_ranks[a].partial_cmp(&friedman.avg_ranks[b]).unwrap());
+    let mut cliques: Vec<Vec<usize>> = Vec::new();
+    for start in 0..k {
+        let mut end = start;
+        'grow: while end + 1 < k {
+            for m in start..=end {
+                if !indistinct[order[m]][order[end + 1]] {
+                    break 'grow;
+                }
+            }
+            end += 1;
+        }
+        if end > start {
+            let clique: Vec<usize> = order[start..=end].to_vec();
+            // Keep only maximal cliques.
+            if !cliques.iter().any(|c| clique.iter().all(|m| c.contains(m))) {
+                cliques.push(clique);
+            }
+        }
+    }
+
+    CdDiagram { method_names: names.to_vec(), friedman, cliques, alpha }
+}
+
+impl CdDiagram {
+    /// Render as monospace text: a rank axis, one row per method (sorted by
+    /// rank), and clique bars connecting indistinguishable methods.
+    pub fn render(&self) -> String {
+        let k = self.method_names.len();
+        let mut order: Vec<usize> = (0..k).collect();
+        order.sort_by(|&a, &b| {
+            self.friedman.avg_ranks[a].partial_cmp(&self.friedman.avg_ranks[b]).unwrap()
+        });
+
+        let width = 64usize;
+        let min_r = 1.0;
+        let max_r = k as f64;
+        let pos = |r: f64| -> usize {
+            (((r - min_r) / (max_r - min_r).max(1e-9)) * (width - 1) as f64).round() as usize
+        };
+
+        let mut out = String::new();
+        out.push_str(&format!(
+            "Friedman: chi2={:.3} F={:.3} p={:.4} (alpha={}) -> {}\n",
+            self.friedman.chi2,
+            self.friedman.f_stat,
+            self.friedman.p_value,
+            self.alpha,
+            if self.friedman.p_value < self.alpha {
+                "methods differ; pairwise Wilcoxon-Holm below"
+            } else {
+                "no significant difference detected"
+            }
+        ));
+        // Axis.
+        let mut axis = vec![b' '; width];
+        let mut labels = vec![b' '; width + 4];
+        for r in 1..=k {
+            let p = pos(r as f64);
+            axis[p] = b'|';
+            let s = r.to_string();
+            for (i, ch) in s.bytes().enumerate() {
+                if p + i < labels.len() {
+                    labels[p + i] = ch;
+                }
+            }
+        }
+        out.push_str(&format!("  {}\n", String::from_utf8_lossy(&labels)));
+        out.push_str(&format!("  {}\n", String::from_utf8_lossy(&axis)));
+
+        // One row per method: marker at its rank + name.
+        for &m in &order {
+            let r = self.friedman.avg_ranks[m];
+            let p = pos(r);
+            let mut row = vec![b' '; width];
+            row[p] = b'*';
+            out.push_str(&format!(
+                "  {} {} ({:.2})\n",
+                String::from_utf8_lossy(&row),
+                self.method_names[m],
+                r
+            ));
+        }
+        // Clique bars.
+        for clique in &self.cliques {
+            let lo = clique
+                .iter()
+                .map(|&m| self.friedman.avg_ranks[m])
+                .fold(f64::INFINITY, f64::min);
+            let hi = clique
+                .iter()
+                .map(|&m| self.friedman.avg_ranks[m])
+                .fold(f64::NEG_INFINITY, f64::max);
+            let (a, b) = (pos(lo), pos(hi));
+            let mut row = vec![b' '; width];
+            for slot in row.iter_mut().take(b + 1).skip(a) {
+                *slot = b'=';
+            }
+            let names: Vec<&str> =
+                clique.iter().map(|&m| self.method_names[m].as_str()).collect();
+            out.push_str(&format!(
+                "  {} [{}]\n",
+                String::from_utf8_lossy(&row),
+                names.join(" ")
+            ));
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn names(n: usize) -> Vec<String> {
+        (0..n).map(|i| format!("M{i}")).collect()
+    }
+
+    #[test]
+    fn clear_winner_separated() {
+        // M0 always much faster; M1 and M2 shuffle.
+        let mut rng = crate::util::Pcg32::seeded(5);
+        let results: Vec<Vec<f64>> = (0..14)
+            .map(|_| {
+                let base = 10.0 + rng.f64();
+                vec![1.0 + 0.1 * rng.f64(), base, base + 0.05 * rng.normal()]
+            })
+            .collect();
+        let cd = cd_analysis(&names(3), &results, 0.05);
+        assert!(cd.friedman.p_value < 0.05);
+        // M0 should not share a clique with the others.
+        for c in &cd.cliques {
+            assert!(!c.contains(&0) || c.len() == 1, "cliques {:?}", cd.cliques);
+        }
+        let rendered = cd.render();
+        assert!(rendered.contains("M0"));
+    }
+
+    #[test]
+    fn all_equal_single_clique() {
+        let mut rng = crate::util::Pcg32::seeded(6);
+        let results: Vec<Vec<f64>> = (0..10)
+            .map(|_| {
+                let mut v = vec![1.0, 1.01, 0.99, 1.005];
+                rng.shuffle(&mut v);
+                v
+            })
+            .collect();
+        let cd = cd_analysis(&names(4), &results, 0.05);
+        // Omnibus not significant -> one clique of all methods.
+        assert_eq!(cd.cliques.len(), 1);
+        assert_eq!(cd.cliques[0].len(), 4);
+    }
+
+    #[test]
+    fn render_contains_axis_and_ranks() {
+        let results: Vec<Vec<f64>> =
+            (0..8).map(|i| vec![1.0 + i as f64 * 0.1, 2.0, 3.0]).collect();
+        let cd = cd_analysis(&names(3), &results, 0.05);
+        let r = cd.render();
+        assert!(r.contains("Friedman"));
+        assert!(r.contains('*'));
+    }
+}

@@ -1,0 +1,118 @@
+//! Friedman test over a results matrix (Demšar 2006) — the omnibus test
+//! behind the paper's critical-difference diagrams (Figure 2).
+
+use super::dist::{chi2_cdf, f_cdf};
+
+/// Average ranks per method from a `datasets × methods` result matrix
+/// (**lower value = better**, as with runtimes). Ties share the average rank.
+pub fn average_ranks(results: &[Vec<f64>]) -> Vec<f64> {
+    let n_methods = results[0].len();
+    let mut ranks = vec![0f64; n_methods];
+    for row in results {
+        assert_eq!(row.len(), n_methods);
+        let mut order: Vec<usize> = (0..n_methods).collect();
+        order.sort_by(|&a, &b| row[a].partial_cmp(&row[b]).unwrap());
+        let mut i = 0;
+        while i < n_methods {
+            // Tie block [i, j).
+            let mut j = i + 1;
+            while j < n_methods && row[order[j]] == row[order[i]] {
+                j += 1;
+            }
+            let avg_rank = ((i + 1 + j) as f64) / 2.0; // mean of ranks i+1..=j
+            for &m in &order[i..j] {
+                ranks[m] += avg_rank;
+            }
+            i = j;
+        }
+    }
+    let n = results.len() as f64;
+    ranks.iter_mut().for_each(|r| *r /= n);
+    ranks
+}
+
+/// Friedman test result.
+#[derive(Debug, Clone)]
+pub struct Friedman {
+    pub avg_ranks: Vec<f64>,
+    /// Friedman chi-squared statistic.
+    pub chi2: f64,
+    /// Iman–Davenport F statistic (less conservative).
+    pub f_stat: f64,
+    /// p-value of the Iman–Davenport F test.
+    pub p_value: f64,
+}
+
+/// Run the Friedman test on a `datasets × methods` matrix (lower = better).
+pub fn friedman_test(results: &[Vec<f64>]) -> Friedman {
+    let n = results.len() as f64; // datasets
+    let k = results[0].len() as f64; // methods
+    let avg_ranks = average_ranks(results);
+    let sum_sq: f64 = avg_ranks.iter().map(|r| r * r).sum();
+    let chi2 = 12.0 * n / (k * (k + 1.0)) * (sum_sq - k * (k + 1.0) * (k + 1.0) / 4.0);
+    // Iman–Davenport correction.
+    let f_stat = if (n * (k - 1.0) - chi2).abs() < 1e-12 {
+        f64::INFINITY
+    } else {
+        (n - 1.0) * chi2 / (n * (k - 1.0) - chi2)
+    };
+    let d1 = k - 1.0;
+    let d2 = (k - 1.0) * (n - 1.0);
+    let p_value = if f_stat.is_infinite() { 0.0 } else { 1.0 - f_cdf(f_stat, d1, d2) };
+    // chi2 p as fallback for tiny designs (kept for reference/debug).
+    let _p_chi2 = 1.0 - chi2_cdf(chi2, k - 1.0);
+    Friedman { avg_ranks, chi2, f_stat, p_value }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ranks_simple() {
+        let r = average_ranks(&[vec![1.0, 2.0, 3.0], vec![1.0, 2.0, 3.0]]);
+        assert_eq!(r, vec![1.0, 2.0, 3.0]);
+    }
+
+    #[test]
+    fn ranks_with_ties() {
+        let r = average_ranks(&[vec![1.0, 1.0, 3.0]]);
+        assert_eq!(r, vec![1.5, 1.5, 3.0]);
+    }
+
+    #[test]
+    fn friedman_detects_consistent_ordering() {
+        // Method 0 always fastest, 2 always slowest, 10 datasets.
+        let results: Vec<Vec<f64>> =
+            (0..10).map(|i| vec![1.0 + i as f64, 2.0 + i as f64, 3.0 + i as f64]).collect();
+        let f = friedman_test(&results);
+        assert!(f.p_value < 0.01, "p = {}", f.p_value);
+        assert!(f.avg_ranks[0] < f.avg_ranks[2]);
+    }
+
+    #[test]
+    fn friedman_accepts_random_noise() {
+        // Same method values permuted per dataset -> no consistent ranking.
+        let mut rng = crate::util::Pcg32::seeded(3);
+        let results: Vec<Vec<f64>> = (0..12)
+            .map(|_| {
+                let mut v = vec![1.0, 2.0, 3.0, 4.0];
+                rng.shuffle(&mut v);
+                v
+            })
+            .collect();
+        let f = friedman_test(&results);
+        assert!(f.p_value > 0.05, "p = {}", f.p_value);
+    }
+
+    #[test]
+    fn chi2_matches_textbook_example() {
+        // Demšar's worked example shape: k=4, n=14 gives chi2 in a known
+        // range; here just sanity-check internal consistency.
+        let results: Vec<Vec<f64>> = (0..14)
+            .map(|i| vec![0.1 * i as f64, 0.1 * i as f64 + 0.01, 1.0, 2.0])
+            .collect();
+        let f = friedman_test(&results);
+        assert!(f.chi2 > 0.0 && f.chi2 < 14.0 * 3.0 + 1.0);
+    }
+}

@@ -1,0 +1,13 @@
+//! Rank statistics for multi-method × multi-dataset comparisons
+//! (DESIGN.md system S8): Friedman omnibus test, pairwise Wilcoxon
+//! signed-rank with Holm correction, and critical-difference diagrams —
+//! exactly the evaluation machinery behind the paper's Figure 2.
+
+pub mod cd;
+pub mod dist;
+pub mod friedman;
+pub mod wilcoxon;
+
+pub use cd::{cd_analysis, CdDiagram};
+pub use friedman::{average_ranks, friedman_test, Friedman};
+pub use wilcoxon::{holm_adjust, wilcoxon_signed_rank, Wilcoxon};

@@ -1,0 +1,138 @@
+//! Wilcoxon signed-rank test (paired), with the normal approximation and
+//! tie/zero handling (Pratt). Used for the pairwise post-hoc comparisons in
+//! the critical-difference diagrams (Benavoli et al. 2016 recommend pairwise
+//! Wilcoxon over mean-rank post-hocs — the paper follows this).
+
+use super::dist::normal_cdf;
+
+/// Result of a two-sided Wilcoxon signed-rank test.
+#[derive(Debug, Clone, Copy)]
+pub struct Wilcoxon {
+    /// Sum of positive-difference ranks.
+    pub w_plus: f64,
+    /// Sum of negative-difference ranks.
+    pub w_minus: f64,
+    /// Effective sample size (zeros removed).
+    pub n_eff: usize,
+    /// Two-sided p-value (normal approximation with tie correction).
+    pub p_value: f64,
+}
+
+/// Two-sided test that paired samples `a` and `b` come from the same
+/// distribution.
+pub fn wilcoxon_signed_rank(a: &[f64], b: &[f64]) -> Wilcoxon {
+    assert_eq!(a.len(), b.len());
+    let mut diffs: Vec<f64> =
+        a.iter().zip(b).map(|(&x, &y)| x - y).filter(|d| *d != 0.0).collect();
+    let n = diffs.len();
+    if n == 0 {
+        return Wilcoxon { w_plus: 0.0, w_minus: 0.0, n_eff: 0, p_value: 1.0 };
+    }
+    // Rank |d| with average ranks for ties.
+    let mut order: Vec<usize> = (0..n).collect();
+    order.sort_by(|&i, &j| diffs[i].abs().partial_cmp(&diffs[j].abs()).unwrap());
+    let mut ranks = vec![0f64; n];
+    let mut tie_correction = 0f64;
+    let mut i = 0;
+    while i < n {
+        let mut j = i + 1;
+        while j < n && diffs[order[j]].abs() == diffs[order[i]].abs() {
+            j += 1;
+        }
+        let avg = ((i + 1 + j) as f64) / 2.0;
+        for &idx in &order[i..j] {
+            ranks[idx] = avg;
+        }
+        let t = (j - i) as f64;
+        tie_correction += t * t * t - t;
+        i = j;
+    }
+    let mut w_plus = 0f64;
+    let mut w_minus = 0f64;
+    for (d, r) in diffs.drain(..).zip(&ranks) {
+        if d > 0.0 {
+            w_plus += r;
+        } else {
+            w_minus += r;
+        }
+    }
+    let nf = n as f64;
+    let mean = nf * (nf + 1.0) / 4.0;
+    let var = nf * (nf + 1.0) * (2.0 * nf + 1.0) / 24.0 - tie_correction / 48.0;
+    let w = w_plus.min(w_minus);
+    let p_value = if var <= 0.0 {
+        1.0
+    } else {
+        // Continuity-corrected z.
+        let z = (w - mean + 0.5) / var.sqrt();
+        (2.0 * normal_cdf(z)).min(1.0)
+    };
+    Wilcoxon { w_plus, w_minus, n_eff: n, p_value }
+}
+
+/// Holm step-down correction: given raw p-values, returns adjusted p-values
+/// (same order as input).
+pub fn holm_adjust(pvals: &[f64]) -> Vec<f64> {
+    let m = pvals.len();
+    let mut order: Vec<usize> = (0..m).collect();
+    order.sort_by(|&i, &j| pvals[i].partial_cmp(&pvals[j]).unwrap());
+    let mut adjusted = vec![0f64; m];
+    let mut running_max = 0f64;
+    for (rank, &idx) in order.iter().enumerate() {
+        let adj = ((m - rank) as f64 * pvals[idx]).min(1.0);
+        running_max = running_max.max(adj);
+        adjusted[idx] = running_max;
+    }
+    adjusted
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn identical_samples_p_one() {
+        let a = vec![1.0, 2.0, 3.0];
+        let w = wilcoxon_signed_rank(&a, &a);
+        assert_eq!(w.n_eff, 0);
+        assert_eq!(w.p_value, 1.0);
+    }
+
+    #[test]
+    fn clearly_different_samples() {
+        let a: Vec<f64> = (0..20).map(|i| i as f64).collect();
+        let b: Vec<f64> = a.iter().map(|x| x + 5.0).collect();
+        let w = wilcoxon_signed_rank(&a, &b);
+        assert!(w.p_value < 0.001, "p = {}", w.p_value);
+        assert_eq!(w.w_plus, 0.0); // all diffs negative
+    }
+
+    #[test]
+    fn symmetric_noise_not_significant() {
+        let mut rng = crate::util::Pcg32::seeded(4);
+        let a: Vec<f64> = (0..30).map(|_| rng.normal()).collect();
+        let b: Vec<f64> = a.iter().map(|x| x + 0.01 * rng.normal()).collect();
+        let w = wilcoxon_signed_rank(&a, &b);
+        assert!(w.p_value > 0.05, "p = {}", w.p_value);
+    }
+
+    #[test]
+    fn holm_monotone_and_bounded() {
+        let p = vec![0.01, 0.04, 0.03, 0.5];
+        let adj = holm_adjust(&p);
+        assert!(adj.iter().all(|&v| (0.0..=1.0).contains(&v)));
+        // smallest raw p gets multiplied by m
+        assert!((adj[0] - 0.04).abs() < 1e-12);
+        // adjusted values are monotone in raw order
+        assert!(adj[1] >= adj[2]);
+    }
+
+    #[test]
+    fn w_statistics_sum() {
+        let a = vec![3.0, 1.0, 4.0, 1.5, 2.0];
+        let b = vec![1.0, 2.0, 3.0, 4.0, 2.5];
+        let w = wilcoxon_signed_rank(&a, &b);
+        let n = w.n_eff as f64;
+        assert!((w.w_plus + w.w_minus - n * (n + 1.0) / 2.0).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,5 @@
+//! In-repo property-testing harness (no proptest offline — see DESIGN.md).
+
+pub mod prop;
+
+pub use prop::{assert_close, Runner};

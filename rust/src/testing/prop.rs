@@ -1,0 +1,145 @@
+//! Minimal property-based testing harness.
+//!
+//! `proptest` is unavailable offline, so this module provides the small core
+//! the test suite needs: run a property over many seeded random cases and, on
+//! failure, report the failing seed so the case can be replayed exactly
+//! (`Runner::replay`). There is no structural shrinking; instead generators
+//! are asked for progressively *smaller* cases first, so the earliest failure
+//! tends to be near-minimal.
+
+use crate::util::Pcg32;
+
+/// Configuration for a property run.
+#[derive(Debug, Clone, Copy)]
+pub struct Config {
+    /// Number of random cases.
+    pub cases: usize,
+    /// Base seed; each case `i` runs with `Pcg32::new(seed, i)`.
+    pub seed: u64,
+}
+
+impl Default for Config {
+    fn default() -> Self {
+        Config { cases: 64, seed: 0xa11ce }
+    }
+}
+
+/// Property runner. A "size" parameter grows from 1 toward `max_size` across
+/// the run so early cases are small (cheap, near-minimal counterexamples) and
+/// later cases stress larger inputs.
+pub struct Runner {
+    pub config: Config,
+    pub max_size: usize,
+}
+
+impl Runner {
+    pub fn new(cases: usize) -> Self {
+        Runner { config: Config { cases, ..Default::default() }, max_size: 64 }
+    }
+
+    pub fn with_seed(mut self, seed: u64) -> Self {
+        self.config.seed = seed;
+        self
+    }
+
+    pub fn with_max_size(mut self, max_size: usize) -> Self {
+        self.max_size = max_size;
+        self
+    }
+
+    /// Run `prop(rng, size)` for each case; panics with the failing case id
+    /// and seed on the first `Err`.
+    pub fn run<F>(&self, mut prop: F)
+    where
+        F: FnMut(&mut Pcg32, usize) -> Result<(), String>,
+    {
+        for case in 0..self.config.cases {
+            let size = self.size_for(case);
+            let mut rng = Pcg32::new(self.config.seed, case as u64);
+            if let Err(msg) = prop(&mut rng, size) {
+                panic!(
+                    "property failed at case {case} (size {size}, seed {:#x}, stream {case}): {msg}\n\
+                     replay with Runner::replay({:#x}, {case})",
+                    self.config.seed, self.config.seed
+                );
+            }
+        }
+    }
+
+    /// Re-run a single failing case (same rng stream as the failed run).
+    pub fn replay<F>(seed: u64, case: usize, size: usize, mut prop: F)
+    where
+        F: FnMut(&mut Pcg32, usize) -> Result<(), String>,
+    {
+        let mut rng = Pcg32::new(seed, case as u64);
+        if let Err(msg) = prop(&mut rng, size) {
+            panic!("replayed property failure: {msg}");
+        }
+    }
+
+    fn size_for(&self, case: usize) -> usize {
+        // Ramp from 1 to max_size over the run.
+        let n = self.config.cases.max(1);
+        1 + (self.max_size.saturating_sub(1)) * case / n
+    }
+}
+
+/// Assert two f32 slices match within absolute + relative tolerance, with a
+/// useful message naming the first mismatching index.
+pub fn assert_close(a: &[f32], b: &[f32], atol: f32, rtol: f32) -> Result<(), String> {
+    if a.len() != b.len() {
+        return Err(format!("length mismatch: {} vs {}", a.len(), b.len()));
+    }
+    for (i, (&x, &y)) in a.iter().zip(b.iter()).enumerate() {
+        let tol = atol + rtol * y.abs().max(x.abs());
+        if (x - y).abs() > tol {
+            return Err(format!("index {i}: {x} vs {y} (|diff|={} > tol={tol})", (x - y).abs()));
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passes_trivial_property() {
+        Runner::new(32).run(|rng, size| {
+            let n = rng.range(1, size + 2);
+            let v: Vec<u32> = (0..n).map(|_| rng.next_u32()).collect();
+            if v.len() == n {
+                Ok(())
+            } else {
+                Err("len".into())
+            }
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property failed")]
+    fn reports_failure() {
+        Runner::new(16).run(|rng, _| {
+            if rng.below(4) == 3 {
+                Err("hit 3".into())
+            } else {
+                Ok(())
+            }
+        });
+    }
+
+    #[test]
+    fn sizes_ramp() {
+        let r = Runner::new(10).with_max_size(100);
+        assert_eq!(r.size_for(0), 1);
+        assert!(r.size_for(9) > r.size_for(0));
+        assert!(r.size_for(9) <= 100);
+    }
+
+    #[test]
+    fn assert_close_catches_mismatch() {
+        assert!(assert_close(&[1.0], &[1.0], 1e-6, 0.0).is_ok());
+        assert!(assert_close(&[1.0], &[1.1], 1e-6, 0.0).is_err());
+        assert!(assert_close(&[1.0], &[1.0, 2.0], 1e-6, 0.0).is_err());
+    }
+}

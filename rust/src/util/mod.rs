@@ -1,0 +1,13 @@
+//! Dependency-free substrate utilities: JSON, PRNG, timing.
+//!
+//! These exist because the offline build environment has no access to
+//! crates.io; they implement exactly the surface the rest of the crate needs
+//! (see DESIGN.md §1, "Substitutions").
+
+pub mod json;
+pub mod rng;
+pub mod timer;
+
+pub use json::Json;
+pub use rng::Pcg32;
+pub use timer::{percentile, Stopwatch, Summary};

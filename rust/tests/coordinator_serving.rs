@@ -1,0 +1,164 @@
+//! Integration tests over the serving stack: batcher invariants under load,
+//! backpressure behaviour, selector × server composition, and the tensor
+//! engine behind the batcher (when artifacts exist).
+
+use std::sync::atomic::Ordering;
+use std::sync::Arc;
+use std::time::Duration;
+
+use arbors::coordinator::{BatchConfig, Server};
+use arbors::data::DatasetId;
+use arbors::engine::{EngineKind, Precision};
+use arbors::forest::builder::{train_random_forest, RfParams, TreeParams};
+use arbors::forest::Forest;
+
+fn forest(trees: usize) -> (Forest, arbors::data::Dataset) {
+    let ds = DatasetId::Adult.generate(800, 0x5E);
+    let f = train_random_forest(
+        &ds.x,
+        &ds.labels,
+        ds.d,
+        ds.n_classes,
+        RfParams {
+            n_trees: trees,
+            tree: TreeParams { max_leaves: 32, min_samples_leaf: 2, mtry: 0 },
+            ..Default::default()
+        },
+    );
+    (f, ds)
+}
+
+/// No request is lost or reordered across many concurrent clients — every
+/// reply matches the reference scores for the submitted row.
+#[test]
+fn no_request_lost_or_cross_wired() {
+    let (f, ds) = forest(8);
+    let server = Arc::new(Server::new());
+    server
+        .deploy(
+            "m",
+            &f,
+            EngineKind::Vqs,
+            Precision::F32,
+            BatchConfig {
+                max_batch: 32,
+                max_delay: Duration::from_micros(100),
+                queue_cap: 10_000,
+                workers: 3,
+            },
+        )
+        .unwrap();
+    let want = f.predict_batch(&ds.x);
+    let n_clients = 8;
+    let per_client = 200;
+    let mut handles = Vec::new();
+    for t in 0..n_clients {
+        let server = server.clone();
+        let ds = ds.clone();
+        let want = want.clone();
+        handles.push(std::thread::spawn(move || {
+            let dep = server.model("m").unwrap();
+            for r in 0..per_client {
+                let i = (t * per_client + r) % ds.n;
+                let scores = dep.batcher.predict(ds.row(i).to_vec()).unwrap();
+                let expect = &want[i * ds.n_classes..(i + 1) * ds.n_classes];
+                assert_eq!(&scores[..], expect, "client {t} row {i}");
+            }
+        }));
+    }
+    for h in handles {
+        h.join().unwrap();
+    }
+    let dep = server.model("m").unwrap();
+    assert_eq!(
+        dep.batcher.metrics.completed.load(Ordering::Relaxed),
+        (n_clients * per_client) as u64
+    );
+}
+
+/// The batcher actually batches: under a burst, mean batch size must exceed
+/// one (SIMD lanes get filled).
+#[test]
+fn batches_form_under_burst() {
+    let (f, ds) = forest(16);
+    let server = Server::new();
+    server
+        .deploy(
+            "m",
+            &f,
+            EngineKind::Rs,
+            Precision::F32,
+            BatchConfig {
+                max_batch: 64,
+                max_delay: Duration::from_millis(2),
+                queue_cap: 10_000,
+                workers: 1,
+            },
+        )
+        .unwrap();
+    let dep = server.model("m").unwrap();
+    let replies: Vec<_> =
+        (0..512).map(|i| dep.batcher.submit(ds.row(i % ds.n).to_vec()).unwrap()).collect();
+    for r in replies {
+        r.recv().unwrap().unwrap();
+    }
+    let mean = dep.batcher.metrics.mean_batch_size();
+    assert!(mean > 2.0, "mean batch size {mean} — batching not effective");
+}
+
+/// Deploy → undeploy → redeploy cycles are clean (no thread leaks panics).
+#[test]
+fn redeploy_cycles() {
+    let (f, ds) = forest(4);
+    let server = Server::new();
+    for _ in 0..3 {
+        server
+            .deploy("m", &f, EngineKind::Qs, Precision::F32, BatchConfig::default())
+            .unwrap();
+        let s = server.predict("m", ds.row(0).to_vec()).unwrap();
+        assert_eq!(s.len(), f.n_classes);
+        assert!(server.undeploy("m"));
+    }
+}
+
+/// Auto-deployment picks a sane engine and serves correctly.
+#[test]
+fn auto_deploy_serves_correct_scores() {
+    let (f, ds) = forest(12);
+    let server = Server::new();
+    let sel = server
+        .deploy_auto("auto", &f, &ds.x[..ds.d * 64], BatchConfig::default())
+        .unwrap();
+    assert!(!sel.candidates.is_empty());
+    let want = f.predict_batch(ds.row(5));
+    let got = server.predict("auto", ds.row(5).to_vec()).unwrap();
+    // Auto may choose a quantized engine; scores must still rank identically.
+    let wa = Forest::argmax(&want, f.n_classes);
+    let ga = Forest::argmax(&got, f.n_classes);
+    assert_eq!(wa, ga);
+}
+
+/// Tensor engine behind the batcher (requires artifacts).
+#[test]
+fn tensor_engine_served() {
+    let dir = std::path::PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if !dir.join("manifest.json").exists() {
+        eprintln!("skipping: artifacts not built");
+        return;
+    }
+    let metas = arbors::runtime::load_manifest(&dir).unwrap();
+    let meta = metas.iter().find(|m| m.name == "rf_f32_b64").unwrap();
+    let forest = arbors::forest::io::load(&dir.join(&meta.forest)).unwrap();
+    let engine =
+        arbors::engine::tensor::TensorEngine::from_artifact(&dir, "rf_f32_b64", &forest)
+            .unwrap();
+    let server = Server::new();
+    server
+        .deploy_engine("xla", &forest, Arc::new(engine), BatchConfig::default())
+        .unwrap();
+    let mut rng = arbors::util::Pcg32::seeded(0x7E);
+    let row: Vec<f32> = (0..forest.n_features).map(|_| rng.f32()).collect();
+    let want = forest.predict_batch(&row);
+    let got = server.predict("xla", row).unwrap();
+    arbors::testing::assert_close(&got, &want, 1e-4, 1e-4).unwrap();
+}

@@ -1,0 +1,214 @@
+//! Integration + property tests: every engine must agree with the reference
+//! traversal on every dataset and forest shape — the repo-level analogue of
+//! the paper's "we made sure all implementations produced the same
+//! prediction for the same ensemble" (§6).
+
+use arbors::data::DatasetId;
+use arbors::engine::{all_variants, build, variant_name, EngineKind, Precision};
+use arbors::forest::builder::{train_random_forest, RfParams, TreeParams};
+use arbors::forest::Forest;
+use arbors::quant::{QForest, QuantConfig};
+use arbors::testing::{assert_close, Runner};
+use arbors::util::Pcg32;
+
+fn train(ds: &arbors::data::Dataset, trees: usize, leaves: usize, seed: u64) -> Forest {
+    train_random_forest(
+        &ds.x,
+        &ds.labels,
+        ds.d,
+        ds.n_classes,
+        RfParams {
+            n_trees: trees,
+            tree: TreeParams { max_leaves: leaves, min_samples_leaf: 2, mtry: 0 },
+            seed,
+            ..Default::default()
+        },
+    )
+}
+
+#[test]
+fn all_engines_agree_on_all_datasets() {
+    for id in DatasetId::ALL {
+        let ds = id.generate(600, 0xE2E);
+        for leaves in [32usize, 64] {
+            let f = train(&ds, 10, leaves, 3);
+            let cfg = QuantConfig::paper_default();
+            let qf = QForest::from_forest(&f, cfg);
+            let x = &ds.x[..ds.d * 100];
+            let want_f = f.predict_batch(x);
+            let want_q = qf.predict_batch(x);
+            for (kind, precision) in all_variants() {
+                let e = build(kind, precision, &f, Some(cfg)).unwrap();
+                let got = e.predict(x);
+                match precision {
+                    Precision::F32 => {
+                        assert_close(&got, &want_f, 1e-4, 1e-4).unwrap_or_else(|msg| {
+                            panic!("{} on {} (L={leaves}): {msg}", variant_name(kind, precision), id.name())
+                        });
+                    }
+                    Precision::I16 => {
+                        assert_eq!(
+                            got,
+                            want_q,
+                            "{} on {} (L={leaves})",
+                            variant_name(kind, precision),
+                            id.name()
+                        );
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// Property: on random forests and random inputs, the whole QuickScorer
+/// family equals the naive traversal (argmax and scores).
+#[test]
+fn property_random_forests_random_inputs() {
+    Runner::new(24).with_seed(0xF0).run(|rng: &mut Pcg32, size| {
+        // Random synthetic problem of random shape.
+        let d = rng.range(2, 12);
+        let c = rng.range(1, 5).max(1);
+        let n = 80 + size;
+        let mut x = Vec::with_capacity(n * d);
+        let mut y = Vec::with_capacity(n);
+        for _ in 0..n {
+            for _ in 0..d {
+                x.push(rng.f32());
+            }
+            y.push(rng.below(c) as u32);
+        }
+        let leaves = *rng.choose(&[4usize, 8, 16, 32, 64]);
+        let f = train_random_forest(
+            &x,
+            &y,
+            d,
+            c,
+            RfParams {
+                n_trees: rng.range(1, 10),
+                tree: TreeParams { max_leaves: leaves, min_samples_leaf: 1, mtry: 0 },
+                seed: rng.next_u64(),
+                ..Default::default()
+            },
+        );
+        let want = f.predict_batch(&x[..d * 40]);
+        for kind in [EngineKind::Qs, EngineKind::Vqs, EngineKind::Rs, EngineKind::IfElse] {
+            let e = build(kind, Precision::F32, &f, None).map_err(|e| e.to_string())?;
+            let got = e.predict(&x[..d * 40]);
+            assert_close(&got, &want, 1e-4, 1e-4)
+                .map_err(|m| format!("{} (L={leaves}): {m}", kind.short()))?;
+        }
+        Ok(())
+    });
+}
+
+/// Property: quantized engines are bit-identical to the quantized naive
+/// reference under random scales.
+#[test]
+fn property_quantized_engines_bit_identical() {
+    Runner::new(16).with_seed(0xF1).run(|rng: &mut Pcg32, size| {
+        let d = rng.range(2, 8);
+        let n = 60 + size;
+        let mut x = Vec::with_capacity(n * d);
+        let mut y = Vec::with_capacity(n);
+        for _ in 0..n {
+            for _ in 0..d {
+                x.push(rng.f32());
+            }
+            y.push(rng.below(2) as u32);
+        }
+        let f = train_random_forest(
+            &x,
+            &y,
+            d,
+            2,
+            RfParams {
+                n_trees: rng.range(1, 8),
+                tree: TreeParams {
+                    max_leaves: *rng.choose(&[8usize, 32, 64]),
+                    min_samples_leaf: 1,
+                    mtry: 0,
+                },
+                seed: rng.next_u64(),
+                ..Default::default()
+            },
+        );
+        // Random (coarse!) scale exercises real quantization collisions;
+        // capped at the overflow-safe bound so the i16 SIMD accumulators of
+        // qVQS/qRS cannot wrap (paper §5's scale-selection constraint; the
+        // i32-accumulating reference would diverge on wrap).
+        let cap = arbors::quant::max_safe_scale(&f, 1.0);
+        let cfg = QuantConfig { scale: rng.choose(&[64.0f32, 1024.0, 32768.0]).min(cap) };
+        let qf = QForest::from_forest(&f, cfg);
+        let want = qf.predict_batch(&x[..d * 30]);
+        for kind in EngineKind::ALL {
+            let e = build(kind, Precision::I16, &f, Some(cfg)).map_err(|e| e.to_string())?;
+            let got = e.predict(&x[..d * 30]);
+            if got != want {
+                return Err(format!("{} differs under scale {}", kind.short(), cfg.scale));
+            }
+        }
+        Ok(())
+    });
+}
+
+/// Ranking forests (C=1, GBT) work through the same engines.
+#[test]
+fn ranking_forest_engines_agree() {
+    use arbors::forest::builder::{train_gbt, GbtParams};
+    let ds = arbors::data::ranking::msn_like(20, 15, 5);
+    let f = train_gbt(
+        &ds.x,
+        &ds.relevance,
+        ds.d,
+        GbtParams {
+            n_trees: 30,
+            tree: TreeParams { max_leaves: 32, min_samples_leaf: 2, mtry: 24 },
+            learning_rate: 0.2,
+            ..Default::default()
+        },
+    );
+    let x = &ds.x[..ds.d * 64];
+    let want = f.predict_batch(x);
+    for kind in EngineKind::ALL {
+        let e = build(kind, Precision::F32, &f, None).unwrap();
+        assert_close(&e.predict(x), &want, 1e-4, 1e-4)
+            .unwrap_or_else(|m| panic!("{}: {m}", kind.short()));
+    }
+}
+
+/// Engines reject unsupported shapes cleanly instead of mis-scoring.
+#[test]
+fn oversized_trees_rejected() {
+    let ds = DatasetId::Magic.generate(3000, 9);
+    let f = train(&ds, 2, 128, 4);
+    if f.max_leaves() <= 64 {
+        // Training did not reach >64 leaves; nothing to assert.
+        return;
+    }
+    for kind in [EngineKind::Qs, EngineKind::Vqs, EngineKind::Rs] {
+        assert!(build(kind, Precision::F32, &f, None).is_err());
+    }
+    // NA/IE handle any leaf count.
+    assert!(build(EngineKind::Naive, Precision::F32, &f, None).is_ok());
+    assert!(build(EngineKind::IfElse, Precision::F32, &f, None).is_ok());
+}
+
+/// Serialized models predict identically after a round-trip (failure
+/// injection: truncated file must error, not crash).
+#[test]
+fn forest_roundtrip_and_corruption() {
+    let ds = DatasetId::Eeg.generate(400, 11);
+    let f = train(&ds, 6, 16, 5);
+    let dir = std::env::temp_dir().join(format!("arbors_it_{}", std::process::id()));
+    let path = dir.join("m.json");
+    arbors::forest::io::save(&f, &path).unwrap();
+    let f2 = arbors::forest::io::load(&path).unwrap();
+    assert_eq!(f, f2);
+
+    // Corrupt the file: loader must return Err.
+    let text = std::fs::read_to_string(&path).unwrap();
+    std::fs::write(&path, &text[..text.len() / 2]).unwrap();
+    assert!(arbors::forest::io::load(&path).is_err());
+    std::fs::remove_dir_all(&dir).ok();
+}

@@ -1,0 +1,196 @@
+//! Property tests over the substrate layers: the NEON simulator against
+//! scalar reference semantics, and the JSON parser against a round-trip +
+//! garbage fuzz.
+
+use arbors::neon::*;
+use arbors::testing::Runner;
+use arbors::util::{Json, Pcg32};
+
+fn rand_u8x16(rng: &mut Pcg32) -> U8x16 {
+    let mut v = [0u8; 16];
+    for b in v.iter_mut() {
+        *b = rng.next_u32() as u8;
+    }
+    U8x16(v)
+}
+
+#[test]
+fn neon_u8_ops_match_scalar() {
+    Runner::new(64).with_seed(0x9e09).run(|rng, _| {
+        let a = rand_u8x16(rng);
+        let b = rand_u8x16(rng);
+        let sel = rand_u8x16(rng);
+        for lane in 0..16 {
+            let (x, y, s) = (a.0[lane], b.0[lane], sel.0[lane]);
+            if vandq_u8(a, b).0[lane] != x & y {
+                return Err("vandq".into());
+            }
+            if vorrq_u8(a, b).0[lane] != x | y {
+                return Err("vorrq".into());
+            }
+            if vmvnq_u8(a).0[lane] != !x {
+                return Err("vmvnq".into());
+            }
+            if vbslq_u8(sel, a, b).0[lane] != (s & x) | (!s & y) {
+                return Err("vbslq".into());
+            }
+            if vceqq_u8(a, b).0[lane] != if x == y { 0xFF } else { 0 } {
+                return Err("vceqq".into());
+            }
+            if vtstq_u8(a, b).0[lane] != if x & y != 0 { 0xFF } else { 0 } {
+                return Err("vtstq".into());
+            }
+            if vrbitq_u8(a).0[lane] != x.reverse_bits() {
+                return Err("vrbitq".into());
+            }
+            if vclzq_u8(a).0[lane] != x.leading_zeros() as u8 {
+                return Err("vclzq".into());
+            }
+            if vmlaq_u8(a, b, sel).0[lane] != x.wrapping_add(y.wrapping_mul(s)) {
+                return Err("vmlaq".into());
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn neon_widening_chain_preserves_masks() {
+    // Any u16 mask (all-ones/zero lanes) widened via the §5.1 chain must
+    // stay all-ones/zero at every width.
+    Runner::new(64).with_seed(0x9e10).run(|rng, _| {
+        let mut m = [0u16; 8];
+        for lane in m.iter_mut() {
+            *lane = if rng.bool(0.5) { u16::MAX } else { 0 };
+        }
+        let mask = U16x8(m);
+        let mi = vreinterpretq_s16_u16(mask);
+        let lo = vreinterpretq_u32_s32(vmovl_s16(vget_low_s16(mi)));
+        let hi = vreinterpretq_u32_s32(vmovl_s16(vget_high_s16(mi)));
+        for lane in 0..4 {
+            let want_lo = if m[lane] != 0 { u32::MAX } else { 0 };
+            let want_hi = if m[4 + lane] != 0 { u32::MAX } else { 0 };
+            if lo.0[lane] != want_lo || hi.0[lane] != want_hi {
+                return Err(format!("u32 widen broke mask at lane {lane}"));
+            }
+        }
+        // On to u64.
+        let lo64 = vreinterpretq_u64_s64(vmovl_s32(vget_low_s32(i32x4_from_u32(lo))));
+        for lane in 0..2 {
+            let want = if m[lane] != 0 { u64::MAX } else { 0 };
+            if lo64.0[lane] != want {
+                return Err(format!("u64 widen broke mask at lane {lane}"));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn neon_f32_compare_matches_scalar_including_nan() {
+    Runner::new(64).with_seed(0x9e11).run(|rng, _| {
+        let mut a = [0f32; 4];
+        let mut b = [0f32; 4];
+        for lane in 0..4 {
+            a[lane] = match rng.below(5) {
+                0 => f32::NAN,
+                1 => f32::INFINITY,
+                2 => f32::NEG_INFINITY,
+                _ => rng.f32() * 2.0 - 1.0,
+            };
+            b[lane] = if rng.bool(0.3) { a[lane] } else { rng.f32() * 2.0 - 1.0 };
+        }
+        let m = vcgtq_f32(F32x4(a), F32x4(b));
+        for lane in 0..4 {
+            let want = if a[lane] > b[lane] { u32::MAX } else { 0 };
+            if m.0[lane] != want {
+                return Err(format!("lane {lane}: {} > {} mask {:#x}", a[lane], b[lane], m.0[lane]));
+            }
+        }
+        Ok(())
+    });
+}
+
+// ---------------------------------------------------------------------------
+// JSON
+// ---------------------------------------------------------------------------
+
+fn rand_json(rng: &mut Pcg32, depth: usize) -> Json {
+    match if depth == 0 { rng.below(4) } else { rng.below(6) } {
+        0 => Json::Null,
+        1 => Json::Bool(rng.bool(0.5)),
+        2 => {
+            // Finite doubles that survive text round-trip exactly.
+            Json::Num((rng.next_u32() as i32) as f64 / 8.0)
+        }
+        3 => {
+            let len = rng.below(12);
+            let s: String = (0..len)
+                .map(|_| {
+                    let c = rng.below(96) as u8 + 32;
+                    c as char
+                })
+                .collect();
+            Json::Str(s)
+        }
+        4 => Json::Arr((0..rng.below(5)).map(|_| rand_json(rng, depth - 1)).collect()),
+        _ => {
+            let mut obj = Json::obj();
+            for i in 0..rng.below(5) {
+                obj.set(&format!("k{i}"), rand_json(rng, depth - 1));
+            }
+            obj
+        }
+    }
+}
+
+#[test]
+fn json_roundtrip_property() {
+    Runner::new(128).with_seed(0x150).run(|rng, _| {
+        let v = rand_json(rng, 3);
+        let compact = Json::parse(&v.dump()).map_err(|e| e.to_string())?;
+        if compact != v {
+            return Err(format!("compact roundtrip: {} != {}", compact.dump(), v.dump()));
+        }
+        let pretty = Json::parse(&v.pretty()).map_err(|e| e.to_string())?;
+        if pretty != v {
+            return Err("pretty roundtrip".into());
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn json_fuzz_never_panics() {
+    // Random byte soup: the parser must return Err or Ok, never panic.
+    Runner::new(256).with_max_size(64).with_seed(0x151).run(|rng, size| {
+        let len = rng.below(size + 2);
+        let bytes: Vec<u8> = (0..len).map(|_| (rng.below(128)) as u8).collect();
+        if let Ok(text) = std::str::from_utf8(&bytes) {
+            let _ = Json::parse(text);
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn json_mutation_fuzz() {
+    // Take a valid document, flip bytes, and check the parser still never
+    // panics and either errors or produces something re-serializable.
+    Runner::new(128).with_seed(0x152).run(|rng, _| {
+        let v = rand_json(rng, 3);
+        let mut text = v.dump().into_bytes();
+        if !text.is_empty() {
+            for _ in 0..1 + rng.below(3) {
+                let i = rng.below(text.len());
+                text[i] = rng.below(128) as u8;
+            }
+        }
+        if let Ok(s) = std::str::from_utf8(&text) {
+            if let Ok(parsed) = Json::parse(s) {
+                let _ = parsed.dump();
+            }
+        }
+        Ok(())
+    });
+}

@@ -56,6 +56,9 @@ fn main() -> anyhow::Result<()> {
             max_delay: std::time::Duration::from_micros(200),
             queue_cap: 65_536,
             workers: 2,
+            // Let the selector weigh threaded candidates (e.g. RS×4t) and
+            // deploy the winner's exec-thread budget.
+            exec_threads: 4,
         },
     )?;
     eprint!("{}", sel.report());

@@ -1,0 +1,13 @@
+//! Extra: thread-scaling of the exec runtime (row-sharded ParallelEngine)
+//! across engines × forest shapes. Threads via ARBORS_THREADS (default 4);
+//! scale via ARBORS_SCALE. JSON lands in results/scaling.json.
+fn main() {
+    let scale = arbors::bench::harness::Scale::from_env();
+    let threads = std::env::var("ARBORS_THREADS")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(4);
+    let text = arbors::bench::experiments::scaling(&scale, threads);
+    arbors::bench::experiments::archive("scaling", &text);
+    println!("{text}");
+}

@@ -545,10 +545,120 @@ pub fn memory_energy(scale: &Scale) -> String {
     out
 }
 
+// ---------------------------------------------------------------------------
+// Extra D — thread scaling (the exec runtime)
+// ---------------------------------------------------------------------------
+
+/// Extra D: thread-scaling of the row-sharded [`crate::exec::ParallelEngine`]
+/// across engines × forest shapes — the paper's engines exploit SIMD lanes
+/// within one core; this measures the multi-core axis on top. Results are
+/// archived both as text (`results/scaling.txt` via the caller) and as
+/// machine-readable JSON (`results/scaling.json`) with per-thread-count
+/// µs/instance and speedups vs 1 thread.
+pub fn scaling(scale: &Scale, max_threads: usize) -> String {
+    use crate::exec::ParallelEngine;
+    use crate::util::Json;
+
+    let budgets = crate::coordinator::thread_budgets(max_threads);
+    let ds = DatasetId::Magic.generate(DatasetId::Magic.default_n(), 0xD5 ^ 64);
+    let (train, _) = ds.split(0.2, 7);
+    let shapes = [((scale.cls_trees / 4).max(1), 32usize), (scale.cls_trees, 64)];
+    let variants = [
+        (EngineKind::Rs, Precision::F32),
+        (EngineKind::Vqs, Precision::F32),
+        (EngineKind::Qs, Precision::F32),
+        (EngineKind::Rs, Precision::I16),
+    ];
+
+    let mut out = String::new();
+    out.push_str(&format!(
+        "Thread-scaling experiment (scale={}, dataset=magic, batch={} rows)\n\
+         row-sharded ParallelEngine (ShardPolicy::Exact) vs serial, host µs/instance\n\
+         (speedup vs 1 thread in parens)\n\n",
+        scale.name, scale.eval_n
+    ));
+    let mut records = Vec::new();
+    for (trees, leaves) in shapes {
+        let f = super::harness::cached_rf(&train, trees, leaves);
+        let x = eval_batch(&ds, scale.eval_n);
+        out.push_str(&format!("== forest: {trees} trees x {leaves} leaves ==\n"));
+        let mut widths = vec![6usize];
+        widths.extend(vec![15usize; budgets.len()]);
+        let mut tw = TableWriter::new(widths);
+        let mut header = vec!["engine".to_string()];
+        header.extend(budgets.iter().map(|t| format!("{t}t")));
+        tw.row(&header);
+        tw.sep();
+        for &(kind, precision) in &variants {
+            let Some(serial) = build_engine_arc(kind, precision, &f) else { continue };
+            let base_us = time_per_instance(serial.as_ref(), &x, scale.repeats);
+            let mut us_list = Vec::new();
+            for &t in &budgets {
+                if t <= 1 {
+                    us_list.push(base_us);
+                    continue;
+                }
+                // Wrap the already-built serial engine: same Exact row
+                // sharding as build_parallel, without repeating RS/QS
+                // model preparation per thread count.
+                let e = ParallelEngine::wrap(serial.clone(), t);
+                us_list.push(time_per_instance(&e, &x, scale.repeats));
+            }
+            let mut cells = vec![variant_name(kind, precision)];
+            for (i, &us) in us_list.iter().enumerate() {
+                cells.push(if i == 0 {
+                    format!("{us:.2}")
+                } else {
+                    format!("{us:.2} ({:.2}x)", us_list[0] / us)
+                });
+            }
+            tw.row(&cells);
+            records.push(Json::from_pairs(vec![
+                ("engine", Json::Str(variant_name(kind, precision))),
+                ("dataset", Json::Str("magic".to_string())),
+                ("trees", Json::Num(trees as f64)),
+                ("leaves", Json::Num(leaves as f64)),
+                ("batch", Json::Num((x.len() / ds.d) as f64)),
+                ("threads", Json::array_usize(&budgets)),
+                (
+                    "us_per_instance",
+                    Json::Arr(us_list.iter().map(|&u| Json::Num(u)).collect()),
+                ),
+                (
+                    "speedup_vs_1t",
+                    Json::Arr(us_list.iter().map(|&u| Json::Num(us_list[0] / u)).collect()),
+                ),
+            ]));
+        }
+        out.push_str(&tw.finish());
+        out.push('\n');
+    }
+    let host_par =
+        std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+    let report = Json::from_pairs(vec![
+        ("experiment", Json::Str("scaling".to_string())),
+        ("scale", Json::Str(scale.name.to_string())),
+        ("host_parallelism", Json::Num(host_par as f64)),
+        ("policy", Json::Str("exact-row-sharding".to_string())),
+        ("results", Json::Arr(records)),
+    ]);
+    archive_json("scaling", &report);
+    out.push_str("archived JSON: results/scaling.json\n");
+    out
+}
+
 /// Archive a result under `results/<name>.txt`.
 pub fn archive(name: &str, text: &str) {
     let path = super::harness::results_dir().join(format!("{name}.txt"));
     if let Err(e) = std::fs::write(&path, text) {
+        eprintln!("warning: could not archive {name}: {e}");
+    }
+}
+
+/// Archive a machine-readable JSON report under `results/<name>.json`.
+pub fn archive_json(name: &str, j: &crate::util::Json) {
+    let path = super::harness::results_dir().join(format!("{name}.json"));
+    if let Err(e) = std::fs::write(&path, j.pretty()) {
         eprintln!("warning: could not archive {name}: {e}");
     }
 }
@@ -601,5 +711,18 @@ mod tests {
     fn ablation_runs() {
         let s = ablation_rs(&quick());
         assert!(s.contains("no-merge") || s.contains("RS(no-merge)"));
+    }
+
+    #[test]
+    fn scaling_runs_and_reports_json() {
+        let s = scaling(&quick(), 2);
+        assert!(s.contains("2t"), "{s}");
+        assert!(s.contains("qRS"), "{s}");
+        assert!(s.contains("scaling.json"), "{s}");
+        let path = super::super::harness::results_dir().join("scaling.json");
+        let text = std::fs::read_to_string(&path).unwrap();
+        let j = crate::util::Json::parse(&text).unwrap();
+        assert_eq!(j.get("experiment").and_then(|v| v.as_str()), Some("scaling"));
+        assert!(!j.get("results").and_then(|v| v.as_arr()).unwrap().is_empty());
     }
 }

@@ -29,6 +29,11 @@ pub struct BatchConfig {
     pub queue_cap: usize,
     /// Execution worker threads.
     pub workers: usize,
+    /// Thread budget for the engine itself: with a value > 1,
+    /// [`crate::coordinator::Server::deploy`] wraps the engine in a
+    /// [`crate::exec::ParallelEngine`] so each executed batch is sharded
+    /// across that many exec workers (bit-exact with the serial engine).
+    pub exec_threads: usize,
 }
 
 impl Default for BatchConfig {
@@ -38,6 +43,7 @@ impl Default for BatchConfig {
             max_delay: Duration::from_micros(500),
             queue_cap: 4096,
             workers: 1,
+            exec_threads: 1,
         }
     }
 }
@@ -50,15 +56,24 @@ pub struct Request {
 }
 
 /// Serving errors surfaced to clients.
-#[derive(Debug, Clone, thiserror::Error, PartialEq, Eq)]
+#[derive(Debug, Clone, PartialEq, Eq)]
 pub enum ServeError {
-    #[error("queue full (backpressure)")]
     Overloaded,
-    #[error("model is shutting down")]
     Shutdown,
-    #[error("bad input: {0}")]
     BadInput(String),
 }
+
+impl std::fmt::Display for ServeError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            ServeError::Overloaded => write!(f, "queue full (backpressure)"),
+            ServeError::Shutdown => write!(f, "model is shutting down"),
+            ServeError::BadInput(msg) => write!(f, "bad input: {msg}"),
+        }
+    }
+}
+
+impl std::error::Error for ServeError {}
 
 /// A running batcher for one engine.
 pub struct Batcher {
@@ -286,6 +301,7 @@ mod tests {
                 max_delay: Duration::from_millis(250),
                 queue_cap: 4,
                 workers: 1,
+                exec_threads: 1,
             },
         );
         let mut overloaded = false;

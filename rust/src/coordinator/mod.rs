@@ -15,12 +15,12 @@ pub mod selector;
 pub use batcher::{BatchConfig, Batcher, ServeError};
 pub use metrics::Metrics;
 pub use net::{NetClient, NetServer};
-pub use selector::{select_engine, Candidate, Selection};
+pub use selector::{select_engine, select_engine_with, thread_budgets, Candidate, Selection};
 
 use std::collections::HashMap;
 use std::sync::{Arc, RwLock};
 
-use crate::engine::{build, Engine, EngineKind, Precision};
+use crate::engine::{build_parallel, Engine, EngineKind, Precision};
 use crate::forest::{Forest, Task};
 
 /// A deployed model: its engine's batcher plus descriptive metadata.
@@ -43,7 +43,10 @@ impl Server {
         Server::default()
     }
 
-    /// Deploy a forest under `name` with an explicit engine choice.
+    /// Deploy a forest under `name` with an explicit engine choice. The
+    /// deployment honors `config.exec_threads` as its thread budget: above
+    /// 1, batches execute on a sharded work-stealing pool
+    /// ([`crate::exec::ParallelEngine`], bit-exact with the serial engine).
     pub fn deploy(
         &self,
         name: &str,
@@ -52,7 +55,8 @@ impl Server {
         precision: Precision,
         config: BatchConfig,
     ) -> anyhow::Result<()> {
-        let engine: Arc<dyn Engine> = Arc::from(build(kind, precision, forest, None)?);
+        let engine: Arc<dyn Engine> =
+            Arc::from(build_parallel(kind, precision, forest, None, config.exec_threads)?);
         self.deploy_engine(name, forest, engine, config)
     }
 
@@ -76,7 +80,10 @@ impl Server {
         Ok(())
     }
 
-    /// Deploy using the auto-selector on a calibration batch.
+    /// Deploy using the auto-selector on a calibration batch. With
+    /// `config.exec_threads > 1`, threaded candidates (e.g. `RS×4t`) are
+    /// measured next to the serial ones and the winner's thread count is
+    /// what gets deployed.
     pub fn deploy_auto(
         &self,
         name: &str,
@@ -84,8 +91,10 @@ impl Server {
         calibration: &[f32],
         config: BatchConfig,
     ) -> anyhow::Result<Selection> {
-        let sel = select_engine(forest, calibration, None, 3)?;
+        let budgets = selector::thread_budgets(config.exec_threads);
+        let sel = selector::select_engine_with(forest, calibration, None, 3, &budgets)?;
         let best = sel.best();
+        let config = BatchConfig { exec_threads: best.threads, ..config };
         self.deploy(name, forest, best.kind, best.precision, config)?;
         Ok(sel)
     }

@@ -10,7 +10,8 @@
 use std::sync::Arc;
 
 use crate::device::{model_working_set, DeviceProfile};
-use crate::engine::{build, variant_name, Engine, EngineKind, Precision};
+use crate::engine::{build, Engine, EngineKind, Precision};
+use crate::exec::ParallelEngine;
 use crate::forest::Forest;
 use crate::util::Stopwatch;
 
@@ -20,6 +21,8 @@ pub struct Candidate {
     pub name: String,
     pub kind: EngineKind,
     pub precision: Precision,
+    /// Exec-thread budget this candidate ran with (1 = serial).
+    pub threads: usize,
     /// Measured host wall-clock per instance (µs).
     pub host_us_per_instance: f64,
     /// Cost-model estimate per instance (µs) for the target device, if one
@@ -43,13 +46,14 @@ impl Selection {
         let mut out = String::new();
         let target = self.device.as_deref().unwrap_or("host");
         out.push_str(&format!("engine selection (target: {target})\n"));
+        // Width 9 fits threaded names like `qVQS×16t` next to serial ones.
         out.push_str(&format!(
-            "  {:<6} {:>14} {:>16}\n",
+            "  {:<9} {:>14} {:>16}\n",
             "engine", "host µs/inst", "device µs/inst"
         ));
         for c in &self.candidates {
             out.push_str(&format!(
-                "  {:<6} {:>14.2} {:>16}\n",
+                "  {:<9} {:>14.2} {:>16}\n",
                 c.name,
                 c.host_us_per_instance,
                 c.device_us_per_instance
@@ -61,58 +65,124 @@ impl Selection {
     }
 }
 
-/// Measure every engine variant on `calibration` (row-major batch) and rank.
-///
-/// With a `device` profile, ranking uses the cost-model estimate (the
-/// deployment target); otherwise host wall-clock. `repeats` controls the
-/// median-of-k timing.
+/// Measure every (serial) engine variant on `calibration` and rank — the
+/// original 10-candidate selection. See [`select_engine_with`] for threaded
+/// candidates.
 pub fn select_engine(
     forest: &Forest,
     calibration: &[f32],
     device: Option<&DeviceProfile>,
     repeats: usize,
 ) -> anyhow::Result<Selection> {
+    select_engine_with(forest, calibration, device, repeats, &[1])
+}
+
+/// The thread budgets worth measuring for a deployment budget: 1, the
+/// powers of two in between, and the budget itself.
+pub fn thread_budgets(max_threads: usize) -> Vec<usize> {
+    let mut budgets = vec![1usize];
+    let mut t = 2usize;
+    while t < max_threads {
+        budgets.push(t);
+        match t.checked_mul(2) {
+            Some(next) => t = next,
+            None => break, // absurd budgets must not wrap into a 0 loop
+        }
+    }
+    if max_threads > 1 {
+        budgets.push(max_threads);
+    }
+    budgets
+}
+
+/// Measure every engine variant × thread budget on `calibration` (row-major
+/// batch) and rank. Threaded candidates run as row-sharded
+/// [`crate::exec::ParallelEngine`]s (bit-exact with serial), named
+/// paper-style plus a thread suffix, e.g. `RS×4t`.
+///
+/// With a `device` profile, ranking uses the cost-model estimate (the
+/// deployment target); the single-core estimate is scaled by the device's
+/// usable parallelism (capped at its core count, with a 3%-per-extra-thread
+/// coordination penalty). `repeats` controls the median-of-k timing.
+pub fn select_engine_with(
+    forest: &Forest,
+    calibration: &[f32],
+    device: Option<&DeviceProfile>,
+    repeats: usize,
+    thread_budgets: &[usize],
+) -> anyhow::Result<Selection> {
     let n = calibration.len() / forest.n_features;
     anyhow::ensure!(n > 0, "calibration batch is empty");
+    let mut budgets: Vec<usize> = thread_budgets.iter().map(|&t| t.max(1)).collect();
+    budgets.sort_unstable();
+    budgets.dedup();
+    if budgets.is_empty() {
+        budgets.push(1);
+    }
     let mut candidates = Vec::new();
     for (kind, precision) in crate::engine::all_variants() {
-        let engine: Arc<dyn Engine> = match build(kind, precision, forest, None) {
+        // Build the serial engine once per variant; threaded candidates
+        // wrap the same instance (Exact row sharding), so RS/QS model
+        // preparation and quantization are not repeated per budget.
+        let serial: Arc<dyn Engine> = match build(kind, precision, forest, None) {
             Ok(e) => Arc::from(e),
             Err(_) => continue, // e.g. >64 leaves: QS family unavailable
         };
-        let mut out = vec![0f32; n * forest.n_classes];
-        // Warmup + median-of-k.
-        engine.predict_batch(calibration, &mut out);
-        let mut times = Vec::with_capacity(repeats);
-        for _ in 0..repeats.max(1) {
-            let sw = Stopwatch::start();
-            engine.predict_batch(calibration, &mut out);
-            times.push(sw.micros() / n as f64);
-        }
-        times.sort_by(|a, b| a.partial_cmp(b).unwrap());
-        let host = times[times.len() / 2];
-        let device_est = device.map(|dev| {
-            let trace = engine.count_ops(calibration);
-            let bytes_per_scalar = match precision {
-                Precision::F32 => 4,
-                Precision::I16 => 2,
+        // The op trace is a workload property, identical for every thread
+        // budget (ParallelEngine::count_ops delegates to the serial
+        // engine) — compute the single-core device estimate once per
+        // variant, not once per budget.
+        let mut single_us_est: Option<f64> = None;
+        for &threads in &budgets {
+            let engine: Arc<dyn Engine> = if threads <= 1 {
+                serial.clone()
+            } else {
+                Arc::new(ParallelEngine::wrap(serial.clone(), threads))
             };
-            let ws = model_working_set(
-                forest.n_nodes(),
-                forest.n_trees(),
-                forest.max_leaves().next_power_of_two().max(32),
-                forest.n_classes,
-                bytes_per_scalar,
-            );
-            dev.estimate_us(&trace, ws) / n as f64
-        });
-        candidates.push(Candidate {
-            name: variant_name(kind, precision),
-            kind,
-            precision,
-            host_us_per_instance: host,
-            device_us_per_instance: device_est,
-        });
+            let mut out = vec![0f32; n * forest.n_classes];
+            // Warmup + median-of-k.
+            engine.predict_batch(calibration, &mut out);
+            let mut times = Vec::with_capacity(repeats);
+            for _ in 0..repeats.max(1) {
+                let sw = Stopwatch::start();
+                engine.predict_batch(calibration, &mut out);
+                times.push(sw.micros() / n as f64);
+            }
+            times.sort_by(|a, b| a.partial_cmp(b).unwrap());
+            let host = times[times.len() / 2];
+            let device_est = device.map(|dev| {
+                let single = *single_us_est.get_or_insert_with(|| {
+                    let trace = engine.count_ops(calibration);
+                    let bytes_per_scalar = match precision {
+                        Precision::F32 => 4,
+                        Precision::I16 => 2,
+                    };
+                    let ws = model_working_set(
+                        forest.n_nodes(),
+                        forest.n_trees(),
+                        forest.max_leaves().next_power_of_two().max(32),
+                        forest.n_classes,
+                        bytes_per_scalar,
+                    );
+                    dev.estimate_us(&trace, ws) / n as f64
+                });
+                // Row sharding parallelizes near-linearly up to the core
+                // count; charge a small coordination penalty per extra
+                // thread.
+                let p = threads.min(dev.cores).max(1) as f64;
+                single / p * (1.0 + 0.03 * (threads.saturating_sub(1)) as f64)
+            });
+            candidates.push(Candidate {
+                // `ParallelEngine::name()` already renders the `×Nt`
+                // suffix; serial engines render the paper-style name.
+                name: engine.name(),
+                kind,
+                precision,
+                threads,
+                host_us_per_instance: host,
+                device_us_per_instance: device_est,
+            });
+        }
     }
     candidates.sort_by(|a, b| {
         let ka = a.device_us_per_instance.unwrap_or(a.host_us_per_instance);
@@ -169,5 +239,34 @@ mod tests {
         let sel = select_engine(&f, &ds.x[..ds.d * 64], Some(&dev), 1).unwrap();
         assert!(sel.candidates.iter().all(|c| c.device_us_per_instance.is_some()));
         assert!(sel.device.as_deref().unwrap().contains("A53"));
+    }
+
+    #[test]
+    fn thread_budget_enumeration() {
+        assert_eq!(thread_budgets(1), vec![1]);
+        assert_eq!(thread_budgets(2), vec![1, 2]);
+        assert_eq!(thread_budgets(4), vec![1, 2, 4]);
+        assert_eq!(thread_budgets(6), vec![1, 2, 4, 6]);
+    }
+
+    #[test]
+    fn threaded_candidates_enumerated_and_named() {
+        let ds = DatasetId::Magic.generate(400, 23);
+        let f = train_random_forest(
+            &ds.x,
+            &ds.labels,
+            ds.d,
+            ds.n_classes,
+            RfParams {
+                n_trees: 12,
+                tree: TreeParams { max_leaves: 16, min_samples_leaf: 2, mtry: 0 },
+                ..Default::default()
+            },
+        );
+        let sel = select_engine_with(&f, &ds.x[..ds.d * 128], None, 1, &[1, 2]).unwrap();
+        // 10 variants × 2 budgets.
+        assert_eq!(sel.candidates.len(), 20);
+        assert!(sel.candidates.iter().any(|c| c.threads == 2 && c.name.ends_with("×2t")));
+        assert!(sel.candidates.iter().any(|c| c.threads == 1 && c.name == "RS"));
     }
 }

@@ -58,6 +58,10 @@ pub struct DeviceProfile {
     /// Active core power in watts (from the paper's Table 1 current draws
     /// at nominal voltage) — used for energy-per-inference estimates.
     pub power_w: f64,
+    /// Cores of this class on the device (all of the paper's targets are
+    /// 4-core parts / 4+4 clusters) — caps the useful thread budget when the
+    /// selector scores threaded candidates.
+    pub cores: usize,
 }
 
 impl DeviceProfile {
@@ -84,6 +88,7 @@ impl DeviceProfile {
             mem_load_cycles: 110.0,
             store_bytes_per_cycle: 4.0,
             power_w: 1.3, // ~260 mA @ 5 V (paper Table 1, Raspberry Pi 3B)
+            cores: 4,
         }
     }
 
@@ -109,6 +114,7 @@ impl DeviceProfile {
             mem_load_cycles: 150.0,
             store_bytes_per_cycle: 8.0,
             power_w: 3.8, // A15 cluster under sustained load
+            cores: 4,
         }
     }
 
@@ -134,12 +140,21 @@ impl DeviceProfile {
             mem_load_cycles: 140.0,
             store_bytes_per_cycle: 2.5,
             power_w: 0.9, // A7 LITTLE cluster
+            cores: 4,
         }
     }
 
     /// Both devices the paper evaluates (A53 + Exynos big cluster).
     pub fn paper_devices() -> Vec<DeviceProfile> {
         vec![Self::cortex_a53(), Self::exynos_5422_big()]
+    }
+
+    /// Relative single-core throughput proxy (clock over scalar-FP
+    /// reciprocal throughput) — used by [`crate::exec`]'s shard planner to
+    /// weight big.LITTLE partitions. Only ratios between profiles matter:
+    /// A15 ≈ 3.3, A53 ≈ 1.2, A7 ≈ 0.8.
+    pub fn relative_speed(&self) -> f64 {
+        self.clock_ghz / self.scalar_fp
     }
 
     /// Effective cycles for one data-dependent load, given the model's
@@ -265,5 +280,15 @@ mod tests {
     fn working_set_helper() {
         let ws = model_working_set(1000, 64, 32, 2, 4);
         assert!(ws > 16_000.0);
+    }
+
+    #[test]
+    fn relative_speed_orders_cores() {
+        let a15 = DeviceProfile::exynos_5422_big();
+        let a53 = DeviceProfile::cortex_a53();
+        let a7 = DeviceProfile::exynos_5422_little();
+        assert!(a15.relative_speed() > a53.relative_speed());
+        assert!(a53.relative_speed() > a7.relative_speed());
+        assert_eq!(a53.cores, 4);
     }
 }

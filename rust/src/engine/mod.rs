@@ -148,6 +148,30 @@ pub fn build(
     })
 }
 
+/// Build an engine with a thread budget: `threads <= 1` returns the plain
+/// serial engine; otherwise the engine is wrapped in a
+/// [`crate::exec::ParallelEngine`] running row-sharded over a work-stealing
+/// pool (bit-exact with the serial engine — [`crate::exec::ShardPolicy::Exact`]).
+pub fn build_parallel(
+    kind: EngineKind,
+    precision: Precision,
+    forest: &Forest,
+    quant: Option<QuantConfig>,
+    threads: usize,
+) -> anyhow::Result<Box<dyn Engine>> {
+    if threads <= 1 {
+        return build(kind, precision, forest, quant);
+    }
+    Ok(Box::new(crate::exec::ParallelEngine::from_forest(
+        kind,
+        precision,
+        forest,
+        quant,
+        threads,
+        crate::exec::ShardPolicy::Exact,
+    )?))
+}
+
 /// All ten (kind, precision) combinations the paper benchmarks in Table 5.
 pub fn all_variants() -> Vec<(EngineKind, Precision)> {
     let mut out = Vec::new();

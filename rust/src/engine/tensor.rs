@@ -94,6 +94,9 @@ pub struct TensorEngine {
     n_classes: usize,
     batch: usize,
     base_score: Vec<f32>,
+    /// Resident bytes of the encoded QS tensors held by the worker (the
+    /// parameter literals mirror these buffers).
+    memory_bytes: usize,
 }
 
 impl TensorEngine {
@@ -120,6 +123,15 @@ impl TensorEngine {
             );
         }
         let tensors = encode_qs_padded(forest, meta.n_trees, meta.k, meta.leaf_words)?;
+        let scalar_bytes = match meta.dtype {
+            ArtifactDtype::F32 => 4,
+            ArtifactDtype::I16 => 2,
+        };
+        let memory_bytes = tensors.thr.len() * scalar_bytes // thresholds (quantized for i16)
+            + tensors.fid.len() * 4
+            + tensors.mask_lo.len() * 4
+            + tensors.mask_hi.len() * 4
+            + tensors.leaves.len() * scalar_bytes;
         let (tx, rx) = mpsc::channel::<Job>();
         let (init_tx, init_rx) = mpsc::channel::<Result<()>>();
         let dir = artifacts_dir.to_path_buf();
@@ -137,6 +149,7 @@ impl TensorEngine {
             n_classes: meta.c,
             batch: meta.batch,
             base_score: forest.base_score.clone(),
+            memory_bytes,
         })
     }
 }
@@ -287,6 +300,10 @@ impl Engine for TensorEngine {
             }
             base += chunk;
         }
+    }
+
+    fn memory_bytes(&self) -> usize {
+        self.memory_bytes
     }
 }
 

@@ -1,0 +1,29 @@
+//! Sharded, work-stealing parallel execution runtime (DESIGN.md system S18).
+//!
+//! The paper's engines exploit SIMD lanes within one core; every ARM target
+//! in its Table 1 is a multi-core — often heterogeneous big.LITTLE — part.
+//! This subsystem adds the missing axis: a from-scratch, std-only
+//! work-stealing worker pool ([`pool::WorkerPool`]), a shard planner
+//! ([`shard`]) choosing between lane-aligned **row sharding**, **tree
+//! sharding** with deterministic ordered reduction, and a hybrid of both,
+//! weighted by core class ([`topology::CoreTopology`]) — and a
+//! [`ParallelEngine`] wrapper that implements [`crate::engine::Engine`], so
+//! it drops into the coordinator, selector, CLI and bench harness
+//! unchanged.
+//!
+//! Exactness is a first-class contract: under the default
+//! [`ShardPolicy::Exact`] the parallel engine is bit-identical to the
+//! serial engine it wraps (enforced by `rust/tests/parallel_exact.rs`);
+//! [`ShardPolicy::Throughput`] additionally unlocks tree/hybrid plans for
+//! the small-batch × large-forest regime at float-tolerance accuracy. See
+//! `exec::parallel` for the full contract.
+
+pub mod parallel;
+pub mod pool;
+pub mod shard;
+pub mod topology;
+
+pub use parallel::ParallelEngine;
+pub use pool::WorkerPool;
+pub use shard::{plan, tree_shard_bounds, weighted_row_chunks, ShardPlan, ShardPolicy};
+pub use topology::{CoreClass, CoreTopology};

@@ -1,0 +1,440 @@
+//! [`ParallelEngine`]: any serial [`Engine`] executed across a worker pool.
+//!
+//! Implements the `Engine` trait itself, so it drops into the coordinator's
+//! batcher, the selector, the CLI and the bench harness unchanged.
+//!
+//! # Determinism contract
+//!
+//! * **`ShardPolicy::Exact`** (default): output is **bit-identical** to the
+//!   wrapped serial engine for every batch size and thread count. Only row
+//!   plans are emitted; chunk boundaries are lane-aligned, so each chunk's
+//!   SIMD blocking is exactly the serial blocking of those rows, and each
+//!   worker writes a disjoint slice of `out`.
+//! * **`ShardPolicy::Throughput`**: tree-sharded and hybrid plans are also
+//!   emitted for small-batch × large-forest work. Partial score vectors are
+//!   reduced in shard-index order into per-element sums, so a given
+//!   `ParallelEngine` instance is run-to-run deterministic regardless of
+//!   scheduling — but the f32 re-association can differ from the serial
+//!   fold in the last ulp (the i16 engines' integer partials re-associate
+//!   exactly; their final f32 descale does not). Use where a float
+//!   tolerance applies (benchmarks, serving without bit-exactness SLOs).
+//!
+//! Tree shards are built once at construction: sub-forest `0` keeps the
+//! ensemble's base score, later shards get zero base, and all i16 shards
+//! share the full forest's quantization scale so partials descale
+//! identically.
+
+use std::sync::Arc;
+
+use crate::engine::{build, Engine, EngineKind, Precision};
+use crate::forest::Forest;
+use crate::neon::OpTrace;
+use crate::quant::{choose_scale, QuantConfig};
+
+use super::pool::{Task, WorkerPool};
+use super::shard::{chunk_weights, plan, tree_shard_bounds, ShardPlan, ShardPolicy};
+use super::topology::CoreTopology;
+
+/// Send-able raw pointer wrappers for handing disjoint slice ranges to pool
+/// tasks. Safety rests on two invariants enforced by the planner: row
+/// ranges never overlap, and `WorkerPool::run` does not return until every
+/// task has finished (the borrow outlives all uses).
+#[derive(Clone, Copy)]
+struct ConstPtr(*const f32);
+unsafe impl Send for ConstPtr {}
+
+#[derive(Clone, Copy)]
+struct MutPtr(*mut f32);
+unsafe impl Send for MutPtr {}
+
+/// A serial engine executed by a sharded, work-stealing worker pool.
+pub struct ParallelEngine {
+    inner: Arc<dyn Engine>,
+    /// Sub-engines over contiguous tree ranges (empty under `Exact`).
+    tree_shards: Vec<Arc<dyn Engine>>,
+    pool: Arc<WorkerPool>,
+    topo: CoreTopology,
+    policy: ShardPolicy,
+    threads: usize,
+    /// Per-chunk-slot weights derived from (topo × threads) — fixed after
+    /// construction, so they are computed once, off the predict hot path.
+    weights: Vec<f64>,
+}
+
+impl ParallelEngine {
+    /// Build the serial engine for `(kind, precision, forest)` and wrap it
+    /// with a fresh pool of `threads` workers. Under
+    /// [`ShardPolicy::Throughput`] the forest is additionally partitioned
+    /// into per-shard sub-engines for tree parallelism.
+    pub fn from_forest(
+        kind: EngineKind,
+        precision: Precision,
+        forest: &Forest,
+        quant: Option<QuantConfig>,
+        threads: usize,
+        policy: ShardPolicy,
+    ) -> anyhow::Result<ParallelEngine> {
+        // One scale for the full forest and every shard (see module docs).
+        let quant = match precision {
+            Precision::I16 => Some(quant.unwrap_or_else(|| choose_scale(forest, 1.0))),
+            Precision::F32 => quant,
+        };
+        let inner: Arc<dyn Engine> = Arc::from(build(kind, precision, forest, quant)?);
+        let threads = threads.max(1);
+
+        let mut tree_shards: Vec<Arc<dyn Engine>> = Vec::new();
+        if policy == ShardPolicy::Throughput && forest.n_trees() >= 2 {
+            let weights = vec![1.0; threads.min(forest.n_trees())];
+            for (s, (a, b)) in tree_shard_bounds(forest.n_trees(), &weights).iter().enumerate() {
+                let mut sub = forest.clone();
+                sub.trees = forest.trees[*a..*b].to_vec();
+                if s > 0 {
+                    // Only shard 0 contributes the base score to the sum.
+                    sub.base_score = vec![0.0; forest.n_classes];
+                }
+                tree_shards.push(Arc::from(build(kind, precision, &sub, quant)?));
+            }
+            if tree_shards.len() < 2 {
+                tree_shards.clear();
+            }
+        }
+
+        let topo = CoreTopology::detect();
+        let weights = chunk_weights(&topo, threads);
+        Ok(ParallelEngine {
+            inner,
+            tree_shards,
+            pool: Arc::new(WorkerPool::new(threads)),
+            topo,
+            policy,
+            threads,
+            weights,
+        })
+    }
+
+    /// Wrap an already-built engine (row sharding only — the forest is not
+    /// available to partition). Always bit-exact.
+    pub fn wrap(engine: Arc<dyn Engine>, threads: usize) -> ParallelEngine {
+        let threads = threads.max(1);
+        let topo = CoreTopology::detect();
+        let weights = chunk_weights(&topo, threads);
+        ParallelEngine {
+            inner: engine,
+            tree_shards: Vec::new(),
+            pool: Arc::new(WorkerPool::new(threads)),
+            topo,
+            policy: ShardPolicy::Exact,
+            threads,
+            weights,
+        }
+    }
+
+    /// Replace the core topology used for weighted shard sizing (e.g.
+    /// [`CoreTopology::odroid_xu4`] when emulating a big.LITTLE target).
+    pub fn with_topology(mut self, topo: CoreTopology) -> ParallelEngine {
+        self.weights = chunk_weights(&topo, self.threads);
+        self.topo = topo;
+        self
+    }
+
+    /// Worker-thread budget.
+    pub fn threads(&self) -> usize {
+        self.threads
+    }
+
+    /// The core topology shard weights are derived from.
+    pub fn topology(&self) -> &CoreTopology {
+        &self.topo
+    }
+
+    /// The wrapped serial engine.
+    pub fn inner(&self) -> &Arc<dyn Engine> {
+        &self.inner
+    }
+
+    /// Row plan execution: each chunk is a serial `predict_batch` over a
+    /// disjoint `(x, out)` window.
+    fn run_rows(&self, x: &[f32], out: &mut [f32], chunks: &[(usize, usize)]) {
+        let d = self.inner.n_features();
+        let c = self.inner.n_classes();
+        let xp = ConstPtr(x.as_ptr());
+        let op = MutPtr(out.as_mut_ptr());
+        let tasks: Vec<Task> = chunks
+            .iter()
+            .map(|&(a, b)| {
+                let engine = self.inner.clone();
+                Box::new(move || {
+                    // SAFETY: chunks are disjoint, in-bounds row ranges of
+                    // x/out, and the caller blocks in `pool.run` until every
+                    // task completes.
+                    let (xs, os) = unsafe {
+                        (
+                            std::slice::from_raw_parts(xp.0.add(a * d), (b - a) * d),
+                            std::slice::from_raw_parts_mut(op.0.add(a * c), (b - a) * c),
+                        )
+                    };
+                    engine.predict_batch(xs, os);
+                }) as Task
+            })
+            .collect();
+        self.pool.run(tasks);
+    }
+
+    /// Tree / hybrid plan execution: every (row-chunk × tree-shard) pair
+    /// computes a partial into the shard's buffer; partials are then
+    /// reduced in shard-index order (deterministic).
+    fn run_trees(&self, x: &[f32], out: &mut [f32], row_chunks: &[(usize, usize)]) {
+        let d = self.inner.n_features();
+        let c = self.inner.n_classes();
+        let n = x.len() / d.max(1);
+        let n_shards = self.tree_shards.len();
+        let mut partials: Vec<Vec<f32>> = (0..n_shards).map(|_| vec![0f32; n * c]).collect();
+        let xp = ConstPtr(x.as_ptr());
+
+        let mut tasks: Vec<Task> = Vec::with_capacity(n_shards * row_chunks.len());
+        for (s, shard) in self.tree_shards.iter().enumerate() {
+            let pp = MutPtr(partials[s].as_mut_ptr());
+            for &(a, b) in row_chunks {
+                let engine = shard.clone();
+                tasks.push(Box::new(move || {
+                    // SAFETY: each task owns the disjoint (shard s, rows
+                    // a..b) window of `partials`; buffers outlive `run`.
+                    let (xs, os) = unsafe {
+                        (
+                            std::slice::from_raw_parts(xp.0.add(a * d), (b - a) * d),
+                            std::slice::from_raw_parts_mut(pp.0.add(a * c), (b - a) * c),
+                        )
+                    };
+                    engine.predict_batch(xs, os);
+                }) as Task);
+            }
+        }
+        self.pool.run(tasks);
+
+        // Ordered reduction: out[i] = Σ_s partials[s][i], s ascending.
+        out.copy_from_slice(&partials[0]);
+        for p in &partials[1..] {
+            for (o, &v) in out.iter_mut().zip(p.iter()) {
+                *o += v;
+            }
+        }
+    }
+}
+
+impl Engine for ParallelEngine {
+    fn name(&self) -> String {
+        format!("{}×{}t", self.inner.name(), self.threads)
+    }
+
+    fn lanes(&self) -> usize {
+        self.inner.lanes()
+    }
+
+    fn n_features(&self) -> usize {
+        self.inner.n_features()
+    }
+
+    fn n_classes(&self) -> usize {
+        self.inner.n_classes()
+    }
+
+    fn predict_batch(&self, x: &[f32], out: &mut [f32]) {
+        let d = self.inner.n_features().max(1);
+        let n = x.len() / d;
+        if self.threads <= 1 || n == 0 {
+            return self.inner.predict_batch(x, out);
+        }
+        match plan(
+            n,
+            self.inner.lanes(),
+            self.tree_shards.len(),
+            self.policy,
+            &self.weights,
+            self.threads,
+        ) {
+            ShardPlan::Serial => self.inner.predict_batch(x, out),
+            ShardPlan::Rows(chunks) => self.run_rows(x, out, &chunks),
+            ShardPlan::Trees => self.run_trees(x, out, &[(0, n)]),
+            ShardPlan::Hybrid(chunks) => self.run_trees(x, out, &chunks),
+        }
+    }
+
+    /// Operation counts are workload properties, not schedules: the same
+    /// ops execute regardless of which worker runs them, so the serial
+    /// engine's trace is the parallel engine's trace.
+    fn count_ops(&self, x: &[f32]) -> OpTrace {
+        self.inner.count_ops(x)
+    }
+
+    fn memory_bytes(&self) -> usize {
+        self.inner.memory_bytes()
+            + self.tree_shards.iter().map(|s| s.memory_bytes()).sum::<usize>()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::DatasetId;
+    use crate::forest::builder::{train_random_forest, RfParams, TreeParams};
+
+    fn forest(trees: usize) -> (Forest, crate::data::Dataset) {
+        let ds = DatasetId::Magic.generate(700, 0xEC);
+        let f = train_random_forest(
+            &ds.x,
+            &ds.labels,
+            ds.d,
+            ds.n_classes,
+            RfParams {
+                n_trees: trees,
+                tree: TreeParams { max_leaves: 16, min_samples_leaf: 2, mtry: 0 },
+                ..Default::default()
+            },
+        );
+        (f, ds)
+    }
+
+    #[test]
+    fn exact_rows_bit_identical_all_kinds() {
+        let (f, ds) = forest(12);
+        for kind in EngineKind::ALL {
+            for precision in [Precision::F32, Precision::I16] {
+                let serial = build(kind, precision, &f, None).unwrap();
+                let par = ParallelEngine::from_forest(
+                    kind,
+                    precision,
+                    &f,
+                    None,
+                    4,
+                    ShardPolicy::Exact,
+                )
+                .unwrap();
+                // Includes a non-lane-multiple remainder (n = 101).
+                let x = &ds.x[..ds.d * 101];
+                assert_eq!(
+                    par.predict(x),
+                    serial.predict(x),
+                    "{} {:?} not bit-exact",
+                    kind.short(),
+                    precision
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn throughput_tree_sharding_close_and_deterministic() {
+        let (f, ds) = forest(24);
+        let serial = build(EngineKind::Rs, Precision::F32, &f, None).unwrap();
+        let par = ParallelEngine::from_forest(
+            EngineKind::Rs,
+            Precision::F32,
+            &f,
+            None,
+            4,
+            ShardPolicy::Throughput,
+        )
+        .unwrap();
+        assert!(par.tree_shards.len() >= 2);
+        // Small batch → tree/hybrid plan.
+        let x = &ds.x[..ds.d * 5];
+        let got = par.predict(x);
+        crate::testing::assert_close(&got, &serial.predict(x), 1e-5, 1e-5).unwrap();
+        // Run-to-run determinism of the ordered reduction.
+        for _ in 0..5 {
+            assert_eq!(par.predict(x), got);
+        }
+    }
+
+    #[test]
+    fn hybrid_plan_matches_reference() {
+        // RS has 16 lanes, so 40 rows yields 3 lane-blocks: more than one
+        // row chunk but fewer than the chunk slots → the planner emits a
+        // Hybrid plan (see shard::plan tests).
+        let (f, ds) = forest(16);
+        let fwd = f.predict_batch(&ds.x[..ds.d * 40]);
+        let par = ParallelEngine::from_forest(
+            EngineKind::Rs,
+            Precision::F32,
+            &f,
+            None,
+            4,
+            ShardPolicy::Throughput,
+        )
+        .unwrap();
+        let got = par.predict(&ds.x[..ds.d * 40]);
+        crate::testing::assert_close(&got, &fwd, 1e-4, 1e-4).unwrap();
+        // Deterministic across repeated calls.
+        assert_eq!(par.predict(&ds.x[..ds.d * 40]), got);
+    }
+
+    #[test]
+    fn wrap_is_bit_exact_and_named() {
+        let (f, ds) = forest(8);
+        let serial: Arc<dyn Engine> =
+            Arc::from(build(EngineKind::Vqs, Precision::F32, &f, None).unwrap());
+        let par = ParallelEngine::wrap(serial.clone(), 3);
+        assert_eq!(par.name(), "VQS×3t");
+        assert_eq!(par.lanes(), serial.lanes());
+        let x = &ds.x[..ds.d * 33];
+        assert_eq!(par.predict(x), serial.predict(x));
+    }
+
+    #[test]
+    fn one_thread_is_serial_passthrough() {
+        let (f, ds) = forest(6);
+        let serial = build(EngineKind::Naive, Precision::F32, &f, None).unwrap();
+        let par = ParallelEngine::from_forest(
+            EngineKind::Naive,
+            Precision::F32,
+            &f,
+            None,
+            1,
+            ShardPolicy::Exact,
+        )
+        .unwrap();
+        assert_eq!(par.predict(&ds.x), serial.predict(&ds.x));
+    }
+
+    #[test]
+    fn big_little_topology_accepted() {
+        let (f, ds) = forest(8);
+        let par = ParallelEngine::from_forest(
+            EngineKind::Rs,
+            Precision::F32,
+            &f,
+            None,
+            4,
+            ShardPolicy::Exact,
+        )
+        .unwrap()
+        .with_topology(CoreTopology::odroid_xu4());
+        let serial = build(EngineKind::Rs, Precision::F32, &f, None).unwrap();
+        let x = &ds.x[..ds.d * 200];
+        assert_eq!(par.predict(x), serial.predict(x));
+    }
+
+    #[test]
+    fn memory_accounts_for_shards() {
+        let (f, _) = forest(16);
+        let exact = ParallelEngine::from_forest(
+            EngineKind::Qs,
+            Precision::F32,
+            &f,
+            None,
+            4,
+            ShardPolicy::Exact,
+        )
+        .unwrap();
+        let thr = ParallelEngine::from_forest(
+            EngineKind::Qs,
+            Precision::F32,
+            &f,
+            None,
+            4,
+            ShardPolicy::Throughput,
+        )
+        .unwrap();
+        assert!(thr.memory_bytes() > exact.memory_bytes());
+    }
+}

@@ -1,0 +1,341 @@
+//! A from-scratch, std-only work-stealing worker pool.
+//!
+//! `rayon`/`crossbeam` are unavailable offline, so this implements the small
+//! core the execution layer needs: N persistent workers, one deque per
+//! worker, LIFO pop of local work and FIFO steal of remote work (the classic
+//! locality/fairness split), and a blocking `run` that submits a job's tasks
+//! and waits for all of them.
+//!
+//! Design notes:
+//!
+//! * Deques are `Mutex<VecDeque>` rather than a lock-free Chase–Lev deque.
+//!   Tasks here are *shards* — tens of microseconds to milliseconds of tree
+//!   traversal — so a ~20 ns lock is noise; in exchange the pool is obviously
+//!   correct and fully safe code.
+//! * A submitted task is first *reserved* via the `pending` counter (under
+//!   the condvar mutex), then claimed from a deque. Tasks are pushed to a
+//!   deque **before** `pending` is incremented, so a worker that wins a
+//!   reservation always finds a task; no lost-wakeup window exists.
+//! * Panics in tasks are caught so a poisoned shard cannot deadlock the
+//!   submitting thread; `run` re-panics after the whole job has drained.
+
+use std::collections::VecDeque;
+use std::panic::{self, AssertUnwindSafe};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+
+/// A unit of work submitted to the pool.
+pub type Task = Box<dyn FnOnce() + Send + 'static>;
+
+struct Shared {
+    /// One deque per worker; `run` distributes a job's tasks round-robin.
+    queues: Vec<Mutex<VecDeque<Task>>>,
+    /// Count of submitted-but-unclaimed tasks, guarded by the wakeup mutex.
+    pending: Mutex<usize>,
+    wakeup: Condvar,
+    shutdown: AtomicBool,
+    /// Round-robin submission cursor (so consecutive jobs start on
+    /// different workers).
+    cursor: AtomicUsize,
+}
+
+impl Shared {
+    /// Pop from our own deque (LIFO: newest first, best locality).
+    fn pop_local(&self, w: usize) -> Option<Task> {
+        self.queues[w].lock().unwrap().pop_back()
+    }
+
+    /// Steal from another worker's deque (FIFO: oldest first, biggest
+    /// remaining work under the planner's size-ordered submission).
+    fn steal(&self, w: usize) -> Option<Task> {
+        let n = self.queues.len();
+        for i in 1..n {
+            if let Some(t) = self.queues[(w + i) % n].lock().unwrap().pop_front() {
+                return Some(t);
+            }
+        }
+        None
+    }
+}
+
+fn worker_loop(shared: Arc<Shared>, w: usize) {
+    loop {
+        // Reserve one task (or sleep until one exists / shutdown).
+        {
+            let mut pending = shared.pending.lock().unwrap();
+            loop {
+                if *pending > 0 {
+                    *pending -= 1;
+                    break;
+                }
+                if shared.shutdown.load(Ordering::Acquire) {
+                    return;
+                }
+                pending = shared.wakeup.wait(pending).unwrap();
+            }
+        }
+        // A reservation guarantees a task exists somewhere; tasks are pushed
+        // before `pending` is incremented, so this loop terminates
+        // immediately in practice.
+        let task = loop {
+            if let Some(t) = shared.pop_local(w) {
+                break t;
+            }
+            if let Some(t) = shared.steal(w) {
+                break t;
+            }
+            std::hint::spin_loop();
+        };
+        task();
+    }
+}
+
+/// Completion latch for one submitted job.
+struct Latch {
+    state: Mutex<LatchState>,
+    done: Condvar,
+}
+
+struct LatchState {
+    remaining: usize,
+    panicked: bool,
+}
+
+impl Latch {
+    fn new(n: usize) -> Latch {
+        Latch {
+            state: Mutex::new(LatchState { remaining: n, panicked: false }),
+            done: Condvar::new(),
+        }
+    }
+
+    fn complete(&self, panicked: bool) {
+        let mut s = self.state.lock().unwrap();
+        s.remaining -= 1;
+        s.panicked |= panicked;
+        if s.remaining == 0 {
+            self.done.notify_all();
+        }
+    }
+
+    /// Wait for the whole job; report whether any task panicked.
+    fn wait(&self) -> bool {
+        let mut s = self.state.lock().unwrap();
+        while s.remaining > 0 {
+            s = self.done.wait(s).unwrap();
+        }
+        s.panicked
+    }
+}
+
+/// A persistent pool of work-stealing workers.
+///
+/// Workers are *additional* threads: a pool with budget T runs T workers and
+/// the thread calling [`WorkerPool::run`] blocks (it does not execute
+/// tasks), so T is the engine's compute parallelism.
+pub struct WorkerPool {
+    shared: Arc<Shared>,
+    workers: Vec<std::thread::JoinHandle<()>>,
+}
+
+impl WorkerPool {
+    /// Spawn a pool with `threads` workers (min 1).
+    pub fn new(threads: usize) -> WorkerPool {
+        let threads = threads.max(1);
+        let shared = Arc::new(Shared {
+            queues: (0..threads).map(|_| Mutex::new(VecDeque::new())).collect(),
+            pending: Mutex::new(0),
+            wakeup: Condvar::new(),
+            shutdown: AtomicBool::new(false),
+            cursor: AtomicUsize::new(0),
+        });
+        let workers = (0..threads)
+            .map(|w| {
+                let shared = shared.clone();
+                std::thread::Builder::new()
+                    .name(format!("exec-worker-{w}"))
+                    .spawn(move || worker_loop(shared, w))
+                    .expect("spawn exec worker")
+            })
+            .collect();
+        WorkerPool { shared, workers }
+    }
+
+    /// Number of workers.
+    pub fn threads(&self) -> usize {
+        self.workers.len()
+    }
+
+    /// Run a job: execute every task on the pool, blocking until all have
+    /// finished. Panics (after the job has fully drained) if any task
+    /// panicked. Concurrent `run` calls from different threads are safe;
+    /// their tasks interleave in the deques.
+    pub fn run(&self, tasks: Vec<Task>) {
+        let n = tasks.len();
+        if n == 0 {
+            return;
+        }
+        let latch = Arc::new(Latch::new(n));
+        let start = self.shared.cursor.fetch_add(n, Ordering::Relaxed);
+        for (i, task) in tasks.into_iter().enumerate() {
+            let latch = latch.clone();
+            let wrapped: Task = Box::new(move || {
+                let result = panic::catch_unwind(AssertUnwindSafe(task));
+                latch.complete(result.is_err());
+            });
+            let q = (start + i) % self.shared.queues.len();
+            self.shared.queues[q].lock().unwrap().push_back(wrapped);
+        }
+        // Publish the whole job with one increment, after every push, so a
+        // reservation always finds a task and the submit path takes the
+        // contended pending lock once per job instead of once per task.
+        {
+            let mut pending = self.shared.pending.lock().unwrap();
+            *pending += n;
+            self.shared.wakeup.notify_all();
+        }
+        if latch.wait() {
+            panic!("exec worker task panicked");
+        }
+    }
+}
+
+impl Drop for WorkerPool {
+    fn drop(&mut self) {
+        self.shared.shutdown.store(true, Ordering::Release);
+        // Wake everyone so parked workers observe the flag.
+        let _guard = self.shared.pending.lock().unwrap();
+        self.shared.wakeup.notify_all();
+        drop(_guard);
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicU64;
+
+    #[test]
+    fn runs_every_task_exactly_once() {
+        let pool = WorkerPool::new(4);
+        let hits = Arc::new(AtomicU64::new(0));
+        let tasks: Vec<Task> = (0..500)
+            .map(|i| {
+                let hits = hits.clone();
+                Box::new(move || {
+                    hits.fetch_add(i + 1, Ordering::Relaxed);
+                }) as Task
+            })
+            .collect();
+        pool.run(tasks);
+        // Sum 1..=500 — each task ran exactly once.
+        assert_eq!(hits.load(Ordering::Relaxed), 500 * 501 / 2);
+    }
+
+    #[test]
+    fn stealing_drains_imbalanced_load() {
+        // One long task plus many short ones: with stealing, total wall time
+        // is bounded by the long task, and everything completes.
+        let pool = WorkerPool::new(4);
+        let done = Arc::new(AtomicU64::new(0));
+        let mut tasks: Vec<Task> = Vec::new();
+        for i in 0..64 {
+            let done = done.clone();
+            tasks.push(Box::new(move || {
+                if i == 0 {
+                    std::thread::sleep(std::time::Duration::from_millis(20));
+                }
+                done.fetch_add(1, Ordering::Relaxed);
+            }));
+        }
+        pool.run(tasks);
+        assert_eq!(done.load(Ordering::Relaxed), 64);
+    }
+
+    #[test]
+    fn sequential_jobs_reuse_workers() {
+        let pool = WorkerPool::new(2);
+        let hits = Arc::new(AtomicU64::new(0));
+        for _ in 0..20 {
+            let tasks: Vec<Task> = (0..8)
+                .map(|_| {
+                    let hits = hits.clone();
+                    Box::new(move || {
+                        hits.fetch_add(1, Ordering::Relaxed);
+                    }) as Task
+                })
+                .collect();
+            pool.run(tasks);
+        }
+        assert_eq!(hits.load(Ordering::Relaxed), 160);
+    }
+
+    #[test]
+    fn concurrent_submitters() {
+        let pool = Arc::new(WorkerPool::new(4));
+        let hits = Arc::new(AtomicU64::new(0));
+        let mut handles = Vec::new();
+        for _ in 0..4 {
+            let pool = pool.clone();
+            let hits = hits.clone();
+            handles.push(std::thread::spawn(move || {
+                for _ in 0..10 {
+                    let tasks: Vec<Task> = (0..16)
+                        .map(|_| {
+                            let hits = hits.clone();
+                            Box::new(move || {
+                                hits.fetch_add(1, Ordering::Relaxed);
+                            }) as Task
+                        })
+                        .collect();
+                    pool.run(tasks);
+                }
+            }));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+        assert_eq!(hits.load(Ordering::Relaxed), 4 * 10 * 16);
+    }
+
+    #[test]
+    fn task_panic_propagates_after_drain() {
+        let pool = WorkerPool::new(2);
+        let done = Arc::new(AtomicU64::new(0));
+        let mut tasks: Vec<Task> = Vec::new();
+        for i in 0..16 {
+            let done = done.clone();
+            tasks.push(Box::new(move || {
+                if i == 3 {
+                    panic!("boom");
+                }
+                done.fetch_add(1, Ordering::Relaxed);
+            }));
+        }
+        let result = panic::catch_unwind(AssertUnwindSafe(|| pool.run(tasks)));
+        assert!(result.is_err());
+        // Every non-panicking task still ran (no abandoned work).
+        assert_eq!(done.load(Ordering::Relaxed), 15);
+        // The pool survives for the next job.
+        let hits = Arc::new(AtomicU64::new(0));
+        let h2 = hits.clone();
+        pool.run(vec![Box::new(move || {
+            h2.fetch_add(1, Ordering::Relaxed);
+        })]);
+        assert_eq!(hits.load(Ordering::Relaxed), 1);
+    }
+
+    #[test]
+    fn single_thread_pool_works() {
+        let pool = WorkerPool::new(1);
+        let hits = Arc::new(AtomicU64::new(0));
+        let h = hits.clone();
+        pool.run(vec![Box::new(move || {
+            h.fetch_add(7, Ordering::Relaxed);
+        })]);
+        assert_eq!(hits.load(Ordering::Relaxed), 7);
+    }
+}

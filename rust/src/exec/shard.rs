@@ -1,0 +1,284 @@
+//! Shard planning: how a `predict_batch` call is split across workers.
+//!
+//! Two axes of parallelism exist in ensemble inference:
+//!
+//! * **Row sharding** — split the batch into chunks of instances; each
+//!   worker runs the full serial engine on its chunk, writing a disjoint
+//!   slice of `out`. Chunk boundaries are multiples of the engine's SIMD
+//!   lane width, so every chunk's internal blocking (VQS v=4/8, RS v=16)
+//!   is exactly the blocking the serial engine would have used on those
+//!   rows: results are **bit-identical** to the serial engine.
+//! * **Tree sharding** — partition the forest into sub-forests; workers
+//!   compute partial score vectors and an ordered reduction sums them.
+//!   The reduction is deterministic (shard-index order, fixed bounds), but
+//!   re-associating the f32 leaf-sum fold means results can differ from the
+//!   serial engine in the last ulp. See the determinism contract in
+//!   `exec::parallel`.
+//!
+//! Hybrid plans (row × tree) exist for the small-batch × large-forest
+//! regime. Chunk sizes are weighted by core class ([`CoreTopology`]) so a
+//! big.LITTLE part's fast cores receive proportionally more work; the
+//! work-stealing pool then absorbs any residual imbalance.
+
+use super::topology::CoreTopology;
+
+/// Exactness policy for the planner.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ShardPolicy {
+    /// Only bit-exactness-preserving plans (row sharding / serial). The
+    /// default everywhere an engine's output is compared against the serial
+    /// reference — serving, selection, tests.
+    Exact,
+    /// Additionally allow tree sharding and hybrid plans. Deterministic per
+    /// engine instance, but f32 scores may differ from serial in the last
+    /// ulp (integer i16 partials re-associate exactly, their f32 descale
+    /// does not).
+    Throughput,
+}
+
+/// A concrete partition of one `predict_batch` call.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum ShardPlan {
+    /// Run the serial engine on the calling thread (not enough work to
+    /// shard).
+    Serial,
+    /// Disjoint row ranges `[begin, end)`, lane-aligned except the last.
+    Rows(Vec<(usize, usize)>),
+    /// Tree-shard indices only (row chunks degenerate to the full batch).
+    Trees,
+    /// Row chunks × tree shards.
+    Hybrid(Vec<(usize, usize)>),
+}
+
+/// Split `n` rows into lane-aligned chunks sized proportionally to
+/// `weights` (one entry per chunk slot). Chunks are multiples of `lanes`
+/// except the last, which absorbs the remainder; empty chunks are dropped.
+pub fn weighted_row_chunks(n: usize, lanes: usize, weights: &[f64]) -> Vec<(usize, usize)> {
+    let lanes = lanes.max(1);
+    if n == 0 || weights.is_empty() {
+        return Vec::new();
+    }
+    let blocks = n.div_ceil(lanes);
+    let total_w: f64 = weights.iter().sum();
+    if total_w <= 0.0 {
+        return vec![(0, n)];
+    }
+    // Largest-remainder apportionment of lane-blocks to chunk slots.
+    let mut alloc: Vec<usize> = Vec::with_capacity(weights.len());
+    let mut fracs: Vec<(usize, f64)> = Vec::with_capacity(weights.len());
+    let mut assigned = 0usize;
+    for (i, &w) in weights.iter().enumerate() {
+        let exact = blocks as f64 * w / total_w;
+        let floor = exact.floor() as usize;
+        alloc.push(floor);
+        assigned += floor;
+        fracs.push((i, exact - floor as f64));
+    }
+    fracs.sort_by(|a, b| b.1.partial_cmp(&a.1).unwrap().then(a.0.cmp(&b.0)));
+    for &(i, _) in fracs.iter().take(blocks.saturating_sub(assigned)) {
+        alloc[i] += 1;
+    }
+    let mut chunks = Vec::new();
+    let mut begin = 0usize;
+    for blocks_here in alloc {
+        if blocks_here == 0 || begin >= n {
+            continue;
+        }
+        let end = (begin + blocks_here * lanes).min(n);
+        chunks.push((begin, end));
+        begin = end;
+    }
+    // Rounding can leave a tail un-assigned; give it to the last chunk.
+    if begin < n {
+        if let Some(last) = chunks.last_mut() {
+            last.1 = n;
+        } else {
+            chunks.push((0, n));
+        }
+    }
+    chunks
+}
+
+/// Partition `n_trees` into contiguous shards sized proportionally to
+/// `weights`, at least one tree per kept shard.
+pub fn tree_shard_bounds(n_trees: usize, weights: &[f64]) -> Vec<(usize, usize)> {
+    if n_trees == 0 || weights.is_empty() {
+        return Vec::new();
+    }
+    let total_w: f64 = weights.iter().sum();
+    if total_w <= 0.0 {
+        return vec![(0, n_trees)];
+    }
+    let mut bounds = Vec::new();
+    let mut begin = 0usize;
+    let mut acc = 0.0;
+    for &w in weights {
+        acc += w;
+        let end = ((n_trees as f64 * acc / total_w).round() as usize).clamp(begin, n_trees);
+        if end > begin {
+            bounds.push((begin, end));
+            begin = end;
+        }
+    }
+    if begin < n_trees {
+        if let Some(last) = bounds.last_mut() {
+            last.1 = n_trees;
+        } else {
+            bounds.push((0, n_trees));
+        }
+    }
+    bounds
+}
+
+/// Choose a plan for a batch of `n_rows` against a forest with
+/// `n_tree_shards` prepared sub-engines (0 when tree sharding is disabled).
+///
+/// `weights` has one entry per chunk slot (typically 2× the thread budget
+/// for stealing slack, big cores first); `threads` is the actual worker
+/// budget, which decides when row parallelism alone saturates the pool.
+pub fn plan(
+    n_rows: usize,
+    lanes: usize,
+    n_tree_shards: usize,
+    policy: ShardPolicy,
+    weights: &[f64],
+    threads: usize,
+) -> ShardPlan {
+    let row_chunks = weighted_row_chunks(n_rows, lanes, weights);
+    match policy {
+        ShardPolicy::Exact => {
+            if row_chunks.len() <= 1 {
+                ShardPlan::Serial
+            } else {
+                ShardPlan::Rows(row_chunks)
+            }
+        }
+        ShardPolicy::Throughput => {
+            let threads = threads.max(1);
+            if row_chunks.len() >= threads || n_tree_shards < 2 {
+                // Enough row parallelism to saturate the workers (or no
+                // tree shards available).
+                if row_chunks.len() <= 1 {
+                    ShardPlan::Serial
+                } else {
+                    ShardPlan::Rows(row_chunks)
+                }
+            } else if row_chunks.len() >= 2 {
+                ShardPlan::Hybrid(row_chunks)
+            } else {
+                ShardPlan::Trees
+            }
+        }
+    }
+}
+
+/// Convenience: per-chunk weights for a thread budget over a topology, with
+/// 2× oversubscription so the stealing pool can rebalance.
+pub fn chunk_weights(topo: &CoreTopology, threads: usize) -> Vec<f64> {
+    let per_worker = topo.worker_weights(threads);
+    let mut w = Vec::with_capacity(per_worker.len() * 2);
+    for x in per_worker {
+        w.push(x);
+        w.push(x);
+    }
+    w
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cover(chunks: &[(usize, usize)], n: usize) {
+        let mut at = 0;
+        for &(a, b) in chunks {
+            assert_eq!(a, at, "gap before {a}");
+            assert!(b > a);
+            at = b;
+        }
+        assert_eq!(at, n, "chunks must cover 0..{n}");
+    }
+
+    #[test]
+    fn row_chunks_cover_and_align() {
+        for n in [1usize, 7, 16, 33, 100, 1000] {
+            for lanes in [1usize, 4, 8, 16] {
+                let chunks = weighted_row_chunks(n, lanes, &[1.0; 4]);
+                cover(&chunks, n);
+                for (i, &(a, b)) in chunks.iter().enumerate() {
+                    assert_eq!(a % lanes, 0, "chunk {i} start unaligned");
+                    if i + 1 < chunks.len() {
+                        assert_eq!(b % lanes, 0, "non-final chunk end unaligned");
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn weighted_chunks_favor_heavy_slots() {
+        let chunks = weighted_row_chunks(1024, 1, &[3.0, 1.0]);
+        cover(&chunks, 1024);
+        assert_eq!(chunks.len(), 2);
+        let big = chunks[0].1 - chunks[0].0;
+        let small = chunks[1].1 - chunks[1].0;
+        assert!(big >= 3 * small - 1, "big {big} small {small}");
+    }
+
+    #[test]
+    fn tiny_batch_degenerates() {
+        // Fewer rows than one lane block per slot: a single chunk.
+        let chunks = weighted_row_chunks(5, 16, &[1.0; 8]);
+        cover(&chunks, 5);
+        assert_eq!(chunks.len(), 1);
+    }
+
+    #[test]
+    fn tree_bounds_cover() {
+        for n in [1usize, 2, 7, 64, 257] {
+            let b = tree_shard_bounds(n, &[1.0; 4]);
+            cover(&b, n);
+            assert!(b.len() <= 4.min(n));
+        }
+    }
+
+    #[test]
+    fn plan_exact_never_tree_shards() {
+        let w = [1.0; 8]; // 2× oversubscribed slots for a 4-thread budget
+        assert_eq!(plan(0, 4, 8, ShardPolicy::Exact, &w, 4), ShardPlan::Serial);
+        assert_eq!(plan(3, 4, 8, ShardPolicy::Exact, &w, 4), ShardPlan::Serial);
+        match plan(1024, 4, 8, ShardPolicy::Exact, &w, 4) {
+            ShardPlan::Rows(chunks) => cover(&chunks, 1024),
+            other => panic!("want Rows, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn plan_throughput_tree_shards_small_batches() {
+        let w = [1.0; 8]; // 2× oversubscribed slots for a 4-thread budget
+        // Tiny batch, large forest: tree sharding.
+        assert_eq!(plan(3, 4, 8, ShardPolicy::Throughput, &w, 4), ShardPlan::Trees);
+        // Moderate batch — some row chunks, but fewer than the worker
+        // budget: hybrid.
+        match plan(8, 4, 8, ShardPolicy::Throughput, &w, 4) {
+            ShardPlan::Hybrid(chunks) => cover(&chunks, 8),
+            other => panic!("want Hybrid, got {other:?}"),
+        }
+        // One row chunk per worker already saturates the pool: plain rows,
+        // no reduction overhead.
+        match plan(16, 4, 8, ShardPolicy::Throughput, &w, 4) {
+            ShardPlan::Rows(chunks) => cover(&chunks, 16),
+            other => panic!("want Rows, got {other:?}"),
+        }
+        // Large batch: plain rows.
+        match plan(4096, 4, 8, ShardPolicy::Throughput, &w, 4) {
+            ShardPlan::Rows(chunks) => cover(&chunks, 4096),
+            other => panic!("want Rows, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn chunk_weights_oversubscribe() {
+        let topo = CoreTopology::homogeneous(4);
+        assert_eq!(chunk_weights(&topo, 4).len(), 8);
+    }
+}

@@ -1,0 +1,146 @@
+//! Core topology: how many workers to run and how much work each deserves.
+//!
+//! Every ARM target in the paper's Table 1 is a 4-core part, and the
+//! Odroid-XU4's Exynos 5422 is heterogeneous (4×A15 big + 4×A7 LITTLE).
+//! Equal-size shards on such a part leave the big cores idle while the
+//! LITTLE cores finish — so the shard planner weights shard sizes by core
+//! class. A [`CoreTopology`] is the minimal description the planner needs:
+//! an ordered list of core classes (fastest first), each with a count and a
+//! relative throughput weight.
+
+use crate::device::DeviceProfile;
+
+/// One class of cores (e.g. the big cluster of a big.LITTLE part).
+#[derive(Debug, Clone)]
+pub struct CoreClass {
+    pub name: String,
+    pub count: usize,
+    /// Relative single-core throughput (any positive unit; only ratios
+    /// between classes matter).
+    pub weight: f64,
+}
+
+/// An ordered set of core classes, fastest first.
+#[derive(Debug, Clone)]
+pub struct CoreTopology {
+    pub classes: Vec<CoreClass>,
+}
+
+impl CoreTopology {
+    /// `n` identical cores (the common case on servers and the Pi's A53).
+    pub fn homogeneous(n: usize) -> CoreTopology {
+        CoreTopology {
+            classes: vec![CoreClass { name: "core".into(), count: n.max(1), weight: 1.0 }],
+        }
+    }
+
+    /// The host machine, via `std::thread::available_parallelism`.
+    pub fn detect() -> CoreTopology {
+        let n = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+        Self::homogeneous(n)
+    }
+
+    /// A homogeneous topology for one device profile (e.g. 4×A53).
+    pub fn from_profile(p: &DeviceProfile, count: usize) -> CoreTopology {
+        CoreTopology {
+            classes: vec![CoreClass {
+                name: p.name.to_string(),
+                count: count.max(1),
+                weight: p.relative_speed(),
+            }],
+        }
+    }
+
+    /// A big.LITTLE topology: big cluster first, weighted by each profile's
+    /// relative speed (per §6's architectural discussion, the A15 sustains
+    /// roughly 3× the per-core throughput of the A7).
+    pub fn big_little(
+        big: &DeviceProfile,
+        n_big: usize,
+        little: &DeviceProfile,
+        n_little: usize,
+    ) -> CoreTopology {
+        CoreTopology {
+            classes: vec![
+                CoreClass {
+                    name: big.name.to_string(),
+                    count: n_big.max(1),
+                    weight: big.relative_speed(),
+                },
+                CoreClass {
+                    name: little.name.to_string(),
+                    count: n_little.max(1),
+                    weight: little.relative_speed(),
+                },
+            ],
+        }
+    }
+
+    /// The paper's Odroid-XU4 (4×A15 + 4×A7).
+    pub fn odroid_xu4() -> CoreTopology {
+        Self::big_little(
+            &DeviceProfile::exynos_5422_big(),
+            4,
+            &DeviceProfile::exynos_5422_little(),
+            4,
+        )
+    }
+
+    /// Total core count.
+    pub fn cores(&self) -> usize {
+        self.classes.iter().map(|c| c.count).sum()
+    }
+
+    /// Per-worker weights for a thread budget: workers are assigned to the
+    /// fastest cores first; a budget beyond the core count oversubscribes
+    /// round-robin (each extra worker reuses a class in order).
+    pub fn worker_weights(&self, budget: usize) -> Vec<f64> {
+        let budget = budget.max(1);
+        let mut flat: Vec<f64> = Vec::new();
+        for class in &self.classes {
+            flat.extend(std::iter::repeat(class.weight).take(class.count));
+        }
+        if flat.is_empty() {
+            flat.push(1.0);
+        }
+        (0..budget).map(|i| flat[i % flat.len()]).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn homogeneous_weights_equal() {
+        let t = CoreTopology::homogeneous(4);
+        assert_eq!(t.cores(), 4);
+        let w = t.worker_weights(4);
+        assert_eq!(w, vec![1.0; 4]);
+    }
+
+    #[test]
+    fn big_little_big_first_and_heavier() {
+        let t = CoreTopology::odroid_xu4();
+        assert_eq!(t.cores(), 8);
+        let w = t.worker_weights(8);
+        // First four workers land on the big cluster and get more weight.
+        assert!(w[0] > w[4], "big {} vs little {}", w[0], w[4]);
+        assert_eq!(w[0], w[3]);
+        assert_eq!(w[4], w[7]);
+        // The paper-derived ratio should be substantial but sane.
+        let ratio = w[0] / w[4];
+        assert!(ratio > 1.5 && ratio < 10.0, "ratio {ratio}");
+    }
+
+    #[test]
+    fn oversubscription_cycles() {
+        let t = CoreTopology::homogeneous(2);
+        assert_eq!(t.worker_weights(5).len(), 5);
+    }
+
+    #[test]
+    fn detect_nonzero() {
+        assert!(CoreTopology::detect().cores() >= 1);
+    }
+}

@@ -9,8 +9,14 @@
 //!   RapidScorer (RS) — in float32 and int16 fixed-point variants, the SIMD
 //!   ones executing the paper's ARM NEON algorithms on a bit-exact NEON
 //!   simulator ([`neon`]).
+//! * **Execution runtime** ([`exec`]): a sharded, work-stealing parallel
+//!   execution layer — a std-only worker pool, a big.LITTLE-aware shard
+//!   planner (row / tree / hybrid), and a [`exec::ParallelEngine`] wrapper
+//!   that multiplies any engine across cores while staying bit-exact with
+//!   the serial implementation under its default policy.
 //! * **Coordinator** ([`coordinator`]): a serving layer with dynamic
-//!   batching, a model registry, and an engine auto-selector.
+//!   batching, a model registry, an engine auto-selector (serial and
+//!   threaded candidates), and per-deployment thread budgets.
 //! * **Tensor path** ([`runtime`], `engine::tensor`): forests AOT-compiled
 //!   through JAX/Pallas to HLO and executed via PJRT.
 //! * **Substrates**: forest trainers ([`forest::builder`]), synthetic
@@ -28,6 +34,7 @@ pub mod data;
 pub mod neon;
 pub mod device;
 pub mod engine;
+pub mod exec;
 pub mod quant;
 pub mod runtime;
 pub mod stats;

@@ -19,10 +19,10 @@ use anyhow::{bail, Context, Result};
 use arbors::bench::experiments;
 use arbors::bench::harness::Scale;
 use arbors::cli::Args;
-use arbors::coordinator::{select_engine, BatchConfig, Server};
+use arbors::coordinator::{select_engine_with, thread_budgets, BatchConfig, Server};
 use arbors::data::{csv, DatasetId};
 use arbors::device::DeviceProfile;
-use arbors::engine::{build, EngineKind, Precision};
+use arbors::engine::{build_parallel, EngineKind, Precision};
 use arbors::forest::builder::{
     train_gbt, train_random_forest, GbtParams, RfParams, TreeParams,
 };
@@ -59,12 +59,13 @@ USAGE: arbors <command> [flags]
   train    --dataset <magic|adult|eeg|mnist|fashion|msn> | --data <csv>
            --trees N --leaves N --out model.json [--gbt] [--n N] [--seed S]
   predict  --model model.json --data in.csv --engine <NA|IE|QS|VQS|RS> [--quant]
-           [--out scores.csv]
+           [--threads N] [--out scores.csv]
   accuracy --model model.json --dataset <name> | --data <csv>
-  select   --model model.json [--device a53|exynos] [--n N]
-  bench    --exp <table2|table3|table4|table5|fig1|fig2|ablation|tensor>
-           (scale via ARBORS_SCALE=quick|default|full)
-  serve    --dataset <name> [--engine E] [--quant] [--requests N]
+  select   --model model.json [--device a53|exynos] [--n N] [--threads N]
+           (--threads adds row-sharded candidates like RS×4t to the ranking)
+  bench    --exp <table2|table3|table4|table5|fig1|fig2|ablation|tensor|scaling>
+           [--threads N]   (scale via ARBORS_SCALE=quick|default|full)
+  serve    --dataset <name> [--engine E] [--quant] [--requests N] [--threads N]
            [--listen 127.0.0.1:7878]   (JSON-over-TCP protocol; see coordinator::net)
   datasets
 ";
@@ -148,10 +149,11 @@ fn cmd_predict(args: &Args) -> Result<()> {
     let kind = EngineKind::from_short(&args.get_or("engine", "RS"))
         .context("bad --engine")?;
     let precision = if args.switch("quant") { Precision::I16 } else { Precision::F32 };
+    let threads = args.usize_or("threads", 1)?;
     let out_path = args.get("out").map(PathBuf::from);
     args.finish()?;
 
-    let engine = build(kind, precision, &model, None)?;
+    let engine = build_parallel(kind, precision, &model, None, threads)?;
     let scores = engine.predict(&ds.x);
     let preds = Forest::argmax(&scores, model.n_classes);
     if let Some(p) = out_path {
@@ -204,11 +206,18 @@ fn cmd_select(args: &Args) -> Result<()> {
         Some(other) => bail!("unknown device '{other}' (a53|exynos|a7)"),
     };
     let n = args.usize_or("n", 256)?;
+    let threads = args.usize_or("threads", 1)?;
     args.finish()?;
     let mut rng = arbors::util::Pcg32::seeded(0xCA11);
     let calibration: Vec<f32> =
         (0..n * model.n_features).map(|_| rng.f32()).collect();
-    let sel = select_engine(&model, &calibration, device.as_ref(), 3)?;
+    let sel = select_engine_with(
+        &model,
+        &calibration,
+        device.as_ref(),
+        3,
+        &thread_budgets(threads),
+    )?;
     print!("{}", sel.report());
     println!("recommended: {}", sel.best().name);
     Ok(())
@@ -216,6 +225,10 @@ fn cmd_select(args: &Args) -> Result<()> {
 
 fn cmd_bench(args: &Args) -> Result<()> {
     let exp = args.get_or("exp", "table5");
+    // Only the scaling experiment is threaded; leaving --threads unconsumed
+    // elsewhere makes `finish()` reject it loudly instead of silently
+    // ignoring it.
+    let threads = if exp == "scaling" { args.usize_or("threads", 4)? } else { 1 };
     args.finish()?;
     let s = scale();
     let text = match exp.as_str() {
@@ -228,6 +241,7 @@ fn cmd_bench(args: &Args) -> Result<()> {
         "fig2" => experiments::fig2(&s),
         "ablation" => experiments::ablation_rs(&s),
         "tensor" => experiments::tensor_vs_native(s.repeats)?,
+        "scaling" => experiments::scaling(&s, threads),
         other => bail!("unknown experiment '{other}'"),
     };
     experiments::archive(&exp, &text);
@@ -243,8 +257,10 @@ fn cmd_serve(args: &Args) -> Result<()> {
         .context("bad --engine")?;
     let precision = if args.switch("quant") { Precision::I16 } else { Precision::F32 };
     let n_requests = args.usize_or("requests", 10_000)?;
+    let threads = args.usize_or("threads", 1)?;
     let listen = args.get("listen").map(str::to_string);
     args.finish()?;
+    let config = BatchConfig { exec_threads: threads, ..BatchConfig::default() };
 
     if let Some(addr) = listen {
         // Network mode: train, deploy, and serve the JSON-over-TCP protocol
@@ -253,7 +269,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
         println!("training {trees} x {leaves} RF on {} ...", train.name);
         let forest = arbors::bench::harness::cached_rf(&train, trees, leaves);
         let server = std::sync::Arc::new(Server::new());
-        server.deploy("model", &forest, kind, precision, BatchConfig::default())?;
+        server.deploy("model", &forest, kind, precision, config)?;
         let net = arbors::coordinator::NetServer::start(server.clone(), &addr)?;
         println!(
             "serving model 'model' on {} — protocol: {{\"model\": \"model\", \"x\": [...]}}",
@@ -269,7 +285,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
     println!("training {} x {} RF on {} ...", trees, leaves, train.name);
     let forest = arbors::bench::harness::cached_rf(&train, trees, leaves);
     let server = Server::new();
-    server.deploy("model", &forest, kind, precision, BatchConfig::default())?;
+    server.deploy("model", &forest, kind, precision, config)?;
     println!("serving {n_requests} requests through the dynamic batcher ...");
 
     let dep = server.model("model").unwrap();

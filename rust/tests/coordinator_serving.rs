@@ -45,6 +45,7 @@ fn no_request_lost_or_cross_wired() {
                 max_delay: Duration::from_micros(100),
                 queue_cap: 10_000,
                 workers: 3,
+                exec_threads: 1,
             },
         )
         .unwrap();
@@ -93,6 +94,7 @@ fn batches_form_under_burst() {
                 max_delay: Duration::from_millis(2),
                 queue_cap: 10_000,
                 workers: 1,
+                exec_threads: 1,
             },
         )
         .unwrap();
@@ -136,6 +138,53 @@ fn auto_deploy_serves_correct_scores() {
     let wa = Forest::argmax(&want, f.n_classes);
     let ga = Forest::argmax(&got, f.n_classes);
     assert_eq!(wa, ga);
+}
+
+/// A deployment with an exec-thread budget serves bit-identical scores to
+/// the serial engine (the ParallelEngine Exact contract, end to end through
+/// the batcher), and its engine name advertises the budget.
+#[test]
+fn threaded_deployment_bit_exact() {
+    let (f, ds) = forest(12);
+    let server = Server::new();
+    server
+        .deploy(
+            "m",
+            &f,
+            EngineKind::Rs,
+            Precision::F32,
+            BatchConfig { exec_threads: 4, ..BatchConfig::default() },
+        )
+        .unwrap();
+    let dep = server.model("m").unwrap();
+    assert_eq!(dep.engine_name, "RS×4t");
+    let serial = arbors::engine::build(EngineKind::Rs, Precision::F32, &f, None).unwrap();
+    let want = serial.predict(&ds.x[..ds.d * 64]);
+    for i in 0..64 {
+        let got = server.predict("m", ds.row(i).to_vec()).unwrap();
+        assert_eq!(&got[..], &want[i * ds.n_classes..(i + 1) * ds.n_classes], "row {i}");
+    }
+}
+
+/// Auto-deploy with a thread budget enumerates threaded candidates next to
+/// the serial ten and deploys something that serves correctly.
+#[test]
+fn auto_deploy_with_thread_budget() {
+    let (f, ds) = forest(12);
+    let server = Server::new();
+    let sel = server
+        .deploy_auto(
+            "auto",
+            &f,
+            &ds.x[..ds.d * 64],
+            BatchConfig { exec_threads: 2, ..BatchConfig::default() },
+        )
+        .unwrap();
+    // 10 variants × budgets {1, 2}.
+    assert_eq!(sel.candidates.len(), 20);
+    assert!(sel.candidates.iter().any(|c| c.threads == 2));
+    let got = server.predict("auto", ds.row(3).to_vec()).unwrap();
+    assert_eq!(got.len(), f.n_classes);
 }
 
 /// Tensor engine behind the batcher (requires artifacts).

@@ -1,0 +1,118 @@
+//! The exec runtime's exactness contract, enforced as a property:
+//! `ParallelEngine` under its default policy (`ShardPolicy::Exact`) is
+//! **bit-identical** to the serial engine for all ten (kind, precision)
+//! variants, across random forests, batch sizes (including non-lane-multiple
+//! remainders), and 1–8 threads. Lane-aligned row sharding means every
+//! worker replays exactly the SIMD blocking the serial engine would have
+//! used on its rows — so equality here is `==` on the f32 bits, not a
+//! tolerance.
+
+use arbors::engine::{all_variants, build, build_parallel, variant_name};
+use arbors::exec::{ParallelEngine, ShardPolicy};
+use arbors::forest::builder::{train_random_forest, RfParams, TreeParams};
+use arbors::quant::{max_safe_scale, QuantConfig};
+use arbors::testing::Runner;
+use arbors::util::Pcg32;
+
+#[test]
+fn parallel_engine_bit_identical_to_serial() {
+    Runner::new(10).with_seed(0xEAC7).run(|rng: &mut Pcg32, size| {
+        // Random problem shape.
+        let d = rng.range(2, 10);
+        let c = rng.range(1, 4).max(1);
+        let n_train = 100 + size;
+        let mut x = Vec::with_capacity(n_train * d);
+        let mut y = Vec::with_capacity(n_train);
+        for _ in 0..n_train {
+            for _ in 0..d {
+                x.push(rng.f32());
+            }
+            y.push(rng.below(c) as u32);
+        }
+        let f = train_random_forest(
+            &x,
+            &y,
+            d,
+            c,
+            RfParams {
+                n_trees: rng.range(1, 12),
+                tree: TreeParams {
+                    max_leaves: *rng.choose(&[4usize, 8, 16, 32, 64]),
+                    min_samples_leaf: 1,
+                    mtry: 0,
+                },
+                seed: rng.next_u64(),
+                ..Default::default()
+            },
+        );
+        // Overflow-safe shared scale so the i16 engines are well-defined.
+        let cap = max_safe_scale(&f, 1.0);
+        let cfg = QuantConfig { scale: rng.choose(&[256.0f32, 4096.0, 32768.0]).min(cap) };
+
+        // Deliberately awkward batch sizes: 1, primes, non-multiples of
+        // every lane width (4 / 8 / 16).
+        let n_eval = *rng.choose(&[1usize, 3, 17, 33, 50 + size % 23]);
+        let xe: Vec<f32> = (0..n_eval * d).map(|_| rng.f32()).collect();
+
+        for (kind, precision) in all_variants() {
+            let serial = build(kind, precision, &f, Some(cfg)).map_err(|e| e.to_string())?;
+            let want = serial.predict(&xe);
+            for threads in [1usize, 2, 3, 4, 8] {
+                let par = build_parallel(kind, precision, &f, Some(cfg), threads)
+                    .map_err(|e| e.to_string())?;
+                let got = par.predict(&xe);
+                if got != want {
+                    let first = got
+                        .iter()
+                        .zip(&want)
+                        .position(|(a, b)| a != b)
+                        .unwrap_or(0);
+                    return Err(format!(
+                        "{} × {threads}t differs from serial at n={n_eval} \
+                         (first mismatch at flat index {first}: {} vs {})",
+                        variant_name(kind, precision),
+                        got[first],
+                        want[first],
+                    ));
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+/// The same engine pipeline through the explicit `ParallelEngine` API with a
+/// big.LITTLE topology: weighted (uneven) chunks must not break exactness.
+#[test]
+fn parallel_engine_exact_under_big_little_weights() {
+    let mut rng = Pcg32::seeded(0xB16);
+    let d = 8;
+    let n = 400;
+    let x: Vec<f32> = (0..n * d).map(|_| rng.f32()).collect();
+    let y: Vec<u32> = (0..n).map(|_| rng.below(3) as u32).collect();
+    let f = train_random_forest(
+        &x,
+        &y,
+        d,
+        3,
+        RfParams {
+            n_trees: 10,
+            tree: TreeParams { max_leaves: 32, min_samples_leaf: 2, mtry: 0 },
+            ..Default::default()
+        },
+    );
+    for (kind, precision) in all_variants() {
+        let serial = build(kind, precision, &f, None).unwrap();
+        let par = ParallelEngine::from_forest(kind, precision, &f, None, 6, ShardPolicy::Exact)
+            .unwrap()
+            .with_topology(arbors::exec::CoreTopology::odroid_xu4());
+        // 127 rows: prime, so every lane width leaves a remainder.
+        let xe = &x[..d * 127];
+        assert_eq!(
+            par.predict(xe),
+            serial.predict(xe),
+            "{} not bit-exact under weighted sharding",
+            variant_name(kind, precision)
+        );
+    }
+}

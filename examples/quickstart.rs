@@ -8,10 +8,10 @@
 
 use arbors::bench::harness::{eval_batch, time_per_instance};
 use arbors::data::DatasetId;
-use arbors::engine::{all_variants, build, variant_name};
+use arbors::engine::{all_variants_with_i8, build, variant_name};
 use arbors::forest::builder::{train_random_forest, RfParams, TreeParams};
 use arbors::forest::Forest;
-use arbors::quant::{choose_scale, QForest};
+use arbors::quant::{choose_scale, choose_scale_i8, QForest};
 
 fn main() -> anyhow::Result<()> {
     // 1. Data: a Magic04-like synthetic classification problem.
@@ -51,19 +51,28 @@ fn main() -> anyhow::Result<()> {
     let cfg = choose_scale(&forest, 1.0);
     let qf = QForest::from_forest(&forest, cfg);
     let want_quant = qf.predict_batch(&x);
+    // The int8 tier chooses its own (8-bit) scale — see quant docs.
+    let qf8 = QForest::<i8>::from_forest(&forest, choose_scale_i8(&forest, 1.0));
+    let want_quant8 = qf8.predict_batch(&x);
 
     println!("\n{:<7} {:>12} {:>9}  agreement", "engine", "µs/inst", "speedup");
     // Measure the NA baseline first so every row can report its speedup.
     let na = build(arbors::engine::EngineKind::Naive, arbors::engine::Precision::F32, &forest, None)?;
     let na_time = time_per_instance(na.as_ref(), &x, 3);
-    for (kind, precision) in all_variants() {
-        let engine = build(kind, precision, &forest, Some(cfg))?;
+    for (kind, precision) in all_variants_with_i8() {
+        // The i16-typed config only carries the scale for the i16 tier;
+        // the i8 tier picks its own, so pass None there.
+        let quant = match precision {
+            arbors::engine::Precision::I16 => Some(cfg),
+            _ => None,
+        };
+        let engine = build(kind, precision, &forest, quant)?;
         let got = engine.predict(&x);
-        // Float engines must match the float reference; quantized engines
-        // the quantized reference.
+        // Each tier must match its own naive reference.
         let reference = match precision {
             arbors::engine::Precision::F32 => &want_float,
             arbors::engine::Precision::I16 => &want_quant,
+            arbors::engine::Precision::I8 => &want_quant8,
         };
         let max_diff = got
             .iter()

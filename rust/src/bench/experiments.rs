@@ -11,7 +11,9 @@ use crate::data::{ranking::msn_like, DatasetId};
 use crate::device::{model_working_set, DeviceProfile};
 use crate::engine::{all_variants, variant_name, Engine, EngineKind, Precision};
 use crate::forest::Forest;
-use crate::quant::{accuracy_with_parts, merge, QForest, QuantConfig, QuantParts};
+use crate::quant::{
+    accuracy_with_parts, choose_scale, choose_scale_i8, merge, QForest, QuantConfig, QuantParts,
+};
 use crate::stats::cd_analysis;
 
 use super::harness::{
@@ -38,10 +40,7 @@ fn measure(
     // Trace a subset (counting walks are slow) and scale per instance.
     let trace_n = n.clamp(1, 128);
     let trace = engine.count_ops(&x[..trace_n * engine.n_features()]);
-    let bytes = match precision {
-        Precision::F32 => 4,
-        Precision::I16 => 2,
-    };
+    let bytes = precision.scalar_bytes();
     let ws = model_working_set(
         forest.n_nodes(),
         forest.n_trees(),
@@ -555,7 +554,7 @@ pub fn memory_energy(scale: &Scale) -> String {
 /// archived both as text (`results/scaling.txt` via the caller) and as
 /// machine-readable JSON (`results/scaling.json`) with per-thread-count
 /// µs/instance and speedups vs 1 thread.
-pub fn scaling(scale: &Scale, max_threads: usize) -> String {
+pub fn scaling(scale: &Scale, max_threads: usize, precision: Option<Precision>) -> String {
     use crate::exec::ParallelEngine;
     use crate::util::Json;
 
@@ -563,12 +562,21 @@ pub fn scaling(scale: &Scale, max_threads: usize) -> String {
     let ds = DatasetId::Magic.generate(DatasetId::Magic.default_n(), 0xD5 ^ 64);
     let (train, _) = ds.split(0.2, 7);
     let shapes = [((scale.cls_trees / 4).max(1), 32usize), (scale.cls_trees, 64)];
-    let variants = [
-        (EngineKind::Rs, Precision::F32),
-        (EngineKind::Vqs, Precision::F32),
-        (EngineKind::Qs, Precision::F32),
-        (EngineKind::Rs, Precision::I16),
-    ];
+    // Default mix, or a whole tier when `--precision` narrows the sweep
+    // (the int8 tier has no RS engine).
+    let variants: Vec<(EngineKind, Precision)> = match precision {
+        None => vec![
+            (EngineKind::Rs, Precision::F32),
+            (EngineKind::Vqs, Precision::F32),
+            (EngineKind::Qs, Precision::F32),
+            (EngineKind::Rs, Precision::I16),
+        ],
+        Some(Precision::I8) => crate::engine::i8_variants(),
+        Some(p) => [EngineKind::Rs, EngineKind::Vqs, EngineKind::Qs, EngineKind::Naive]
+            .iter()
+            .map(|&k| (k, p))
+            .collect(),
+    };
 
     let mut out = String::new();
     out.push_str(&format!(
@@ -647,6 +655,115 @@ pub fn scaling(scale: &Scale, max_threads: usize) -> String {
     out
 }
 
+// ---------------------------------------------------------------------------
+// Extra E — int16 vs int8 precision tiers
+// ---------------------------------------------------------------------------
+
+/// Extra E: the precision-tier comparison the int8 tier exists for — host
+/// µs/instance and accuracy of the i16 vs i8 engine pairs (NA/QS/VQS) on
+/// synthetic classification datasets, plus each tier's node-merge statistic
+/// and the i8 accumulator mode. Text goes to `results/int8.txt` (via the
+/// caller's `archive`), machine-readable JSON to `results/int8_tiers.json`.
+pub fn int8_tiers(scale: &Scale) -> String {
+    use crate::util::Json;
+
+    let pairs =
+        [(EngineKind::Naive, "NA"), (EngineKind::Qs, "QS"), (EngineKind::Vqs, "VQS")];
+    let mut out = String::new();
+    out.push_str(&format!(
+        "int16 vs int8 precision tiers (scale={}, RF {} trees x 64 leaves)\n\
+         host µs/instance per engine pair; accuracy via the naive reference\n\n",
+        scale.name, scale.cls_trees
+    ));
+    let mut records = Vec::new();
+    for id in [DatasetId::Magic, DatasetId::Eeg, DatasetId::Adult] {
+        let ds = id.generate(id.default_n(), 0xD5 ^ 64);
+        let (train, test) = ds.split(0.2, 7);
+        let f = super::harness::cached_rf(&train, scale.cls_trees, 64);
+        let x = eval_batch(&ds, scale.eval_n);
+
+        let cfg16 = choose_scale(&f, 1.0);
+        let qf16 = QForest::from_forest(&f, cfg16);
+        let cfg8 = choose_scale_i8(&f, 1.0);
+        let qf8 = QForest::<i8>::from_forest(&f, cfg8);
+
+        let acc_f = f.accuracy(&test.x, &test.labels);
+        let acc16 = accuracy_of(&qf16.predict_batch(&test.x), &test.labels, f.n_classes);
+        let acc8 = accuracy_of(&qf8.predict_batch(&test.x), &test.labels, f.n_classes);
+        let merge16 = merge::unique_node_fraction_quant(&qf16);
+        let merge8 = merge::unique_node_fraction_quant(&qf8);
+
+        out.push_str(&format!(
+            "== {} ==\n\
+             accuracy: float {:.2}% | i16 {:.2}% (s={:.0}) | i8 {:.2}% (s={:.1}, {} accumulation)\n\
+             unique nodes after merging: i16 {:.1}%, i8 {:.1}%\n",
+            id.name(),
+            100.0 * acc_f,
+            100.0 * acc16,
+            cfg16.scale,
+            100.0 * acc8,
+            cfg8.scale,
+            qf8.accum_mode().as_str(),
+            100.0 * merge16,
+            100.0 * merge8,
+        ));
+        let mut tw = TableWriter::new(vec![8, 13, 13, 10]);
+        tw.row_str(&["engine", "i16 µs/inst", "i8 µs/inst", "speedup"]);
+        tw.sep();
+        let mut engines_json = Vec::new();
+        for (kind, name) in pairs {
+            let Some(e16) = build_engine_arc(kind, Precision::I16, &f) else { continue };
+            let Some(e8) = build_engine_arc(kind, Precision::I8, &f) else { continue };
+            let t16 = time_per_instance(e16.as_ref(), &x, scale.repeats);
+            let t8 = time_per_instance(e8.as_ref(), &x, scale.repeats);
+            tw.row(&[
+                name.to_string(),
+                format!("{t16:.2}"),
+                format!("{t8:.2}"),
+                format!("{:.2}x", t16 / t8),
+            ]);
+            engines_json.push(Json::from_pairs(vec![
+                ("engine", Json::Str(name.to_string())),
+                ("i16_us_per_instance", Json::Num(t16)),
+                ("i8_us_per_instance", Json::Num(t8)),
+                ("i8_speedup_vs_i16", Json::Num(t16 / t8)),
+            ]));
+        }
+        out.push_str(&tw.finish());
+        out.push('\n');
+        records.push(Json::from_pairs(vec![
+            ("dataset", Json::Str(id.name().to_string())),
+            ("trees", Json::Num(f.n_trees() as f64)),
+            ("accuracy_float", Json::Num(acc_f)),
+            ("accuracy_i16", Json::Num(acc16)),
+            ("accuracy_i8", Json::Num(acc8)),
+            ("accuracy_delta_i16_vs_float", Json::Num(acc16 - acc_f)),
+            ("accuracy_delta_i8_vs_i16", Json::Num(acc8 - acc16)),
+            ("scale_i16", Json::Num(cfg16.scale as f64)),
+            ("scale_i8", Json::Num(cfg8.scale as f64)),
+            ("accum_mode_i8", Json::Str(qf8.accum_mode().as_str().to_string())),
+            ("unique_node_fraction_i16", Json::Num(merge16)),
+            ("unique_node_fraction_i8", Json::Num(merge8)),
+            ("engines", Json::Arr(engines_json)),
+        ]));
+    }
+    let report = Json::from_pairs(vec![
+        ("experiment", Json::Str("int8_tiers".to_string())),
+        ("scale", Json::Str(scale.name.to_string())),
+        ("results", Json::Arr(records)),
+    ]);
+    archive_json("int8_tiers", &report);
+    out.push_str("archived JSON: results/int8_tiers.json\n");
+    out
+}
+
+/// Argmax accuracy of a score matrix against labels.
+fn accuracy_of(scores: &[f32], labels: &[u32], n_classes: usize) -> f64 {
+    let preds = Forest::argmax(scores, n_classes);
+    let correct = preds.iter().zip(labels).filter(|(p, l)| p == l).count();
+    correct as f64 / labels.len() as f64
+}
+
 /// Archive a result under `results/<name>.txt`.
 pub fn archive(name: &str, text: &str) {
     let path = super::harness::results_dir().join(format!("{name}.txt"));
@@ -714,8 +831,21 @@ mod tests {
     }
 
     #[test]
+    fn int8_tiers_runs_and_reports() {
+        let s = int8_tiers(&quick());
+        assert!(s.contains("i16") && s.contains("i8"), "{s}");
+        assert!(s.contains("VQS"), "{s}");
+        assert!(s.contains("int8_tiers.json"), "{s}");
+        let path = super::super::harness::results_dir().join("int8_tiers.json");
+        let text = std::fs::read_to_string(&path).unwrap();
+        let j = crate::util::Json::parse(&text).unwrap();
+        let results = j.get("results").and_then(|v| v.as_arr()).unwrap();
+        assert!(results.len() >= 2, "need at least two datasets");
+    }
+
+    #[test]
     fn scaling_runs_and_reports_json() {
-        let s = scaling(&quick(), 2);
+        let s = scaling(&quick(), 2, None);
         assert!(s.contains("2t"), "{s}");
         assert!(s.contains("qRS"), "{s}");
         assert!(s.contains("scaling.json"), "{s}");

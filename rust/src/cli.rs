@@ -34,7 +34,7 @@ impl Args {
             if let Some(stripped) = a.strip_prefix("--") {
                 if let Some((k, v)) = stripped.split_once('=') {
                     args.flags.insert(k.to_string(), v.to_string());
-                } else if it.peek().map_or(false, |n| !n.starts_with("--")) {
+                } else if it.peek().is_some_and(|n| !n.starts_with("--")) {
                     args.flags.insert(stripped.to_string(), it.next().unwrap());
                 } else {
                     args.switches.insert(stripped.to_string());

@@ -15,7 +15,9 @@ pub mod selector;
 pub use batcher::{BatchConfig, Batcher, ServeError};
 pub use metrics::Metrics;
 pub use net::{NetClient, NetServer};
-pub use selector::{select_engine, select_engine_with, thread_budgets, Candidate, Selection};
+pub use selector::{
+    select_engine, select_engine_tier, select_engine_with, thread_budgets, Candidate, Selection,
+};
 
 use std::collections::HashMap;
 use std::sync::{Arc, RwLock};
@@ -84,6 +86,13 @@ impl Server {
     /// `config.exec_threads > 1`, threaded candidates (e.g. `RS×4t`) are
     /// measured next to the serial ones and the winner's thread count is
     /// what gets deployed.
+    ///
+    /// Ranking is by latency, but deployment is gated on prediction
+    /// quality: the fastest candidate whose calibration argmax agreement
+    /// with the float reference is ≥ 99% wins, so a heavily-quantized tier
+    /// (int8 at a coarse scale) cannot silently degrade served accuracy.
+    /// If no candidate clears the gate (tiny forests, extreme
+    /// quantization), the overall fastest is used.
     pub fn deploy_auto(
         &self,
         name: &str,
@@ -93,7 +102,7 @@ impl Server {
     ) -> anyhow::Result<Selection> {
         let budgets = selector::thread_budgets(config.exec_threads);
         let sel = selector::select_engine_with(forest, calibration, None, 3, &budgets)?;
-        let best = sel.best();
+        let best = sel.recommended();
         let config = BatchConfig { exec_threads: best.threads, ..config };
         self.deploy(name, forest, best.kind, best.precision, config)?;
         Ok(sel)

@@ -28,6 +28,10 @@ pub struct Candidate {
     /// Cost-model estimate per instance (µs) for the target device, if one
     /// was given.
     pub device_us_per_instance: Option<f64>,
+    /// Fraction of calibration instances whose argmax matches the float
+    /// reference traversal — the accuracy signal quantized tiers trade
+    /// latency against (1.0 for exact engines).
+    pub agreement: f64,
 }
 
 /// Selection report: candidates sorted best-first by the active criterion.
@@ -38,8 +42,22 @@ pub struct Selection {
 }
 
 impl Selection {
+    /// Fastest candidate by the active criterion (latency only).
     pub fn best(&self) -> &Candidate {
         &self.candidates[0]
+    }
+
+    /// Fastest candidate that also clears the prediction-quality gate:
+    /// ≥ 99% calibration argmax agreement with the float reference. Falls
+    /// back to [`Selection::best`] when nothing clears it (tiny forests,
+    /// extreme quantization). This is what `Server::deploy_auto` deploys
+    /// and what the CLI recommends — latency alone must not pick a tier
+    /// that degrades served accuracy.
+    pub fn recommended(&self) -> &Candidate {
+        self.candidates
+            .iter()
+            .find(|c| c.agreement >= 0.99)
+            .unwrap_or_else(|| self.best())
     }
 
     pub fn report(&self) -> String {
@@ -48,17 +66,18 @@ impl Selection {
         out.push_str(&format!("engine selection (target: {target})\n"));
         // Width 9 fits threaded names like `qVQS×16t` next to serial ones.
         out.push_str(&format!(
-            "  {:<9} {:>14} {:>16}\n",
-            "engine", "host µs/inst", "device µs/inst"
+            "  {:<9} {:>14} {:>16} {:>8}\n",
+            "engine", "host µs/inst", "device µs/inst", "argmax%"
         ));
         for c in &self.candidates {
             out.push_str(&format!(
-                "  {:<9} {:>14.2} {:>16}\n",
+                "  {:<9} {:>14.2} {:>16} {:>8.1}\n",
                 c.name,
                 c.host_us_per_instance,
                 c.device_us_per_instance
                     .map(|v| format!("{v:.2}"))
                     .unwrap_or_else(|| "-".into()),
+                100.0 * c.agreement,
             ));
         }
         out
@@ -66,8 +85,8 @@ impl Selection {
 }
 
 /// Measure every (serial) engine variant on `calibration` and rank — the
-/// original 10-candidate selection. See [`select_engine_with`] for threaded
-/// candidates.
+/// paper's ten candidates plus the int8 tier. See [`select_engine_with`]
+/// for threaded candidates.
 pub fn select_engine(
     forest: &Forest,
     calibration: &[f32],
@@ -111,6 +130,19 @@ pub fn select_engine_with(
     repeats: usize,
     thread_budgets: &[usize],
 ) -> anyhow::Result<Selection> {
+    select_engine_tier(forest, calibration, device, repeats, thread_budgets, None)
+}
+
+/// [`select_engine_with`] restricted to one precision tier when `tier` is
+/// set — excluded variants are never built or timed.
+pub fn select_engine_tier(
+    forest: &Forest,
+    calibration: &[f32],
+    device: Option<&DeviceProfile>,
+    repeats: usize,
+    thread_budgets: &[usize],
+    tier: Option<Precision>,
+) -> anyhow::Result<Selection> {
     let n = calibration.len() / forest.n_features;
     anyhow::ensure!(n > 0, "calibration batch is empty");
     let mut budgets: Vec<usize> = thread_budgets.iter().map(|&t| t.max(1)).collect();
@@ -119,8 +151,16 @@ pub fn select_engine_with(
     if budgets.is_empty() {
         budgets.push(1);
     }
+    // Float-reference argmax for the agreement column (the accuracy signal
+    // the quantized tiers trade latency against).
+    let ref_argmax =
+        Forest::argmax(&forest.predict_batch(calibration), forest.n_classes);
     let mut candidates = Vec::new();
-    for (kind, precision) in crate::engine::all_variants() {
+    // The paper's ten variants plus the int8 tier (q8NA/q8QS/q8VQS).
+    for (kind, precision) in crate::engine::all_variants_with_i8() {
+        if tier.is_some_and(|p| p != precision) {
+            continue;
+        }
         // Build the serial engine once per variant; threaded candidates
         // wrap the same instance (Exact row sharding), so RS/QS model
         // preparation and quantization are not repeated per budget.
@@ -131,8 +171,10 @@ pub fn select_engine_with(
         // The op trace is a workload property, identical for every thread
         // budget (ParallelEngine::count_ops delegates to the serial
         // engine) — compute the single-core device estimate once per
-        // variant, not once per budget.
+        // variant, not once per budget. Likewise the argmax agreement
+        // (threaded candidates are bit-exact with serial).
         let mut single_us_est: Option<f64> = None;
+        let mut agreement: Option<f64> = None;
         for &threads in &budgets {
             let engine: Arc<dyn Engine> = if threads <= 1 {
                 serial.clone()
@@ -142,6 +184,11 @@ pub fn select_engine_with(
             let mut out = vec![0f32; n * forest.n_classes];
             // Warmup + median-of-k.
             engine.predict_batch(calibration, &mut out);
+            let agreement = *agreement.get_or_insert_with(|| {
+                let got = Forest::argmax(&out, forest.n_classes);
+                let same = got.iter().zip(&ref_argmax).filter(|(a, b)| a == b).count();
+                same as f64 / ref_argmax.len().max(1) as f64
+            });
             let mut times = Vec::with_capacity(repeats);
             for _ in 0..repeats.max(1) {
                 let sw = Stopwatch::start();
@@ -153,10 +200,7 @@ pub fn select_engine_with(
             let device_est = device.map(|dev| {
                 let single = *single_us_est.get_or_insert_with(|| {
                     let trace = engine.count_ops(calibration);
-                    let bytes_per_scalar = match precision {
-                        Precision::F32 => 4,
-                        Precision::I16 => 2,
-                    };
+                    let bytes_per_scalar = precision.scalar_bytes();
                     let ws = model_working_set(
                         forest.n_nodes(),
                         forest.n_trees(),
@@ -181,6 +225,7 @@ pub fn select_engine_with(
                 threads,
                 host_us_per_instance: host,
                 device_us_per_instance: device_est,
+                agreement,
             });
         }
     }
@@ -213,12 +258,76 @@ mod tests {
             },
         );
         let sel = select_engine(&f, &ds.x[..ds.d * 256], None, 3).unwrap();
-        assert_eq!(sel.candidates.len(), 10);
+        // The paper's ten variants + the three int8-tier engines.
+        assert_eq!(sel.candidates.len(), 13);
+        assert!(sel.candidates.iter().any(|c| c.name == "q8VQS"));
         // sorted ascending by µs/instance
         for w in sel.candidates.windows(2) {
             assert!(w[0].host_us_per_instance <= w[1].host_us_per_instance);
         }
         assert!(sel.report().contains("engine selection"));
+        assert!(sel.report().contains("argmax%"));
+        // Exact engines agree perfectly with the float reference; every
+        // agreement is a valid fraction.
+        let na = sel.candidates.iter().find(|c| c.name == "NA").unwrap();
+        assert_eq!(na.agreement, 1.0);
+        assert!(sel.candidates.iter().all(|c| (0.0..=1.0).contains(&c.agreement)));
+    }
+
+    #[test]
+    fn recommended_gates_on_agreement() {
+        let mk = |name: &str, us: f64, agreement: f64| Candidate {
+            name: name.into(),
+            kind: EngineKind::Naive,
+            precision: Precision::F32,
+            threads: 1,
+            host_us_per_instance: us,
+            device_us_per_instance: None,
+            agreement,
+        };
+        let sel = Selection {
+            candidates: vec![
+                mk("q8VQS", 1.0, 0.8), // fastest but below the gate
+                mk("qRS", 2.0, 0.995),
+                mk("NA", 9.0, 1.0),
+            ],
+            device: None,
+        };
+        assert_eq!(sel.best().name, "q8VQS");
+        assert_eq!(sel.recommended().name, "qRS");
+        // Nothing clears the gate → fall back to the fastest overall.
+        let sel2 = Selection {
+            candidates: vec![mk("a", 1.0, 0.5), mk("b", 2.0, 0.6)],
+            device: None,
+        };
+        assert_eq!(sel2.recommended().name, "a");
+    }
+
+    #[test]
+    fn tier_filter_restricts_candidates() {
+        let ds = DatasetId::Magic.generate(400, 24);
+        let f = train_random_forest(
+            &ds.x,
+            &ds.labels,
+            ds.d,
+            ds.n_classes,
+            RfParams {
+                n_trees: 8,
+                tree: TreeParams { max_leaves: 16, min_samples_leaf: 2, mtry: 0 },
+                ..Default::default()
+            },
+        );
+        let sel = super::select_engine_tier(
+            &f,
+            &ds.x[..ds.d * 64],
+            None,
+            1,
+            &[1],
+            Some(Precision::I8),
+        )
+        .unwrap();
+        assert_eq!(sel.candidates.len(), 3);
+        assert!(sel.candidates.iter().all(|c| c.precision == Precision::I8));
     }
 
     #[test]
@@ -264,8 +373,8 @@ mod tests {
             },
         );
         let sel = select_engine_with(&f, &ds.x[..ds.d * 128], None, 1, &[1, 2]).unwrap();
-        // 10 variants × 2 budgets.
-        assert_eq!(sel.candidates.len(), 20);
+        // 13 variants (10 + int8 tier) × 2 budgets.
+        assert_eq!(sel.candidates.len(), 26);
         assert!(sel.candidates.iter().any(|c| c.threads == 2 && c.name.ends_with("×2t")));
         assert!(sel.candidates.iter().any(|c| c.threads == 1 && c.name == "RS"));
     }

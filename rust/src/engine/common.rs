@@ -8,7 +8,7 @@
 //! remaining leaf — is the lowest set bit.
 
 use crate::forest::Forest;
-use crate::quant::QForest;
+use crate::quant::{QForest, QTree, QuantInt};
 
 /// Maximum leaves supported by the bitvector engines (one u64 word).
 pub const MAX_LEAVES: usize = 64;
@@ -134,13 +134,14 @@ impl QsModel<f32, f32> {
     }
 }
 
-impl QsModel<i16, i16> {
-    /// Prepare the int16 QuickScorer structures from a quantized forest.
-    pub fn from_qforest(qf: &QForest) -> QsModel<i16, i16> {
+impl<S: QuantInt> QsModel<S, S> {
+    /// Prepare the fixed-point QuickScorer structures from a quantized
+    /// forest (any storage tier: i16 or i8).
+    pub fn from_qforest(qf: &QForest<S>) -> QsModel<S, S> {
         let leaf_words = leaf_words_for(qf.max_leaves());
         let c = qf.n_classes;
         let mut raw = Vec::new();
-        let mut leaf_values = vec![0i16; qf.trees.len() * leaf_words * c];
+        let mut leaf_values = vec![S::default(); qf.trees.len() * leaf_words * c];
         for (ti, t) in qf.trees.iter().enumerate() {
             let ranges = qtree_left_ranges(t);
             for i in 0..t.features.len() {
@@ -175,16 +176,16 @@ impl QsModel<i16, i16> {
 
 /// Left-subtree leaf ranges for a quantized tree (same walk as
 /// [`crate::forest::Tree::left_leaf_ranges`], over the QTree layout).
-pub fn qtree_left_ranges(t: &crate::quant::QTree) -> Vec<(u32, u32)> {
+pub fn qtree_left_ranges<S: QuantInt>(t: &QTree<S>) -> Vec<(u32, u32)> {
     use crate::forest::Child;
     let mut out = vec![(0u32, 0u32); t.features.len()];
     if t.features.is_empty() {
         return out;
     }
-    fn span(
-        t: &crate::quant::QTree,
+    fn span<S: QuantInt>(
+        t: &QTree<S>,
         c: Child,
-        out: &mut Vec<(u32, u32)>,
+        out: &mut [(u32, u32)],
     ) -> (u32, u32) {
         match c {
             Child::Leaf(l) => (l, l + 1),
@@ -326,5 +327,22 @@ mod tests {
         let qm = QsModel::from_qforest(&qf);
         assert_eq!(qm.thresholds.len(), f.n_nodes());
         assert!(qm.scale > 1.0);
+    }
+
+    #[test]
+    fn i8_model_buildable_and_half_the_payload() {
+        let (f, _) = model();
+        let qf16 =
+            crate::quant::QForest::from_forest(&f, crate::quant::choose_scale(&f, 1.0));
+        let qf8 = crate::quant::QForest::<i8>::from_forest(
+            &f,
+            crate::quant::choose_scale_i8(&f, 1.0),
+        );
+        let m16 = QsModel::from_qforest(&qf16);
+        let m8 = QsModel::from_qforest(&qf8);
+        assert_eq!(m8.thresholds.len(), f.n_nodes());
+        // Same node count, half the scalar payload bytes.
+        assert_eq!(m8.masks.len(), m16.masks.len());
+        assert!(m8.memory_bytes() < m16.memory_bytes());
     }
 }

@@ -1,15 +1,18 @@
-//! Inference engines — the paper's five traversal strategies in float32 and
-//! int16 fixed-point variants (DESIGN.md system S6).
+//! Inference engines — the paper's five traversal strategies in float32,
+//! int16 and int8 fixed-point variants (DESIGN.md system S6).
 //!
 //! | engine | paper name      | strategy                                            |
 //! |--------|-----------------|-----------------------------------------------------|
 //! | NA     | Native/PRED     | while-loop over contiguous node arrays              |
 //! | IE     | If-Else         | branchy per-node structure (codegen'd if-else analogue) |
 //! | QS     | QuickScorer     | feature-ordered scan + bitvector masking (Alg. 1)   |
-//! | VQS    | V-QuickScorer   | QS vectorized over v=4 (f32) / v=8 (i16) instances (Alg. 2) |
+//! | VQS    | V-QuickScorer   | QS vectorized over v=4 (f32) / v=8 (i16) / v=16 (i8) instances (Alg. 2) |
 //! | RS     | RapidScorer     | epitomes + node merging + byte-transposed leafidx, v=16 (Alg. 3/4) |
 //!
-//! Prefix `q` (e.g. `qRS`) marks the int16 fixed-point variant (§5).
+//! Prefix `q` (e.g. `qRS`) marks the int16 fixed-point variant (§5); `q8`
+//! (e.g. `q8VQS`) the int8 tier built on the same analysis with 8-bit
+//! storage and a native-or-widened accumulator
+//! ([`crate::quant::AccumMode`]). The int8 tier covers NA, QS and VQS.
 //! All engines implement [`Engine`] and must agree with the naive reference
 //! ([`crate::forest::Forest::predict_batch`] /
 //! [`crate::quant::QForest::predict_batch`]) — enforced by the integration
@@ -25,7 +28,7 @@ pub mod vqs;
 
 use crate::forest::Forest;
 use crate::neon::OpTrace;
-use crate::quant::{choose_scale, QForest, QuantConfig};
+use crate::quant::{choose_scale, choose_scale_i8, QForest, QuantConfig};
 
 /// A prepared tree-ensemble inference engine.
 ///
@@ -96,16 +99,48 @@ impl EngineKind {
     }
 
     pub fn from_short(s: &str) -> Option<EngineKind> {
-        let up = s.trim_start_matches('q').to_ascii_uppercase();
+        let bare = s.strip_prefix("q8").or_else(|| s.strip_prefix('q')).unwrap_or(s);
+        let up = bare.to_ascii_uppercase();
         Self::ALL.iter().copied().find(|k| k.short() == up)
     }
 }
 
-/// Numeric representation (paper §5: float vs 16-bit fixed point).
+/// Numeric representation: float, the paper's 16-bit fixed point (§5), or
+/// the int8 tier (v = 16, half the model bytes again).
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub enum Precision {
     F32,
     I16,
+    I8,
+}
+
+impl Precision {
+    /// CLI name (`--precision {f32,i16,i8}`).
+    pub fn name(&self) -> &'static str {
+        match self {
+            Precision::F32 => "f32",
+            Precision::I16 => "i16",
+            Precision::I8 => "i8",
+        }
+    }
+
+    pub fn from_name(s: &str) -> Option<Precision> {
+        match s.to_ascii_lowercase().as_str() {
+            "f32" | "float" => Some(Precision::F32),
+            "i16" | "int16" => Some(Precision::I16),
+            "i8" | "int8" => Some(Precision::I8),
+            _ => None,
+        }
+    }
+
+    /// Bytes per stored scalar (threshold / leaf payload).
+    pub fn scalar_bytes(&self) -> usize {
+        match self {
+            Precision::F32 => 4,
+            Precision::I16 => 2,
+            Precision::I8 => 1,
+        }
+    }
 }
 
 /// Build an engine for `forest`. For [`Precision::I16`], the forest is
@@ -143,6 +178,38 @@ pub fn build(
                 EngineKind::Qs => Box::new(quickscorer::QQsEngine::new(&qf)),
                 EngineKind::Vqs => Box::new(vqs::QVqsEngine::new(&qf)),
                 EngineKind::Rs => Box::new(rapidscorer::QRsEngine::new(&qf)),
+            }
+        }
+        Precision::I8 => {
+            if matches!(kind, EngineKind::IfElse | EngineKind::Rs) {
+                anyhow::bail!(
+                    "{} has no int8 path yet (int8 tier covers NA, QS, VQS)",
+                    kind.short()
+                );
+            }
+            // A caller-supplied i16-carrier config contributes its scale;
+            // otherwise redo the §5 analysis for 8-bit storage. An
+            // i16-tier scale (e.g. 2^15) would silently saturate every i8
+            // payload — reject it instead of serving garbage.
+            let cfg = match quant {
+                Some(c) => {
+                    anyhow::ensure!(
+                        c.scale <= i8::MAX as f32,
+                        "quant scale {} saturates int8 storage (max {}); pass None \
+                         to let choose_scale_i8 pick an 8-bit scale",
+                        c.scale,
+                        i8::MAX
+                    );
+                    QuantConfig::<i8>::new(c.scale)
+                }
+                None => choose_scale_i8(forest, 1.0),
+            };
+            let qf = QForest::<i8>::from_forest(forest, cfg);
+            match kind {
+                EngineKind::Naive => Box::new(naive::QNaiveEngine::new(&qf)),
+                EngineKind::Qs => Box::new(quickscorer::QQsEngine::new(&qf)),
+                EngineKind::Vqs => Box::new(vqs::QVqs8Engine::new(&qf)),
+                EngineKind::IfElse | EngineKind::Rs => unreachable!(),
             }
         }
     })
@@ -183,11 +250,29 @@ pub fn all_variants() -> Vec<(EngineKind, Precision)> {
     out
 }
 
-/// Display name for a variant, paper-style (`qRS` = quantized RapidScorer).
+/// The int8-tier variants (NA, QS and the v=16 V-QuickScorer).
+pub fn i8_variants() -> Vec<(EngineKind, Precision)> {
+    vec![
+        (EngineKind::Vqs, Precision::I8),
+        (EngineKind::Qs, Precision::I8),
+        (EngineKind::Naive, Precision::I8),
+    ]
+}
+
+/// The paper's ten variants plus the int8 tier (selector candidate set).
+pub fn all_variants_with_i8() -> Vec<(EngineKind, Precision)> {
+    let mut out = all_variants();
+    out.extend(i8_variants());
+    out
+}
+
+/// Display name for a variant, paper-style (`qRS` = quantized RapidScorer,
+/// `q8VQS` = int8 V-QuickScorer).
 pub fn variant_name(kind: EngineKind, precision: Precision) -> String {
     match precision {
         Precision::F32 => kind.short().to_string(),
         Precision::I16 => format!("q{}", kind.short()),
+        Precision::I8 => format!("q8{}", kind.short()),
     }
 }
 
@@ -201,6 +286,8 @@ mod tests {
             assert_eq!(EngineKind::from_short(k.short()), Some(k));
         }
         assert_eq!(EngineKind::from_short("qRS"), Some(EngineKind::Rs));
+        assert_eq!(EngineKind::from_short("q8VQS"), Some(EngineKind::Vqs));
+        assert_eq!(EngineKind::from_short("q8na"), Some(EngineKind::Naive));
         assert_eq!(EngineKind::from_short("nope"), None);
     }
 
@@ -209,5 +296,50 @@ mod tests {
         assert_eq!(all_variants().len(), 10);
         assert_eq!(variant_name(EngineKind::Rs, Precision::I16), "qRS");
         assert_eq!(variant_name(EngineKind::Naive, Precision::F32), "NA");
+    }
+
+    #[test]
+    fn i8_variant_set() {
+        assert_eq!(i8_variants().len(), 3);
+        assert_eq!(all_variants_with_i8().len(), 13);
+        assert_eq!(variant_name(EngineKind::Vqs, Precision::I8), "q8VQS");
+    }
+
+    #[test]
+    fn precision_names_roundtrip() {
+        for p in [Precision::F32, Precision::I16, Precision::I8] {
+            assert_eq!(Precision::from_name(p.name()), Some(p));
+        }
+        assert_eq!(Precision::from_name("int8"), Some(Precision::I8));
+        assert_eq!(Precision::from_name("bf16"), None);
+        assert_eq!(Precision::I8.scalar_bytes(), 1);
+    }
+
+    #[test]
+    fn i8_build_paths() {
+        use crate::data::DatasetId;
+        use crate::forest::builder::{train_random_forest, RfParams, TreeParams};
+        let ds = DatasetId::Magic.generate(400, 88);
+        let f = train_random_forest(
+            &ds.x,
+            &ds.labels,
+            ds.d,
+            ds.n_classes,
+            RfParams {
+                n_trees: 6,
+                tree: TreeParams { max_leaves: 16, min_samples_leaf: 2, mtry: 0 },
+                ..Default::default()
+            },
+        );
+        for (kind, p) in i8_variants() {
+            let e = build(kind, p, &f, None).unwrap();
+            assert!(e.name().starts_with("q8"), "{}", e.name());
+        }
+        assert!(build(EngineKind::Rs, Precision::I8, &f, None).is_err());
+        assert!(build(EngineKind::IfElse, Precision::I8, &f, None).is_err());
+        // An i16-tier carrier scale must be rejected, not silently saturated.
+        let carrier: QuantConfig = QuantConfig::new(32768.0);
+        assert!(build(EngineKind::Naive, Precision::I8, &f, Some(carrier)).is_err());
+        assert!(build(EngineKind::Naive, Precision::I8, &f, Some(QuantConfig::new(64.0))).is_ok());
     }
 }

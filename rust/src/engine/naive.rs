@@ -8,7 +8,7 @@ use super::common::QsModel; // only for sizing helpers in traces
 use super::Engine;
 use crate::forest::{Child, Forest};
 use crate::neon::OpTrace;
-use crate::quant::{QForest, QuantConfig};
+use crate::quant::{QForest, QuantConfig, QuantInt};
 
 /// Child encoded as i32: `>= 0` → node index, `< 0` → leaf `-(v+1)`.
 #[inline]
@@ -119,7 +119,7 @@ fn flatten_f32(f: &Forest) -> FlatForest<f32, f32> {
     out
 }
 
-fn flatten_i16(qf: &QForest) -> FlatForest<i16, i16> {
+fn flatten_q<S: QuantInt>(qf: &QForest<S>) -> FlatForest<S, S> {
     let mut out = FlatForest {
         tree_offsets: vec![0],
         features: Vec::new(),
@@ -220,23 +220,24 @@ impl Engine for NaiveEngine {
     }
 }
 
-/// Quantized NA engine (qNA): int16 thresholds/leaves, i32 accumulation,
-/// features quantized once per batch.
-pub struct QNaiveEngine {
-    flat: FlatForest<i16, i16>,
+/// Quantized NA engine (qNA / q8NA): fixed-point thresholds/leaves in the
+/// tier's storage width, i32 accumulation, features quantized once per
+/// batch.
+pub struct QNaiveEngine<S: QuantInt = i16> {
+    flat: FlatForest<S, S>,
     base: Vec<i32>,
-    config: QuantConfig,
+    config: QuantConfig<S>,
 }
 
-impl QNaiveEngine {
-    pub fn new(qf: &QForest) -> QNaiveEngine {
-        QNaiveEngine { flat: flatten_i16(qf), base: qf.base_score.clone(), config: qf.config }
+impl<S: QuantInt> QNaiveEngine<S> {
+    pub fn new(qf: &QForest<S>) -> QNaiveEngine<S> {
+        QNaiveEngine { flat: flatten_q(qf), base: qf.base_score.clone(), config: qf.config }
     }
 }
 
-impl Engine for QNaiveEngine {
+impl<S: QuantInt> Engine for QNaiveEngine<S> {
     fn name(&self) -> String {
-        "qNA".into()
+        format!("{}NA", S::ENGINE_PREFIX)
     }
 
     fn lanes(&self) -> usize {
@@ -265,7 +266,7 @@ impl Engine for QNaiveEngine {
             for ti in 0..self.flat.n_trees() {
                 let leaf = self.flat.exit_leaf(ti, |f, t| row[f as usize] <= t);
                 for (dst, &v) in acc.iter_mut().zip(self.flat.leaf_row(ti, leaf)) {
-                    *dst += v as i32;
+                    *dst += v.to_i32();
                 }
             }
             for (o, &a) in out[i * c..(i + 1) * c].iter_mut().zip(acc.iter()) {
@@ -283,7 +284,7 @@ impl Engine for QNaiveEngine {
         let mut tr = OpTrace::new();
         // Feature quantization: one fp mul + floor + store per value.
         tr.scalar_fp += (n * d) as u64 * 2;
-        tr.store_bytes += (n * d * 2) as u64;
+        tr.store_bytes += (n * d * std::mem::size_of::<S>()) as u64;
         for i in 0..n {
             let row = &qx[i * d..(i + 1) * d];
             for ti in 0..self.flat.n_trees() {
@@ -344,9 +345,19 @@ mod tests {
         let (f, ds) = setup();
         let qf = QForest::from_forest(&f, QuantConfig::paper_default());
         let e = QNaiveEngine::new(&qf);
+        assert_eq!(e.name(), "qNA");
         let got = e.predict(&ds.x);
         let want = qf.predict_batch(&ds.x);
         assert_eq!(got, want);
+    }
+
+    #[test]
+    fn q8na_matches_qforest_reference() {
+        let (f, ds) = setup();
+        let qf = QForest::<i8>::from_forest(&f, crate::quant::choose_scale_i8(&f, 1.0));
+        let e = QNaiveEngine::new(&qf);
+        assert_eq!(e.name(), "q8NA");
+        assert_eq!(e.predict(&ds.x), qf.predict_batch(&ds.x));
     }
 
     #[test]

@@ -13,7 +13,7 @@ use super::common::QsModel;
 use super::Engine;
 use crate::forest::Forest;
 use crate::neon::OpTrace;
-use crate::quant::{QForest, QuantConfig};
+use crate::quant::{QForest, QuantConfig, QuantInt};
 
 /// Float scalar QuickScorer.
 pub struct QsEngine {
@@ -129,21 +129,21 @@ impl Engine for QsEngine {
     }
 }
 
-/// Quantized scalar QuickScorer (qQS).
-pub struct QQsEngine {
-    m: QsModel<i16, i16>,
-    config: QuantConfig,
+/// Quantized scalar QuickScorer (qQS / q8QS), generic over the storage tier.
+pub struct QQsEngine<S: QuantInt = i16> {
+    m: QsModel<S, S>,
+    config: QuantConfig<S>,
 }
 
-impl QQsEngine {
-    pub fn new(qf: &QForest) -> QQsEngine {
+impl<S: QuantInt> QQsEngine<S> {
+    pub fn new(qf: &QForest<S>) -> QQsEngine<S> {
         QQsEngine { m: QsModel::from_qforest(qf), config: qf.config }
     }
 }
 
-impl Engine for QQsEngine {
+impl<S: QuantInt> Engine for QQsEngine<S> {
     fn name(&self) -> String {
-        "qQS".into()
+        format!("{}QS", S::ENGINE_PREFIX)
     }
 
     fn lanes(&self) -> usize {
@@ -173,7 +173,7 @@ impl Engine for QQsEngine {
             for (ti, &bits) in leafidx.iter().enumerate() {
                 let j = bits.trailing_zeros() as usize;
                 for (dst, &v) in acc.iter_mut().zip(self.m.leaf_row(ti, j)) {
-                    *dst += v as i32;
+                    *dst += v.to_i32();
                 }
             }
             for (o, &a) in out[i * c..(i + 1) * c].iter_mut().zip(acc.iter()) {
@@ -189,7 +189,7 @@ impl Engine for QQsEngine {
         let n = x.len() / d;
         let mut tr = qsi_trace(&self.m, &qx, n);
         tr.scalar_fp += (n * d) as u64 * 2; // feature quantization
-        tr.store_bytes += (n * d * 2) as u64;
+        tr.store_bytes += (n * d * std::mem::size_of::<S>()) as u64;
         tr
     }
 
@@ -221,7 +221,7 @@ fn qs_trace(m: &QsModel<f32, f32>, x: &[f32], _quant: bool) -> OpTrace {
     tr
 }
 
-fn qsi_trace(m: &QsModel<i16, i16>, qx: &[i16], n: usize) -> OpTrace {
+fn qsi_trace<S: QuantInt>(m: &QsModel<S, S>, qx: &[S], n: usize) -> OpTrace {
     let d = m.n_features;
     let c = m.n_classes as u64;
     let mut tr = OpTrace::new();
@@ -286,7 +286,20 @@ mod tests {
         let (f, ds) = setup(32, 3);
         let qf = QForest::from_forest(&f, QuantConfig::paper_default());
         let e = QQsEngine::new(&qf);
+        assert_eq!(e.name(), "qQS");
         assert_eq!(e.predict(&ds.x), qf.predict_batch(&ds.x));
+    }
+
+    #[test]
+    fn q8qs_matches_qforest() {
+        for leaves in [32usize, 64] {
+            let (f, ds) = setup(leaves, 7);
+            let qf =
+                QForest::<i8>::from_forest(&f, crate::quant::choose_scale_i8(&f, 1.0));
+            let e = QQsEngine::new(&qf);
+            assert_eq!(e.name(), "q8QS");
+            assert_eq!(e.predict(&ds.x), qf.predict_batch(&ds.x), "L={leaves}");
+        }
     }
 
     #[test]

@@ -166,7 +166,7 @@ fn worker(
     let setup = (|| -> Result<_> {
         let rt = Runtime::cpu(&dir)?;
         let model = rt.load(&meta)?;
-        let quant = QuantConfig { scale: meta.scale };
+        let quant: QuantConfig = QuantConfig::new(meta.scale);
         // Parameter literals are built once.
         let mk = [t.m, t.k];
         let fid = runtime::lit_i32(&t.fid, &mk)?;
@@ -351,9 +351,9 @@ mod tests {
         let forest = load(&artifacts().join(&meta.forest)).unwrap();
         let eng = TensorEngine::from_artifact(&artifacts(), "rf_i16_b64", &forest).unwrap();
 
-        let qf = crate::quant::QForest::from_forest(
+        let qf = crate::quant::QForest::<i16>::from_forest(
             &forest,
-            crate::quant::QuantConfig { scale: meta.scale },
+            crate::quant::QuantConfig::new(meta.scale),
         );
         let mut rng = crate::util::Pcg32::seeded(78);
         let n = 64;

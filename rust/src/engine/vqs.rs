@@ -18,7 +18,7 @@ use super::common::QsModel;
 use super::Engine;
 use crate::forest::Forest;
 use crate::neon::*;
-use crate::quant::{QForest, QuantConfig};
+use crate::quant::{AccumMode, QForest, QuantConfig};
 
 /// Transpose `v` rows of `x` (row-major, `d` columns) starting at `base`
 /// into feature-major `xt[k*v + lane]`. Rows beyond `n` replicate row
@@ -449,6 +449,285 @@ impl QVqsEngine {
 }
 
 // ---------------------------------------------------------------------------
+// Quantized VQS, int8 tier (v = 16)
+// ---------------------------------------------------------------------------
+
+/// Int8 V-QuickScorer: 16 instances per block — the §5.1 lane-doubling taken
+/// one width further. The i8 compare mask (`vcgtq_s8`) widens through the
+/// `vmovl_s8` / `vmovl_s16` (/ `vmovl_s32` for L ≤ 64) chain to the 32/64-bit
+/// bitvector lanes. Scores accumulate natively in i8 (`vaddq_s8`) when the
+/// worst-case forest sum provably fits i8, else with widening i8 → i16 adds
+/// (`vaddw_s8`, two accumulator registers instead of one) — see
+/// [`crate::quant::AccumMode`].
+pub struct QVqs8Engine {
+    m: QsModel<i8, i8>,
+    config: QuantConfig<i8>,
+    mode: AccumMode,
+}
+
+pub(crate) const V_I8: usize = 16;
+
+impl QVqs8Engine {
+    pub fn new(qf: &QForest<i8>) -> QVqs8Engine {
+        QVqs8Engine { m: QsModel::from_qforest(qf), config: qf.config, mode: qf.accum_mode() }
+    }
+
+    /// The accumulation mode chosen at construction (from the exact
+    /// quantized worst-case sum, [`QForest::accum_mode`]).
+    pub fn accum_mode(&self) -> AccumMode {
+        self.mode
+    }
+}
+
+impl Engine for QVqs8Engine {
+    fn name(&self) -> String {
+        "q8VQS".into()
+    }
+
+    fn lanes(&self) -> usize {
+        V_I8
+    }
+
+    fn n_features(&self) -> usize {
+        self.m.n_features
+    }
+
+    fn n_classes(&self) -> usize {
+        self.m.n_classes
+    }
+
+    fn predict_batch(&self, x: &[f32], out: &mut [f32]) {
+        let m = &self.m;
+        let d = m.n_features;
+        let c = m.n_classes;
+        let n = x.len() / d;
+        let mut qx = Vec::with_capacity(x.len());
+        self.config.q_slice(x, &mut qx);
+        let mut xt = vec![0i8; d * V_I8];
+        let mut idx32 =
+            vec![[U32x4([0; 4]); 4]; if m.leaf_words == 32 { m.n_trees } else { 0 }];
+        let mut idx64 =
+            vec![[U64x2([0; 2]); 8]; if m.leaf_words == 64 { m.n_trees } else { 0 }];
+
+        let mut base = 0usize;
+        while base < n {
+            transpose_block(&qx, d, n, base, V_I8, &mut xt);
+            if m.leaf_words == 32 {
+                self.block32(&xt, &mut idx32, out, base, n, c);
+            } else {
+                self.block64(&xt, &mut idx64, out, base, n, c);
+            }
+            base += V_I8;
+        }
+    }
+
+    fn count_ops(&self, x: &[f32]) -> OpTrace {
+        let mut qx = Vec::new();
+        self.config.q_slice(x, &mut qx);
+        let d = self.m.n_features;
+        let n = x.len() / d;
+        let mut tr = vqs_trace_i8(&self.m, &qx, n, self.mode);
+        tr.scalar_fp += (n * d) as u64 * 2;
+        tr.store_bytes += (n * d) as u64; // 1 byte per quantized feature
+        tr
+    }
+
+    fn memory_bytes(&self) -> usize {
+        self.m.memory_bytes()
+    }
+}
+
+/// Per-class score accumulators for one 16-lane block: one i8 register in
+/// [`AccumMode::Native`], an i16 register pair in [`AccumMode::Widened`].
+struct Acc8 {
+    native: bool,
+    i8acc: Vec<I8x16>,
+    lo: Vec<I16x8>,
+    hi: Vec<I16x8>,
+}
+
+impl Acc8 {
+    fn new(c: usize, mode: AccumMode) -> Acc8 {
+        let native = mode == AccumMode::Native;
+        Acc8 {
+            native,
+            i8acc: vec![I8x16([0; 16]); if native { c } else { 0 }],
+            lo: vec![I16x8([0; 8]); if native { 0 } else { c }],
+            hi: vec![I16x8([0; 8]); if native { 0 } else { c }],
+        }
+    }
+
+    #[inline]
+    fn add(&mut self, cls: usize, vals: I8x16) {
+        if self.native {
+            self.i8acc[cls] = vaddq_s8(self.i8acc[cls], vals);
+        } else {
+            self.lo[cls] = vaddw_s8(self.lo[cls], vget_low_s8(vals));
+            self.hi[cls] = vaddw_s8(self.hi[cls], vget_high_s8(vals));
+        }
+    }
+
+    #[inline]
+    fn lane(&self, cls: usize, lane: usize) -> i32 {
+        if self.native {
+            self.i8acc[cls].0[lane] as i32
+        } else if lane < 8 {
+            self.lo[cls].0[lane] as i32
+        } else {
+            self.hi[cls].0[lane - 8] as i32
+        }
+    }
+}
+
+impl QVqs8Engine {
+    /// L ≤ 32: each tree's 16 lanes live in four u32x4 registers; the i8
+    /// compare mask widens twice (s8 → s16 → s32).
+    fn block32(
+        &self,
+        xt: &[i8],
+        leafidx: &mut [[U32x4; 4]],
+        out: &mut [f32],
+        base: usize,
+        n: usize,
+        c: usize,
+    ) {
+        let m = &self.m;
+        leafidx.fill([vdupq_n_u32(u32::MAX); 4]);
+        for k in 0..m.n_features {
+            let r = m.feature_range(k);
+            if r.is_empty() {
+                continue;
+            }
+            let xv = vld1q_s8(&xt[k * V_I8..]);
+            let ths = &m.thresholds[r.clone()];
+            let trees = &m.tree_ids[r.clone()];
+            let masks = &m.masks[r];
+            for ((&t, &tree), &mk) in ths.iter().zip(trees).zip(masks) {
+                let gamma = vdupq_n_s8(t);
+                let mask = vcgtq_s8(xv, gamma);
+                if vmaxvq_u8(mask) == 0 {
+                    break;
+                }
+                let mi = vreinterpretq_s8_u8(mask);
+                let m16 = [vmovl_s8(vget_low_s8(mi)), vmovl_s8(vget_high_s8(mi))];
+                let tree = tree as usize;
+                let mvec = vdupq_n_u32(mk as u32);
+                let regs = leafidx[tree];
+                let mut next = regs;
+                for (half, half16) in m16.iter().enumerate() {
+                    let lo = vreinterpretq_u32_s32(vmovl_s16(vget_low_s16(*half16)));
+                    let hi = vreinterpretq_u32_s32(vmovl_s16(vget_high_s16(*half16)));
+                    let b0 = regs[half * 2];
+                    let b1 = regs[half * 2 + 1];
+                    next[half * 2] = vbslq_u32(lo, vandq_u32(mvec, b0), b0);
+                    next[half * 2 + 1] = vbslq_u32(hi, vandq_u32(mvec, b1), b1);
+                }
+                leafidx[tree] = next;
+            }
+        }
+        // Score: 16-lane i8 leaf gather per (tree, class), accumulated
+        // natively or via the widening add.
+        let mut acc = Acc8::new(c, self.mode);
+        for (ti, regs) in leafidx.iter().enumerate() {
+            let mut vals = vec![I8x16([0; 16]); c];
+            for lane in 0..V_I8 {
+                let word = vgetq_lane_u32(regs[lane / 4], lane % 4);
+                let j = word.trailing_zeros() as usize;
+                let row = m.leaf_row(ti, j);
+                for cls in 0..c {
+                    vals[cls].0[lane] = row[cls];
+                }
+            }
+            for (cls, v) in vals.iter().enumerate() {
+                acc.add(cls, *v);
+            }
+        }
+        self.write_scores(&acc, out, base, n, c);
+    }
+
+    /// L ≤ 64: eight u64x2 registers per tree; the mask widens three times
+    /// (s8 → s16 → s32 → s64).
+    fn block64(
+        &self,
+        xt: &[i8],
+        leafidx: &mut [[U64x2; 8]],
+        out: &mut [f32],
+        base: usize,
+        n: usize,
+        c: usize,
+    ) {
+        let m = &self.m;
+        leafidx.fill([vdupq_n_u64(u64::MAX); 8]);
+        for k in 0..m.n_features {
+            let r = m.feature_range(k);
+            if r.is_empty() {
+                continue;
+            }
+            let xv = vld1q_s8(&xt[k * V_I8..]);
+            let ths = &m.thresholds[r.clone()];
+            let trees = &m.tree_ids[r.clone()];
+            let masks = &m.masks[r];
+            for ((&t, &tree), &mk) in ths.iter().zip(trees).zip(masks) {
+                let gamma = vdupq_n_s8(t);
+                let mask = vcgtq_s8(xv, gamma);
+                if vmaxvq_u8(mask) == 0 {
+                    break;
+                }
+                let mi = vreinterpretq_s8_u8(mask);
+                let m16 = [vmovl_s8(vget_low_s8(mi)), vmovl_s8(vget_high_s8(mi))];
+                let tree = tree as usize;
+                let mvec = vdupq_n_u64(mk);
+                let regs = leafidx[tree];
+                let mut next = regs;
+                for (half, half16) in m16.iter().enumerate() {
+                    let m32 =
+                        [vmovl_s16(vget_low_s16(*half16)), vmovl_s16(vget_high_s16(*half16))];
+                    for (q, quarter) in m32.iter().enumerate() {
+                        let lo64 = vreinterpretq_u64_s64(vmovl_s32(vget_low_s32(*quarter)));
+                        let hi64 = vreinterpretq_u64_s64(vmovl_s32(vget_high_s32(*quarter)));
+                        let idx = half * 4 + q * 2;
+                        let b0 = regs[idx];
+                        let b1 = regs[idx + 1];
+                        next[idx] = vbslq_u64(lo64, vandq_u64(mvec, b0), b0);
+                        next[idx + 1] = vbslq_u64(hi64, vandq_u64(mvec, b1), b1);
+                    }
+                }
+                leafidx[tree] = next;
+            }
+        }
+        let mut acc = Acc8::new(c, self.mode);
+        for (ti, regs) in leafidx.iter().enumerate() {
+            let mut vals = vec![I8x16([0; 16]); c];
+            for lane in 0..V_I8 {
+                let word = vgetq_lane_u64(regs[lane / 2], lane % 2);
+                let j = word.trailing_zeros() as usize;
+                let row = m.leaf_row(ti, j);
+                for cls in 0..c {
+                    vals[cls].0[lane] = row[cls];
+                }
+            }
+            for (cls, v) in vals.iter().enumerate() {
+                acc.add(cls, *v);
+            }
+        }
+        self.write_scores(&acc, out, base, n, c);
+    }
+
+    fn write_scores(&self, acc: &Acc8, out: &mut [f32], base: usize, n: usize, c: usize) {
+        for lane in 0..V_I8 {
+            let i = base + lane;
+            if i >= n {
+                break;
+            }
+            for cls in 0..c {
+                let total = self.m.base_i32[cls] + acc.lane(cls, lane);
+                out[i * c + cls] = self.config.dq(total);
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
 // Op traces
 // ---------------------------------------------------------------------------
 
@@ -525,6 +804,37 @@ fn vqs_trace_i16(m: &QsModel<i16, i16>, qx: &[i16], n: usize) -> OpTrace {
         tr.neon_alu += m.n_trees as u64 * c; // vaddq_s16
         tr.scalar_alu += (d * V_I16) as u64;
         base += V_I16;
+    }
+    tr
+}
+
+fn vqs_trace_i8(m: &QsModel<i8, i8>, qx: &[i8], n: usize, mode: AccumMode) -> OpTrace {
+    let d = m.n_features;
+    let c = m.n_classes as u64;
+    let mut tr = OpTrace::new();
+    let mut xt = vec![0i8; d * V_I8];
+    let regs_per_tree: u64 = if m.leaf_words == 32 { 4 } else { 8 };
+    // Native: one vaddq_s8 per class; Widened: two vaddw_s8.
+    let acc_adds: u64 = match mode {
+        AccumMode::Native => 1,
+        AccumMode::Widened => 2,
+    };
+    let mut base = 0;
+    while base < n {
+        transpose_block(qx, d, n, base, V_I8, &mut xt);
+        let (visited, applied) = block_visits(m, &xt, V_I8);
+        tr.stream_load_bytes += visited * m.node_entry_bytes();
+        tr.neon_alu += visited; // vcgtq_s8 (integer pipe)
+        tr.neon_horiz += visited; // vmaxvq
+        tr.branch += visited;
+        tr.neon_horiz += applied * regs_per_tree; // vmovl widen chain
+        tr.neon_alu += applied * (2 * regs_per_tree + 1);
+        tr.store_bytes += 16 * regs_per_tree * m.n_trees as u64;
+        tr.scalar_alu += m.n_trees as u64 * V_I8 as u64;
+        tr.random_loads += m.n_trees as u64 * V_I8 as u64;
+        tr.neon_alu += m.n_trees as u64 * c * acc_adds;
+        tr.scalar_alu += (d * V_I8) as u64;
+        base += V_I8;
     }
     tr
 }
@@ -609,5 +919,69 @@ mod tests {
         let qe = QVqsEngine::new(&qf);
         let qtr = qe.count_ops(&ds.x);
         assert!(qtr.neon_alu > 0);
+        let qf8 = QForest::<i8>::from_forest(&f, crate::quant::choose_scale_i8(&f, 1.0));
+        let qe8 = QVqs8Engine::new(&qf8);
+        let qtr8 = qe8.count_ops(&ds.x);
+        assert!(qtr8.neon_alu > 0);
+    }
+
+    #[test]
+    fn q8vqs_matches_qforest_l32() {
+        let (f, ds) = setup(32, 8, 103); // non-multiple of 16: tests padding
+        let qf = QForest::<i8>::from_forest(&f, crate::quant::choose_scale_i8(&f, 1.0));
+        let e = QVqs8Engine::new(&qf);
+        assert_eq!(e.name(), "q8VQS");
+        assert_eq!(e.lanes(), 16);
+        let x = &ds.x[..ds.d * 103];
+        assert_eq!(e.predict(x), qf.predict_batch(x));
+    }
+
+    #[test]
+    fn q8vqs_matches_qforest_l64() {
+        // Seed 2 matches vqs_matches_reference_l64: known to exceed 32 leaves.
+        let (f, ds) = setup(64, 2, 96);
+        assert!(f.max_leaves() > 32);
+        let qf = QForest::<i8>::from_forest(&f, crate::quant::choose_scale_i8(&f, 1.0));
+        let e = QVqs8Engine::new(&qf);
+        let x = &ds.x[..ds.d * 87]; // non-multiple of 16
+        assert_eq!(e.predict(x), qf.predict_batch(x));
+    }
+
+    #[test]
+    fn q8vqs_native_mode_on_rf() {
+        // RF worst-case sum ≈ 1.0: the tier picks the native i8 accumulator.
+        let (f, ds) = setup(32, 11, 40);
+        let qf = QForest::<i8>::from_forest(&f, crate::quant::choose_scale_i8(&f, 1.0));
+        let e = QVqs8Engine::new(&qf);
+        assert_eq!(e.accum_mode(), AccumMode::Native);
+        let x = &ds.x[..ds.d * 33];
+        assert_eq!(e.predict(x), qf.predict_batch(x));
+    }
+
+    #[test]
+    fn q8vqs_widened_mode_exact() {
+        // Inflate leaf magnitudes so the worst-case sum cannot fit an i8
+        // accumulator at a leaf-preserving scale: the engine must widen
+        // i8→i16 and stay bit-exact with the i32-accumulating reference.
+        let (mut f, ds) = setup(32, 10, 64);
+        for t in &mut f.trees {
+            for v in &mut t.leaf_values {
+                *v *= 40.0;
+            }
+        }
+        let cfg = crate::quant::choose_scale_i8(&f, 1.0);
+        let qf = QForest::<i8>::from_forest(&f, cfg);
+        let e = QVqs8Engine::new(&qf);
+        assert_eq!(e.accum_mode(), AccumMode::Widened);
+        let x = &ds.x[..ds.d * 64];
+        assert_eq!(e.predict(x), qf.predict_batch(x));
+    }
+
+    #[test]
+    fn q8_single_instance_batch() {
+        let (f, ds) = setup(32, 12, 40);
+        let qf = QForest::<i8>::from_forest(&f, crate::quant::choose_scale_i8(&f, 1.0));
+        let e = QVqs8Engine::new(&qf);
+        assert_eq!(e.predict(&ds.x[..ds.d]), qf.predict_batch(&ds.x[..ds.d]));
     }
 }

@@ -75,8 +75,13 @@ impl ParallelEngine {
         policy: ShardPolicy,
     ) -> anyhow::Result<ParallelEngine> {
         // One scale for the full forest and every shard (see module docs).
+        // The i16-typed config is only a scale carrier here; `build`
+        // re-materializes it at the target storage width.
         let quant = match precision {
             Precision::I16 => Some(quant.unwrap_or_else(|| choose_scale(forest, 1.0))),
+            Precision::I8 => Some(quant.unwrap_or_else(|| {
+                QuantConfig::new(crate::quant::choose_scale_i8(forest, 1.0).scale)
+            })),
             Precision::F32 => quant,
         };
         let inner: Arc<dyn Engine> = Arc::from(build(kind, precision, forest, quant)?);

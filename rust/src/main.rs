@@ -19,7 +19,7 @@ use anyhow::{bail, Context, Result};
 use arbors::bench::experiments;
 use arbors::bench::harness::Scale;
 use arbors::cli::Args;
-use arbors::coordinator::{select_engine_with, thread_budgets, BatchConfig, Server};
+use arbors::coordinator::{select_engine_tier, thread_budgets, BatchConfig, Server};
 use arbors::data::{csv, DatasetId};
 use arbors::device::DeviceProfile;
 use arbors::engine::{build_parallel, EngineKind, Precision};
@@ -58,17 +58,41 @@ USAGE: arbors <command> [flags]
 
   train    --dataset <magic|adult|eeg|mnist|fashion|msn> | --data <csv>
            --trees N --leaves N --out model.json [--gbt] [--n N] [--seed S]
-  predict  --model model.json --data in.csv --engine <NA|IE|QS|VQS|RS> [--quant]
-           [--threads N] [--out scores.csv]
+  predict  --model model.json --data in.csv --engine <NA|IE|QS|VQS|RS>
+           [--precision f32|i16|i8] [--quant] [--threads N] [--out scores.csv]
+           (--quant is shorthand for --precision i16; int8 covers NA/QS/VQS)
   accuracy --model model.json --dataset <name> | --data <csv>
   select   --model model.json [--device a53|exynos] [--n N] [--threads N]
-           (--threads adds row-sharded candidates like RS×4t to the ranking)
-  bench    --exp <table2|table3|table4|table5|fig1|fig2|ablation|tensor|scaling>
-           [--threads N]   (scale via ARBORS_SCALE=quick|default|full)
-  serve    --dataset <name> [--engine E] [--quant] [--requests N] [--threads N]
-           [--listen 127.0.0.1:7878]   (JSON-over-TCP protocol; see coordinator::net)
+           [--precision f32|i16|i8]  (restricts the ranking to one tier;
+           --threads adds row-sharded candidates like RS×4t)
+  bench    --exp <table2|table3|table4|table5|fig1|fig2|ablation|tensor|scaling|int8>
+           [--threads N] [--precision P]  (scale via ARBORS_SCALE=quick|default|full;
+           int8 emits the i16-vs-i8 tier comparison to results/int8_tiers.json)
+  serve    --dataset <name> [--engine E] [--precision P | --quant] [--requests N]
+           [--threads N] [--listen 127.0.0.1:7878]   (JSON-over-TCP; see coordinator::net)
   datasets
 ";
+
+/// The optional `--precision {f32,i16,i8}` flag.
+fn precision_flag(args: &Args) -> Result<Option<Precision>> {
+    match args.get("precision") {
+        Some(p) => Precision::from_name(p)
+            .map(Some)
+            .ok_or_else(|| anyhow::anyhow!("unknown --precision '{p}' (f32|i16|i8)")),
+        None => Ok(None),
+    }
+}
+
+/// `--precision` with `--quant` kept as an i16 shorthand (explicit
+/// `--precision` wins when both are given).
+fn parse_precision(args: &Args) -> Result<Precision> {
+    let quant = args.switch("quant");
+    Ok(match precision_flag(args)? {
+        Some(p) => p,
+        None if quant => Precision::I16,
+        None => Precision::F32,
+    })
+}
 
 fn scale() -> Scale {
     Scale::from_env()
@@ -148,7 +172,7 @@ fn cmd_predict(args: &Args) -> Result<()> {
     }
     let kind = EngineKind::from_short(&args.get_or("engine", "RS"))
         .context("bad --engine")?;
-    let precision = if args.switch("quant") { Precision::I16 } else { Precision::F32 };
+    let precision = parse_precision(args)?;
     let threads = args.usize_or("threads", 1)?;
     let out_path = args.get("out").map(PathBuf::from);
     args.finish()?;
@@ -191,6 +215,9 @@ fn cmd_accuracy(args: &Args) -> Result<()> {
         let acc = accuracy_with_parts(&model, cfg, parts, &ds.x, &ds.labels);
         println!("  split/leaf {label}: {:.2}%", acc * 100.0);
     }
+    let cfg8 = arbors::quant::choose_scale_i8(&model, 1.0);
+    let acc8 = accuracy_with_parts(&model, cfg8, QuantParts::BOTH, &ds.x, &ds.labels);
+    println!("  split/leaf int8/int8: {:.2}% (s={:.1})", acc8 * 100.0, cfg8.scale);
     Ok(())
 }
 
@@ -207,28 +234,39 @@ fn cmd_select(args: &Args) -> Result<()> {
     };
     let n = args.usize_or("n", 256)?;
     let threads = args.usize_or("threads", 1)?;
+    let tier = precision_flag(args)?;
     args.finish()?;
     let mut rng = arbors::util::Pcg32::seeded(0xCA11);
     let calibration: Vec<f32> =
         (0..n * model.n_features).map(|_| rng.f32()).collect();
-    let sel = select_engine_with(
+    // With a tier filter, excluded variants are never built or timed.
+    let sel = select_engine_tier(
         &model,
         &calibration,
         device.as_ref(),
         3,
         &thread_budgets(threads),
+        tier,
     )?;
+    anyhow::ensure!(
+        !sel.candidates.is_empty(),
+        "no candidates for this model{}",
+        tier.map(|p| format!(" at --precision {}", p.name())).unwrap_or_default()
+    );
     print!("{}", sel.report());
-    println!("recommended: {}", sel.best().name);
+    // Same gate as Server::deploy_auto: fastest with ≥ 99% argmax
+    // agreement vs the float reference, not fastest outright.
+    println!("recommended: {}", sel.recommended().name);
     Ok(())
 }
 
 fn cmd_bench(args: &Args) -> Result<()> {
     let exp = args.get_or("exp", "table5");
-    // Only the scaling experiment is threaded; leaving --threads unconsumed
-    // elsewhere makes `finish()` reject it loudly instead of silently
-    // ignoring it.
+    // Only the scaling experiment is threaded / precision-filtered; leaving
+    // the flags unconsumed elsewhere makes `finish()` reject them loudly
+    // instead of silently ignoring them.
     let threads = if exp == "scaling" { args.usize_or("threads", 4)? } else { 1 };
+    let precision = if exp == "scaling" { precision_flag(args)? } else { None };
     args.finish()?;
     let s = scale();
     let text = match exp.as_str() {
@@ -241,7 +279,8 @@ fn cmd_bench(args: &Args) -> Result<()> {
         "fig2" => experiments::fig2(&s),
         "ablation" => experiments::ablation_rs(&s),
         "tensor" => experiments::tensor_vs_native(s.repeats)?,
-        "scaling" => experiments::scaling(&s, threads),
+        "scaling" => experiments::scaling(&s, threads, precision),
+        "int8" => experiments::int8_tiers(&s),
         other => bail!("unknown experiment '{other}'"),
     };
     experiments::archive(&exp, &text);
@@ -255,7 +294,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let leaves = args.usize_or("leaves", 64)?;
     let kind = EngineKind::from_short(&args.get_or("engine", "RS"))
         .context("bad --engine")?;
-    let precision = if args.switch("quant") { Precision::I16 } else { Precision::F32 };
+    let precision = parse_precision(args)?;
     let n_requests = args.usize_or("requests", 10_000)?;
     let threads = args.usize_or("threads", 1)?;
     let listen = args.get("listen").map(str::to_string);

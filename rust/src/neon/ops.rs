@@ -22,6 +22,12 @@ pub fn vdupq_n_u8(v: u8) -> U8x16 {
     U8x16([v; 16])
 }
 
+/// `DUP Vd.16B, rn` — broadcast an i8 to all 16 lanes.
+#[inline]
+pub fn vdupq_n_s8(v: i8) -> I8x16 {
+    I8x16([v; 16])
+}
+
 /// `DUP Vd.8H, rn` — broadcast an i16 to all 8 lanes.
 #[inline]
 pub fn vdupq_n_s16(v: i16) -> I16x8 {
@@ -56,6 +62,14 @@ pub fn vld1q_f32(p: &[f32]) -> F32x4 {
 #[inline]
 pub fn vld1q_s16(p: &[i16]) -> I16x8 {
     I16x8([p[0], p[1], p[2], p[3], p[4], p[5], p[6], p[7]])
+}
+
+/// `LD1 {Vt.16B}` — load 16 contiguous i8.
+#[inline]
+pub fn vld1q_s8(p: &[i8]) -> I8x16 {
+    let mut out = [0i8; 16];
+    out.copy_from_slice(&p[..16]);
+    I8x16(out)
 }
 
 /// `LD1 {Vt.16B}` — load 16 contiguous u8.
@@ -160,6 +174,17 @@ pub fn vcgtq_s16(a: I16x8, b: I16x8) -> U16x8 {
         out[i] = if a.0[i] > b.0[i] { u16::MAX } else { 0 };
     }
     U16x8(out)
+}
+
+/// `CMGT Vd.16B` — per-lane `a > b` for i8 (the int8 tier's 16-wide split
+/// comparison).
+#[inline]
+pub fn vcgtq_s8(a: I8x16, b: I8x16) -> U8x16 {
+    let mut out = [0u8; 16];
+    for i in 0..16 {
+        out[i] = if a.0[i] > b.0[i] { u8::MAX } else { 0 };
+    }
+    U8x16(out)
 }
 
 /// `CMEQ Vd.16B` — per-lane `a == b` for u8.
@@ -310,6 +335,29 @@ pub fn vaddq_s16(a: I16x8, b: I16x8) -> I16x8 {
     I16x8(out)
 }
 
+/// `ADD Vd.16B` — i8 add (wrapping) — the int8 tier's native 16-lane score
+/// accumulation ([`crate::quant::AccumMode::Native`]).
+#[inline]
+pub fn vaddq_s8(a: I8x16, b: I8x16) -> I8x16 {
+    let mut out = [0i8; 16];
+    for i in 0..16 {
+        out[i] = a.0[i].wrapping_add(b.0[i]);
+    }
+    I8x16(out)
+}
+
+/// `SADDW Vd.8H, Vn.8H, Vm.8B` — widening add: i16 accumulator += i8 half
+/// register, sign-extended. The int8 tier's widened score accumulation
+/// ([`crate::quant::AccumMode::Widened`]).
+#[inline]
+pub fn vaddw_s8(a: I16x8, b: I8x8) -> I16x8 {
+    let mut out = [0i16; 8];
+    for i in 0..8 {
+        out[i] = a.0[i].wrapping_add(b.0[i] as i16);
+    }
+    I16x8(out)
+}
+
 /// `ADD Vd.4S` — i32 add (wrapping).
 #[inline]
 pub fn vaddq_s32(a: I32x4, b: I32x4) -> I32x4 {
@@ -323,6 +371,34 @@ pub fn vaddq_s32(a: I32x4, b: I32x4) -> I32x4 {
 // ---------------------------------------------------------------------------
 // Narrowing / widening / halves (the §5.1 mask-extension chain)
 // ---------------------------------------------------------------------------
+
+/// Low 8 i8 lanes.
+#[inline]
+pub fn vget_low_s8(a: I8x16) -> I8x8 {
+    let mut out = [0i8; 8];
+    out.copy_from_slice(&a.0[..8]);
+    I8x8(out)
+}
+
+/// High 8 i8 lanes.
+#[inline]
+pub fn vget_high_s8(a: I8x16) -> I8x8 {
+    let mut out = [0i8; 8];
+    out.copy_from_slice(&a.0[8..]);
+    I8x8(out)
+}
+
+/// `SSHLL` — sign-extend 8 i8 to 8 i16. Applied to comparison masks
+/// (all-ones/zero) this is the first step of the §5.1-style widening chain
+/// for the int8 tier (i8 mask → i16 → i32 bitvector words).
+#[inline]
+pub fn vmovl_s8(a: I8x8) -> I16x8 {
+    let mut out = [0i16; 8];
+    for i in 0..8 {
+        out[i] = a.0[i] as i16;
+    }
+    I16x8(out)
+}
 
 /// `DUP Vd.1D` (lower half) — low 4 i16 lanes.
 #[inline]
@@ -478,6 +554,12 @@ pub fn vreinterpretq_s16_u16(a: U16x8) -> I16x8 {
     I16x8::from_bytes(a.to_bytes())
 }
 
+/// The u8 compare mask viewed as i8 lanes (for feeding `vmovl_s8`).
+#[inline]
+pub fn vreinterpretq_s8_u8(a: U8x16) -> I8x16 {
+    I8x16::from_bytes(a.to_bytes())
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -579,6 +661,48 @@ mod tests {
     fn wrapping_adds() {
         let r = vaddq_s16(vdupq_n_s16(i16::MAX), vdupq_n_s16(1));
         assert_eq!(r.0[0], i16::MIN);
+        let r = vaddq_s8(vdupq_n_s8(i8::MAX), vdupq_n_s8(1));
+        assert_eq!(r.0[0], i8::MIN);
+    }
+
+    #[test]
+    fn i8_compare_mask() {
+        let a = I8x16([3, -1, 0, 5, 2, 2, -8, 127, 0, 0, 0, 0, 0, 0, 0, 1]);
+        let m = vcgtq_s8(a, vdupq_n_s8(1));
+        assert_eq!(m.0[0], u8::MAX);
+        assert_eq!(m.0[1], 0);
+        assert_eq!(m.0[3], u8::MAX);
+        assert_eq!(m.0[4], u8::MAX);
+        assert_eq!(m.0[6], 0);
+        assert_eq!(m.0[15], 0);
+    }
+
+    #[test]
+    fn widening_mask_chain_s8() {
+        // i8 compare mask -> i16 -> 32-bit masks: the int8-tier analogue of
+        // the §5.1 chain, so a 16-lane compare drives u32 bitvector updates.
+        let m = vcgtq_s8(I8x16([5, 0, 5, 0, 5, 0, 5, 0, 0, 5, 0, 5, 0, 5, 0, 5]), vdupq_n_s8(1));
+        let mi = vreinterpretq_s8_u8(m);
+        let lo16 = vmovl_s8(vget_low_s8(mi));
+        let hi16 = vmovl_s8(vget_high_s8(mi));
+        assert_eq!(lo16.0, [-1, 0, -1, 0, -1, 0, -1, 0]);
+        assert_eq!(hi16.0, [0, -1, 0, -1, 0, -1, 0, -1]);
+        let q0 = vreinterpretq_u32_s32(vmovl_s16(vget_low_s16(lo16)));
+        assert_eq!(q0, U32x4([u32::MAX, 0, u32::MAX, 0]));
+        let q3 = vreinterpretq_u32_s32(vmovl_s16(vget_high_s16(hi16)));
+        assert_eq!(q3, U32x4([0, u32::MAX, 0, u32::MAX]));
+    }
+
+    #[test]
+    fn widening_accumulate_s8() {
+        // SADDW: i16 acc += sign-extended i8 lanes, no i8 wrap possible.
+        let mut acc = vdupq_n_s16(100);
+        for _ in 0..4 {
+            acc = vaddw_s8(acc, vget_low_s8(vdupq_n_s8(120)));
+        }
+        assert_eq!(acc.0[0], 100 + 4 * 120); // 580 — would wrap an i8 acc
+        let acc = vaddw_s8(vdupq_n_s16(0), vget_high_s8(vdupq_n_s8(-5)));
+        assert_eq!(acc.0[7], -5);
     }
 }
 

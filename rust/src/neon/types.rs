@@ -15,6 +15,12 @@
 #[repr(transparent)]
 pub struct U8x16(pub [u8; 16]);
 
+/// 16 × i8 (NEON `int8x16_t`) — the int8 precision tier's comparison lanes
+/// (v = 16 for V-QuickScorer).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+#[repr(transparent)]
+pub struct I8x16(pub [i8; 16]);
+
 /// 8 × i16 (NEON `int16x8_t`).
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
 #[repr(transparent)]
@@ -68,6 +74,12 @@ pub struct I32x2(pub [i32; 2]);
 #[repr(transparent)]
 pub struct U8x8(pub [u8; 8]);
 
+/// 8 × i8 (NEON `int8x8_t`, a D register half) — feeds the i8 → i16
+/// widening moves of the int8 tier.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+#[repr(transparent)]
+pub struct I8x8(pub [i8; 8]);
+
 /// 4 × u16 (NEON `uint16x4_t`, a D register half).
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
 #[repr(transparent)]
@@ -82,6 +94,8 @@ pub struct U32x2(pub [u32; 2]);
 #[allow(non_camel_case_types)]
 pub mod acle {
     pub type uint8x16_t = super::U8x16;
+    pub type int8x16_t = super::I8x16;
+    pub type int8x8_t = super::I8x8;
     pub type int16x8_t = super::I16x8;
     pub type uint16x8_t = super::U16x8;
     pub type int32x4_t = super::I32x4;
@@ -128,6 +142,7 @@ macro_rules! impl_bytes {
 }
 
 impl_bytes!(U8x16, u8, 16);
+impl_bytes!(I8x16, i8, 16);
 impl_bytes!(I16x8, i16, 8);
 impl_bytes!(U16x8, u16, 8);
 impl_bytes!(I32x4, i32, 4);

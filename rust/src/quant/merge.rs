@@ -10,7 +10,7 @@
 use std::collections::HashSet;
 
 use crate::forest::Forest;
-use crate::quant::QForest;
+use crate::quant::{QForest, QuantInt};
 
 /// Fraction of nodes that remain after merging equivalent `(feature,
 /// threshold)` float nodes, i.e. `unique pairs / total nodes`.
@@ -30,9 +30,11 @@ pub fn unique_node_fraction(f: &Forest) -> f64 {
     }
 }
 
-/// Same statistic on the quantized forest (int16 thresholds).
-pub fn unique_node_fraction_quant(qf: &QForest) -> f64 {
-    let mut set: HashSet<(u32, i16)> = HashSet::new();
+/// Same statistic on a quantized forest — any storage tier. Collapse is
+/// more aggressive at 8 bits (fewer representable thresholds), amplifying
+/// Table 4's effect.
+pub fn unique_node_fraction_quant<S: QuantInt>(qf: &QForest<S>) -> f64 {
+    let mut set: HashSet<(u32, S)> = HashSet::new();
     let mut total = 0usize;
     for t in &qf.trees {
         for (&f, &thr) in t.features.iter().zip(&t.thresholds) {
@@ -110,6 +112,22 @@ mod tests {
         let u = unique_node_fraction(&f);
         let uq = unique_node_fraction_quant(&qf);
         assert!(uq < 0.75 * u, "expected collapse: float {u}, quant {uq}");
+    }
+
+    #[test]
+    fn i8_collapses_at_least_as_much_as_i16() {
+        // 8-bit thresholds have 256 representable values: merging can only
+        // increase vs the i16 tier (Table 4's effect amplified).
+        for id in [DatasetId::Eeg, DatasetId::Magic] {
+            let ds = id.generate(900, 11);
+            let f = rf(&ds, 12, 9);
+            let qf16 = QForest::from_forest(&f, crate::quant::choose_scale(&f, 1.0));
+            let qf8 =
+                QForest::<i8>::from_forest(&f, crate::quant::choose_scale_i8(&f, 1.0));
+            let u16v = unique_node_fraction_quant(&qf16);
+            let u8v = unique_node_fraction_quant(&qf8);
+            assert!(u8v <= u16v + 1e-12, "{}: i8 {u8v} vs i16 {u16v}", id.name());
+        }
     }
 
     #[test]

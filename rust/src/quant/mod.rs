@@ -1,4 +1,5 @@
-//! Fixed-point quantization of tree ensembles (paper §5).
+//! Fixed-point quantization of tree ensembles (paper §5) — the precision-tier
+//! subsystem.
 //!
 //! Quantization maps floats to integers via `q(x) = ⌊s·x⌋` (eq. 3) with a
 //! positive scale `s`, applied to split thresholds, leaf values, and — at
@@ -8,38 +9,153 @@
 //! parallelism: 8 int16 comparisons per NEON register instead of 4 float32
 //! (§5.1).
 //!
-//! Scale selection (§5): `s ∈ [M, 2^B]`. The lower bound keeps RF leaf
-//! probabilities (already scaled by 1/M) from flushing to zero; the upper
-//! bound is representability. We additionally bound `s` so the *accumulated*
-//! score cannot overflow an i16 accumulator — the paper's V-QuickScorer adds
-//! scores with 8-lane 16-bit adds, so the whole forest sum must fit i16.
+//! This module generalizes that analysis into **precision tiers**: the
+//! storage integer is a type parameter ([`QuantInt`], implemented for `i16`
+//! and `i8`), so [`QuantConfig`], [`QForest`] and [`QTree`] describe both
+//! the paper's int16 tier and an int8 tier that doubles lane parallelism
+//! again (16 comparisons per register, v = 16 for V-QuickScorer) and halves
+//! model bytes once more — the direction integer-only inference systems
+//! (InTreeger, FLInt) push further.
+//!
+//! # Scale selection (§5, redone per accumulator width)
+//!
+//! `s ∈ [M, S::MAX]`. The lower bound keeps RF leaf probabilities (already
+//! scaled by 1/M) from flushing to zero. The upper bound is
+//! *representability*: the largest scale for which `q` does not saturate
+//! in-range inputs is `S::MAX` itself (32767 / 127), **not** `2^B` — the
+//! paper's `s = 2^15` saturates `q(x)` at `|x| ≥ 1.0` because
+//! `⌊2^15 · 1.0⌋ = 32768 > i16::MAX`. [`choose_scale`] therefore caps at
+//! `i16::MAX`; [`QuantConfig::paper_default`] keeps the paper's constant and
+//! documents the saturation.
+//!
+//! We additionally bound `s` so the *accumulated* score cannot overflow the
+//! engines' SIMD accumulator ([`max_safe_scale_with`]):
+//!
+//! * **int16 tier**: V-QuickScorer adds scores with 8-lane 16-bit adds
+//!   (`vaddq_s16`), so the whole forest sum must fit i16.
+//! * **int8 tier**: a pure 8-bit accumulator (`vaddq_s8`, 16 lanes) holds at
+//!   most ±127, which the worst-case sum of an M-tree forest rarely fits at
+//!   a usable scale. [`choose_scale_i8`] first tries the native 8-bit
+//!   budget; where the worst-case sum cannot fit i8, the engines *widen*
+//!   accumulation i8→i16 (`vaddw_s8`, two registers instead of one —
+//!   [`AccumMode::Widened`]) and only the i16 accumulator bound applies.
+//!   Storage payloads (thresholds, leaves, quantized base) must still fit i8
+//!   individually.
+//!
+//! The accumulator budget reserves `M + 1` counts of slack: `⌊s·x⌋` can
+//! overshoot `s·|x|` by up to 1 for negative `x`, once per tree plus the
+//! base score.
 
 pub mod merge;
 
+use std::marker::PhantomData;
+
 use crate::forest::{Forest, Task, Tree};
 
-/// Fixed-point configuration.
-#[derive(Debug, Clone, Copy, PartialEq)]
-pub struct QuantConfig {
-    /// The scale constant `s` in `q(x) = ⌊s·x⌋`.
-    pub scale: f32,
+/// A fixed-point storage integer — the scalar the quantized engines compare
+/// and store. Implemented for `i16` (the paper's tier, v = 8) and `i8`
+/// (v = 16).
+pub trait QuantInt:
+    Copy
+    + Default
+    + PartialEq
+    + Eq
+    + PartialOrd
+    + Ord
+    + std::hash::Hash
+    + std::fmt::Debug
+    + Send
+    + Sync
+    + 'static
+{
+    /// Storage width in bits (16 or 8).
+    const BITS: u32;
+    /// Largest representable value, as f32 (i16: 32767, i8: 127).
+    const MAX_F: f32;
+    /// Smallest representable value, as f32 (i16: -32768, i8: -128).
+    const MIN_F: f32;
+    /// Engine-name prefix for this tier (`q` = int16, `q8` = int8).
+    const ENGINE_PREFIX: &'static str;
+
+    /// Saturating `⌊v⌋`: NaN → 0, out-of-range → MIN/MAX. This is the one
+    /// place eq. 3 meets finite storage; every quantization path (thresholds,
+    /// leaves, features, base score) must go through it.
+    fn from_f32_sat(v: f32) -> Self;
+
+    /// Widen into the i32 accumulation/descale domain.
+    fn to_i32(self) -> i32;
 }
 
-impl QuantConfig {
-    /// The paper's default for normalized features: `s = 2^15`.
-    pub fn paper_default() -> QuantConfig {
-        QuantConfig { scale: 32768.0 }
+impl QuantInt for i16 {
+    const BITS: u32 = 16;
+    const MAX_F: f32 = i16::MAX as f32;
+    const MIN_F: f32 = i16::MIN as f32;
+    const ENGINE_PREFIX: &'static str = "q";
+
+    #[inline]
+    fn from_f32_sat(v: f32) -> i16 {
+        // `as` saturates at the bounds and maps NaN to 0 (Rust guarantees).
+        v.floor() as i16
     }
 
-    /// Quantize one value to i16 with saturation.
     #[inline]
-    pub fn q(&self, x: f32) -> i16 {
-        let v = (self.scale * x).floor();
-        v.clamp(i16::MIN as f32, i16::MAX as f32) as i16
+    fn to_i32(self) -> i32 {
+        self as i32
+    }
+}
+
+impl QuantInt for i8 {
+    const BITS: u32 = 8;
+    const MAX_F: f32 = i8::MAX as f32;
+    const MIN_F: f32 = i8::MIN as f32;
+    const ENGINE_PREFIX: &'static str = "q8";
+
+    #[inline]
+    fn from_f32_sat(v: f32) -> i8 {
+        v.floor() as i8
+    }
+
+    #[inline]
+    fn to_i32(self) -> i32 {
+        self as i32
+    }
+}
+
+/// Fixed-point configuration for one storage tier.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct QuantConfig<S: QuantInt = i16> {
+    /// The scale constant `s` in `q(x) = ⌊s·x⌋`.
+    pub scale: f32,
+    _storage: PhantomData<S>,
+}
+
+impl<S: QuantInt> QuantConfig<S> {
+    pub fn new(scale: f32) -> QuantConfig<S> {
+        QuantConfig { scale, _storage: PhantomData }
+    }
+
+    /// Quantize one value with saturation (NaN → 0).
+    #[inline]
+    pub fn q(&self, x: f32) -> S {
+        S::from_f32_sat(self.scale * x)
+    }
+
+    /// Quantize into the i32 descale domain — the base-score path. Same
+    /// floor and NaN → 0 semantics as [`QuantConfig::q`], but saturating at
+    /// half the i32 range instead of the storage width: the base score only
+    /// ever participates in i32 accumulation (it is not stored in `S`), and
+    /// the ±`i32::MAX/2` headroom guarantees base + any forest sum
+    /// (|Σ| ≤ M·S::MAX < 2^30 for M ≤ 32768 trees) cannot overflow i32 —
+    /// unlike the old bare `floor() as i32` cast, which could saturate at
+    /// `i32::MAX` and then wrap when leaf values were added.
+    #[inline]
+    pub fn q_i32(&self, x: f32) -> i32 {
+        let cap = (i32::MAX as f32) / 2.0;
+        (self.scale * x).floor().clamp(-cap, cap) as i32
     }
 
     /// Quantize a feature row/batch.
-    pub fn q_slice(&self, xs: &[f32], out: &mut Vec<i16>) {
+    pub fn q_slice(&self, xs: &[f32], out: &mut Vec<S>) {
         out.clear();
         out.extend(xs.iter().map(|&x| self.q(x)));
     }
@@ -51,8 +167,18 @@ impl QuantConfig {
     }
 }
 
+impl QuantConfig {
+    /// The paper's default for normalized features: `s = 2^15`. Note that at
+    /// this scale `q(x)` saturates for `|x| ≥ 1.0` (`⌊2^15·1.0⌋ = 32768 >
+    /// i16::MAX`); [`choose_scale`] caps at `i16::MAX` so a chosen scale
+    /// never silently saturates in-range inputs.
+    pub fn paper_default() -> QuantConfig {
+        QuantConfig::new(32768.0)
+    }
+}
+
 /// Which parts of the forest are quantized — Table 3 evaluates all four
-/// combinations of {float, int16} splits × leaves.
+/// combinations of {float, int} splits × leaves.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub struct QuantParts {
     pub splits: bool,
@@ -66,34 +192,56 @@ impl QuantParts {
     pub const NONE: QuantParts = QuantParts { splits: false, leaves: false };
 }
 
-/// A fully int16-quantized forest (thresholds and leaf values), preserving
+/// How an int8 engine accumulates per-tree scores (§5 redone for 8-bit
+/// accumulators).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum AccumMode {
+    /// The worst-case forest sum provably fits the storage-width
+    /// accumulator: 16 adds per register (`vaddq_s8`).
+    Native,
+    /// The sum can exceed i8: lanes widen i8 → i16 before accumulation
+    /// (`vaddw_s8`), costing two accumulator registers instead of one.
+    Widened,
+}
+
+impl AccumMode {
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            AccumMode::Native => "native",
+            AccumMode::Widened => "widened",
+        }
+    }
+}
+
+/// A fully quantized forest (thresholds and leaf values in `S`), preserving
 /// the float forest's topology. This is the model format the quantized
-/// engines (qNA/qIE/qQS/qVQS/qRS) consume.
+/// engines (qNA/qIE/qQS/qVQS/qRS and the q8 tier) consume.
 #[derive(Debug, Clone, PartialEq)]
-pub struct QForest {
-    pub trees: Vec<QTree>,
+pub struct QForest<S: QuantInt = i16> {
+    pub trees: Vec<QTree<S>>,
     pub n_features: usize,
     pub n_classes: usize,
     pub task: Task,
-    /// Quantized base score (i32 — it participates in the i32 descale path).
+    /// Quantized base score (i32 — it participates in the i32 descale path,
+    /// never stored in `S`), via the saturating [`QuantConfig::q_i32`].
     pub base_score: Vec<i32>,
-    pub config: QuantConfig,
+    pub config: QuantConfig<S>,
 }
 
-/// One quantized tree: same `Child` topology as [`Tree`], int16 payloads.
+/// One quantized tree: same `Child` topology as [`Tree`], integer payloads.
 #[derive(Debug, Clone, PartialEq)]
-pub struct QTree {
+pub struct QTree<S: QuantInt = i16> {
     pub features: Vec<u32>,
-    pub thresholds: Vec<i16>,
+    pub thresholds: Vec<S>,
     pub left: Vec<crate::forest::Child>,
     pub right: Vec<crate::forest::Child>,
-    pub leaf_values: Vec<i16>,
+    pub leaf_values: Vec<S>,
     pub n_leaves: usize,
 }
 
-impl QForest {
+impl<S: QuantInt> QForest<S> {
     /// Quantize a forest with the given scale.
-    pub fn from_forest(f: &Forest, config: QuantConfig) -> QForest {
+    pub fn from_forest(f: &Forest, config: QuantConfig<S>) -> QForest<S> {
         let trees = f
             .trees
             .iter()
@@ -111,7 +259,7 @@ impl QForest {
             n_features: f.n_features,
             n_classes: f.n_classes,
             task: f.task,
-            base_score: f.base_score.iter().map(|&v| (config.scale * v).floor() as i32).collect(),
+            base_score: f.base_score.iter().map(|&v| config.q_i32(v)).collect(),
             config,
         }
     }
@@ -134,7 +282,7 @@ impl QForest {
             for t in &self.trees {
                 let leaf = t.exit_leaf_q(&qx);
                 for j in 0..c {
-                    acc[j] += t.leaf_values[leaf * c + j] as i32;
+                    acc[j] += t.leaf_values[leaf * c + j].to_i32();
                 }
             }
             for j in 0..c {
@@ -148,11 +296,46 @@ impl QForest {
     pub fn max_leaves(&self) -> usize {
         self.trees.iter().map(|t| t.n_leaves).max().unwrap_or(1)
     }
+
+    /// Worst-case |accumulated score| before descaling, from the *quantized*
+    /// payloads (exact, unlike the float analysis in
+    /// [`max_safe_scale_with`]): max over classes of |base| + Σ_trees
+    /// max_leaf |v|.
+    pub fn worst_abs_acc(&self) -> i64 {
+        let c = self.n_classes;
+        (0..c)
+            .map(|j| {
+                let mut w = (self.base_score[j] as i64).abs();
+                for t in &self.trees {
+                    let mx = (0..t.n_leaves)
+                        .map(|l| (t.leaf_values[l * c + j].to_i32() as i64).abs())
+                        .max()
+                        .unwrap_or(0);
+                    w += mx;
+                }
+                w
+            })
+            .max()
+            .unwrap_or(0)
+    }
 }
 
-impl QTree {
+impl QForest<i8> {
+    /// Whether the int8 engines can accumulate natively in i8 or must widen
+    /// to i16 — decided from the quantized model itself, so the choice is
+    /// exact rather than an estimate.
+    pub fn accum_mode(&self) -> AccumMode {
+        if self.worst_abs_acc() <= i8::MAX as i64 {
+            AccumMode::Native
+        } else {
+            AccumMode::Widened
+        }
+    }
+}
+
+impl<S: QuantInt> QTree<S> {
     /// Walk with already-quantized features (split is `q(x) <= q(t)`).
-    pub fn exit_leaf_q(&self, qx: &[i16]) -> usize {
+    pub fn exit_leaf_q(&self, qx: &[S]) -> usize {
         use crate::forest::Child;
         if self.features.is_empty() {
             return 0;
@@ -176,27 +359,45 @@ impl QTree {
 
 /// Evaluate accuracy under a partial quantization (Table 3): splits and/or
 /// leaves quantized, naive traversal. Float features are quantized only for
-/// the split comparison when `parts.splits` is set.
-pub fn accuracy_with_parts(
+/// the split comparison when `parts.splits` is set. Thresholds are
+/// pre-quantized once per call, not re-quantized per node visit.
+pub fn accuracy_with_parts<S: QuantInt>(
     f: &Forest,
-    config: QuantConfig,
+    config: QuantConfig<S>,
     parts: QuantParts,
     x: &[f32],
     labels: &[u32],
 ) -> f64 {
     let n = labels.len();
     let c = f.n_classes;
+    // Hoisted threshold quantization (one pass over the forest instead of
+    // one `q` per node *visit*).
+    let qthresholds: Vec<Vec<S>> = if parts.splits {
+        f.trees
+            .iter()
+            .map(|t| t.nodes.iter().map(|nd| config.q(nd.threshold)).collect())
+            .collect()
+    } else {
+        Vec::new()
+    };
     let mut correct = 0usize;
     let mut qx = Vec::new();
     for i in 0..n {
         let row = &x[i * f.n_features..(i + 1) * f.n_features];
-        config.q_slice(row, &mut qx);
+        if parts.splits {
+            config.q_slice(row, &mut qx);
+        }
         let mut scores = vec![0f64; c];
-        for t in &f.trees {
-            let leaf = exit_leaf_parts(t, row, &qx, config, parts.splits);
+        for (ti, t) in f.trees.iter().enumerate() {
+            let qth = if parts.splits { Some(qthresholds[ti].as_slice()) } else { None };
+            let leaf = exit_leaf_parts(t, row, &qx, qth);
             for j in 0..c {
                 let v = t.leaf_values[leaf * c + j];
-                scores[j] += if parts.leaves { config.q(v) as f64 / config.scale as f64 } else { v as f64 };
+                scores[j] += if parts.leaves {
+                    config.q(v).to_i32() as f64 / config.scale as f64
+                } else {
+                    v as f64
+                };
             }
         }
         let mut best = 0usize;
@@ -212,13 +413,9 @@ pub fn accuracy_with_parts(
     correct as f64 / n as f64
 }
 
-fn exit_leaf_parts(
-    t: &Tree,
-    row: &[f32],
-    qrow: &[i16],
-    config: QuantConfig,
-    quant_splits: bool,
-) -> usize {
+/// Walk one tree with optional pre-quantized thresholds (`qth` set iff
+/// splits are quantized; then `qrow` holds the quantized features).
+fn exit_leaf_parts<S: QuantInt>(t: &Tree, row: &[f32], qrow: &[S], qth: Option<&[S]>) -> usize {
     use crate::forest::Child;
     if t.nodes.is_empty() {
         return 0;
@@ -228,45 +425,99 @@ fn exit_leaf_parts(
         match cur {
             Child::Leaf(l) => return l as usize,
             Child::Inner(i) => {
-                let n = &t.nodes[i as usize];
-                let go_left = if quant_splits {
-                    qrow[n.feature as usize] <= config.q(n.threshold)
-                } else {
-                    row[n.feature as usize] <= n.threshold
+                let i = i as usize;
+                let nd = &t.nodes[i];
+                let go_left = match qth {
+                    Some(qt) => qrow[nd.feature as usize] <= qt[i],
+                    None => row[nd.feature as usize] <= nd.threshold,
                 };
-                cur = if go_left { n.left } else { n.right };
+                cur = if go_left { nd.left } else { nd.right };
             }
         }
     }
 }
 
-/// The largest scale for which the quantized engines' 16-bit SIMD score
-/// accumulation (§5.1: `vaddq_s16`, 8 values at once) provably cannot wrap:
-/// `i16::MAX / (|base| + Σ_trees max_leaf |v|)`, also bounding thresholds by
-/// the feature range. Scales above this are *representable* but an
-/// adversarial instance can overflow the i16 accumulator — exactly as it
-/// would on the paper's hardware.
-pub fn max_safe_scale(f: &Forest, max_abs_feature: f32) -> f32 {
-    // Worst-case |score|: base + Σ_trees max_leaf |v|.
-    let mut worst: f32 = f.base_score.iter().map(|v| v.abs()).fold(0.0, f32::max);
+/// The largest scale for which (a) every stored payload fits the storage
+/// width (`storage_max`) and (b) the engines' SIMD score accumulation
+/// cannot wrap an accumulator holding at most `acc_max`:
+///
+/// * thresholds: `s ≤ storage_max / max_abs_feature`;
+/// * individual leaf values: `s ≤ storage_max / max|v|` (binding when the
+///   accumulator is wider than storage — the widened i8 tier). The base
+///   score is *not* stored in `S` (it lives in the i32 descale path via
+///   [`QuantConfig::q_i32`]), so it does not constrain storage;
+/// * accumulated score: `s·(|base| + Σ_trees max_leaf |v|) + M + 1 ≤
+///   acc_max` — the `M + 1` slack covers the ⌊·⌋ overshoot of up to one
+///   count per negative term. (Including the base here is conservative:
+///   the engines add it in i32, outside the narrow SIMD accumulator.)
+///
+/// Scales above this are *representable* but an adversarial instance can
+/// overflow the accumulator — exactly as it would on the paper's hardware.
+pub fn max_safe_scale_with(
+    f: &Forest,
+    max_abs_feature: f32,
+    storage_max: f32,
+    acc_max: f32,
+) -> f32 {
+    let max_base: f32 = f.base_score.iter().map(|v| v.abs()).fold(0.0, f32::max);
+    let mut worst: f32 = max_base;
+    let mut max_value: f32 = 0.0;
     for t in &f.trees {
         let mx = t.leaf_values.iter().map(|v| v.abs()).fold(0f32, f32::max);
         worst += mx;
+        max_value = max_value.max(mx);
     }
-    let bound_scores = if worst > 0.0 { (i16::MAX as f32) / worst } else { f32::INFINITY };
+    let slack = (f.n_trees() + 1) as f32;
+    let bound_acc =
+        if worst > 0.0 { (acc_max - slack).max(1.0) / worst } else { f32::INFINITY };
     let bound_thresholds =
-        if max_abs_feature > 0.0 { (i16::MAX as f32) / max_abs_feature } else { f32::INFINITY };
-    bound_scores.min(bound_thresholds)
+        if max_abs_feature > 0.0 { storage_max / max_abs_feature } else { f32::INFINITY };
+    let bound_values = if max_value > 0.0 { storage_max / max_value } else { f32::INFINITY };
+    bound_acc.min(bound_thresholds).min(bound_values)
 }
 
-/// Choose a scale for a forest per §5: as large as possible within
-/// `[M, 2^15]` while guaranteeing (a) thresholds fit i16 given the feature
-/// range `max_abs_feature`, and (b) the worst-case accumulated score fits an
-/// i16 SIMD accumulator (V-QuickScorer adds scores with 16-bit lanes).
+/// [`max_safe_scale_with`] for the paper's int16 tier: i16 storage, i16 SIMD
+/// accumulation (§5.1: `vaddq_s16`, 8 values at once).
+pub fn max_safe_scale(f: &Forest, max_abs_feature: f32) -> f32 {
+    max_safe_scale_with(f, max_abs_feature, i16::MAX as f32, i16::MAX as f32)
+}
+
+/// Choose an int16 scale for a forest per §5: as large as possible within
+/// `[M, i16::MAX]` while guaranteeing (a) thresholds fit i16 given the
+/// feature range `max_abs_feature`, and (b) the worst-case accumulated score
+/// fits an i16 SIMD accumulator. The representability cap is `i16::MAX`
+/// (32767), **not** the paper's 2^15: a scale of 32768 silently saturates
+/// `q(1.0)`.
 pub fn choose_scale(f: &Forest, max_abs_feature: f32) -> QuantConfig {
     let m = f.n_trees().max(1) as f32;
-    let s = max_safe_scale(f, max_abs_feature).min(32768.0).max(m);
-    QuantConfig { scale: s }
+    let s = max_safe_scale(f, max_abs_feature).min(i16::MAX as f32).max(m);
+    QuantConfig::new(s)
+}
+
+/// Choose an int8 scale (§5 redone for 8-bit storage): prefer a scale whose
+/// worst-case sum fits a *native* i8 accumulator; where that would push the
+/// scale below the leaf-preserving lower bound `M`, fall back to the i16
+/// accumulator budget and let the engines widen accumulation i8 → i16
+/// ([`AccumMode::Widened`], decided per-model by [`QForest::accum_mode`]).
+///
+/// The lower bound `M` never overrides *storage* safety: a scale that
+/// saturates thresholds or leaves destroys score ordering, which is
+/// strictly worse than coarse leaves, so the per-value storage bound is a
+/// hard ceiling (relevant for GBT-like forests whose leaf magnitudes
+/// exceed `127/M`).
+pub fn choose_scale_i8(f: &Forest, max_abs_feature: f32) -> QuantConfig<i8> {
+    let m = (f.n_trees().max(1) as f32).min(i8::MAX as f32);
+    // Per-value storage bound alone (no accumulator constraint).
+    let storage = max_safe_scale_with(f, max_abs_feature, i8::MAX as f32, f32::INFINITY)
+        .min(i8::MAX as f32);
+    let native = max_safe_scale_with(f, max_abs_feature, i8::MAX as f32, i8::MAX as f32);
+    let widened = max_safe_scale_with(f, max_abs_feature, i8::MAX as f32, i16::MAX as f32);
+    let preferred = if native >= m { native } else { widened };
+    // The leaf-preserving floor M, then the hard ceilings: representability,
+    // per-value storage, and the widened i16 accumulator budget (for very
+    // large forests, M ≥ ~128, the floor could otherwise exceed it and the
+    // engines' i16 accumulation would wrap against the i32 reference).
+    QuantConfig::new(preferred.max(m).min(i8::MAX as f32).min(storage).min(widened))
 }
 
 #[cfg(test)]
@@ -291,9 +542,20 @@ mod tests {
         (f, ds)
     }
 
+    /// A forest with explicit base score and one constant tree per value.
+    fn leaf_forest(base: Vec<f32>, leaves: &[f32]) -> Forest {
+        let c = base.len();
+        let mut f = Forest::new(2, c, Task::Ranking);
+        f.base_score = base;
+        for &v in leaves {
+            f.trees.push(Tree::leaf(vec![v; c]));
+        }
+        f
+    }
+
     #[test]
     fn q_floor_semantics() {
-        let c = QuantConfig { scale: 8.0 };
+        let c: QuantConfig = QuantConfig::new(8.0);
         assert_eq!(c.q(0.99), 7); // floor(7.92)
         assert_eq!(c.q(1.0), 8);
         assert_eq!(c.q(-0.1), -1); // floor(-0.8) = -1
@@ -305,6 +567,62 @@ mod tests {
         let c = QuantConfig::paper_default();
         assert_eq!(c.q(2.0), i16::MAX);
         assert_eq!(c.q(-2.0), i16::MIN);
+        assert_eq!(c.q(f32::NAN), 0);
+    }
+
+    #[test]
+    fn q_i8_semantics() {
+        let c: QuantConfig<i8> = QuantConfig::new(8.0);
+        assert_eq!(c.q(0.99), 7i8);
+        assert_eq!(c.q(-0.1), -1i8);
+        assert_eq!(c.q(100.0), i8::MAX);
+        assert_eq!(c.q(-100.0), i8::MIN);
+        assert_eq!(c.q(f32::NAN), 0i8);
+    }
+
+    /// Regression (saturation bug #1): the representable-scale cap is
+    /// i16::MAX = 32767, not 2^15 = 32768 — at the old cap `q(1.0)`
+    /// silently saturated and `dq(q(1.0))` lost exactness.
+    #[test]
+    fn choose_scale_never_saturates_in_range_inputs() {
+        // Tiny payloads so the representability cap (not the accumulator
+        // bound) is what binds.
+        let f = leaf_forest(vec![0.0], &[0.001]);
+        let cfg = choose_scale(&f, 1.0);
+        assert_eq!(cfg.scale, i16::MAX as f32, "cap must bind at 32767");
+        // q(1.0) is exactly representable — no clamp involved.
+        assert_eq!(cfg.q(1.0), i16::MAX);
+        assert_eq!(cfg.dq(cfg.q(1.0) as i32), 1.0);
+        // ... whereas the paper's 2^15 scale saturates there.
+        let paper = QuantConfig::paper_default();
+        assert!(paper.dq(paper.q(1.0) as i32) < 1.0);
+        // Every in-range input stays strictly inside the clamp bounds.
+        for x in [-1.0f32, -0.5, 0.0, 0.5, 0.999, 1.0] {
+            let v = cfg.scale * x;
+            assert!(v >= i16::MIN as f32 && v <= i16::MAX as f32, "{x} saturates");
+        }
+    }
+
+    /// Regression (saturation bug #2): base_score goes through the shared
+    /// saturating helper — NaN → 0 like `QuantConfig::q`, saturation at
+    /// half the i32 range (not `i32::MAX`, where adding leaf values would
+    /// wrap; not the storage width, which would shift legitimately large
+    /// finite bases).
+    #[test]
+    fn base_score_quantization_is_saturating_and_headroomed() {
+        let f = leaf_forest(vec![f32::NAN, 1e10, -1e10], &[0.0]);
+        let qf = QForest::from_forest(&f, QuantConfig::paper_default());
+        let cap = ((i32::MAX as f32) / 2.0) as i32;
+        assert_eq!(qf.base_score, vec![0, cap, -cap]);
+        // The descale path stays finite and the i32 accumulation cannot
+        // wrap even with worst-case leaf sums on top.
+        let scores = qf.predict_batch(&[0.25, 0.5]);
+        assert!(scores.iter().all(|v| v.is_finite()));
+        // Finite large bases keep their exact quantized value (no storage
+        // clamp): base 2.0 at s = 2^15 is 65536, well beyond i16::MAX.
+        let f2 = leaf_forest(vec![2.0], &[0.0]);
+        let qf2 = QForest::from_forest(&f2, QuantConfig::paper_default());
+        assert_eq!(qf2.base_score, vec![65536]);
     }
 
     #[test]
@@ -341,14 +659,110 @@ mod tests {
     }
 
     #[test]
+    fn accuracy_i8_tier_usable() {
+        let (f, ds) = trained();
+        let cfg = choose_scale_i8(&f, 1.0);
+        let a_float = f.accuracy(&ds.x, &ds.labels);
+        let a_q8 = accuracy_with_parts(&f, cfg, QuantParts::BOTH, &ds.x, &ds.labels);
+        assert!((a_float - a_q8).abs() < 0.15, "float {a_float} vs int8 {a_q8}");
+    }
+
+    #[test]
     fn choose_scale_bounds() {
         let (f, _) = trained();
         let cfg = choose_scale(&f, 1.0);
         assert!(cfg.scale >= f.n_trees() as f32);
-        assert!(cfg.scale <= 32768.0);
+        assert!(cfg.scale <= i16::MAX as f32);
         // RF leaves are probs/M; worst total <= 1+eps so score bound allows
         // a large scale.
         assert!(cfg.scale > 1024.0, "scale {}", cfg.scale);
+    }
+
+    #[test]
+    fn choose_scale_i8_bounds_and_native_mode() {
+        let (f, _) = trained();
+        let cfg = choose_scale_i8(&f, 1.0);
+        assert!(cfg.scale >= f.n_trees() as f32, "scale {}", cfg.scale);
+        assert!(cfg.scale <= i8::MAX as f32, "scale {}", cfg.scale);
+        // RF worst-case sum ≈ 1.0: the native 8-bit budget suffices and the
+        // quantized sums provably fit i8.
+        let qf = QForest::<i8>::from_forest(&f, cfg);
+        assert_eq!(qf.accum_mode(), AccumMode::Native);
+        assert!(qf.worst_abs_acc() <= i8::MAX as i64, "worst {}", qf.worst_abs_acc());
+    }
+
+    #[test]
+    fn choose_scale_i8_widens_when_sum_exceeds_i8() {
+        // 10 constant trees of 3.0: worst sum = 30, so a native i8 budget
+        // would force the scale below M = 10 — the tier must widen instead.
+        let f = leaf_forest(vec![0.0], &[3.0; 10]);
+        let cfg = choose_scale_i8(&f, 1.0);
+        assert!(cfg.scale >= 10.0, "scale {} below leaf-preserving bound", cfg.scale);
+        let qf = QForest::<i8>::from_forest(&f, cfg);
+        assert_eq!(qf.accum_mode(), AccumMode::Widened);
+        // Individual payloads still fit i8 storage: the stored value is the
+        // unclamped floor, not a saturated one.
+        let expect = (cfg.scale * 3.0).floor();
+        assert!(expect <= i8::MAX as f32, "scale violates the storage bound");
+        assert!(qf
+            .trees
+            .iter()
+            .all(|t| t.leaf_values.iter().all(|&v| v as f32 == expect)));
+        // ... and the widened i16 accumulator holds the worst-case sum.
+        assert!(qf.worst_abs_acc() <= i16::MAX as i64);
+    }
+
+    /// Regression (review finding): the base score is never stored in `S`
+    /// (it lives in the i32 descale path), so it must not cap the storage
+    /// bound — only leaf magnitudes and the feature range do.
+    #[test]
+    fn base_score_does_not_cap_the_storage_bound() {
+        let f = leaf_forest(vec![5.0], &[0.1; 50]);
+        let cfg = choose_scale_i8(&f, 1.0);
+        // Old behavior capped at 127/5 = 25.4; the leaf bound allows 127.
+        assert!(cfg.scale >= 100.0, "scale {} capped by the unstored base", cfg.scale);
+        let qf = QForest::<i8>::from_forest(&f, cfg);
+        assert!(qf.trees.iter().all(|t| t.leaf_values.iter().all(|&v| v < i8::MAX)));
+        // Accumulation stays wrap-free: quantized base + leaf sums fit i16.
+        assert!(qf.worst_abs_acc() <= i16::MAX as i64);
+    }
+
+    /// Regression (review finding): the leaf-preserving floor `M` must not
+    /// lift the i8 scale above the *widened i16 accumulator* budget — on a
+    /// 300-tree forest the floor (min(M, 127) = 127) exceeds
+    /// `(32767 - 301)/300 ≈ 108`, and the engines' wrapping i16
+    /// accumulation would diverge from the i32 reference.
+    #[test]
+    fn choose_scale_i8_respects_widened_accumulator_for_huge_forests() {
+        let f = leaf_forest(vec![0.0], &[1.0; 300]);
+        let cfg = choose_scale_i8(&f, 1.0);
+        let qf = QForest::<i8>::from_forest(&f, cfg);
+        assert_eq!(qf.accum_mode(), AccumMode::Widened);
+        assert!(
+            qf.worst_abs_acc() <= i16::MAX as i64,
+            "worst {} wraps the widened accumulator (scale {})",
+            qf.worst_abs_acc(),
+            cfg.scale
+        );
+    }
+
+    /// Regression (review finding): the leaf-preserving floor `M` must not
+    /// lift the i8 scale above the per-value storage bound — on a GBT-like
+    /// forest (M = 50 trees, |leaf| up to 5.0) the old `.max(M)` forced
+    /// s = 50 and saturated every leaf (`⌊250⌋ → 127`), silently destroying
+    /// score ordering.
+    #[test]
+    fn choose_scale_i8_storage_bound_beats_leaf_floor() {
+        let f = leaf_forest(vec![0.0], &[5.0; 50]);
+        let cfg = choose_scale_i8(&f, 1.0);
+        assert!(cfg.scale <= 127.0 / 5.0 + 1e-3, "scale {}", cfg.scale);
+        let qf = QForest::<i8>::from_forest(&f, cfg);
+        let expect = (cfg.scale * 5.0).floor();
+        assert!(expect <= i8::MAX as f32);
+        assert!(qf
+            .trees
+            .iter()
+            .all(|t| t.leaf_values.iter().all(|&v| v as f32 == expect)));
     }
 
     #[test]
@@ -356,7 +770,9 @@ mod tests {
         let (f, ds) = trained();
         let cfg = choose_scale(&f, 1.0);
         let qf = QForest::from_forest(&f, cfg);
-        // Accumulate worst-case per-instance scores and check i16 range.
+        // The exact worst-case bound implies every instance fits.
+        assert!(qf.worst_abs_acc() <= i16::MAX as i64);
+        // Accumulate per-instance scores and check i16 range empirically.
         for i in 0..64 {
             let row = &ds.x[i * ds.d..(i + 1) * ds.d];
             let mut qx = Vec::new();
@@ -372,5 +788,21 @@ mod tests {
                 assert!(a >= i16::MIN as i32 && a <= i16::MAX as i32, "overflow {a}");
             }
         }
+    }
+
+    #[test]
+    fn i8_qforest_reference_runs() {
+        let (f, ds) = trained();
+        let cfg = choose_scale_i8(&f, 1.0);
+        let qf = QForest::<i8>::from_forest(&f, cfg);
+        let scores = qf.predict_batch(&ds.x[..ds.d * 32]);
+        assert_eq!(scores.len(), 32 * qf.n_classes);
+        assert!(scores.iter().all(|v| v.is_finite()));
+        // Same argmax as float on most rows (coarse sanity, not exactness).
+        let float_scores = f.predict_batch(&ds.x[..ds.d * 32]);
+        let a = Forest::argmax(&scores, qf.n_classes);
+        let b = Forest::argmax(&float_scores, f.n_classes);
+        let agree = a.iter().zip(&b).filter(|(x, y)| x == y).count();
+        assert!(agree >= 24, "only {agree}/32 argmax agreements");
     }
 }

@@ -132,12 +132,18 @@ fn auto_deploy_serves_correct_scores() {
         .deploy_auto("auto", &f, &ds.x[..ds.d * 64], BatchConfig::default())
         .unwrap();
     assert!(!sel.candidates.is_empty());
-    let want = f.predict_batch(ds.row(5));
-    let got = server.predict("auto", ds.row(5).to_vec()).unwrap();
-    // Auto may choose a quantized engine; scores must still rank identically.
-    let wa = Forest::argmax(&want, f.n_classes);
-    let ga = Forest::argmax(&got, f.n_classes);
-    assert_eq!(wa, ga);
+    // Auto may choose any quantized tier (i16 or i8, timing-dependent):
+    // scores must still rank near-identically to the float reference.
+    let mut agree = 0usize;
+    for i in 0..32 {
+        let want = f.predict_batch(ds.row(i));
+        let got = server.predict("auto", ds.row(i).to_vec()).unwrap();
+        assert_eq!(got.len(), f.n_classes);
+        if Forest::argmax(&want, f.n_classes) == Forest::argmax(&got, f.n_classes) {
+            agree += 1;
+        }
+    }
+    assert!(agree >= 24, "only {agree}/32 argmax agreements with float");
 }
 
 /// A deployment with an exec-thread budget serves bit-identical scores to
@@ -181,7 +187,8 @@ fn auto_deploy_with_thread_budget() {
         )
         .unwrap();
     // 10 variants × budgets {1, 2}.
-    assert_eq!(sel.candidates.len(), 20);
+    // 13 variants (the paper's ten + the int8 tier) × 2 thread budgets.
+    assert_eq!(sel.candidates.len(), 26);
     assert!(sel.candidates.iter().any(|c| c.threads == 2));
     let got = server.predict("auto", ds.row(3).to_vec()).unwrap();
     assert_eq!(got.len(), f.n_classes);

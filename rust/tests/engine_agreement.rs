@@ -4,7 +4,7 @@
 //! prediction for the same ensemble" (§6).
 
 use arbors::data::DatasetId;
-use arbors::engine::{all_variants, build, variant_name, EngineKind, Precision};
+use arbors::engine::{build, variant_name, EngineKind, Precision};
 use arbors::forest::builder::{train_random_forest, RfParams, TreeParams};
 use arbors::forest::Forest;
 use arbors::quant::{QForest, QuantConfig};
@@ -37,8 +37,30 @@ fn all_engines_agree_on_all_datasets() {
             let x = &ds.x[..ds.d * 100];
             let want_f = f.predict_batch(x);
             let want_q = qf.predict_batch(x);
-            for (kind, precision) in all_variants() {
-                let e = build(kind, precision, &f, Some(cfg)).unwrap();
+            let qf8 = arbors::quant::QForest::<i8>::from_forest(
+                &f,
+                arbors::quant::choose_scale_i8(&f, 1.0),
+            );
+            let want_q8 = qf8.predict_batch(x);
+            for (kind, precision) in arbors::engine::all_variants_with_i8() {
+                // The i8 tier chooses its own scale (the i16 carrier would
+                // saturate 8-bit storage) and covers NA/QS/VQS only.
+                let quant = match precision {
+                    Precision::I16 => Some(cfg),
+                    _ => None,
+                };
+                let e = match build(kind, precision, &f, quant) {
+                    Ok(e) => e,
+                    // Only IE/RS legitimately lack an i8 path; any other
+                    // i8 build failure is a real regression.
+                    Err(_)
+                        if precision == Precision::I8
+                            && matches!(kind, EngineKind::IfElse | EngineKind::Rs) =>
+                    {
+                        continue
+                    }
+                    Err(e) => panic!("{}: {e}", variant_name(kind, precision)),
+                };
                 let got = e.predict(x);
                 match precision {
                     Precision::F32 => {
@@ -50,6 +72,15 @@ fn all_engines_agree_on_all_datasets() {
                         assert_eq!(
                             got,
                             want_q,
+                            "{} on {} (L={leaves})",
+                            variant_name(kind, precision),
+                            id.name()
+                        );
+                    }
+                    Precision::I8 => {
+                        assert_eq!(
+                            got,
+                            want_q8,
                             "{} on {} (L={leaves})",
                             variant_name(kind, precision),
                             id.name()
@@ -138,7 +169,8 @@ fn property_quantized_engines_bit_identical() {
         // qVQS/qRS cannot wrap (paper §5's scale-selection constraint; the
         // i32-accumulating reference would diverge on wrap).
         let cap = arbors::quant::max_safe_scale(&f, 1.0);
-        let cfg = QuantConfig { scale: rng.choose(&[64.0f32, 1024.0, 32768.0]).min(cap) };
+        let cfg: QuantConfig =
+            QuantConfig::new(rng.choose(&[64.0f32, 1024.0, 32768.0]).min(cap));
         let qf = QForest::from_forest(&f, cfg);
         let want = qf.predict_batch(&x[..d * 30]);
         for kind in EngineKind::ALL {

@@ -1,0 +1,139 @@
+//! Int8-tier exactness contract (the mirror of `parallel_exact.rs` for the
+//! new precision tier): every i8 engine — q8NA, q8QS, and the v=16
+//! q8VQS — must be **bit-identical** to the i8 naive reference
+//! (`QForest::<i8>::predict_batch`, i32 accumulation) across random forests,
+//! coarse scales, batch sizes (including non-multiples of the 16-lane
+//! width), and 1–8 exec threads. Equality is `==` on the f32 bits: both
+//! sides descale the same i32 sums, so any accumulator wrap or lane-masking
+//! bug shows up as a hard mismatch.
+
+use arbors::engine::{build, build_parallel, i8_variants, variant_name};
+use arbors::forest::builder::{train_random_forest, RfParams, TreeParams};
+use arbors::quant::{choose_scale_i8, max_safe_scale_with, AccumMode, QForest, QuantConfig};
+use arbors::testing::Runner;
+use arbors::util::Pcg32;
+
+#[test]
+fn i8_engines_bit_identical_to_i8_reference() {
+    Runner::new(12).with_seed(0x18E).run(|rng: &mut Pcg32, size| {
+        // Random problem shape.
+        let d = rng.range(2, 10);
+        let c = rng.range(1, 4).max(1);
+        let n_train = 100 + size;
+        let mut x = Vec::with_capacity(n_train * d);
+        let mut y = Vec::with_capacity(n_train);
+        for _ in 0..n_train {
+            for _ in 0..d {
+                x.push(rng.f32());
+            }
+            y.push(rng.below(c) as u32);
+        }
+        let f = train_random_forest(
+            &x,
+            &y,
+            d,
+            c,
+            RfParams {
+                n_trees: rng.range(1, 12),
+                tree: TreeParams {
+                    max_leaves: *rng.choose(&[4usize, 8, 16, 32, 64]),
+                    min_samples_leaf: 1,
+                    mtry: 0,
+                },
+                seed: rng.next_u64(),
+                ..Default::default()
+            },
+        );
+        // Random (coarse!) scales exercise real threshold collisions; the
+        // cap keeps thresholds/leaves inside i8 storage and the widened
+        // i16 accumulator wrap-free, so the i32-accumulating reference
+        // cannot diverge. The tier's own chosen scale is always included.
+        let cap = max_safe_scale_with(&f, 1.0, i8::MAX as f32, i16::MAX as f32);
+        let coarse =
+            QuantConfig::<i8>::new(rng.choose(&[4.0f32, 16.0, 64.0, 127.0]).min(cap).max(1.0));
+        for cfg in [coarse, choose_scale_i8(&f, 1.0)] {
+            let qf = QForest::<i8>::from_forest(&f, cfg);
+            // Awkward batch sizes: 1, primes, non-multiples of v = 16.
+            let n_eval = *rng.choose(&[1usize, 3, 15, 16, 17, 33, 50 + size % 23]);
+            let xe: Vec<f32> = (0..n_eval * d).map(|_| rng.f32()).collect();
+            let want = qf.predict_batch(&xe);
+            // The engine::build path carries the scale in an i16-typed
+            // config and re-materializes it at i8.
+            let carrier: QuantConfig = QuantConfig::new(cfg.scale);
+            for (kind, precision) in i8_variants() {
+                let serial =
+                    build(kind, precision, &f, Some(carrier)).map_err(|e| e.to_string())?;
+                let got = serial.predict(&xe);
+                if got != want {
+                    let first =
+                        got.iter().zip(&want).position(|(a, b)| a != b).unwrap_or(0);
+                    return Err(format!(
+                        "{} differs from the i8 reference (scale {}, n={n_eval}; \
+                         first mismatch at flat index {first}: {} vs {})",
+                        variant_name(kind, precision),
+                        cfg.scale,
+                        got[first],
+                        want[first],
+                    ));
+                }
+                for threads in [2usize, 3, 8] {
+                    let par = build_parallel(kind, precision, &f, Some(carrier), threads)
+                        .map_err(|e| e.to_string())?;
+                    if par.predict(&xe) != want {
+                        return Err(format!(
+                            "{} × {threads}t differs from serial at n={n_eval} \
+                             (scale {})",
+                            variant_name(kind, precision),
+                            cfg.scale,
+                        ));
+                    }
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+/// The widened accumulation path (worst-case sum cannot fit i8) stays
+/// bit-exact too — all three engines against the reference on a forest
+/// whose leaf magnitudes force `AccumMode::Widened`.
+#[test]
+fn i8_engines_exact_in_widened_mode() {
+    let mut rng = Pcg32::seeded(0x1DE);
+    let d = 8;
+    let n = 400;
+    let x: Vec<f32> = (0..n * d).map(|_| rng.f32()).collect();
+    let y: Vec<u32> = (0..n).map(|_| rng.below(3) as u32).collect();
+    let mut f = train_random_forest(
+        &x,
+        &y,
+        d,
+        3,
+        RfParams {
+            n_trees: 14,
+            tree: TreeParams { max_leaves: 32, min_samples_leaf: 2, mtry: 0 },
+            ..Default::default()
+        },
+    );
+    for t in &mut f.trees {
+        for v in &mut t.leaf_values {
+            *v *= 30.0;
+        }
+    }
+    let cfg = choose_scale_i8(&f, 1.0);
+    let qf = QForest::<i8>::from_forest(&f, cfg);
+    assert_eq!(qf.accum_mode(), AccumMode::Widened);
+    // 127 rows: prime, so the 16-lane blocking leaves a remainder.
+    let xe = &x[..d * 127];
+    let want = qf.predict_batch(xe);
+    let carrier: QuantConfig = QuantConfig::new(cfg.scale);
+    for (kind, precision) in i8_variants() {
+        let e = build(kind, precision, &f, Some(carrier)).unwrap();
+        assert_eq!(
+            e.predict(xe),
+            want,
+            "{} not bit-exact in widened mode",
+            variant_name(kind, precision)
+        );
+    }
+}

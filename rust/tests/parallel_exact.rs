@@ -47,7 +47,8 @@ fn parallel_engine_bit_identical_to_serial() {
         );
         // Overflow-safe shared scale so the i16 engines are well-defined.
         let cap = max_safe_scale(&f, 1.0);
-        let cfg = QuantConfig { scale: rng.choose(&[256.0f32, 4096.0, 32768.0]).min(cap) };
+        let cfg: QuantConfig =
+            QuantConfig::new(rng.choose(&[256.0f32, 4096.0, 32768.0]).min(cap));
 
         // Deliberately awkward batch sizes: 1, primes, non-multiples of
         // every lane width (4 / 8 / 16).

@@ -55,9 +55,11 @@ fn main() -> anyhow::Result<()> {
             max_batch: 128,
             max_delay: std::time::Duration::from_micros(200),
             queue_cap: 65_536,
-            workers: 2,
+            // Deprecated alias for exec_threads (the pre-fusion batcher's
+            // private predict workers); folded into the thread budget.
+            workers: 1,
             // Let the selector weigh threaded candidates (e.g. RS×4t) and
-            // deploy the winner's exec-thread budget.
+            // register the winner's budget on the server-shared pool.
             exec_threads: 4,
         },
     )?;

@@ -1,0 +1,14 @@
+//! Extra: serving-path benchmark — two deployments (i16 + i8) under
+//! concurrent clients, server-shared pool vs one pool per deployment.
+//! Threads via ARBORS_THREADS (default 4); scale via ARBORS_SCALE.
+//! JSON lands in results/serving.json.
+fn main() {
+    let scale = arbors::bench::harness::Scale::from_env();
+    let threads = std::env::var("ARBORS_THREADS")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(4);
+    let text = arbors::bench::experiments::serving(&scale, threads);
+    arbors::bench::experiments::archive("serving", &text);
+    println!("{text}");
+}

@@ -757,6 +757,156 @@ pub fn int8_tiers(scale: &Scale) -> String {
     out
 }
 
+// ---------------------------------------------------------------------------
+// Extra F — serving: shared pool vs per-deployment pools
+// ---------------------------------------------------------------------------
+
+/// Extra F: the fused serving path under multi-model contention — N
+/// concurrent closed-loop clients against a two-model `Server` (one i16 and
+/// one i8 deployment), comparing the refactored layout (one shared
+/// `threads`-worker pool with per-deployment budgets) against the
+/// pre-fusion layout emulated as one private `threads`-worker pool per
+/// deployment (2× core oversubscription). Reports p50/p99 request latency
+/// and throughput per model; machine-readable JSON to
+/// `results/serving.json`.
+pub fn serving(scale: &Scale, threads: usize) -> String {
+    use crate::coordinator::{BatchConfig, Deployment, Server};
+    use crate::util::Json;
+    use std::sync::Arc;
+    use std::time::Duration;
+
+    let threads = threads.max(1);
+    let ds = DatasetId::Magic.generate(DatasetId::Magic.default_n(), 0xD5 ^ 64);
+    let (train, _) = ds.split(0.2, 7);
+    let f = super::harness::cached_rf(&train, scale.cls_trees, 64);
+    let n_clients = 4usize;
+    let per_client = (scale.eval_n * 8).max(64);
+    let shared_budget = threads.div_ceil(2);
+    let cfg = |budget: usize| BatchConfig {
+        max_batch: 64,
+        max_delay: Duration::from_micros(300),
+        queue_cap: 65_536,
+        workers: 1,
+        exec_threads: budget,
+    };
+
+    let mut out = String::new();
+    out.push_str(&format!(
+        "Serving benchmark (scale={}, RF {} trees x 64 leaves)\n\
+         {n_clients} closed-loop clients x {per_client} requests over two deployments\n\
+         (VQS i16 + VQS i8): shared {threads}-worker pool (budget {shared_budget}/model)\n\
+         vs one private {threads}-worker pool per deployment (pre-fusion layout)\n\n",
+        scale.name, scale.cls_trees,
+    ));
+
+    // Closed-loop driver with a small pipeline window per client; clients
+    // alternate between the deployments so both models see the same load.
+    let drive = |deps: Vec<Arc<Deployment>>| -> f64 {
+        let sw = crate::util::Stopwatch::start();
+        std::thread::scope(|s| {
+            for cid in 0..n_clients {
+                let deps = deps.clone();
+                let ds = &ds;
+                // scope() joins every spawned thread on exit.
+                let _ = s.spawn(move || {
+                    let mut inflight = Vec::with_capacity(32);
+                    for r in 0..per_client {
+                        let dep = &deps[(cid + r) % deps.len()];
+                        let row = ds.row((cid * per_client + r) % ds.n).to_vec();
+                        if let Ok(rx) = dep.batcher.submit(row) {
+                            inflight.push(rx);
+                        }
+                        if inflight.len() >= 32 {
+                            for rx in inflight.drain(..) {
+                                let _ = rx.recv();
+                            }
+                        }
+                    }
+                    for rx in inflight.drain(..) {
+                        let _ = rx.recv();
+                    }
+                });
+            }
+        });
+        sw.micros() / 1e6
+    };
+
+    let mut records = Vec::new();
+    let mut tw = TableWriter::new(vec![15, 10, 10, 10, 10, 10]);
+    tw.row_str(&["mode", "model", "req/s", "p50 µs", "p99 µs", "rejected"]);
+    tw.sep();
+    for (mode, shared) in [("shared-pool", true), ("separate-pools", false)] {
+        // Servers are kept alive until their metrics are read.
+        let mut servers: Vec<Arc<Server>> = Vec::new();
+        let mut deps: Vec<Arc<Deployment>> = Vec::new();
+        if shared {
+            let server = Arc::new(Server::with_pool_size(threads));
+            server
+                .deploy("i16", &f, EngineKind::Vqs, Precision::I16, cfg(shared_budget))
+                .expect("deploy i16");
+            server
+                .deploy("i8", &f, EngineKind::Vqs, Precision::I8, cfg(shared_budget))
+                .expect("deploy i8");
+            deps.push(server.model("i16").unwrap());
+            deps.push(server.model("i8").unwrap());
+            servers.push(server);
+        } else {
+            for (name, precision) in [("i16", Precision::I16), ("i8", Precision::I8)] {
+                let server = Arc::new(Server::with_pool_size(threads));
+                server
+                    .deploy(name, &f, EngineKind::Vqs, precision, cfg(threads))
+                    .expect("deploy");
+                deps.push(server.model(name).unwrap());
+                servers.push(server);
+            }
+        }
+        let wall_s = drive(deps.clone());
+        let mut total_done = 0u64;
+        let mut models_json = Vec::new();
+        for dep in &deps {
+            let m = &dep.batcher.metrics;
+            let done = m.completed.load(std::sync::atomic::Ordering::Relaxed);
+            let rej = m.rejected.load(std::sync::atomic::Ordering::Relaxed);
+            total_done += done;
+            let lat = m.latency_summary();
+            tw.row(&[
+                mode.to_string(),
+                dep.engine_name.clone(),
+                format!("{:.0}", done as f64 / wall_s),
+                format!("{:.0}", lat.median),
+                format!("{:.0}", lat.p99),
+                format!("{rej}"),
+            ]);
+            models_json.push(Json::from_pairs(vec![
+                ("engine", Json::Str(dep.engine_name.clone())),
+                ("completed", Json::Num(done as f64)),
+                ("rejected", Json::Num(rej as f64)),
+                ("throughput_rps", Json::Num(done as f64 / wall_s)),
+                ("p50_us", Json::Num(lat.median)),
+                ("p99_us", Json::Num(lat.p99)),
+            ]));
+        }
+        records.push(Json::from_pairs(vec![
+            ("mode", Json::Str(mode.to_string())),
+            ("wall_s", Json::Num(wall_s)),
+            ("total_throughput_rps", Json::Num(total_done as f64 / wall_s)),
+            ("models", Json::Arr(models_json)),
+        ]));
+    }
+    out.push_str(&tw.finish());
+    let report = Json::from_pairs(vec![
+        ("experiment", Json::Str("serving".to_string())),
+        ("scale", Json::Str(scale.name.to_string())),
+        ("pool_threads", Json::Num(threads as f64)),
+        ("clients", Json::Num(n_clients as f64)),
+        ("requests_per_client", Json::Num(per_client as f64)),
+        ("modes", Json::Arr(records)),
+    ]);
+    archive_json("serving", &report);
+    out.push_str("\narchived JSON: results/serving.json\n");
+    out
+}
+
 /// Argmax accuracy of a score matrix against labels.
 fn accuracy_of(scores: &[f32], labels: &[u32], n_classes: usize) -> f64 {
     let preds = Forest::argmax(scores, n_classes);
@@ -841,6 +991,26 @@ mod tests {
         let j = crate::util::Json::parse(&text).unwrap();
         let results = j.get("results").and_then(|v| v.as_arr()).unwrap();
         assert!(results.len() >= 2, "need at least two datasets");
+    }
+
+    #[test]
+    fn serving_runs_and_reports_json() {
+        let s = serving(&quick(), 2);
+        assert!(s.contains("shared-pool") && s.contains("separate-pools"), "{s}");
+        assert!(s.contains("serving.json"), "{s}");
+        let path = super::super::harness::results_dir().join("serving.json");
+        let text = std::fs::read_to_string(&path).unwrap();
+        let j = crate::util::Json::parse(&text).unwrap();
+        assert_eq!(j.get("experiment").and_then(|v| v.as_str()), Some("serving"));
+        let modes = j.get("modes").and_then(|v| v.as_arr()).unwrap();
+        assert_eq!(modes.len(), 2);
+        for m in modes {
+            let models = m.get("models").and_then(|v| v.as_arr()).unwrap();
+            assert_eq!(models.len(), 2, "one i16 + one i8 deployment per mode");
+            for model in models {
+                assert!(model.get("throughput_rps").and_then(|v| v.as_f64()).unwrap() > 0.0);
+            }
+        }
     }
 
     #[test]

@@ -66,6 +66,18 @@ impl Args {
         }
     }
 
+    /// Optional numeric flag: `None` when absent (for flags whose default
+    /// is computed, e.g. `serve --budget` defaulting to the pool size).
+    pub fn usize_opt(&self, key: &str) -> anyhow::Result<Option<usize>> {
+        match self.get(key) {
+            None => Ok(None),
+            Some(v) => v
+                .parse()
+                .map(Some)
+                .map_err(|_| anyhow::anyhow!("--{key} expects an integer, got '{v}'")),
+        }
+    }
+
     pub fn f64_or(&self, key: &str, default: f64) -> anyhow::Result<f64> {
         match self.get(key) {
             None => Ok(default),
@@ -137,6 +149,15 @@ mod tests {
     fn bad_number_reported() {
         let a = parse("x --trees nope");
         assert!(a.usize_or("trees", 1).is_err());
+    }
+
+    #[test]
+    fn optional_numeric_flag() {
+        let a = parse("serve --budget 3");
+        assert_eq!(a.usize_opt("budget").unwrap(), Some(3));
+        assert_eq!(a.usize_opt("threads").unwrap(), None);
+        let bad = parse("serve --budget x");
+        assert!(bad.usize_opt("budget").is_err());
     }
 
     #[test]

@@ -1,21 +1,47 @@
-//! Dynamic batcher: groups single-instance requests into SIMD-width-aligned
-//! batches under a latency budget.
+//! Dynamic batcher fused with the exec scheduler: request chunks flow from
+//! the batch assembler straight onto the shared pool's worker deques.
 //!
 //! The paper's SIMD engines evaluate `v` instances per block (VQS v=4/8,
-//! RS v=16); serving one request at a time would waste (v-1)/v of each
-//! register. The batcher collects requests until either `max_batch` is
-//! reached or the oldest request has waited `max_delay`, then hands the
-//! assembled batch to the execution workers. Backpressure is a bounded
-//! queue: when full, `submit` fails fast instead of queueing unboundedly.
+//! RS v=16, the int8 tier v=16); serving one request at a time would waste
+//! (v-1)/v of each register. The batcher collects requests until either
+//! `max_batch` is reached or the oldest request has waited `max_delay`.
+//! Historically a flush then called `predict_batch` on a private worker
+//! thread, and a `ParallelEngine` underneath re-sharded the batch onto its
+//! own private pool — two schedulers and one pool per deployment. The fused
+//! design collapses both: a flush *plans* lane-aligned row chunks (the same
+//! `exec::shard` math) and enqueues one shard task per chunk directly onto
+//! the deployment's [`PoolClient`]; whichever worker finishes a batch's
+//! last chunk pairs the score rows back onto their requesters. The
+//! collector thread never executes model code, so collection continues
+//! while shards run.
+//!
+//! # Determinism
+//!
+//! Chunk boundaries are lane-aligned (`ShardPolicy::Exact` row plans only),
+//! so each chunk's SIMD blocking is exactly the serial blocking of those
+//! rows: every request's scores are **bit-identical** to a serial
+//! `Engine::predict_batch` over the same assembled batch — regardless of
+//! pool size, per-deployment budget, or concurrent deployments.
+//!
+//! # Backpressure and shutdown
+//!
+//! The submit queue is bounded: when full, `submit` fails fast with
+//! [`ServeError::Overloaded`]. Shutdown is a *drain*, not a race: dropping
+//! the batcher stops intake, replies [`ServeError::Shutdown`] to every
+//! request still queued or assembling (they would otherwise race teardown),
+//! and blocks until every already-flushed batch has delivered its real
+//! replies before the pool client unregisters.
 
-use std::sync::atomic::Ordering;
+use std::cell::UnsafeCell;
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
 use std::sync::mpsc::{self, Receiver, RecvTimeoutError, SyncSender, TrySendError};
-use std::sync::Arc;
+use std::sync::{Arc, Condvar, Mutex};
 use std::time::{Duration, Instant};
 
 use super::metrics::Metrics;
 use crate::engine::Engine;
-use crate::util::Stopwatch;
+use crate::exec::pool::{MutPtr, Task};
+use crate::exec::{chunk_weights, weighted_row_chunks, CoreTopology, PoolClient, SharedPool};
 
 /// Batching configuration.
 #[derive(Debug, Clone, Copy)]
@@ -27,13 +53,23 @@ pub struct BatchConfig {
     pub max_delay: Duration,
     /// Bounded queue capacity (backpressure limit).
     pub queue_cap: usize,
-    /// Execution worker threads.
+    /// **Deprecated alias** for [`BatchConfig::exec_threads`]: the
+    /// pre-fusion batcher ran this many private `predict_batch` worker
+    /// threads. The fused scheduler has none — the effective thread budget
+    /// is `max(workers, exec_threads)` (see [`BatchConfig::thread_budget`]).
     pub workers: usize,
-    /// Thread budget for the engine itself: with a value > 1,
-    /// [`crate::coordinator::Server::deploy`] wraps the engine in a
-    /// [`crate::exec::ParallelEngine`] so each executed batch is sharded
-    /// across that many exec workers (bit-exact with the serial engine).
+    /// Exec thread budget: the deployment's worker entitlement on the
+    /// shared pool (weighted fair stealing; see [`crate::exec::SharedPool`])
+    /// and the number of slots its flushes are chunked for.
     pub exec_threads: usize,
+}
+
+impl BatchConfig {
+    /// The deployment's effective exec thread budget: `exec_threads`, with
+    /// the deprecated `workers` knob folded in for old callers (≥ 1).
+    pub fn thread_budget(&self) -> usize {
+        self.exec_threads.max(self.workers).max(1)
+    }
 }
 
 impl Default for BatchConfig {
@@ -61,6 +97,9 @@ pub enum ServeError {
     Overloaded,
     Shutdown,
     BadInput(String),
+    /// A shard task died mid-batch (engine panic); the request was executed
+    /// but its scores are not trustworthy.
+    Internal,
 }
 
 impl std::fmt::Display for ServeError {
@@ -69,56 +108,89 @@ impl std::fmt::Display for ServeError {
             ServeError::Overloaded => write!(f, "queue full (backpressure)"),
             ServeError::Shutdown => write!(f, "model is shutting down"),
             ServeError::BadInput(msg) => write!(f, "bad input: {msg}"),
+            ServeError::Internal => write!(f, "internal execution error"),
         }
     }
 }
 
 impl std::error::Error for ServeError {}
 
-/// A running batcher for one engine.
+/// A running batcher for one deployment.
 pub struct Batcher {
     tx: SyncSender<Request>,
     collector: Option<std::thread::JoinHandle<()>>,
-    workers: Vec<std::thread::JoinHandle<()>>,
+    ctx: Arc<FlushCtx>,
+    /// Set by `Drop` before closing `tx`: the collector must shed — not
+    /// execute — everything still queued, even if a full batch's worth is
+    /// buffered in the channel.
+    closing: Arc<AtomicBool>,
     pub metrics: Arc<Metrics>,
     n_features: usize,
 }
 
 impl Batcher {
+    /// Standalone batcher: spawns a private pool sized to the config's
+    /// thread budget. Server deployments share one pool instead — see
+    /// [`Batcher::start_shared`].
     pub fn start(engine: Arc<dyn Engine>, config: BatchConfig) -> Batcher {
+        let pool = SharedPool::new(config.thread_budget());
+        let client = SharedPool::register(&pool, "batcher", config.thread_budget());
+        Self::start_with_client(engine, client, config)
+    }
+
+    /// Batcher fused onto a server-shared pool: flushes enqueue lane-aligned
+    /// shard tasks under `label`'s registration, with
+    /// `config.thread_budget()` as the deployment's budget.
+    pub fn start_shared(
+        engine: Arc<dyn Engine>,
+        pool: &Arc<SharedPool>,
+        label: &str,
+        config: BatchConfig,
+    ) -> Batcher {
+        let client = SharedPool::register(pool, label, config.thread_budget());
+        Self::start_with_client(engine, client, config)
+    }
+
+    fn start_with_client(
+        engine: Arc<dyn Engine>,
+        client: PoolClient,
+        config: BatchConfig,
+    ) -> Batcher {
         let metrics = Arc::new(Metrics::new());
         let (tx, rx) = mpsc::sync_channel::<Request>(config.queue_cap);
-        let (batch_tx, batch_rx) = mpsc::channel::<Vec<Request>>();
-        let batch_rx = Arc::new(std::sync::Mutex::new(batch_rx));
 
         // Round the batch size up to a lane multiple so SIMD blocks are full.
         let lanes = engine.lanes().max(1);
         let max_batch = config.max_batch.div_ceil(lanes) * lanes;
+        let budget = client.budget();
+        // Chunk-slot weights are fixed per deployment (topology × budget),
+        // computed once, off the flush hot path.
+        let weights = chunk_weights(&CoreTopology::detect(), budget);
 
+        let ctx = Arc::new(FlushCtx {
+            engine: engine.clone(),
+            client,
+            lanes,
+            budget,
+            weights,
+            metrics: metrics.clone(),
+            inflight: Arc::new(Inflight { count: Mutex::new(0), idle: Condvar::new() }),
+        });
+        let closing = Arc::new(AtomicBool::new(false));
         let collector = {
-            let metrics = metrics.clone();
+            let ctx = ctx.clone();
+            let closing = closing.clone();
             std::thread::Builder::new()
                 .name("batcher-collector".into())
-                .spawn(move || collect_loop(rx, batch_tx, max_batch, config.max_delay, metrics))
+                .spawn(move || collect_loop(rx, ctx, closing, max_batch, config.max_delay))
                 .expect("spawn collector")
         };
-
-        let workers = (0..config.workers.max(1))
-            .map(|wi| {
-                let engine = engine.clone();
-                let metrics = metrics.clone();
-                let batch_rx = batch_rx.clone();
-                std::thread::Builder::new()
-                    .name(format!("batcher-worker-{wi}"))
-                    .spawn(move || worker_loop(engine, batch_rx, metrics))
-                    .expect("spawn worker")
-            })
-            .collect();
 
         Batcher {
             tx,
             collector: Some(collector),
-            workers,
+            ctx,
+            closing,
             metrics,
             n_features: engine.n_features(),
         }
@@ -126,7 +198,10 @@ impl Batcher {
 
     /// Submit one instance; returns the reply channel. Fails fast under
     /// backpressure.
-    pub fn submit(&self, x: Vec<f32>) -> Result<mpsc::Receiver<Result<Vec<f32>, ServeError>>, ServeError> {
+    pub fn submit(
+        &self,
+        x: Vec<f32>,
+    ) -> Result<mpsc::Receiver<Result<Vec<f32>, ServeError>>, ServeError> {
         if x.len() != self.n_features {
             return Err(ServeError::BadInput(format!(
                 "expected {} features, got {}",
@@ -152,12 +227,19 @@ impl Batcher {
         let rx = self.submit(x)?;
         rx.recv().map_err(|_| ServeError::Shutdown)?
     }
+
+    /// The deployment's exec thread budget on its pool.
+    pub fn thread_budget(&self) -> usize {
+        self.ctx.budget
+    }
 }
 
 impl Drop for Batcher {
     fn drop(&mut self) {
-        // Closing `tx` ends the collector; it drops `batch_tx`, ending the
-        // workers.
+        // 1. Stop intake: the flag makes the collector shed instead of
+        //    flush (a channel backlog ≥ max_batch would otherwise still
+        //    assemble into executable batches), and closing `tx` wakes it.
+        self.closing.store(true, Ordering::Release);
         drop(std::mem::replace(&mut self.tx, {
             let (t, _r) = mpsc::sync_channel(1);
             t
@@ -165,23 +247,219 @@ impl Drop for Batcher {
         if let Some(c) = self.collector.take() {
             let _ = c.join();
         }
-        for w in self.workers.drain(..) {
-            let _ = w.join();
+        // 2. Drain: wait for already-flushed batches so every accepted
+        //    request receives its real reply before the pool client (owned
+        //    by `ctx`) unregisters.
+        self.ctx.inflight.wait_idle();
+    }
+}
+
+/// Everything a flush needs, shared by the batcher handle and the collector
+/// thread. Owns the deployment's pool client — and is deliberately **not**
+/// referenced by in-flight shard tasks (they hold only engine / metrics /
+/// inflight handles), so pool teardown can never run on, and self-join, a
+/// worker thread.
+struct FlushCtx {
+    engine: Arc<dyn Engine>,
+    client: PoolClient,
+    lanes: usize,
+    budget: usize,
+    /// Per-chunk-slot weights (2× budget slots, big cores first).
+    weights: Vec<f64>,
+    metrics: Arc<Metrics>,
+    inflight: Arc<Inflight>,
+}
+
+/// Shutdown-drain latch: flushed-but-incomplete batch count.
+struct Inflight {
+    count: Mutex<usize>,
+    idle: Condvar,
+}
+
+impl Inflight {
+    fn begin(&self) {
+        *self.count.lock().unwrap() += 1;
+    }
+
+    fn end(&self) {
+        let mut n = self.count.lock().unwrap();
+        *n -= 1;
+        if *n == 0 {
+            self.idle.notify_all();
+        }
+    }
+
+    /// Block until no flushed batch is outstanding.
+    fn wait_idle(&self) {
+        let mut n = self.count.lock().unwrap();
+        while *n > 0 {
+            n = self.idle.wait(n).unwrap();
+        }
+    }
+}
+
+/// Enqueue one assembled batch as lane-aligned shard tasks on the
+/// deployment's pool client. Never blocks on execution.
+fn flush_batch(ctx: &Arc<FlushCtx>, mut batch: Vec<Request>) {
+    let n = batch.len();
+    if n == 0 {
+        return;
+    }
+    let d = ctx.engine.n_features();
+    let c = ctx.engine.n_classes();
+    // Drain (not copy) each row into the concatenated buffer: the rows are
+    // never read again (replies only need `reply`/`enqueued`), and a batch
+    // stays alive for its whole pool lifetime — no point pinning two
+    // copies of the input.
+    let mut x = Vec::with_capacity(n * d);
+    for r in &mut batch {
+        x.append(&mut r.x);
+    }
+    // Budget 1 never shards; skip the apportionment math on that hot path
+    // (mirrors ParallelEngine's threads <= 1 early-out).
+    let chunks = if ctx.budget <= 1 {
+        vec![(0, n)]
+    } else {
+        let planned = weighted_row_chunks(n, ctx.lanes, &ctx.weights);
+        if planned.len() <= 1 {
+            vec![(0, n)]
+        } else {
+            planned
+        }
+    };
+    ctx.inflight.begin();
+    let state = Arc::new(FlushState {
+        engine: ctx.engine.clone(),
+        metrics: ctx.metrics.clone(),
+        inflight: ctx.inflight.clone(),
+        x,
+        out: UnsafeCell::new(vec![0f32; n * c]),
+        requests: batch,
+        remaining: AtomicUsize::new(chunks.len()),
+        failed: AtomicBool::new(false),
+        exec_start: Mutex::new(None),
+    });
+    // Base pointer taken once, pre-spawn, while this thread is the sole
+    // owner; tasks do raw offset writes into disjoint ranges.
+    let out_ptr = MutPtr(unsafe { (*state.out.get()).as_mut_ptr() });
+    let tasks: Vec<Task> = chunks
+        .into_iter()
+        .map(|(a, b)| {
+            let st = state.clone();
+            Box::new(move || {
+                // The guard publishes chunk completion even if the engine
+                // panics, so a batch can never strand its requesters or
+                // the shutdown drain.
+                let guard = ChunkGuard { st };
+                let st = &guard.st;
+                // Batch execution time is measured from the *first chunk
+                // starting* to the last finishing — pool queue wait (which
+                // grows with multi-deployment contention) belongs to
+                // request latency, not `batch_us`.
+                {
+                    let mut t0 = st.exec_start.lock().unwrap();
+                    if t0.is_none() {
+                        *t0 = Some(Instant::now());
+                    }
+                }
+                let xs = &st.x[a * d..b * d];
+                // SAFETY: chunks are disjoint, in-bounds row ranges of
+                // `out`, and the buffer outlives every task (owned by the
+                // Arc each task holds).
+                let os =
+                    unsafe { std::slice::from_raw_parts_mut(out_ptr.0.add(a * c), (b - a) * c) };
+                st.engine.predict_batch(xs, os);
+            }) as Task
+        })
+        .collect();
+    ctx.client.spawn(tasks);
+}
+
+/// One flushed batch in flight on the pool. Holds no pool references (see
+/// [`FlushCtx`]).
+struct FlushState {
+    engine: Arc<dyn Engine>,
+    metrics: Arc<Metrics>,
+    inflight: Arc<Inflight>,
+    x: Vec<f32>,
+    /// Written by chunk tasks through raw pointers into disjoint ranges;
+    /// read by `complete` strictly after the `remaining` AcqRel chain.
+    out: UnsafeCell<Vec<f32>>,
+    requests: Vec<Request>,
+    remaining: AtomicUsize,
+    failed: AtomicBool,
+    /// Stamped by whichever chunk starts executing first.
+    exec_start: Mutex<Option<Instant>>,
+}
+
+// SAFETY: `out` is only mutated through disjoint, planner-assigned ranges,
+// and only read after all writers completed (see `remaining`).
+unsafe impl Sync for FlushState {}
+
+impl FlushState {
+    /// Runs on whichever worker finishes the batch's last chunk: pair score
+    /// rows back onto their requesters, record metrics, release the
+    /// in-flight slot.
+    fn complete(&self) {
+        let now = Instant::now();
+        if self.failed.load(Ordering::Acquire) {
+            // A chunk panicked: these requests ran but their scores are
+            // not trustworthy. They count as failures — not completions —
+            // so stats cannot report a 100% success rate after a panic.
+            self.metrics
+                .failed
+                .fetch_add(self.requests.len() as u64, Ordering::Relaxed);
+            for r in &self.requests {
+                let _ = r.reply.send(Err(ServeError::Internal));
+            }
+            self.inflight.end();
+            return;
+        }
+        let c = self.engine.n_classes();
+        let exec_start = *self.exec_start.lock().unwrap();
+        let exec_us = exec_start
+            .map(|t0| now.duration_since(t0).as_secs_f64() * 1e6)
+            .unwrap_or(0.0);
+        self.metrics.record_batch(self.requests.len(), exec_us);
+        // SAFETY: every chunk writer finished (the final `remaining`
+        // decrement, AcqRel, happens-before this call).
+        let out = unsafe { &*self.out.get() };
+        for (i, r) in self.requests.iter().enumerate() {
+            self.metrics
+                .record_latency(now.duration_since(r.enqueued).as_secs_f64() * 1e6);
+            let _ = r.reply.send(Ok(out[i * c..(i + 1) * c].to_vec()));
+        }
+        self.inflight.end();
+    }
+}
+
+/// Publishes one chunk's completion on drop — including panic unwinds.
+struct ChunkGuard {
+    st: Arc<FlushState>,
+}
+
+impl Drop for ChunkGuard {
+    fn drop(&mut self) {
+        if std::thread::panicking() {
+            self.st.failed.store(true, Ordering::Release);
+        }
+        if self.st.remaining.fetch_sub(1, Ordering::AcqRel) == 1 {
+            self.st.complete();
         }
     }
 }
 
 fn collect_loop(
     rx: Receiver<Request>,
-    batch_tx: mpsc::Sender<Vec<Request>>,
+    ctx: Arc<FlushCtx>,
+    closing: Arc<AtomicBool>,
     max_batch: usize,
     max_delay: Duration,
-    _metrics: Arc<Metrics>,
 ) {
     let mut pending: Vec<Request> = Vec::with_capacity(max_batch);
     loop {
         if pending.is_empty() {
-            // Block for the first request (or shutdown).
+            // Block for the first request (or shutdown with an empty queue).
             match rx.recv() {
                 Ok(r) => pending.push(r),
                 Err(_) => return,
@@ -198,51 +476,38 @@ fn collect_loop(
                 Ok(r) => pending.push(r),
                 Err(RecvTimeoutError::Timeout) => break,
                 Err(RecvTimeoutError::Disconnected) => {
-                    if !pending.is_empty() {
-                        let _ = batch_tx.send(std::mem::take(&mut pending));
-                    }
+                    // The channel is closed *and* empty: `pending` holds
+                    // every accepted-but-unflushed request.
+                    shed_all(&ctx, pending, &rx);
                     return;
                 }
             }
         }
-        if batch_tx.send(std::mem::take(&mut pending)).is_err() {
+        // Shutdown drain: once the batcher is closing, *nothing* unflushed
+        // executes — including a channel backlog big enough to assemble
+        // into full batches. Shedding must win that race, not lose it.
+        if closing.load(Ordering::Acquire) {
+            shed_all(&ctx, pending, &rx);
             return;
         }
+        flush_batch(&ctx, std::mem::take(&mut pending));
     }
 }
 
-fn worker_loop(
-    engine: Arc<dyn Engine>,
-    batch_rx: Arc<std::sync::Mutex<Receiver<Vec<Request>>>>,
-    metrics: Arc<Metrics>,
-) {
-    let d = engine.n_features();
-    let c = engine.n_classes();
-    loop {
-        let batch = {
-            let rx = batch_rx.lock().unwrap();
-            match rx.recv() {
-                Ok(b) => b,
-                Err(_) => return,
-            }
-        };
-        let n = batch.len();
-        let mut x = Vec::with_capacity(n * d);
-        for r in &batch {
-            x.extend_from_slice(&r.x);
-        }
-        let sw = Stopwatch::start();
-        let mut out = vec![0f32; n * c];
-        engine.predict_batch(&x, &mut out);
-        metrics.record_batch(n, sw.micros());
-        let now = Instant::now();
-        for (i, r) in batch.into_iter().enumerate() {
-            let scores = out[i * c..(i + 1) * c].to_vec();
-            metrics
-                .record_latency(now.duration_since(r.enqueued).as_secs_f64() * 1e6);
-            let _ = r.reply.send(Ok(scores));
-        }
+/// Reply `Shutdown` to every request that will never execute: the assembled
+/// batch plus anything still buffered in the channel.
+fn shed_all(ctx: &FlushCtx, pending: Vec<Request>, rx: &Receiver<Request>) {
+    for r in pending {
+        shed(ctx, r);
     }
+    while let Ok(r) = rx.try_recv() {
+        shed(ctx, r);
+    }
+}
+
+fn shed(ctx: &FlushCtx, r: Request) {
+    ctx.metrics.shed_shutdown.fetch_add(1, Ordering::Relaxed);
+    let _ = r.reply.send(Err(ServeError::Shutdown));
 }
 
 #[cfg(test)]
@@ -276,6 +541,31 @@ mod tests {
         // Submit 20 requests concurrently, gather replies in order.
         let replies: Vec<_> =
             (0..20).map(|i| b.submit(ds.row(i).to_vec()).unwrap()).collect();
+        for (i, r) in replies.into_iter().enumerate() {
+            let scores = r.recv().unwrap().unwrap();
+            assert_eq!(&scores[..], &direct[i * ds.n_classes..(i + 1) * ds.n_classes]);
+        }
+    }
+
+    #[test]
+    fn fused_multichunk_flush_is_bit_exact() {
+        // A budget > 1 splits flushes into several lane-aligned shard tasks;
+        // replies must still be bit-identical to the serial engine.
+        let (eng, ds) = engine();
+        let direct = eng.predict(&ds.x[..ds.d * 50]);
+        let b = Batcher::start(
+            eng.clone(),
+            BatchConfig {
+                max_batch: 64,
+                max_delay: Duration::from_millis(2),
+                queue_cap: 4096,
+                workers: 1,
+                exec_threads: 4,
+            },
+        );
+        assert_eq!(b.thread_budget(), 4);
+        let replies: Vec<_> =
+            (0..50).map(|i| b.submit(ds.row(i).to_vec()).unwrap()).collect();
         for (i, r) in replies.into_iter().enumerate() {
             let scores = r.recv().unwrap().unwrap();
             assert_eq!(&scores[..], &direct[i * ds.n_classes..(i + 1) * ds.n_classes]);
@@ -332,5 +622,110 @@ mod tests {
         }
         assert_eq!(b.metrics.completed.load(Ordering::Relaxed), 10);
         assert!(b.metrics.mean_batch_size() >= 1.0);
+    }
+
+    #[test]
+    fn deprecated_workers_knob_folds_into_budget() {
+        let cfg = BatchConfig { workers: 3, exec_threads: 1, ..BatchConfig::default() };
+        assert_eq!(cfg.thread_budget(), 3);
+        let cfg = BatchConfig { workers: 1, exec_threads: 4, ..BatchConfig::default() };
+        assert_eq!(cfg.thread_budget(), 4);
+        assert_eq!(BatchConfig::default().thread_budget(), 1);
+    }
+
+    #[test]
+    fn shutdown_sheds_queued_requests() {
+        // Regression (ISSUE 3): shutdown used to race in-flight flushes
+        // with queued requests. It must drain: every accepted-but-unflushed
+        // request gets an explicit `Shutdown` reply before the collector
+        // exits, and the drop blocks until that has happened.
+        let (eng, ds) = engine();
+        let b = Batcher::start(
+            eng,
+            BatchConfig {
+                max_batch: 1024,
+                // Far deadline: nothing flushes before the drop below.
+                max_delay: Duration::from_secs(30),
+                queue_cap: 1024,
+                workers: 1,
+                exec_threads: 1,
+            },
+        );
+        let metrics = b.metrics.clone();
+        let replies: Vec<_> =
+            (0..16).map(|i| b.submit(ds.row(i).to_vec()).unwrap()).collect();
+        // Let the collector absorb some of the queue into its assembling
+        // batch — the drain must cover both the channel and the assembly.
+        std::thread::sleep(Duration::from_millis(20));
+        drop(b);
+        for r in replies {
+            assert_eq!(r.recv().unwrap(), Err(ServeError::Shutdown));
+        }
+        assert_eq!(metrics.shed_shutdown.load(Ordering::Relaxed), 16);
+        assert_eq!(metrics.completed.load(Ordering::Relaxed), 0);
+    }
+
+    #[test]
+    fn shutdown_with_backlog_never_loses_replies() {
+        // Drop mid-burst with small batches racing through the pipeline:
+        // whatever was flushed before the close is served, everything else
+        // is shed — and the two sets exactly partition the submissions
+        // (nothing lost, nothing hung, nothing executed after shedding
+        // began). Exercises the closing-flag path that stops a channel
+        // backlog from assembling into executable batches at shutdown.
+        let (eng, ds) = engine();
+        let b = Batcher::start(
+            eng,
+            BatchConfig {
+                max_batch: 1, // rounds up to one RS lane-block (16)
+                max_delay: Duration::from_millis(5),
+                queue_cap: 4096,
+                workers: 1,
+                exec_threads: 2,
+            },
+        );
+        let metrics = b.metrics.clone();
+        let replies: Vec<_> =
+            (0..256).map(|i| b.submit(ds.row(i % ds.n).to_vec()).unwrap()).collect();
+        drop(b);
+        let mut served = 0u64;
+        let mut shutdown = 0u64;
+        for r in replies {
+            match r.recv().unwrap() {
+                Ok(_) => served += 1,
+                Err(ServeError::Shutdown) => shutdown += 1,
+                Err(e) => panic!("unexpected {e}"),
+            }
+        }
+        assert_eq!(served + shutdown, 256);
+        assert_eq!(metrics.completed.load(Ordering::Relaxed), served);
+        assert_eq!(metrics.shed_shutdown.load(Ordering::Relaxed), shutdown);
+    }
+
+    #[test]
+    fn shutdown_still_delivers_flushed_batches() {
+        // Requests flushed before the drop get real scores, not Shutdown.
+        let (eng, ds) = engine();
+        let direct = eng.predict(&ds.x[..ds.d * 8]);
+        let b = Batcher::start(
+            eng.clone(),
+            BatchConfig {
+                max_batch: 8,
+                max_delay: Duration::from_micros(100),
+                queue_cap: 1024,
+                workers: 1,
+                exec_threads: 2,
+            },
+        );
+        let replies: Vec<_> =
+            (0..8).map(|i| b.submit(ds.row(i).to_vec()).unwrap()).collect();
+        // Wait out the 100 µs deadline so the batch is flushed (not merely
+        // queued) before the drop.
+        std::thread::sleep(Duration::from_millis(50));
+        drop(b); // must block until the flush delivered
+        for (i, r) in replies.into_iter().enumerate() {
+            let scores = r.recv().unwrap().unwrap();
+            assert_eq!(&scores[..], &direct[i * ds.n_classes..(i + 1) * ds.n_classes]);
+        }
     }
 }

@@ -12,6 +12,12 @@ pub struct Metrics {
     pub requests: AtomicU64,
     pub completed: AtomicU64,
     pub rejected: AtomicU64,
+    /// Requests answered `ServeError::Shutdown` by the drain instead of
+    /// being executed (accepted but never flushed before teardown).
+    pub shed_shutdown: AtomicU64,
+    /// Requests answered `ServeError::Internal` because a shard task died
+    /// mid-batch (engine panic). Not counted in `completed`.
+    pub failed: AtomicU64,
     pub batches: AtomicU64,
     pub batched_instances: AtomicU64,
     /// End-to-end request latencies in µs (bounded reservoir).
@@ -68,10 +74,12 @@ impl Metrics {
     pub fn report(&self) -> String {
         let lat = self.latency_summary();
         format!(
-            "req={} done={} rej={} batches={} mean_batch={:.1} lat_us(p50={:.0} p95={:.0} p99={:.0} max={:.0})",
+            "req={} done={} rej={} shed={} failed={} batches={} mean_batch={:.1} lat_us(p50={:.0} p95={:.0} p99={:.0} max={:.0})",
             self.requests.load(Ordering::Relaxed),
             self.completed.load(Ordering::Relaxed),
             self.rejected.load(Ordering::Relaxed),
+            self.shed_shutdown.load(Ordering::Relaxed),
+            self.failed.load(Ordering::Relaxed),
             self.batches.load(Ordering::Relaxed),
             self.mean_batch_size(),
             lat.median,

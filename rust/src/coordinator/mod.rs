@@ -1,11 +1,14 @@
 //! L3 coordinator: the serving layer (DESIGN.md system S9).
 //!
-//! A [`Server`] hosts named models. Each model gets an [`Engine`] (picked
-//! explicitly or by the auto-[`selector`]), a SIMD-width-aware dynamic
-//! [`batcher`] with bounded-queue backpressure, and per-model [`metrics`].
-//! Clients submit single instances and receive score vectors; the batcher
-//! turns the request stream into full SIMD blocks, which is where the
-//! paper's engines earn their speedups.
+//! A [`Server`] hosts named models and owns exactly **one** work-stealing
+//! exec pool ([`crate::exec::SharedPool`]) shared by every deployment. Each
+//! model gets an [`Engine`] (picked explicitly or by the auto-[`selector`]),
+//! a SIMD-width-aware dynamic [`batcher`] fused onto the shared pool with a
+//! per-deployment thread *budget* (weighted fair stealing), bounded-queue
+//! backpressure, and per-model [`metrics`]. Clients submit single instances
+//! and receive score vectors; the batcher turns the request stream into
+//! full SIMD blocks and enqueues their lane-aligned shards straight onto
+//! the pool — request to SIMD lane through a single scheduler.
 
 pub mod batcher;
 pub mod metrics;
@@ -22,7 +25,8 @@ pub use selector::{
 use std::collections::HashMap;
 use std::sync::{Arc, RwLock};
 
-use crate::engine::{build_parallel, Engine, EngineKind, Precision};
+use crate::engine::{build, Engine, EngineKind, Precision};
+use crate::exec::SharedPool;
 use crate::forest::{Forest, Task};
 
 /// A deployed model: its engine's batcher plus descriptive metadata.
@@ -34,21 +38,50 @@ pub struct Deployment {
     pub task: Task,
 }
 
-/// The serving coordinator: model registry + per-model batchers.
-#[derive(Default)]
+/// The serving coordinator: model registry + per-model batchers, all fused
+/// onto one shared worker pool.
 pub struct Server {
     models: RwLock<HashMap<String, Arc<Deployment>>>,
+    pool: Arc<SharedPool>,
+}
+
+impl Default for Server {
+    fn default() -> Server {
+        Server::new()
+    }
 }
 
 impl Server {
+    /// A server whose shared pool is sized to the host's parallelism.
     pub fn new() -> Server {
-        Server::default()
+        let n = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+        Server::with_pool_size(n)
+    }
+
+    /// A server owning exactly one work-stealing pool of `threads` workers,
+    /// shared by every deployment. Per-deployment budgets
+    /// ([`BatchConfig::exec_threads`]) arbitrate the workers under
+    /// contention; idle budgets are stolen (see [`crate::exec::SharedPool`]).
+    pub fn with_pool_size(threads: usize) -> Server {
+        Server { models: RwLock::new(HashMap::new()), pool: SharedPool::new(threads) }
+    }
+
+    /// Worker threads in the server-shared pool — the only exec threads
+    /// serving spawns, no matter how many models are deployed.
+    pub fn pool_threads(&self) -> usize {
+        self.pool.threads()
+    }
+
+    /// Deployments currently registered on the shared pool.
+    pub fn pool_deployments(&self) -> usize {
+        self.pool.registered()
     }
 
     /// Deploy a forest under `name` with an explicit engine choice. The
-    /// deployment honors `config.exec_threads` as its thread budget: above
-    /// 1, batches execute on a sharded work-stealing pool
-    /// ([`crate::exec::ParallelEngine`], bit-exact with the serial engine).
+    /// serial engine is built once; `config.exec_threads` becomes the
+    /// deployment's thread budget on the server's shared pool, and the
+    /// fused batcher shards each flushed batch across it (lane-aligned, so
+    /// bit-exact with the serial engine).
     pub fn deploy(
         &self,
         name: &str,
@@ -57,13 +90,14 @@ impl Server {
         precision: Precision,
         config: BatchConfig,
     ) -> anyhow::Result<()> {
-        let engine: Arc<dyn Engine> =
-            Arc::from(build_parallel(kind, precision, forest, None, config.exec_threads)?);
+        let engine: Arc<dyn Engine> = Arc::from(build(kind, precision, forest, None)?);
         self.deploy_engine(name, forest, engine, config)
     }
 
     /// Deploy with a pre-built engine (e.g. a tensor engine or a
-    /// selector-chosen one).
+    /// selector-chosen one). Registers the deployment on the shared pool;
+    /// redeploying under an existing name tears the old deployment down
+    /// cleanly (its batcher drains, then its pool registration drops).
     pub fn deploy_engine(
         &self,
         name: &str,
@@ -71,21 +105,32 @@ impl Server {
         engine: Arc<dyn Engine>,
         config: BatchConfig,
     ) -> anyhow::Result<()> {
+        let budget = config.thread_budget();
+        let engine_name = if budget > 1 {
+            format!("{}×{budget}t", engine.name())
+        } else {
+            engine.name()
+        };
         let dep = Deployment {
-            engine_name: engine.name(),
+            engine_name,
             n_features: engine.n_features(),
             n_classes: engine.n_classes(),
             task: forest.task,
-            batcher: Batcher::start(engine, config),
+            batcher: Batcher::start_shared(engine, &self.pool, name, config),
         };
-        self.models.write().unwrap().insert(name.to_string(), Arc::new(dep));
+        // The write-guard temporary drops at the end of the `let`, so a
+        // replaced deployment's teardown (batcher drain) runs *after* the
+        // registry lock is released — a slow drain must not stall lookups
+        // on other models.
+        let replaced = self.models.write().unwrap().insert(name.to_string(), Arc::new(dep));
+        drop(replaced);
         Ok(())
     }
 
-    /// Deploy using the auto-selector on a calibration batch. With
-    /// `config.exec_threads > 1`, threaded candidates (e.g. `RS×4t`) are
-    /// measured next to the serial ones and the winner's thread count is
-    /// what gets deployed.
+    /// Deploy using the auto-selector on a calibration batch. With a thread
+    /// budget above 1 (`config.thread_budget()`), threaded candidates (e.g.
+    /// `RS×4t`) are measured next to the serial ones and the winner's
+    /// thread count becomes the deployment's budget on the shared pool.
     ///
     /// Ranking is by latency, but deployment is gated on prediction
     /// quality: the fastest candidate whose calibration argmax agreement
@@ -100,10 +145,10 @@ impl Server {
         calibration: &[f32],
         config: BatchConfig,
     ) -> anyhow::Result<Selection> {
-        let budgets = selector::thread_budgets(config.exec_threads);
+        let budgets = selector::thread_budgets(config.thread_budget());
         let sel = selector::select_engine_with(forest, calibration, None, 3, &budgets)?;
         let best = sel.recommended();
-        let config = BatchConfig { exec_threads: best.threads, ..config };
+        let config = BatchConfig { exec_threads: best.threads, workers: 1, ..config };
         self.deploy(name, forest, best.kind, best.precision, config)?;
         Ok(sel)
     }
@@ -115,7 +160,10 @@ impl Server {
 
     /// Remove a deployment (its batcher drains and stops on drop).
     pub fn undeploy(&self, name: &str) -> bool {
-        self.models.write().unwrap().remove(name).is_some()
+        // Bind before testing: the removed Arc must outlive the statement's
+        // write-guard temporary so the drain runs outside the registry lock.
+        let removed = self.models.write().unwrap().remove(name);
+        removed.is_some()
     }
 
     pub fn list(&self) -> Vec<String> {
@@ -144,9 +192,13 @@ impl Server {
         Ok(best as u32)
     }
 
-    /// Metrics report for every deployed model.
+    /// Metrics report for every deployed model (plus the shared pool).
     pub fn report(&self) -> String {
-        let mut out = String::new();
+        let mut out = format!(
+            "pool: {} workers shared by {} deployment(s)\n",
+            self.pool_threads(),
+            self.pool_deployments()
+        );
         for name in self.list() {
             if let Some(dep) = self.model(&name) {
                 out.push_str(&format!(
@@ -237,9 +289,34 @@ mod tests {
         let sel = server
             .deploy_auto("auto", &f, &ds.x[..ds.d * 128], BatchConfig::default())
             .unwrap();
-        assert_eq!(sel.candidates.len(), 10);
+        // The paper's ten variants + the int8 tier (stale 10 fixed: the
+        // selector has ranked 13 serial candidates since the int8 PR).
+        assert_eq!(sel.candidates.len(), 13);
         let c = server.classify("auto", ds.row(3).to_vec()).unwrap();
         assert!(c < 2);
+    }
+
+    #[test]
+    fn shared_pool_is_singular() {
+        let (f, ds) = forest();
+        let server = Server::with_pool_size(2);
+        server
+            .deploy(
+                "a",
+                &f,
+                EngineKind::Rs,
+                Precision::F32,
+                BatchConfig { exec_threads: 2, ..BatchConfig::default() },
+            )
+            .unwrap();
+        server
+            .deploy("b", &f, EngineKind::Qs, Precision::I16, BatchConfig::default())
+            .unwrap();
+        assert_eq!(server.pool_threads(), 2);
+        assert_eq!(server.pool_deployments(), 2);
+        assert!(server.predict("a", ds.row(0).to_vec()).is_ok());
+        assert!(server.predict("b", ds.row(1).to_vec()).is_ok());
+        assert!(server.report().contains("pool: 2 workers"), "{}", server.report());
     }
 
     #[test]

@@ -119,10 +119,19 @@ pub fn handle_line(server: &Server, line: &str) -> Json {
         Some("stats") => {
             let name = req.get("model").and_then(|m| m.as_str()).unwrap_or("");
             match server.model(name) {
-                Some(dep) => Json::from_pairs(vec![(
-                    "report",
-                    Json::Str(format!("[{}] {}", dep.engine_name, dep.batcher.metrics.report())),
-                )]),
+                Some(dep) => Json::from_pairs(vec![
+                    (
+                        "report",
+                        Json::Str(format!(
+                            "[{}] {}",
+                            dep.engine_name,
+                            dep.batcher.metrics.report()
+                        )),
+                    ),
+                    // The shared scheduler behind every model on this server.
+                    ("pool_threads", Json::Num(server.pool_threads() as f64)),
+                    ("pool_deployments", Json::Num(server.pool_deployments() as f64)),
+                ]),
                 None => err(format!("unknown model '{name}'")),
             }
         }
@@ -235,6 +244,8 @@ mod tests {
         // stats
         let r = handle_line(&server, r#"{"cmd": "stats", "model": "magic"}"#);
         assert!(r.get("report").is_some());
+        assert!(r.get("pool_threads").and_then(|v| v.as_usize()).unwrap() >= 1);
+        assert_eq!(r.get("pool_deployments").and_then(|v| v.as_usize()), Some(1));
         // predict via handle_line
         let req = Json::from_pairs(vec![
             ("model", Json::Str("magic".into())),

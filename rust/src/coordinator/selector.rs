@@ -98,6 +98,13 @@ pub fn select_engine(
 
 /// The thread budgets worth measuring for a deployment budget: 1, the
 /// powers of two in between, and the budget itself.
+///
+/// A "budget" here is the deployment's worker entitlement on the
+/// server-shared pool (see [`crate::exec::SharedPool`]), not a private
+/// thread count: `Server::deploy_auto` measures each candidate at these
+/// budgets and registers the winner's budget with the shared scheduler.
+/// Measurement itself runs on transient standalone pools so it cannot
+/// perturb live deployments.
 pub fn thread_budgets(max_threads: usize) -> Vec<usize> {
     let mut budgets = vec![1usize];
     let mut t = 2usize;

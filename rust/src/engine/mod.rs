@@ -219,6 +219,12 @@ pub fn build(
 /// serial engine; otherwise the engine is wrapped in a
 /// [`crate::exec::ParallelEngine`] running row-sharded over a work-stealing
 /// pool (bit-exact with the serial engine — [`crate::exec::ShardPolicy::Exact`]).
+///
+/// This is the *standalone* path (CLI `predict`, selector measurement,
+/// benches): the wrapper owns a private pool. The serving path does not use
+/// it — `Server` deployments build the serial engine and let the fused
+/// batcher shard batches onto the server-shared pool with the same
+/// lane-aligned plans (see `coordinator::batcher`).
 pub fn build_parallel(
     kind: EngineKind,
     precision: Precision,

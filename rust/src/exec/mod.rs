@@ -3,13 +3,17 @@
 //! The paper's engines exploit SIMD lanes within one core; every ARM target
 //! in its Table 1 is a multi-core — often heterogeneous big.LITTLE — part.
 //! This subsystem adds the missing axis: a from-scratch, std-only
-//! work-stealing worker pool ([`pool::WorkerPool`]), a shard planner
-//! ([`shard`]) choosing between lane-aligned **row sharding**, **tree
-//! sharding** with deterministic ordered reduction, and a hybrid of both,
-//! weighted by core class ([`topology::CoreTopology`]) — and a
-//! [`ParallelEngine`] wrapper that implements [`crate::engine::Engine`], so
-//! it drops into the coordinator, selector, CLI and bench harness
-//! unchanged.
+//! work-stealing pool — the server-shared [`pool::SharedPool`] with
+//! per-deployment thread budgets and weighted-fair stealing, plus the
+//! standalone [`pool::WorkerPool`] facade — a shard planner ([`shard`])
+//! choosing between lane-aligned **row sharding**, **tree sharding** with
+//! deterministic ordered reduction, and a hybrid of both, weighted by core
+//! class ([`topology::CoreTopology`]) — and a [`ParallelEngine`] wrapper
+//! that implements [`crate::engine::Engine`], so it drops into the
+//! coordinator, selector, CLI and bench harness unchanged. The serving
+//! path itself no longer needs the wrapper: the coordinator's batcher
+//! enqueues shard tasks straight onto its deployment's [`pool::PoolClient`]
+//! (see `coordinator::batcher` and DESIGN.md §5).
 //!
 //! Exactness is a first-class contract: under the default
 //! [`ShardPolicy::Exact`] the parallel engine is bit-identical to the
@@ -24,6 +28,8 @@ pub mod shard;
 pub mod topology;
 
 pub use parallel::ParallelEngine;
-pub use pool::WorkerPool;
-pub use shard::{plan, tree_shard_bounds, weighted_row_chunks, ShardPlan, ShardPolicy};
+pub use pool::{worker_threads_spawned, PoolClient, SharedPool, WorkerPool};
+pub use shard::{
+    chunk_weights, plan, tree_shard_bounds, weighted_row_chunks, ShardPlan, ShardPolicy,
+};
 pub use topology::{CoreClass, CoreTopology};

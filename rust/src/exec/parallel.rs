@@ -31,21 +31,19 @@ use crate::forest::Forest;
 use crate::neon::OpTrace;
 use crate::quant::{choose_scale, QuantConfig};
 
-use super::pool::{Task, WorkerPool};
+use super::pool::{MutPtr, Task, WorkerPool};
 use super::shard::{chunk_weights, plan, tree_shard_bounds, ShardPlan, ShardPolicy};
 use super::topology::CoreTopology;
 
-/// Send-able raw pointer wrappers for handing disjoint slice ranges to pool
-/// tasks. Safety rests on two invariants enforced by the planner: row
-/// ranges never overlap, and `WorkerPool::run` does not return until every
-/// task has finished (the borrow outlives all uses).
+/// Send-able raw pointer wrapper for handing disjoint slice ranges to pool
+/// tasks (the writable half, [`MutPtr`], is shared with the fused batcher
+/// and lives next to `Task` in `exec::pool`). Safety rests on two
+/// invariants enforced by the planner: row ranges never overlap, and
+/// `WorkerPool::run` does not return until every task has finished (the
+/// borrow outlives all uses).
 #[derive(Clone, Copy)]
 struct ConstPtr(*const f32);
 unsafe impl Send for ConstPtr {}
-
-#[derive(Clone, Copy)]
-struct MutPtr(*mut f32);
-unsafe impl Send for MutPtr {}
 
 /// A serial engine executed by a sharded, work-stealing worker pool.
 pub struct ParallelEngine {

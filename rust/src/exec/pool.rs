@@ -1,96 +1,163 @@
-//! A from-scratch, std-only work-stealing worker pool.
+//! Work-stealing worker pools: the server-shared [`SharedPool`] with
+//! per-deployment thread budgets, and the standalone [`WorkerPool`] facade.
 //!
 //! `rayon`/`crossbeam` are unavailable offline, so this implements the small
-//! core the execution layer needs: N persistent workers, one deque per
-//! worker, LIFO pop of local work and FIFO steal of remote work (the classic
-//! locality/fairness split), and a blocking `run` that submits a job's tasks
-//! and waits for all of them.
+//! core the execution and serving layers need: N persistent workers, one
+//! FIFO task queue per registered *deployment* (a [`PoolClient`]), and a
+//! budget-aware claim rule that decides which deployment a free worker
+//! serves next. One `SharedPool` is owned by a whole
+//! [`crate::coordinator::Server`]; every deployed model registers a client
+//! on it instead of spawning a private pool, so a multi-model edge device
+//! runs exactly one set of exec threads.
 //!
-//! Design notes:
+//! # Budgets and stealing
 //!
-//! * Deques are `Mutex<VecDeque>` rather than a lock-free Chase–Lev deque.
-//!   Tasks here are *shards* — tens of microseconds to milliseconds of tree
-//!   traversal — so a ~20 ns lock is noise; in exchange the pool is obviously
-//!   correct and fully safe code.
-//! * A submitted task is first *reserved* via the `pending` counter (under
-//!   the condvar mutex), then claimed from a deque. Tasks are pushed to a
-//!   deque **before** `pending` is incremented, so a worker that wins a
-//!   reservation always finds a task; no lost-wakeup window exists.
-//! * Panics in tasks are caught so a poisoned shard cannot deadlock the
-//!   submitting thread; `run` re-panics after the whole job has drained.
+//! Each client registers with a thread *budget* — the number of workers it
+//! is entitled to under contention. The claim rule has two tiers:
+//!
+//! 1. **Under budget first.** Deployments with queued work and
+//!    `active < budget` are served before anything else; among them the one
+//!    with the smallest weighted virtual time (`vtime`, advanced by
+//!    `1/budget` per claimed task) wins, so service rates converge to the
+//!    budget ratios even when instantaneous concurrency cannot express them
+//!    (e.g. a 1-worker pool shared by two deployments).
+//! 2. **Steal only from idle budgets.** A deployment whose budget is
+//!    exhausted may claim a worker only when tier 1 is empty — i.e. every
+//!    other deployment with remaining budget has nothing queued. The spare
+//!    capacity a steal consumes is therefore always some idle deployment's
+//!    budget, and is handed back the moment that deployment enqueues work
+//!    (its tasks re-enter tier 1 and win the next free workers).
+//!
+//! # Design notes
+//!
+//! * Queues live behind one pool-wide `Mutex` rather than lock-free
+//!   Chase–Lev deques. Tasks here are *shards* — tens of microseconds to
+//!   milliseconds of tree traversal — so a ~20 ns lock is noise; in
+//!   exchange the scheduler is obviously correct and fully safe code.
+//! * Workers catch task panics, so a poisoned shard can neither kill a
+//!   worker thread nor deadlock a submitter; [`PoolClient::run`] re-panics
+//!   on the submitting thread after the whole job has drained.
+//! * A client's drop marks its queue closed and discards still-queued
+//!   tasks; in-flight tasks finish first (serving tears deployments down
+//!   only after draining, see `coordinator::batcher`).
 
-use std::collections::VecDeque;
+use std::collections::{BTreeMap, VecDeque};
 use std::panic::{self, AssertUnwindSafe};
-use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
 use std::sync::{Arc, Condvar, Mutex};
 
-/// A unit of work submitted to the pool.
+/// A unit of work submitted to a pool.
 pub type Task = Box<dyn FnOnce() + Send + 'static>;
 
+/// `Send`-able raw `*mut f32` wrapper for handing disjoint slice ranges to
+/// pool tasks (used by `exec::parallel` and the fused batcher). Safety
+/// rests on two caller-enforced invariants: the ranges written through the
+/// pointer never overlap across concurrently running tasks, and the
+/// pointee buffer outlives every task (readers synchronize with a
+/// completion latch/counter before touching it).
+#[derive(Clone, Copy)]
+pub struct MutPtr(pub *mut f32);
+unsafe impl Send for MutPtr {}
+
+/// Process-wide count of exec worker threads ever spawned. Monotone by
+/// design (never decremented on join): tests assert that deploying more
+/// models onto a server adds **zero** new worker threads.
+static WORKERS_SPAWNED: AtomicUsize = AtomicUsize::new(0);
+
+/// See [`WORKERS_SPAWNED`].
+pub fn worker_threads_spawned() -> usize {
+    WORKERS_SPAWNED.load(Ordering::SeqCst)
+}
+
+/// Per-deployment scheduling state.
+struct DeploymentQueue {
+    queue: VecDeque<Task>,
+    /// Worker entitlement under contention (≥ 1).
+    budget: usize,
+    /// Workers currently executing this deployment's tasks.
+    active: usize,
+    /// Set when the owning client dropped; the entry is removed once the
+    /// last in-flight task finishes.
+    closed: bool,
+    /// Weighted-fair virtual time: advanced by `1/budget` per claim, so
+    /// under contention claim counts converge to budget ratios.
+    vtime: f64,
+}
+
+#[derive(Default)]
+struct PoolState {
+    deployments: BTreeMap<u64, DeploymentQueue>,
+}
+
+/// Lowest-vtime deployment with queued work in the given tier
+/// (`under == true`: still under budget; `false`: budget exhausted).
+fn pick(deployments: &BTreeMap<u64, DeploymentQueue>, under: bool) -> Option<u64> {
+    let mut best: Option<(u64, f64)> = None;
+    for (&tag, d) in deployments {
+        if d.queue.is_empty() || (d.active < d.budget) != under {
+            continue;
+        }
+        if best.map_or(true, |(_, bv)| d.vtime < bv) {
+            best = Some((tag, d.vtime));
+        }
+    }
+    best.map(|(tag, _)| tag)
+}
+
+impl PoolState {
+    /// Claim one task for a free worker (see module docs for the rule).
+    fn claim(&mut self) -> Option<(u64, Task)> {
+        let tag = pick(&self.deployments, true).or_else(|| pick(&self.deployments, false))?;
+        let d = self.deployments.get_mut(&tag).expect("picked tag exists");
+        let task = d.queue.pop_front().expect("picked queue non-empty");
+        d.active += 1;
+        d.vtime += 1.0 / d.budget as f64;
+        Some((tag, task))
+    }
+}
+
 struct Shared {
-    /// One deque per worker; `run` distributes a job's tasks round-robin.
-    queues: Vec<Mutex<VecDeque<Task>>>,
-    /// Count of submitted-but-unclaimed tasks, guarded by the wakeup mutex.
-    pending: Mutex<usize>,
+    state: Mutex<PoolState>,
     wakeup: Condvar,
     shutdown: AtomicBool,
-    /// Round-robin submission cursor (so consecutive jobs start on
-    /// different workers).
-    cursor: AtomicUsize,
+    next_tag: AtomicU64,
+    /// Live registered clients (deployments).
+    registered: AtomicUsize,
 }
 
-impl Shared {
-    /// Pop from our own deque (LIFO: newest first, best locality).
-    fn pop_local(&self, w: usize) -> Option<Task> {
-        self.queues[w].lock().unwrap().pop_back()
-    }
-
-    /// Steal from another worker's deque (FIFO: oldest first, biggest
-    /// remaining work under the planner's size-ordered submission).
-    fn steal(&self, w: usize) -> Option<Task> {
-        let n = self.queues.len();
-        for i in 1..n {
-            if let Some(t) = self.queues[(w + i) % n].lock().unwrap().pop_front() {
-                return Some(t);
-            }
-        }
-        None
-    }
-}
-
-fn worker_loop(shared: Arc<Shared>, w: usize) {
+fn worker_loop(shared: Arc<Shared>) {
     loop {
-        // Reserve one task (or sleep until one exists / shutdown).
-        {
-            let mut pending = shared.pending.lock().unwrap();
+        let (tag, task) = {
+            let mut state = shared.state.lock().unwrap();
             loop {
-                if *pending > 0 {
-                    *pending -= 1;
-                    break;
+                if let Some(claimed) = state.claim() {
+                    break claimed;
                 }
                 if shared.shutdown.load(Ordering::Acquire) {
                     return;
                 }
-                pending = shared.wakeup.wait(pending).unwrap();
+                state = shared.wakeup.wait(state).unwrap();
             }
-        }
-        // A reservation guarantees a task exists somewhere; tasks are pushed
-        // before `pending` is incremented, so this loop terminates
-        // immediately in practice.
-        let task = loop {
-            if let Some(t) = shared.pop_local(w) {
-                break t;
-            }
-            if let Some(t) = shared.steal(w) {
-                break t;
-            }
-            std::hint::spin_loop();
         };
-        task();
+        // Panics must not kill the worker: `run` observes them via its
+        // latch wrapper; `spawn` callers handle completion themselves
+        // (e.g. the batcher's chunk guard).
+        let _ = panic::catch_unwind(AssertUnwindSafe(task));
+        let mut state = shared.state.lock().unwrap();
+        let gone = match state.deployments.get_mut(&tag) {
+            Some(d) => {
+                d.active -= 1;
+                d.closed && d.active == 0 && d.queue.is_empty()
+            }
+            None => false,
+        };
+        if gone {
+            state.deployments.remove(&tag);
+        }
     }
 }
 
-/// Completion latch for one submitted job.
+/// Completion latch for one blocking job ([`PoolClient::run`]).
 struct Latch {
     state: Mutex<LatchState>,
     done: Condvar,
@@ -128,83 +195,86 @@ impl Latch {
     }
 }
 
-/// A persistent pool of work-stealing workers.
+/// A pool of work-stealing workers shared by many deployments.
 ///
-/// Workers are *additional* threads: a pool with budget T runs T workers and
-/// the thread calling [`WorkerPool::run`] blocks (it does not execute
-/// tasks), so T is the engine's compute parallelism.
-pub struct WorkerPool {
+/// Workers are *additional* threads: a pool with `threads` workers runs
+/// that many, and a thread blocking in [`PoolClient::run`] does not execute
+/// tasks, so `threads` is the total compute parallelism available to every
+/// registered deployment combined.
+pub struct SharedPool {
     shared: Arc<Shared>,
     workers: Vec<std::thread::JoinHandle<()>>,
+    threads: usize,
 }
 
-impl WorkerPool {
+impl SharedPool {
     /// Spawn a pool with `threads` workers (min 1).
-    pub fn new(threads: usize) -> WorkerPool {
+    pub fn new(threads: usize) -> Arc<SharedPool> {
         let threads = threads.max(1);
         let shared = Arc::new(Shared {
-            queues: (0..threads).map(|_| Mutex::new(VecDeque::new())).collect(),
-            pending: Mutex::new(0),
+            state: Mutex::new(PoolState::default()),
             wakeup: Condvar::new(),
             shutdown: AtomicBool::new(false),
-            cursor: AtomicUsize::new(0),
+            next_tag: AtomicU64::new(0),
+            registered: AtomicUsize::new(0),
         });
         let workers = (0..threads)
             .map(|w| {
                 let shared = shared.clone();
+                WORKERS_SPAWNED.fetch_add(1, Ordering::SeqCst);
                 std::thread::Builder::new()
                     .name(format!("exec-worker-{w}"))
-                    .spawn(move || worker_loop(shared, w))
+                    .spawn(move || worker_loop(shared))
                     .expect("spawn exec worker")
             })
             .collect();
-        WorkerPool { shared, workers }
+        Arc::new(SharedPool { shared, workers, threads })
     }
 
-    /// Number of workers.
+    /// Number of worker threads.
     pub fn threads(&self) -> usize {
-        self.workers.len()
+        self.threads
     }
 
-    /// Run a job: execute every task on the pool, blocking until all have
-    /// finished. Panics (after the job has fully drained) if any task
-    /// panicked. Concurrent `run` calls from different threads are safe;
-    /// their tasks interleave in the deques.
-    pub fn run(&self, tasks: Vec<Task>) {
-        let n = tasks.len();
-        if n == 0 {
-            return;
-        }
-        let latch = Arc::new(Latch::new(n));
-        let start = self.shared.cursor.fetch_add(n, Ordering::Relaxed);
-        for (i, task) in tasks.into_iter().enumerate() {
-            let latch = latch.clone();
-            let wrapped: Task = Box::new(move || {
-                let result = panic::catch_unwind(AssertUnwindSafe(task));
-                latch.complete(result.is_err());
-            });
-            let q = (start + i) % self.shared.queues.len();
-            self.shared.queues[q].lock().unwrap().push_back(wrapped);
-        }
-        // Publish the whole job with one increment, after every push, so a
-        // reservation always finds a task and the submit path takes the
-        // contended pending lock once per job instead of once per task.
+    /// Live registered clients (deployments sharing this pool).
+    pub fn registered(&self) -> usize {
+        self.shared.registered.load(Ordering::SeqCst)
+    }
+
+    /// Register a deployment with a thread `budget` (clamped to ≥ 1; may
+    /// exceed [`SharedPool::threads`], in which case it is simply never the
+    /// binding constraint). The client's vtime joins the live virtual
+    /// clock at its first [`PoolClient::spawn`] (see the catch-up rule
+    /// there), so the initial value here is immaterial.
+    ///
+    /// Associated function (the client keeps the pool alive, so it needs
+    /// the `Arc`, and `self: &Arc<Self>` receivers are not stable Rust).
+    pub fn register(pool: &Arc<SharedPool>, label: &str, budget: usize) -> PoolClient {
+        let tag = pool.shared.next_tag.fetch_add(1, Ordering::Relaxed);
+        let budget = budget.max(1);
         {
-            let mut pending = self.shared.pending.lock().unwrap();
-            *pending += n;
-            self.shared.wakeup.notify_all();
+            let mut state = pool.shared.state.lock().unwrap();
+            state.deployments.insert(
+                tag,
+                DeploymentQueue {
+                    queue: VecDeque::new(),
+                    budget,
+                    active: 0,
+                    closed: false,
+                    vtime: 0.0,
+                },
+            );
         }
-        if latch.wait() {
-            panic!("exec worker task panicked");
-        }
+        pool.shared.registered.fetch_add(1, Ordering::SeqCst);
+        PoolClient { pool: pool.clone(), tag, budget, label: label.to_string() }
     }
 }
 
-impl Drop for WorkerPool {
+impl Drop for SharedPool {
     fn drop(&mut self) {
         self.shared.shutdown.store(true, Ordering::Release);
         // Wake everyone so parked workers observe the flag.
-        let _guard = self.shared.pending.lock().unwrap();
+        let _guard = self.shared.state.lock().unwrap();
         self.shared.wakeup.notify_all();
         drop(_guard);
         for w in self.workers.drain(..) {
@@ -213,10 +283,145 @@ impl Drop for WorkerPool {
     }
 }
 
+/// A deployment's handle onto a [`SharedPool`]: the tagged queue tasks are
+/// submitted through. Dropping the client unregisters the deployment
+/// (still-queued tasks are discarded; in-flight tasks finish).
+pub struct PoolClient {
+    pool: Arc<SharedPool>,
+    tag: u64,
+    budget: usize,
+    label: String,
+}
+
+impl PoolClient {
+    /// This deployment's thread budget.
+    pub fn budget(&self) -> usize {
+        self.budget
+    }
+
+    /// The label the client registered under (diagnostics only).
+    pub fn label(&self) -> &str {
+        &self.label
+    }
+
+    /// The pool this client is registered on.
+    pub fn pool(&self) -> &Arc<SharedPool> {
+        &self.pool
+    }
+
+    /// Enqueue a batch of tasks, fire-and-forget. Callers that need
+    /// completion signalling wrap the tasks themselves (see
+    /// `coordinator::batcher`); callers that need blocking semantics use
+    /// [`PoolClient::run`].
+    pub fn spawn(&self, tasks: Vec<Task>) {
+        if tasks.is_empty() {
+            return;
+        }
+        let mut state = self.pool.shared.state.lock().unwrap();
+        // WFQ catch-up: a deployment going idle → backlogged must not
+        // replay service time it never used — a stale-low vtime would let
+        // it monopolize every freed worker until it "caught up", starving
+        // the deployments that were busy all along. Raise it to the floor
+        // of the currently-backlogged vtimes before enqueueing.
+        let idle = state
+            .deployments
+            .get(&self.tag)
+            .map_or(true, |d| d.queue.is_empty() && d.active == 0);
+        if idle {
+            let floor = state
+                .deployments
+                .values()
+                .filter(|d| !d.queue.is_empty() || d.active > 0)
+                .map(|d| d.vtime)
+                .fold(f64::INFINITY, f64::min);
+            if floor.is_finite() {
+                let d = state.deployments.get_mut(&self.tag).expect("client is registered");
+                d.vtime = d.vtime.max(floor);
+            }
+        }
+        let d = state.deployments.get_mut(&self.tag).expect("client is registered");
+        for t in tasks {
+            d.queue.push_back(t);
+        }
+        self.pool.shared.wakeup.notify_all();
+    }
+
+    /// Run a job: execute every task on the pool, blocking until all have
+    /// finished. Panics (after the job has fully drained) if any task
+    /// panicked. Concurrent `run` calls from different threads are safe.
+    pub fn run(&self, tasks: Vec<Task>) {
+        let n = tasks.len();
+        if n == 0 {
+            return;
+        }
+        let latch = Arc::new(Latch::new(n));
+        let wrapped: Vec<Task> = tasks
+            .into_iter()
+            .map(|task| {
+                let latch = latch.clone();
+                Box::new(move || {
+                    let result = panic::catch_unwind(AssertUnwindSafe(task));
+                    latch.complete(result.is_err());
+                }) as Task
+            })
+            .collect();
+        self.spawn(wrapped);
+        if latch.wait() {
+            panic!("exec worker task panicked");
+        }
+    }
+}
+
+impl Drop for PoolClient {
+    fn drop(&mut self) {
+        {
+            let mut state = self.pool.shared.state.lock().unwrap();
+            let gone = match state.deployments.get_mut(&self.tag) {
+                Some(d) => {
+                    d.closed = true;
+                    d.queue.clear();
+                    d.active == 0
+                }
+                None => false,
+            };
+            if gone {
+                state.deployments.remove(&self.tag);
+            }
+        }
+        self.pool.shared.registered.fetch_sub(1, Ordering::SeqCst);
+    }
+}
+
+/// A standalone pool with a single anonymous deployment — the facade the
+/// [`crate::exec::ParallelEngine`] and one-off callers use. Equivalent to
+/// `SharedPool::new(threads)` plus one client with `budget == threads`.
+pub struct WorkerPool {
+    client: PoolClient,
+}
+
+impl WorkerPool {
+    /// Spawn a pool with `threads` workers (min 1).
+    pub fn new(threads: usize) -> WorkerPool {
+        let pool = SharedPool::new(threads);
+        let client = SharedPool::register(&pool, "standalone", threads.max(1));
+        WorkerPool { client }
+    }
+
+    /// Number of workers.
+    pub fn threads(&self) -> usize {
+        self.client.pool().threads()
+    }
+
+    /// See [`PoolClient::run`].
+    pub fn run(&self, tasks: Vec<Task>) {
+        self.client.run(tasks)
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
-    use std::sync::atomic::AtomicU64;
+    use std::time::Duration;
 
     #[test]
     fn runs_every_task_exactly_once() {
@@ -237,8 +442,8 @@ mod tests {
 
     #[test]
     fn stealing_drains_imbalanced_load() {
-        // One long task plus many short ones: with stealing, total wall time
-        // is bounded by the long task, and everything completes.
+        // One long task plus many short ones: with work conservation, total
+        // wall time is bounded by the long task, and everything completes.
         let pool = WorkerPool::new(4);
         let done = Arc::new(AtomicU64::new(0));
         let mut tasks: Vec<Task> = Vec::new();
@@ -246,7 +451,7 @@ mod tests {
             let done = done.clone();
             tasks.push(Box::new(move || {
                 if i == 0 {
-                    std::thread::sleep(std::time::Duration::from_millis(20));
+                    std::thread::sleep(Duration::from_millis(20));
                 }
                 done.fetch_add(1, Ordering::Relaxed);
             }));
@@ -337,5 +542,200 @@ mod tests {
             h.fetch_add(7, Ordering::Relaxed);
         })]);
         assert_eq!(hits.load(Ordering::Relaxed), 7);
+    }
+
+    #[test]
+    fn register_unregister_tracks_clients() {
+        let pool = SharedPool::new(2);
+        assert_eq!(pool.registered(), 0);
+        let a = SharedPool::register(&pool, "a", 1);
+        let b = SharedPool::register(&pool, "b", 2);
+        assert_eq!(pool.registered(), 2);
+        assert_eq!(a.budget(), 1);
+        assert_eq!(b.label(), "b");
+        drop(a);
+        assert_eq!(pool.registered(), 1);
+        drop(b);
+        assert_eq!(pool.registered(), 0);
+        // Re-registering after drain works.
+        let c = SharedPool::register(&pool, "c", 9);
+        assert_eq!(c.budget(), 9);
+        let hits = Arc::new(AtomicU64::new(0));
+        let h = hits.clone();
+        c.run(vec![Box::new(move || {
+            h.fetch_add(1, Ordering::Relaxed);
+        })]);
+        assert_eq!(hits.load(Ordering::Relaxed), 1);
+    }
+
+    #[test]
+    fn idle_budgets_are_stolen() {
+        // A budget-1 client alone on a 4-worker pool may exceed its budget:
+        // the other budgets are idle, so their workers steal its work.
+        let pool = SharedPool::new(4);
+        let _other = SharedPool::register(&pool, "idle", 3);
+        let solo = SharedPool::register(&pool, "solo", 1);
+        let active = Arc::new(AtomicU64::new(0));
+        let peak = Arc::new(AtomicU64::new(0));
+        let tasks: Vec<Task> = (0..32)
+            .map(|_| {
+                let active = active.clone();
+                let peak = peak.clone();
+                Box::new(move || {
+                    let a = active.fetch_add(1, Ordering::SeqCst) + 1;
+                    peak.fetch_max(a, Ordering::SeqCst);
+                    std::thread::sleep(Duration::from_millis(5));
+                    active.fetch_sub(1, Ordering::SeqCst);
+                }) as Task
+            })
+            .collect();
+        solo.run(tasks);
+        assert!(peak.load(Ordering::SeqCst) > 1, "no stealing beyond budget");
+    }
+
+    #[test]
+    fn weighted_fair_claiming_respects_budgets() {
+        // One worker shared by budgets 1 and 3: claim counts must converge
+        // to ~1:3, even though instantaneous concurrency is always 1.
+        let pool = SharedPool::new(1);
+        let a = SharedPool::register(&pool, "a", 1);
+        let b = SharedPool::register(&pool, "b", 3);
+        let order = Arc::new(Mutex::new(Vec::new()));
+        let done = Arc::new(AtomicU64::new(0));
+        // Hold the only worker while both queues fill.
+        let gate = Arc::new(AtomicBool::new(false));
+        {
+            let gate = gate.clone();
+            a.spawn(vec![Box::new(move || {
+                while !gate.load(Ordering::Acquire) {
+                    std::thread::sleep(Duration::from_millis(1));
+                }
+            }) as Task]);
+        }
+        let mk = |who: char| -> Task {
+            let order = order.clone();
+            let done = done.clone();
+            Box::new(move || {
+                order.lock().unwrap().push(who);
+                done.fetch_add(1, Ordering::SeqCst);
+            })
+        };
+        a.spawn((0..8).map(|_| mk('a')).collect());
+        b.spawn((0..8).map(|_| mk('b')).collect());
+        gate.store(true, Ordering::Release);
+        while done.load(Ordering::SeqCst) < 16 {
+            std::thread::sleep(Duration::from_millis(1));
+        }
+        let order = order.lock().unwrap();
+        let b_first_8 = order[..8].iter().filter(|&&c| c == 'b').count();
+        assert!(
+            b_first_8 >= 5,
+            "budget-3 deployment got only {b_first_8}/8 of the first claims: {order:?}"
+        );
+        assert_eq!(order.len(), 16);
+    }
+
+    #[test]
+    fn idle_deployment_cannot_replay_unused_vtime() {
+        // Regression: before the spawn-time catch-up, a long-idle client
+        // kept a stale-low vtime and monopolized every freed worker until
+        // it "caught up" with the busy client's service history.
+        let pool = SharedPool::new(1);
+        let a = SharedPool::register(&pool, "busy", 1);
+        let b = SharedPool::register(&pool, "bursty", 1);
+        // `a` accumulates service history while `b` sits idle.
+        for _ in 0..50 {
+            let h = Arc::new(AtomicU64::new(0));
+            let hh = h.clone();
+            a.run(vec![Box::new(move || {
+                hh.fetch_add(1, Ordering::Relaxed);
+            }) as Task]);
+        }
+        // Hold the worker, queue 4 tasks each, release: b's burst must
+        // interleave with a's (~1:1 at equal budgets), not sweep the queue.
+        let gate = Arc::new(AtomicBool::new(false));
+        {
+            let gate = gate.clone();
+            a.spawn(vec![Box::new(move || {
+                while !gate.load(Ordering::Acquire) {
+                    std::thread::sleep(Duration::from_millis(1));
+                }
+            }) as Task]);
+        }
+        let order = Arc::new(Mutex::new(Vec::new()));
+        let done = Arc::new(AtomicU64::new(0));
+        let mk = |who: char| -> Task {
+            let order = order.clone();
+            let done = done.clone();
+            Box::new(move || {
+                order.lock().unwrap().push(who);
+                done.fetch_add(1, Ordering::SeqCst);
+            })
+        };
+        a.spawn((0..4).map(|_| mk('a')).collect());
+        b.spawn((0..4).map(|_| mk('b')).collect());
+        gate.store(true, Ordering::Release);
+        while done.load(Ordering::SeqCst) < 8 {
+            std::thread::sleep(Duration::from_millis(1));
+        }
+        let order = order.lock().unwrap();
+        let b_first_4 = order[..4].iter().filter(|&&c| c == 'b').count();
+        assert!(
+            b_first_4 <= 3,
+            "bursty deployment must not sweep the first slots: {order:?}"
+        );
+    }
+
+    #[test]
+    fn dropped_client_discards_queued_tasks() {
+        // Queue work behind a blocker, then drop the client: queued tasks
+        // are discarded, in-flight ones finish, and the pool stays healthy.
+        let pool = SharedPool::new(1);
+        let victim = SharedPool::register(&pool, "victim", 1);
+        let survivor = SharedPool::register(&pool, "survivor", 1);
+        let gate = Arc::new(AtomicBool::new(false));
+        let ran = Arc::new(AtomicU64::new(0));
+        {
+            let gate = gate.clone();
+            let ran = ran.clone();
+            victim.spawn(vec![Box::new(move || {
+                while !gate.load(Ordering::Acquire) {
+                    std::thread::sleep(Duration::from_millis(1));
+                }
+                ran.fetch_add(1, Ordering::SeqCst);
+            }) as Task]);
+        }
+        // Wait for the blocker to be claimed so it is in-flight, not queued.
+        let deadline = std::time::Instant::now() + Duration::from_secs(5);
+        while pool.shared.state.lock().unwrap().deployments.values().all(|d| d.active == 0) {
+            assert!(std::time::Instant::now() < deadline, "blocker never claimed");
+            std::thread::sleep(Duration::from_millis(1));
+        }
+        {
+            let ran = ran.clone();
+            victim.spawn(vec![Box::new(move || {
+                ran.fetch_add(100, Ordering::SeqCst);
+            }) as Task]);
+        }
+        drop(victim); // discards the queued task, keeps the in-flight one
+        gate.store(true, Ordering::Release);
+        // The survivor still gets service.
+        let hits = Arc::new(AtomicU64::new(0));
+        let h = hits.clone();
+        survivor.run(vec![Box::new(move || {
+            h.fetch_add(1, Ordering::Relaxed);
+        })]);
+        assert_eq!(hits.load(Ordering::Relaxed), 1);
+        // In-flight blocker ran; the queued task never did.
+        assert_eq!(ran.load(Ordering::SeqCst), 1);
+        assert_eq!(pool.registered(), 1);
+    }
+
+    #[test]
+    fn spawned_thread_counter_monotone() {
+        // `>=`: other tests in this binary spawn pools concurrently.
+        let before = worker_threads_spawned();
+        let _pool = SharedPool::new(3);
+        assert!(worker_threads_spawned() - before >= 3);
     }
 }

@@ -15,8 +15,10 @@
 //!   that multiplies any engine across cores while staying bit-exact with
 //!   the serial implementation under its default policy.
 //! * **Coordinator** ([`coordinator`]): a serving layer with dynamic
-//!   batching, a model registry, an engine auto-selector (serial and
-//!   threaded candidates), and per-deployment thread budgets.
+//!   batching fused onto one server-shared work-stealing pool (request
+//!   chunks flow straight onto worker queues; per-deployment thread
+//!   budgets with weighted fair stealing), a model registry, and an
+//!   engine auto-selector (serial and threaded candidates).
 //! * **Tensor path** ([`runtime`], `engine::tensor`): forests AOT-compiled
 //!   through JAX/Pallas to HLO and executed via PJRT.
 //! * **Substrates**: forest trainers ([`forest::builder`]), synthetic

@@ -65,11 +65,15 @@ USAGE: arbors <command> [flags]
   select   --model model.json [--device a53|exynos] [--n N] [--threads N]
            [--precision f32|i16|i8]  (restricts the ranking to one tier;
            --threads adds row-sharded candidates like RS×4t)
-  bench    --exp <table2|table3|table4|table5|fig1|fig2|ablation|tensor|scaling|int8>
+  bench    --exp <table2|table3|table4|table5|fig1|fig2|ablation|tensor|scaling|int8|serving>
            [--threads N] [--precision P]  (scale via ARBORS_SCALE=quick|default|full;
-           int8 emits the i16-vs-i8 tier comparison to results/int8_tiers.json)
+           int8 -> results/int8_tiers.json; serving drives a 2-model server,
+           shared-pool vs separate-pools, -> results/serving.json)
   serve    --dataset <name> [--engine E] [--precision P | --quant] [--requests N]
-           [--threads N] [--listen 127.0.0.1:7878]   (JSON-over-TCP; see coordinator::net)
+           [--threads N] [--budget B] [--listen 127.0.0.1:7878]
+           (--threads sizes the server-wide shared exec pool, default = host
+           cores; --budget is this model's worker entitlement on it,
+           default = pool size; JSON-over-TCP via coordinator::net)
   datasets
 ";
 
@@ -262,10 +266,11 @@ fn cmd_select(args: &Args) -> Result<()> {
 
 fn cmd_bench(args: &Args) -> Result<()> {
     let exp = args.get_or("exp", "table5");
-    // Only the scaling experiment is threaded / precision-filtered; leaving
-    // the flags unconsumed elsewhere makes `finish()` reject them loudly
-    // instead of silently ignoring them.
-    let threads = if exp == "scaling" { args.usize_or("threads", 4)? } else { 1 };
+    // Only the scaling/serving experiments are threaded (and only scaling
+    // precision-filtered); leaving the flags unconsumed elsewhere makes
+    // `finish()` reject them loudly instead of silently ignoring them.
+    let threads =
+        if exp == "scaling" || exp == "serving" { args.usize_or("threads", 4)? } else { 1 };
     let precision = if exp == "scaling" { precision_flag(args)? } else { None };
     args.finish()?;
     let s = scale();
@@ -281,6 +286,7 @@ fn cmd_bench(args: &Args) -> Result<()> {
         "tensor" => experiments::tensor_vs_native(s.repeats)?,
         "scaling" => experiments::scaling(&s, threads, precision),
         "int8" => experiments::int8_tiers(&s),
+        "serving" => experiments::serving(&s, threads),
         other => bail!("unknown experiment '{other}'"),
     };
     experiments::archive(&exp, &text);
@@ -296,10 +302,17 @@ fn cmd_serve(args: &Args) -> Result<()> {
         .context("bad --engine")?;
     let precision = parse_precision(args)?;
     let n_requests = args.usize_or("requests", 10_000)?;
-    let threads = args.usize_or("threads", 1)?;
+    // --threads sizes the server-wide shared pool (default: host cores);
+    // --budget is this model's worker entitlement on it (default: the whole
+    // pool — a single model may use every worker).
+    let pool_size = match args.usize_opt("threads")? {
+        Some(t) => t.max(1),
+        None => std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1),
+    };
+    let budget = args.usize_opt("budget")?.unwrap_or(pool_size).max(1);
     let listen = args.get("listen").map(str::to_string);
     args.finish()?;
-    let config = BatchConfig { exec_threads: threads, ..BatchConfig::default() };
+    let config = BatchConfig { exec_threads: budget, ..BatchConfig::default() };
 
     if let Some(addr) = listen {
         // Network mode: train, deploy, and serve the JSON-over-TCP protocol
@@ -307,7 +320,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
         let (train, _test) = ds.split(0.2, 7);
         println!("training {trees} x {leaves} RF on {} ...", train.name);
         let forest = arbors::bench::harness::cached_rf(&train, trees, leaves);
-        let server = std::sync::Arc::new(Server::new());
+        let server = std::sync::Arc::new(Server::with_pool_size(pool_size));
         server.deploy("model", &forest, kind, precision, config)?;
         let net = arbors::coordinator::NetServer::start(server.clone(), &addr)?;
         println!(
@@ -323,9 +336,12 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let (train, test) = ds.split(0.2, 7);
     println!("training {} x {} RF on {} ...", trees, leaves, train.name);
     let forest = arbors::bench::harness::cached_rf(&train, trees, leaves);
-    let server = Server::new();
+    let server = Server::with_pool_size(pool_size);
     server.deploy("model", &forest, kind, precision, config)?;
-    println!("serving {n_requests} requests through the dynamic batcher ...");
+    println!(
+        "serving {n_requests} requests through the fused batcher \
+         (pool {pool_size} workers, budget {budget}) ..."
+    );
 
     let dep = server.model("model").unwrap();
     let sw = arbors::util::Stopwatch::start();

@@ -28,9 +28,10 @@ use stub as xla;
 #[cfg(feature = "xla")]
 compile_error!(
     "the `xla` feature needs the real backend: add \
-     `xla = { git = \"https://github.com/LaurentMazare/xla-rs\" }` to \
-     rust/Cargo.toml [dependencies] and delete this compile_error! guard \
-     (rust/src/runtime/mod.rs)"
+     `xla = { git = \"https://github.com/LaurentMazare/xla-rs\", optional = true }` \
+     to rust/Cargo.toml [dependencies], change the feature to \
+     `xla = [\"dep:xla\"]`, and delete this compile_error! guard \
+     (rust/src/runtime/mod.rs) — the opt-in CI `xla` job applies this patch"
 );
 
 /// Numeric representation of an artifact (mirrors `Precision`).

@@ -1,0 +1,269 @@
+//! Property tests for the fused serving scheduler (ISSUE 3): one
+//! server-shared work-stealing pool from request to SIMD lane.
+//!
+//! Invariants under test:
+//!
+//! * **Bit-exactness**: fused shared-pool execution equals serial
+//!   `Engine::predict_batch` bit-for-bit under `ShardPolicy::Exact` row
+//!   plans, for every engine tier (f32 / i16 / i8), every pool size 1–8,
+//!   every per-deployment budget, and with ≥ 2 deployments running
+//!   concurrently.
+//! * **Pairing**: every reply carries exactly the scores of the row its
+//!   requester submitted, across concurrent clients, deployments and batch
+//!   sizes — including under backpressure (`Overloaded`).
+//! * **One pool**: a `Server` with two deployments spawns exactly one
+//!   worker pool; deploy/redeploy/undeploy never add exec threads.
+//!
+//! Tests serialize on a file-local mutex: the spawned-worker-thread counter
+//! is process-wide, and unserialized pool spawns would make its deltas
+//! meaningless.
+
+use std::sync::{Arc, Mutex, MutexGuard};
+use std::time::Duration;
+
+use arbors::coordinator::{BatchConfig, ServeError, Server};
+use arbors::data::DatasetId;
+use arbors::engine::{build, EngineKind, Precision};
+use arbors::forest::builder::{train_random_forest, RfParams, TreeParams};
+use arbors::forest::Forest;
+
+static SERIAL: Mutex<()> = Mutex::new(());
+
+fn lock() -> MutexGuard<'static, ()> {
+    // A panicking test must not wedge the rest of the file.
+    SERIAL.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+fn forest(trees: usize) -> (Forest, arbors::data::Dataset) {
+    let ds = DatasetId::Magic.generate(700, 0xF5);
+    let f = train_random_forest(
+        &ds.x,
+        &ds.labels,
+        ds.d,
+        ds.n_classes,
+        RfParams {
+            n_trees: trees,
+            tree: TreeParams { max_leaves: 16, min_samples_leaf: 2, mtry: 0 },
+            ..Default::default()
+        },
+    );
+    (f, ds)
+}
+
+/// Exactly one pool for any number of deployments, across redeploys.
+#[test]
+fn one_pool_for_all_deployments() {
+    let _g = lock();
+    let (f, ds) = forest(10);
+    let before = arbors::exec::worker_threads_spawned();
+    let server = Server::with_pool_size(3);
+    server
+        .deploy(
+            "a",
+            &f,
+            EngineKind::Rs,
+            Precision::F32,
+            BatchConfig { exec_threads: 2, ..BatchConfig::default() },
+        )
+        .unwrap();
+    server
+        .deploy(
+            "b",
+            &f,
+            EngineKind::Vqs,
+            Precision::I16,
+            BatchConfig { exec_threads: 2, ..BatchConfig::default() },
+        )
+        .unwrap();
+    assert_eq!(server.pool_threads(), 3);
+    assert_eq!(server.pool_deployments(), 2);
+    // Both deployments actually serve through that pool.
+    assert_eq!(server.predict("a", ds.row(0).to_vec()).unwrap().len(), f.n_classes);
+    assert_eq!(server.predict("b", ds.row(1).to_vec()).unwrap().len(), f.n_classes);
+    // The server spawned its 3 pool workers and nothing else — deployments
+    // (and their flushes) added zero exec threads.
+    assert_eq!(
+        arbors::exec::worker_threads_spawned() - before,
+        3,
+        "deployments must not spawn their own pools"
+    );
+    // Redeploy tears the old registration down and adds a fresh one; still
+    // the same single pool.
+    server
+        .deploy("a", &f, EngineKind::Qs, Precision::F32, BatchConfig::default())
+        .unwrap();
+    assert_eq!(arbors::exec::worker_threads_spawned() - before, 3);
+    assert_eq!(server.predict("a", ds.row(2).to_vec()).unwrap().len(), f.n_classes);
+    // Undeploy unregisters (allow the drained client's drop to land).
+    assert!(server.undeploy("b"));
+    for _ in 0..500 {
+        if server.pool_deployments() == 1 {
+            break;
+        }
+        std::thread::sleep(Duration::from_millis(2));
+    }
+    assert_eq!(server.pool_deployments(), 1);
+    assert_eq!(server.pool_threads(), 3);
+}
+
+/// The acceptance property: fused execution is bit-exact with the serial
+/// engine and replies stay paired, for every tier × pool size 1–8, with
+/// three concurrent deployments and three concurrent clients each.
+#[test]
+fn fused_bit_exact_and_paired_across_tiers_pools_deployments() {
+    let _g = lock();
+    let (f, ds) = forest(12);
+    let tiers: [(EngineKind, Precision); 3] = [
+        (EngineKind::Rs, Precision::F32),
+        (EngineKind::Rs, Precision::I16),
+        (EngineKind::Vqs, Precision::I8),
+    ];
+    for pool_size in [1usize, 2, 5, 8] {
+        let server = Arc::new(Server::with_pool_size(pool_size));
+        let mut refs: Vec<Arc<Vec<f32>>> = Vec::new();
+        for (mi, &(kind, precision)) in tiers.iter().enumerate() {
+            let config = BatchConfig {
+                // Different batch shapes per deployment.
+                max_batch: 16 << mi,
+                max_delay: Duration::from_micros(200),
+                queue_cap: 10_000,
+                workers: 1,
+                // Budgets both below and above the pool size.
+                exec_threads: 1 + (pool_size + mi) % 4,
+            };
+            server.deploy(&format!("m{mi}"), &f, kind, precision, config).unwrap();
+            // The serial reference builds the same engine the deployment
+            // built (same auto-chosen quant scale), so equality is bitwise.
+            let serial = build(kind, precision, &f, None).unwrap();
+            refs.push(Arc::new(serial.predict(&ds.x)));
+        }
+        assert_eq!(server.pool_deployments(), 3);
+        assert_eq!(server.pool_threads(), pool_size);
+        let mut handles = Vec::new();
+        for mi in 0..tiers.len() {
+            for t in 0..3usize {
+                let server = server.clone();
+                let ds = ds.clone();
+                let want = refs[mi].clone();
+                handles.push(std::thread::spawn(move || {
+                    let dep = server.model(&format!("m{mi}")).unwrap();
+                    for r in 0..60usize {
+                        let i = (t * 61 + r * 7 + mi * 13) % ds.n;
+                        let got = dep.batcher.predict(ds.row(i).to_vec()).unwrap();
+                        assert_eq!(
+                            &got[..],
+                            &want[i * ds.n_classes..(i + 1) * ds.n_classes],
+                            "pool={pool_size} model=m{mi} client={t} row={i}: \
+                             reply not bit-exact / mispaired"
+                        );
+                    }
+                }));
+            }
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+        // Nothing was lost: 3 deployments × 3 clients × 60 requests.
+        let total: u64 = (0..tiers.len())
+            .map(|mi| {
+                server
+                    .model(&format!("m{mi}"))
+                    .unwrap()
+                    .batcher
+                    .metrics
+                    .completed
+                    .load(std::sync::atomic::Ordering::Relaxed)
+            })
+            .sum();
+        assert_eq!(total, 3 * 3 * 60);
+    }
+}
+
+/// Backpressure: `Overloaded` rejections are clean — every accepted request
+/// still gets a correctly-paired, bit-exact reply, and the accounting adds
+/// up.
+#[test]
+fn backpressure_keeps_replies_paired() {
+    let _g = lock();
+    let (f, ds) = forest(8);
+    let server = Server::with_pool_size(2);
+    server
+        .deploy(
+            "m",
+            &f,
+            EngineKind::Vqs,
+            Precision::F32,
+            BatchConfig {
+                max_batch: 1024,
+                max_delay: Duration::from_millis(200),
+                queue_cap: 4,
+                workers: 1,
+                exec_threads: 2,
+            },
+        )
+        .unwrap();
+    let serial = build(EngineKind::Vqs, Precision::F32, &f, None).unwrap();
+    let want = serial.predict(&ds.x);
+    let dep = server.model("m").unwrap();
+    let mut accepted = Vec::new();
+    let mut rejected = 0usize;
+    for i in 0..256 {
+        match dep.batcher.submit(ds.row(i % ds.n).to_vec()) {
+            Ok(rx) => accepted.push((i % ds.n, rx)),
+            Err(ServeError::Overloaded) => rejected += 1,
+            Err(e) => panic!("unexpected error: {e}"),
+        }
+    }
+    assert!(rejected > 0, "queue_cap=4 must reject under a 256-request burst");
+    for (i, rx) in accepted.iter_mut() {
+        let got = rx.recv().unwrap().unwrap();
+        assert_eq!(
+            &got[..],
+            &want[*i * ds.n_classes..(*i + 1) * ds.n_classes],
+            "row {i} mispaired under backpressure"
+        );
+    }
+    let m = &dep.batcher.metrics;
+    use std::sync::atomic::Ordering;
+    assert_eq!(m.rejected.load(Ordering::Relaxed) as usize, rejected);
+    assert_eq!(m.completed.load(Ordering::Relaxed) as usize, accepted.len());
+    assert_eq!(
+        m.requests.load(Ordering::Relaxed) as usize,
+        accepted.len() + rejected,
+        "accepted + rejected must cover every submission"
+    );
+}
+
+/// Shutdown drain end-to-end through the server: undeploying while requests
+/// are queued replies `Shutdown` (never hangs, never drops a reply channel
+/// without an answer).
+#[test]
+fn undeploy_sheds_queued_requests() {
+    let _g = lock();
+    let (f, ds) = forest(6);
+    let server = Server::with_pool_size(2);
+    server
+        .deploy(
+            "m",
+            &f,
+            EngineKind::Naive,
+            Precision::F32,
+            BatchConfig {
+                max_batch: 1024,
+                max_delay: Duration::from_secs(30),
+                queue_cap: 1024,
+                workers: 1,
+                exec_threads: 2,
+            },
+        )
+        .unwrap();
+    let dep = server.model("m").unwrap();
+    let replies: Vec<_> =
+        (0..12).map(|i| dep.batcher.submit(ds.row(i).to_vec()).unwrap()).collect();
+    std::thread::sleep(Duration::from_millis(20));
+    assert!(server.undeploy("m"));
+    drop(dep); // the last Deployment handle: batcher drop runs its drain
+    for r in replies {
+        assert_eq!(r.recv().unwrap(), Err(ServeError::Shutdown));
+    }
+}

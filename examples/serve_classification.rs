@@ -61,6 +61,7 @@ fn main() -> anyhow::Result<()> {
             // Let the selector weigh threaded candidates (e.g. RS×4t) and
             // register the winner's budget on the server-shared pool.
             exec_threads: 4,
+            drain_timeout: None,
         },
     )?;
     eprint!("{}", sel.report());

@@ -562,8 +562,7 @@ pub fn scaling(scale: &Scale, max_threads: usize, precision: Option<Precision>) 
     let ds = DatasetId::Magic.generate(DatasetId::Magic.default_n(), 0xD5 ^ 64);
     let (train, _) = ds.split(0.2, 7);
     let shapes = [((scale.cls_trees / 4).max(1), 32usize), (scale.cls_trees, 64)];
-    // Default mix, or a whole tier when `--precision` narrows the sweep
-    // (the int8 tier has no RS engine).
+    // Default mix, or a whole tier when `--precision` narrows the sweep.
     let variants: Vec<(EngineKind, Precision)> = match precision {
         None => vec![
             (EngineKind::Rs, Precision::F32),
@@ -660,15 +659,19 @@ pub fn scaling(scale: &Scale, max_threads: usize, precision: Option<Precision>) 
 // ---------------------------------------------------------------------------
 
 /// Extra E: the precision-tier comparison the int8 tier exists for — host
-/// µs/instance and accuracy of the i16 vs i8 engine pairs (NA/QS/VQS) on
-/// synthetic classification datasets, plus each tier's node-merge statistic
-/// and the i8 accumulator mode. Text goes to `results/int8.txt` (via the
+/// µs/instance and accuracy of all five i16-vs-i8 engine pairs
+/// (NA/IE/QS/VQS/RS) on synthetic classification datasets, each tier's
+/// node-merge statistic, the i8 accumulator mode, and a
+/// **per-tree-vs-global scale ablation** (accuracy + accumulator mode under
+/// `choose_scale_i8_per_tree`, plus a synthetic big-forest demo of the
+/// Widened → Native flip). Text goes to `results/int8.txt` (via the
 /// caller's `archive`), machine-readable JSON to `results/int8_tiers.json`.
 pub fn int8_tiers(scale: &Scale) -> String {
+    use crate::quant::choose_scale_i8_per_tree;
     use crate::util::Json;
 
-    let pairs =
-        [(EngineKind::Naive, "NA"), (EngineKind::Qs, "QS"), (EngineKind::Vqs, "VQS")];
+    let pairs: Vec<(EngineKind, &str)> =
+        EngineKind::ALL.iter().map(|&k| (k, k.short())).collect();
     let mut out = String::new();
     out.push_str(&format!(
         "int16 vs int8 precision tiers (scale={}, RF {} trees x 64 leaves)\n\
@@ -686,16 +689,22 @@ pub fn int8_tiers(scale: &Scale) -> String {
         let qf16 = QForest::from_forest(&f, cfg16);
         let cfg8 = choose_scale_i8(&f, 1.0);
         let qf8 = QForest::<i8>::from_forest(&f, cfg8);
+        // Per-tree-vs-global ablation: same forest, per-tree leaf scales.
+        let cfg8pt = choose_scale_i8_per_tree(&f, 1.0);
+        let qf8pt = QForest::<i8>::from_forest_per_tree(&f, cfg8pt);
 
         let acc_f = f.accuracy(&test.x, &test.labels);
         let acc16 = accuracy_of(&qf16.predict_batch(&test.x), &test.labels, f.n_classes);
         let acc8 = accuracy_of(&qf8.predict_batch(&test.x), &test.labels, f.n_classes);
+        let acc8pt =
+            accuracy_of(&qf8pt.predict_batch(&test.x), &test.labels, f.n_classes);
         let merge16 = merge::unique_node_fraction_quant(&qf16);
         let merge8 = merge::unique_node_fraction_quant(&qf8);
 
         out.push_str(&format!(
             "== {} ==\n\
              accuracy: float {:.2}% | i16 {:.2}% (s={:.0}) | i8 {:.2}% (s={:.1}, {} accumulation)\n\
+             per-tree i8 scales: {:.2}% (s={:.1}, {} accumulation) vs global {}\n\
              unique nodes after merging: i16 {:.1}%, i8 {:.1}%\n",
             id.name(),
             100.0 * acc_f,
@@ -704,6 +713,10 @@ pub fn int8_tiers(scale: &Scale) -> String {
             100.0 * acc8,
             cfg8.scale,
             qf8.accum_mode().as_str(),
+            100.0 * acc8pt,
+            cfg8pt.scale,
+            qf8pt.accum_mode().as_str(),
+            qf8.accum_mode().as_str(),
             100.0 * merge16,
             100.0 * merge8,
         ));
@@ -711,9 +724,18 @@ pub fn int8_tiers(scale: &Scale) -> String {
         tw.row_str(&["engine", "i16 µs/inst", "i8 µs/inst", "speedup"]);
         tw.sep();
         let mut engines_json = Vec::new();
-        for (kind, name) in pairs {
+        for &(kind, name) in &pairs {
             let Some(e16) = build_engine_arc(kind, Precision::I16, &f) else { continue };
-            let Some(e8) = build_engine_arc(kind, Precision::I8, &f) else { continue };
+            // Explicit carrier scale = global quantization, exactly the
+            // config the scale_i8/accum_mode_i8 fields above describe
+            // (`build(.., None)` would silently auto-upgrade to per-tree
+            // scales on forests whose global analysis widens, and the
+            // timing row would mislabel what it measured).
+            let carrier: QuantConfig = QuantConfig::new(cfg8.scale);
+            let Ok(e8) = crate::engine::build(kind, Precision::I8, &f, Some(carrier))
+            else {
+                continue;
+            };
             let t16 = time_per_instance(e16.as_ref(), &x, scale.repeats);
             let t8 = time_per_instance(e8.as_ref(), &x, scale.repeats);
             tw.row(&[
@@ -737,19 +759,51 @@ pub fn int8_tiers(scale: &Scale) -> String {
             ("accuracy_float", Json::Num(acc_f)),
             ("accuracy_i16", Json::Num(acc16)),
             ("accuracy_i8", Json::Num(acc8)),
+            ("accuracy_i8_per_tree", Json::Num(acc8pt)),
             ("accuracy_delta_i16_vs_float", Json::Num(acc16 - acc_f)),
             ("accuracy_delta_i8_vs_i16", Json::Num(acc8 - acc16)),
+            ("accuracy_delta_per_tree_vs_global_i8", Json::Num(acc8pt - acc8)),
             ("scale_i16", Json::Num(cfg16.scale as f64)),
             ("scale_i8", Json::Num(cfg8.scale as f64)),
+            ("scale_i8_per_tree", Json::Num(cfg8pt.scale as f64)),
             ("accum_mode_i8", Json::Str(qf8.accum_mode().as_str().to_string())),
+            (
+                "accum_mode_i8_per_tree",
+                Json::Str(qf8pt.accum_mode().as_str().to_string()),
+            ),
             ("unique_node_fraction_i16", Json::Num(merge16)),
             ("unique_node_fraction_i8", Json::Num(merge8)),
             ("engines", Json::Arr(engines_json)),
         ]));
     }
+    // Synthetic big-forest flip demo: RF-style 1/M leaves at a tree count
+    // where the global leaf floor exceeds the native i8 budget. Global
+    // scaling must widen; per-tree scales restore native accumulation
+    // (ROADMAP item; DESIGN.md §6).
+    let flip = {
+        use crate::forest::{Task, Tree};
+        let mut f = Forest::new(2, 1, Task::Ranking);
+        for i in 0..60 {
+            f.trees.push(Tree::leaf(vec![(1.0 + (i % 3) as f32) / 90.0]));
+        }
+        let qg = QForest::<i8>::from_forest(&f, choose_scale_i8(&f, 1.0));
+        let qp = QForest::<i8>::from_forest_per_tree(&f, choose_scale_i8_per_tree(&f, 1.0));
+        out.push_str(&format!(
+            "flip demo (60 trees, leaves ≤ 1/30): global → {} accumulation, \
+             per-tree → {} accumulation\n",
+            qg.accum_mode().as_str(),
+            qp.accum_mode().as_str()
+        ));
+        Json::from_pairs(vec![
+            ("trees", Json::Num(60.0)),
+            ("accum_mode_global", Json::Str(qg.accum_mode().as_str().to_string())),
+            ("accum_mode_per_tree", Json::Str(qp.accum_mode().as_str().to_string())),
+        ])
+    };
     let report = Json::from_pairs(vec![
         ("experiment", Json::Str("int8_tiers".to_string())),
         ("scale", Json::Str(scale.name.to_string())),
+        ("per_tree_flip_demo", flip),
         ("results", Json::Arr(records)),
     ]);
     archive_json("int8_tiers", &report);
@@ -788,6 +842,7 @@ pub fn serving(scale: &Scale, threads: usize) -> String {
         queue_cap: 65_536,
         workers: 1,
         exec_threads: budget,
+        drain_timeout: None,
     };
 
     let mut out = String::new();
@@ -984,13 +1039,28 @@ mod tests {
     fn int8_tiers_runs_and_reports() {
         let s = int8_tiers(&quick());
         assert!(s.contains("i16") && s.contains("i8"), "{s}");
-        assert!(s.contains("VQS"), "{s}");
+        // All five engine families have i8 rows now.
+        for e in ["NA", "IE", "QS", "VQS", "RS"] {
+            assert!(s.contains(e), "{e} row missing:\n{s}");
+        }
+        assert!(s.contains("per-tree"), "{s}");
         assert!(s.contains("int8_tiers.json"), "{s}");
         let path = super::super::harness::results_dir().join("int8_tiers.json");
         let text = std::fs::read_to_string(&path).unwrap();
         let j = crate::util::Json::parse(&text).unwrap();
         let results = j.get("results").and_then(|v| v.as_arr()).unwrap();
         assert!(results.len() >= 2, "need at least two datasets");
+        for r in results {
+            assert!(r.get("accuracy_i8_per_tree").and_then(|v| v.as_f64()).is_some());
+            assert!(r.get("accum_mode_i8_per_tree").and_then(|v| v.as_str()).is_some());
+        }
+        // The flip demo must actually demonstrate the flip.
+        let flip = j.get("per_tree_flip_demo").unwrap();
+        assert_eq!(flip.get("accum_mode_global").and_then(|v| v.as_str()), Some("widened"));
+        assert_eq!(
+            flip.get("accum_mode_per_tree").and_then(|v| v.as_str()),
+            Some("native")
+        );
     }
 
     #[test]

@@ -30,7 +30,11 @@
 //! the batcher stops intake, replies [`ServeError::Shutdown`] to every
 //! request still queued or assembling (they would otherwise race teardown),
 //! and blocks until every already-flushed batch has delivered its real
-//! replies before the pool client unregisters.
+//! replies before the pool client unregisters. With
+//! [`BatchConfig::drain_timeout`] set, that wait is bounded: straggler
+//! batches (a slow or hung engine) are downgraded to
+//! [`ServeError::Internal`] at the deadline and pool teardown moves to a
+//! detached reaper thread, so undeploy/redeploy cannot stall forever.
 
 use std::cell::UnsafeCell;
 use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
@@ -62,6 +66,14 @@ pub struct BatchConfig {
     /// shared pool (weighted fair stealing; see [`crate::exec::SharedPool`])
     /// and the number of slots its flushes are chunked for.
     pub exec_threads: usize,
+    /// Upper bound on how long the shutdown drain waits for in-flight
+    /// flushes. `None` (default) waits unboundedly — the pre-deadline
+    /// behavior, where a hung engine stalls undeploy forever. With a
+    /// deadline, straggler batches are downgraded: their requesters
+    /// receive [`ServeError::Internal`] immediately (counted in
+    /// `Metrics::failed`), and pool teardown is handed to a detached
+    /// reaper thread so the drop returns.
+    pub drain_timeout: Option<Duration>,
 }
 
 impl BatchConfig {
@@ -80,6 +92,7 @@ impl Default for BatchConfig {
             queue_cap: 4096,
             workers: 1,
             exec_threads: 1,
+            drain_timeout: None,
         }
     }
 }
@@ -119,13 +132,18 @@ impl std::error::Error for ServeError {}
 pub struct Batcher {
     tx: SyncSender<Request>,
     collector: Option<std::thread::JoinHandle<()>>,
-    ctx: Arc<FlushCtx>,
+    /// `Option` so the drain-deadline path can hand the context (and with
+    /// it the pool client / pool teardown) to a detached reaper thread
+    /// instead of blocking the drop on a hung worker.
+    ctx: Option<Arc<FlushCtx>>,
     /// Set by `Drop` before closing `tx`: the collector must shed — not
     /// execute — everything still queued, even if a full batch's worth is
     /// buffered in the channel.
     closing: Arc<AtomicBool>,
     pub metrics: Arc<Metrics>,
     n_features: usize,
+    budget: usize,
+    drain_timeout: Option<Duration>,
 }
 
 impl Batcher {
@@ -174,7 +192,11 @@ impl Batcher {
             budget,
             weights,
             metrics: metrics.clone(),
-            inflight: Arc::new(Inflight { count: Mutex::new(0), idle: Condvar::new() }),
+            inflight: Arc::new(Inflight {
+                count: Mutex::new(0),
+                idle: Condvar::new(),
+                states: Mutex::new(Vec::new()),
+            }),
         });
         let closing = Arc::new(AtomicBool::new(false));
         let collector = {
@@ -189,10 +211,12 @@ impl Batcher {
         Batcher {
             tx,
             collector: Some(collector),
-            ctx,
+            ctx: Some(ctx),
             closing,
             metrics,
             n_features: engine.n_features(),
+            budget,
+            drain_timeout: config.drain_timeout,
         }
     }
 
@@ -230,7 +254,7 @@ impl Batcher {
 
     /// The deployment's exec thread budget on its pool.
     pub fn thread_budget(&self) -> usize {
-        self.ctx.budget
+        self.budget
     }
 }
 
@@ -250,7 +274,47 @@ impl Drop for Batcher {
         // 2. Drain: wait for already-flushed batches so every accepted
         //    request receives its real reply before the pool client (owned
         //    by `ctx`) unregisters.
-        self.ctx.inflight.wait_idle();
+        let Some(ctx) = self.ctx.take() else { return };
+        match self.drain_timeout {
+            None => ctx.inflight.wait_idle(),
+            Some(deadline) => {
+                if !ctx.inflight.wait_idle_timeout(deadline) {
+                    // Deadline expired with flushes still outstanding: a
+                    // slow or hung engine must not stall undeploy. Every
+                    // straggler batch is claimed and its requesters get an
+                    // immediate `Internal` (their scores, if they ever
+                    // materialize, are discarded by the `replied` guard).
+                    ctx.inflight.abandon_stragglers();
+                    // Pool teardown (client unregister; for standalone
+                    // batchers the whole pool, whose drop joins workers)
+                    // would block on the hung task — hand the last ctx
+                    // reference to a detached reaper instead. If the
+                    // engine never returns, the reaper leaks one parked
+                    // thread; the deployment itself is gone either way.
+                    // The guard covers reaper-spawn failure (thread
+                    // exhaustion): dropping the un-run closure would tear
+                    // ctx down inline and re-introduce the unbounded
+                    // stall, so the guard *leaks* the context instead.
+                    struct LeakOnDrop(Option<Arc<FlushCtx>>);
+                    impl Drop for LeakOnDrop {
+                        fn drop(&mut self) {
+                            if let Some(c) = self.0.take() {
+                                std::mem::forget(c);
+                            }
+                        }
+                    }
+                    let guard = LeakOnDrop(Some(ctx));
+                    let _ = std::thread::Builder::new()
+                        .name("batcher-drain-reaper".into())
+                        .spawn(move || {
+                            let mut guard = guard;
+                            let ctx = guard.0.take().expect("guard holds the context");
+                            ctx.inflight.wait_idle();
+                            drop(ctx);
+                        });
+                }
+            }
+        }
     }
 }
 
@@ -270,15 +334,21 @@ struct FlushCtx {
     inflight: Arc<Inflight>,
 }
 
-/// Shutdown-drain latch: flushed-but-incomplete batch count.
+/// Shutdown-drain latch: flushed-but-incomplete batch count, plus weak
+/// handles to the in-flight batches so a drain deadline can downgrade
+/// stragglers.
 struct Inflight {
     count: Mutex<usize>,
     idle: Condvar,
+    states: Mutex<Vec<std::sync::Weak<FlushState>>>,
 }
 
 impl Inflight {
-    fn begin(&self) {
+    fn begin(&self, state: &Arc<FlushState>) {
         *self.count.lock().unwrap() += 1;
+        let mut states = self.states.lock().unwrap();
+        states.retain(|w| w.strong_count() > 0);
+        states.push(Arc::downgrade(state));
     }
 
     fn end(&self) {
@@ -294,6 +364,40 @@ impl Inflight {
         let mut n = self.count.lock().unwrap();
         while *n > 0 {
             n = self.idle.wait(n).unwrap();
+        }
+    }
+
+    /// Like [`Inflight::wait_idle`] with an upper bound; returns whether
+    /// the drain completed (false: stragglers remain).
+    fn wait_idle_timeout(&self, timeout: Duration) -> bool {
+        let deadline = Instant::now() + timeout;
+        let mut n = self.count.lock().unwrap();
+        while *n > 0 {
+            let now = Instant::now();
+            if now >= deadline {
+                return false;
+            }
+            let (guard, _) = self.idle.wait_timeout(n, deadline - now).unwrap();
+            n = guard;
+        }
+        true
+    }
+
+    /// Downgrade every still-in-flight batch: claim its reply right
+    /// (`replied`) and answer `Internal` now. A straggler chunk that later
+    /// finishes sees the claim in `FlushState::complete` and only releases
+    /// its latch slot.
+    fn abandon_stragglers(&self) {
+        let states = self.states.lock().unwrap();
+        for w in states.iter() {
+            let Some(st) = w.upgrade() else { continue };
+            if st.replied.swap(true, Ordering::AcqRel) {
+                continue; // completed (or already abandoned) concurrently
+            }
+            st.metrics.failed.fetch_add(st.requests.len() as u64, Ordering::Relaxed);
+            for r in &st.requests {
+                let _ = r.reply.send(Err(ServeError::Internal));
+            }
         }
     }
 }
@@ -327,7 +431,6 @@ fn flush_batch(ctx: &Arc<FlushCtx>, mut batch: Vec<Request>) {
             planned
         }
     };
-    ctx.inflight.begin();
     let state = Arc::new(FlushState {
         engine: ctx.engine.clone(),
         metrics: ctx.metrics.clone(),
@@ -337,8 +440,10 @@ fn flush_batch(ctx: &Arc<FlushCtx>, mut batch: Vec<Request>) {
         requests: batch,
         remaining: AtomicUsize::new(chunks.len()),
         failed: AtomicBool::new(false),
+        replied: AtomicBool::new(false),
         exec_start: Mutex::new(None),
     });
+    ctx.inflight.begin(&state);
     // Base pointer taken once, pre-spawn, while this thread is the sole
     // owner; tasks do raw offset writes into disjoint ranges.
     let out_ptr = MutPtr(unsafe { (*state.out.get()).as_mut_ptr() });
@@ -388,6 +493,10 @@ struct FlushState {
     requests: Vec<Request>,
     remaining: AtomicUsize,
     failed: AtomicBool,
+    /// Reply-right claim: exactly one of the completing worker and the
+    /// drain-deadline abandon path answers the requesters (whoever swaps
+    /// this first).
+    replied: AtomicBool,
     /// Stamped by whichever chunk starts executing first.
     exec_start: Mutex<Option<Instant>>,
 }
@@ -401,6 +510,12 @@ impl FlushState {
     /// rows back onto their requesters, record metrics, release the
     /// in-flight slot.
     fn complete(&self) {
+        if self.replied.swap(true, Ordering::AcqRel) {
+            // The drain deadline already answered these requesters with
+            // `Internal` — discard the late scores, release the latch slot.
+            self.inflight.end();
+            return;
+        }
         let now = Instant::now();
         if self.failed.load(Ordering::Acquire) {
             // A chunk panicked: these requests ran but their scores are
@@ -561,6 +676,7 @@ mod tests {
                 queue_cap: 4096,
                 workers: 1,
                 exec_threads: 4,
+                drain_timeout: None,
             },
         );
         assert_eq!(b.thread_budget(), 4);
@@ -592,6 +708,7 @@ mod tests {
                 queue_cap: 4,
                 workers: 1,
                 exec_threads: 1,
+                drain_timeout: None,
             },
         );
         let mut overloaded = false;
@@ -649,6 +766,7 @@ mod tests {
                 queue_cap: 1024,
                 workers: 1,
                 exec_threads: 1,
+                drain_timeout: None,
             },
         );
         let metrics = b.metrics.clone();
@@ -682,6 +800,7 @@ mod tests {
                 queue_cap: 4096,
                 workers: 1,
                 exec_threads: 2,
+                drain_timeout: None,
             },
         );
         let metrics = b.metrics.clone();
@@ -702,6 +821,106 @@ mod tests {
         assert_eq!(metrics.shed_shutdown.load(Ordering::Relaxed), shutdown);
     }
 
+    /// An engine that blocks inside `predict_batch` until released —
+    /// stands in for a hung/wedged model at shutdown.
+    struct HangingEngine {
+        inner: Arc<dyn Engine>,
+        gate: Arc<AtomicBool>,
+    }
+
+    impl Engine for HangingEngine {
+        fn name(&self) -> String {
+            "hang".into()
+        }
+        fn lanes(&self) -> usize {
+            self.inner.lanes()
+        }
+        fn n_features(&self) -> usize {
+            self.inner.n_features()
+        }
+        fn n_classes(&self) -> usize {
+            self.inner.n_classes()
+        }
+        fn predict_batch(&self, x: &[f32], out: &mut [f32]) {
+            while !self.gate.load(Ordering::Acquire) {
+                std::thread::sleep(Duration::from_millis(1));
+            }
+            self.inner.predict_batch(x, out);
+        }
+    }
+
+    /// Regression (ROADMAP, exposed by the fused drain): without a
+    /// deadline, a hung engine stalls the batcher drop — and with it
+    /// undeploy/redeploy — forever. With `drain_timeout` set, the drop
+    /// returns at the deadline, stragglers' requesters get an immediate
+    /// `Internal`, and the late real scores are discarded.
+    #[test]
+    fn drain_deadline_downgrades_hung_flushes() {
+        let (inner, ds) = engine();
+        let gate = Arc::new(AtomicBool::new(false));
+        let eng: Arc<dyn Engine> =
+            Arc::new(HangingEngine { inner, gate: gate.clone() });
+        let b = Batcher::start(
+            eng,
+            BatchConfig {
+                max_batch: 4,
+                max_delay: Duration::from_micros(100),
+                queue_cap: 64,
+                workers: 1,
+                exec_threads: 1,
+                drain_timeout: Some(Duration::from_millis(50)),
+            },
+        );
+        let metrics = b.metrics.clone();
+        let replies: Vec<_> =
+            (0..4).map(|i| b.submit(ds.row(i).to_vec()).unwrap()).collect();
+        // Let the deadline flush the batch onto the (hung) pool.
+        std::thread::sleep(Duration::from_millis(20));
+        let t0 = Instant::now();
+        drop(b); // must return at the drain deadline, not block on the hang
+        assert!(
+            t0.elapsed() < Duration::from_secs(5),
+            "drop blocked past the drain deadline"
+        );
+        for r in replies {
+            assert_eq!(r.recv().unwrap(), Err(ServeError::Internal));
+        }
+        assert_eq!(metrics.failed.load(Ordering::Relaxed), 4);
+        assert_eq!(metrics.completed.load(Ordering::Relaxed), 0);
+        // Unhang the engine so the reaper can finish pool teardown; the
+        // late completion must not double-reply or count as completed.
+        gate.store(true, Ordering::Release);
+        std::thread::sleep(Duration::from_millis(50));
+        assert_eq!(metrics.completed.load(Ordering::Relaxed), 0);
+    }
+
+    /// A drain deadline generous enough for the work changes nothing:
+    /// flushed batches still deliver real scores.
+    #[test]
+    fn drain_deadline_noop_when_engine_healthy() {
+        let (eng, ds) = engine();
+        let direct = eng.predict(&ds.x[..ds.d * 8]);
+        let b = Batcher::start(
+            eng.clone(),
+            BatchConfig {
+                max_batch: 8,
+                max_delay: Duration::from_micros(100),
+                queue_cap: 1024,
+                workers: 1,
+                exec_threads: 2,
+                drain_timeout: Some(Duration::from_secs(30)),
+            },
+        );
+        let replies: Vec<_> =
+            (0..8).map(|i| b.submit(ds.row(i).to_vec()).unwrap()).collect();
+        std::thread::sleep(Duration::from_millis(50));
+        drop(b);
+        for (i, r) in replies.into_iter().enumerate() {
+            let scores = r.recv().unwrap().unwrap();
+            assert_eq!(&scores[..], &direct[i * ds.n_classes..(i + 1) * ds.n_classes]);
+        }
+    }
+
     #[test]
     fn shutdown_still_delivers_flushed_batches() {
         // Requests flushed before the drop get real scores, not Shutdown.
@@ -715,6 +934,7 @@ mod tests {
                 queue_cap: 1024,
                 workers: 1,
                 exec_threads: 2,
+                drain_timeout: None,
             },
         );
         let replies: Vec<_> =

@@ -9,6 +9,26 @@
 //! and receive score vectors; the batcher turns the request stream into
 //! full SIMD blocks and enqueues their lane-aligned shards straight onto
 //! the pool — request to SIMD lane through a single scheduler.
+//!
+//! # Load-bearing contracts
+//!
+//! * **Determinism** — every reply is **bit-identical** to a serial
+//!   `Engine::predict_batch` over the same assembled batch, regardless of
+//!   pool size, budget, or concurrent deployments (flushes emit only
+//!   lane-aligned row chunks; enforced end-to-end by
+//!   `rust/tests/serving_fused.rs`).
+//! * **Backpressure** — the submit queue is bounded; when full, `submit`
+//!   fails fast with [`ServeError::Overloaded`] instead of queueing
+//!   unboundedly.
+//! * **Shutdown drain** — undeploy/redeploy/drop answers every accepted
+//!   request: unflushed requests get [`ServeError::Shutdown`], flushed
+//!   batches deliver real scores before the pool registration drops, and
+//!   [`BatchConfig::drain_timeout`] bounds the wait (stragglers from a
+//!   hung engine downgrade to [`ServeError::Internal`]).
+//! * **Accuracy gate** — [`Server::deploy_auto`] deploys the fastest
+//!   candidate whose calibration argmax agreement with the float
+//!   reference is ≥ 99%, so latency ranking cannot silently pick a
+//!   quantized tier that degrades served predictions.
 
 pub mod batcher;
 pub mod metrics;
@@ -289,9 +309,9 @@ mod tests {
         let sel = server
             .deploy_auto("auto", &f, &ds.x[..ds.d * 128], BatchConfig::default())
             .unwrap();
-        // The paper's ten variants + the int8 tier (stale 10 fixed: the
-        // selector has ranked 13 serial candidates since the int8 PR).
-        assert_eq!(sel.candidates.len(), 13);
+        // Every registered variant — derived from the engine registry (the
+        // literal here went stale twice as tiers grew: 10 → 13 → 15).
+        assert_eq!(sel.candidates.len(), crate::engine::all_variants_with_i8().len());
         let c = server.classify("auto", ds.row(3).to_vec()).unwrap();
         assert!(c < 2);
     }

@@ -265,9 +265,12 @@ mod tests {
             },
         );
         let sel = select_engine(&f, &ds.x[..ds.d * 256], None, 3).unwrap();
-        // The paper's ten variants + the three int8-tier engines.
-        assert_eq!(sel.candidates.len(), 13);
+        // The full registered tier × engine matrix — derived, not a
+        // literal: the hard-coded count went stale twice as tiers grew.
+        assert_eq!(sel.candidates.len(), crate::engine::all_variants_with_i8().len());
         assert!(sel.candidates.iter().any(|c| c.name == "q8VQS"));
+        assert!(sel.candidates.iter().any(|c| c.name == "q8RS"));
+        assert!(sel.candidates.iter().any(|c| c.name == "q8IE"));
         // sorted ascending by µs/instance
         for w in sel.candidates.windows(2) {
             assert!(w[0].host_us_per_instance <= w[1].host_us_per_instance);
@@ -333,7 +336,7 @@ mod tests {
             Some(Precision::I8),
         )
         .unwrap();
-        assert_eq!(sel.candidates.len(), 3);
+        assert_eq!(sel.candidates.len(), crate::engine::i8_variants().len());
         assert!(sel.candidates.iter().all(|c| c.precision == Precision::I8));
     }
 
@@ -380,8 +383,9 @@ mod tests {
             },
         );
         let sel = select_engine_with(&f, &ds.x[..ds.d * 128], None, 1, &[1, 2]).unwrap();
-        // 13 variants (10 + int8 tier) × 2 budgets.
-        assert_eq!(sel.candidates.len(), 26);
+        // Every registered variant × 2 budgets (count derived from the
+        // engine registry, not a literal).
+        assert_eq!(sel.candidates.len(), 2 * crate::engine::all_variants_with_i8().len());
         assert!(sel.candidates.iter().any(|c| c.threads == 2 && c.name.ends_with("×2t")));
         assert!(sel.candidates.iter().any(|c| c.threads == 1 && c.name == "RS"));
     }

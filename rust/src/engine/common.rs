@@ -42,6 +42,11 @@ pub struct QsModel<T: Copy, V: Copy> {
     pub base_i32: Vec<i32>,
     /// Dequantization scale for i16 models (1.0 for float models).
     pub scale: f32,
+    /// Per-tree leaf shifts ([`crate::quant::QForest::tree_shifts`]): the
+    /// rounding shift each engine applies to tree `t`'s gathered leaf
+    /// values before accumulation. All zeros for float and
+    /// globally-scaled models.
+    pub tree_shifts: Vec<u8>,
 }
 
 /// Compute the mask for a false node whose left subtree covers leaves
@@ -130,6 +135,7 @@ impl QsModel<f32, f32> {
             base_f32: f.base_score.clone(),
             base_i32: Vec::new(),
             scale: 1.0,
+            tree_shifts: vec![0; f.n_trees()],
         }
     }
 }
@@ -170,6 +176,7 @@ impl<S: QuantInt> QsModel<S, S> {
             base_f32: Vec::new(),
             base_i32: qf.base_score.clone(),
             scale: qf.config.scale,
+            tree_shifts: qf.tree_shifts.clone(),
         }
     }
 }

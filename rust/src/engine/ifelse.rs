@@ -14,7 +14,7 @@
 use super::Engine;
 use crate::forest::{Child, Forest};
 use crate::neon::OpTrace;
-use crate::quant::{QForest, QuantConfig};
+use crate::quant::{shift_round, QForest, QuantConfig, QuantInt};
 
 /// A boxed branch-structure node.
 enum IeNode<T: Copy, V: Copy> {
@@ -66,7 +66,11 @@ fn build_f32(t: &crate::forest::Tree, c: Child) -> IeNode<f32, f32> {
     }
 }
 
-fn build_i16(t: &crate::quant::QTree, c: Child, n_classes: usize) -> IeNode<i16, i16> {
+fn build_q<S: QuantInt>(
+    t: &crate::quant::QTree<S>,
+    c: Child,
+    n_classes: usize,
+) -> IeNode<S, S> {
     match c {
         Child::Leaf(l) => {
             let l = l as usize;
@@ -77,8 +81,8 @@ fn build_i16(t: &crate::quant::QTree, c: Child, n_classes: usize) -> IeNode<i16,
             IeNode::Split {
                 feature: t.features[i],
                 threshold: t.thresholds[i],
-                left: Box::new(build_i16(t, t.left[i], n_classes)),
-                right: Box::new(build_i16(t, t.right[i], n_classes)),
+                left: Box::new(build_q(t, t.left[i], n_classes)),
+                right: Box::new(build_q(t, t.right[i], n_classes)),
             }
         }
     }
@@ -183,18 +187,22 @@ impl Engine for IfElseEngine {
     }
 }
 
-/// Quantized IE engine (qIE).
-pub struct QIfElseEngine {
-    roots: Vec<IeNode<i16, i16>>,
+/// Quantized IE engine (qIE / q8IE), generic over the storage tier. The
+/// branch structure is identical across tiers; only the immediates narrow.
+pub struct QIfElseEngine<S: QuantInt = i16> {
+    roots: Vec<IeNode<S, S>>,
     base: Vec<i32>,
-    config: QuantConfig,
+    config: QuantConfig<S>,
+    /// Per-tree leaf shifts (per-tree-scale quantization; all zeros under
+    /// global scaling).
+    shifts: Vec<u8>,
     n_features: usize,
     n_classes: usize,
     mem_bytes: usize,
 }
 
-impl QIfElseEngine {
-    pub fn new(qf: &QForest) -> QIfElseEngine {
+impl<S: QuantInt> QIfElseEngine<S> {
+    pub fn new(qf: &QForest<S>) -> QIfElseEngine<S> {
         let roots = qf
             .trees
             .iter()
@@ -202,17 +210,19 @@ impl QIfElseEngine {
                 if t.features.is_empty() {
                     IeNode::Leaf { value: t.leaf_values.clone() }
                 } else {
-                    build_i16(t, Child::Inner(0), qf.n_classes)
+                    build_q(t, Child::Inner(0), qf.n_classes)
                 }
             })
             .collect();
         let splits: usize = qf.trees.iter().map(|t| t.features.len()).sum();
         let leaves: usize = qf.trees.iter().map(|t| t.n_leaves).sum();
-        let mem_bytes = splits * 40 + leaves * (32 + qf.n_classes * 2);
+        let mem_bytes =
+            splits * 40 + leaves * (32 + qf.n_classes * std::mem::size_of::<S>());
         QIfElseEngine {
             roots,
             base: qf.base_score.clone(),
             config: qf.config,
+            shifts: qf.tree_shifts.clone(),
             n_features: qf.n_features,
             n_classes: qf.n_classes,
             mem_bytes,
@@ -220,9 +230,9 @@ impl QIfElseEngine {
     }
 }
 
-impl Engine for QIfElseEngine {
+impl<S: QuantInt> Engine for QIfElseEngine<S> {
     fn name(&self) -> String {
-        "qIE".into()
+        format!("{}IE", S::ENGINE_PREFIX)
     }
 
     fn lanes(&self) -> usize {
@@ -247,10 +257,10 @@ impl Engine for QIfElseEngine {
         for i in 0..n {
             let row = &qx[i * d..(i + 1) * d];
             acc.copy_from_slice(&self.base);
-            let le = |f: u32, t: i16| row[f as usize] <= t;
-            for root in &self.roots {
+            let le = |f: u32, t: S| row[f as usize] <= t;
+            for (root, &sh) in self.roots.iter().zip(&self.shifts) {
                 for (dst, &v) in acc.iter_mut().zip(root.walk(&le)) {
-                    *dst += v as i32;
+                    *dst += shift_round(v.to_i32(), sh);
                 }
             }
             for (o, &a) in out[i * c..(i + 1) * c].iter_mut().zip(acc.iter()) {
@@ -267,10 +277,10 @@ impl Engine for QIfElseEngine {
         self.config.q_slice(x, &mut qx);
         let mut tr = OpTrace::new();
         tr.scalar_fp += (n * d) as u64 * 2; // feature quantization
-        tr.store_bytes += (n * d * 2) as u64;
+        tr.store_bytes += (n * d * std::mem::size_of::<S>()) as u64;
         for i in 0..n {
             let row = &qx[i * d..(i + 1) * d];
-            let le = |f: u32, t: i16| row[f as usize] <= t;
+            let le = |f: u32, t: S| row[f as usize] <= t;
             for root in &self.roots {
                 let depth = root.depth_walk(&le);
                 tr.random_loads += depth;
@@ -321,6 +331,25 @@ mod tests {
     fn qie_matches_qforest() {
         let (f, ds) = setup();
         let qf = QForest::from_forest(&f, QuantConfig::paper_default());
+        let e = QIfElseEngine::new(&qf);
+        assert_eq!(e.name(), "qIE");
+        assert_eq!(e.predict(&ds.x), qf.predict_batch(&ds.x));
+    }
+
+    #[test]
+    fn q8ie_matches_qforest() {
+        let (f, ds) = setup();
+        let qf = QForest::<i8>::from_forest(&f, crate::quant::choose_scale_i8(&f, 1.0));
+        let e = QIfElseEngine::new(&qf);
+        assert_eq!(e.name(), "q8IE");
+        assert_eq!(e.predict(&ds.x), qf.predict_batch(&ds.x));
+    }
+
+    #[test]
+    fn q8ie_per_tree_shifts_match_reference() {
+        let (f, ds) = setup();
+        let cfg = crate::quant::choose_scale_i8_per_tree(&f, 1.0);
+        let qf = QForest::<i8>::from_forest_per_tree(&f, cfg);
         let e = QIfElseEngine::new(&qf);
         assert_eq!(e.predict(&ds.x), qf.predict_batch(&ds.x));
     }

@@ -12,11 +12,15 @@
 //! Prefix `q` (e.g. `qRS`) marks the int16 fixed-point variant (§5); `q8`
 //! (e.g. `q8VQS`) the int8 tier built on the same analysis with 8-bit
 //! storage and a native-or-widened accumulator
-//! ([`crate::quant::AccumMode`]). The int8 tier covers NA, QS and VQS.
+//! ([`crate::quant::AccumMode`]). The int8 tier covers **all five**
+//! traversal strategies; when the global §5 analysis would force widened
+//! accumulation, [`build`] re-quantizes with per-tree leaf scales
+//! ([`crate::quant::QForest::from_forest_per_tree`]) if that provably
+//! restores a native i8 accumulator.
 //! All engines implement [`Engine`] and must agree with the naive reference
 //! ([`crate::forest::Forest::predict_batch`] /
-//! [`crate::quant::QForest::predict_batch`]) — enforced by the integration
-//! and property test suites.
+//! [`crate::quant::QForest::predict_batch`] over the same quantized
+//! forest) — enforced by the integration and property test suites.
 
 pub mod common;
 pub mod ifelse;
@@ -28,7 +32,7 @@ pub mod vqs;
 
 use crate::forest::Forest;
 use crate::neon::OpTrace;
-use crate::quant::{choose_scale, choose_scale_i8, QForest, QuantConfig};
+use crate::quant::{choose_scale, quantize_i8_auto, QForest, QuantConfig};
 
 /// A prepared tree-ensemble inference engine.
 ///
@@ -181,17 +185,12 @@ pub fn build(
             }
         }
         Precision::I8 => {
-            if matches!(kind, EngineKind::IfElse | EngineKind::Rs) {
-                anyhow::bail!(
-                    "{} has no int8 path yet (int8 tier covers NA, QS, VQS)",
-                    kind.short()
-                );
-            }
-            // A caller-supplied i16-carrier config contributes its scale;
-            // otherwise redo the §5 analysis for 8-bit storage. An
-            // i16-tier scale (e.g. 2^15) would silently saturate every i8
-            // payload — reject it instead of serving garbage.
-            let cfg = match quant {
+            // A caller-supplied i16-carrier config contributes its scale
+            // (global scaling, exactly as given); otherwise redo the §5
+            // analysis for 8-bit storage. An i16-tier scale (e.g. 2^15)
+            // would silently saturate every i8 payload — reject it instead
+            // of serving garbage.
+            let qf = match quant {
                 Some(c) => {
                     anyhow::ensure!(
                         c.scale <= i8::MAX as f32,
@@ -200,16 +199,20 @@ pub fn build(
                         c.scale,
                         i8::MAX
                     );
-                    QuantConfig::<i8>::new(c.scale)
+                    QForest::<i8>::from_forest(forest, QuantConfig::<i8>::new(c.scale))
                 }
-                None => choose_scale_i8(forest, 1.0),
+                // Global scaling, upgraded to per-tree leaf scales exactly
+                // when that provably restores a native i8 accumulator —
+                // the policy lives in `quant` so tests can construct the
+                // matching reference (quant module docs / DESIGN.md §6).
+                None => quantize_i8_auto(forest, 1.0),
             };
-            let qf = QForest::<i8>::from_forest(forest, cfg);
             match kind {
                 EngineKind::Naive => Box::new(naive::QNaiveEngine::new(&qf)),
+                EngineKind::IfElse => Box::new(ifelse::QIfElseEngine::new(&qf)),
                 EngineKind::Qs => Box::new(quickscorer::QQsEngine::new(&qf)),
                 EngineKind::Vqs => Box::new(vqs::QVqs8Engine::new(&qf)),
-                EngineKind::IfElse | EngineKind::Rs => unreachable!(),
+                EngineKind::Rs => Box::new(rapidscorer::QRs8Engine::new(&qf)),
             }
         }
     })
@@ -256,16 +259,16 @@ pub fn all_variants() -> Vec<(EngineKind, Precision)> {
     out
 }
 
-/// The int8-tier variants (NA, QS and the v=16 V-QuickScorer).
+/// The int8-tier variants — all five traversal strategies at 8-bit
+/// storage.
 pub fn i8_variants() -> Vec<(EngineKind, Precision)> {
-    vec![
-        (EngineKind::Vqs, Precision::I8),
-        (EngineKind::Qs, Precision::I8),
-        (EngineKind::Naive, Precision::I8),
-    ]
+    EngineKind::ALL.iter().map(|&k| (k, Precision::I8)).collect()
 }
 
-/// The paper's ten variants plus the int8 tier (selector candidate set).
+/// The paper's ten variants plus the int8 tier — the selector candidate
+/// set. Tests and the selector derive expected candidate counts from this
+/// registry (`all_variants_with_i8().len()`), never from literals: the
+/// count has gone stale twice as tiers grew.
 pub fn all_variants_with_i8() -> Vec<(EngineKind, Precision)> {
     let mut out = all_variants();
     out.extend(i8_variants());
@@ -306,9 +309,13 @@ mod tests {
 
     #[test]
     fn i8_variant_set() {
-        assert_eq!(i8_variants().len(), 3);
-        assert_eq!(all_variants_with_i8().len(), 13);
+        // The registry IS the tier × engine matrix: 5 engine families at
+        // i8, 15 variants total (5 × {f32, i16, i8}).
+        assert_eq!(i8_variants().len(), EngineKind::ALL.len());
+        assert_eq!(all_variants_with_i8().len(), 3 * EngineKind::ALL.len());
         assert_eq!(variant_name(EngineKind::Vqs, Precision::I8), "q8VQS");
+        assert_eq!(variant_name(EngineKind::Rs, Precision::I8), "q8RS");
+        assert_eq!(variant_name(EngineKind::IfElse, Precision::I8), "q8IE");
     }
 
     #[test]
@@ -341,11 +348,40 @@ mod tests {
             let e = build(kind, p, &f, None).unwrap();
             assert!(e.name().starts_with("q8"), "{}", e.name());
         }
-        assert!(build(EngineKind::Rs, Precision::I8, &f, None).is_err());
-        assert!(build(EngineKind::IfElse, Precision::I8, &f, None).is_err());
         // An i16-tier carrier scale must be rejected, not silently saturated.
         let carrier: QuantConfig = QuantConfig::new(32768.0);
         assert!(build(EngineKind::Naive, Precision::I8, &f, Some(carrier)).is_err());
         assert!(build(EngineKind::Naive, Precision::I8, &f, Some(QuantConfig::new(64.0))).is_ok());
+    }
+
+    /// `build` upgrades to per-tree leaf scales exactly when the global §5
+    /// analysis widened and per-tree provably restores a native
+    /// accumulator — and all five engines then agree with the per-tree
+    /// reference.
+    #[test]
+    fn i8_build_upgrades_widened_forests_to_per_tree_native() {
+        use crate::forest::{Task, Tree};
+        use crate::quant::{choose_scale_i8, choose_scale_i8_per_tree};
+        // 60 constant trees, max |leaf| = 1/30: global scaling widens
+        // (floor M = 60 > native bound 33); per-tree lands Native.
+        let mut f = Forest::new(2, 1, Task::Ranking);
+        for i in 0..60 {
+            f.trees.push(Tree::leaf(vec![(1.0 + (i % 3) as f32) / 90.0]));
+        }
+        let qf_global = QForest::<i8>::from_forest(&f, choose_scale_i8(&f, 1.0));
+        assert_eq!(qf_global.accum_mode(), crate::quant::AccumMode::Widened);
+        let qf_pt =
+            QForest::<i8>::from_forest_per_tree(&f, choose_scale_i8_per_tree(&f, 1.0));
+        assert_eq!(qf_pt.accum_mode(), crate::quant::AccumMode::Native);
+        let want = qf_pt.predict_batch(&[0.3, 0.7]);
+        for (kind, p) in i8_variants() {
+            let e = build(kind, p, &f, None).unwrap();
+            assert_eq!(
+                e.predict(&[0.3, 0.7]),
+                want,
+                "{} did not take the per-tree path",
+                variant_name(kind, p)
+            );
+        }
     }
 }

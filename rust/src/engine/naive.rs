@@ -30,6 +30,9 @@ struct FlatForest<T: Copy, V: Copy> {
     /// Per-tree start offset into `leaf_values` (in rows).
     leaf_offsets: Vec<u32>,
     leaf_values: Vec<V>,
+    /// Per-tree leaf shifts (per-tree-scale quantization; all zeros for
+    /// float / globally-scaled models).
+    tree_shifts: Vec<u8>,
     n_features: usize,
     n_classes: usize,
 }
@@ -90,6 +93,7 @@ impl<T: Copy, V: Copy> FlatForest<T, V> {
             + (self.left.len() + self.right.len()) * 4
             + self.leaf_offsets.len() * 4
             + self.leaf_values.len() * std::mem::size_of::<V>()
+            + self.tree_shifts.len()
     }
 }
 
@@ -102,6 +106,7 @@ fn flatten_f32(f: &Forest) -> FlatForest<f32, f32> {
         right: Vec::new(),
         leaf_offsets: vec![0],
         leaf_values: Vec::new(),
+        tree_shifts: vec![0; f.n_trees()],
         n_features: f.n_features,
         n_classes: f.n_classes,
     };
@@ -128,6 +133,7 @@ fn flatten_q<S: QuantInt>(qf: &QForest<S>) -> FlatForest<S, S> {
         right: Vec::new(),
         leaf_offsets: vec![0],
         leaf_values: Vec::new(),
+        tree_shifts: qf.tree_shifts.clone(),
         n_features: qf.n_features,
         n_classes: qf.n_classes,
     };
@@ -265,8 +271,9 @@ impl<S: QuantInt> Engine for QNaiveEngine<S> {
             acc.copy_from_slice(&self.base);
             for ti in 0..self.flat.n_trees() {
                 let leaf = self.flat.exit_leaf(ti, |f, t| row[f as usize] <= t);
+                let k = self.flat.tree_shifts[ti];
                 for (dst, &v) in acc.iter_mut().zip(self.flat.leaf_row(ti, leaf)) {
-                    *dst += v.to_i32();
+                    *dst += crate::quant::shift_round(v.to_i32(), k);
                 }
             }
             for (o, &a) in out[i * c..(i + 1) * c].iter_mut().zip(acc.iter()) {

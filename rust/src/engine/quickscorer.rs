@@ -172,8 +172,9 @@ impl<S: QuantInt> Engine for QQsEngine<S> {
             acc.copy_from_slice(&self.m.base_i32);
             for (ti, &bits) in leafidx.iter().enumerate() {
                 let j = bits.trailing_zeros() as usize;
+                let sh = self.m.tree_shifts[ti];
                 for (dst, &v) in acc.iter_mut().zip(self.m.leaf_row(ti, j)) {
-                    *dst += v.to_i32();
+                    *dst += crate::quant::shift_round(v.to_i32(), sh);
                 }
             }
             for (o, &a) in out[i * c..(i + 1) * c].iter_mut().zip(acc.iter()) {

@@ -23,13 +23,20 @@
 //!
 //! Float thresholds compare 16 instances via 4 × `vcgtq_f32`; int16
 //! fixed-point needs only 2 × `vcgtq_s16` (§5.1) — the promised halving of
-//! comparison work.
+//! comparison work. The int8 tier goes one width further: RapidScorer's
+//! block width already equals the i8 lane count (v = 16), so **one**
+//! `vcgtq_s8` covers the whole block, and the epitome machinery is
+//! untouched — epitomes are byte-wise regardless of the threshold width,
+//! which is why the layout ports to 8-bit thresholds for free (only the
+//! group records shrink). Scores accumulate through the same
+//! native-or-widened i8 chain as q8VQS ([`crate::quant::AccumMode`]).
 
 use super::common::{qtree_left_ranges, left_range_mask, QsModel};
+use super::vqs::Acc8;
 use super::Engine;
 use crate::forest::Forest;
 use crate::neon::*;
-use crate::quant::{QForest, QuantConfig};
+use crate::quant::{AccumMode, QForest, QuantConfig, QuantInt};
 
 /// Instances per RapidScorer block: one byte lane per instance.
 pub(crate) const V_RS: usize = 16;
@@ -69,6 +76,9 @@ pub struct RsModel<T: Copy, V: Copy> {
     leaf_values: Vec<V>,
     base_f32: Vec<f32>,
     base_i32: Vec<i32>,
+    /// Per-tree leaf shifts (per-tree-scale quantization; all zeros for
+    /// float / globally-scaled models).
+    tree_shifts: Vec<u8>,
 }
 
 /// Build the merged epitome model from raw per-node lists. `merge = false`
@@ -84,6 +94,7 @@ fn build_rs<T: Copy + PartialEq + PartialOrd, V: Copy>(
     leaf_values: Vec<V>,
     base_f32: Vec<f32>,
     base_i32: Vec<i32>,
+    tree_shifts: Vec<u8>,
     merge: bool,
 ) -> RsModel<T, V> {
     let mut m = RsModel {
@@ -97,6 +108,7 @@ fn build_rs<T: Copy + PartialEq + PartialOrd, V: Copy>(
         leaf_values,
         base_f32,
         base_i32,
+        tree_shifts,
     };
 
     let mut i = 0usize;
@@ -171,6 +183,7 @@ impl<T: Copy, V: Copy> RsModel<T, V> {
             + self.groups.len() * (std::mem::size_of::<T>() + 8)
             + self.entries.len() * std::mem::size_of::<RsEntry>()
             + self.leaf_values.len() * std::mem::size_of::<V>()
+            + self.tree_shifts.len()
     }
 }
 
@@ -198,14 +211,19 @@ impl RsModel<f32, f32> {
             qs.leaf_values,
             qs.base_f32,
             Vec::new(),
+            qs.tree_shifts,
             merge,
         )
     }
 }
 
-impl RsModel<i16, i16> {
-    pub fn from_qforest(qf: &QForest) -> RsModel<i16, i16> {
-        let qs = QsModel::<i16, i16>::from_qforest(qf);
+impl<S: QuantInt> RsModel<S, S> {
+    /// Build the merged epitome model from a quantized forest — any storage
+    /// tier. Quantization collapses thresholds (Table 4), so the i8 tier
+    /// merges *more* aggressively than i16; the epitome bytes themselves
+    /// are width-independent.
+    pub fn from_qforest(qf: &QForest<S>) -> RsModel<S, S> {
+        let qs = QsModel::<S, S>::from_qforest(qf);
         let mut nodes = Vec::with_capacity(qs.thresholds.len());
         for k in 0..qs.n_features {
             for idx in qs.feature_range(k) {
@@ -221,6 +239,7 @@ impl RsModel<i16, i16> {
             qs.leaf_values,
             Vec::new(),
             qs.base_i32,
+            qs.tree_shifts,
             true,
         )
     }
@@ -300,6 +319,15 @@ fn bytes_mask_i16(xt: &[i16], k: usize, gamma: i16) -> U8x16 {
     let m0 = vcgtq_s16(vld1q_s16(&xt[k * V_RS..]), g);
     let m1 = vcgtq_s16(vld1q_s16(&xt[k * V_RS + 8..]), g);
     vcombine_u8(vmovn_u16(m0), vmovn_u16(m1))
+}
+
+/// Int8 tier: RapidScorer's block width equals the i8 lane count, so a
+/// *single* `vcgtq_s8` yields the 16-lane byte mask directly — no
+/// narrow/combine chain at all (vs 2 compares + combine for i16, 4 + two
+/// combine stages for f32).
+#[inline]
+fn bytes_mask_i8(xt: &[i8], k: usize, gamma: i8) -> U8x16 {
+    vcgtq_s8(vld1q_s8(&xt[k * V_RS..]), vdupq_n_s8(gamma))
 }
 
 fn transpose_rs<T: Copy>(x: &[T], d: usize, n: usize, base: usize, xt: &mut [T]) {
@@ -491,7 +519,8 @@ impl Engine for QRsEngine {
                     apply_group(m, g, mask, &mut leafidx);
                 }
             }
-            // Score: two I16x8 accumulators per class (16 lanes).
+            // Score: two I16x8 accumulators per class (16 lanes); per-tree
+            // leaf shifts round via SRSHR (identity at shift 0).
             acc.iter_mut().for_each(|a| *a = [I16x8([0; 8]); 2]);
             for ti in 0..m.n_trees {
                 let leaves = find_leaf_index(&leafidx[ti * rows..(ti + 1) * rows]);
@@ -499,13 +528,14 @@ impl Engine for QRsEngine {
                 for (lane, o) in offs.iter_mut().enumerate() {
                     *o = (ti * m.leaf_words + vgetq_lane_u8(leaves, lane) as usize) * c;
                 }
+                let sh = m.tree_shifts[ti] as u32;
                 for (cls, a) in acc.iter_mut().enumerate() {
                     for h in 0..2 {
                         let mut vals = I16x8([0; 8]);
                         for lane in 0..8 {
                             vals.0[lane] = m.leaf_values[offs[h * 8 + lane] + cls];
                         }
-                        a[h] = vaddq_s16(a[h], vals);
+                        a[h] = vaddq_s16(a[h], vrshrq_n_s16(vals, sh));
                     }
                 }
             }
@@ -528,9 +558,139 @@ impl Engine for QRsEngine {
         self.config.q_slice(x, &mut qx);
         let d = self.m.n_features;
         let n = x.len() / d;
-        let mut tr = rs_trace_q(&self.m, &qx, n);
+        // 2 × vcgtq_s16 per group, 2 × vaddq_s16 per (tree, class).
+        let mut tr = rs_trace_q(&self.m, &qx, n, 2, 2);
         tr.scalar_fp += (n * d) as u64 * 2;
         tr.store_bytes += (n * d * 2) as u64;
+        tr
+    }
+
+    fn memory_bytes(&self) -> usize {
+        self.m.memory_bytes()
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Int8 RS engine (q8RS)
+// ---------------------------------------------------------------------------
+
+/// Int8 RapidScorer (q8RS): 8-bit thresholds — one `vcgtq_s8` per merged
+/// group covers the whole v = 16 block — over the unchanged byte-wise
+/// epitome layout, with q8VQS's native-or-widened score accumulation
+/// (`Acc8`, shared with `engine::vqs`). Quantization collapses thresholds
+/// harder at 8 bits, so the merged-group count only shrinks vs qRS
+/// (Table 4 amplified).
+pub struct QRs8Engine {
+    m: RsModel<i8, i8>,
+    config: QuantConfig<i8>,
+    mode: AccumMode,
+}
+
+impl QRs8Engine {
+    pub fn new(qf: &QForest<i8>) -> QRs8Engine {
+        QRs8Engine { m: RsModel::from_qforest(qf), config: qf.config, mode: qf.accum_mode() }
+    }
+
+    /// The accumulation mode chosen at construction
+    /// ([`QForest::accum_mode`], exact per-model).
+    pub fn accum_mode(&self) -> AccumMode {
+        self.mode
+    }
+
+    pub fn model(&self) -> &RsModel<i8, i8> {
+        &self.m
+    }
+}
+
+impl Engine for QRs8Engine {
+    fn name(&self) -> String {
+        "q8RS".into()
+    }
+
+    fn lanes(&self) -> usize {
+        V_RS
+    }
+
+    fn n_features(&self) -> usize {
+        self.m.n_features
+    }
+
+    fn n_classes(&self) -> usize {
+        self.m.n_classes
+    }
+
+    fn predict_batch(&self, x: &[f32], out: &mut [f32]) {
+        let m = &self.m;
+        let d = m.n_features;
+        let c = m.n_classes;
+        let n = x.len() / d;
+        let rows = m.rows();
+        let mut qx = Vec::with_capacity(x.len());
+        self.config.q_slice(x, &mut qx);
+        let mut xt = vec![0i8; d * V_RS];
+        let mut leafidx = vec![U8x16([0; 16]); m.n_trees * rows];
+
+        let mut base = 0usize;
+        while base < n {
+            transpose_rs(&qx, d, n, base, &mut xt);
+            reset_leafidx(&mut leafidx);
+            for k in 0..d {
+                for gi in m.feature_groups(k) {
+                    let g = &m.groups[gi];
+                    let mask = bytes_mask_i8(&xt, k, g.threshold);
+                    if vmaxvq_u8(mask) == 0 {
+                        break;
+                    }
+                    apply_group(m, g, mask, &mut leafidx);
+                }
+            }
+            // Score: Alg. 4 per tree, then a 16-lane i8 gather rounded by
+            // the per-tree shift and accumulated natively or widening
+            // (same chain as q8VQS).
+            let mut acc = Acc8::new(c, self.mode);
+            for ti in 0..m.n_trees {
+                let leaves = find_leaf_index(&leafidx[ti * rows..(ti + 1) * rows]);
+                let mut offs = [0usize; V_RS];
+                for (lane, o) in offs.iter_mut().enumerate() {
+                    *o = (ti * m.leaf_words + vgetq_lane_u8(leaves, lane) as usize) * c;
+                }
+                let sh = m.tree_shifts[ti] as u32;
+                for cls in 0..c {
+                    let mut vals = I8x16([0; 16]);
+                    for lane in 0..V_RS {
+                        vals.0[lane] = m.leaf_values[offs[lane] + cls];
+                    }
+                    acc.add(cls, vrshrq_n_s8(vals, sh));
+                }
+            }
+            for lane in 0..V_RS {
+                let i = base + lane;
+                if i >= n {
+                    break;
+                }
+                for cls in 0..c {
+                    let v = self.m.base_i32[cls] + acc.lane(cls, lane);
+                    out[i * c + cls] = self.config.dq(v);
+                }
+            }
+            base += V_RS;
+        }
+    }
+
+    fn count_ops(&self, x: &[f32]) -> OpTrace {
+        let mut qx = Vec::new();
+        self.config.q_slice(x, &mut qx);
+        let d = self.m.n_features;
+        let n = x.len() / d;
+        // 1 × vcgtq_s8 per group; 1 (native) or 2 (widened) adds per
+        // (tree, class).
+        let acc_adds = match self.mode {
+            AccumMode::Native => 1,
+            AccumMode::Widened => 2,
+        };
+        let mut tr = rs_trace_q(&self.m, &qx, n, 1, acc_adds);
+        tr.scalar_fp += (n * d) as u64 * 2;
+        tr.store_bytes += (n * d) as u64; // 1 byte per quantized feature
         tr
     }
 
@@ -588,22 +748,33 @@ fn rs_trace<V: Copy>(
     tr
 }
 
-fn rs_trace_q(m: &RsModel<i16, i16>, qx: &[i16], n: usize) -> OpTrace {
+/// Trace for the fixed-point RS engines, generic over the storage tier:
+/// `compares` is the `vcgtq` count per merged group (2 for i16, 1 for i8),
+/// `acc_adds` the score adds per (tree, class) (2 i16 registers, or the
+/// i8 tier's native 1 / widened 2).
+fn rs_trace_q<S: QuantInt>(
+    m: &RsModel<S, S>,
+    qx: &[S],
+    n: usize,
+    compares: u64,
+    acc_adds: u64,
+) -> OpTrace {
     let d = m.n_features;
     let c = m.n_classes as u64;
     let mut tr = OpTrace::new();
-    let mut xt = vec![0i16; d * V_RS];
+    let mut xt = vec![S::default(); d * V_RS];
     let rows = m.rows() as u64;
+    let entry_bytes = (std::mem::size_of::<S>() + 4) as u64;
     let mut base = 0usize;
     while base < n {
         transpose_rs(qx, d, n, base, &mut xt);
         for k in 0..d {
             for gi in m.feature_groups(k) {
                 let g = &m.groups[gi];
-                tr.neon_alu += 2; // 2 × vcgtq_s16 (§5.1)
-                tr.neon_horiz += 2; // narrow + combine (one step fewer)
+                tr.neon_alu += compares; // vcgtq_s16 / vcgtq_s8 (§5.1)
+                tr.neon_horiz += compares; // narrow/combine + vmaxvq
                 tr.branch += 1;
-                tr.stream_load_bytes += 6;
+                tr.stream_load_bytes += entry_bytes;
                 if !(0..V_RS).any(|lane| xt[k * V_RS + lane] > g.threshold) {
                     break;
                 }
@@ -617,7 +788,7 @@ fn rs_trace_q(m: &RsModel<i16, i16>, qx: &[i16], n: usize) -> OpTrace {
         }
         tr.neon_alu += m.n_trees as u64 * (4 * rows + 3);
         tr.random_loads += m.n_trees as u64 * V_RS as u64;
-        tr.neon_alu += m.n_trees as u64 * c * 2; // vaddq_s16 pair
+        tr.neon_alu += m.n_trees as u64 * c * acc_adds;
         tr.store_bytes += m.n_trees as u64 * rows * 16;
         tr.scalar_alu += (d * V_RS) as u64;
         base += V_RS;
@@ -708,6 +879,71 @@ mod tests {
         let e = QRsEngine::new(&qf);
         let x = &ds.x[..ds.d * 49];
         assert_eq!(e.predict(x), qf.predict_batch(x));
+    }
+
+    #[test]
+    fn q8rs_matches_qforest_l32() {
+        let (f, ds) = setup(DatasetId::Eeg, 32, 4, 77);
+        let qf = QForest::<i8>::from_forest(&f, crate::quant::choose_scale_i8(&f, 1.0));
+        let e = QRs8Engine::new(&qf);
+        assert_eq!(e.name(), "q8RS");
+        assert_eq!(e.lanes(), 16);
+        let x = &ds.x[..ds.d * 77];
+        assert_eq!(e.predict(x), qf.predict_batch(x));
+    }
+
+    #[test]
+    fn q8rs_matches_qforest_l64() {
+        let (f, ds) = setup(DatasetId::Magic, 64, 5, 49);
+        assert!(f.max_leaves() > 32);
+        let qf = QForest::<i8>::from_forest(&f, crate::quant::choose_scale_i8(&f, 1.0));
+        let e = QRs8Engine::new(&qf);
+        let x = &ds.x[..ds.d * 49];
+        assert_eq!(e.predict(x), qf.predict_batch(x));
+    }
+
+    #[test]
+    fn q8rs_widened_mode_exact() {
+        // Inflated leaves force the widened i8→i16 accumulation chain.
+        let (mut f, ds) = setup(DatasetId::Magic, 32, 6, 64);
+        for t in &mut f.trees {
+            for v in &mut t.leaf_values {
+                *v *= 40.0;
+            }
+        }
+        let qf = QForest::<i8>::from_forest(&f, crate::quant::choose_scale_i8(&f, 1.0));
+        let e = QRs8Engine::new(&qf);
+        assert_eq!(e.accum_mode(), crate::quant::AccumMode::Widened);
+        let x = &ds.x[..ds.d * 64];
+        assert_eq!(e.predict(x), qf.predict_batch(x));
+    }
+
+    #[test]
+    fn q8rs_per_tree_shifts_exact() {
+        let (f, ds) = setup(DatasetId::Magic, 32, 7, 77);
+        let cfg = crate::quant::choose_scale_i8_per_tree(&f, 1.0);
+        let qf = QForest::<i8>::from_forest_per_tree(&f, cfg);
+        assert!(qf.has_per_tree_scales());
+        let e = QRs8Engine::new(&qf);
+        let x = &ds.x[..ds.d * 77];
+        assert_eq!(e.predict(x), qf.predict_batch(x));
+    }
+
+    #[test]
+    fn q8rs_merges_at_least_as_much_as_qrs() {
+        // 8-bit thresholds collapse at least as hard as 16-bit ones, so
+        // q8RS never keeps more merged groups than qRS.
+        let (f, _) = setup(DatasetId::Eeg, 32, 8, 200);
+        let qf16 = QForest::from_forest(&f, crate::quant::choose_scale(&f, 1.0));
+        let qf8 = QForest::<i8>::from_forest(&f, crate::quant::choose_scale_i8(&f, 1.0));
+        let e16 = QRsEngine::new(&qf16);
+        let e8 = QRs8Engine::new(&qf8);
+        assert!(
+            e8.model().n_groups() <= e16.model().n_groups(),
+            "q8RS groups {} vs qRS {}",
+            e8.model().n_groups(),
+            e16.model().n_groups()
+        );
     }
 
     #[test]

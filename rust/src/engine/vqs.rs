@@ -349,7 +349,8 @@ impl QVqsEngine {
             }
         }
         // Score: per-class i16 accumulation over 8 lanes (vaddq_s16 —
-        // "adding eight 16 bit values at once", §5.1).
+        // "adding eight 16 bit values at once", §5.1). Per-tree leaf shifts
+        // round via SRSHR before the add (identity when the shift is 0).
         let mut acc = vec![I16x8([0; 8]); c];
         for (ti, regs) in leafidx.iter().enumerate() {
             let mut vals = vec![I16x8([0; 8]); c];
@@ -361,8 +362,9 @@ impl QVqsEngine {
                     vals[cls].0[lane] = row[cls];
                 }
             }
+            let sh = m.tree_shifts[ti] as u32;
             for cls in 0..c {
-                acc[cls] = vaddq_s16(acc[cls], vals[cls]);
+                acc[cls] = vaddq_s16(acc[cls], vrshrq_n_s16(vals[cls], sh));
             }
         }
         self.write_scores(&acc, out, base, n, c);
@@ -427,8 +429,9 @@ impl QVqsEngine {
                     vals[cls].0[lane] = row[cls];
                 }
             }
+            let sh = m.tree_shifts[ti] as u32;
             for cls in 0..c {
-                acc[cls] = vaddq_s16(acc[cls], vals[cls]);
+                acc[cls] = vaddq_s16(acc[cls], vrshrq_n_s16(vals[cls], sh));
             }
         }
         self.write_scores(&acc, out, base, n, c);
@@ -539,7 +542,9 @@ impl Engine for QVqs8Engine {
 
 /// Per-class score accumulators for one 16-lane block: one i8 register in
 /// [`AccumMode::Native`], an i16 register pair in [`AccumMode::Widened`].
-struct Acc8 {
+/// Shared with the int8 RapidScorer (`engine::rapidscorer`), whose score
+/// loop gathers the same 16-lane i8 leaf registers.
+pub(crate) struct Acc8 {
     native: bool,
     i8acc: Vec<I8x16>,
     lo: Vec<I16x8>,
@@ -547,7 +552,7 @@ struct Acc8 {
 }
 
 impl Acc8 {
-    fn new(c: usize, mode: AccumMode) -> Acc8 {
+    pub(crate) fn new(c: usize, mode: AccumMode) -> Acc8 {
         let native = mode == AccumMode::Native;
         Acc8 {
             native,
@@ -558,7 +563,7 @@ impl Acc8 {
     }
 
     #[inline]
-    fn add(&mut self, cls: usize, vals: I8x16) {
+    pub(crate) fn add(&mut self, cls: usize, vals: I8x16) {
         if self.native {
             self.i8acc[cls] = vaddq_s8(self.i8acc[cls], vals);
         } else {
@@ -568,7 +573,7 @@ impl Acc8 {
     }
 
     #[inline]
-    fn lane(&self, cls: usize, lane: usize) -> i32 {
+    pub(crate) fn lane(&self, cls: usize, lane: usize) -> i32 {
         if self.native {
             self.i8acc[cls].0[lane] as i32
         } else if lane < 8 {
@@ -625,7 +630,8 @@ impl QVqs8Engine {
                 leafidx[tree] = next;
             }
         }
-        // Score: 16-lane i8 leaf gather per (tree, class), accumulated
+        // Score: 16-lane i8 leaf gather per (tree, class), rounded down by
+        // the per-tree shift (SRSHR; identity at shift 0), accumulated
         // natively or via the widening add.
         let mut acc = Acc8::new(c, self.mode);
         for (ti, regs) in leafidx.iter().enumerate() {
@@ -638,8 +644,9 @@ impl QVqs8Engine {
                     vals[cls].0[lane] = row[cls];
                 }
             }
+            let sh = m.tree_shifts[ti] as u32;
             for (cls, v) in vals.iter().enumerate() {
-                acc.add(cls, *v);
+                acc.add(cls, vrshrq_n_s8(*v, sh));
             }
         }
         self.write_scores(&acc, out, base, n, c);
@@ -706,8 +713,9 @@ impl QVqs8Engine {
                     vals[cls].0[lane] = row[cls];
                 }
             }
+            let sh = m.tree_shifts[ti] as u32;
             for (cls, v) in vals.iter().enumerate() {
-                acc.add(cls, *v);
+                acc.add(cls, vrshrq_n_s8(*v, sh));
             }
         }
         self.write_scores(&acc, out, base, n, c);
@@ -974,6 +982,35 @@ mod tests {
         let e = QVqs8Engine::new(&qf);
         assert_eq!(e.accum_mode(), AccumMode::Widened);
         let x = &ds.x[..ds.d * 64];
+        assert_eq!(e.predict(x), qf.predict_batch(x));
+    }
+
+    #[test]
+    fn q8vqs_per_tree_shifts_exact() {
+        // Per-tree leaf scales: non-zero SRSHR shifts in the score loop,
+        // still bit-exact with the shifted i32 reference (both L widths).
+        for (leaves, seed, n) in [(32usize, 8u64, 103usize), (64, 2, 87)] {
+            let (f, ds) = setup(leaves, seed, n.max(96));
+            let cfg = crate::quant::choose_scale_i8_per_tree(&f, 1.0);
+            let qf = QForest::<i8>::from_forest_per_tree(&f, cfg);
+            assert!(qf.has_per_tree_scales(), "RF leaves should earn a shift");
+            let e = QVqs8Engine::new(&qf);
+            let x = &ds.x[..ds.d * n];
+            assert_eq!(e.predict(x), qf.predict_batch(x), "L={leaves}");
+        }
+    }
+
+    #[test]
+    fn qvqs_i16_per_tree_shifts_exact() {
+        // The i16 tier supports per-tree scales through the same SRSHR
+        // path (s16 lanes).
+        let (f, ds) = setup(32, 9, 101);
+        let cfg: crate::quant::QuantConfig =
+            crate::quant::QuantConfig::new(crate::quant::choose_scale(&f, 1.0).scale / 64.0);
+        let qf = QForest::from_forest_per_tree(&f, cfg);
+        assert!(qf.has_per_tree_scales());
+        let e = QVqsEngine::new(&qf);
+        let x = &ds.x[..ds.d * 101];
         assert_eq!(e.predict(x), qf.predict_batch(x));
     }
 

@@ -15,12 +15,28 @@
 //! enqueues shard tasks straight onto its deployment's [`pool::PoolClient`]
 //! (see `coordinator::batcher` and DESIGN.md §5).
 //!
-//! Exactness is a first-class contract: under the default
-//! [`ShardPolicy::Exact`] the parallel engine is bit-identical to the
-//! serial engine it wraps (enforced by `rust/tests/parallel_exact.rs`);
-//! [`ShardPolicy::Throughput`] additionally unlocks tree/hybrid plans for
-//! the small-batch × large-forest regime at float-tolerance accuracy. See
-//! `exec::parallel` for the full contract.
+//! # Load-bearing contracts
+//!
+//! * **Determinism** — under the default [`ShardPolicy::Exact`] the
+//!   parallel engine is **bit-identical** to the serial engine it wraps,
+//!   for every batch size and thread count: row chunks start at multiples
+//!   of the engine's lane width, so no SIMD block boundary (and no
+//!   floating-point operation order) ever changes. Enforced by
+//!   `rust/tests/parallel_exact.rs`. [`ShardPolicy::Throughput`]
+//!   additionally unlocks tree/hybrid plans for the small-batch ×
+//!   large-forest regime at float-tolerance accuracy (run-to-run
+//!   deterministic ordered reduction); see `exec::parallel` for the full
+//!   statement.
+//! * **Budgets and stealing** — a [`pool::PoolClient`]'s budget is its
+//!   worker entitlement *under contention*, not a hard cap: under-budget
+//!   deployments are served first (weighted-fair by vtime, so service
+//!   rates converge to budget ratios), and budget-exhausted deployments
+//!   steal only when every under-budget deployment's queue is empty —
+//!   i.e. stolen capacity is always some idle deployment's entitlement,
+//!   returned the moment it enqueues work.
+//! * **Teardown** — dropping a client discards its queued tasks but lets
+//!   in-flight tasks finish; serving drains first (see
+//!   `coordinator::batcher`), so no accepted request is dropped.
 
 pub mod parallel;
 pub mod pool;

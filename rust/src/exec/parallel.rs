@@ -72,15 +72,24 @@ impl ParallelEngine {
         threads: usize,
         policy: ShardPolicy,
     ) -> anyhow::Result<ParallelEngine> {
-        // One scale for the full forest and every shard (see module docs).
-        // The i16-typed config is only a scale carrier here; `build`
-        // re-materializes it at the target storage width.
-        let quant = match precision {
-            Precision::I16 => Some(quant.unwrap_or_else(|| choose_scale(forest, 1.0))),
-            Precision::I8 => Some(quant.unwrap_or_else(|| {
-                QuantConfig::new(crate::quant::choose_scale_i8(forest, 1.0).scale)
-            })),
-            Precision::F32 => quant,
+        // Tree shards must share one scale with the full forest (see module
+        // docs), so under `Throughput` the quant default is resolved *here*
+        // and passed to every sub-build (the i16-typed config is only a
+        // scale carrier; `build` re-materializes it at the target storage
+        // width). Under `Exact` no shards exist and the quant argument
+        // passes through untouched — the wrapped engine is then the exact
+        // engine `build` would produce serially, including the i8 tier's
+        // per-tree-scale upgrade on `None`.
+        let quant = if policy == ShardPolicy::Throughput {
+            match precision {
+                Precision::I16 => Some(quant.unwrap_or_else(|| choose_scale(forest, 1.0))),
+                Precision::I8 => Some(quant.unwrap_or_else(|| {
+                    QuantConfig::new(crate::quant::choose_scale_i8(forest, 1.0).scale)
+                })),
+                Precision::F32 => quant,
+            }
+        } else {
+            quant
         };
         let inner: Arc<dyn Engine> = Arc::from(build(kind, precision, forest, quant)?);
         let threads = threads.max(1);

@@ -6,9 +6,11 @@
 //!
 //! * **Engines** ([`engine`]): the paper's five traversal strategies —
 //!   Naive (NA), If-Else (IE), QuickScorer (QS), V-QuickScorer (VQS),
-//!   RapidScorer (RS) — in float32, int16 and int8 fixed-point variants
-//!   (precision tiers, [`quant::QuantInt`]), the SIMD ones executing the
-//!   paper's ARM NEON algorithms on a bit-exact NEON simulator ([`neon`]).
+//!   RapidScorer (RS) — each in float32, int16 **and** int8 fixed-point
+//!   variants (precision tiers, [`quant::QuantInt`]; the i8 tier adds
+//!   per-tree leaf scales with rounding shifts at sum time), the SIMD ones
+//!   executing the paper's ARM NEON algorithms on a bit-exact NEON
+//!   simulator ([`neon`]).
 //! * **Execution runtime** ([`exec`]): a sharded, work-stealing parallel
 //!   execution layer — a std-only worker pool, a big.LITTLE-aware shard
 //!   planner (row / tree / hybrid), and a [`exec::ParallelEngine`] wrapper

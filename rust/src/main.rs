@@ -60,7 +60,9 @@ USAGE: arbors <command> [flags]
            --trees N --leaves N --out model.json [--gbt] [--n N] [--seed S]
   predict  --model model.json --data in.csv --engine <NA|IE|QS|VQS|RS>
            [--precision f32|i16|i8] [--quant] [--threads N] [--out scores.csv]
-           (--quant is shorthand for --precision i16; int8 covers NA/QS/VQS)
+           (--quant is shorthand for --precision i16; int8 covers all five
+           engines and auto-upgrades to per-tree leaf scales when the
+           global analysis would widen accumulation)
   accuracy --model model.json --dataset <name> | --data <csv>
   select   --model model.json [--device a53|exynos] [--n N] [--threads N]
            [--precision f32|i16|i8]  (restricts the ranking to one tier;
@@ -222,6 +224,17 @@ fn cmd_accuracy(args: &Args) -> Result<()> {
     let cfg8 = arbors::quant::choose_scale_i8(&model, 1.0);
     let acc8 = accuracy_with_parts(&model, cfg8, QuantParts::BOTH, &ds.x, &ds.labels);
     println!("  split/leaf int8/int8: {:.2}% (s={:.1})", acc8 * 100.0, cfg8.scale);
+    // Per-tree leaf scales (the ablation knob `bench --exp int8` records).
+    let cfg8pt = arbors::quant::choose_scale_i8_per_tree(&model, 1.0);
+    let qf8pt = arbors::quant::QForest::<i8>::from_forest_per_tree(&model, cfg8pt);
+    let preds = Forest::argmax(&qf8pt.predict_batch(&ds.x), model.n_classes);
+    let correct = preds.iter().zip(&ds.labels).filter(|(p, l)| p == l).count();
+    println!(
+        "  int8 per-tree scales: {:.2}% (s={:.1}, {} accumulation)",
+        100.0 * correct as f64 / ds.labels.len().max(1) as f64,
+        cfg8pt.scale,
+        qf8pt.accum_mode().as_str()
+    );
     Ok(())
 }
 

@@ -368,6 +368,38 @@ pub fn vaddq_s32(a: I32x4, b: I32x4) -> I32x4 {
     I32x4(out)
 }
 
+/// `SRSHR Vd.16B, Vn.16B, #n` — rounding arithmetic shift right per i8
+/// lane: `(v + 2^(n-1)) >> n`, computed in wider precision (the hardware
+/// rounding constant cannot wrap the lane). Applies the per-tree leaf
+/// shift of the per-tree-scale quantization mode
+/// ([`crate::quant::QForest::from_forest_per_tree`]); `n = 0` is the
+/// identity (the instruction requires `n ≥ 1`).
+#[inline]
+pub fn vrshrq_n_s8(a: I8x16, n: u32) -> I8x16 {
+    if n == 0 {
+        return a;
+    }
+    let mut out = [0i8; 16];
+    for i in 0..16 {
+        out[i] = ((a.0[i] as i32 + (1 << (n - 1))) >> n) as i8;
+    }
+    I8x16(out)
+}
+
+/// `SRSHR Vd.8H, Vn.8H, #n` — rounding arithmetic shift right per i16 lane
+/// (see [`vrshrq_n_s8`]).
+#[inline]
+pub fn vrshrq_n_s16(a: I16x8, n: u32) -> I16x8 {
+    if n == 0 {
+        return a;
+    }
+    let mut out = [0i16; 8];
+    for i in 0..8 {
+        out[i] = ((a.0[i] as i32 + (1 << (n - 1))) >> n) as i16;
+    }
+    I16x8(out)
+}
+
 // ---------------------------------------------------------------------------
 // Narrowing / widening / halves (the §5.1 mask-extension chain)
 // ---------------------------------------------------------------------------
@@ -691,6 +723,25 @@ mod tests {
         assert_eq!(q0, U32x4([u32::MAX, 0, u32::MAX, 0]));
         let q3 = vreinterpretq_u32_s32(vmovl_s16(vget_high_s16(hi16)));
         assert_eq!(q3, U32x4([0, u32::MAX, 0, u32::MAX]));
+    }
+
+    #[test]
+    fn rounding_shift_right_matches_scalar() {
+        // SRSHR == (v + 2^(n-1)) >> n in wide arithmetic, for every i8 and
+        // every shift — the per-tree-shift contract engines rely on.
+        for n in 1..=7u32 {
+            for v in i8::MIN..=i8::MAX {
+                let want = ((v as i32 + (1 << (n - 1))) >> n) as i8;
+                assert_eq!(vrshrq_n_s8(vdupq_n_s8(v), n).0[0], want, "v={v} n={n}");
+            }
+        }
+        // The rounding constant cannot wrap the lane (wide intermediate).
+        assert_eq!(vrshrq_n_s8(vdupq_n_s8(i8::MAX), 1).0[0], 64);
+        assert_eq!(vrshrq_n_s8(vdupq_n_s8(i8::MIN), 1).0[0], -64);
+        assert_eq!(vrshrq_n_s16(vdupq_n_s16(i16::MAX), 1).0[0], 16384);
+        // n = 0 is the identity.
+        assert_eq!(vrshrq_n_s8(vdupq_n_s8(-3), 0).0[0], -3);
+        assert_eq!(vrshrq_n_s16(vdupq_n_s16(77), 0).0[0], 77);
     }
 
     #[test]

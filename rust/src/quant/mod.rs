@@ -45,6 +45,30 @@
 //! The accumulator budget reserves `M + 1` counts of slack: `⌊s·x⌋` can
 //! overshoot `s·|x|` by up to 1 for negative `x`, once per tree plus the
 //! base score.
+//!
+//! # Per-tree leaf scales (InTreeger-style scale/shift)
+//!
+//! Global scaling couples two unrelated constraints through the single
+//! scale `s`: leaf *resolution* (RF leaves live in `[0, 1/M]`, so `s < M`
+//! flushes them to zero — the floor in [`choose_scale_i8`]) and accumulator
+//! *safety* (`s · worst-sum + slack ≤ acc_max`). For large forests the two
+//! collide and the tier falls back to [`AccumMode::Widened`].
+//!
+//! [`QForest::from_forest_per_tree`] decouples them: tree `t`'s leaves are
+//! stored at their own scale `s·2^{k_t}` (the largest power-of-two multiple
+//! that still fits the storage width — full 8-bit resolution per tree), and
+//! the engines apply a per-tree **rounding shift** `(v + 2^{k_t-1}) ≫ k_t`
+//! when summing (NEON `SRSHR`, [`shift_round`] in scalar code), which lands
+//! every term back in the common accumulation scale `s`. The shifted term
+//! approximates `s·v` to within 1 count (round-to-nearest on the finely
+//! stored value, vs the global floor's one-sided truncation of the coarse
+//! one), so the accumulator slack stays `M + 1` — but the leaf floor
+//! `s ≥ M` disappears entirely: [`choose_scale_i8_per_tree`] can pick an
+//! accumulation scale low enough for a **native** i8 accumulator on
+//! forests whose global analysis required widening. The §5-style safety
+//! proof is in DESIGN.md §6. Thresholds, features, the base score and the
+//! final descale all stay at the common scale `s`; only leaf storage is
+//! per-tree.
 
 pub mod merge;
 
@@ -226,6 +250,43 @@ pub struct QForest<S: QuantInt = i16> {
     /// never stored in `S`), via the saturating [`QuantConfig::q_i32`].
     pub base_score: Vec<i32>,
     pub config: QuantConfig<S>,
+    /// Per-tree leaf shift `k_t`: tree `t`'s stored leaf values are at scale
+    /// `config.scale · 2^{k_t}`, and every engine applies the rounding
+    /// shift [`shift_round`]`(v, k_t)` when summing (module docs). All
+    /// zeros under global scaling ([`QForest::from_forest`]).
+    pub tree_shifts: Vec<u8>,
+}
+
+/// The per-tree leaf shift applied at sum time: `(v + 2^{k-1}) ≫ k`
+/// (round-half-up; `k = 0` is the identity). This is the one definition of
+/// the shift semantics — the SIMD engines' `SRSHR` emulation
+/// ([`crate::neon::vrshrq_n_s8`]) is bit-identical to it for values that
+/// fit the storage width.
+#[inline]
+pub fn shift_round(v: i32, k: u8) -> i32 {
+    if k == 0 {
+        v
+    } else {
+        (v + (1i32 << (k - 1))) >> k
+    }
+}
+
+/// Largest `k` such that leaves of magnitude `max_abs` stored at
+/// `scale · 2^k` still fit the storage width. Capped at `S::BITS`: ARM
+/// `SRSHR` encodes shifts `#1..=#lane_bits` only, so a larger `k` could
+/// not execute on real hardware (and a `BITS`-wide rounding shift of an
+/// in-range value is already 0) — the cap keeps the simulated engines
+/// portable to actual NEON intrinsics.
+fn leaf_shift_for<S: QuantInt>(scale: f32, max_abs: f32) -> u8 {
+    if max_abs <= 0.0 {
+        return 0;
+    }
+    let cap = S::BITS as u8;
+    let mut k = 0u8;
+    while k < cap && scale * ((1u32 << (k + 1)) as f32) * max_abs <= S::MAX_F {
+        k += 1;
+    }
+    k
 }
 
 /// One quantized tree: same `Child` topology as [`Tree`], integer payloads.
@@ -240,18 +301,44 @@ pub struct QTree<S: QuantInt = i16> {
 }
 
 impl<S: QuantInt> QForest<S> {
-    /// Quantize a forest with the given scale.
+    /// Quantize a forest with the given scale (global scaling: one scale
+    /// for thresholds, leaves and features; all per-tree shifts zero).
     pub fn from_forest(f: &Forest, config: QuantConfig<S>) -> QForest<S> {
+        Self::build(f, config, false)
+    }
+
+    /// Quantize with **per-tree leaf scales** (module docs): thresholds and
+    /// features stay at `config.scale`, but tree `t`'s leaves are stored at
+    /// `config.scale · 2^{k_t}` with the largest `k_t` that fits the
+    /// storage width, and `tree_shifts[t] = k_t` tells the engines which
+    /// rounding shift to apply at sum time.
+    pub fn from_forest_per_tree(f: &Forest, config: QuantConfig<S>) -> QForest<S> {
+        Self::build(f, config, true)
+    }
+
+    fn build(f: &Forest, config: QuantConfig<S>, per_tree: bool) -> QForest<S> {
+        let mut tree_shifts = Vec::with_capacity(f.trees.len());
         let trees = f
             .trees
             .iter()
-            .map(|t| QTree {
-                features: t.nodes.iter().map(|n| n.feature).collect(),
-                thresholds: t.nodes.iter().map(|n| config.q(n.threshold)).collect(),
-                left: t.nodes.iter().map(|n| n.left).collect(),
-                right: t.nodes.iter().map(|n| n.right).collect(),
-                leaf_values: t.leaf_values.iter().map(|&v| config.q(v)).collect(),
-                n_leaves: t.n_leaves,
+            .map(|t| {
+                let k = if per_tree {
+                    let mx = t.leaf_values.iter().map(|v| v.abs()).fold(0f32, f32::max);
+                    leaf_shift_for::<S>(config.scale, mx)
+                } else {
+                    0
+                };
+                tree_shifts.push(k);
+                let leaf_cfg: QuantConfig<S> =
+                    QuantConfig::new(config.scale * (1u32 << k) as f32);
+                QTree {
+                    features: t.nodes.iter().map(|n| n.feature).collect(),
+                    thresholds: t.nodes.iter().map(|n| config.q(n.threshold)).collect(),
+                    left: t.nodes.iter().map(|n| n.left).collect(),
+                    right: t.nodes.iter().map(|n| n.right).collect(),
+                    leaf_values: t.leaf_values.iter().map(|&v| leaf_cfg.q(v)).collect(),
+                    n_leaves: t.n_leaves,
+                }
             })
             .collect();
         QForest {
@@ -261,13 +348,14 @@ impl<S: QuantInt> QForest<S> {
             task: f.task,
             base_score: f.base_score.iter().map(|&v| config.q_i32(v)).collect(),
             config,
+            tree_shifts,
         }
     }
 
     /// Reference (naive-traversal) prediction on float inputs: features are
-    /// quantized on the fly, scores accumulate in i32 and are descaled.
-    /// Every quantized engine must agree with this bit-for-bit on scores
-    /// before descaling.
+    /// quantized on the fly, scores accumulate in i32 (per-tree terms go
+    /// through [`shift_round`]) and are descaled. Every quantized engine
+    /// must agree with this bit-for-bit on scores before descaling.
     pub fn predict_batch(&self, x: &[f32]) -> Vec<f32> {
         let n = x.len() / self.n_features;
         let c = self.n_classes;
@@ -279,10 +367,11 @@ impl<S: QuantInt> QForest<S> {
             for (j, &b) in self.base_score.iter().enumerate() {
                 acc[j] = b;
             }
-            for t in &self.trees {
+            for (ti, t) in self.trees.iter().enumerate() {
                 let leaf = t.exit_leaf_q(&qx);
+                let k = self.tree_shifts[ti];
                 for j in 0..c {
-                    acc[j] += t.leaf_values[leaf * c + j].to_i32();
+                    acc[j] += shift_round(t.leaf_values[leaf * c + j].to_i32(), k);
                 }
             }
             for j in 0..c {
@@ -300,15 +389,19 @@ impl<S: QuantInt> QForest<S> {
     /// Worst-case |accumulated score| before descaling, from the *quantized*
     /// payloads (exact, unlike the float analysis in
     /// [`max_safe_scale_with`]): max over classes of |base| + Σ_trees
-    /// max_leaf |v|.
+    /// max_leaf |`shift_round(v, k_t)`| — the shifted terms are what the
+    /// engines actually add.
     pub fn worst_abs_acc(&self) -> i64 {
         let c = self.n_classes;
         (0..c)
             .map(|j| {
                 let mut w = (self.base_score[j] as i64).abs();
-                for t in &self.trees {
+                for (ti, t) in self.trees.iter().enumerate() {
+                    let k = self.tree_shifts[ti];
                     let mx = (0..t.n_leaves)
-                        .map(|l| (t.leaf_values[l * c + j].to_i32() as i64).abs())
+                        .map(|l| {
+                            (shift_round(t.leaf_values[l * c + j].to_i32(), k) as i64).abs()
+                        })
                         .max()
                         .unwrap_or(0);
                     w += mx;
@@ -317,6 +410,12 @@ impl<S: QuantInt> QForest<S> {
             })
             .max()
             .unwrap_or(0)
+    }
+
+    /// Whether any tree stores leaves at a per-tree scale (at least one
+    /// non-zero shift).
+    pub fn has_per_tree_scales(&self) -> bool {
+        self.tree_shifts.iter().any(|&k| k != 0)
     }
 }
 
@@ -518,6 +617,68 @@ pub fn choose_scale_i8(f: &Forest, max_abs_feature: f32) -> QuantConfig<i8> {
     // large forests, M ≥ ~128, the floor could otherwise exceed it and the
     // engines' i16 accumulation would wrap against the i32 reference).
     QuantConfig::new(preferred.max(m).min(i8::MAX as f32).min(storage).min(widened))
+}
+
+/// Choose an int8 *accumulation* scale for per-tree leaf scaling (module
+/// docs, DESIGN.md §6): the largest scale whose worst-case sum of rounded
+/// per-tree terms fits a **native** i8 accumulator.
+///
+/// Unlike [`choose_scale_i8`] there is **no leaf-preserving floor `M`** —
+/// leaves keep their resolution at the per-tree scale `s·2^{k_t}` chosen by
+/// [`QForest::from_forest_per_tree`], so the accumulation scale is bounded
+/// only by threshold representability and the native accumulator budget.
+/// The slack stays `M + 1`: a rounded term `(⌊s·2^k·v⌋ + 2^{k-1}) ≫ k`
+/// lies within 1 count of `s·v` (½ from rounding plus the stored value's
+/// scaled-down floor error), once per tree plus the base-score floor.
+/// Per-value leaf storage needs no separate bound: the accumulator bound
+/// already implies `s · max_t max|v| ≤ 127` (the sum dominates any single
+/// tree), and `k_t` only ever *raises* the leaf scale toward the storage
+/// limit.
+///
+/// For forests so large that the slack alone exceeds the i8 budget
+/// (`M ≥ ~126`) the returned scale degenerates toward 1; the *a-priori*
+/// analysis is conservative, so the resulting [`QForest::accum_mode`] —
+/// computed exactly from the quantized payloads — may still come out
+/// Native where the float bound could not prove it. Callers (e.g.
+/// `engine::build`) adopt the per-tree config only when that exact
+/// per-model check says Native.
+pub fn choose_scale_i8_per_tree(f: &Forest, max_abs_feature: f32) -> QuantConfig<i8> {
+    let max_base: f32 = f.base_score.iter().map(|v| v.abs()).fold(0.0, f32::max);
+    let mut worst: f32 = max_base;
+    for t in &f.trees {
+        worst += t.leaf_values.iter().map(|v| v.abs()).fold(0f32, f32::max);
+    }
+    let slack = (f.n_trees() + 1) as f32;
+    let bound_acc = if worst > 0.0 {
+        (i8::MAX as f32 - slack).max(1.0) / worst
+    } else {
+        f32::INFINITY
+    };
+    let bound_thresholds = if max_abs_feature > 0.0 {
+        i8::MAX as f32 / max_abs_feature
+    } else {
+        f32::INFINITY
+    };
+    QuantConfig::new(bound_acc.min(bound_thresholds).min(i8::MAX as f32).max(1.0))
+}
+
+/// The i8 auto-quantization **policy** — the one place it is defined, used
+/// by `engine::build` for `Precision::I8` with `quant: None` (and by tests
+/// constructing the matching reference): quantize globally
+/// ([`choose_scale_i8`]); when the exact per-model check says the global
+/// config must widen, try per-tree leaf scales and adopt them **only** if
+/// the exact check then proves a native i8 accumulator (faster: one
+/// accumulator register instead of a widened pair).
+pub fn quantize_i8_auto(f: &Forest, max_abs_feature: f32) -> QForest<i8> {
+    let qf = QForest::<i8>::from_forest(f, choose_scale_i8(f, max_abs_feature));
+    if qf.accum_mode() == AccumMode::Widened {
+        let pt =
+            QForest::<i8>::from_forest_per_tree(f, choose_scale_i8_per_tree(f, max_abs_feature));
+        if pt.accum_mode() == AccumMode::Native {
+            return pt;
+        }
+    }
+    qf
 }
 
 #[cfg(test)]
@@ -788,6 +949,106 @@ mod tests {
                 assert!(a >= i16::MIN as i32 && a <= i16::MAX as i32, "overflow {a}");
             }
         }
+    }
+
+    #[test]
+    fn shift_round_semantics() {
+        assert_eq!(shift_round(70, 6), 1); // (70 + 32) >> 6
+        assert_eq!(shift_round(96, 6), 2); // (96 + 32) >> 6 = 128 >> 6
+        assert_eq!(shift_round(-70, 6), -1); // (-70 + 32) >> 6 = -38 >> 6
+        assert_eq!(shift_round(5, 0), 5); // k = 0 is the identity
+        assert_eq!(shift_round(-5, 0), -5);
+        // Round-half-up at the midpoint.
+        assert_eq!(shift_round(1, 1), 1);
+        assert_eq!(shift_round(-1, 1), 0);
+        // Matches the SRSHR emulation for every storable i8.
+        for k in 0..=7u8 {
+            for v in i8::MIN..=i8::MAX {
+                let simd = crate::neon::vrshrq_n_s8(crate::neon::vdupq_n_s8(v), k as u32);
+                assert_eq!(simd.0[0] as i32, shift_round(v as i32, k), "v={v} k={k}");
+            }
+        }
+    }
+
+    /// The headline property of per-tree scaling: a forest whose *global*
+    /// analysis forced widened accumulation (the leaf floor `M` exceeds the
+    /// native budget) flips to Native under per-tree leaf scales, because
+    /// the floor disappears — while storage stays in-range and leaves keep
+    /// real resolution.
+    #[test]
+    fn per_tree_scaling_flips_widened_to_native() {
+        // 60 trees × max|leaf| = 1/30: worst sum = 2.0. Global: the floor
+        // M = 60 exceeds the native bound (127 - 61)/2 = 33 → Widened.
+        let f = leaf_forest(vec![0.0], &[1.0 / 30.0; 60]);
+        let qf_global = QForest::<i8>::from_forest(&f, choose_scale_i8(&f, 1.0));
+        assert_eq!(qf_global.accum_mode(), AccumMode::Widened);
+        assert!(!qf_global.has_per_tree_scales());
+
+        let cfg = choose_scale_i8_per_tree(&f, 1.0);
+        assert!(cfg.scale <= 33.0 + 1e-3, "scale {}", cfg.scale);
+        let qf = QForest::<i8>::from_forest_per_tree(&f, cfg);
+        assert!(qf.has_per_tree_scales());
+        assert_eq!(qf.accum_mode(), AccumMode::Native, "worst {}", qf.worst_abs_acc());
+        assert!(qf.worst_abs_acc() <= i8::MAX as i64);
+        // Stored leaves use the full storage range (resolution retained):
+        // at the global scale 33 they would all quantize to ⌊33/30⌋ = 1.
+        for (t, &k) in qf.trees.iter().zip(&qf.tree_shifts) {
+            assert!(k > 0, "expected a non-zero per-tree shift");
+            for &v in &t.leaf_values {
+                assert!(v > 1, "leaf {v} lost its per-tree resolution");
+                // ... and the shifted term is what the accumulator sees.
+                assert!(shift_round(v as i32, k) <= 2);
+            }
+        }
+    }
+
+    /// Per-tree shifts never push stored leaves out of the storage width,
+    /// and the reference prediction stays finite and close to float.
+    #[test]
+    fn per_tree_reference_close_to_float() {
+        let (f, ds) = trained();
+        let cfg = choose_scale_i8_per_tree(&f, 1.0);
+        let qf = QForest::<i8>::from_forest_per_tree(&f, cfg);
+        // The per-tree shift never raises a leaf scale past the storage
+        // width (the k_t selection rule): the largest original leaf of each
+        // tree still floors inside i8.
+        for (ft, (t, &k)) in f.trees.iter().zip(qf.trees.iter().zip(&qf.tree_shifts)) {
+            let leaf_scale = cfg.scale * (1u32 << k) as f32;
+            let mx = ft.leaf_values.iter().map(|v| v.abs()).fold(0f32, f32::max);
+            assert!(
+                (leaf_scale * mx).floor() <= i8::MAX as f32,
+                "tree saturates: scale {leaf_scale} × max |leaf| {mx}"
+            );
+            assert_eq!(t.leaf_values.len(), ft.leaf_values.len());
+        }
+        let float_scores = f.predict_batch(&ds.x[..ds.d * 64]);
+        let q_scores = qf.predict_batch(&ds.x[..ds.d * 64]);
+        let max_diff = float_scores
+            .iter()
+            .zip(&q_scores)
+            .map(|(a, b)| (a - b).abs())
+            .fold(0f32, f32::max);
+        assert!(max_diff < 0.3, "max diff {max_diff}");
+        // Argmax agreement stays high (rounded terms are unbiased).
+        let a = Forest::argmax(&q_scores, qf.n_classes);
+        let b = Forest::argmax(&float_scores, f.n_classes);
+        let agree = a.iter().zip(&b).filter(|(x, y)| x == y).count();
+        // Same floor as the global-scale sanity check (75%): rounding shifts
+        // are never worse than flooring in expectation.
+        assert!(agree >= 48, "only {agree}/64 argmax agreements");
+    }
+
+    /// Zero-shift per-tree quantization is exactly global quantization: on
+    /// a forest whose leaves already fill the storage width (k_t = 0
+    /// everywhere), the two constructors agree bit-for-bit.
+    #[test]
+    fn per_tree_with_zero_shifts_equals_global() {
+        let f = leaf_forest(vec![0.5], &[1.0, -1.0, 0.75]);
+        let cfg: QuantConfig<i8> = QuantConfig::new(100.0);
+        let a = QForest::<i8>::from_forest(&f, cfg);
+        let b = QForest::<i8>::from_forest_per_tree(&f, cfg);
+        assert!(!b.has_per_tree_scales());
+        assert_eq!(a, b);
     }
 
     #[test]

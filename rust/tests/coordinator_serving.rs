@@ -46,6 +46,7 @@ fn no_request_lost_or_cross_wired() {
                 queue_cap: 10_000,
                 workers: 3,
                 exec_threads: 1,
+                drain_timeout: None,
             },
         )
         .unwrap();
@@ -95,6 +96,7 @@ fn batches_form_under_burst() {
                 queue_cap: 10_000,
                 workers: 1,
                 exec_threads: 1,
+                drain_timeout: None,
             },
         )
         .unwrap();
@@ -186,9 +188,9 @@ fn auto_deploy_with_thread_budget() {
             BatchConfig { exec_threads: 2, ..BatchConfig::default() },
         )
         .unwrap();
-    // 10 variants × budgets {1, 2}.
-    // 13 variants (the paper's ten + the int8 tier) × 2 thread budgets.
-    assert_eq!(sel.candidates.len(), 26);
+    // Every registered variant × thread budgets {1, 2}; derived from the
+    // engine registry (the literal here went stale as tiers grew).
+    assert_eq!(sel.candidates.len(), 2 * arbors::engine::all_variants_with_i8().len());
     assert!(sel.candidates.iter().any(|c| c.threads == 2));
     let got = server.predict("auto", ds.row(3).to_vec()).unwrap();
     assert_eq!(got.len(), f.n_classes);

@@ -37,30 +37,20 @@ fn all_engines_agree_on_all_datasets() {
             let x = &ds.x[..ds.d * 100];
             let want_f = f.predict_batch(x);
             let want_q = qf.predict_batch(x);
-            let qf8 = arbors::quant::QForest::<i8>::from_forest(
-                &f,
-                arbors::quant::choose_scale_i8(&f, 1.0),
-            );
+            // Same resolution policy `build(.., I8, None)` applies (global,
+            // auto-upgraded to per-tree scales when global widens), so the
+            // reference cannot drift from what the engines were built on.
+            let qf8 = arbors::quant::quantize_i8_auto(&f, 1.0);
             let want_q8 = qf8.predict_batch(x);
             for (kind, precision) in arbors::engine::all_variants_with_i8() {
                 // The i8 tier chooses its own scale (the i16 carrier would
-                // saturate 8-bit storage) and covers NA/QS/VQS only.
+                // saturate 8-bit storage) and covers all five families.
                 let quant = match precision {
                     Precision::I16 => Some(cfg),
                     _ => None,
                 };
-                let e = match build(kind, precision, &f, quant) {
-                    Ok(e) => e,
-                    // Only IE/RS legitimately lack an i8 path; any other
-                    // i8 build failure is a real regression.
-                    Err(_)
-                        if precision == Precision::I8
-                            && matches!(kind, EngineKind::IfElse | EngineKind::Rs) =>
-                    {
-                        continue
-                    }
-                    Err(e) => panic!("{}: {e}", variant_name(kind, precision)),
-                };
+                let e = build(kind, precision, &f, quant)
+                    .unwrap_or_else(|e| panic!("{}: {e}", variant_name(kind, precision)));
                 let got = e.predict(x);
                 match precision {
                     Precision::F32 => {

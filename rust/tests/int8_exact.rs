@@ -1,15 +1,23 @@
 //! Int8-tier exactness contract (the mirror of `parallel_exact.rs` for the
-//! new precision tier): every i8 engine — q8NA, q8QS, and the v=16
-//! q8VQS — must be **bit-identical** to the i8 naive reference
-//! (`QForest::<i8>::predict_batch`, i32 accumulation) across random forests,
-//! coarse scales, batch sizes (including non-multiples of the 16-lane
-//! width), and 1–8 exec threads. Equality is `==` on the f32 bits: both
-//! sides descale the same i32 sums, so any accumulator wrap or lane-masking
-//! bug shows up as a hard mismatch.
+//! new precision tier): every i8 engine — all five families q8NA, q8IE,
+//! q8QS, the v=16 q8VQS and q8RS — must be **bit-identical** to the i8
+//! naive reference (`QForest::<i8>::predict_batch`, i32 accumulation)
+//! across random forests, coarse scales, batch sizes (including
+//! non-multiples of the 16-lane width), 1–8 exec threads, both
+//! accumulation modes, and both scaling modes (global and per-tree leaf
+//! scales). Equality is `==` on the f32 bits: both sides descale the same
+//! i32 sums, so any accumulator wrap, lane-masking or shift-rounding bug
+//! shows up as a hard mismatch.
 
-use arbors::engine::{build, build_parallel, i8_variants, variant_name};
+use std::sync::Arc;
+
+use arbors::engine::{build, build_parallel, i8_variants, variant_name, Engine};
+use arbors::exec::ParallelEngine;
 use arbors::forest::builder::{train_random_forest, RfParams, TreeParams};
-use arbors::quant::{choose_scale_i8, max_safe_scale_with, AccumMode, QForest, QuantConfig};
+use arbors::quant::{
+    choose_scale_i8, choose_scale_i8_per_tree, max_safe_scale_with, AccumMode, QForest,
+    QuantConfig,
+};
 use arbors::testing::Runner;
 use arbors::util::Pcg32;
 
@@ -94,8 +102,122 @@ fn i8_engines_bit_identical_to_i8_reference() {
     });
 }
 
+/// Per-tree leaf scales (InTreeger-style scale/shift): every i8 engine,
+/// built directly from a per-tree-quantized forest, is bit-identical to
+/// the shifted i32 reference across random forests, batch sizes and 1–8
+/// threads.
+#[test]
+fn i8_engines_bit_identical_under_per_tree_scales() {
+    Runner::new(10).with_seed(0x9E7).run(|rng: &mut Pcg32, size| {
+        let d = rng.range(2, 9);
+        let c = rng.range(1, 4).max(1);
+        let n_train = 100 + size;
+        let mut x = Vec::with_capacity(n_train * d);
+        let mut y = Vec::with_capacity(n_train);
+        for _ in 0..n_train {
+            for _ in 0..d {
+                x.push(rng.f32());
+            }
+            y.push(rng.below(c) as u32);
+        }
+        let f = train_random_forest(
+            &x,
+            &y,
+            d,
+            c,
+            RfParams {
+                n_trees: rng.range(2, 16),
+                tree: TreeParams {
+                    max_leaves: *rng.choose(&[8usize, 16, 32, 64]),
+                    min_samples_leaf: 1,
+                    mtry: 0,
+                },
+                seed: rng.next_u64(),
+                ..Default::default()
+            },
+        );
+        let cfg = choose_scale_i8_per_tree(&f, 1.0);
+        let qf = QForest::<i8>::from_forest_per_tree(&f, cfg);
+        let n_eval = *rng.choose(&[1usize, 7, 16, 17, 33, 40 + size % 19]);
+        let xe: Vec<f32> = (0..n_eval * d).map(|_| rng.f32()).collect();
+        let want = qf.predict_batch(&xe);
+        // Per-tree QForests are built explicitly (the `build` API upgrades
+        // to per-tree only when global scaling widens), so construct each
+        // engine from the same quantized forest.
+        let engines: Vec<(&str, Arc<dyn Engine>)> = vec![
+            ("q8NA", Arc::new(arbors::engine::naive::QNaiveEngine::new(&qf))),
+            ("q8IE", Arc::new(arbors::engine::ifelse::QIfElseEngine::new(&qf))),
+            ("q8QS", Arc::new(arbors::engine::quickscorer::QQsEngine::new(&qf))),
+            ("q8VQS", Arc::new(arbors::engine::vqs::QVqs8Engine::new(&qf))),
+            ("q8RS", Arc::new(arbors::engine::rapidscorer::QRs8Engine::new(&qf))),
+        ];
+        for (name, e) in engines {
+            if e.predict(&xe) != want {
+                return Err(format!(
+                    "{name} differs from the per-tree i8 reference \
+                     (scale {}, n={n_eval})",
+                    cfg.scale
+                ));
+            }
+            for threads in [2usize, 8] {
+                let par = ParallelEngine::wrap(e.clone(), threads);
+                if par.predict(&xe) != want {
+                    return Err(format!(
+                        "{name} × {threads}t differs under per-tree scales at n={n_eval}"
+                    ));
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+/// The acceptance property of per-tree scaling, end to end through
+/// `engine::build`: on a forest where the global analysis required
+/// `Widened`, per-tree scaling flips `accum_mode` to `Native`, `build`
+/// adopts it, and every engine family (serial and threaded) matches the
+/// per-tree reference.
+#[test]
+fn per_tree_scaling_flips_accum_mode_and_build_adopts_it() {
+    use arbors::forest::{Forest, Task, Tree};
+    // 60 constant trees with |leaf| ≤ 1/30 (RF-style 1/M leaves): the
+    // global leaf floor M = 60 exceeds the native budget, forcing Widened;
+    // per-tree scales restore Native.
+    let mut f = Forest::new(3, 1, Task::Ranking);
+    for i in 0..60 {
+        f.trees.push(Tree::leaf(vec![(1.0 + (i % 4) as f32) / 120.0]));
+    }
+    let qf_global = QForest::<i8>::from_forest(&f, choose_scale_i8(&f, 1.0));
+    assert_eq!(qf_global.accum_mode(), AccumMode::Widened, "premise: global widens");
+    let qf_pt = QForest::<i8>::from_forest_per_tree(&f, choose_scale_i8_per_tree(&f, 1.0));
+    assert_eq!(qf_pt.accum_mode(), AccumMode::Native, "per-tree must flip to Native");
+    assert!(qf_pt.has_per_tree_scales());
+
+    let mut rng = Pcg32::seeded(0x9E8);
+    let xe: Vec<f32> = (0..33 * 3).map(|_| rng.f32()).collect();
+    let want = qf_pt.predict_batch(&xe);
+    for (kind, precision) in i8_variants() {
+        let e = build(kind, precision, &f, None).unwrap();
+        assert_eq!(
+            e.predict(&xe),
+            want,
+            "{} did not adopt per-tree scaling",
+            variant_name(kind, precision)
+        );
+        for threads in [2usize, 5] {
+            let par = build_parallel(kind, precision, &f, None, threads).unwrap();
+            assert_eq!(
+                par.predict(&xe),
+                want,
+                "{} × {threads}t diverges under per-tree scaling",
+                variant_name(kind, precision)
+            );
+        }
+    }
+}
+
 /// The widened accumulation path (worst-case sum cannot fit i8) stays
-/// bit-exact too — all three engines against the reference on a forest
+/// bit-exact too — all five engines against the reference on a forest
 /// whose leaf magnitudes force `AccumMode::Widened`.
 #[test]
 fn i8_engines_exact_in_widened_mode() {

@@ -130,6 +130,7 @@ fn fused_bit_exact_and_paired_across_tiers_pools_deployments() {
                 workers: 1,
                 // Budgets both below and above the pool size.
                 exec_threads: 1 + (pool_size + mi) % 4,
+                drain_timeout: None,
             };
             server.deploy(&format!("m{mi}"), &f, kind, precision, config).unwrap();
             // The serial reference builds the same engine the deployment
@@ -199,6 +200,7 @@ fn backpressure_keeps_replies_paired() {
                 queue_cap: 4,
                 workers: 1,
                 exec_threads: 2,
+                drain_timeout: None,
             },
         )
         .unwrap();
@@ -254,6 +256,7 @@ fn undeploy_sheds_queued_requests() {
                 queue_cap: 1024,
                 workers: 1,
                 exec_threads: 2,
+                drain_timeout: None,
             },
         )
         .unwrap();

@@ -1,0 +1,39 @@
+#!/usr/bin/env bash
+# Executes every command README.md shows, so the docs cannot rot: CI runs
+# this after the build (see .github/workflows/ci.yml, job `docs`).
+set -euxo pipefail
+cd "$(dirname "$0")/.."
+
+export ARBORS_SCALE=quick
+(cd rust && cargo build --release)
+arbors() { rust/target/release/arbors "$@"; }
+
+arbors datasets
+
+arbors train --dataset magic --n 2000 --trees 32 --leaves 32 --out /tmp/model.json
+
+arbors accuracy --model /tmp/model.json --dataset magic --n 1000
+
+# A tiny 10-feature batch (magic's dimensionality) for the predict example.
+python3 - <<'EOF'
+import random
+random.seed(7)
+with open("/tmp/batch.csv", "w") as f:
+    f.write(",".join(f"f{i}" for i in range(10)) + ",label\n")
+    for _ in range(64):
+        f.write(",".join(f"{random.random():.4f}" for _ in range(10)) + ",0\n")
+EOF
+arbors predict --model /tmp/model.json --data /tmp/batch.csv --engine RS \
+    --precision i8 --out /tmp/preds.csv
+test -s /tmp/preds.csv
+
+arbors select --model /tmp/model.json --device a53 --threads 2
+
+arbors serve --dataset magic --n 2000 --engine VQS --precision i8 \
+    --requests 2000 --threads 2
+
+arbors bench --exp int8
+arbors bench --exp scaling --threads 2
+arbors bench --exp serving --threads 2
+
+echo "readme smoke: OK"

@@ -62,6 +62,7 @@ fn main() -> anyhow::Result<()> {
             // register the winner's budget on the server-shared pool.
             exec_threads: 4,
             drain_timeout: None,
+            adaptive: true,
         },
     )?;
     eprint!("{}", sel.report());

@@ -1,0 +1,16 @@
+//! Extra: the adaptive-execution grid — static/adaptive shard plans ×
+//! pinned/unpinned workers × claim-1/claim-k batch claiming on a synthetic
+//! big.LITTLE topology (ISSUE 5). Threads via ARBORS_THREADS (default 4);
+//! scale via ARBORS_SCALE; ARBORS_SMOKE=1 shrinks the grid for CI. JSON
+//! lands in results/adaptive.json.
+fn main() {
+    let scale = arbors::bench::harness::Scale::from_env();
+    let threads = std::env::var("ARBORS_THREADS")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(4);
+    let smoke = std::env::var("ARBORS_SMOKE").is_ok_and(|v| v == "1");
+    let text = arbors::bench::experiments::adaptive(&scale, threads, smoke);
+    arbors::bench::experiments::archive("adaptive", &text);
+    println!("{text}");
+}

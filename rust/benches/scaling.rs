@@ -7,7 +7,7 @@ fn main() {
         .ok()
         .and_then(|s| s.parse().ok())
         .unwrap_or(4);
-    let text = arbors::bench::experiments::scaling(&scale, threads, None);
+    let text = arbors::bench::experiments::scaling(&scale, threads, None, false);
     arbors::bench::experiments::archive("scaling", &text);
     println!("{text}");
 }

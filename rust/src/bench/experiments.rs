@@ -554,8 +554,13 @@ pub fn memory_energy(scale: &Scale) -> String {
 /// archived both as text (`results/scaling.txt` via the caller) and as
 /// machine-readable JSON (`results/scaling.json`) with per-thread-count
 /// µs/instance and speedups vs 1 thread.
-pub fn scaling(scale: &Scale, max_threads: usize, precision: Option<Precision>) -> String {
-    use crate::exec::ParallelEngine;
+pub fn scaling(
+    scale: &Scale,
+    max_threads: usize,
+    precision: Option<Precision>,
+    pin: bool,
+) -> String {
+    use crate::exec::{ParallelEngine, PoolConfig};
     use crate::util::Json;
 
     let budgets = crate::coordinator::thread_budgets(max_threads);
@@ -607,8 +612,12 @@ pub fn scaling(scale: &Scale, max_threads: usize, precision: Option<Precision>) 
                 }
                 // Wrap the already-built serial engine: same Exact row
                 // sharding as build_parallel, without repeating RS/QS
-                // model preparation per thread count.
-                let e = ParallelEngine::wrap(serial.clone(), t);
+                // model preparation per thread count. `--pin` anchors the
+                // workers to the detected topology's clusters.
+                let e = ParallelEngine::wrap_with(
+                    serial.clone(),
+                    PoolConfig::new(t).pin(pin),
+                );
                 us_list.push(time_per_instance(&e, &x, scale.repeats));
             }
             let mut cells = vec![variant_name(kind, precision)];
@@ -647,6 +656,7 @@ pub fn scaling(scale: &Scale, max_threads: usize, precision: Option<Precision>) 
         ("scale", Json::Str(scale.name.to_string())),
         ("host_parallelism", Json::Num(host_par as f64)),
         ("policy", Json::Str("exact-row-sharding".to_string())),
+        ("pinned", Json::Bool(pin)),
         ("results", Json::Arr(records)),
     ]);
     archive_json("scaling", &report);
@@ -843,6 +853,7 @@ pub fn serving(scale: &Scale, threads: usize) -> String {
         workers: 1,
         exec_threads: budget,
         drain_timeout: None,
+        adaptive: true,
     };
 
     let mut out = String::new();
@@ -959,6 +970,135 @@ pub fn serving(scale: &Scale, threads: usize) -> String {
     ]);
     archive_json("serving", &report);
     out.push_str("\narchived JSON: results/serving.json\n");
+    out
+}
+
+// ---------------------------------------------------------------------------
+// Extra G — adaptive, affinity-aware execution (ISSUE 5)
+// ---------------------------------------------------------------------------
+
+/// Extra G: the adaptive-execution grid — {static, adaptive} plans ×
+/// {unpinned, pinned} workers × {claim-1, claim-k} on a **synthetic
+/// big.LITTLE topology** (3:1 weights over a homogeneous host's cores, so
+/// the static planner's prior is deliberately wrong and only measurement
+/// can fix it). Reports rows/s per cell, the pinned-worker and re-plan
+/// counts, and the claim amortization ratio; the headline number is
+/// adaptive+pinned+claim-k over static+unpinned+claim-1. Text to
+/// `results/adaptive.txt` (via the caller's `archive`), JSON to
+/// `results/adaptive.json`. `smoke` shrinks the batch/iteration counts for
+/// CI while still crossing at least one re-plan boundary.
+pub fn adaptive(scale: &Scale, threads: usize, smoke: bool) -> String {
+    use crate::exec::parallel::REPLAN_EVERY_PREDICTS;
+    use crate::exec::{CoreTopology, ParallelEngine, PoolConfig, DEFAULT_CLAIM_LIMIT};
+    use crate::util::Json;
+    use std::collections::BTreeMap;
+    use std::sync::Arc;
+
+    let threads = threads.max(2);
+    let n_big = threads.div_ceil(2);
+    let n_little = (threads - n_big).max(1);
+    let ds = DatasetId::Magic.generate(DatasetId::Magic.default_n(), 0xD5 ^ 64);
+    let (train, _) = ds.split(0.2, 7);
+    let f = super::harness::cached_rf(&train, scale.cls_trees, 64);
+    let rows = if smoke { scale.eval_n.min(64) } else { scale.eval_n };
+    let x = eval_batch(&ds, rows);
+    let serial: Arc<dyn Engine> =
+        build_engine_arc(EngineKind::Rs, Precision::F32, &f).expect("RS buildable");
+    // Warmup crosses ≥ 2 re-plan boundaries so the adaptive cells measure
+    // the *converged* plan, not the transient.
+    let warmup = if smoke { 2 * REPLAN_EVERY_PREDICTS } else { 4 * REPLAN_EVERY_PREDICTS };
+    let iters = if smoke { 6u64 } else { 24 };
+
+    let mut out = String::new();
+    out.push_str(&format!(
+        "Adaptive execution grid (scale={}, RF {} trees x 64 leaves, batch={rows} rows)\n\
+         synthetic big.LITTLE topology: {n_big}+{n_little} cores, 3:1 weights — a wrong\n\
+         prior on this host, so static plans are mis-sized and adaptive plans must\n\
+         recover from measured shard throughput ({threads}-worker pools)\n\n",
+        scale.name, scale.cls_trees,
+    ));
+    let mut tw = TableWriter::new(vec![10, 10, 8, 12, 8, 8, 12]);
+    tw.row_str(&["plan", "workers", "claim", "rows/s", "pinned", "replans", "tasks/claim"]);
+    tw.sep();
+
+    let mut throughput: BTreeMap<String, f64> = BTreeMap::new();
+    let mut records = Vec::new();
+    for adaptive_plan in [false, true] {
+        for pin in [false, true] {
+            for claim_limit in [1usize, DEFAULT_CLAIM_LIMIT] {
+                let topo = CoreTopology::synthetic_big_little(n_big, n_little, 3.0);
+                let engine = ParallelEngine::wrap_with(
+                    serial.clone(),
+                    PoolConfig::new(threads)
+                        .topology(topo)
+                        .pin(pin)
+                        .claim_limit(claim_limit),
+                )
+                .with_adaptive(adaptive_plan);
+                let mut scores = vec![0f32; rows * serial.n_classes()];
+                for _ in 0..warmup {
+                    engine.predict_batch(&x, &mut scores);
+                }
+                let sw = crate::util::Stopwatch::start();
+                for _ in 0..iters {
+                    engine.predict_batch(&x, &mut scores);
+                }
+                let secs = sw.micros() / 1e6;
+                let rps = (rows as u64 * iters) as f64 / secs.max(1e-9);
+                let pinned = engine.pool().pool().pinned_workers();
+                let replans = engine.feedback().replans();
+                let (claims, tasks) = engine.pool().pool().claim_stats();
+                let tasks_per_claim =
+                    if claims > 0 { tasks as f64 / claims as f64 } else { 0.0 };
+                let plan_s = if adaptive_plan { "adaptive" } else { "static" };
+                let pin_s = if pin { "pinned" } else { "unpinned" };
+                let label = format!("{plan_s}+{pin_s}+claim{claim_limit}");
+                tw.row(&[
+                    plan_s.to_string(),
+                    pin_s.to_string(),
+                    format!("{claim_limit}"),
+                    format!("{rps:.0}"),
+                    format!("{pinned}"),
+                    format!("{replans}"),
+                    format!("{tasks_per_claim:.2}"),
+                ]);
+                throughput.insert(label.clone(), rps);
+                records.push(Json::from_pairs(vec![
+                    ("cell", Json::Str(label)),
+                    ("adaptive", Json::Bool(adaptive_plan)),
+                    ("pin_requested", Json::Bool(pin)),
+                    ("pinned_workers", Json::Num(pinned as f64)),
+                    ("claim_limit", Json::Num(claim_limit as f64)),
+                    ("rows_per_s", Json::Num(rps)),
+                    ("replans", Json::Num(replans as f64)),
+                    ("claims", Json::Num(claims as f64)),
+                    ("claimed_tasks", Json::Num(tasks as f64)),
+                    ("tasks_per_claim", Json::Num(tasks_per_claim)),
+                ]));
+            }
+        }
+    }
+    out.push_str(&tw.finish());
+    let base = throughput["static+unpinned+claim1"];
+    let best = throughput[&format!("adaptive+pinned+claim{DEFAULT_CLAIM_LIMIT}")];
+    let gain = best / base.max(1e-9);
+    out.push_str(&format!(
+        "\nheadline: adaptive+pinned+claim{DEFAULT_CLAIM_LIMIT} vs static+unpinned+claim1 \
+         = {gain:.2}x\n(expected ≥ 1.0: the adaptive plan re-learns the true core speeds \
+         the 3:1 prior misstates)\n",
+    ));
+    let report = Json::from_pairs(vec![
+        ("experiment", Json::Str("adaptive".to_string())),
+        ("scale", Json::Str(scale.name.to_string())),
+        ("smoke", Json::Bool(smoke)),
+        ("pool_threads", Json::Num(threads as f64)),
+        ("topology", Json::Str(format!("synthetic big.LITTLE {n_big}+{n_little} (3:1)"))),
+        ("batch_rows", Json::Num(rows as f64)),
+        ("headline_gain", Json::Num(gain)),
+        ("cells", Json::Arr(records)),
+    ]);
+    archive_json("adaptive", &report);
+    out.push_str("archived JSON: results/adaptive.json\n");
     out
 }
 
@@ -1084,8 +1224,50 @@ mod tests {
     }
 
     #[test]
+    fn adaptive_runs_and_reports_json() {
+        let s = adaptive(&quick(), 2, true);
+        assert!(s.contains("adaptive") && s.contains("static"), "{s}");
+        assert!(s.contains("headline"), "{s}");
+        assert!(s.contains("adaptive.json"), "{s}");
+        let path = super::super::harness::results_dir().join("adaptive.json");
+        let text = std::fs::read_to_string(&path).unwrap();
+        let j = crate::util::Json::parse(&text).unwrap();
+        assert_eq!(j.get("experiment").and_then(|v| v.as_str()), Some("adaptive"));
+        assert!(j.get("headline_gain").and_then(|v| v.as_f64()).unwrap() > 0.0);
+        let cells = j.get("cells").and_then(|v| v.as_arr()).unwrap();
+        // The full 2×2×2 grid ran.
+        assert_eq!(cells.len(), 8);
+        for c in cells {
+            assert!(c.get("rows_per_s").and_then(|v| v.as_f64()).unwrap() > 0.0);
+        }
+        // Adaptive cells actually re-planned; claim-k cells actually
+        // batch-claimed more than one task per lock.
+        let k = crate::exec::DEFAULT_CLAIM_LIMIT;
+        let find = |name: String| {
+            cells
+                .iter()
+                .find(|c| c.get("cell").and_then(|v| v.as_str()) == Some(name.as_str()))
+                .unwrap()
+        };
+        assert!(
+            find(format!("adaptive+pinned+claim{k}"))
+                .get("replans")
+                .and_then(|v| v.as_f64())
+                .unwrap()
+                >= 1.0
+        );
+        assert!(
+            find(format!("adaptive+unpinned+claim{k}"))
+                .get("tasks_per_claim")
+                .and_then(|v| v.as_f64())
+                .unwrap()
+                >= 1.0
+        );
+    }
+
+    #[test]
     fn scaling_runs_and_reports_json() {
-        let s = scaling(&quick(), 2, None);
+        let s = scaling(&quick(), 2, None, false);
         assert!(s.contains("2t"), "{s}");
         assert!(s.contains("qRS"), "{s}");
         assert!(s.contains("scaling.json"), "{s}");

@@ -15,13 +15,27 @@
 //! collector thread never executes model code, so collection continues
 //! while shards run.
 //!
+//! # Adaptive planning (DESIGN.md §7)
+//!
+//! Chunk weights start at the pool topology's prior
+//! (`chunk_weights(pool.topology(), budget)` — the same assignment workers
+//! are pinned by, see `exec::pool`) and, with [`BatchConfig::adaptive`]
+//! (default on), are re-derived from **measured** per-slot shard
+//! throughput every [`REPLAN_EVERY_FLUSHES`] flushes: each executed chunk
+//! reports `(slot, rows, µs)` into an [`crate::exec::Feedback`] EWMA. A
+//! topology guess that is wrong — or becomes wrong (throttling,
+//! co-tenants) — is corrected by the loop instead of persisting for the
+//! deployment's lifetime.
+//!
 //! # Determinism
 //!
 //! Chunk boundaries are lane-aligned (`ShardPolicy::Exact` row plans only),
 //! so each chunk's SIMD blocking is exactly the serial blocking of those
 //! rows: every request's scores are **bit-identical** to a serial
 //! `Engine::predict_batch` over the same assembled batch — regardless of
-//! pool size, per-deployment budget, or concurrent deployments.
+//! pool size, per-deployment budget, or concurrent deployments. Adaptive
+//! re-planning preserves this: weights change only chunk **sizes**, never
+//! the lane alignment that the contract rests on.
 //!
 //! # Backpressure and shutdown
 //!
@@ -37,7 +51,7 @@
 //! detached reaper thread, so undeploy/redeploy cannot stall forever.
 
 use std::cell::UnsafeCell;
-use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
 use std::sync::mpsc::{self, Receiver, RecvTimeoutError, SyncSender, TrySendError};
 use std::sync::{Arc, Condvar, Mutex};
 use std::time::{Duration, Instant};
@@ -45,7 +59,85 @@ use std::time::{Duration, Instant};
 use super::metrics::Metrics;
 use crate::engine::Engine;
 use crate::exec::pool::{MutPtr, Task};
-use crate::exec::{chunk_weights, weighted_row_chunks, CoreTopology, PoolClient, SharedPool};
+use crate::exec::{
+    chunk_weights, weighted_row_chunks_slotted, Feedback, PoolClient, SharedPool,
+};
+
+/// With [`BatchConfig::adaptive`] set, chunk weights are re-derived from
+/// the feedback loop's measured shard throughput every this many flushes.
+pub const REPLAN_EVERY_FLUSHES: u64 = 32;
+
+/// Server-wide accounting of detached drain-reaper threads (ISSUE 5
+/// satellite; ROADMAP item exposed by the PR 4 drain deadline).
+///
+/// A drain-timeout abandon hands pool teardown to a detached reaper so a
+/// hung engine cannot stall undeploy — but a *permanently* hung engine
+/// parks that reaper forever, leaking one thread per abandon. This
+/// registry caps the process-wide number of live reapers at
+/// [`reaper::CAP`]: past the cap, teardown contexts are leaked outright
+/// (no thread), and the refusal is counted. `Server::report` surfaces all
+/// three counters; per-deployment spawns land in
+/// [`Metrics::reaper_threads`].
+pub mod reaper {
+    use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+
+    /// Max live reaper threads process-wide. Each parked reaper costs one
+    /// OS thread (~8 KiB kernel + default stack mapping, mostly untouched)
+    /// — 64 bounds the damage of a pathological hung-engine storm while
+    /// never binding in healthy operation (reapers exit as soon as their
+    /// stragglers finish).
+    pub const CAP: usize = 64;
+
+    static LIVE: AtomicUsize = AtomicUsize::new(0);
+    static SPAWNED: AtomicU64 = AtomicU64::new(0);
+    static REFUSED: AtomicU64 = AtomicU64::new(0);
+
+    /// Reaper threads currently parked on straggler drains.
+    pub fn live() -> usize {
+        LIVE.load(Ordering::SeqCst)
+    }
+
+    /// Reaper threads ever spawned (monotone).
+    pub fn spawned() -> u64 {
+        SPAWNED.load(Ordering::SeqCst)
+    }
+
+    /// Abandons that could not get a reaper (cap hit or spawn failure):
+    /// their teardown context was leaked without a tracking thread.
+    pub fn refused() -> u64 {
+        REFUSED.load(Ordering::SeqCst)
+    }
+
+    /// Reserve a reaper slot; `false` at the cap (counted as refused).
+    pub(super) fn try_begin() -> bool {
+        loop {
+            let cur = LIVE.load(Ordering::SeqCst);
+            if cur >= CAP {
+                REFUSED.fetch_add(1, Ordering::SeqCst);
+                return false;
+            }
+            if LIVE.compare_exchange(cur, cur + 1, Ordering::SeqCst, Ordering::SeqCst).is_ok()
+            {
+                SPAWNED.fetch_add(1, Ordering::SeqCst);
+                return true;
+            }
+        }
+    }
+
+    /// Release a slot (reaper finished, or its spawn failed).
+    pub(super) fn end() {
+        LIVE.fetch_sub(1, Ordering::SeqCst);
+    }
+
+    /// A spawn that was counted but never ran converts to a refusal: the
+    /// live slot is released and the spawned count rolled back, so
+    /// `spawned()` only ever counts reaper threads that actually exist(ed).
+    pub(super) fn spawn_failed() {
+        end();
+        SPAWNED.fetch_sub(1, Ordering::SeqCst);
+        REFUSED.fetch_add(1, Ordering::SeqCst);
+    }
+}
 
 /// Batching configuration.
 #[derive(Debug, Clone, Copy)]
@@ -72,8 +164,17 @@ pub struct BatchConfig {
     /// deadline, straggler batches are downgraded: their requesters
     /// receive [`ServeError::Internal`] immediately (counted in
     /// `Metrics::failed`), and pool teardown is handed to a detached
-    /// reaper thread so the drop returns.
+    /// reaper thread (capped and counted by [`reaper`]) so the drop
+    /// returns.
     pub drain_timeout: Option<Duration>,
+    /// Adaptive shard planning (default **on**): executed chunks report
+    /// measured throughput into an [`crate::exec::Feedback`] loop, and
+    /// chunk weights are re-derived every [`REPLAN_EVERY_FLUSHES`] flushes
+    /// — construction-time topology weights are only the prior. Plans stay
+    /// lane-aligned Exact row chunks throughout, so replies remain
+    /// bit-identical to serial execution (the batcher's determinism
+    /// contract is unaffected; only chunk *sizes* adapt).
+    pub adaptive: bool,
 }
 
 impl BatchConfig {
@@ -93,6 +194,7 @@ impl Default for BatchConfig {
             workers: 1,
             exec_threads: 1,
             drain_timeout: None,
+            adaptive: true,
         }
     }
 }
@@ -181,16 +283,24 @@ impl Batcher {
         let lanes = engine.lanes().max(1);
         let max_batch = config.max_batch.div_ceil(lanes) * lanes;
         let budget = client.budget();
-        // Chunk-slot weights are fixed per deployment (topology × budget),
-        // computed once, off the flush hot path.
-        let weights = chunk_weights(&CoreTopology::detect(), budget);
+        // The chunk-slot weight *prior* comes from the pool's own topology
+        // (so plans agree with worker placement/pinning — and the
+        // feedback's class attribution lines up with the pool's worker
+        // classes); with `config.adaptive` the live weights are re-derived
+        // from measured shard throughput every REPLAN_EVERY_FLUSHES
+        // flushes.
+        let weights = chunk_weights(client.pool().topology(), budget);
+        let feedback = Arc::new(Feedback::for_pool(client.pool(), budget));
 
         let ctx = Arc::new(FlushCtx {
             engine: engine.clone(),
             client,
             lanes,
             budget,
-            weights,
+            feedback,
+            weights: Mutex::new(weights),
+            adaptive: config.adaptive,
+            flushes: AtomicU64::new(0),
             metrics: metrics.clone(),
             inflight: Arc::new(Inflight {
                 count: Mutex::new(0),
@@ -256,6 +366,12 @@ impl Batcher {
     pub fn thread_budget(&self) -> usize {
         self.budget
     }
+
+    /// Adaptive re-plans performed so far (0 when `adaptive` is off or the
+    /// budget is 1 — diagnostics for the feedback loop).
+    pub fn replans(&self) -> u64 {
+        self.ctx.as_ref().map_or(0, |c| c.feedback.replans())
+    }
 }
 
 impl Drop for Batcher {
@@ -291,19 +407,32 @@ impl Drop for Batcher {
                     // reference to a detached reaper instead. If the
                     // engine never returns, the reaper leaks one parked
                     // thread; the deployment itself is gone either way.
-                    // The guard covers reaper-spawn failure (thread
-                    // exhaustion): dropping the un-run closure would tear
-                    // ctx down inline and re-introduce the unbounded
-                    // stall, so the guard *leaks* the context instead.
-                    struct LeakOnDrop(Option<Arc<FlushCtx>>);
+                    // Reapers are capped and counted process-wide (the
+                    // `reaper` registry): at the cap, or on spawn failure
+                    // (thread exhaustion), the context is *leaked* without
+                    // a thread — tearing it down inline would re-introduce
+                    // the unbounded stall the deadline exists to prevent.
+                    if !reaper::try_begin() {
+                        std::mem::forget(ctx);
+                        return;
+                    }
+                    self.metrics.reaper_threads.fetch_add(1, Ordering::Relaxed);
+                    struct LeakOnDrop(Option<Arc<FlushCtx>>, Arc<Metrics>);
                     impl Drop for LeakOnDrop {
                         fn drop(&mut self) {
+                            // Only reached if the closure below never ran
+                            // (spawn failure): leak the context, convert
+                            // the counted spawn to a refusal, and roll the
+                            // per-deployment metric back so accounting
+                            // only ever reflects threads that existed.
                             if let Some(c) = self.0.take() {
                                 std::mem::forget(c);
+                                reaper::spawn_failed();
+                                self.1.reaper_threads.fetch_sub(1, Ordering::Relaxed);
                             }
                         }
                     }
-                    let guard = LeakOnDrop(Some(ctx));
+                    let guard = LeakOnDrop(Some(ctx), self.metrics.clone());
                     let _ = std::thread::Builder::new()
                         .name("batcher-drain-reaper".into())
                         .spawn(move || {
@@ -311,6 +440,7 @@ impl Drop for Batcher {
                             let ctx = guard.0.take().expect("guard holds the context");
                             ctx.inflight.wait_idle();
                             drop(ctx);
+                            reaper::end();
                         });
                 }
             }
@@ -328,8 +458,14 @@ struct FlushCtx {
     client: PoolClient,
     lanes: usize,
     budget: usize,
-    /// Per-chunk-slot weights (2× budget slots, big cores first).
-    weights: Vec<f64>,
+    /// Live per-chunk-slot weights (2× budget slots, big cores first).
+    /// Fixed at the topology prior when `adaptive` is off; re-derived from
+    /// `feedback` every [`REPLAN_EVERY_FLUSHES`] flushes when on.
+    weights: Mutex<Vec<f64>>,
+    /// Measured per-slot shard throughput (EWMA) feeding re-plans.
+    feedback: Arc<Feedback>,
+    adaptive: bool,
+    flushes: AtomicU64,
     metrics: Arc<Metrics>,
     inflight: Arc<Inflight>,
 }
@@ -422,15 +558,21 @@ fn flush_batch(ctx: &Arc<FlushCtx>, mut batch: Vec<Request>) {
     // Budget 1 never shards; skip the apportionment math on that hot path
     // (mirrors ParallelEngine's threads <= 1 early-out).
     let chunks = if ctx.budget <= 1 {
-        vec![(0, n)]
+        vec![(0, n, 0)]
     } else {
-        let planned = weighted_row_chunks(n, ctx.lanes, &ctx.weights);
+        let planned = {
+            let weights = ctx.weights.lock().unwrap();
+            weighted_row_chunks_slotted(n, ctx.lanes, &weights)
+        };
         if planned.len() <= 1 {
-            vec![(0, n)]
+            vec![(0, n, 0)]
         } else {
             planned
         }
     };
+    // Feedback only learns from genuinely sharded flushes (a lone chunk
+    // measures batch arrival, not relative slot speed).
+    let record = ctx.adaptive && chunks.len() > 1;
     let state = Arc::new(FlushState {
         engine: ctx.engine.clone(),
         metrics: ctx.metrics.clone(),
@@ -449,8 +591,9 @@ fn flush_batch(ctx: &Arc<FlushCtx>, mut batch: Vec<Request>) {
     let out_ptr = MutPtr(unsafe { (*state.out.get()).as_mut_ptr() });
     let tasks: Vec<Task> = chunks
         .into_iter()
-        .map(|(a, b)| {
+        .map(|(a, b, slot)| {
             let st = state.clone();
+            let feedback = record.then(|| ctx.feedback.clone());
             Box::new(move || {
                 // The guard publishes chunk completion even if the engine
                 // panics, so a batch can never strand its requesters or
@@ -473,11 +616,26 @@ fn flush_batch(ctx: &Arc<FlushCtx>, mut batch: Vec<Request>) {
                 // Arc each task holds).
                 let os =
                     unsafe { std::slice::from_raw_parts_mut(out_ptr.0.add(a * c), (b - a) * c) };
+                // Same clock discipline as the selector's candidate timing
+                // (wall-clock Stopwatch around the engine call) so the
+                // feedback EWMA and the selector measure the same thing.
+                let sw = crate::util::Stopwatch::start();
                 st.engine.predict_batch(xs, os);
+                if let Some(f) = feedback {
+                    f.record(slot, b - a, sw.micros());
+                }
             }) as Task
         })
         .collect();
     ctx.client.spawn(tasks);
+    // Re-plan tick: fold measured throughput back into the weights every
+    // N flushes (off the per-chunk path; one lock swap per N flushes).
+    if record {
+        let flushed = ctx.flushes.fetch_add(1, Ordering::Relaxed) + 1;
+        if flushed % REPLAN_EVERY_FLUSHES == 0 {
+            *ctx.weights.lock().unwrap() = ctx.feedback.replan();
+        }
+    }
 }
 
 /// One flushed batch in flight on the pool. Holds no pool references (see
@@ -677,6 +835,7 @@ mod tests {
                 workers: 1,
                 exec_threads: 4,
                 drain_timeout: None,
+                adaptive: true,
             },
         );
         assert_eq!(b.thread_budget(), 4);
@@ -709,6 +868,7 @@ mod tests {
                 workers: 1,
                 exec_threads: 1,
                 drain_timeout: None,
+                adaptive: true,
             },
         );
         let mut overloaded = false;
@@ -741,6 +901,83 @@ mod tests {
         assert!(b.metrics.mean_batch_size() >= 1.0);
     }
 
+    /// The adaptive loop engages end-to-end in serving: sharded flushes
+    /// record shard throughput, weights are re-derived on the flush
+    /// schedule, and replies stay bit-identical to the serial engine
+    /// across re-plan boundaries (the batcher's determinism contract).
+    #[test]
+    fn adaptive_batcher_replans_and_stays_bit_exact() {
+        let (_, ds) = engine();
+        // Naive f32 has lanes == 1, so even small flushes shard across the
+        // budget-2 slots and count toward the re-plan schedule.
+        let f = train_random_forest(
+            &ds.x,
+            &ds.labels,
+            ds.d,
+            ds.n_classes,
+            RfParams {
+                n_trees: 8,
+                tree: TreeParams { max_leaves: 16, min_samples_leaf: 2, mtry: 0 },
+                ..Default::default()
+            },
+        );
+        let naive: Arc<dyn Engine> =
+            Arc::from(build(EngineKind::Naive, Precision::F32, &f, None).unwrap());
+        let direct = naive.predict(&ds.x);
+        let b = Batcher::start(
+            naive.clone(),
+            BatchConfig {
+                max_batch: 8,
+                max_delay: Duration::from_millis(2),
+                queue_cap: 4096,
+                workers: 1,
+                exec_threads: 2,
+                drain_timeout: None,
+                adaptive: true,
+            },
+        );
+        // 3× the re-plan interval in waves of 8; every reply must match
+        // the serial engine bit-for-bit, before and after re-plans.
+        let waves = 3 * REPLAN_EVERY_FLUSHES as usize;
+        for w in 0..waves {
+            let rows: Vec<usize> = (0..8).map(|i| (w * 8 + i) % ds.n).collect();
+            let replies: Vec<_> =
+                rows.iter().map(|&i| b.submit(ds.row(i).to_vec()).unwrap()).collect();
+            for (&i, r) in rows.iter().zip(replies) {
+                let scores = r.recv().unwrap().unwrap();
+                assert_eq!(
+                    &scores[..],
+                    &direct[i * ds.n_classes..(i + 1) * ds.n_classes],
+                    "row {i} diverged after adaptive re-planning"
+                );
+            }
+        }
+        assert!(b.replans() >= 1, "feedback loop never re-planned");
+    }
+
+    /// `adaptive: false` freezes the topology prior for the deployment's
+    /// lifetime (the pre-ISSUE-5 behavior).
+    #[test]
+    fn adaptive_off_never_replans() {
+        let (eng, ds) = engine();
+        let b = Batcher::start(
+            eng,
+            BatchConfig {
+                max_batch: 8,
+                max_delay: Duration::from_micros(200),
+                queue_cap: 4096,
+                workers: 1,
+                exec_threads: 2,
+                drain_timeout: None,
+                adaptive: false,
+            },
+        );
+        for i in 0..64 {
+            b.predict(ds.row(i % ds.n).to_vec()).unwrap();
+        }
+        assert_eq!(b.replans(), 0);
+    }
+
     #[test]
     fn deprecated_workers_knob_folds_into_budget() {
         let cfg = BatchConfig { workers: 3, exec_threads: 1, ..BatchConfig::default() };
@@ -767,6 +1004,7 @@ mod tests {
                 workers: 1,
                 exec_threads: 1,
                 drain_timeout: None,
+                adaptive: true,
             },
         );
         let metrics = b.metrics.clone();
@@ -801,6 +1039,7 @@ mod tests {
                 workers: 1,
                 exec_threads: 2,
                 drain_timeout: None,
+                adaptive: true,
             },
         );
         let metrics = b.metrics.clone();
@@ -858,6 +1097,7 @@ mod tests {
     fn drain_deadline_downgrades_hung_flushes() {
         let (inner, ds) = engine();
         let gate = Arc::new(AtomicBool::new(false));
+        let reapers_before = reaper::spawned();
         let eng: Arc<dyn Engine> =
             Arc::new(HangingEngine { inner, gate: gate.clone() });
         let b = Batcher::start(
@@ -869,6 +1109,7 @@ mod tests {
                 workers: 1,
                 exec_threads: 1,
                 drain_timeout: Some(Duration::from_millis(50)),
+                adaptive: true,
             },
         );
         let metrics = b.metrics.clone();
@@ -887,11 +1128,23 @@ mod tests {
         }
         assert_eq!(metrics.failed.load(Ordering::Relaxed), 4);
         assert_eq!(metrics.completed.load(Ordering::Relaxed), 0);
+        // Reaper accounting (ISSUE 5 satellite): the abandon handed
+        // teardown to exactly one registered reaper thread, and the
+        // deployment's metrics carry its share.
+        assert_eq!(reaper::spawned() - reapers_before, 1);
+        assert_eq!(metrics.reaper_threads.load(Ordering::Relaxed), 1);
+        assert!(metrics.report().contains("reapers=1"), "{}", metrics.report());
         // Unhang the engine so the reaper can finish pool teardown; the
         // late completion must not double-reply or count as completed.
         gate.store(true, Ordering::Release);
         std::thread::sleep(Duration::from_millis(50));
         assert_eq!(metrics.completed.load(Ordering::Relaxed), 0);
+        // The reaper exits once its stragglers finish (live count drains).
+        let deadline = Instant::now() + Duration::from_secs(5);
+        while reaper::live() > 0 && Instant::now() < deadline {
+            std::thread::sleep(Duration::from_millis(5));
+        }
+        assert_eq!(reaper::live(), 0, "reaper never released its slot");
     }
 
     /// A drain deadline generous enough for the work changes nothing:
@@ -909,6 +1162,7 @@ mod tests {
                 workers: 1,
                 exec_threads: 2,
                 drain_timeout: Some(Duration::from_secs(30)),
+                adaptive: true,
             },
         );
         let replies: Vec<_> =
@@ -935,6 +1189,7 @@ mod tests {
                 workers: 1,
                 exec_threads: 2,
                 drain_timeout: None,
+                adaptive: true,
             },
         );
         let replies: Vec<_> =

@@ -18,6 +18,11 @@ pub struct Metrics {
     /// Requests answered `ServeError::Internal` because a shard task died
     /// mid-batch (engine panic). Not counted in `completed`.
     pub failed: AtomicU64,
+    /// Drain-timeout abandons that handed pool teardown to a detached
+    /// reaper thread — each may be parked (leaked) for as long as its hung
+    /// engine stays hung. Server-wide live/spawned/refused totals are in
+    /// `coordinator::batcher::reaper`; this is the per-deployment share.
+    pub reaper_threads: AtomicU64,
     pub batches: AtomicU64,
     pub batched_instances: AtomicU64,
     /// End-to-end request latencies in µs (bounded reservoir).
@@ -74,12 +79,13 @@ impl Metrics {
     pub fn report(&self) -> String {
         let lat = self.latency_summary();
         format!(
-            "req={} done={} rej={} shed={} failed={} batches={} mean_batch={:.1} lat_us(p50={:.0} p95={:.0} p99={:.0} max={:.0})",
+            "req={} done={} rej={} shed={} failed={} reapers={} batches={} mean_batch={:.1} lat_us(p50={:.0} p95={:.0} p99={:.0} max={:.0})",
             self.requests.load(Ordering::Relaxed),
             self.completed.load(Ordering::Relaxed),
             self.rejected.load(Ordering::Relaxed),
             self.shed_shutdown.load(Ordering::Relaxed),
             self.failed.load(Ordering::Relaxed),
+            self.reaper_threads.load(Ordering::Relaxed),
             self.batches.load(Ordering::Relaxed),
             self.mean_batch_size(),
             lat.median,

@@ -45,8 +45,8 @@ pub use selector::{
 use std::collections::HashMap;
 use std::sync::{Arc, RwLock};
 
-use crate::engine::{build, Engine, EngineKind, Precision};
-use crate::exec::SharedPool;
+use crate::engine::{build, build_i16_per_tree, Engine, EngineKind, Precision};
+use crate::exec::{PoolConfig, SharedPool};
 use crate::forest::{Forest, Task};
 
 /// A deployed model: its engine's batcher plus descriptive metadata.
@@ -83,13 +83,25 @@ impl Server {
     /// ([`BatchConfig::exec_threads`]) arbitrate the workers under
     /// contention; idle budgets are stolen (see [`crate::exec::SharedPool`]).
     pub fn with_pool_size(threads: usize) -> Server {
-        Server { models: RwLock::new(HashMap::new()), pool: SharedPool::new(threads) }
+        Self::with_pool_config(PoolConfig::new(threads))
+    }
+
+    /// A server whose shared pool is built from an explicit
+    /// [`PoolConfig`] — core topology, worker pinning (`serve --pin`),
+    /// and the batch-claim limit.
+    pub fn with_pool_config(config: PoolConfig) -> Server {
+        Server { models: RwLock::new(HashMap::new()), pool: SharedPool::with_config(config) }
     }
 
     /// Worker threads in the server-shared pool — the only exec threads
     /// serving spawns, no matter how many models are deployed.
     pub fn pool_threads(&self) -> usize {
         self.pool.threads()
+    }
+
+    /// Pool workers whose affinity mask stuck (0 when pinning is off).
+    pub fn pinned_workers(&self) -> usize {
+        self.pool.pinned_workers()
     }
 
     /// Deployments currently registered on the shared pool.
@@ -169,7 +181,15 @@ impl Server {
         let sel = selector::select_engine_with(forest, calibration, None, 3, &budgets)?;
         let best = sel.recommended();
         let config = BatchConfig { exec_threads: best.threads, workers: 1, ..config };
-        self.deploy(name, forest, best.kind, best.precision, config)?;
+        if best.per_tree {
+            // The i16 per-tree-scale candidate is not reachable through
+            // `build(kind, precision, ..)` — rebuild it the way the
+            // selector measured it.
+            let engine: Arc<dyn Engine> = Arc::from(build_i16_per_tree(best.kind, forest)?);
+            self.deploy_engine(name, forest, engine, config)?;
+        } else {
+            self.deploy(name, forest, best.kind, best.precision, config)?;
+        }
         Ok(sel)
     }
 
@@ -212,13 +232,22 @@ impl Server {
         Ok(best as u32)
     }
 
-    /// Metrics report for every deployed model (plus the shared pool).
+    /// Metrics report for every deployed model (plus the shared pool and
+    /// the server-wide reaper accounting).
     pub fn report(&self) -> String {
         let mut out = format!(
-            "pool: {} workers shared by {} deployment(s)\n",
+            "pool: {} workers shared by {} deployment(s), {} pinned\n",
             self.pool_threads(),
-            self.pool_deployments()
+            self.pool_deployments(),
+            self.pinned_workers()
         );
+        out.push_str(&format!(
+            "reapers: {} live / {} spawned / {} refused (cap {})\n",
+            batcher::reaper::live(),
+            batcher::reaper::spawned(),
+            batcher::reaper::refused(),
+            batcher::reaper::CAP
+        ));
         for name in self.list() {
             if let Some(dep) = self.model(&name) {
                 out.push_str(&format!(
@@ -309,9 +338,10 @@ mod tests {
         let sel = server
             .deploy_auto("auto", &f, &ds.x[..ds.d * 128], BatchConfig::default())
             .unwrap();
-        // Every registered variant — derived from the engine registry (the
-        // literal here went stale twice as tiers grew: 10 → 13 → 15).
-        assert_eq!(sel.candidates.len(), crate::engine::all_variants_with_i8().len());
+        // Every registered variant plus the i16 per-tree candidate —
+        // derived from the engine registry (the literal here went stale
+        // twice as tiers grew: 10 → 13 → 15).
+        assert_eq!(sel.candidates.len(), crate::engine::all_variants_with_i8().len() + 1);
         let c = server.classify("auto", ds.row(3).to_vec()).unwrap();
         assert!(c < 2);
     }

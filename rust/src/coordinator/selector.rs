@@ -23,6 +23,9 @@ pub struct Candidate {
     pub precision: Precision,
     /// Exec-thread budget this candidate ran with (1 = serial).
     pub threads: usize,
+    /// i16 per-tree-leaf-scale quantization (the `+pt` suffix): rebuilt via
+    /// [`crate::engine::build_i16_per_tree`] rather than `build(kind, ..)`.
+    pub per_tree: bool,
     /// Measured host wall-clock per instance (µs).
     pub host_us_per_instance: f64,
     /// Cost-model estimate per instance (µs) for the target device, if one
@@ -64,14 +67,15 @@ impl Selection {
         let mut out = String::new();
         let target = self.device.as_deref().unwrap_or("host");
         out.push_str(&format!("engine selection (target: {target})\n"));
-        // Width 9 fits threaded names like `qVQS×16t` next to serial ones.
+        // Width 12 fits threaded per-tree names like `qVQS+pt×16t` next to
+        // serial ones.
         out.push_str(&format!(
-            "  {:<9} {:>14} {:>16} {:>8}\n",
+            "  {:<12} {:>14} {:>16} {:>8}\n",
             "engine", "host µs/inst", "device µs/inst", "argmax%"
         ));
         for c in &self.candidates {
             out.push_str(&format!(
-                "  {:<9} {:>14.2} {:>16} {:>8.1}\n",
+                "  {:<12} {:>14.2} {:>16} {:>8.1}\n",
                 c.name,
                 c.host_us_per_instance,
                 c.device_us_per_instance
@@ -163,7 +167,10 @@ pub fn select_engine_tier(
     let ref_argmax =
         Forest::argmax(&forest.predict_batch(calibration), forest.n_classes);
     let mut candidates = Vec::new();
-    // The paper's ten variants plus the int8 tier (q8NA/q8QS/q8VQS).
+    // The paper's ten variants plus the int8 tier (q8NA/q8QS/q8VQS), each
+    // built once; plus the i16 per-tree-scale candidate (`qVQS+pt`,
+    // ISSUE 5 satellite) — same VQS traversal, leaves at per-tree scales.
+    let mut entries: Vec<(EngineKind, Precision, bool, Arc<dyn Engine>)> = Vec::new();
     for (kind, precision) in crate::engine::all_variants_with_i8() {
         if tier.is_some_and(|p| p != precision) {
             continue;
@@ -171,10 +178,17 @@ pub fn select_engine_tier(
         // Build the serial engine once per variant; threaded candidates
         // wrap the same instance (Exact row sharding), so RS/QS model
         // preparation and quantization are not repeated per budget.
-        let serial: Arc<dyn Engine> = match build(kind, precision, forest, None) {
-            Ok(e) => Arc::from(e),
+        match build(kind, precision, forest, None) {
+            Ok(e) => entries.push((kind, precision, false, Arc::from(e))),
             Err(_) => continue, // e.g. >64 leaves: QS family unavailable
-        };
+        }
+    }
+    if tier.map_or(true, |p| p == Precision::I16) {
+        if let Ok(e) = crate::engine::build_i16_per_tree(EngineKind::Vqs, forest) {
+            entries.push((EngineKind::Vqs, Precision::I16, true, Arc::from(e)));
+        }
+    }
+    for (kind, precision, per_tree, serial) in entries {
         // The op trace is a workload property, identical for every thread
         // budget (ParallelEngine::count_ops delegates to the serial
         // engine) — compute the single-core device estimate once per
@@ -182,6 +196,12 @@ pub fn select_engine_tier(
         // (threaded candidates are bit-exact with serial).
         let mut single_us_est: Option<f64> = None;
         let mut agreement: Option<f64> = None;
+        // `+pt` distinguishes the per-tree candidate from plain qVQS.
+        let display = if per_tree {
+            format!("{}+pt", serial.name())
+        } else {
+            serial.name()
+        };
         for &threads in &budgets {
             let engine: Arc<dyn Engine> = if threads <= 1 {
                 serial.clone()
@@ -224,12 +244,17 @@ pub fn select_engine_tier(
                 single / p * (1.0 + 0.03 * (threads.saturating_sub(1)) as f64)
             });
             candidates.push(Candidate {
-                // `ParallelEngine::name()` already renders the `×Nt`
-                // suffix; serial engines render the paper-style name.
-                name: engine.name(),
+                // Serial engines render the paper-style name (plus `+pt`
+                // for the per-tree candidate); threaded ones add `×Nt`.
+                name: if threads <= 1 {
+                    display.clone()
+                } else {
+                    format!("{display}×{threads}t")
+                },
                 kind,
                 precision,
                 threads,
+                per_tree,
                 host_us_per_instance: host,
                 device_us_per_instance: device_est,
                 agreement,
@@ -265,12 +290,16 @@ mod tests {
             },
         );
         let sel = select_engine(&f, &ds.x[..ds.d * 256], None, 3).unwrap();
-        // The full registered tier × engine matrix — derived, not a
-        // literal: the hard-coded count went stale twice as tiers grew.
-        assert_eq!(sel.candidates.len(), crate::engine::all_variants_with_i8().len());
+        // The full registered tier × engine matrix plus the one i16
+        // per-tree candidate — derived, not a literal: the hard-coded
+        // count went stale twice as tiers grew.
+        assert_eq!(sel.candidates.len(), crate::engine::all_variants_with_i8().len() + 1);
         assert!(sel.candidates.iter().any(|c| c.name == "q8VQS"));
         assert!(sel.candidates.iter().any(|c| c.name == "q8RS"));
         assert!(sel.candidates.iter().any(|c| c.name == "q8IE"));
+        let pt = sel.candidates.iter().find(|c| c.name == "qVQS+pt").unwrap();
+        assert!(pt.per_tree && pt.precision == Precision::I16);
+        assert!(sel.candidates.iter().filter(|c| c.per_tree).count() == 1);
         // sorted ascending by µs/instance
         for w in sel.candidates.windows(2) {
             assert!(w[0].host_us_per_instance <= w[1].host_us_per_instance);
@@ -291,6 +320,7 @@ mod tests {
             kind: EngineKind::Naive,
             precision: Precision::F32,
             threads: 1,
+            per_tree: false,
             host_us_per_instance: us,
             device_us_per_instance: None,
             agreement,
@@ -383,10 +413,14 @@ mod tests {
             },
         );
         let sel = select_engine_with(&f, &ds.x[..ds.d * 128], None, 1, &[1, 2]).unwrap();
-        // Every registered variant × 2 budgets (count derived from the
-        // engine registry, not a literal).
-        assert_eq!(sel.candidates.len(), 2 * crate::engine::all_variants_with_i8().len());
+        // Every registered variant (plus the per-tree candidate) × 2
+        // budgets (count derived from the engine registry, not a literal).
+        assert_eq!(
+            sel.candidates.len(),
+            2 * (crate::engine::all_variants_with_i8().len() + 1)
+        );
         assert!(sel.candidates.iter().any(|c| c.threads == 2 && c.name.ends_with("×2t")));
         assert!(sel.candidates.iter().any(|c| c.threads == 1 && c.name == "RS"));
+        assert!(sel.candidates.iter().any(|c| c.threads == 2 && c.name == "qVQS+pt×2t"));
     }
 }

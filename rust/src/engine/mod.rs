@@ -32,7 +32,9 @@ pub mod vqs;
 
 use crate::forest::Forest;
 use crate::neon::OpTrace;
-use crate::quant::{choose_scale, quantize_i8_auto, QForest, QuantConfig};
+use crate::quant::{
+    choose_scale, choose_scale_i16_per_tree, quantize_i8_auto, QForest, QuantConfig,
+};
 
 /// A prepared tree-ensemble inference engine.
 ///
@@ -152,12 +154,9 @@ impl Precision {
 ///
 /// Fails if the forest shape is unsupported (QuickScorer-family engines
 /// require ≤ 64 leaves per tree).
-pub fn build(
-    kind: EngineKind,
-    precision: Precision,
-    forest: &Forest,
-    quant: Option<QuantConfig>,
-) -> anyhow::Result<Box<dyn Engine>> {
+/// The QuickScorer-family shape constraint, shared by every build path so
+/// it cannot drift between them.
+fn ensure_leaf_capacity(kind: EngineKind, forest: &Forest) -> anyhow::Result<()> {
     let max_leaves = forest.max_leaves();
     if matches!(kind, EngineKind::Qs | EngineKind::Vqs | EngineKind::Rs) && max_leaves > 64 {
         anyhow::bail!(
@@ -165,6 +164,16 @@ pub fn build(
             kind.short()
         );
     }
+    Ok(())
+}
+
+pub fn build(
+    kind: EngineKind,
+    precision: Precision,
+    forest: &Forest,
+    quant: Option<QuantConfig>,
+) -> anyhow::Result<Box<dyn Engine>> {
+    ensure_leaf_capacity(kind, forest)?;
     Ok(match precision {
         Precision::F32 => match kind {
             EngineKind::Naive => Box::new(naive::NaiveEngine::new(forest)),
@@ -215,6 +224,27 @@ pub fn build(
                 EngineKind::Rs => Box::new(rapidscorer::QRs8Engine::new(&qf)),
             }
         }
+    })
+}
+
+/// Build an i16 engine with **per-tree leaf scales**
+/// ([`crate::quant::choose_scale_i16_per_tree`]): tree `t`'s leaves are
+/// stored at `s·2^{k_t}` and rounding-shifted at sum time, so boosted
+/// forests with wildly uneven leaf magnitudes keep per-tree resolution a
+/// single global scale would floor away. The shift machinery is
+/// tier-generic (every quantized engine applies `tree_shifts`); this is
+/// the i16 build path the ROADMAP noted was missing. Ranked by the
+/// selector as the `+pt`-suffixed candidate and deployable through
+/// `Server::deploy_auto`.
+pub fn build_i16_per_tree(kind: EngineKind, forest: &Forest) -> anyhow::Result<Box<dyn Engine>> {
+    ensure_leaf_capacity(kind, forest)?;
+    let qf = QForest::<i16>::from_forest_per_tree(forest, choose_scale_i16_per_tree(forest, 1.0));
+    Ok(match kind {
+        EngineKind::Naive => Box::new(naive::QNaiveEngine::new(&qf)),
+        EngineKind::IfElse => Box::new(ifelse::QIfElseEngine::new(&qf)),
+        EngineKind::Qs => Box::new(quickscorer::QQsEngine::new(&qf)),
+        EngineKind::Vqs => Box::new(vqs::QVqsEngine::new(&qf)),
+        EngineKind::Rs => Box::new(rapidscorer::QRsEngine::new(&qf)),
     })
 }
 
@@ -352,6 +382,35 @@ mod tests {
         let carrier: QuantConfig = QuantConfig::new(32768.0);
         assert!(build(EngineKind::Naive, Precision::I8, &f, Some(carrier)).is_err());
         assert!(build(EngineKind::Naive, Precision::I8, &f, Some(QuantConfig::new(64.0))).is_ok());
+    }
+
+    /// The i16 per-tree build path: every engine family agrees bit-for-bit
+    /// with the per-tree i16 reference on a forest with genuinely uneven
+    /// leaf magnitudes (non-zero shifts engaged).
+    #[test]
+    fn i16_per_tree_engines_match_reference() {
+        use crate::forest::{Task, Tree};
+        let mut f = Forest::new(2, 1, Task::Ranking);
+        // One dominant tree plus tiny-correction trees — the regime the
+        // per-tree path exists for.
+        f.trees.push(Tree::leaf(vec![40.0]));
+        for i in 0..6 {
+            f.trees.push(Tree::leaf(vec![0.001 * (1.0 + i as f32)]));
+        }
+        let qf = QForest::<i16>::from_forest_per_tree(&f, choose_scale_i16_per_tree(&f, 1.0));
+        assert!(qf.has_per_tree_scales(), "shifts never engaged");
+        let x = [0.3, 0.7, 0.9, 0.1];
+        let want = qf.predict_batch(&x);
+        for kind in EngineKind::ALL {
+            let e = build_i16_per_tree(kind, &f).unwrap();
+            assert_eq!(e.name(), variant_name(kind, Precision::I16));
+            assert_eq!(
+                e.predict(&x),
+                want,
+                "{} per-tree i16 disagrees with the reference",
+                kind.short()
+            );
+        }
     }
 
     /// `build` upgrades to per-tree leaf scales exactly when the global §5

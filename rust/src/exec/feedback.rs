@@ -1,0 +1,342 @@
+//! Execution feedback: measured per-class shard throughput driving
+//! adaptive shard re-planning.
+//!
+//! PR 1's planner sizes row chunks from *construction-time* topology
+//! weights (`relative_speed` guesses per core class). Those weights are
+//! wrong whenever the guess is (a mis-described device, a throttled
+//! cluster, a co-tenant stealing cycles) — and a static plan stays wrong
+//! forever. This module closes the loop: every executed shard task reports
+//! `(chunk slot, rows, µs)` — the same wall-clock discipline the selector
+//! uses for candidate timing ([`crate::util::Stopwatch`]) — into one
+//! [`Feedback`] per deployment/engine, and the planner periodically swaps
+//! its weight vector for [`Feedback::replan`]'s (every N flushes in the
+//! batcher, every N predicts in [`crate::exec::ParallelEngine`]), so chunk
+//! sizes converge to what the workers actually sustain.
+//!
+//! # Attribution: by executing worker class, slot as fallback
+//!
+//! A chunk slot is *planned* for a topology class (fastest-first,
+//! [`crate::exec::shard::chunk_slot_classes`]), but the work-stealing pool
+//! makes no promise about which worker *claims* it — attributing a sample
+//! to its plan slot would blend big- and LITTLE-cluster times into every
+//! slot and converge a correctly-heterogeneous prior toward uniform.
+//! Instead, pool workers publish their own `(pool token, topology class)`
+//! in a thread-local ([`crate::exec::pool::current_worker_class`]), and a
+//! sample is attributed to the class that **executed** it: with pinning,
+//! class throughput is genuinely cluster throughput, so a correct 3:1
+//! prior is *confirmed* by measurement rather than eroded, and a wrong
+//! prior is corrected. Classes never observed keep their prior weight,
+//! rescaled so units agree.
+//!
+//! Class indices are only comparable within one pool's topology, so a
+//! [`Feedback::for_pool`] accepts class samples **only** from workers of
+//! that pool (token check) — the wired paths (batcher via
+//! `client.pool()`, `ParallelEngine` building pool and feedback from one
+//! `PoolConfig`) always match. Everything else — samples from non-worker
+//! threads, from a different pool, or a tokenless [`Feedback::new`] (used
+//! by `ParallelEngine::with_topology`, which re-seeds weights without
+//! re-placing the pool's workers) — falls back to a per-slot EWMA.
+//!
+//! # Determinism
+//!
+//! Re-planning changes only the **sizes** of lane-aligned row chunks,
+//! never tree order or accumulation order, so `ShardPolicy::Exact` outputs
+//! stay bit-identical to serial across re-plan boundaries (property-tested
+//! in `rust/tests/parallel_exact.rs`). Weights are validated before
+//! adoption: non-finite or non-positive vectors fall back to the
+//! construction-time weights.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+
+use super::pool::{current_worker_class, SharedPool};
+use super::shard::{chunk_slot_classes, chunk_weights};
+
+/// EWMA smoothing factor: one observation moves an estimate 25% of the
+/// way — fast enough to track a thermal throttle within a few flushes,
+/// slow enough that one noisy µs-scale sample cannot whipsaw the plan.
+const ALPHA: f64 = 0.25;
+
+/// Floor on a reported duration: µs-scale chunks on a fast host can read
+/// as ~0 from a coarse clock; clamping keeps rates finite.
+const MIN_MICROS: f64 = 0.05;
+
+struct Slots {
+    /// Construction-time weights (the topology prior) — the fallback for
+    /// slots with no observations yet, and the shape the live weight
+    /// vector must keep.
+    base: Vec<f64>,
+    /// Topology class each chunk slot is planned for (all zeros when the
+    /// topology is unknown, [`Feedback::new`]).
+    slot_class: Vec<usize>,
+    /// Pool whose worker-class samples are trusted (`None`: slot-only).
+    pool_token: Option<u64>,
+    /// EWMA throughput (rows/µs) per topology class, attributed by the
+    /// executing worker (module docs); `None` until observed.
+    class_rate: Vec<Option<f64>>,
+    /// Per-slot fallback EWMA for samples without a worker class.
+    slot_rate: Vec<Option<f64>>,
+}
+
+/// Per-deployment (or per-engine) feedback accumulator. Cheap to share:
+/// one short mutex acquisition per recorded shard, well under the tens of
+/// microseconds a shard itself costs.
+pub struct Feedback {
+    slots: Mutex<Slots>,
+    samples: AtomicU64,
+    replans: AtomicU64,
+}
+
+impl Feedback {
+    /// A feedback loop over `base` chunk-slot weights with no pool
+    /// binding: every sample lands in the per-slot EWMA. Used where
+    /// weights and worker placement are knowingly decoupled
+    /// (`ParallelEngine::with_topology`) and by tests.
+    pub fn new(base: Vec<f64>) -> Feedback {
+        let n = base.len();
+        Self::build(base, vec![0; n], None)
+    }
+
+    /// The wired constructor: base weights and slot classes derived from
+    /// `pool`'s topology × `budget` (mirrors
+    /// [`crate::exec::shard::chunk_weights`]), and class samples accepted
+    /// only from that pool's workers (token check), so class attribution
+    /// always lines up with the topology that numbered the classes.
+    pub fn for_pool(pool: &SharedPool, budget: usize) -> Feedback {
+        Self::build(
+            chunk_weights(pool.topology(), budget),
+            chunk_slot_classes(pool.topology(), budget),
+            Some(pool.token()),
+        )
+    }
+
+    fn build(base: Vec<f64>, slot_class: Vec<usize>, pool_token: Option<u64>) -> Feedback {
+        let n_slots = base.len();
+        let n_classes = slot_class.iter().copied().max().map_or(1, |m| m + 1);
+        Feedback {
+            slots: Mutex::new(Slots {
+                base,
+                slot_class,
+                pool_token,
+                class_rate: vec![None; n_classes],
+                slot_rate: vec![None; n_slots],
+            }),
+            samples: AtomicU64::new(0),
+            replans: AtomicU64::new(0),
+        }
+    }
+
+    /// Record one executed shard: chunk slot, rows processed, wall µs.
+    /// Attributed to the executing pool worker's topology class when the
+    /// worker belongs to the bound pool (module docs), else to the slot;
+    /// out-of-range slots (plan shapes can shrink) are ignored.
+    pub fn record(&self, slot: usize, rows: usize, micros: f64) {
+        if rows == 0 || !micros.is_finite() {
+            return;
+        }
+        let rate = rows as f64 / micros.max(MIN_MICROS);
+        let sample = current_worker_class();
+        let mut s = self.slots.lock().unwrap();
+        let class = match (s.pool_token, sample) {
+            (Some(expect), Some((token, c))) if token == expect && c < s.class_rate.len() => {
+                Some(c)
+            }
+            _ => None,
+        };
+        let cell = match class {
+            Some(c) => &mut s.class_rate[c],
+            None if slot < s.slot_rate.len() => &mut s.slot_rate[slot],
+            None => return,
+        };
+        *cell = Some(match *cell {
+            Some(old) => ALPHA * rate + (1.0 - ALPHA) * old,
+            None => rate,
+        });
+        self.samples.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Derive a fresh weight vector from the observed throughputs: a slot
+    /// weighs its class's EWMA rate (falling back to its own slot EWMA);
+    /// unobserved slots keep their base weight, rescaled by the mean
+    /// observed rate-per-base-weight so the two unit systems agree — an
+    /// unobserved class therefore keeps its *prior ratio* to the observed
+    /// ones. Falls back to the base weights entirely when nothing has been
+    /// observed or the result would be degenerate (weights must be finite
+    /// and positive for the apportionment math).
+    pub fn replan(&self) -> Vec<f64> {
+        let s = self.slots.lock().unwrap();
+        let resolved: Vec<Option<f64>> = (0..s.base.len())
+            .map(|i| s.class_rate.get(s.slot_class[i]).copied().flatten().or(s.slot_rate[i]))
+            .collect();
+        // Mean observed rate per unit of base weight — the exchange rate
+        // between "topology weight units" and "measured rows/µs".
+        let mut ratio_sum = 0.0;
+        let mut ratio_n = 0usize;
+        for (i, r) in resolved.iter().enumerate() {
+            if let Some(r) = r {
+                if s.base[i] > 0.0 {
+                    ratio_sum += r / s.base[i];
+                    ratio_n += 1;
+                }
+            }
+        }
+        if ratio_n == 0 {
+            return s.base.clone();
+        }
+        let exchange = ratio_sum / ratio_n as f64;
+        let out: Vec<f64> = resolved
+            .iter()
+            .enumerate()
+            .map(|(i, r)| r.unwrap_or(s.base[i] * exchange))
+            .collect();
+        if out.iter().any(|w| !w.is_finite() || *w <= 0.0) {
+            return s.base.clone();
+        }
+        self.replans.fetch_add(1, Ordering::Relaxed);
+        out
+    }
+
+    /// Shards recorded so far.
+    pub fn samples(&self) -> u64 {
+        self.samples.load(Ordering::Relaxed)
+    }
+
+    /// Successful weight re-derivations so far (diagnostics: proves the
+    /// loop is actually closing).
+    pub fn replans(&self) -> u64 {
+        self.replans.load(Ordering::Relaxed)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::exec::pool::{PoolConfig, SharedPool, Task};
+    use std::sync::Arc;
+
+    #[test]
+    fn unobserved_returns_base() {
+        let f = Feedback::new(vec![3.0, 1.0]);
+        assert_eq!(f.replan(), vec![3.0, 1.0]);
+        assert_eq!(f.replans(), 0, "a base fallback is not a re-plan");
+    }
+
+    #[test]
+    fn observed_rates_replace_weights() {
+        let f = Feedback::new(vec![3.0, 1.0]);
+        // The "big" slot actually runs at the same speed as the "little"
+        // one — the measured loop must erase the 3:1 prior. (Test threads
+        // publish no worker class, so samples land in the slot fallback.)
+        for _ in 0..20 {
+            f.record(0, 100, 50.0); // 2 rows/µs
+            f.record(1, 100, 50.0); // 2 rows/µs
+        }
+        let w = f.replan();
+        assert_eq!(f.replans(), 1);
+        assert!((w[0] - w[1]).abs() / w[0] < 0.05, "converged weights {w:?}");
+    }
+
+    #[test]
+    fn unobserved_slot_keeps_relative_base() {
+        let f = Feedback::new(vec![2.0, 1.0]);
+        for _ in 0..10 {
+            f.record(0, 100, 25.0); // 4 rows/µs on a base-2.0 slot
+        }
+        let w = f.replan();
+        // Slot 1 never reported: its base weight is rescaled by the
+        // observed exchange rate (4/2 = 2) so the 2:1 ratio is preserved.
+        assert!((w[0] / w[1] - 2.0).abs() < 1e-6, "{w:?}");
+    }
+
+    #[test]
+    fn ewma_tracks_a_slowdown() {
+        let f = Feedback::new(vec![1.0, 1.0]);
+        for _ in 0..50 {
+            f.record(0, 100, 10.0); // 10 rows/µs
+        }
+        // Slot 0 throttles to 1 row/µs; within a handful of samples the
+        // estimate must drop below half of the old rate.
+        for _ in 0..10 {
+            f.record(0, 100, 100.0);
+        }
+        let w = f.replan();
+        assert!(w[0] < 5.0, "EWMA stuck at {w:?}");
+        assert!(w[0] > 1.0, "EWMA overshot at {w:?}");
+    }
+
+    #[test]
+    fn degenerate_samples_are_ignored() {
+        let f = Feedback::new(vec![1.0, 1.0]);
+        f.record(0, 0, 10.0); // no rows
+        f.record(0, 10, f64::NAN); // broken clock
+        f.record(7, 10, 10.0); // out-of-range slot
+        assert_eq!(f.samples(), 0);
+        assert_eq!(f.replan(), vec![1.0, 1.0]);
+        // A ~zero-duration chunk clamps rather than producing inf.
+        f.record(0, 16, 0.0);
+        assert!(f.replan().iter().all(|w| w.is_finite() && *w > 0.0));
+    }
+
+    /// Class attribution end-to-end: samples recorded *on pool workers*
+    /// land in the executing worker's class. Both classes of a synthetic
+    /// 1+1 big.LITTLE pool measure the same rate here, so the 3:1 prior
+    /// is erased — the homogeneous-host correction the adaptive bench
+    /// demonstrates — regardless of which worker claimed which chunk.
+    #[test]
+    fn class_attribution_from_pool_workers() {
+        let topo = crate::exec::CoreTopology::synthetic_big_little(1, 1, 3.0);
+        let pool = SharedPool::with_config(PoolConfig::new(2).topology(topo));
+        let fb = Arc::new(Feedback::for_pool(&pool, 2));
+        let client = SharedPool::register(&pool, "fb", 2);
+        // A barrier forces the two tasks onto *different* workers (the
+        // depth cap gives single-task claims at queue depth 2 / 2 workers),
+        // so both classes observe samples.
+        let barrier = Arc::new(std::sync::Barrier::new(2));
+        let tasks: Vec<Task> = (0..2)
+            .map(|_| {
+                let fb = fb.clone();
+                let barrier = barrier.clone();
+                Box::new(move || {
+                    barrier.wait();
+                    for _ in 0..10 {
+                        fb.record(0, 100, 50.0); // 2 rows/µs on this class
+                    }
+                }) as Task
+            })
+            .collect();
+        client.run(tasks);
+        assert_eq!(fb.samples(), 20);
+        let w = fb.replan();
+        // Slot layout is [big, big, little, little]; equal measured class
+        // rates must produce ~equal weights despite the 3:1 prior.
+        assert_eq!(w.len(), 4);
+        assert!((w[0] - w[2]).abs() / w[0] < 0.05, "classes not measured: {w:?}");
+    }
+
+    /// Token gating: a worker of a *different* pool publishes a class
+    /// index that is also valid in this feedback's numbering — the token
+    /// mismatch must route its sample to the slot fallback, never into
+    /// this topology's class EWMA.
+    #[test]
+    fn foreign_pool_class_samples_fall_back_to_slots() {
+        let topo = crate::exec::CoreTopology::synthetic_big_little(1, 1, 3.0);
+        let pool_a = SharedPool::with_config(PoolConfig::new(1).topology(topo));
+        let fb = Arc::new(Feedback::for_pool(&pool_a, 2)); // base [3,3,1,1]
+        let pool_b = SharedPool::new(1);
+        let client_b = SharedPool::register(&pool_b, "b", 1);
+        let fbc = fb.clone();
+        client_b.run(vec![Box::new(move || {
+            for _ in 0..5 {
+                fbc.record(2, 100, 50.0); // 2 rows/µs on a LITTLE slot
+            }
+        }) as Task]);
+        let w = fb.replan();
+        // The sample landed on slot 2 itself...
+        assert!((w[2] - 2.0).abs() < 1e-9, "{w:?}");
+        // ... and the big class was never legitimately observed, so its
+        // prior ratio to the observed slot is preserved. (If the foreign
+        // class-0 sample leaked into pool_a's class 0, w[0] would read
+        // 2.0 and the ratio would collapse to 1.)
+        assert!((w[0] / w[2] - 3.0).abs() < 1e-6, "class 0 polluted: {w:?}");
+    }
+}

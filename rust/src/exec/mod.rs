@@ -37,15 +37,33 @@
 //! * **Teardown** — dropping a client discards its queued tasks but lets
 //!   in-flight tasks finish; serving drains first (see
 //!   `coordinator::batcher`), so no accepted request is dropped.
+//! * **Adaptivity** (DESIGN.md §7) — the scheduling loop is *measure,
+//!   adapt, enforce*: [`topology::CoreTopology`] supplies only the prior.
+//!   Workers can be **pinned** to their assigned cluster
+//!   ([`pool::PoolConfig::pin`] via [`affinity`]), executed shards report
+//!   throughput into [`feedback::Feedback`], and row-plan weights are
+//!   re-derived from measurement (every N flushes in the batcher, every N
+//!   predicts in [`ParallelEngine`]). Re-planning changes only lane-aligned
+//!   chunk *sizes*, so the Exact bit-exactness contract is untouched.
+//!   Deep queues are drained with batch claims
+//!   ([`pool::PoolConfig::claim_limit`]) that preserve the weighted-fair /
+//!   steal semantics above.
 
+pub mod affinity;
+pub mod feedback;
 pub mod parallel;
 pub mod pool;
 pub mod shard;
 pub mod topology;
 
+pub use feedback::Feedback;
 pub use parallel::ParallelEngine;
-pub use pool::{worker_threads_spawned, PoolClient, SharedPool, WorkerPool};
-pub use shard::{
-    chunk_weights, plan, tree_shard_bounds, weighted_row_chunks, ShardPlan, ShardPolicy,
+pub use pool::{
+    current_worker_class, worker_threads_spawned, PoolClient, PoolConfig, SharedPool,
+    WorkerPool, DEFAULT_CLAIM_LIMIT,
 };
-pub use topology::{CoreClass, CoreTopology};
+pub use shard::{
+    chunk_slot_classes, chunk_weights, plan, tree_shard_bounds, weighted_row_chunks,
+    weighted_row_chunks_slotted, ShardPlan, ShardPolicy,
+};
+pub use topology::{CoreClass, CoreTopology, WorkerAssignment};

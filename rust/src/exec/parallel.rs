@@ -9,7 +9,10 @@
 //!   wrapped serial engine for every batch size and thread count. Only row
 //!   plans are emitted; chunk boundaries are lane-aligned, so each chunk's
 //!   SIMD blocking is exactly the serial blocking of those rows, and each
-//!   worker writes a disjoint slice of `out`.
+//!   worker writes a disjoint slice of `out`. This holds **across adaptive
+//!   re-plans** (below): re-planning changes only the sizes of lane-aligned
+//!   chunks, never tree order or accumulation order — property-tested in
+//!   `rust/tests/parallel_exact.rs`.
 //! * **`ShardPolicy::Throughput`**: tree-sharded and hybrid plans are also
 //!   emitted for small-batch × large-forest work. Partial score vectors are
 //!   reduced in shard-index order into per-element sums, so a given
@@ -18,22 +21,46 @@
 //!   fold in the last ulp (the i16 engines' integer partials re-associate
 //!   exactly; their final f32 descale does not). Use where a float
 //!   tolerance applies (benchmarks, serving without bit-exactness SLOs).
+//!   To keep that run-to-run promise, **adaptive re-planning is disabled**
+//!   on the tree/hybrid path: a weight change could flip the planner
+//!   between `Rows` and `Hybrid`, whose f32 results differ in the last
+//!   ulp. Tree shards keep their construction-time weights.
+//!
+//! # Adaptive re-planning (ISSUE 5)
+//!
+//! Under row sharding the engine closes the plan→measure→re-plan loop:
+//! every chunk task reports `(slot, rows, µs)` into an
+//! [`crate::exec::feedback::Feedback`], and every
+//! [`REPLAN_EVERY_PREDICTS`] calls the weight vector is re-derived from
+//! the observed per-slot throughput. Construction-time topology weights
+//! are only the *prior* — a mis-described device (or a throttled cluster)
+//! is corrected by measurement within a few batches. Disable with
+//! [`ParallelEngine::with_adaptive`]`(false)` for fixed-plan experiments.
 //!
 //! Tree shards are built once at construction: sub-forest `0` keeps the
 //! ensemble's base score, later shards get zero base, and all i16 shards
 //! share the full forest's quantization scale so partials descale
 //! identically.
 
-use std::sync::Arc;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
 
 use crate::engine::{build, Engine, EngineKind, Precision};
 use crate::forest::Forest;
 use crate::neon::OpTrace;
 use crate::quant::{choose_scale, QuantConfig};
+use crate::util::Stopwatch;
 
-use super::pool::{MutPtr, Task, WorkerPool};
-use super::shard::{chunk_weights, plan, tree_shard_bounds, ShardPlan, ShardPolicy};
+use super::feedback::Feedback;
+use super::pool::{MutPtr, PoolConfig, Task, WorkerPool};
+use super::shard::{
+    chunk_weights, plan, tree_shard_bounds, weighted_row_chunks_slotted, ShardPlan, ShardPolicy,
+};
 use super::topology::CoreTopology;
+
+/// Row-plan weights are re-derived from measured shard throughput every
+/// this many `predict_batch` calls (when adaptivity is on).
+pub const REPLAN_EVERY_PREDICTS: u64 = 8;
 
 /// Send-able raw pointer wrapper for handing disjoint slice ranges to pool
 /// tasks (the writable half, [`MutPtr`], is shared with the fused batcher
@@ -54,9 +81,15 @@ pub struct ParallelEngine {
     topo: CoreTopology,
     policy: ShardPolicy,
     threads: usize,
-    /// Per-chunk-slot weights derived from (topo × threads) — fixed after
-    /// construction, so they are computed once, off the predict hot path.
-    weights: Vec<f64>,
+    /// Construction-time per-chunk-slot weights (topo × threads) — the
+    /// adaptive prior, and the fixed weights of the tree/hybrid path.
+    base_weights: Vec<f64>,
+    /// Live row-plan weights: start at `base_weights`, re-derived from
+    /// `feedback` when adaptivity is on.
+    weights: Mutex<Vec<f64>>,
+    feedback: Arc<Feedback>,
+    adaptive: bool,
+    predicts: AtomicU64,
 }
 
 impl ParallelEngine {
@@ -111,41 +144,94 @@ impl ParallelEngine {
             }
         }
 
-        let topo = CoreTopology::detect();
-        let weights = chunk_weights(&topo, threads);
-        Ok(ParallelEngine {
-            inner,
-            tree_shards,
-            pool: Arc::new(WorkerPool::new(threads)),
-            topo,
-            policy,
-            threads,
-            weights,
-        })
+        Ok(Self::assemble(inner, tree_shards, policy, PoolConfig::new(threads)))
     }
 
     /// Wrap an already-built engine (row sharding only — the forest is not
     /// available to partition). Always bit-exact.
     pub fn wrap(engine: Arc<dyn Engine>, threads: usize) -> ParallelEngine {
-        let threads = threads.max(1);
-        let topo = CoreTopology::detect();
-        let weights = chunk_weights(&topo, threads);
+        Self::assemble(engine, Vec::new(), ShardPolicy::Exact, PoolConfig::new(threads))
+    }
+
+    /// [`ParallelEngine::wrap`] with an explicit [`PoolConfig`] (topology,
+    /// pinning, batch claiming) — spawns exactly one pool, unlike
+    /// `wrap(..).with_pool_config(..)` which would build and immediately
+    /// discard a default pool.
+    pub fn wrap_with(engine: Arc<dyn Engine>, config: PoolConfig) -> ParallelEngine {
+        Self::assemble(engine, Vec::new(), ShardPolicy::Exact, config)
+    }
+
+    /// Shared constructor tail: derive weights/feedback from the pool
+    /// config's topology and spawn the pool.
+    fn assemble(
+        inner: Arc<dyn Engine>,
+        tree_shards: Vec<Arc<dyn Engine>>,
+        policy: ShardPolicy,
+        config: PoolConfig,
+    ) -> ParallelEngine {
+        let threads = config.threads.max(1);
+        let topo = config.topology.clone();
+        let base_weights = chunk_weights(&topo, threads);
+        let pool = Arc::new(WorkerPool::with_config(config));
+        let feedback = Arc::new(Feedback::for_pool(pool.pool(), threads));
         ParallelEngine {
-            inner: engine,
-            tree_shards: Vec::new(),
-            pool: Arc::new(WorkerPool::new(threads)),
+            inner,
+            tree_shards,
+            feedback,
+            pool,
             topo,
-            policy: ShardPolicy::Exact,
+            policy,
             threads,
-            weights,
+            weights: Mutex::new(base_weights.clone()),
+            base_weights,
+            adaptive: true,
+            predicts: AtomicU64::new(0),
         }
     }
 
     /// Replace the core topology used for weighted shard sizing (e.g.
     /// [`CoreTopology::odroid_xu4`] when emulating a big.LITTLE target).
-    pub fn with_topology(mut self, topo: CoreTopology) -> ParallelEngine {
-        self.weights = chunk_weights(&topo, self.threads);
-        self.topo = topo;
+    /// Resets the feedback loop to the new prior — with **slot-fallback
+    /// attribution only**, since the kept pool's worker classes are
+    /// numbered by the *old* topology; use
+    /// [`ParallelEngine::with_pool_config`] to re-place workers and regain
+    /// class attribution.
+    pub fn with_topology(self, topo: CoreTopology) -> ParallelEngine {
+        let base_weights = chunk_weights(&topo, self.threads);
+        let feedback = Arc::new(Feedback::new(base_weights.clone()));
+        ParallelEngine {
+            topo,
+            weights: Mutex::new(base_weights.clone()),
+            feedback,
+            base_weights,
+            ..self
+        }
+    }
+
+    /// Rebuild the worker pool per `config` (topology, pinning, batch
+    /// claiming) and re-derive the weight prior from its topology. The
+    /// `bench --exp adaptive` grid uses this to flip pinning/claiming on
+    /// one engine definition.
+    pub fn with_pool_config(self, config: PoolConfig) -> ParallelEngine {
+        let threads = config.threads.max(1);
+        let topo = config.topology.clone();
+        let base_weights = chunk_weights(&topo, threads);
+        let pool = Arc::new(WorkerPool::with_config(config));
+        let feedback = Arc::new(Feedback::for_pool(pool.pool(), threads));
+        ParallelEngine {
+            pool,
+            topo,
+            threads,
+            weights: Mutex::new(base_weights.clone()),
+            feedback,
+            base_weights,
+            ..self
+        }
+    }
+
+    /// Enable/disable adaptive re-planning (default: on; module docs).
+    pub fn with_adaptive(mut self, adaptive: bool) -> ParallelEngine {
+        self.adaptive = adaptive;
         self
     }
 
@@ -164,17 +250,38 @@ impl ParallelEngine {
         &self.inner
     }
 
+    /// The engine's worker pool (pinning / claim diagnostics).
+    pub fn pool(&self) -> &Arc<WorkerPool> {
+        &self.pool
+    }
+
+    /// The feedback loop driving adaptive re-plans (diagnostics: samples
+    /// recorded, re-plans performed).
+    pub fn feedback(&self) -> &Arc<Feedback> {
+        &self.feedback
+    }
+
+    /// Current row-plan weights (the adaptive state; equals the topology
+    /// prior until the first re-plan).
+    pub fn current_weights(&self) -> Vec<f64> {
+        self.weights.lock().unwrap().clone()
+    }
+
     /// Row plan execution: each chunk is a serial `predict_batch` over a
-    /// disjoint `(x, out)` window.
-    fn run_rows(&self, x: &[f32], out: &mut [f32], chunks: &[(usize, usize)]) {
+    /// disjoint `(x, out)` window. With `record` set (the adaptive path
+    /// only — static Throughput row plans pass false so their dense chunk
+    /// indices never pollute the slot attribution), each chunk reports its
+    /// measured throughput back to the feedback loop.
+    fn run_rows(&self, x: &[f32], out: &mut [f32], chunks: &[(usize, usize, usize)], record: bool) {
         let d = self.inner.n_features();
         let c = self.inner.n_classes();
         let xp = ConstPtr(x.as_ptr());
         let op = MutPtr(out.as_mut_ptr());
         let tasks: Vec<Task> = chunks
             .iter()
-            .map(|&(a, b)| {
+            .map(|&(a, b, slot)| {
                 let engine = self.inner.clone();
+                let feedback = (record && self.adaptive).then(|| self.feedback.clone());
                 Box::new(move || {
                     // SAFETY: chunks are disjoint, in-bounds row ranges of
                     // x/out, and the caller blocks in `pool.run` until every
@@ -185,7 +292,11 @@ impl ParallelEngine {
                             std::slice::from_raw_parts_mut(op.0.add(a * c), (b - a) * c),
                         )
                     };
+                    let sw = Stopwatch::start();
                     engine.predict_batch(xs, os);
+                    if let Some(f) = feedback {
+                        f.record(slot, b - a, sw.micros());
+                    }
                 }) as Task
             })
             .collect();
@@ -231,6 +342,26 @@ impl ParallelEngine {
             }
         }
     }
+
+    /// The adaptive row path: plan from the live weights, execute, and
+    /// periodically fold the measured throughput back into the weights.
+    fn run_rows_adaptive(&self, x: &[f32], out: &mut [f32], n: usize) {
+        let chunks = {
+            let weights = self.weights.lock().unwrap();
+            weighted_row_chunks_slotted(n, self.inner.lanes(), &weights)
+        };
+        if chunks.len() <= 1 {
+            self.inner.predict_batch(x, out);
+        } else {
+            self.run_rows(x, out, &chunks, true);
+        }
+        if self.adaptive && chunks.len() > 1 {
+            let calls = self.predicts.fetch_add(1, Ordering::Relaxed) + 1;
+            if calls % REPLAN_EVERY_PREDICTS == 0 {
+                *self.weights.lock().unwrap() = self.feedback.replan();
+            }
+        }
+    }
 }
 
 impl Engine for ParallelEngine {
@@ -256,16 +387,28 @@ impl Engine for ParallelEngine {
         if self.threads <= 1 || n == 0 {
             return self.inner.predict_batch(x, out);
         }
+        // Without tree shards every plan is a (bit-exact) row plan — the
+        // adaptive path. With tree shards (Throughput), plans stay static
+        // so repeated calls remain bit-identical (module docs).
+        if self.tree_shards.is_empty() {
+            return self.run_rows_adaptive(x, out, n);
+        }
         match plan(
             n,
             self.inner.lanes(),
             self.tree_shards.len(),
             self.policy,
-            &self.weights,
+            &self.base_weights,
             self.threads,
         ) {
             ShardPlan::Serial => self.inner.predict_batch(x, out),
-            ShardPlan::Rows(chunks) => self.run_rows(x, out, &chunks),
+            ShardPlan::Rows(chunks) => {
+                // Static row plan: no feedback recording (this path never
+                // re-plans, and its chunk indices are not weight slots).
+                let slotted: Vec<(usize, usize, usize)> =
+                    chunks.iter().enumerate().map(|(i, &(a, b))| (a, b, i)).collect();
+                self.run_rows(x, out, &slotted, false)
+            }
             ShardPlan::Trees => self.run_trees(x, out, &[(0, n)]),
             ShardPlan::Hybrid(chunks) => self.run_trees(x, out, &chunks),
         }
@@ -352,8 +495,10 @@ mod tests {
         let x = &ds.x[..ds.d * 5];
         let got = par.predict(x);
         crate::testing::assert_close(&got, &serial.predict(x), 1e-5, 1e-5).unwrap();
-        // Run-to-run determinism of the ordered reduction.
-        for _ in 0..5 {
+        // Run-to-run determinism of the ordered reduction — also across
+        // what would be adaptive re-plan boundaries (the tree path must
+        // stay static; > REPLAN_EVERY_PREDICTS calls).
+        for _ in 0..(REPLAN_EVERY_PREDICTS + 3) {
             assert_eq!(par.predict(x), got);
         }
     }
@@ -448,5 +593,81 @@ mod tests {
         )
         .unwrap();
         assert!(thr.memory_bytes() > exact.memory_bytes());
+    }
+
+    /// The feedback loop actually closes: sharded predicts record samples,
+    /// re-plans fire on schedule, results stay bit-exact throughout, and a
+    /// deliberately wrong 3:1 prior converges toward the (homogeneous)
+    /// host's measured ~1:1.
+    #[test]
+    fn adaptive_replans_and_stays_exact() {
+        let (f, ds) = forest(10);
+        let serial = build(EngineKind::Rs, Precision::F32, &f, None).unwrap();
+        let par = ParallelEngine::from_forest(
+            EngineKind::Rs,
+            Precision::F32,
+            &f,
+            None,
+            2,
+            ShardPolicy::Exact,
+        )
+        .unwrap()
+        .with_topology(CoreTopology::synthetic_big_little(1, 1, 3.0));
+        let x = &ds.x[..ds.d * 256];
+        let want = serial.predict(x);
+        for _ in 0..(3 * REPLAN_EVERY_PREDICTS) {
+            assert_eq!(par.predict(x), want, "re-plan broke Exact bit-exactness");
+        }
+        assert!(par.feedback().samples() > 0, "no shard samples recorded");
+        assert!(par.feedback().replans() >= 2, "re-planning never engaged");
+        let w = par.current_weights();
+        assert_ne!(w, par.base_weights, "weights never moved off the 3:1 prior");
+    }
+
+    /// `with_adaptive(false)` freezes the construction-time plan.
+    #[test]
+    fn adaptive_off_keeps_prior_weights() {
+        let (f, ds) = forest(8);
+        let par = ParallelEngine::from_forest(
+            EngineKind::Vqs,
+            Precision::F32,
+            &f,
+            None,
+            2,
+            ShardPolicy::Exact,
+        )
+        .unwrap()
+        .with_adaptive(false);
+        let x = &ds.x[..ds.d * 128];
+        for _ in 0..(2 * REPLAN_EVERY_PREDICTS) {
+            let _ = par.predict(x);
+        }
+        assert_eq!(par.feedback().samples(), 0);
+        assert_eq!(par.feedback().replans(), 0);
+        assert_eq!(par.current_weights(), par.base_weights);
+    }
+
+    /// Pinned pool config accepted end-to-end and still bit-exact.
+    #[test]
+    fn pinned_pool_config_is_bit_exact() {
+        let (f, ds) = forest(8);
+        let serial = build(EngineKind::Rs, Precision::F32, &f, None).unwrap();
+        let par = ParallelEngine::from_forest(
+            EngineKind::Rs,
+            Precision::F32,
+            &f,
+            None,
+            2,
+            ShardPolicy::Exact,
+        )
+        .unwrap()
+        .with_pool_config(
+            PoolConfig::new(2)
+                .topology(CoreTopology::synthetic_big_little(1, 1, 2.0))
+                .pin(true),
+        );
+        let x = &ds.x[..ds.d * 150];
+        assert_eq!(par.predict(x), serial.predict(x));
+        assert!(par.pool().pool().pinned_workers() <= 2);
     }
 }

@@ -54,6 +54,22 @@ pub enum ShardPlan {
 /// `weights` (one entry per chunk slot). Chunks are multiples of `lanes`
 /// except the last, which absorbs the remainder; empty chunks are dropped.
 pub fn weighted_row_chunks(n: usize, lanes: usize, weights: &[f64]) -> Vec<(usize, usize)> {
+    weighted_row_chunks_slotted(n, lanes, weights)
+        .into_iter()
+        .map(|(a, b, _)| (a, b))
+        .collect()
+}
+
+/// [`weighted_row_chunks`] keeping the **slot attribution**: each chunk is
+/// `(begin, end, slot)` where `slot` indexes the weight that sized it. The
+/// adaptive planner needs the slot to attribute a measured shard time back
+/// to the weight it should correct (`exec::feedback`); empty slots are
+/// still dropped, so slots in the output may be sparse.
+pub fn weighted_row_chunks_slotted(
+    n: usize,
+    lanes: usize,
+    weights: &[f64],
+) -> Vec<(usize, usize, usize)> {
     let lanes = lanes.max(1);
     if n == 0 || weights.is_empty() {
         return Vec::new();
@@ -61,7 +77,7 @@ pub fn weighted_row_chunks(n: usize, lanes: usize, weights: &[f64]) -> Vec<(usiz
     let blocks = n.div_ceil(lanes);
     let total_w: f64 = weights.iter().sum();
     if total_w <= 0.0 {
-        return vec![(0, n)];
+        return vec![(0, n, 0)];
     }
     // Largest-remainder apportionment of lane-blocks to chunk slots.
     let mut alloc: Vec<usize> = Vec::with_capacity(weights.len());
@@ -80,12 +96,12 @@ pub fn weighted_row_chunks(n: usize, lanes: usize, weights: &[f64]) -> Vec<(usiz
     }
     let mut chunks = Vec::new();
     let mut begin = 0usize;
-    for blocks_here in alloc {
+    for (slot, blocks_here) in alloc.into_iter().enumerate() {
         if blocks_here == 0 || begin >= n {
             continue;
         }
         let end = (begin + blocks_here * lanes).min(n);
-        chunks.push((begin, end));
+        chunks.push((begin, end, slot));
         begin = end;
     }
     // Rounding can leave a tail un-assigned; give it to the last chunk.
@@ -93,7 +109,7 @@ pub fn weighted_row_chunks(n: usize, lanes: usize, weights: &[f64]) -> Vec<(usiz
         if let Some(last) = chunks.last_mut() {
             last.1 = n;
         } else {
-            chunks.push((0, n));
+            chunks.push((0, n, 0));
         }
     }
     chunks
@@ -182,6 +198,20 @@ pub fn chunk_weights(topo: &CoreTopology, threads: usize) -> Vec<f64> {
         w.push(x);
     }
     w
+}
+
+/// Companion to [`chunk_weights`] with identical (2× oversubscribed)
+/// layout: the topology **class** each chunk slot's worker assignment
+/// belongs to. `exec::feedback` uses it to map measured per-class
+/// throughput back onto the slots planned for that class.
+pub fn chunk_slot_classes(topo: &CoreTopology, threads: usize) -> Vec<usize> {
+    let per_worker = topo.worker_assignments(threads);
+    let mut out = Vec::with_capacity(per_worker.len() * 2);
+    for a in per_worker {
+        out.push(a.class);
+        out.push(a.class);
+    }
+    out
 }
 
 #[cfg(test)]
@@ -280,5 +310,39 @@ mod tests {
     fn chunk_weights_oversubscribe() {
         let topo = CoreTopology::homogeneous(4);
         assert_eq!(chunk_weights(&topo, 4).len(), 8);
+    }
+
+    #[test]
+    fn chunk_slot_classes_mirror_weights_layout() {
+        let topo = CoreTopology::odroid_xu4();
+        let w = chunk_weights(&topo, 8);
+        let c = chunk_slot_classes(&topo, 8);
+        assert_eq!(w.len(), c.len());
+        // Big cluster (class 0) slots first, then LITTLE (class 1).
+        assert_eq!(&c[..8], &[0; 8]);
+        assert_eq!(&c[8..], &[1; 8]);
+        // A slot's weight is its class's weight.
+        assert!(w[0] > w[8]);
+    }
+
+    #[test]
+    fn slotted_chunks_attribute_their_weight() {
+        // Slot 1 has weight 0 → dropped; surviving chunks keep their slot
+        // index so feedback can credit the right weight entry.
+        let chunks = weighted_row_chunks_slotted(64, 4, &[1.0, 0.0, 1.0]);
+        let mut at = 0;
+        for &(a, b, _) in &chunks {
+            assert_eq!(a, at);
+            at = b;
+        }
+        assert_eq!(at, 64);
+        let slots: Vec<usize> = chunks.iter().map(|&(_, _, s)| s).collect();
+        assert_eq!(slots, vec![0, 2]);
+        // The plain variant is exactly the slotted one minus attribution.
+        let plain = weighted_row_chunks(64, 4, &[1.0, 0.0, 1.0]);
+        assert_eq!(
+            plain,
+            chunks.iter().map(|&(a, b, _)| (a, b)).collect::<Vec<_>>()
+        );
     }
 }

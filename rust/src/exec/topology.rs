@@ -1,12 +1,30 @@
-//! Core topology: how many workers to run and how much work each deserves.
+//! Core topology: how many workers to run, how much work each deserves —
+//! and, since the affinity work, *which physical cores* each worker should
+//! be pinned to.
 //!
 //! Every ARM target in the paper's Table 1 is a 4-core part, and the
 //! Odroid-XU4's Exynos 5422 is heterogeneous (4×A15 big + 4×A7 LITTLE).
 //! Equal-size shards on such a part leave the big cores idle while the
 //! LITTLE cores finish — so the shard planner weights shard sizes by core
 //! class. A [`CoreTopology`] is the minimal description the planner needs:
-//! an ordered list of core classes (fastest first), each with a count and a
-//! relative throughput weight.
+//! an ordered list of core classes (fastest first), each with a count, a
+//! relative throughput weight, and the physical core IDs backing it
+//! ([`CoreClass::core_ids`]; may be empty when unknown, in which case
+//! pinning degrades to a no-op for that class).
+//!
+//! # Detection
+//!
+//! [`CoreTopology::from_sysfs`] parses the Linux per-CPU capacity hints —
+//! `/sys/devices/system/cpu/cpu*/cpu_capacity` (arm64 DVFS-normalized
+//! capacity) with `cpu*/cpufreq/cpuinfo_max_freq` as the fallback metric —
+//! and clusters cores whose metric is within 5% into one class, fastest
+//! class first. [`CoreTopology::detect`] uses that result only when it is
+//! genuinely heterogeneous (≥ 2 classes, e.g. big.LITTLE or P/E-core
+//! parts); on homogeneous hosts it keeps the conservative
+//! `available_parallelism` answer, which also respects cgroup CPU quotas
+//! that raw `/sys` enumeration would overcount.
+
+use std::path::Path;
 
 use crate::device::DeviceProfile;
 
@@ -18,6 +36,11 @@ pub struct CoreClass {
     /// Relative single-core throughput (any positive unit; only ratios
     /// between classes matter).
     pub weight: f64,
+    /// Physical core IDs backing this class — the affinity mask pool
+    /// workers assigned here are pinned to. Empty when unknown (synthetic
+    /// device-profile topologies on a foreign host): those workers stay
+    /// unpinned.
+    pub core_ids: Vec<usize>,
 }
 
 /// An ordered set of core classes, fastest first.
@@ -26,51 +49,169 @@ pub struct CoreTopology {
     pub classes: Vec<CoreClass>,
 }
 
+/// One pool worker's placement: which class it belongs to (index into
+/// [`CoreTopology::classes`]) and the weight its shards are sized by.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct WorkerAssignment {
+    pub class: usize,
+    pub weight: f64,
+}
+
 impl CoreTopology {
-    /// `n` identical cores (the common case on servers and the Pi's A53).
+    /// `n` identical cores (the common case on servers and the Pi's A53),
+    /// backed by core IDs `0..n`.
     pub fn homogeneous(n: usize) -> CoreTopology {
+        let n = n.max(1);
         CoreTopology {
-            classes: vec![CoreClass { name: "core".into(), count: n.max(1), weight: 1.0 }],
+            classes: vec![CoreClass {
+                name: "core".into(),
+                count: n,
+                weight: 1.0,
+                core_ids: (0..n).collect(),
+            }],
         }
     }
 
-    /// The host machine, via `std::thread::available_parallelism`.
+    /// The host machine. Prefers the sysfs capacity topology when it is
+    /// heterogeneous (see module docs); falls back to
+    /// `std::thread::available_parallelism` otherwise.
     pub fn detect() -> CoreTopology {
+        if let Some(t) = Self::from_sysfs() {
+            if t.classes.len() >= 2 {
+                return t;
+            }
+        }
         let n = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
         Self::homogeneous(n)
     }
 
-    /// A homogeneous topology for one device profile (e.g. 4×A53).
+    /// Parse the host's `/sys/devices/system/cpu` capacity/frequency hints
+    /// into a topology with real core IDs. `None` when the tree is absent
+    /// (non-Linux, sandboxed container).
+    pub fn from_sysfs() -> Option<CoreTopology> {
+        Self::from_sysfs_root(Path::new("/sys/devices/system/cpu"))
+    }
+
+    /// [`CoreTopology::from_sysfs`] against an arbitrary root — the
+    /// testable core of the parser (tests synthesize fake `cpuN/` trees).
+    pub fn from_sysfs_root(root: &Path) -> Option<CoreTopology> {
+        let read_num = |p: &Path| -> Option<f64> {
+            std::fs::read_to_string(p).ok()?.trim().parse::<f64>().ok()
+        };
+        // (core id, speed metric): DVFS-normalized capacity when present
+        // (arm64 big.LITTLE exports it), max cpufreq otherwise, 1.0 when
+        // the kernel exports neither (metrics only compare within one
+        // host, so mixing units across hosts is not a concern).
+        let mut cores: Vec<(usize, f64)> = Vec::new();
+        for entry in std::fs::read_dir(root).ok()? {
+            // A single unreadable/racy entry must not abort the whole
+            // parse (the other cpuN dirs are still authoritative).
+            let Ok(entry) = entry else { continue };
+            let name = entry.file_name();
+            let name = name.to_string_lossy();
+            let Some(id) = name.strip_prefix("cpu").and_then(|s| s.parse::<usize>().ok())
+            else {
+                continue;
+            };
+            let dir = entry.path();
+            let metric = read_num(&dir.join("cpu_capacity"))
+                .or_else(|| read_num(&dir.join("cpufreq/cpuinfo_max_freq")))
+                .unwrap_or(1.0);
+            cores.push((id, metric.max(1e-9)));
+        }
+        if cores.is_empty() {
+            return None;
+        }
+        // Fastest first; cluster cores whose metric is within 5% of the
+        // class head (absorbs per-core turbo-bin jitter on homogeneous
+        // parts without merging genuinely different clusters).
+        cores.sort_by(|a, b| b.1.partial_cmp(&a.1).unwrap().then(a.0.cmp(&b.0)));
+        let fastest = cores[0].1;
+        let mut classes: Vec<CoreClass> = Vec::new();
+        for (id, metric) in cores {
+            match classes.last_mut() {
+                Some(class) if metric >= 0.95 * class.weight * fastest => {
+                    class.count += 1;
+                    class.core_ids.push(id);
+                }
+                _ => classes.push(CoreClass {
+                    name: format!("class{}", classes.len()),
+                    count: 1,
+                    // Normalized so the fastest class has weight 1.0.
+                    weight: metric / fastest,
+                    core_ids: vec![id],
+                }),
+            }
+        }
+        Some(CoreTopology { classes })
+    }
+
+    /// A homogeneous topology for one device profile (e.g. 4×A53). No core
+    /// IDs: this describes a *target* device, not the host, so pinning is
+    /// not meaningful.
     pub fn from_profile(p: &DeviceProfile, count: usize) -> CoreTopology {
         CoreTopology {
             classes: vec![CoreClass {
                 name: p.name.to_string(),
                 count: count.max(1),
                 weight: p.relative_speed(),
+                core_ids: Vec::new(),
             }],
         }
     }
 
     /// A big.LITTLE topology: big cluster first, weighted by each profile's
     /// relative speed (per §6's architectural discussion, the A15 sustains
-    /// roughly 3× the per-core throughput of the A7).
+    /// roughly 3× the per-core throughput of the A7). Core IDs are assigned
+    /// synthetically (big `0..n_big`, LITTLE after) so the topology can
+    /// also drive pinning experiments on a host with enough cores.
     pub fn big_little(
         big: &DeviceProfile,
         n_big: usize,
         little: &DeviceProfile,
         n_little: usize,
     ) -> CoreTopology {
+        let n_big = n_big.max(1);
+        let n_little = n_little.max(1);
         CoreTopology {
             classes: vec![
                 CoreClass {
                     name: big.name.to_string(),
-                    count: n_big.max(1),
+                    count: n_big,
                     weight: big.relative_speed(),
+                    core_ids: (0..n_big).collect(),
                 },
                 CoreClass {
                     name: little.name.to_string(),
-                    count: n_little.max(1),
+                    count: n_little,
                     weight: little.relative_speed(),
+                    core_ids: (n_big..n_big + n_little).collect(),
+                },
+            ],
+        }
+    }
+
+    /// A synthetic big.LITTLE topology with an explicit weight ratio —
+    /// the `bench --exp adaptive` harness uses this to hand the *static*
+    /// planner deliberately wrong weights on a homogeneous host (the
+    /// adaptive planner must recover from measurement). Core IDs are
+    /// `0..n_big` / `n_big..n_big+n_little`.
+    pub fn synthetic_big_little(n_big: usize, n_little: usize, ratio: f64) -> CoreTopology {
+        let n_big = n_big.max(1);
+        let n_little = n_little.max(1);
+        CoreTopology {
+            classes: vec![
+                CoreClass {
+                    name: "synthetic-big".into(),
+                    count: n_big,
+                    weight: ratio.max(1e-6),
+                    core_ids: (0..n_big).collect(),
+                },
+                CoreClass {
+                    name: "synthetic-little".into(),
+                    count: n_little,
+                    weight: 1.0,
+                    core_ids: (n_big..n_big + n_little).collect(),
                 },
             ],
         }
@@ -91,19 +232,32 @@ impl CoreTopology {
         self.classes.iter().map(|c| c.count).sum()
     }
 
-    /// Per-worker weights for a thread budget: workers are assigned to the
-    /// fastest cores first; a budget beyond the core count oversubscribes
-    /// round-robin (each extra worker reuses a class in order).
-    pub fn worker_weights(&self, budget: usize) -> Vec<f64> {
+    /// Per-worker placements for a thread budget: workers are assigned to
+    /// the fastest classes first; a budget beyond the core count
+    /// oversubscribes round-robin (each extra worker reuses a class in
+    /// order). This is the one definition both the shard weights
+    /// ([`CoreTopology::worker_weights`]) and the pool's pinning masks
+    /// derive from, so a weight always describes the class its worker is
+    /// pinned to.
+    pub fn worker_assignments(&self, budget: usize) -> Vec<WorkerAssignment> {
         let budget = budget.max(1);
-        let mut flat: Vec<f64> = Vec::new();
-        for class in &self.classes {
-            flat.extend(std::iter::repeat(class.weight).take(class.count));
+        let mut flat: Vec<WorkerAssignment> = Vec::new();
+        for (ci, class) in self.classes.iter().enumerate() {
+            flat.extend(
+                std::iter::repeat(WorkerAssignment { class: ci, weight: class.weight })
+                    .take(class.count),
+            );
         }
         if flat.is_empty() {
-            flat.push(1.0);
+            flat.push(WorkerAssignment { class: 0, weight: 1.0 });
         }
         (0..budget).map(|i| flat[i % flat.len()]).collect()
+    }
+
+    /// Per-worker weights for a thread budget (see
+    /// [`CoreTopology::worker_assignments`]).
+    pub fn worker_weights(&self, budget: usize) -> Vec<f64> {
+        self.worker_assignments(budget).into_iter().map(|a| a.weight).collect()
     }
 }
 
@@ -117,6 +271,7 @@ mod tests {
         assert_eq!(t.cores(), 4);
         let w = t.worker_weights(4);
         assert_eq!(w, vec![1.0; 4]);
+        assert_eq!(t.classes[0].core_ids, vec![0, 1, 2, 3]);
     }
 
     #[test]
@@ -131,16 +286,96 @@ mod tests {
         // The paper-derived ratio should be substantial but sane.
         let ratio = w[0] / w[4];
         assert!(ratio > 1.5 && ratio < 10.0, "ratio {ratio}");
+        // Assignments point workers at their class (and its pin mask).
+        let a = t.worker_assignments(8);
+        assert_eq!(a[0].class, 0);
+        assert_eq!(a[7].class, 1);
+        assert_eq!(t.classes[0].core_ids, vec![0, 1, 2, 3]);
+        assert_eq!(t.classes[1].core_ids, vec![4, 5, 6, 7]);
     }
 
     #[test]
     fn oversubscription_cycles() {
         let t = CoreTopology::homogeneous(2);
         assert_eq!(t.worker_weights(5).len(), 5);
+        let a = t.worker_assignments(5);
+        assert_eq!(a[0].class, a[2].class);
     }
 
     #[test]
     fn detect_nonzero() {
         assert!(CoreTopology::detect().cores() >= 1);
+    }
+
+    #[test]
+    fn synthetic_big_little_shape() {
+        let t = CoreTopology::synthetic_big_little(2, 2, 3.0);
+        assert_eq!(t.cores(), 4);
+        assert_eq!(t.classes[0].weight / t.classes[1].weight, 3.0);
+        assert_eq!(t.classes[1].core_ids, vec![2, 3]);
+    }
+
+    fn fake_sysfs(caps: &[(usize, Option<u64>, Option<u64>)]) -> std::path::PathBuf {
+        // Unique per content hash so parallel tests never collide.
+        let mut tag = 0u64;
+        for &(id, c, f) in caps {
+            tag = tag
+                .wrapping_mul(31)
+                .wrapping_add(id as u64)
+                .wrapping_add(c.unwrap_or(7))
+                .wrapping_add(f.unwrap_or(13));
+        }
+        let root = std::env::temp_dir().join(format!("arbors-sysfs-{tag:x}"));
+        let _ = std::fs::remove_dir_all(&root);
+        for &(id, cap, freq) in caps {
+            let dir = root.join(format!("cpu{id}"));
+            std::fs::create_dir_all(dir.join("cpufreq")).unwrap();
+            if let Some(c) = cap {
+                std::fs::write(dir.join("cpu_capacity"), format!("{c}\n")).unwrap();
+            }
+            if let Some(f) = freq {
+                std::fs::write(dir.join("cpufreq/cpuinfo_max_freq"), format!("{f}\n"))
+                    .unwrap();
+            }
+        }
+        root
+    }
+
+    #[test]
+    fn sysfs_parses_big_little_capacities() {
+        // A 2+2 part: capacity 1024 big cores (ids 2,3), 430 LITTLE (0,1).
+        let root = fake_sysfs(&[
+            (0, Some(430), Some(1_400_000)),
+            (1, Some(430), Some(1_400_000)),
+            (2, Some(1024), Some(2_000_000)),
+            (3, Some(1024), Some(2_000_000)),
+        ]);
+        let t = CoreTopology::from_sysfs_root(&root).unwrap();
+        assert_eq!(t.classes.len(), 2, "{t:?}");
+        assert_eq!(t.classes[0].core_ids, vec![2, 3], "big cluster first");
+        assert_eq!(t.classes[1].core_ids, vec![0, 1]);
+        assert_eq!(t.classes[0].weight, 1.0);
+        assert!((t.classes[1].weight - 430.0 / 1024.0).abs() < 1e-9);
+        let _ = std::fs::remove_dir_all(&root);
+    }
+
+    #[test]
+    fn sysfs_falls_back_to_max_freq_and_merges_jitter() {
+        // No cpu_capacity; max freqs within 5% collapse into one class.
+        let root = fake_sysfs(&[
+            (0, None, Some(3_000_000)),
+            (1, None, Some(2_950_000)),
+            (2, None, Some(3_000_000)),
+        ]);
+        let t = CoreTopology::from_sysfs_root(&root).unwrap();
+        assert_eq!(t.classes.len(), 1, "{t:?}");
+        assert_eq!(t.classes[0].count, 3);
+        let _ = std::fs::remove_dir_all(&root);
+    }
+
+    #[test]
+    fn sysfs_missing_root_is_none() {
+        let root = std::env::temp_dir().join("arbors-sysfs-definitely-missing");
+        assert!(CoreTopology::from_sysfs_root(&root).is_none());
     }
 }

@@ -12,10 +12,13 @@
 //!   executing the paper's ARM NEON algorithms on a bit-exact NEON
 //!   simulator ([`neon`]).
 //! * **Execution runtime** ([`exec`]): a sharded, work-stealing parallel
-//!   execution layer — a std-only worker pool, a big.LITTLE-aware shard
-//!   planner (row / tree / hybrid), and a [`exec::ParallelEngine`] wrapper
-//!   that multiplies any engine across cores while staying bit-exact with
-//!   the serial implementation under its default policy.
+//!   execution layer — a std-only worker pool with cluster pinning
+//!   ([`exec::affinity`]) and fairness-preserving batch claiming, a
+//!   big.LITTLE-aware shard planner (row / tree / hybrid) whose row-plan
+//!   weights adapt to measured shard throughput ([`exec::Feedback`]), and
+//!   a [`exec::ParallelEngine`] wrapper that multiplies any engine across
+//!   cores while staying bit-exact with the serial implementation under
+//!   its default policy — including across adaptive re-plans.
 //! * **Coordinator** ([`coordinator`]): a serving layer with dynamic
 //!   batching fused onto one server-shared work-stealing pool (request
 //!   chunks flow straight onto worker queues; per-deployment thread

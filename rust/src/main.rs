@@ -59,23 +59,31 @@ USAGE: arbors <command> [flags]
   train    --dataset <magic|adult|eeg|mnist|fashion|msn> | --data <csv>
            --trees N --leaves N --out model.json [--gbt] [--n N] [--seed S]
   predict  --model model.json --data in.csv --engine <NA|IE|QS|VQS|RS>
-           [--precision f32|i16|i8] [--quant] [--threads N] [--out scores.csv]
+           [--precision f32|i16|i8] [--quant] [--threads N] [--pin]
+           [--out scores.csv]
            (--quant is shorthand for --precision i16; int8 covers all five
            engines and auto-upgrades to per-tree leaf scales when the
-           global analysis would widen accumulation)
+           global analysis would widen accumulation; --pin anchors exec
+           workers to their topology cluster, Linux only)
   accuracy --model model.json --dataset <name> | --data <csv>
   select   --model model.json [--device a53|exynos] [--n N] [--threads N]
            [--precision f32|i16|i8]  (restricts the ranking to one tier;
-           --threads adds row-sharded candidates like RS×4t)
-  bench    --exp <table2|table3|table4|table5|fig1|fig2|ablation|tensor|scaling|int8|serving>
-           [--threads N] [--precision P]  (scale via ARBORS_SCALE=quick|default|full;
+           --threads adds row-sharded candidates like RS×4t; the qVQS+pt
+           candidate ranks i16 per-tree leaf scales)
+  bench    --exp <table2|table3|table4|table5|fig1|fig2|ablation|tensor|scaling|int8|serving|adaptive>
+           [--threads N] [--precision P] [--pin] [--smoke]
+           (scale via ARBORS_SCALE=quick|default|full;
            int8 -> results/int8_tiers.json; serving drives a 2-model server,
-           shared-pool vs separate-pools, -> results/serving.json)
+           shared-pool vs separate-pools, -> results/serving.json; adaptive
+           runs the static/adaptive x pinned/unpinned x claim-1/claim-k grid
+           on a synthetic big.LITTLE topology -> results/adaptive.json,
+           --smoke shrinks it for CI; --pin applies to scaling)
   serve    --dataset <name> [--engine E] [--precision P | --quant] [--requests N]
-           [--threads N] [--budget B] [--listen 127.0.0.1:7878]
+           [--threads N] [--budget B] [--pin] [--listen 127.0.0.1:7878]
            (--threads sizes the server-wide shared exec pool, default = host
            cores; --budget is this model's worker entitlement on it,
-           default = pool size; JSON-over-TCP via coordinator::net)
+           default = pool size; --pin pins pool workers to their cluster;
+           JSON-over-TCP via coordinator::net)
   datasets
 ";
 
@@ -180,10 +188,24 @@ fn cmd_predict(args: &Args) -> Result<()> {
         .context("bad --engine")?;
     let precision = parse_precision(args)?;
     let threads = args.usize_or("threads", 1)?;
+    let pin = args.switch("pin");
     let out_path = args.get("out").map(PathBuf::from);
     args.finish()?;
 
-    let engine = build_parallel(kind, precision, &model, None, threads)?;
+    // `--pin` places the exec workers onto the detected topology's
+    // clusters (graceful no-op off Linux / with refused masks). Wrapping
+    // the serial engine is exactly `build_parallel`'s Exact path, plus the
+    // pinned pool config.
+    let engine: Box<dyn arbors::engine::Engine> = if pin && threads > 1 {
+        let serial: std::sync::Arc<dyn arbors::engine::Engine> =
+            std::sync::Arc::from(arbors::engine::build(kind, precision, &model, None)?);
+        Box::new(arbors::exec::ParallelEngine::wrap_with(
+            serial,
+            arbors::exec::PoolConfig::new(threads).pin(true),
+        ))
+    } else {
+        build_parallel(kind, precision, &model, None, threads)?
+    };
     let scores = engine.predict(&ds.x);
     let preds = Forest::argmax(&scores, model.n_classes);
     if let Some(p) = out_path {
@@ -279,12 +301,18 @@ fn cmd_select(args: &Args) -> Result<()> {
 
 fn cmd_bench(args: &Args) -> Result<()> {
     let exp = args.get_or("exp", "table5");
-    // Only the scaling/serving experiments are threaded (and only scaling
-    // precision-filtered); leaving the flags unconsumed elsewhere makes
-    // `finish()` reject them loudly instead of silently ignoring them.
-    let threads =
-        if exp == "scaling" || exp == "serving" { args.usize_or("threads", 4)? } else { 1 };
+    // Only the scaling/serving/adaptive experiments are threaded (and only
+    // scaling precision-filtered and pinnable, only adaptive smokable);
+    // leaving the flags unconsumed elsewhere makes `finish()` reject them
+    // loudly instead of silently ignoring them.
+    let threads = if exp == "scaling" || exp == "serving" || exp == "adaptive" {
+        args.usize_or("threads", 4)?
+    } else {
+        1
+    };
     let precision = if exp == "scaling" { precision_flag(args)? } else { None };
+    let pin = if exp == "scaling" { args.switch("pin") } else { false };
+    let smoke = if exp == "adaptive" { args.switch("smoke") } else { false };
     args.finish()?;
     let s = scale();
     let text = match exp.as_str() {
@@ -297,9 +325,10 @@ fn cmd_bench(args: &Args) -> Result<()> {
         "fig2" => experiments::fig2(&s),
         "ablation" => experiments::ablation_rs(&s),
         "tensor" => experiments::tensor_vs_native(s.repeats)?,
-        "scaling" => experiments::scaling(&s, threads, precision),
+        "scaling" => experiments::scaling(&s, threads, precision, pin),
         "int8" => experiments::int8_tiers(&s),
         "serving" => experiments::serving(&s, threads),
+        "adaptive" => experiments::adaptive(&s, threads, smoke),
         other => bail!("unknown experiment '{other}'"),
     };
     experiments::archive(&exp, &text);
@@ -323,9 +352,13 @@ fn cmd_serve(args: &Args) -> Result<()> {
         None => std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1),
     };
     let budget = args.usize_opt("budget")?.unwrap_or(pool_size).max(1);
+    let pin = args.switch("pin");
     let listen = args.get("listen").map(str::to_string);
     args.finish()?;
     let config = BatchConfig { exec_threads: budget, ..BatchConfig::default() };
+    // `--pin` anchors the shared pool's workers to their topology cluster
+    // so the batcher's big.LITTLE-weighted chunks land where planned.
+    let pool_config = arbors::exec::PoolConfig::new(pool_size).pin(pin);
 
     if let Some(addr) = listen {
         // Network mode: train, deploy, and serve the JSON-over-TCP protocol
@@ -333,7 +366,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
         let (train, _test) = ds.split(0.2, 7);
         println!("training {trees} x {leaves} RF on {} ...", train.name);
         let forest = arbors::bench::harness::cached_rf(&train, trees, leaves);
-        let server = std::sync::Arc::new(Server::with_pool_size(pool_size));
+        let server = std::sync::Arc::new(Server::with_pool_config(pool_config.clone()));
         server.deploy("model", &forest, kind, precision, config)?;
         let net = arbors::coordinator::NetServer::start(server.clone(), &addr)?;
         println!(
@@ -349,11 +382,12 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let (train, test) = ds.split(0.2, 7);
     println!("training {} x {} RF on {} ...", trees, leaves, train.name);
     let forest = arbors::bench::harness::cached_rf(&train, trees, leaves);
-    let server = Server::with_pool_size(pool_size);
+    let server = Server::with_pool_config(pool_config);
     server.deploy("model", &forest, kind, precision, config)?;
     println!(
         "serving {n_requests} requests through the fused batcher \
-         (pool {pool_size} workers, budget {budget}) ..."
+         (pool {pool_size} workers, {} pinned, budget {budget}) ...",
+        server.pinned_workers()
     );
 
     let dep = server.model("model").unwrap();

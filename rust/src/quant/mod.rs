@@ -643,23 +643,43 @@ pub fn choose_scale_i8(f: &Forest, max_abs_feature: f32) -> QuantConfig<i8> {
 /// `engine::build`) adopt the per-tree config only when that exact
 /// per-model check says Native.
 pub fn choose_scale_i8_per_tree(f: &Forest, max_abs_feature: f32) -> QuantConfig<i8> {
+    QuantConfig::new(per_tree_accum_scale(f, max_abs_feature, i8::MAX as f32))
+}
+
+/// Choose an int16 *accumulation* scale for per-tree leaf scaling — the
+/// i16 tier's analogue of [`choose_scale_i8_per_tree`] (the shift
+/// machinery is tier-generic; only the build paths differed until ISSUE
+/// 5's satellite added this one).
+///
+/// The i16 tier never needs widening (its accumulator *is* the storage
+/// width), so the win here is different from i8's Native-restoration:
+/// dropping the leaf floor `M` and re-scaling each tree's leaves to the
+/// full 16-bit range preserves **leaf resolution** on forests with wildly
+/// uneven leaf magnitudes (boosted ensembles whose late trees carry tiny
+/// corrections that a single global scale floors away). Consumed by
+/// [`crate::engine::build_i16_per_tree`] and ranked by the selector as the
+/// `qVQS+pt` candidate.
+pub fn choose_scale_i16_per_tree(f: &Forest, max_abs_feature: f32) -> QuantConfig<i16> {
+    QuantConfig::new(per_tree_accum_scale(f, max_abs_feature, i16::MAX as f32))
+}
+
+/// Shared per-tree accumulation-scale bound: the largest scale whose
+/// worst-case sum of rounded per-tree terms fits `acc_max`, with no leaf
+/// floor (per-tree shifts preserve leaf resolution independently) and the
+/// threshold-representability ceiling (`acc_max` is also the storage max
+/// for both supported tiers).
+fn per_tree_accum_scale(f: &Forest, max_abs_feature: f32, acc_max: f32) -> f32 {
     let max_base: f32 = f.base_score.iter().map(|v| v.abs()).fold(0.0, f32::max);
     let mut worst: f32 = max_base;
     for t in &f.trees {
         worst += t.leaf_values.iter().map(|v| v.abs()).fold(0f32, f32::max);
     }
     let slack = (f.n_trees() + 1) as f32;
-    let bound_acc = if worst > 0.0 {
-        (i8::MAX as f32 - slack).max(1.0) / worst
-    } else {
-        f32::INFINITY
-    };
-    let bound_thresholds = if max_abs_feature > 0.0 {
-        i8::MAX as f32 / max_abs_feature
-    } else {
-        f32::INFINITY
-    };
-    QuantConfig::new(bound_acc.min(bound_thresholds).min(i8::MAX as f32).max(1.0))
+    let bound_acc =
+        if worst > 0.0 { (acc_max - slack).max(1.0) / worst } else { f32::INFINITY };
+    let bound_thresholds =
+        if max_abs_feature > 0.0 { acc_max / max_abs_feature } else { f32::INFINITY };
+    bound_acc.min(bound_thresholds).min(acc_max).max(1.0)
 }
 
 /// The i8 auto-quantization **policy** — the one place it is defined, used
@@ -1036,6 +1056,47 @@ mod tests {
         // Same floor as the global-scale sanity check (75%): rounding shifts
         // are never worse than flooring in expectation.
         assert!(agree >= 48, "only {agree}/64 argmax agreements");
+    }
+
+    /// The i16 per-tree analogue: no leaf floor, bounded by the i16
+    /// accumulator budget, and the reference prediction recovers leaf
+    /// resolution a global scale would floor away.
+    #[test]
+    fn choose_scale_i16_per_tree_bounds_and_resolution() {
+        // GBT-like: one huge-leaf tree forces the global accumulator bound
+        // down to ~32767/100 ≈ 327, flooring the tiny 1e-4 leaves of the
+        // other trees to 0. Per-tree shifts must recover them.
+        let mut leaves = vec![100.0f32];
+        leaves.extend(std::iter::repeat(1e-4).take(9));
+        let f = leaf_forest(vec![0.0], &leaves);
+        let cfg = choose_scale_i16_per_tree(&f, 1.0);
+        assert!(cfg.scale <= i16::MAX as f32);
+        let qf = QForest::<i16>::from_forest_per_tree(&f, cfg);
+        assert!(qf.worst_abs_acc() <= i16::MAX as i64, "worst {}", qf.worst_abs_acc());
+        assert!(qf.has_per_tree_scales());
+        // The tiny-leaf trees keep non-zero stored payloads...
+        for (t, &k) in qf.trees.iter().zip(&qf.tree_shifts).skip(1) {
+            assert!(k > 0, "tiny-leaf tree got no shift");
+            assert!(t.leaf_values[0] > 0, "tiny leaf floored to zero");
+        }
+        // ... whereas the global config at the same scale floors them.
+        let qf_global = QForest::<i16>::from_forest(&f, cfg);
+        assert!(qf_global.trees[1].leaf_values[0] == 0);
+        // Reference prediction stays finite and close to float.
+        let got = qf.predict_batch(&[0.5, 0.5]);
+        let want = f.predict_batch(&[0.5, 0.5]);
+        assert!((got[0] - want[0]).abs() / want[0] < 1e-2, "{got:?} vs {want:?}");
+    }
+
+    /// Both per-tree tiers come from one bound: i16's is the i8 one with a
+    /// wider budget, so it always admits a ≥ scale.
+    #[test]
+    fn per_tree_scale_tiers_are_ordered() {
+        let (f, _) = trained();
+        let s8 = choose_scale_i8_per_tree(&f, 1.0).scale;
+        let s16 = choose_scale_i16_per_tree(&f, 1.0).scale;
+        assert!(s16 >= s8, "i16 budget {s16} below i8 budget {s8}");
+        assert!(s16 <= i16::MAX as f32);
     }
 
     /// Zero-shift per-tree quantization is exactly global quantization: on

@@ -47,6 +47,7 @@ fn no_request_lost_or_cross_wired() {
                 workers: 3,
                 exec_threads: 1,
                 drain_timeout: None,
+                adaptive: true,
             },
         )
         .unwrap();
@@ -97,6 +98,7 @@ fn batches_form_under_burst() {
                 workers: 1,
                 exec_threads: 1,
                 drain_timeout: None,
+                adaptive: true,
             },
         )
         .unwrap();
@@ -188,9 +190,13 @@ fn auto_deploy_with_thread_budget() {
             BatchConfig { exec_threads: 2, ..BatchConfig::default() },
         )
         .unwrap();
-    // Every registered variant × thread budgets {1, 2}; derived from the
-    // engine registry (the literal here went stale as tiers grew).
-    assert_eq!(sel.candidates.len(), 2 * arbors::engine::all_variants_with_i8().len());
+    // Every registered variant (plus the i16 per-tree candidate) × thread
+    // budgets {1, 2}; derived from the engine registry (the literal here
+    // went stale as tiers grew).
+    assert_eq!(
+        sel.candidates.len(),
+        2 * (arbors::engine::all_variants_with_i8().len() + 1)
+    );
     assert!(sel.candidates.iter().any(|c| c.threads == 2));
     let got = server.predict("auto", ds.row(3).to_vec()).unwrap();
     assert_eq!(got.len(), f.n_classes);

@@ -82,6 +82,75 @@ fn parallel_engine_bit_identical_to_serial() {
     });
 }
 
+/// ISSUE 5 acceptance: adaptive re-planning under `ShardPolicy::Exact`
+/// stays bit-exact with serial **across re-plan boundaries** — the weight
+/// vector is re-derived from measured shard throughput every
+/// `REPLAN_EVERY_PREDICTS` calls (seeded here with a deliberately wrong
+/// 3:1 big.LITTLE prior so re-plans genuinely move the chunk boundaries),
+/// and every call before, at, and after each boundary must equal the
+/// serial engine bit-for-bit, for 1–8 threads.
+#[test]
+fn adaptive_replanning_stays_bit_exact_across_boundaries() {
+    use arbors::exec::parallel::REPLAN_EVERY_PREDICTS;
+    let mut rng = Pcg32::seeded(0xADA7);
+    let d = 6;
+    let n = 500;
+    let x: Vec<f32> = (0..n * d).map(|_| rng.f32()).collect();
+    let y: Vec<u32> = (0..n).map(|_| rng.below(2) as u32).collect();
+    let f = train_random_forest(
+        &x,
+        &y,
+        d,
+        2,
+        RfParams {
+            n_trees: 12,
+            tree: TreeParams { max_leaves: 16, min_samples_leaf: 2, mtry: 0 },
+            ..Default::default()
+        },
+    );
+    // Every variant at a shared overflow-safe scale; deliberately awkward
+    // batch (181 rows: prime, remainders at every lane width).
+    let cfg: QuantConfig = QuantConfig::new(4096.0f32.min(max_safe_scale(&f, 1.0)));
+    let xe = &x[..d * 181];
+    for (kind, precision) in all_variants() {
+        let serial = build(kind, precision, &f, Some(cfg)).unwrap();
+        let want = serial.predict(xe);
+        for threads in [1usize, 2, 3, 4, 8] {
+            let par = ParallelEngine::from_forest(
+                kind,
+                precision,
+                &f,
+                Some(cfg),
+                threads,
+                ShardPolicy::Exact,
+            )
+            .unwrap()
+            .with_topology(arbors::exec::CoreTopology::synthetic_big_little(
+                1,
+                threads.saturating_sub(1).max(1),
+                3.0,
+            ));
+            // 2½ re-plan windows: crosses at least two boundaries.
+            for call in 0..(2 * REPLAN_EVERY_PREDICTS + REPLAN_EVERY_PREDICTS / 2) {
+                assert_eq!(
+                    par.predict(xe),
+                    want,
+                    "{} × {threads}t diverged from serial at call {call} \
+                     (adaptive re-plan broke Exact)",
+                    variant_name(kind, precision),
+                );
+            }
+            if threads > 1 {
+                assert!(
+                    par.feedback().samples() > 0 || par.current_weights().len() <= 1,
+                    "{} × {threads}t: adaptive loop never observed a shard",
+                    variant_name(kind, precision),
+                );
+            }
+        }
+    }
+}
+
 /// The same engine pipeline through the explicit `ParallelEngine` API with a
 /// big.LITTLE topology: weighted (uneven) chunks must not break exactness.
 #[test]

@@ -131,6 +131,7 @@ fn fused_bit_exact_and_paired_across_tiers_pools_deployments() {
                 // Budgets both below and above the pool size.
                 exec_threads: 1 + (pool_size + mi) % 4,
                 drain_timeout: None,
+                adaptive: true,
             };
             server.deploy(&format!("m{mi}"), &f, kind, precision, config).unwrap();
             // The serial reference builds the same engine the deployment
@@ -201,6 +202,7 @@ fn backpressure_keeps_replies_paired() {
                 workers: 1,
                 exec_threads: 2,
                 drain_timeout: None,
+                adaptive: true,
             },
         )
         .unwrap();
@@ -257,6 +259,7 @@ fn undeploy_sheds_queued_requests() {
                 workers: 1,
                 exec_threads: 2,
                 drain_timeout: None,
+                adaptive: true,
             },
         )
         .unwrap();

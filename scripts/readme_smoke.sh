@@ -29,11 +29,21 @@ test -s /tmp/preds.csv
 
 arbors select --model /tmp/model.json --device a53 --threads 2
 
+# --pin anchors exec workers to their topology cluster (graceful no-op
+# where the kernel refuses the mask).
 arbors serve --dataset magic --n 2000 --engine VQS --precision i8 \
-    --requests 2000 --threads 2
+    --requests 2000 --threads 2 --pin
+
+arbors predict --model /tmp/model.json --data /tmp/batch.csv --engine RS \
+    --threads 2 --pin --out /tmp/preds_pinned.csv
+test -s /tmp/preds_pinned.csv
 
 arbors bench --exp int8
 arbors bench --exp scaling --threads 2
 arbors bench --exp serving --threads 2
+# The adaptive-execution grid (static/adaptive × pinned/unpinned ×
+# claim-1/claim-k) on a synthetic big.LITTLE topology; --smoke sizes it
+# for CI while still crossing re-plan boundaries.
+arbors bench --exp adaptive --threads 2 --smoke
 
 echo "readme smoke: OK"

@@ -1,0 +1,5 @@
+window.BENCHMARK_DATA = {
+  "entries": {},
+  "lastUpdate": 0,
+  "repoUrl": ""
+}

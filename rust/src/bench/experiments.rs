@@ -1102,6 +1102,240 @@ pub fn adaptive(scale: &Scale, threads: usize, smoke: bool) -> String {
     out
 }
 
+// ---------------------------------------------------------------------------
+// Extra H — observability (ISSUE 6)
+// ---------------------------------------------------------------------------
+
+/// Extra H1: the perf-history smoke grid. A handful of fast, stable series
+/// — µs/instance for the headline engine tiers plus serving throughput and
+/// tail latency through the fused batcher — appended to `data_path` in
+/// github-action-benchmark format (`crate::obs::bench_data`). CI's
+/// bench-history job runs this on every push to `main` against the tracked
+/// `dev/bench/data.js`; `bench --gate` then compares PRs against the
+/// rolling median.
+pub fn smoke(scale: &Scale, data_path: &std::path::Path) -> anyhow::Result<String> {
+    use crate::coordinator::{BatchConfig, Server};
+    use crate::obs::bench_data::{self, BenchRecord};
+    use crate::util::Summary;
+    use std::time::Duration;
+
+    let ds = DatasetId::Magic.generate(DatasetId::Magic.default_n(), 0xD5 ^ 64);
+    let (train, _) = ds.split(0.2, 7);
+    let f = super::harness::cached_rf(&train, scale.cls_trees, 64);
+    let x = eval_batch(&ds, scale.eval_n);
+    let mut records = Vec::new();
+
+    // Engine latencies: one series per headline tier (float, int16, int8).
+    let tiers = [
+        (EngineKind::Rs, Precision::F32),
+        (EngineKind::Vqs, Precision::F32),
+        (EngineKind::Rs, Precision::I16),
+        (EngineKind::Vqs, Precision::I8),
+    ];
+    for (kind, precision) in tiers {
+        let Some(e) = build_engine_arc(kind, precision, &f) else { continue };
+        let runs: Vec<f64> = (0..scale.repeats.max(3))
+            .map(|_| time_per_instance(e.as_ref(), &x, 1))
+            .collect();
+        let s = Summary::of(&runs);
+        records.push(BenchRecord::new(
+            &format!("magic/{}", variant_name(kind, precision)),
+            s.mean,
+            s.std,
+            "µs/instance",
+        ));
+    }
+
+    // Serving throughput (a `/s` unit, so the gate also covers the
+    // bigger-is-better direction) and tail latency via one deployment.
+    {
+        let server = Server::with_pool_size(2);
+        let cfg = BatchConfig {
+            max_batch: 64,
+            max_delay: Duration::from_micros(300),
+            queue_cap: 65_536,
+            workers: 1,
+            exec_threads: 2,
+            drain_timeout: None,
+            adaptive: true,
+        };
+        server.deploy("smoke", &f, EngineKind::Vqs, Precision::I16, cfg)?;
+        let dep = server.model("smoke").expect("deployed");
+        let n_req = (scale.eval_n * 4).max(256);
+        let sw = crate::util::Stopwatch::start();
+        let mut inflight = Vec::with_capacity(64);
+        for i in 0..n_req {
+            if let Ok(rx) = dep.batcher.submit(ds.row(i % ds.n).to_vec()) {
+                inflight.push(rx);
+            }
+            if inflight.len() >= 64 {
+                for rx in inflight.drain(..) {
+                    let _ = rx.recv();
+                }
+            }
+        }
+        for rx in inflight.drain(..) {
+            let _ = rx.recv();
+        }
+        let rps = n_req as f64 / (sw.micros() / 1e6).max(1e-9);
+        let lat = dep.batcher.metrics.latency_summary();
+        records.push(BenchRecord::new("serving/throughput", rps, 0.0, "req/s"));
+        records.push(BenchRecord::new("serving/p99_latency", lat.p99, lat.std, "µs/req"));
+    }
+
+    bench_data::append(data_path, "smoke", &records)?;
+    let mut out = String::new();
+    out.push_str(&format!(
+        "Perf-history smoke grid (scale={}) appended to {}\n\n",
+        scale.name,
+        data_path.display()
+    ));
+    let mut tw = TableWriter::new(vec![24, 14, 14]);
+    tw.row_str(&["series", "value", "unit"]);
+    tw.sep();
+    for r in &records {
+        tw.row(&[r.name.clone(), format!("{:.3}", r.value), r.unit.clone()]);
+    }
+    out.push_str(&tw.finish());
+    out.push_str("\nrun `arbors bench --gate` to check these against the rolling median\n");
+    Ok(out)
+}
+
+/// Extra H2: the observability overhead harness (ISSUE 6 acceptance: with
+/// tracing *disabled* the serving path must stay within ~2% of the
+/// uninstrumented baseline — every span site collapses to one relaxed
+/// atomic load). Drives the same closed-loop serving workload twice,
+/// tracing off then on, and reports both throughputs, the enabled-tracing
+/// overhead, and how many spans the enabled run recorded.
+pub fn obs(scale: &Scale, threads: usize) -> String {
+    use crate::coordinator::{BatchConfig, Server};
+    use crate::obs::span;
+    use std::time::Duration;
+
+    let threads = threads.max(2);
+    let ds = DatasetId::Magic.generate(DatasetId::Magic.default_n(), 0xD5 ^ 64);
+    let (train, _) = ds.split(0.2, 7);
+    let f = super::harness::cached_rf(&train, scale.cls_trees, 64);
+    let server = Server::with_pool_size(threads);
+    let cfg = BatchConfig {
+        max_batch: 64,
+        max_delay: Duration::from_micros(300),
+        queue_cap: 65_536,
+        workers: 1,
+        exec_threads: threads,
+        drain_timeout: None,
+        adaptive: true,
+    };
+    server.deploy("obs", &f, EngineKind::Vqs, Precision::I16, cfg).expect("deploy");
+    let dep = server.model("obs").expect("deployed");
+    let n_req = (scale.eval_n * 8).max(512);
+
+    let drive = |n: usize| -> f64 {
+        let sw = crate::util::Stopwatch::start();
+        let mut inflight = Vec::with_capacity(64);
+        for i in 0..n {
+            if let Ok(rx) = dep.batcher.submit(ds.row(i % ds.n).to_vec()) {
+                inflight.push(rx);
+            }
+            if inflight.len() >= 64 {
+                for rx in inflight.drain(..) {
+                    let _ = rx.recv();
+                }
+            }
+        }
+        for rx in inflight.drain(..) {
+            let _ = rx.recv();
+        }
+        n as f64 / (sw.micros() / 1e6).max(1e-9)
+    };
+
+    span::set_enabled(false);
+    let _ = drive(n_req / 4); // warmup
+    let off_rps = drive(n_req);
+    span::set_enabled(true);
+    span::clear();
+    let on_rps = drive(n_req);
+    let spans_recorded: usize = span::snapshot().iter().map(|(_, s)| s.len()).sum();
+    span::set_enabled(false);
+    span::clear();
+
+    let overhead_pct = (off_rps / on_rps.max(1e-9) - 1.0) * 100.0;
+    format!(
+        "Observability overhead harness (scale={}, {threads}-worker pool, {n_req} requests)\n\
+         closed-loop serving through the fused batcher, VQS i16\n\n\
+         tracing off: {off_rps:.0} req/s  (the production configuration)\n\
+         tracing on:  {on_rps:.0} req/s  ({spans_recorded} spans recorded, rings cap at {})\n\
+         enabled-tracing overhead: {overhead_pct:+.1}%\n\n\
+         budget: with tracing disabled every span site is one relaxed atomic\n\
+         load, so the off configuration *is* the pre-instrumentation serving\n\
+         path (DESIGN.md §8 overhead contract).\n",
+        scale.name,
+        crate::obs::span::RING_CAP,
+    )
+}
+
+/// Extra H3: engine micro-profile — the `neon::trace` op counters wired
+/// into the obs export. For every engine tier in the registry
+/// ([`crate::engine::all_variants_with_i8`]; nothing hard-coded) reports
+/// SIMD-ops/row, branches/row and total ops/row alongside measured host
+/// µs/instance; machine-readable JSON (one key per
+/// [`crate::neon::OpTrace`] counter) to `results/engine_micro.json`.
+pub fn engine_micro(scale: &Scale) -> String {
+    use crate::util::Json;
+
+    let ds = DatasetId::Magic.generate(DatasetId::Magic.default_n(), 0xD5 ^ 64);
+    let (train, _) = ds.split(0.2, 7);
+    let f = super::harness::cached_rf(&train, scale.cls_trees, 64);
+    let x = eval_batch(&ds, scale.eval_n);
+    let n = x.len() / ds.d;
+    let trace_n = n.clamp(1, 128);
+
+    let mut out = String::new();
+    out.push_str(&format!(
+        "Engine micro-profile (scale={}, dataset=magic, RF {} trees x 64 leaves)\n\
+         dynamic op counts per row from count_ops traces; host µs/instance measured\n\n",
+        scale.name, scale.cls_trees
+    ));
+    let mut tw = TableWriter::new(vec![8, 10, 12, 12, 12]);
+    tw.row_str(&["engine", "µs/inst", "simd/row", "branch/row", "total/row"]);
+    tw.sep();
+    let mut records = Vec::new();
+    for (kind, precision) in crate::engine::all_variants_with_i8() {
+        let Some(e) = build_engine_arc(kind, precision, &f) else { continue };
+        let us = time_per_instance(e.as_ref(), &x, scale.repeats);
+        let trace = e.count_ops(&x[..trace_n * ds.d]);
+        let per_row = |v: u64| v as f64 / trace_n as f64;
+        tw.row(&[
+            variant_name(kind, precision),
+            format!("{us:.2}"),
+            format!("{:.0}", per_row(trace.simd_ops())),
+            format!("{:.0}", per_row(trace.branch)),
+            format!("{:.0}", per_row(trace.total_ops())),
+        ]);
+        let mut jr = Json::obj();
+        jr.set("engine", Json::Str(variant_name(kind, precision)));
+        jr.set("us_per_instance", Json::Num(us));
+        // Every raw counter, named by the trace's own counter list.
+        for (name, v) in trace.counters() {
+            jr.set(name, Json::Num(per_row(v)));
+        }
+        jr.set("simd_ops_per_row", Json::Num(per_row(trace.simd_ops())));
+        jr.set("total_ops_per_row", Json::Num(per_row(trace.total_ops())));
+        records.push(jr);
+    }
+    out.push_str(&tw.finish());
+    let report = Json::from_pairs(vec![
+        ("experiment", Json::Str("engine_micro".to_string())),
+        ("scale", Json::Str(scale.name.to_string())),
+        ("dataset", Json::Str("magic".to_string())),
+        ("trace_rows", Json::Num(trace_n as f64)),
+        ("results", Json::Arr(records)),
+    ]);
+    archive_json("engine_micro", &report);
+    out.push_str("\narchived JSON: results/engine_micro.json\n");
+    out
+}
+
 /// Argmax accuracy of a score matrix against labels.
 fn accuracy_of(scores: &[f32], labels: &[u32], n_classes: usize) -> f64 {
     let preds = Forest::argmax(scores, n_classes);
@@ -1263,6 +1497,88 @@ mod tests {
                 .unwrap()
                 >= 1.0
         );
+    }
+
+    #[test]
+    fn smoke_appends_history_and_passes_gate() {
+        use crate::obs::bench_data;
+        let path = std::env::temp_dir()
+            .join(format!("arbors_smoke_exp_{}.js", std::process::id()));
+        let _ = std::fs::remove_file(&path);
+        let s = smoke(&quick(), &path).unwrap();
+        assert!(s.contains("serving/throughput"), "{s}");
+        assert!(s.contains("req/s"), "{s}");
+        let data = bench_data::load(&path);
+        bench_data::validate(&data).unwrap();
+        let entries = data.get("entries").and_then(|e| e.get("smoke")).unwrap();
+        assert_eq!(entries.as_arr().unwrap().len(), 1, "one entry per run");
+        // Engine-tier series are present alongside the serving ones.
+        let benches =
+            entries.as_arr().unwrap()[0].get("benches").and_then(|b| b.as_arr()).unwrap();
+        assert!(benches.len() >= 4, "engine tiers + serving series");
+        // A single entry has no baseline, so the gate passes deterministically.
+        bench_data::gate(&path).expect("fresh history must pass the gate");
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn obs_reports_overhead_and_restores_disabled() {
+        // Flips the process-global tracing state: serialize with the span
+        // tests via their shared lock.
+        let _g = crate::obs::span::TEST_LOCK.lock().unwrap_or_else(|e| e.into_inner());
+        let s = obs(&quick(), 2);
+        assert!(s.contains("tracing off"), "{s}");
+        assert!(s.contains("tracing on"), "{s}");
+        assert!(s.contains("overhead"), "{s}");
+        assert!(!crate::obs::span::enabled(), "harness must re-disable tracing");
+        // The enabled run actually recorded spans from the serving path.
+        let recorded: Vec<&str> = s.split_whitespace().collect();
+        let idx = recorded.iter().position(|w| *w == "spans").expect("span count printed");
+        let count: usize =
+            recorded[idx - 1].trim_start_matches('(').parse().expect("numeric span count");
+        assert!(count > 0, "enabled run must record spans:\n{s}");
+    }
+
+    #[test]
+    fn engine_micro_reports_simd_ops_per_tier() {
+        let s = engine_micro(&quick());
+        assert!(s.contains("simd/row"), "{s}");
+        assert!(s.contains("engine_micro.json"), "{s}");
+        let path = super::super::harness::results_dir().join("engine_micro.json");
+        let text = std::fs::read_to_string(&path).unwrap();
+        let j = crate::util::Json::parse(&text).unwrap();
+        let results = j.get("results").and_then(|v| v.as_arr()).unwrap();
+        // Every registry tier produced a row (the registry is the source of
+        // truth — no hard-coded variant count).
+        assert_eq!(results.len(), crate::engine::all_variants_with_i8().len());
+        let counter_names: Vec<&str> = crate::neon::OpTrace::default()
+            .counters()
+            .into_iter()
+            .map(|(n, _)| n)
+            .collect();
+        for r in results {
+            let name = r.get("engine").and_then(|v| v.as_str()).unwrap();
+            for k in &counter_names {
+                assert!(r.get(k).is_some(), "{name} missing counter {k}");
+            }
+            assert!(r.get("simd_ops_per_row").and_then(|v| v.as_f64()).is_some());
+            assert!(
+                r.get("total_ops_per_row").and_then(|v| v.as_f64()).unwrap() > 0.0,
+                "{name} must execute some ops"
+            );
+        }
+        // SIMD engines vectorize; the scalar naive float engine does not.
+        let simd_of = |n: &str| {
+            results
+                .iter()
+                .find(|r| r.get("engine").and_then(|v| v.as_str()) == Some(n))
+                .and_then(|r| r.get("simd_ops_per_row"))
+                .and_then(|v| v.as_f64())
+                .unwrap_or_else(|| panic!("engine {n} missing"))
+        };
+        assert!(simd_of("VQS") > 0.0, "VQS is a SIMD engine");
+        assert!(simd_of("RS") > 0.0, "RS is a SIMD engine");
+        assert_eq!(simd_of("NA"), 0.0, "naive float engine is scalar");
     }
 
     #[test]

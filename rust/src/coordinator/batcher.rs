@@ -58,6 +58,7 @@ use std::time::{Duration, Instant};
 
 use super::metrics::Metrics;
 use crate::engine::Engine;
+use crate::obs::span::{self, SpanTimer};
 use crate::exec::pool::{MutPtr, Task};
 use crate::exec::{
     chunk_weights, weighted_row_chunks_slotted, Feedback, PoolClient, SharedPool,
@@ -344,10 +345,16 @@ impl Batcher {
             )));
         }
         self.metrics.requests.fetch_add(1, Ordering::Relaxed);
+        // `admission` span: validation through enqueue (recorded only for
+        // accepted requests; an unfinished timer records nothing).
+        let admission = SpanTimer::start("admission");
         let (reply_tx, reply_rx) = mpsc::channel();
         let req = Request { x, enqueued: Instant::now(), reply: reply_tx };
         match self.tx.try_send(req) {
-            Ok(()) => Ok(reply_rx),
+            Ok(()) => {
+                admission.finish();
+                Ok(reply_rx)
+            }
             Err(TrySendError::Full(_)) => {
                 self.metrics.rejected.fetch_add(1, Ordering::Relaxed);
                 Err(ServeError::Overloaded)
@@ -371,6 +378,12 @@ impl Batcher {
     /// budget is 1 — diagnostics for the feedback loop).
     pub fn replans(&self) -> u64 {
         self.ctx.as_ref().map_or(0, |c| c.feedback.replans())
+    }
+
+    /// The feedback loop's current per-class EWMA throughputs (rows/µs;
+    /// `None` = class never observed). Introspection for `stats --json`.
+    pub fn class_rates(&self) -> Vec<Option<f64>> {
+        self.ctx.as_ref().map_or_else(Vec::new, |c| c.feedback.class_rates())
     }
 }
 
@@ -547,6 +560,9 @@ fn flush_batch(ctx: &Arc<FlushCtx>, mut batch: Vec<Request>) {
     }
     let d = ctx.engine.n_features();
     let c = ctx.engine.n_classes();
+    // `flush_plan` span: input concatenation plus chunk apportionment —
+    // everything between batch assembly and the tasks hitting the pool.
+    let plan_span = SpanTimer::start("flush_plan");
     // Drain (not copy) each row into the concatenated buffer: the rows are
     // never read again (replies only need `reply`/`enqueued`), and a batch
     // stays alive for its whole pool lifetime — no point pinning two
@@ -570,6 +586,10 @@ fn flush_batch(ctx: &Arc<FlushCtx>, mut batch: Vec<Request>) {
             planned
         }
     };
+    plan_span.finish_with("chunks", chunks.len() as f64);
+    // Stamped once per flush (tracing on only): each chunk task measures
+    // `queue_wait` — pool time between planning and its first instruction.
+    let planned_at = span::now_if_enabled();
     // Feedback only learns from genuinely sharded flushes (a lone chunk
     // measures batch arrival, not relative slot speed).
     let record = ctx.adaptive && chunks.len() > 1;
@@ -600,6 +620,14 @@ fn flush_batch(ctx: &Arc<FlushCtx>, mut batch: Vec<Request>) {
                 // the shutdown drain.
                 let guard = ChunkGuard { st };
                 let st = &guard.st;
+                if let Some(t0) = planned_at {
+                    span::record_between(
+                        "queue_wait",
+                        t0,
+                        Instant::now(),
+                        Some(("rows", (b - a) as f64)),
+                    );
+                }
                 // Batch execution time is measured from the *first chunk
                 // starting* to the last finishing — pool queue wait (which
                 // grows with multi-deployment contention) belongs to
@@ -619,8 +647,12 @@ fn flush_batch(ctx: &Arc<FlushCtx>, mut batch: Vec<Request>) {
                 // Same clock discipline as the selector's candidate timing
                 // (wall-clock Stopwatch around the engine call) so the
                 // feedback EWMA and the selector measure the same thing.
+                // `shard_exec` span: the engine call itself, tagged with
+                // the executing worker's topology class at record time.
+                let exec_span = SpanTimer::start("shard_exec");
                 let sw = crate::util::Stopwatch::start();
                 st.engine.predict_batch(xs, os);
+                exec_span.finish_with("rows", (b - a) as f64);
                 if let Some(f) = feedback {
                     f.record(slot, b - a, sw.micros());
                 }
@@ -694,6 +726,8 @@ impl FlushState {
             .map(|t0| now.duration_since(t0).as_secs_f64() * 1e6)
             .unwrap_or(0.0);
         self.metrics.record_batch(self.requests.len(), exec_us);
+        // `reply` span: pairing score rows back onto their requesters.
+        let reply_span = SpanTimer::start("reply");
         // SAFETY: every chunk writer finished (the final `remaining`
         // decrement, AcqRel, happens-before this call).
         let out = unsafe { &*self.out.get() };
@@ -702,6 +736,7 @@ impl FlushState {
                 .record_latency(now.duration_since(r.enqueued).as_secs_f64() * 1e6);
             let _ = r.reply.send(Ok(out[i * c..(i + 1) * c].to_vec()));
         }
+        reply_span.finish_with("rows", self.requests.len() as f64);
         self.inflight.end();
     }
 }
@@ -738,6 +773,9 @@ fn collect_loop(
                 Err(_) => return,
             }
         }
+        // `assemble` span: from the first queued request to the flush (or
+        // nothing, if shutdown sheds the batch instead).
+        let assemble_start = span::now_if_enabled();
         // Fill until max_batch or the oldest request's deadline.
         let deadline = pending[0].enqueued + max_delay;
         while pending.len() < max_batch {
@@ -762,6 +800,14 @@ fn collect_loop(
         if closing.load(Ordering::Acquire) {
             shed_all(&ctx, pending, &rx);
             return;
+        }
+        if let Some(t0) = assemble_start {
+            span::record_between(
+                "assemble",
+                t0,
+                Instant::now(),
+                Some(("rows", pending.len() as f64)),
+            );
         }
         flush_batch(&ctx, std::mem::take(&mut pending));
     }

@@ -1,10 +1,17 @@
-//! Serving metrics: counters and latency reservoirs, lock-cheap enough for
-//! the request path.
+//! Serving metrics: counters and latency histograms, lock-free on the
+//! request path.
+//!
+//! Latency and batch-time distributions are [`crate::obs::Histogram`]s —
+//! log-bucketed, atomic, fixed-memory — so quantiles stay accurate (~2%
+//! relative error, DESIGN.md §8) over unbounded runs. The previous capped
+//! `Vec` reservoirs silently stopped sampling after 65,536 entries, so a
+//! long-running server's p99 reflected only its startup; the regression
+//! test below pins the fix.
 
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::Mutex;
 
-use crate::util::Summary;
+use crate::obs::Histogram;
+use crate::util::{Json, Summary};
 
 /// Per-model serving metrics.
 #[derive(Debug, Default)]
@@ -25,13 +32,11 @@ pub struct Metrics {
     pub reaper_threads: AtomicU64,
     pub batches: AtomicU64,
     pub batched_instances: AtomicU64,
-    /// End-to-end request latencies in µs (bounded reservoir).
-    latencies_us: Mutex<Vec<f64>>,
+    /// End-to-end request latencies in µs.
+    latencies_us: Histogram,
     /// Batch execution times in µs.
-    batch_us: Mutex<Vec<f64>>,
+    batch_us: Histogram,
 }
-
-const RESERVOIR: usize = 65_536;
 
 impl Metrics {
     pub fn new() -> Metrics {
@@ -40,29 +45,23 @@ impl Metrics {
 
     pub fn record_latency(&self, us: f64) {
         self.completed.fetch_add(1, Ordering::Relaxed);
-        let mut l = self.latencies_us.lock().unwrap();
-        if l.len() < RESERVOIR {
-            l.push(us);
-        }
+        self.latencies_us.record(us);
     }
 
     pub fn record_batch(&self, size: usize, us: f64) {
         self.batches.fetch_add(1, Ordering::Relaxed);
         self.batched_instances.fetch_add(size as u64, Ordering::Relaxed);
-        let mut b = self.batch_us.lock().unwrap();
-        if b.len() < RESERVOIR {
-            b.push(us);
-        }
+        self.batch_us.record(us);
     }
 
     /// Latency summary (µs).
     pub fn latency_summary(&self) -> Summary {
-        Summary::of(&self.latencies_us.lock().unwrap())
+        self.latencies_us.summary()
     }
 
     /// Batch-execution summary (µs).
     pub fn batch_summary(&self) -> Summary {
-        Summary::of(&self.batch_us.lock().unwrap())
+        self.batch_us.summary()
     }
 
     /// Mean instances per executed batch.
@@ -73,6 +72,35 @@ impl Metrics {
         } else {
             self.batched_instances.load(Ordering::Relaxed) as f64 / b as f64
         }
+    }
+
+    /// Every exported counter as `(name, value)`, in a stable order — the
+    /// single source of truth for [`Metrics::to_json`] and for tests that
+    /// assert over the counter set (no re-typed field lists to go stale).
+    pub fn counters(&self) -> Vec<(&'static str, u64)> {
+        vec![
+            ("requests", self.requests.load(Ordering::Relaxed)),
+            ("completed", self.completed.load(Ordering::Relaxed)),
+            ("rejected", self.rejected.load(Ordering::Relaxed)),
+            ("shed_shutdown", self.shed_shutdown.load(Ordering::Relaxed)),
+            ("failed", self.failed.load(Ordering::Relaxed)),
+            ("reaper_threads", self.reaper_threads.load(Ordering::Relaxed)),
+            ("batches", self.batches.load(Ordering::Relaxed)),
+            ("batched_instances", self.batched_instances.load(Ordering::Relaxed)),
+        ]
+    }
+
+    /// Machine-readable snapshot: every counter plus latency/batch
+    /// summaries (consumed by `Server::stats_json` / `stats --json`).
+    pub fn to_json(&self) -> Json {
+        let mut j = Json::obj();
+        for (k, v) in self.counters() {
+            j.set(k, Json::Num(v as f64));
+        }
+        j.set("mean_batch_size", Json::Num(self.mean_batch_size()));
+        j.set("latency_us", summary_json(&self.latency_summary()));
+        j.set("batch_us", summary_json(&self.batch_summary()));
+        j
     }
 
     /// One-line human report.
@@ -96,6 +124,20 @@ impl Metrics {
     }
 }
 
+/// A [`Summary`] as a JSON object (shared by metrics and pool stats).
+pub fn summary_json(s: &Summary) -> Json {
+    Json::from_pairs(vec![
+        ("n", Json::Num(s.n as f64)),
+        ("mean", Json::Num(s.mean)),
+        ("std", Json::Num(s.std)),
+        ("min", Json::Num(s.min)),
+        ("median", Json::Num(s.median)),
+        ("p95", Json::Num(s.p95)),
+        ("p99", Json::Num(s.p99)),
+        ("max", Json::Num(s.max)),
+    ])
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -112,5 +154,55 @@ mod tests {
         let s = m.latency_summary();
         assert_eq!(s.n, 2);
         assert!(m.report().contains("batches=1"));
+    }
+
+    /// Satellite 1 regression: the old `Vec` reservoir stopped sampling at
+    /// 65,536 entries, so quantiles froze at startup values. With
+    /// histograms, samples recorded *past* that point must still move the
+    /// quantiles.
+    #[test]
+    fn quantiles_keep_moving_past_old_reservoir_size() {
+        const OLD_RESERVOIR: usize = 65_536;
+        let m = Metrics::new();
+        for _ in 0..OLD_RESERVOIR {
+            m.record_latency(100.0);
+        }
+        let before = m.latency_summary();
+        assert!((before.p95 - 100.0).abs() / 100.0 < 0.03, "p95 near 100, got {}", before.p95);
+        // The old implementation dropped every one of these on the floor.
+        for _ in 0..OLD_RESERVOIR {
+            m.record_latency(1000.0);
+        }
+        let after = m.latency_summary();
+        assert_eq!(after.n, 2 * OLD_RESERVOIR, "every sample must be counted");
+        assert!(
+            after.p95 > 900.0,
+            "p95 must reflect post-reservoir samples, got {}",
+            after.p95
+        );
+        assert_eq!(after.max, 1000.0, "max is tracked exactly");
+    }
+
+    /// Satellite 6: the JSON export is checked against the exported
+    /// counter list itself, not a re-typed copy of the field names.
+    #[test]
+    fn json_export_covers_every_counter() {
+        let m = Metrics::new();
+        m.record_latency(50.0);
+        m.record_batch(4, 75.0);
+        let j = m.to_json();
+        let counters = m.counters();
+        assert!(!counters.is_empty());
+        for (name, value) in counters {
+            let got = j.get(name).and_then(|v| v.as_f64());
+            assert_eq!(got, Some(value as f64), "to_json missing/mismatched counter {name}");
+        }
+        for k in ["mean_batch_size", "latency_us", "batch_us"] {
+            assert!(j.get(k).is_some(), "to_json missing {k}");
+        }
+        assert_eq!(
+            j.get("latency_us").and_then(|l| l.get("n")).and_then(|n| n.as_f64()),
+            Some(1.0)
+        );
     }
 }

@@ -48,6 +48,7 @@ use std::sync::{Arc, RwLock};
 use crate::engine::{build, build_i16_per_tree, Engine, EngineKind, Precision};
 use crate::exec::{PoolConfig, SharedPool};
 use crate::forest::{Forest, Task};
+use crate::util::Json;
 
 /// A deployed model: its engine's batcher plus descriptive metadata.
 pub struct Deployment {
@@ -259,6 +260,47 @@ impl Server {
         }
         out
     }
+
+    /// Machine-readable snapshot of the whole server (`stats --json`, wire
+    /// `{"cmd":"stats","mode":"json"}`): the shared pool's scheduler
+    /// counters (claims, steals, claim-size distribution, per-deployment
+    /// queue depth and vtime lag), server-wide reaper accounting, and per
+    /// model the full [`Metrics`] export plus the adaptive loop's re-plan
+    /// count and current per-class throughput weights.
+    pub fn stats_json(&self) -> Json {
+        let mut j = Json::obj();
+        j.set("pool", self.pool.stats().to_json());
+        j.set(
+            "reapers",
+            Json::from_pairs(vec![
+                ("live", Json::Num(batcher::reaper::live() as f64)),
+                ("spawned", Json::Num(batcher::reaper::spawned() as f64)),
+                ("refused", Json::Num(batcher::reaper::refused() as f64)),
+                ("cap", Json::Num(batcher::reaper::CAP as f64)),
+            ]),
+        );
+        let mut models = Json::obj();
+        for name in self.list() {
+            if let Some(dep) = self.model(&name) {
+                let mut m = dep.batcher.metrics.to_json();
+                m.set("engine", Json::Str(dep.engine_name.clone()));
+                m.set("replans", Json::Num(dep.batcher.replans() as f64));
+                m.set(
+                    "class_rates",
+                    Json::Arr(
+                        dep.batcher
+                            .class_rates()
+                            .into_iter()
+                            .map(|r| r.map_or(Json::Null, Json::Num))
+                            .collect(),
+                    ),
+                );
+                models.set(&name, m);
+            }
+        }
+        j.set("models", models);
+        j
+    }
 }
 
 #[cfg(test)]
@@ -367,6 +409,48 @@ mod tests {
         assert!(server.predict("a", ds.row(0).to_vec()).is_ok());
         assert!(server.predict("b", ds.row(1).to_vec()).is_ok());
         assert!(server.report().contains("pool: 2 workers"), "{}", server.report());
+    }
+
+    /// `stats --json` exposes the shared scheduler and every model's
+    /// metrics; the per-model key set is checked against the metrics
+    /// counter list itself (satellite 6 — no re-typed field names).
+    #[test]
+    fn stats_json_covers_pool_and_models() {
+        let (f, ds) = forest();
+        let server = Server::with_pool_size(2);
+        server
+            .deploy(
+                "m",
+                &f,
+                EngineKind::Rs,
+                Precision::F32,
+                BatchConfig { exec_threads: 2, ..BatchConfig::default() },
+            )
+            .unwrap();
+        for i in 0..8 {
+            server.predict("m", ds.row(i).to_vec()).unwrap();
+        }
+        let j = server.stats_json();
+        let pool = j.get("pool").expect("pool section");
+        assert_eq!(pool.get("threads").and_then(|v| v.as_usize()), Some(2));
+        assert!(pool.get("claims").and_then(|v| v.as_f64()).unwrap() >= 1.0);
+        assert_eq!(
+            pool.get("claim_sizes").and_then(|v| v.as_arr()).unwrap().len(),
+            crate::exec::CLAIM_SIZE_SLOTS
+        );
+        let deps = pool.get("deployments").and_then(|v| v.as_arr()).unwrap();
+        assert!(deps
+            .iter()
+            .any(|d| d.get("label").and_then(|l| l.as_str()) == Some("m")));
+        assert!(j.get("reapers").and_then(|r| r.get("cap")).is_some());
+        let m = j.get("models").and_then(|ms| ms.get("m")).expect("model section");
+        let dep = server.model("m").unwrap();
+        for (name, _) in dep.batcher.metrics.counters() {
+            assert!(m.get(name).is_some(), "stats_json missing counter {name}");
+        }
+        assert_eq!(m.get("completed").and_then(|v| v.as_usize()), Some(8));
+        assert!(m.get("class_rates").and_then(|v| v.as_arr()).is_some());
+        assert!(m.get("latency_us").and_then(|l| l.get("p99")).is_some());
     }
 
     #[test]

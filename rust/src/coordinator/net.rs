@@ -117,6 +117,15 @@ pub fn handle_line(server: &Server, line: &str) -> Json {
             Json::from_pairs(vec![("models", Json::Arr(models))])
         }
         Some("stats") => {
+            // Whole-server modes (no model lookup): `"mode":"json"` is the
+            // machine-readable scheduler + metrics snapshot, `"mode":"trace"`
+            // exports the span rings as chrome-tracing JSON.
+            match req.get("mode").and_then(|m| m.as_str()) {
+                Some("json") => return server.stats_json(),
+                Some("trace") => return crate::obs::span::export_chrome(),
+                Some(other) => return err(format!("unknown stats mode '{other}'")),
+                None => {}
+            }
             let name = req.get("model").and_then(|m| m.as_str()).unwrap_or("");
             match server.model(name) {
                 Some(dep) => Json::from_pairs(vec![
@@ -246,6 +255,17 @@ mod tests {
         assert!(r.get("report").is_some());
         assert!(r.get("pool_threads").and_then(|v| v.as_usize()).unwrap() >= 1);
         assert_eq!(r.get("pool_deployments").and_then(|v| v.as_usize()), Some(1));
+        // stats mode=json: whole-server machine-readable snapshot
+        let r = handle_line(&server, r#"{"cmd": "stats", "mode": "json"}"#);
+        assert!(r.get("pool").and_then(|p| p.get("claims")).is_some());
+        assert!(r.get("models").and_then(|m| m.get("magic")).is_some());
+        // stats mode=trace: chrome-tracing document (empty unless enabled)
+        let r = handle_line(&server, r#"{"cmd": "stats", "mode": "trace"}"#);
+        assert!(r.get("traceEvents").and_then(|e| e.as_arr()).is_some());
+        // unknown mode is an error
+        assert!(handle_line(&server, r#"{"cmd": "stats", "mode": "bogus"}"#)
+            .get("error")
+            .is_some());
         // predict via handle_line
         let req = Json::from_pairs(vec![
             ("model", Json::Str("magic".into())),

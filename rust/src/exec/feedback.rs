@@ -201,6 +201,13 @@ impl Feedback {
         self.samples.load(Ordering::Relaxed)
     }
 
+    /// Current per-class EWMA throughputs (rows/µs; `None` = class never
+    /// observed). Introspection only (`stats --json`): the planner keeps
+    /// using [`Feedback::replan`].
+    pub fn class_rates(&self) -> Vec<Option<f64>> {
+        self.slots.lock().unwrap().class_rate.clone()
+    }
+
     /// Successful weight re-derivations so far (diagnostics: proves the
     /// loop is actually closing).
     pub fn replans(&self) -> u64 {

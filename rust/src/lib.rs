@@ -26,6 +26,10 @@
 //!   engine auto-selector (serial and threaded candidates).
 //! * **Tensor path** ([`runtime`], `engine::tensor`): forests AOT-compiled
 //!   through JAX/Pallas to HLO and executed via PJRT.
+//! * **Observability** ([`obs`]): request→lane span tracing (chrome-trace
+//!   export), log-bucketed histogram metrics, pool/scheduler introspection
+//!   (`stats --json`), and per-commit perf history with a rolling-median
+//!   regression gate (`dev/bench/data.js`, `bench --gate`).
 //! * **Substrates**: forest trainers ([`forest::builder`]), synthetic
 //!   datasets ([`data`]), quantization ([`quant`]), per-device cost models
 //!   ([`device`]), rank statistics ([`stats`]), and utility layers built
@@ -42,6 +46,7 @@ pub mod neon;
 pub mod device;
 pub mod engine;
 pub mod exec;
+pub mod obs;
 pub mod quant;
 pub mod runtime;
 pub mod stats;

@@ -6,7 +6,9 @@
 //!   accuracy   accuracy of a model (float + quantized variants)
 //!   select     auto-select the best engine for a model (+ device profiles)
 //!   bench      regenerate a paper table/figure (table2..5, fig1, fig2, ...)
+//!              or run the perf-history smoke grid / regression gate
 //!   serve      demo serving loop with the dynamic batcher
+//!   trace      capture a chrome-tracing span trace of the serving path
 //!   datasets   list the built-in synthetic datasets
 //!
 //! Run `arbors <command> --help` semantics are documented in README.md.
@@ -38,6 +40,7 @@ fn main() {
         "select" => cmd_select(&args),
         "bench" => cmd_bench(&args),
         "serve" => cmd_serve(&args),
+        "trace" => cmd_trace(&args),
         "datasets" => cmd_datasets(&args),
         "" | "help" | "--help" => {
             print!("{}", USAGE);
@@ -70,20 +73,30 @@ USAGE: arbors <command> [flags]
            [--precision f32|i16|i8]  (restricts the ranking to one tier;
            --threads adds row-sharded candidates like RS×4t; the qVQS+pt
            candidate ranks i16 per-tree leaf scales)
-  bench    --exp <table2|table3|table4|table5|fig1|fig2|ablation|tensor|scaling|int8|serving|adaptive>
-           [--threads N] [--precision P] [--pin] [--smoke]
+  bench    --exp <table2|table3|table4|table5|fig1|fig2|ablation|tensor|scaling|int8|serving|adaptive|smoke|obs|engine_micro>
+           [--threads N] [--precision P] [--pin] [--smoke] | --gate
            (scale via ARBORS_SCALE=quick|default|full;
            int8 -> results/int8_tiers.json; serving drives a 2-model server,
            shared-pool vs separate-pools, -> results/serving.json; adaptive
            runs the static/adaptive x pinned/unpinned x claim-1/claim-k grid
            on a synthetic big.LITTLE topology -> results/adaptive.json,
-           --smoke shrinks it for CI; --pin applies to scaling)
+           --smoke shrinks it for CI; --pin applies to scaling;
+           smoke appends the perf-history grid to dev/bench/data.js, path
+           overridable via ARBORS_BENCH_DATA; obs measures serving
+           throughput with tracing off vs on; engine_micro reports
+           SIMD-ops/row per engine tier -> results/engine_micro.json;
+           --gate skips the experiment and fails on any series >15% worse
+           than its rolling median)
   serve    --dataset <name> [--engine E] [--precision P | --quant] [--requests N]
            [--threads N] [--budget B] [--pin] [--listen 127.0.0.1:7878]
            (--threads sizes the server-wide shared exec pool, default = host
            cores; --budget is this model's worker entitlement on it,
            default = pool size; --pin pins pool workers to their cluster;
-           JSON-over-TCP via coordinator::net)
+           JSON-over-TCP via coordinator::net; live introspection via
+           {\"cmd\":\"stats\",\"mode\":\"json\"} and {\"cmd\":\"stats\",\"mode\":\"trace\"})
+  trace    [--out trace.json] [--requests N] [--threads N]
+           (enables span tracing, drives an in-process serving workload,
+           writes chrome-tracing JSON for chrome://tracing / Perfetto)
   datasets
 ";
 
@@ -300,12 +313,23 @@ fn cmd_select(args: &Args) -> Result<()> {
 }
 
 fn cmd_bench(args: &Args) -> Result<()> {
+    // `--gate` short-circuits: no experiment, just the rolling-median
+    // regression check over the perf history (CI runs this on PRs).
+    if args.switch("gate") {
+        args.finish()?;
+        let path = arbors::obs::bench_data::default_path();
+        let report = arbors::obs::bench_data::gate(&path)?;
+        print!("perf gate over {}:\n{report}", path.display());
+        println!("perf gate: ok");
+        return Ok(());
+    }
     let exp = args.get_or("exp", "table5");
-    // Only the scaling/serving/adaptive experiments are threaded (and only
-    // scaling precision-filtered and pinnable, only adaptive smokable);
-    // leaving the flags unconsumed elsewhere makes `finish()` reject them
-    // loudly instead of silently ignoring them.
-    let threads = if exp == "scaling" || exp == "serving" || exp == "adaptive" {
+    // Only the scaling/serving/adaptive/obs experiments are threaded (and
+    // only scaling precision-filtered and pinnable, only adaptive
+    // smokable); leaving the flags unconsumed elsewhere makes `finish()`
+    // reject them loudly instead of silently ignoring them.
+    let threads = if exp == "scaling" || exp == "serving" || exp == "adaptive" || exp == "obs"
+    {
         args.usize_or("threads", 4)?
     } else {
         1
@@ -329,6 +353,9 @@ fn cmd_bench(args: &Args) -> Result<()> {
         "int8" => experiments::int8_tiers(&s),
         "serving" => experiments::serving(&s, threads),
         "adaptive" => experiments::adaptive(&s, threads, smoke),
+        "smoke" => experiments::smoke(&s, &arbors::obs::bench_data::default_path())?,
+        "obs" => experiments::obs(&s, threads),
+        "engine_micro" => experiments::engine_micro(&s),
         other => bail!("unknown experiment '{other}'"),
     };
     experiments::archive(&exp, &text);
@@ -419,6 +446,53 @@ fn cmd_serve(args: &Args) -> Result<()> {
         "batches executed: {} (mean size {:.1})",
         m.batches.load(Ordering::Relaxed),
         m.mean_batch_size()
+    );
+    Ok(())
+}
+
+fn cmd_trace(args: &Args) -> Result<()> {
+    let out = PathBuf::from(args.get_or("out", "trace.json"));
+    let n_requests = args.usize_or("requests", 2048)?;
+    let threads = args.usize_or("threads", 2)?.max(1);
+    args.finish()?;
+
+    // Enable span recording, drive a small in-process serving workload so
+    // every stage of the request→lane path emits spans, then export the
+    // rings as chrome-tracing JSON (DESIGN.md §8 span taxonomy).
+    let ds = DatasetId::Magic.generate(4000, 0xD5);
+    let (train, test) = ds.split(0.2, 7);
+    let forest = arbors::bench::harness::cached_rf(&train, 32, 32);
+    let server = Server::with_pool_size(threads);
+    let config = BatchConfig { exec_threads: threads, ..BatchConfig::default() };
+    server.deploy("model", &forest, EngineKind::Vqs, Precision::I16, config)?;
+    let dep = server.model("model").expect("deployed");
+
+    arbors::obs::span::set_enabled(true);
+    arbors::obs::span::clear();
+    let mut inflight = Vec::with_capacity(64);
+    for i in 0..n_requests {
+        if let Ok(rx) = dep.batcher.submit(test.row(i % test.n).to_vec()) {
+            inflight.push(rx);
+        }
+        if inflight.len() >= 64 {
+            for rx in inflight.drain(..) {
+                let _ = rx.recv();
+            }
+        }
+    }
+    for rx in inflight.drain(..) {
+        let _ = rx.recv();
+    }
+    let doc = arbors::obs::span::export_chrome();
+    arbors::obs::span::set_enabled(false);
+    std::fs::write(&out, doc.pretty())?;
+    let n_events = doc
+        .get("traceEvents")
+        .and_then(|e| e.as_arr())
+        .map_or(0, |a| a.len());
+    println!(
+        "wrote {n_events} trace events to {} — load in chrome://tracing or Perfetto",
+        out.display()
     );
     Ok(())
 }

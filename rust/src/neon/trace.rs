@@ -79,6 +79,31 @@ impl OpTrace {
         }
     }
 
+    /// 128-bit SIMD ops of any category — the headline "SIMD-ops" figure
+    /// `bench --exp engine_micro` reports per row.
+    pub fn simd_ops(&self) -> u64 {
+        self.neon_alu + self.neon_mul + self.neon_fp + self.neon_horiz
+    }
+
+    /// Every counter as `(name, value)` in declaration order — the single
+    /// source of truth for the obs export and for tests that assert over
+    /// the counter set (no re-typed field lists to go stale).
+    pub fn counters(&self) -> Vec<(&'static str, u64)> {
+        vec![
+            ("scalar_alu", self.scalar_alu),
+            ("scalar_fp", self.scalar_fp),
+            ("branch", self.branch),
+            ("branch_mispredictable", self.branch_mispredictable),
+            ("neon_alu", self.neon_alu),
+            ("neon_mul", self.neon_mul),
+            ("neon_fp", self.neon_fp),
+            ("neon_horiz", self.neon_horiz),
+            ("stream_load_bytes", self.stream_load_bytes),
+            ("random_loads", self.random_loads),
+            ("store_bytes", self.store_bytes),
+        ]
+    }
+
     /// Total dynamic instruction estimate (memory counted per 16B line-ish
     /// access).
     pub fn total_ops(&self) -> u64 {

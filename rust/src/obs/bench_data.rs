@@ -1,0 +1,413 @@
+//! Per-commit perf history (`dev/bench/data.js`) and the regression gate
+//! (DESIGN.md §8).
+//!
+//! History is stored in the `github-action-benchmark` format — a single
+//! tracked file assigning `window.BENCHMARK_DATA = {...}` so the same
+//! file doubles as data for a static dashboard page. `bench --exp smoke`
+//! (and any experiment that opts in) appends one entry per run, stamped
+//! with the current commit; `bench --gate` compares every series' newest
+//! value against the rolling median of its last [`GATE_WINDOW`] prior
+//! entries and fails on a >[`GATE_THRESHOLD`] regression. The direction
+//! of "worse" is inferred from the unit: throughput units (containing
+//! `/s`) regress downward, everything else (latency) regresses upward.
+//!
+//! The file location defaults to `<repo root>/dev/bench/data.js` and is
+//! overridable with `ARBORS_BENCH_DATA` (CI smoke runs point it at a temp
+//! path so doc checks never dirty the tracked history).
+
+use std::fmt::Write as _;
+use std::path::{Path, PathBuf};
+use std::process::Command;
+
+use crate::util::Json;
+
+/// History file location relative to the repository root.
+pub const DEFAULT_REL_PATH: &str = "dev/bench/data.js";
+
+/// Fail the gate when a series is worse than its rolling median by more
+/// than this fraction.
+pub const GATE_THRESHOLD: f64 = 0.15;
+
+/// Rolling-median window: prior entries considered per series.
+pub const GATE_WINDOW: usize = 5;
+
+const PREFIX: &str = "window.BENCHMARK_DATA = ";
+
+/// Required fields of every entry, entry `commit` object and bench record
+/// in the github-action-benchmark schema. Schema tests iterate these
+/// (satellite 6: assertions derive from the source of truth, not
+/// re-typed literals).
+pub const ENTRY_FIELDS: [&str; 4] = ["commit", "date", "tool", "benches"];
+pub const COMMIT_FIELDS: [&str; 8] =
+    ["author", "committer", "distinct", "id", "message", "timestamp", "tree_id", "url"];
+pub const BENCH_FIELDS: [&str; 4] = ["name", "value", "range", "unit"];
+
+/// One measurement appended to a series.
+#[derive(Debug, Clone)]
+pub struct BenchRecord {
+    pub name: String,
+    pub value: f64,
+    /// Spread (one standard deviation), rendered as `"± N"`.
+    pub range: f64,
+    pub unit: String,
+}
+
+impl BenchRecord {
+    pub fn new(name: &str, value: f64, range: f64, unit: &str) -> BenchRecord {
+        BenchRecord { name: name.to_string(), value, range, unit: unit.to_string() }
+    }
+}
+
+fn resolve_path(env_override: Option<String>) -> PathBuf {
+    if let Some(p) = env_override {
+        if !p.is_empty() {
+            return PathBuf::from(p);
+        }
+    }
+    match Path::new(env!("CARGO_MANIFEST_DIR")).parent() {
+        Some(root) => root.join(DEFAULT_REL_PATH),
+        None => PathBuf::from(DEFAULT_REL_PATH),
+    }
+}
+
+/// `ARBORS_BENCH_DATA` if set, else `<repo root>/dev/bench/data.js`.
+pub fn default_path() -> PathBuf {
+    resolve_path(std::env::var("ARBORS_BENCH_DATA").ok())
+}
+
+fn git(args: &[&str]) -> Option<String> {
+    let root = Path::new(env!("CARGO_MANIFEST_DIR")).parent()?.to_path_buf();
+    let out = Command::new("git").args(args).current_dir(root).output().ok()?;
+    if !out.status.success() {
+        return None;
+    }
+    let s = String::from_utf8(out.stdout).ok()?.trim().to_string();
+    if s.is_empty() {
+        None
+    } else {
+        Some(s)
+    }
+}
+
+fn or_unknown(v: Option<String>) -> String {
+    v.unwrap_or_else(|| "unknown".to_string())
+}
+
+/// Current HEAD in the schema's `commit` shape; every field degrades to
+/// `"unknown"` outside a git checkout.
+fn commit_json() -> Json {
+    let id = or_unknown(git(&["rev-parse", "HEAD"]));
+    let tree = or_unknown(git(&["rev-parse", "HEAD^{tree}"]));
+    let message = or_unknown(git(&["log", "-1", "--format=%s"]));
+    let timestamp = or_unknown(git(&["log", "-1", "--format=%cI"]));
+    let name = or_unknown(git(&["log", "-1", "--format=%an"]));
+    let email = or_unknown(git(&["log", "-1", "--format=%ae"]));
+    let who = |name: &str, email: &str| {
+        Json::from_pairs(vec![
+            ("email", Json::Str(email.to_string())),
+            ("name", Json::Str(name.to_string())),
+            ("username", Json::Str(name.to_string())),
+        ])
+    };
+    Json::from_pairs(vec![
+        ("author", who(&name, &email)),
+        ("committer", who(&name, &email)),
+        ("distinct", Json::Bool(true)),
+        ("id", Json::Str(id.clone())),
+        ("message", Json::Str(message)),
+        ("timestamp", Json::Str(timestamp)),
+        ("tree_id", Json::Str(tree)),
+        ("url", Json::Str(format!("local/commit/{id}"))),
+    ])
+}
+
+fn skeleton() -> Json {
+    Json::from_pairs(vec![
+        ("lastUpdate", Json::Num(0.0)),
+        ("repoUrl", Json::Str(String::new())),
+        ("entries", Json::obj()),
+    ])
+}
+
+/// Parse an existing history file; a missing or malformed file yields the
+/// empty skeleton (history is append-only and self-healing).
+pub fn load(path: &Path) -> Json {
+    let text = std::fs::read_to_string(path).unwrap_or_default();
+    let body = text.trim_start();
+    let body = body.strip_prefix(PREFIX).unwrap_or(body);
+    let body = body.trim_end().trim_end_matches(';');
+    Json::parse(body).unwrap_or_else(|_| skeleton())
+}
+
+fn now_epoch_ms() -> f64 {
+    std::time::SystemTime::now()
+        .duration_since(std::time::UNIX_EPOCH)
+        .map(|d| d.as_millis() as f64)
+        .unwrap_or(0.0)
+}
+
+/// Append one entry (current commit, all `benches`) to `entries[group]`
+/// and rewrite the file.
+pub fn append(path: &Path, group: &str, benches: &[BenchRecord]) -> anyhow::Result<()> {
+    let mut data = load(path);
+    let now = now_epoch_ms();
+    let bench_arr = Json::Arr(
+        benches
+            .iter()
+            .map(|b| {
+                Json::from_pairs(vec![
+                    ("name", Json::Str(b.name.clone())),
+                    ("value", Json::Num(b.value)),
+                    ("range", Json::Str(format!("± {:.4}", b.range))),
+                    ("unit", Json::Str(b.unit.clone())),
+                ])
+            })
+            .collect(),
+    );
+    let entry = Json::from_pairs(vec![
+        ("commit", commit_json()),
+        ("date", Json::Num(now)),
+        ("tool", Json::Str("cargo".to_string())),
+        ("benches", bench_arr),
+    ]);
+    let mut entries = data.get("entries").cloned().unwrap_or_else(Json::obj);
+    let mut series: Vec<Json> =
+        entries.get(group).and_then(|a| a.as_arr()).map(|s| s.to_vec()).unwrap_or_default();
+    series.push(entry);
+    entries.set(group, Json::Arr(series));
+    data.set("entries", entries);
+    data.set("lastUpdate", Json::Num(now));
+    if let Some(dir) = path.parent() {
+        std::fs::create_dir_all(dir)
+            .map_err(|e| anyhow::anyhow!("create {}: {e}", dir.display()))?;
+    }
+    std::fs::write(path, format!("{PREFIX}{}\n", data.pretty()))
+        .map_err(|e| anyhow::anyhow!("write {}: {e}", path.display()))?;
+    Ok(())
+}
+
+/// Validate a parsed history document against the schema (used by tests
+/// and `bench --gate`): top-level keys, and every entry / commit / bench
+/// field in [`ENTRY_FIELDS`] / [`COMMIT_FIELDS`] / [`BENCH_FIELDS`].
+pub fn validate(data: &Json) -> anyhow::Result<()> {
+    for k in ["lastUpdate", "repoUrl", "entries"] {
+        data.req(k).map_err(|e| anyhow::anyhow!("{e}"))?;
+    }
+    let entries = match data.get("entries") {
+        Some(Json::Obj(m)) => m,
+        _ => anyhow::bail!("'entries' must be an object"),
+    };
+    for (group, arr) in entries {
+        let arr = arr.as_arr().ok_or_else(|| anyhow::anyhow!("entries['{group}'] not an array"))?;
+        for entry in arr {
+            for k in ENTRY_FIELDS {
+                entry.req(k).map_err(|e| anyhow::anyhow!("entry in '{group}': {e}"))?;
+            }
+            let commit = entry.req("commit").map_err(|e| anyhow::anyhow!("{e}"))?;
+            for k in COMMIT_FIELDS {
+                commit.req(k).map_err(|e| anyhow::anyhow!("commit in '{group}': {e}"))?;
+            }
+            let benches = entry.get("benches").and_then(|b| b.as_arr()).unwrap_or(&[]);
+            for b in benches {
+                for k in BENCH_FIELDS {
+                    b.req(k).map_err(|e| anyhow::anyhow!("bench in '{group}': {e}"))?;
+                }
+            }
+        }
+    }
+    Ok(())
+}
+
+/// Is a bigger value better for this unit? Throughput units (`req/s`,
+/// `rows/s`, ...) regress downward; latency/size units regress upward.
+fn bigger_is_better(unit: &str) -> bool {
+    unit.contains("/s")
+}
+
+/// Run the rolling-median regression gate over the history at `path`.
+///
+/// Returns the per-series report; `Err` lists every series whose newest
+/// value is more than [`GATE_THRESHOLD`] worse than the median of its up
+/// to [`GATE_WINDOW`] prior entries. Series with fewer than 2 entries
+/// pass (no baseline yet).
+pub fn gate(path: &Path) -> anyhow::Result<String> {
+    let data = load(path);
+    validate(&data)?;
+    let entries = match data.get("entries") {
+        Some(Json::Obj(m)) => m,
+        _ => return Ok("perf gate: no history\n".to_string()),
+    };
+    let mut report = String::new();
+    let mut failures: Vec<String> = Vec::new();
+    for (group, arr) in entries {
+        let arr = arr.as_arr().unwrap_or(&[]);
+        // series name -> (values in commit order, unit)
+        let mut series: std::collections::BTreeMap<String, (Vec<f64>, String)> =
+            std::collections::BTreeMap::new();
+        for entry in arr {
+            for b in entry.get("benches").and_then(|b| b.as_arr()).unwrap_or(&[]) {
+                let name = b.get("name").and_then(|n| n.as_str()).unwrap_or("?").to_string();
+                let value = b.get("value").and_then(|v| v.as_f64()).unwrap_or(0.0);
+                let unit = b.get("unit").and_then(|u| u.as_str()).unwrap_or("").to_string();
+                let slot = series.entry(name).or_insert_with(|| (Vec::new(), unit.clone()));
+                slot.0.push(value);
+            }
+        }
+        for (name, (values, unit)) in &series {
+            if values.len() < 2 {
+                let _ = writeln!(report, "  {group}/{name}: {} entry(s), no baseline", values.len());
+                continue;
+            }
+            let last = *values.last().expect("len >= 2");
+            let prior = &values[..values.len() - 1];
+            let window = &prior[prior.len().saturating_sub(GATE_WINDOW)..];
+            let mut sorted = window.to_vec();
+            sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+            let baseline = crate::util::percentile(&sorted, 0.5);
+            if baseline <= 0.0 {
+                let _ = writeln!(report, "  {group}/{name}: baseline <= 0, skipped");
+                continue;
+            }
+            let regression = if bigger_is_better(unit) {
+                (baseline - last) / baseline
+            } else {
+                (last - baseline) / baseline
+            };
+            let verdict = if regression > GATE_THRESHOLD { "FAIL" } else { "ok" };
+            let _ = writeln!(
+                report,
+                "  {group}/{name}: last {last:.4} {unit} vs median({}) {baseline:.4} \
+                 — {:+.1}% {verdict}",
+                window.len(),
+                regression * 100.0,
+            );
+            if regression > GATE_THRESHOLD {
+                failures.push(format!(
+                    "{group}/{name} regressed {:.1}% (> {:.0}%)",
+                    regression * 100.0,
+                    GATE_THRESHOLD * 100.0
+                ));
+            }
+        }
+    }
+    if failures.is_empty() {
+        Ok(report)
+    } else {
+        anyhow::bail!("perf gate failed:\n  {}\n{report}", failures.join("\n  "))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmp(name: &str) -> PathBuf {
+        let p = std::env::temp_dir().join(format!("arbors_bench_{}_{}.js", name, std::process::id()));
+        let _ = std::fs::remove_file(&p);
+        p
+    }
+
+    #[test]
+    fn append_roundtrips_and_validates_schema() {
+        let path = tmp("roundtrip");
+        let recs = [
+            BenchRecord::new("serving/shared", 12_345.6, 10.0, "req/s"),
+            BenchRecord::new("lat/p99", 880.0, 5.0, "µs/req"),
+        ];
+        append(&path, "smoke", &recs).unwrap();
+        append(&path, "smoke", &recs).unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        assert!(text.starts_with(PREFIX), "data.js must assign window.BENCHMARK_DATA");
+        let data = load(&path);
+        // Satellite 6: schema assertions iterate the exported field lists.
+        validate(&data).unwrap();
+        let smoke = data.get("entries").and_then(|e| e.get("smoke")).unwrap();
+        assert_eq!(smoke.as_arr().unwrap().len(), 2);
+        assert!(data.get("lastUpdate").and_then(|l| l.as_f64()).unwrap() > 0.0);
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn missing_or_garbage_file_loads_as_skeleton() {
+        let path = tmp("skeleton");
+        let data = load(&path);
+        validate(&data).unwrap();
+        std::fs::write(&path, "not json at all").unwrap();
+        let data = load(&path);
+        validate(&data).unwrap();
+        let _ = std::fs::remove_file(&path);
+    }
+
+    fn write_history(path: &Path, series: &[(&str, &str, &[f64])]) {
+        // Minimal-but-schema-complete history: one entry per index, each
+        // carrying every series' i-th value.
+        let n = series.iter().map(|(_, _, v)| v.len()).max().unwrap_or(0);
+        let mut arr = Vec::new();
+        for i in 0..n {
+            let benches: Vec<Json> = series
+                .iter()
+                .filter(|(_, _, v)| i < v.len())
+                .map(|(name, unit, v)| {
+                    Json::from_pairs(vec![
+                        ("name", Json::Str(name.to_string())),
+                        ("value", Json::Num(v[i])),
+                        ("range", Json::Str("± 0".to_string())),
+                        ("unit", Json::Str(unit.to_string())),
+                    ])
+                })
+                .collect();
+            arr.push(Json::from_pairs(vec![
+                ("commit", commit_json()),
+                ("date", Json::Num(i as f64)),
+                ("tool", Json::Str("cargo".to_string())),
+                ("benches", Json::Arr(benches)),
+            ]));
+        }
+        let mut entries = Json::obj();
+        entries.set("smoke", Json::Arr(arr));
+        let mut data = skeleton();
+        data.set("entries", entries);
+        std::fs::write(path, format!("{PREFIX}{}\n", data.pretty())).unwrap();
+    }
+
+    /// Acceptance: the gate demonstrably fails on a synthetic 20%
+    /// regression and passes within-noise drift, in both unit directions.
+    #[test]
+    fn gate_fails_synthetic_regression_and_passes_noise() {
+        let path = tmp("gate");
+        // Latency series (smaller better): 20% up = regression.
+        write_history(&path, &[("lat", "µs/req", &[100.0, 100.0, 100.0, 100.0, 100.0, 120.0][..])]);
+        assert!(gate(&path).is_err(), "20% latency regression must fail");
+        write_history(&path, &[("lat", "µs/req", &[100.0, 100.0, 100.0, 100.0, 100.0, 103.0][..])]);
+        gate(&path).expect("3% drift must pass");
+        // Throughput series (bigger better): 20% down = regression.
+        write_history(&path, &[("thr", "req/s", &[100.0, 100.0, 100.0, 100.0, 100.0, 80.0][..])]);
+        assert!(gate(&path).is_err(), "20% throughput drop must fail");
+        write_history(&path, &[("thr", "req/s", &[100.0, 100.0, 100.0, 100.0, 100.0, 120.0][..])]);
+        gate(&path).expect("throughput improvement must pass");
+        // A single entry has no baseline: always passes.
+        write_history(&path, &[("new", "µs/req", &[42.0][..])]);
+        gate(&path).expect("single entry must pass");
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn gate_median_absorbs_one_outlier() {
+        let path = tmp("median");
+        // One bad historical run must not poison the baseline (mean would).
+        write_history(
+            &path,
+            &[("lat", "µs/req", &[100.0, 100.0, 500.0, 100.0, 100.0, 105.0][..])],
+        );
+        gate(&path).expect("median baseline must absorb the outlier");
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn resolve_path_prefers_env_override() {
+        assert_eq!(resolve_path(Some("/tmp/x.js".to_string())), PathBuf::from("/tmp/x.js"));
+        let def = resolve_path(None);
+        assert!(def.ends_with(DEFAULT_REL_PATH), "default must end with {DEFAULT_REL_PATH}");
+        assert_eq!(resolve_path(Some(String::new())), def, "empty override is ignored");
+    }
+}

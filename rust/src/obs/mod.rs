@@ -1,0 +1,23 @@
+//! Observability: stage tracing, histogram metrics and perf history
+//! (DESIGN.md §8).
+//!
+//! Three std-only pieces wired through the request→SIMD-lane path:
+//!
+//! * [`span`] — per-thread ring-buffer span recording for the serving
+//!   pipeline (admission → assemble → flush_plan → queue_wait → claim →
+//!   shard_exec → reply), class-tagged on pool workers and exportable as
+//!   chrome-tracing JSON. Off by default; disabled cost is one atomic
+//!   load per span site.
+//! * [`hist`] — log-bucketed atomic histograms (~2% relative error,
+//!   mergeable, fixed memory) backing `coordinator::Metrics` and the pool
+//!   counters, replacing the old capped `Vec` reservoirs.
+//! * [`bench_data`] — append-only per-commit perf history in
+//!   `github-action-benchmark` format (`dev/bench/data.js`) plus the
+//!   rolling-median regression gate behind `bench --gate`.
+
+pub mod bench_data;
+pub mod hist;
+pub mod span;
+
+pub use hist::Histogram;
+pub use span::SpanTimer;

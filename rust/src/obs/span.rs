@@ -1,0 +1,341 @@
+//! Per-thread ring-buffer span tracing for the request→lane path
+//! (DESIGN.md §8).
+//!
+//! Each thread that records spans owns a fixed-capacity ring (drop-oldest
+//! at [`RING_CAP`]), registered once in a process-wide registry so an
+//! exporter can walk every ring without stopping the world. The hot path
+//! is deliberately boring:
+//!
+//! * **Disabled** (the default): [`SpanTimer::start`] is one relaxed
+//!   atomic load and returns an inert timer — no clock read, no lock, no
+//!   allocation. This is the overhead budget the serving path pays per
+//!   span site.
+//! * **Enabled**: start reads the monotonic clock; finish takes the
+//!   thread-local ring's (uncontended) mutex and writes one fixed-size
+//!   record into preallocated storage. Nothing allocates after the ring's
+//!   one-time creation.
+//!
+//! Spans recorded on a pool worker thread are tagged with the worker's
+//! topology class ([`crate::exec::current_worker_class`]), so a trace
+//! shows *which cluster* executed each shard. Export is chrome-tracing
+//! JSON (`chrome://tracing`, Perfetto): `arbors trace --out trace.json`
+//! or the wire command `{"cmd":"stats","mode":"trace"}`.
+//!
+//! The span taxonomy the coordinator emits is documented in DESIGN.md §8:
+//! `admission`, `assemble`, `flush_plan`, `queue_wait`, `claim`,
+//! `shard_exec`, `reply`.
+
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::Instant;
+
+use crate::util::Json;
+
+/// Per-thread ring capacity (spans). At serving rates of ~10k spans/s per
+/// thread this holds a few hundred milliseconds of history — enough for a
+/// trace snapshot — in ~256 KiB per thread.
+pub const RING_CAP: usize = 4096;
+
+static ENABLED: AtomicBool = AtomicBool::new(false);
+
+/// Every ring ever registered, labelled with its thread's name. Entries
+/// are never removed (a dead thread's ring simply stops growing); rings
+/// are only created while tracing is enabled, so an untraced process
+/// registers nothing.
+static REGISTRY: Mutex<Vec<(String, Arc<Mutex<Ring>>)>> = Mutex::new(Vec::new());
+
+thread_local! {
+    static LOCAL: Arc<Mutex<Ring>> = {
+        let name = std::thread::current().name().unwrap_or("unnamed").to_string();
+        let ring = Arc::new(Mutex::new(Ring::new()));
+        REGISTRY.lock().unwrap().push((name, ring.clone()));
+        ring
+    };
+}
+
+/// One completed span. `start` stays an [`Instant`]; the exporter rebases
+/// onto the earliest span it sees, so recording never needs a global
+/// epoch.
+#[derive(Clone, Debug)]
+pub struct Span {
+    pub name: &'static str,
+    pub start: Instant,
+    pub dur_us: f64,
+    /// Topology class of the pool worker that recorded the span, if any
+    /// (captured from [`crate::exec::current_worker_class`] at record
+    /// time).
+    pub class: Option<usize>,
+    /// One optional numeric payload, e.g. `("rows", 64.0)`.
+    pub arg: Option<(&'static str, f64)>,
+}
+
+struct Ring {
+    spans: Vec<Span>,
+    /// Oldest element (= next overwrite position) once the ring is full.
+    head: usize,
+}
+
+impl Ring {
+    fn new() -> Ring {
+        Ring { spans: Vec::with_capacity(RING_CAP), head: 0 }
+    }
+
+    fn push(&mut self, s: Span) {
+        if self.spans.len() < RING_CAP {
+            self.spans.push(s);
+        } else {
+            self.spans[self.head] = s;
+            self.head = (self.head + 1) % RING_CAP;
+        }
+    }
+
+    /// Contents oldest-first.
+    fn ordered(&self) -> Vec<Span> {
+        let mut out = Vec::with_capacity(self.spans.len());
+        out.extend_from_slice(&self.spans[self.head..]);
+        out.extend_from_slice(&self.spans[..self.head]);
+        out
+    }
+}
+
+/// Turn span recording on or off, process-wide.
+pub fn set_enabled(on: bool) {
+    ENABLED.store(on, Ordering::Relaxed);
+}
+
+/// Is span recording currently on?
+pub fn enabled() -> bool {
+    ENABLED.load(Ordering::Relaxed)
+}
+
+/// Empty every registered ring (rings stay registered).
+pub fn clear() {
+    for (_, ring) in REGISTRY.lock().unwrap().iter() {
+        let mut r = ring.lock().unwrap();
+        r.spans.clear();
+        r.head = 0;
+    }
+}
+
+/// `Some(Instant::now())` when tracing is enabled, else `None` — for call
+/// sites that stamp a time in one place and record the span in another
+/// (e.g. `queue_wait`, measured from flush planning to task start).
+#[inline]
+pub fn now_if_enabled() -> Option<Instant> {
+    if enabled() {
+        Some(Instant::now())
+    } else {
+        None
+    }
+}
+
+fn record(name: &'static str, start: Instant, dur_us: f64, arg: Option<(&'static str, f64)>) {
+    let class = crate::exec::current_worker_class().map(|(_, c)| c);
+    LOCAL.with(|ring| {
+        ring.lock().unwrap().push(Span { name, start, dur_us, class, arg });
+    });
+}
+
+/// Record a span between two explicit instants (tracing must be enabled —
+/// pair with [`now_if_enabled`]).
+pub fn record_between(
+    name: &'static str,
+    start: Instant,
+    end: Instant,
+    arg: Option<(&'static str, f64)>,
+) {
+    if enabled() {
+        record(name, start, end.saturating_duration_since(start).as_secs_f64() * 1e6, arg);
+    }
+}
+
+/// Scoped span timer. `start` is free when tracing is off (one atomic
+/// load); an unfinished timer records nothing.
+pub struct SpanTimer(Option<(&'static str, Instant)>);
+
+impl SpanTimer {
+    #[inline]
+    pub fn start(name: &'static str) -> SpanTimer {
+        if ENABLED.load(Ordering::Relaxed) {
+            SpanTimer(Some((name, Instant::now())))
+        } else {
+            SpanTimer(None)
+        }
+    }
+
+    /// End the span and record it.
+    #[inline]
+    pub fn finish(self) {
+        self.finish_opt(None);
+    }
+
+    /// End the span with one numeric payload.
+    #[inline]
+    pub fn finish_with(self, key: &'static str, v: f64) {
+        self.finish_opt(Some((key, v)));
+    }
+
+    fn finish_opt(self, arg: Option<(&'static str, f64)>) {
+        if let Some((name, t0)) = self.0 {
+            record(name, t0, t0.elapsed().as_secs_f64() * 1e6, arg);
+        }
+    }
+}
+
+/// Snapshot every ring: `(thread name, spans oldest-first)`.
+pub fn snapshot() -> Vec<(String, Vec<Span>)> {
+    REGISTRY
+        .lock()
+        .unwrap()
+        .iter()
+        .map(|(name, ring)| (name.clone(), ring.lock().unwrap().ordered()))
+        .collect()
+}
+
+/// Export every recorded span as a chrome-tracing JSON document
+/// (`{"traceEvents": [...]}`), loadable in `chrome://tracing` / Perfetto.
+/// Timestamps are rebased onto the earliest recorded span.
+pub fn export_chrome() -> Json {
+    let rings = snapshot();
+    let mut t0: Option<Instant> = None;
+    for (_, spans) in &rings {
+        for s in spans {
+            t0 = Some(match t0 {
+                Some(t) if t <= s.start => t,
+                _ => s.start,
+            });
+        }
+    }
+    let mut events = Vec::new();
+    for (tid, (tname, spans)) in rings.iter().enumerate() {
+        if spans.is_empty() {
+            continue;
+        }
+        events.push(Json::from_pairs(vec![
+            ("name", Json::Str("thread_name".to_string())),
+            ("ph", Json::Str("M".to_string())),
+            ("pid", Json::Num(0.0)),
+            ("tid", Json::Num(tid as f64)),
+            ("args", Json::from_pairs(vec![("name", Json::Str(tname.clone()))])),
+        ]));
+        for s in spans {
+            let base = t0.expect("t0 set: spans exist");
+            let ts = s.start.saturating_duration_since(base).as_secs_f64() * 1e6;
+            let mut args = Json::obj();
+            if let Some(c) = s.class {
+                args.set("class", Json::Num(c as f64));
+            }
+            if let Some((k, v)) = s.arg {
+                args.set(k, Json::Num(v));
+            }
+            events.push(Json::from_pairs(vec![
+                ("name", Json::Str(s.name.to_string())),
+                ("cat", Json::Str("arbors".to_string())),
+                ("ph", Json::Str("X".to_string())),
+                ("ts", Json::Num(ts)),
+                ("dur", Json::Num(s.dur_us)),
+                ("pid", Json::Num(0.0)),
+                ("tid", Json::Num(tid as f64)),
+                ("args", args),
+            ]));
+        }
+    }
+    Json::from_pairs(vec![("traceEvents", Json::Arr(events))])
+}
+
+/// Tracing state is process-global; every test that flips it (here and in
+/// `bench::experiments`) holds this lock so enable/clear/snapshot phases
+/// cannot interleave across the test binary.
+#[cfg(test)]
+pub(crate) static TEST_LOCK: Mutex<()> = Mutex::new(());
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::exec::SharedPool;
+
+    use super::TEST_LOCK as LOCK;
+
+    fn spans_named(name: &str) -> Vec<Span> {
+        snapshot().into_iter().flat_map(|(_, s)| s).filter(|s| s.name == name).collect()
+    }
+
+    #[test]
+    fn disabled_records_nothing() {
+        let _g = LOCK.lock().unwrap_or_else(|e| e.into_inner());
+        set_enabled(false);
+        clear();
+        SpanTimer::start("obs_test_disabled").finish();
+        record_between("obs_test_disabled", Instant::now(), Instant::now(), None);
+        assert!(now_if_enabled().is_none());
+        assert!(spans_named("obs_test_disabled").is_empty());
+    }
+
+    #[test]
+    fn ring_drops_oldest_on_overflow() {
+        let _g = LOCK.lock().unwrap_or_else(|e| e.into_inner());
+        set_enabled(true);
+        clear();
+        let extra = 10;
+        for i in 0..RING_CAP + extra {
+            SpanTimer::start("obs_test_overflow").finish_with("i", i as f64);
+        }
+        set_enabled(false);
+        let spans = spans_named("obs_test_overflow");
+        assert_eq!(spans.len(), RING_CAP, "ring must cap at RING_CAP");
+        // Drop-oldest: the survivors are the *last* RING_CAP records, in
+        // order.
+        for (j, s) in spans.iter().enumerate() {
+            assert_eq!(s.arg, Some(("i", (extra + j) as f64)));
+        }
+    }
+
+    #[test]
+    fn worker_spans_tagged_with_current_class() {
+        let _g = LOCK.lock().unwrap_or_else(|e| e.into_inner());
+        set_enabled(true);
+        clear();
+        let pool = SharedPool::new(1);
+        let client = SharedPool::register(&pool, "obs-span-test", 1);
+        let (tx, rx) = std::sync::mpsc::channel();
+        client.run(vec![Box::new(move || {
+            let expect = crate::exec::current_worker_class().map(|(_, c)| c);
+            SpanTimer::start("obs_test_class").finish();
+            tx.send(expect).unwrap();
+        })]);
+        let expect = rx.recv().unwrap();
+        set_enabled(false);
+        assert!(expect.is_some(), "task must run on a pool worker");
+        let spans = spans_named("obs_test_class");
+        assert_eq!(spans.len(), 1);
+        assert_eq!(spans[0].class, expect, "span class must match current_worker_class");
+        // Off-worker spans carry no class (this thread is not a worker).
+        assert_eq!(crate::exec::current_worker_class(), None);
+    }
+
+    #[test]
+    fn chrome_export_rebases_and_labels() {
+        let _g = LOCK.lock().unwrap_or_else(|e| e.into_inner());
+        set_enabled(true);
+        clear();
+        SpanTimer::start("obs_test_export").finish_with("rows", 3.0);
+        set_enabled(false);
+        let doc = export_chrome();
+        let events = doc.get("traceEvents").and_then(|e| e.as_arr()).unwrap();
+        let ev = events
+            .iter()
+            .find(|e| e.get("name").and_then(|n| n.as_str()) == Some("obs_test_export"))
+            .expect("exported span present");
+        assert_eq!(ev.get("ph").and_then(|p| p.as_str()), Some("X"));
+        assert!(ev.get("ts").and_then(|t| t.as_f64()).unwrap() >= 0.0);
+        assert!(ev.get("dur").and_then(|d| d.as_f64()).unwrap() >= 0.0);
+        assert_eq!(
+            ev.get("args").and_then(|a| a.get("rows")).and_then(|r| r.as_f64()),
+            Some(3.0)
+        );
+        // The metadata event names this ring's thread.
+        assert!(events
+            .iter()
+            .any(|e| e.get("ph").and_then(|p| p.as_str()) == Some("M")));
+    }
+}

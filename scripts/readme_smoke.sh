@@ -46,4 +46,19 @@ arbors bench --exp serving --threads 2
 # for CI while still crossing re-plan boundaries.
 arbors bench --exp adaptive --threads 2 --smoke
 
+# Observability (ISSUE 6): perf-history smoke grid + regression gate on a
+# throwaway history file (never the tracked dev/bench/data.js), the
+# tracing-overhead harness, the per-tier SIMD-op profile, and a span
+# trace capture.
+export ARBORS_BENCH_DATA=/tmp/bench_data.js
+rm -f /tmp/bench_data.js
+arbors bench --exp smoke
+arbors bench --gate
+unset ARBORS_BENCH_DATA
+arbors bench --exp obs --threads 2
+arbors bench --exp engine_micro
+arbors trace --out /tmp/trace.json --requests 512 --threads 2
+test -s /tmp/trace.json
+python3 -c "import json; d=json.load(open('/tmp/trace.json')); assert d['traceEvents'], 'empty trace'"
+
 echo "readme smoke: OK"

@@ -537,9 +537,15 @@ impl Inflight {
     /// finishes sees the claim in `FlushState::complete` and only releases
     /// its latch slot.
     fn abandon_stragglers(&self) {
-        let states = self.states.lock().unwrap();
-        for w in states.iter() {
-            let Some(st) = w.upgrade() else { continue };
+        // Snapshot the live states first: replying on a requester's channel
+        // can run arbitrary receiver-side code, and holding the registry
+        // lock across it would deadlock against a chunk completing (the
+        // audit's lock-span lint enforces this shape).
+        let live: Vec<Arc<FlushState>> = {
+            let states = self.states.lock().unwrap();
+            states.iter().filter_map(|w| w.upgrade()).collect()
+        };
+        for st in live {
             if st.replied.swap(true, Ordering::AcqRel) {
                 continue; // completed (or already abandoned) concurrently
             }
@@ -606,8 +612,9 @@ fn flush_batch(ctx: &Arc<FlushCtx>, mut batch: Vec<Request>) {
         exec_start: Mutex::new(None),
     });
     ctx.inflight.begin(&state);
-    // Base pointer taken once, pre-spawn, while this thread is the sole
-    // owner; tasks do raw offset writes into disjoint ranges.
+    // SAFETY: the base pointer is taken once, pre-spawn, while this thread
+    // is the sole owner of `out`; tasks do raw offset writes into disjoint
+    // `[a*c, b*c)` ranges and never read, so no aliasing write overlaps.
     let out_ptr = MutPtr(unsafe { (*state.out.get()).as_mut_ptr() });
     let tasks: Vec<Task> = chunks
         .into_iter()
@@ -711,9 +718,7 @@ impl FlushState {
             // A chunk panicked: these requests ran but their scores are
             // not trustworthy. They count as failures — not completions —
             // so stats cannot report a 100% success rate after a panic.
-            self.metrics
-                .failed
-                .fetch_add(self.requests.len() as u64, Ordering::Relaxed);
+            self.metrics.failed.fetch_add(self.requests.len() as u64, Ordering::Relaxed);
             for r in &self.requests {
                 let _ = r.reply.send(Err(ServeError::Internal));
             }
@@ -1248,5 +1253,65 @@ mod tests {
             let scores = r.recv().unwrap().unwrap();
             assert_eq!(&scores[..], &direct[i * ds.n_classes..(i + 1) * ds.n_classes]);
         }
+    }
+
+    /// Exhaustive interleavings of the reply-right claim: two chunk guards
+    /// dropping (the last one runs `FlushState::complete`) × the drain
+    /// deadline's `abandon_stragglers`, in every order
+    /// ([`crate::testing::sched::explore`] — the three steps are single
+    /// atomic swaps/decrements, so a schedule is a real interleaving).
+    /// Whatever the order: each requester hears back exactly once — a late
+    /// `Internal` beats a lost reply, a double reply is a protocol bug —
+    /// and the in-flight latch always returns to zero.
+    #[test]
+    fn reply_right_interleavings_answer_exactly_once() {
+        let (eng, ds) = engine();
+        let metrics = Arc::new(Metrics::new());
+        let inflight = Arc::new(Inflight {
+            count: Mutex::new(0),
+            idle: Condvar::new(),
+            states: Mutex::new(Vec::new()),
+        });
+        let c = eng.n_classes();
+        let schedules = crate::testing::explore(&[1, 1, 1], usize::MAX, |sched| {
+            let (txs, rxs): (Vec<_>, Vec<_>) = (0..2).map(|_| mpsc::channel()).unzip();
+            let requests: Vec<Request> = txs
+                .into_iter()
+                .map(|tx| Request {
+                    x: ds.row(0).to_vec(),
+                    enqueued: Instant::now(),
+                    reply: tx,
+                })
+                .collect();
+            let st = Arc::new(FlushState {
+                engine: eng.clone(),
+                metrics: metrics.clone(),
+                inflight: inflight.clone(),
+                x: Vec::new(),
+                out: UnsafeCell::new(vec![0f32; 2 * c]),
+                requests,
+                remaining: AtomicUsize::new(2),
+                failed: AtomicBool::new(false),
+                replied: AtomicBool::new(false),
+                exec_start: Mutex::new(None),
+            });
+            inflight.begin(&st);
+            let mut guards =
+                vec![Some(ChunkGuard { st: st.clone() }), Some(ChunkGuard { st: st.clone() })];
+            for &actor in sched {
+                match actor {
+                    0 | 1 => drop(guards[actor].take()),
+                    _ => inflight.abandon_stragglers(),
+                }
+            }
+            for rx in &rxs {
+                rx.recv_timeout(Duration::from_secs(5)).expect("a reply must arrive");
+                assert!(rx.try_recv().is_err(), "double reply under {sched:?}");
+            }
+            // Both guards dropped in every schedule, so the latch is back
+            // to zero (abandoning never releases the straggler's slot).
+            assert_eq!(*inflight.count.lock().unwrap(), 0, "latch leaked under {sched:?}");
+        });
+        assert_eq!(schedules, 6, "3 distinct single-step actors");
     }
 }

@@ -44,7 +44,10 @@ impl NetServer {
         let accept_thread = std::thread::Builder::new()
             .name("net-accept".into())
             .spawn(move || {
-                while !stop2.load(Ordering::Relaxed) {
+                // Acquire pairs with the Release stores in
+                // `shutdown`/`Drop`: the accept loop observes everything
+                // the stopping thread did before raising the flag.
+                while !stop2.load(Ordering::Acquire) {
                     match listener.accept() {
                         Ok((stream, _)) => {
                             let server = server.clone();
@@ -72,7 +75,8 @@ impl NetServer {
 
     /// Signal shutdown and join the accept loop.
     pub fn shutdown(mut self) {
-        self.stop.store(true, Ordering::Relaxed);
+        // Release pairs with the accept loop's Acquire load.
+        self.stop.store(true, Ordering::Release);
         if let Some(h) = self.accept_thread.take() {
             let _ = h.join();
         }
@@ -81,7 +85,8 @@ impl NetServer {
 
 impl Drop for NetServer {
     fn drop(&mut self) {
-        self.stop.store(true, Ordering::Relaxed);
+        // Release pairs with the accept loop's Acquire load.
+        self.stop.store(true, Ordering::Release);
         if let Some(h) = self.accept_thread.take() {
             let _ = h.join();
         }

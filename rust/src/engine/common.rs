@@ -272,6 +272,7 @@ mod tests {
     }
 
     #[test]
+    #[cfg_attr(miri, ignore)] // heavy: trains a forest; no unsafe for Miri to check
     fn thresholds_ascend_per_feature() {
         let (_, m) = model();
         for k in 0..m.n_features {
@@ -284,6 +285,7 @@ mod tests {
     }
 
     #[test]
+    #[cfg_attr(miri, ignore)] // heavy: trains a forest; no unsafe for Miri to check
     fn node_count_preserved() {
         let (f, m) = model();
         assert_eq!(m.thresholds.len(), f.n_nodes());
@@ -291,6 +293,7 @@ mod tests {
     }
 
     #[test]
+    #[cfg_attr(miri, ignore)] // heavy: trains a forest; no unsafe for Miri to check
     fn scalar_qs_on_lists_matches_tree_walk() {
         // Emulate Algorithm 1 directly on the prepared lists and check the
         // exit leaf against the tree oracle for a few instances.
@@ -317,6 +320,7 @@ mod tests {
     }
 
     #[test]
+    #[cfg_attr(miri, ignore)] // heavy: trains a forest; no unsafe for Miri to check
     fn leaf_rows_padded() {
         let (f, m) = model();
         assert_eq!(m.leaf_words, 32);
@@ -328,6 +332,7 @@ mod tests {
     }
 
     #[test]
+    #[cfg_attr(miri, ignore)] // heavy: trains a forest; no unsafe for Miri to check
     fn i16_model_buildable() {
         let (f, _) = model();
         let qf = crate::quant::QForest::from_forest(&f, crate::quant::QuantConfig::paper_default());
@@ -337,6 +342,7 @@ mod tests {
     }
 
     #[test]
+    #[cfg_attr(miri, ignore)] // heavy: trains a forest; no unsafe for Miri to check
     fn i8_model_buildable_and_half_the_payload() {
         let (f, _) = model();
         let qf16 =

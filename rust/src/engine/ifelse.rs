@@ -321,6 +321,7 @@ mod tests {
     }
 
     #[test]
+    #[cfg_attr(miri, ignore)] // heavy: trains a forest; no unsafe for Miri to check
     fn ie_matches_reference() {
         let (f, ds) = setup();
         let e = IfElseEngine::new(&f);
@@ -328,6 +329,7 @@ mod tests {
     }
 
     #[test]
+    #[cfg_attr(miri, ignore)] // heavy: trains a forest; no unsafe for Miri to check
     fn qie_matches_qforest() {
         let (f, ds) = setup();
         let qf = QForest::from_forest(&f, QuantConfig::paper_default());
@@ -337,6 +339,7 @@ mod tests {
     }
 
     #[test]
+    #[cfg_attr(miri, ignore)] // heavy: trains a forest; no unsafe for Miri to check
     fn q8ie_matches_qforest() {
         let (f, ds) = setup();
         let qf = QForest::<i8>::from_forest(&f, crate::quant::choose_scale_i8(&f, 1.0));
@@ -346,6 +349,7 @@ mod tests {
     }
 
     #[test]
+    #[cfg_attr(miri, ignore)] // heavy: trains a forest; no unsafe for Miri to check
     fn q8ie_per_tree_shifts_match_reference() {
         let (f, ds) = setup();
         let cfg = crate::quant::choose_scale_i8_per_tree(&f, 1.0);
@@ -355,6 +359,7 @@ mod tests {
     }
 
     #[test]
+    #[cfg_attr(miri, ignore)] // heavy: trains a forest; no unsafe for Miri to check
     fn ie_and_na_agree() {
         let (f, ds) = setup();
         let ie = IfElseEngine::new(&f);

@@ -359,6 +359,7 @@ mod tests {
     }
 
     #[test]
+    #[cfg_attr(miri, ignore)] // heavy: trains a forest; no unsafe for Miri to check
     fn i8_build_paths() {
         use crate::data::DatasetId;
         use crate::forest::builder::{train_random_forest, RfParams, TreeParams};

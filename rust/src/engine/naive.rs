@@ -339,6 +339,7 @@ mod tests {
     }
 
     #[test]
+    #[cfg_attr(miri, ignore)] // heavy: trains a forest; no unsafe for Miri to check
     fn na_matches_reference() {
         let (f, ds) = setup();
         let e = NaiveEngine::new(&f);
@@ -348,6 +349,7 @@ mod tests {
     }
 
     #[test]
+    #[cfg_attr(miri, ignore)] // heavy: trains a forest; no unsafe for Miri to check
     fn qna_matches_qforest_reference() {
         let (f, ds) = setup();
         let qf = QForest::from_forest(&f, QuantConfig::paper_default());
@@ -359,6 +361,7 @@ mod tests {
     }
 
     #[test]
+    #[cfg_attr(miri, ignore)] // heavy: trains a forest; no unsafe for Miri to check
     fn q8na_matches_qforest_reference() {
         let (f, ds) = setup();
         let qf = QForest::<i8>::from_forest(&f, crate::quant::choose_scale_i8(&f, 1.0));
@@ -368,6 +371,7 @@ mod tests {
     }
 
     #[test]
+    #[cfg_attr(miri, ignore)] // heavy: trains a forest; no unsafe for Miri to check
     fn trace_nonempty_and_scales() {
         let (f, ds) = setup();
         let e = NaiveEngine::new(&f);

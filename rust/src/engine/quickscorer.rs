@@ -268,6 +268,7 @@ mod tests {
     }
 
     #[test]
+    #[cfg_attr(miri, ignore)] // heavy: trains a forest; no unsafe for Miri to check
     fn qs_matches_reference_l32() {
         let (f, ds) = setup(32, 1);
         let e = QsEngine::new(&f);
@@ -275,6 +276,7 @@ mod tests {
     }
 
     #[test]
+    #[cfg_attr(miri, ignore)] // heavy: trains a forest; no unsafe for Miri to check
     fn qs_matches_reference_l64() {
         let (f, ds) = setup(64, 2);
         assert!(f.max_leaves() > 32, "want an L=64 forest");
@@ -283,6 +285,7 @@ mod tests {
     }
 
     #[test]
+    #[cfg_attr(miri, ignore)] // heavy: trains a forest; no unsafe for Miri to check
     fn qqs_matches_qforest() {
         let (f, ds) = setup(32, 3);
         let qf = QForest::from_forest(&f, QuantConfig::paper_default());
@@ -292,6 +295,7 @@ mod tests {
     }
 
     #[test]
+    #[cfg_attr(miri, ignore)] // heavy: trains a forest; no unsafe for Miri to check
     fn q8qs_matches_qforest() {
         for leaves in [32usize, 64] {
             let (f, ds) = setup(leaves, 7);
@@ -304,6 +308,7 @@ mod tests {
     }
 
     #[test]
+    #[cfg_attr(miri, ignore)] // heavy: trains a forest; no unsafe for Miri to check
     fn argmax_agreement_with_naive() {
         let (f, ds) = setup(64, 4);
         let e = QsEngine::new(&f);
@@ -313,6 +318,7 @@ mod tests {
     }
 
     #[test]
+    #[cfg_attr(miri, ignore)] // heavy: trains a forest; no unsafe for Miri to check
     fn trace_counts_reasonable() {
         let (f, ds) = setup(32, 5);
         let e = QsEngine::new(&f);

@@ -833,6 +833,7 @@ mod tests {
     }
 
     #[test]
+    #[cfg_attr(miri, ignore)] // heavy: trains a forest; no unsafe for Miri to check
     fn rs_matches_reference_l32() {
         let (f, ds) = setup(DatasetId::Magic, 32, 1, 150); // non-multiple of 16
         let e = RsEngine::new(&f);
@@ -841,6 +842,7 @@ mod tests {
     }
 
     #[test]
+    #[cfg_attr(miri, ignore)] // heavy: trains a forest; no unsafe for Miri to check
     fn rs_matches_reference_l64() {
         let (f, ds) = setup(DatasetId::Magic, 64, 2, 100);
         assert!(f.max_leaves() > 32);
@@ -850,6 +852,7 @@ mod tests {
     }
 
     #[test]
+    #[cfg_attr(miri, ignore)] // heavy: trains a forest; no unsafe for Miri to check
     fn rs_merging_on_adult() {
         // Binary features -> heavy merging. With few trees the effect is
         // smaller than the paper's 128-tree 12%, but must be clearly present.
@@ -864,6 +867,7 @@ mod tests {
     }
 
     #[test]
+    #[cfg_attr(miri, ignore)] // heavy: trains a forest; no unsafe for Miri to check
     fn qrs_matches_qforest_l32() {
         let (f, ds) = setup(DatasetId::Eeg, 32, 4, 77);
         let qf = QForest::from_forest(&f, QuantConfig::paper_default());
@@ -873,6 +877,7 @@ mod tests {
     }
 
     #[test]
+    #[cfg_attr(miri, ignore)] // heavy: trains a forest; no unsafe for Miri to check
     fn qrs_matches_qforest_l64() {
         let (f, ds) = setup(DatasetId::Magic, 64, 5, 49);
         let qf = QForest::from_forest(&f, QuantConfig::paper_default());
@@ -882,6 +887,7 @@ mod tests {
     }
 
     #[test]
+    #[cfg_attr(miri, ignore)] // heavy: trains a forest; no unsafe for Miri to check
     fn q8rs_matches_qforest_l32() {
         let (f, ds) = setup(DatasetId::Eeg, 32, 4, 77);
         let qf = QForest::<i8>::from_forest(&f, crate::quant::choose_scale_i8(&f, 1.0));
@@ -893,6 +899,7 @@ mod tests {
     }
 
     #[test]
+    #[cfg_attr(miri, ignore)] // heavy: trains a forest; no unsafe for Miri to check
     fn q8rs_matches_qforest_l64() {
         let (f, ds) = setup(DatasetId::Magic, 64, 5, 49);
         assert!(f.max_leaves() > 32);
@@ -903,6 +910,7 @@ mod tests {
     }
 
     #[test]
+    #[cfg_attr(miri, ignore)] // heavy: trains a forest; no unsafe for Miri to check
     fn q8rs_widened_mode_exact() {
         // Inflated leaves force the widened i8→i16 accumulation chain.
         let (mut f, ds) = setup(DatasetId::Magic, 32, 6, 64);
@@ -919,6 +927,7 @@ mod tests {
     }
 
     #[test]
+    #[cfg_attr(miri, ignore)] // heavy: trains a forest; no unsafe for Miri to check
     fn q8rs_per_tree_shifts_exact() {
         let (f, ds) = setup(DatasetId::Magic, 32, 7, 77);
         let cfg = crate::quant::choose_scale_i8_per_tree(&f, 1.0);
@@ -930,6 +939,7 @@ mod tests {
     }
 
     #[test]
+    #[cfg_attr(miri, ignore)] // heavy: trains a forest; no unsafe for Miri to check
     fn q8rs_merges_at_least_as_much_as_qrs() {
         // 8-bit thresholds collapse at least as hard as 16-bit ones, so
         // q8RS never keeps more merged groups than qRS.
@@ -977,6 +987,7 @@ mod tests {
     }
 
     #[test]
+    #[cfg_attr(miri, ignore)] // heavy: trains a forest; no unsafe for Miri to check
     fn trace_counts_present() {
         let (f, ds) = setup(DatasetId::Magic, 32, 6, 32);
         let e = RsEngine::new(&f);

@@ -874,6 +874,7 @@ mod tests {
     }
 
     #[test]
+    #[cfg_attr(miri, ignore)] // heavy: trains a forest; no unsafe for Miri to check
     fn vqs_matches_reference_l32() {
         let (f, ds) = setup(32, 1, 203); // non-multiple of 4: tests padding
         let e = VqsEngine::new(&f);
@@ -882,6 +883,7 @@ mod tests {
     }
 
     #[test]
+    #[cfg_attr(miri, ignore)] // heavy: trains a forest; no unsafe for Miri to check
     fn vqs_matches_reference_l64() {
         let (f, ds) = setup(64, 2, 120);
         assert!(f.max_leaves() > 32);
@@ -891,6 +893,7 @@ mod tests {
     }
 
     #[test]
+    #[cfg_attr(miri, ignore)] // heavy: trains a forest; no unsafe for Miri to check
     fn qvqs_matches_qforest_l32() {
         let (f, ds) = setup(32, 3, 101); // non-multiple of 8
         let qf = QForest::from_forest(&f, QuantConfig::paper_default());
@@ -900,6 +903,7 @@ mod tests {
     }
 
     #[test]
+    #[cfg_attr(miri, ignore)] // heavy: trains a forest; no unsafe for Miri to check
     fn qvqs_matches_qforest_l64() {
         let (f, ds) = setup(64, 4, 96);
         let qf = QForest::from_forest(&f, QuantConfig::paper_default());
@@ -909,6 +913,7 @@ mod tests {
     }
 
     #[test]
+    #[cfg_attr(miri, ignore)] // heavy: trains a forest; no unsafe for Miri to check
     fn single_instance_batch() {
         let (f, ds) = setup(32, 5, 40);
         let e = VqsEngine::new(&f);
@@ -918,6 +923,7 @@ mod tests {
     }
 
     #[test]
+    #[cfg_attr(miri, ignore)] // heavy: trains a forest; no unsafe for Miri to check
     fn traces_present() {
         let (f, ds) = setup(32, 6, 32);
         let e = VqsEngine::new(&f);
@@ -934,6 +940,7 @@ mod tests {
     }
 
     #[test]
+    #[cfg_attr(miri, ignore)] // heavy: trains a forest; no unsafe for Miri to check
     fn q8vqs_matches_qforest_l32() {
         let (f, ds) = setup(32, 8, 103); // non-multiple of 16: tests padding
         let qf = QForest::<i8>::from_forest(&f, crate::quant::choose_scale_i8(&f, 1.0));
@@ -945,6 +952,7 @@ mod tests {
     }
 
     #[test]
+    #[cfg_attr(miri, ignore)] // heavy: trains a forest; no unsafe for Miri to check
     fn q8vqs_matches_qforest_l64() {
         // Seed 2 matches vqs_matches_reference_l64: known to exceed 32 leaves.
         let (f, ds) = setup(64, 2, 96);
@@ -956,6 +964,7 @@ mod tests {
     }
 
     #[test]
+    #[cfg_attr(miri, ignore)] // heavy: trains a forest; no unsafe for Miri to check
     fn q8vqs_native_mode_on_rf() {
         // RF worst-case sum ≈ 1.0: the tier picks the native i8 accumulator.
         let (f, ds) = setup(32, 11, 40);
@@ -967,6 +976,7 @@ mod tests {
     }
 
     #[test]
+    #[cfg_attr(miri, ignore)] // heavy: trains a forest; no unsafe for Miri to check
     fn q8vqs_widened_mode_exact() {
         // Inflate leaf magnitudes so the worst-case sum cannot fit an i8
         // accumulator at a leaf-preserving scale: the engine must widen
@@ -986,6 +996,7 @@ mod tests {
     }
 
     #[test]
+    #[cfg_attr(miri, ignore)] // heavy: trains a forest; no unsafe for Miri to check
     fn q8vqs_per_tree_shifts_exact() {
         // Per-tree leaf scales: non-zero SRSHR shifts in the score loop,
         // still bit-exact with the shifted i32 reference (both L widths).
@@ -1001,6 +1012,7 @@ mod tests {
     }
 
     #[test]
+    #[cfg_attr(miri, ignore)] // heavy: trains a forest; no unsafe for Miri to check
     fn qvqs_i16_per_tree_shifts_exact() {
         // The i16 tier supports per-tree scales through the same SRSHR
         // path (s16 lanes).
@@ -1015,6 +1027,7 @@ mod tests {
     }
 
     #[test]
+    #[cfg_attr(miri, ignore)] // heavy: trains a forest; no unsafe for Miri to check
     fn q8_single_instance_batch() {
         let (f, ds) = setup(32, 12, 40);
         let qf = QForest::<i8>::from_forest(&f, crate::quant::choose_scale_i8(&f, 1.0));

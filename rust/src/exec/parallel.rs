@@ -70,6 +70,9 @@ pub const REPLAN_EVERY_PREDICTS: u64 = 8;
 /// borrow outlives all uses).
 #[derive(Clone, Copy)]
 struct ConstPtr(*const f32);
+// SAFETY: sending the raw pointer is sound under the planner invariants
+// documented above — tasks only read, ranges are disjoint, and the borrow
+// outlives every task because `WorkerPool::run` joins before returning.
 unsafe impl Send for ConstPtr {}
 
 /// A serial engine executed by a sharded, work-stealing worker pool.

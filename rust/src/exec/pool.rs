@@ -93,6 +93,9 @@ pub type Task = Box<dyn FnOnce() + Send + 'static>;
 /// completion latch/counter before touching it).
 #[derive(Clone, Copy)]
 pub struct MutPtr(pub *mut f32);
+// SAFETY: sending the raw pointer across threads is sound under the two
+// invariants documented above — disjoint write ranges per task, and buffer
+// lifetime guaranteed by the completion latch the spawner waits on.
 unsafe impl Send for MutPtr {}
 
 /// Process-wide count of exec worker threads ever spawned. Monotone by
@@ -255,6 +258,82 @@ impl PoolState {
         self.claim_sizes[0] += 1;
         Some((tag, vec![task]))
     }
+
+    /// Add a deployment entry ([`SharedPool::register`] under the lock).
+    fn register(&mut self, tag: u64, label: &str, budget: usize) {
+        self.deployments.insert(
+            tag,
+            DeploymentQueue {
+                queue: VecDeque::new(),
+                label: label.to_string(),
+                budget,
+                active: 0,
+                closed: false,
+                vtime: 0.0,
+            },
+        );
+    }
+
+    /// Enqueue tasks for `tag` ([`PoolClient::spawn`] under the lock).
+    ///
+    /// WFQ catch-up: a deployment going idle → backlogged must not replay
+    /// service time it never used — a stale-low vtime would let it
+    /// monopolize every freed worker until it "caught up", starving the
+    /// deployments that were busy all along. Raise it to the floor of the
+    /// currently-backlogged vtimes before enqueueing.
+    fn enqueue(&mut self, tag: u64, tasks: Vec<Task>) {
+        let idle =
+            self.deployments.get(&tag).map_or(true, |d| d.queue.is_empty() && d.active == 0);
+        if idle {
+            let floor = self
+                .deployments
+                .values()
+                .filter(|d| !d.queue.is_empty() || d.active > 0)
+                .map(|d| d.vtime)
+                .fold(f64::INFINITY, f64::min);
+            if floor.is_finite() {
+                let d = self.deployments.get_mut(&tag).expect("client is registered");
+                d.vtime = d.vtime.max(floor);
+            }
+        }
+        let d = self.deployments.get_mut(&tag).expect("client is registered");
+        for t in tasks {
+            d.queue.push_back(t);
+        }
+    }
+
+    /// A worker finished a claim for `tag` (the post-execution block of
+    /// `worker_loop`): release the active slot and reap the entry if its
+    /// client closed and nothing is left.
+    fn finish(&mut self, tag: u64) {
+        let gone = match self.deployments.get_mut(&tag) {
+            Some(d) => {
+                d.active -= 1;
+                d.closed && d.active == 0 && d.queue.is_empty()
+            }
+            None => false,
+        };
+        if gone {
+            self.deployments.remove(&tag);
+        }
+    }
+
+    /// The client for `tag` dropped ([`PoolClient::drop`] under the lock):
+    /// discard queued tasks and remove the entry now if idle, else mark it
+    /// closed for the last finishing worker to reap.
+    fn close(&mut self, tag: u64) {
+        let gone = match self.deployments.get_mut(&tag) {
+            Some(d) => {
+                d.closed = true;
+                d.queue.clear();
+                d.active == 0
+            }
+            None => false,
+        };
+        if gone {
+            self.deployments.remove(&tag);
+        }
+    }
 }
 
 struct Shared {
@@ -331,17 +410,7 @@ fn worker_loop(shared: Arc<Shared>, token: u64, class: usize, pin_cores: Vec<usi
         for task in tasks {
             let _ = panic::catch_unwind(AssertUnwindSafe(task));
         }
-        let mut state = shared.state.lock().unwrap();
-        let gone = match state.deployments.get_mut(&tag) {
-            Some(d) => {
-                d.active -= 1;
-                d.closed && d.active == 0 && d.queue.is_empty()
-            }
-            None => false,
-        };
-        if gone {
-            state.deployments.remove(&tag);
-        }
+        shared.state.lock().unwrap().finish(tag);
     }
 }
 
@@ -491,6 +560,8 @@ impl SharedPool {
             claims: AtomicU64::new(0),
             claimed_tasks: AtomicU64::new(0),
         });
+        // relaxed: unique-ID allocation — only atomicity matters, no other
+        // memory is published under this counter.
         let token = NEXT_POOL_TOKEN.fetch_add(1, Ordering::Relaxed);
         let assignments = config.topology.worker_assignments(threads);
         let workers = (0..threads)
@@ -591,22 +662,11 @@ impl SharedPool {
     /// Associated function (the client keeps the pool alive, so it needs
     /// the `Arc`, and `self: &Arc<Self>` receivers are not stable Rust).
     pub fn register(pool: &Arc<SharedPool>, label: &str, budget: usize) -> PoolClient {
+        // relaxed: unique-ID allocation; the deployment entry itself is
+        // published under the pool mutex below, not under this counter.
         let tag = pool.shared.next_tag.fetch_add(1, Ordering::Relaxed);
         let budget = budget.max(1);
-        {
-            let mut state = pool.shared.state.lock().unwrap();
-            state.deployments.insert(
-                tag,
-                DeploymentQueue {
-                    queue: VecDeque::new(),
-                    label: label.to_string(),
-                    budget,
-                    active: 0,
-                    closed: false,
-                    vtime: 0.0,
-                },
-            );
-        }
+        pool.shared.state.lock().unwrap().register(tag, label, budget);
         pool.shared.registered.fetch_add(1, Ordering::SeqCst);
         PoolClient { pool: pool.clone(), tag, budget, label: label.to_string() }
     }
@@ -659,32 +719,7 @@ impl PoolClient {
         if tasks.is_empty() {
             return;
         }
-        let mut state = self.pool.shared.state.lock().unwrap();
-        // WFQ catch-up: a deployment going idle → backlogged must not
-        // replay service time it never used — a stale-low vtime would let
-        // it monopolize every freed worker until it "caught up", starving
-        // the deployments that were busy all along. Raise it to the floor
-        // of the currently-backlogged vtimes before enqueueing.
-        let idle = state
-            .deployments
-            .get(&self.tag)
-            .map_or(true, |d| d.queue.is_empty() && d.active == 0);
-        if idle {
-            let floor = state
-                .deployments
-                .values()
-                .filter(|d| !d.queue.is_empty() || d.active > 0)
-                .map(|d| d.vtime)
-                .fold(f64::INFINITY, f64::min);
-            if floor.is_finite() {
-                let d = state.deployments.get_mut(&self.tag).expect("client is registered");
-                d.vtime = d.vtime.max(floor);
-            }
-        }
-        let d = state.deployments.get_mut(&self.tag).expect("client is registered");
-        for t in tasks {
-            d.queue.push_back(t);
-        }
+        self.pool.shared.state.lock().unwrap().enqueue(self.tag, tasks);
         self.pool.shared.wakeup.notify_all();
     }
 
@@ -716,20 +751,7 @@ impl PoolClient {
 
 impl Drop for PoolClient {
     fn drop(&mut self) {
-        {
-            let mut state = self.pool.shared.state.lock().unwrap();
-            let gone = match state.deployments.get_mut(&self.tag) {
-                Some(d) => {
-                    d.closed = true;
-                    d.queue.clear();
-                    d.active == 0
-                }
-                None => false,
-            };
-            if gone {
-                state.deployments.remove(&self.tag);
-            }
-        }
+        self.pool.shared.state.lock().unwrap().close(self.tag);
         self.pool.shared.registered.fetch_sub(1, Ordering::SeqCst);
     }
 }
@@ -1330,5 +1352,237 @@ mod tests {
             h.fetch_add(1, Ordering::Relaxed);
         })]);
         assert_eq!(hits.load(Ordering::Relaxed), 1);
+    }
+
+    /// Exhaustive interleaving checks over the production [`PoolState`]
+    /// state machine (claim / steal / finish / enqueue / close), driven by
+    /// [`crate::testing::sched::explore`]. Every transition here is
+    /// executed under the pool mutex in production, so one method call is
+    /// exactly one atomic step — a schedule over these steps is a real
+    /// thread interleaving. DESIGN.md §9 maps scenarios to coverage.
+    mod interleave {
+        use super::*;
+        use crate::testing::explore;
+        use std::sync::atomic::AtomicUsize;
+
+        const THREADS: usize = 2;
+
+        fn mk_task(runs: &Arc<Vec<AtomicUsize>>, id: usize) -> Task {
+            let runs = runs.clone();
+            Box::new(move || {
+                runs[id].fetch_add(1, Ordering::SeqCst);
+            })
+        }
+
+        fn counters(n: usize) -> Arc<Vec<AtomicUsize>> {
+            Arc::new((0..n).map(|_| AtomicUsize::new(0)).collect())
+        }
+
+        /// A worker's claim step with the claim-rule invariants asserted
+        /// around the production `claim_many`: tier discipline (never steal
+        /// while tier-1 work exists), lowest-vtime pick, and vtime advancing
+        /// only for the claimed deployment. Claimed tasks execute
+        /// immediately — in production they run outside the lock, so their
+        /// execution cannot interleave with state transitions anyway.
+        fn checked_claim(state: &mut PoolState) -> Option<(u64, usize)> {
+            let tier1_min = state
+                .deployments
+                .values()
+                .filter(|d| !d.queue.is_empty() && d.active < d.budget)
+                .map(|d| d.vtime)
+                .fold(f64::INFINITY, f64::min);
+            let steals_before = state.steals;
+            let vt_before: BTreeMap<u64, f64> =
+                state.deployments.iter().map(|(&t, d)| (t, d.vtime)).collect();
+            let claimed = state.claim_many(1, THREADS);
+            match &claimed {
+                Some((tag, tasks)) => {
+                    assert!(!tasks.is_empty(), "a successful claim holds work");
+                    if tier1_min.is_finite() {
+                        assert_eq!(state.steals, steals_before, "stole past tier-1 work");
+                        assert_eq!(vt_before[tag], tier1_min, "picked a non-minimal vtime");
+                    } else {
+                        assert_eq!(state.steals, steals_before + 1, "uncounted steal");
+                    }
+                    for (t, d) in &state.deployments {
+                        if t == tag {
+                            assert!(d.vtime > vt_before[t], "claim must advance vtime");
+                        } else {
+                            assert_eq!(d.vtime, vt_before[t], "bystander vtime moved");
+                        }
+                    }
+                }
+                None => assert_eq!(state.steals, steals_before),
+            }
+            claimed.map(|(tag, tasks)| {
+                let n = tasks.len();
+                for t in tasks {
+                    t();
+                }
+                (tag, n)
+            })
+        }
+
+        #[test]
+        fn two_workers_claim_and_steal_every_interleaving() {
+            // Two workers over one budget-1 deployment with two tasks: the
+            // second claim is a tier-2 steal whenever it lands before the
+            // first finish. Every schedule must run both tasks exactly once
+            // and return the deployment to idle.
+            let n = explore(&[2, 2], usize::MAX, |sched| {
+                let runs = counters(2);
+                let mut state = PoolState::default();
+                state.register(1, "a", 1);
+                state.enqueue(1, vec![mk_task(&runs, 0), mk_task(&runs, 1)]);
+                let mut held: [Option<u64>; 2] = [None, None];
+                let mut step = [0usize; 2];
+                for &w in sched {
+                    if step[w] == 0 {
+                        held[w] = checked_claim(&mut state).map(|(tag, _)| tag);
+                    } else if let Some(tag) = held[w].take() {
+                        state.finish(tag);
+                    }
+                    step[w] += 1;
+                }
+                for r in runs.iter() {
+                    assert_eq!(r.load(Ordering::SeqCst), 1, "task lost or re-run: {sched:?}");
+                }
+                let d = &state.deployments[&1];
+                assert_eq!(d.active, 0);
+                assert!(d.queue.is_empty());
+            });
+            assert_eq!(n, 6, "C(4,2) merges of two 2-step workers");
+        }
+
+        #[test]
+        fn close_interleavings_never_run_doomed_tasks_and_reap_the_entry() {
+            // Two workers × a client dropping mid-flight. Tasks claimed
+            // before the close run exactly once; tasks still queued at the
+            // close never run; the deployment entry is reaped by whichever
+            // of close/last-finish comes last.
+            const NTASKS: usize = 3;
+            let n = explore(&[2, 2, 1], usize::MAX, |sched| {
+                let runs = counters(NTASKS);
+                let mut state = PoolState::default();
+                state.register(7, "doomed", 2);
+                state.enqueue(7, (0..NTASKS).map(|i| mk_task(&runs, i)).collect());
+                let mut held: [Option<u64>; 2] = [None, None];
+                let mut step = [0usize; 2];
+                let mut closed = false;
+                let mut claimed_before_close = 0usize;
+                for &a in sched {
+                    if a < 2 {
+                        if step[a] == 0 {
+                            if let Some((tag, k)) = checked_claim(&mut state) {
+                                if !closed {
+                                    claimed_before_close += k;
+                                }
+                                held[a] = Some(tag);
+                            }
+                        } else if let Some(tag) = held[a].take() {
+                            state.finish(tag);
+                        }
+                        step[a] += 1;
+                    } else {
+                        state.close(7);
+                        closed = true;
+                    }
+                }
+                let total: usize = runs.iter().map(|r| r.load(Ordering::SeqCst)).sum();
+                assert_eq!(total, claimed_before_close, "doomed task ran: {sched:?}");
+                for r in runs.iter() {
+                    assert!(r.load(Ordering::SeqCst) <= 1, "task re-ran: {sched:?}");
+                }
+                assert!(state.deployments.is_empty(), "closed entry not reaped: {sched:?}");
+            });
+            assert_eq!(n, 30, "5!/(2!·2!) merges of 2+2+1 steps");
+        }
+
+        #[test]
+        fn enqueue_catchup_holds_in_every_interleaving() {
+            // A backlogged deployment (1) races an idle one (2) whose
+            // client enqueues mid-schedule: wherever the enqueue lands, the
+            // idle deployment's vtime must come out at or above the floor
+            // of the then-backlogged vtimes (no stale-low vtime
+            // monopolizing freed workers), and claims keep picking the
+            // minimum-vtime contender.
+            let n = explore(&[2, 2, 1], usize::MAX, |sched| {
+                let runs = counters(3);
+                let mut state = PoolState::default();
+                state.register(1, "busy", 1);
+                state.register(2, "idle", 1);
+                state.enqueue(1, vec![mk_task(&runs, 0), mk_task(&runs, 1)]);
+                let mut held: [Option<u64>; 2] = [None, None];
+                let mut step = [0usize; 2];
+                for &a in sched {
+                    if a < 2 {
+                        if step[a] == 0 {
+                            held[a] = checked_claim(&mut state).map(|(tag, _)| tag);
+                        } else if let Some(tag) = held[a].take() {
+                            state.finish(tag);
+                        }
+                        step[a] += 1;
+                    } else {
+                        let floor = state
+                            .deployments
+                            .values()
+                            .filter(|d| !d.queue.is_empty() || d.active > 0)
+                            .map(|d| d.vtime)
+                            .fold(f64::INFINITY, f64::min);
+                        state.enqueue(2, vec![mk_task(&runs, 2)]);
+                        if floor.is_finite() {
+                            let v = state.deployments[&2].vtime;
+                            assert!(v >= floor, "stale-low vtime after catch-up: {sched:?}");
+                        }
+                    }
+                }
+            });
+            assert_eq!(n, 30);
+        }
+
+        #[test]
+        fn deeper_schedules_with_bounded_preemptions() {
+            // Two workers × two claim/finish cycles each × a mid-flight
+            // close, bounded to 3 preemptions (the CHESS insight: almost
+            // all schedule-sensitive bugs need very few). Same invariants
+            // as the exhaustive close scenario, an order of magnitude more
+            // steps.
+            const NTASKS: usize = 4;
+            let mut schedules = 0usize;
+            explore(&[4, 4, 1], 3, |sched| {
+                schedules += 1;
+                let runs = counters(NTASKS);
+                let mut state = PoolState::default();
+                state.register(9, "deep", 2);
+                state.enqueue(9, (0..NTASKS).map(|i| mk_task(&runs, i)).collect());
+                let mut held: [Option<u64>; 2] = [None, None];
+                let mut step = [0usize; 2];
+                let mut closed = false;
+                let mut claimed_before_close = 0usize;
+                for &a in sched {
+                    if a < 2 {
+                        if step[a] % 2 == 0 {
+                            if let Some((tag, k)) = checked_claim(&mut state) {
+                                if !closed {
+                                    claimed_before_close += k;
+                                }
+                                held[a] = Some(tag);
+                            }
+                        } else if let Some(tag) = held[a].take() {
+                            state.finish(tag);
+                        }
+                        step[a] += 1;
+                    } else {
+                        state.close(9);
+                        closed = true;
+                    }
+                }
+                let total: usize = runs.iter().map(|r| r.load(Ordering::SeqCst)).sum();
+                assert_eq!(total, claimed_before_close, "doomed task ran: {sched:?}");
+                assert!(state.deployments.is_empty(), "entry not reaped: {sched:?}");
+            });
+            let sequential = explore(&[4, 4, 1], 0, |_| {});
+            assert!(schedules > sequential, "preemption bound added no coverage");
+        }
     }
 }

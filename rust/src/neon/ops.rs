@@ -8,7 +8,12 @@
 //!
 //! All functions are `#[inline]` and operate on plain arrays, so LLVM
 //! vectorizes them into native SSE/AVX; the *algorithms* stay exactly the
-//! NEON ones.
+//! NEON ones. The four hottest ops of the int8/int16 tiers (`vcgtq_s8`,
+//! `vaddq_s8`, `vcgtq_s16`, `vaddq_s16`) additionally dispatch to the real
+//! `core::arch::aarch64` intrinsics on AArch64 hosts; their simulated
+//! `*_sim` twins remain the bit-exact behavior contract, enforced by the
+//! parity tests at the bottom of this file and by the `neon-parity` audit
+//! lint (`cargo run -p xtask -- audit`).
 
 use super::types::*;
 
@@ -166,9 +171,20 @@ pub fn vcgtq_f32(a: F32x4, b: F32x4) -> U32x4 {
     U32x4(out)
 }
 
-/// `CMGT Vd.8H` — per-lane `a > b` for i16.
+/// `CMGT Vd.8H` — per-lane `a > b` for i16. Issues the real instruction on
+/// AArch64; [`vcgtq_s16_sim`] is the bit-exact contract everywhere else.
 #[inline]
 pub fn vcgtq_s16(a: I16x8, b: I16x8) -> U16x8 {
+    // parity: native_cmgt_s16_matches_sim
+    #[cfg(target_arch = "aarch64")]
+    return vcgtq_s16_native(a, b);
+    #[cfg(not(target_arch = "aarch64"))]
+    vcgtq_s16_sim(a, b)
+}
+
+/// Simulated reference for [`vcgtq_s16`] (the only path off-ARM).
+#[inline]
+pub fn vcgtq_s16_sim(a: I16x8, b: I16x8) -> U16x8 {
     let mut out = [0u16; 8];
     for i in 0..8 {
         out[i] = if a.0[i] > b.0[i] { u16::MAX } else { 0 };
@@ -176,15 +192,60 @@ pub fn vcgtq_s16(a: I16x8, b: I16x8) -> U16x8 {
     U16x8(out)
 }
 
+/// The real `CMGT Vd.8H, Vn.8H, Vm.8H`.
+// parity: native_cmgt_s16_matches_sim
+#[cfg(target_arch = "aarch64")]
+#[inline]
+fn vcgtq_s16_native(a: I16x8, b: I16x8) -> U16x8 {
+    use core::arch::aarch64 as arm;
+    // SAFETY: NEON (ASIMD) is baseline on AArch64; each ld1/st1 pointer
+    // covers exactly one 16-byte register drawn from/into a local array.
+    unsafe {
+        let va = arm::vld1q_s16(a.0.as_ptr());
+        let vb = arm::vld1q_s16(b.0.as_ptr());
+        let mut out = [0u16; 8];
+        arm::vst1q_u16(out.as_mut_ptr(), arm::vcgtq_s16(va, vb));
+        U16x8(out)
+    }
+}
+
 /// `CMGT Vd.16B` — per-lane `a > b` for i8 (the int8 tier's 16-wide split
-/// comparison).
+/// comparison). Issues the real instruction on AArch64; [`vcgtq_s8_sim`]
+/// is the bit-exact contract everywhere else.
 #[inline]
 pub fn vcgtq_s8(a: I8x16, b: I8x16) -> U8x16 {
+    // parity: native_cmgt_s8_matches_sim
+    #[cfg(target_arch = "aarch64")]
+    return vcgtq_s8_native(a, b);
+    #[cfg(not(target_arch = "aarch64"))]
+    vcgtq_s8_sim(a, b)
+}
+
+/// Simulated reference for [`vcgtq_s8`] (the only path off-ARM).
+#[inline]
+pub fn vcgtq_s8_sim(a: I8x16, b: I8x16) -> U8x16 {
     let mut out = [0u8; 16];
     for i in 0..16 {
         out[i] = if a.0[i] > b.0[i] { u8::MAX } else { 0 };
     }
     U8x16(out)
+}
+
+/// The real `CMGT Vd.16B, Vn.16B, Vm.16B`.
+// parity: native_cmgt_s8_matches_sim
+#[cfg(target_arch = "aarch64")]
+#[inline]
+fn vcgtq_s8_native(a: I8x16, b: I8x16) -> U8x16 {
+    use core::arch::aarch64 as arm;
+    // SAFETY: NEON (ASIMD) is baseline on AArch64; each ld1/st1 pointer
+    // covers exactly one 16-byte register drawn from/into a local array.
+    unsafe {
+        let va = arm::vld1q_s8(a.0.as_ptr());
+        let vb = arm::vld1q_s8(b.0.as_ptr());
+        let mut out = [0u8; 16];
+        arm::vst1q_u8(out.as_mut_ptr(), arm::vcgtq_s8(va, vb));
+        U8x16(out)
+    }
 }
 
 /// `CMEQ Vd.16B` — per-lane `a == b` for u8.
@@ -325,9 +386,20 @@ pub fn vaddq_f32(a: F32x4, b: F32x4) -> F32x4 {
     F32x4([a.0[0] + b.0[0], a.0[1] + b.0[1], a.0[2] + b.0[2], a.0[3] + b.0[3]])
 }
 
-/// `ADD Vd.8H` — i16 add (wrapping, as on hardware).
+/// `ADD Vd.8H` — i16 add (wrapping, as on hardware). Issues the real
+/// instruction on AArch64; [`vaddq_s16_sim`] is the contract off-ARM.
 #[inline]
 pub fn vaddq_s16(a: I16x8, b: I16x8) -> I16x8 {
+    // parity: native_add_s16_matches_sim
+    #[cfg(target_arch = "aarch64")]
+    return vaddq_s16_native(a, b);
+    #[cfg(not(target_arch = "aarch64"))]
+    vaddq_s16_sim(a, b)
+}
+
+/// Simulated reference for [`vaddq_s16`] (the only path off-ARM).
+#[inline]
+pub fn vaddq_s16_sim(a: I16x8, b: I16x8) -> I16x8 {
     let mut out = [0i16; 8];
     for i in 0..8 {
         out[i] = a.0[i].wrapping_add(b.0[i]);
@@ -335,15 +407,60 @@ pub fn vaddq_s16(a: I16x8, b: I16x8) -> I16x8 {
     I16x8(out)
 }
 
+/// The real `ADD Vd.8H, Vn.8H, Vm.8H`.
+// parity: native_add_s16_matches_sim
+#[cfg(target_arch = "aarch64")]
+#[inline]
+fn vaddq_s16_native(a: I16x8, b: I16x8) -> I16x8 {
+    use core::arch::aarch64 as arm;
+    // SAFETY: NEON (ASIMD) is baseline on AArch64; each ld1/st1 pointer
+    // covers exactly one 16-byte register drawn from/into a local array.
+    unsafe {
+        let va = arm::vld1q_s16(a.0.as_ptr());
+        let vb = arm::vld1q_s16(b.0.as_ptr());
+        let mut out = [0i16; 8];
+        arm::vst1q_s16(out.as_mut_ptr(), arm::vaddq_s16(va, vb));
+        I16x8(out)
+    }
+}
+
 /// `ADD Vd.16B` — i8 add (wrapping) — the int8 tier's native 16-lane score
-/// accumulation ([`crate::quant::AccumMode::Native`]).
+/// accumulation ([`crate::quant::AccumMode::Native`]). Issues the real
+/// instruction on AArch64; [`vaddq_s8_sim`] is the contract off-ARM.
 #[inline]
 pub fn vaddq_s8(a: I8x16, b: I8x16) -> I8x16 {
+    // parity: native_add_s8_matches_sim
+    #[cfg(target_arch = "aarch64")]
+    return vaddq_s8_native(a, b);
+    #[cfg(not(target_arch = "aarch64"))]
+    vaddq_s8_sim(a, b)
+}
+
+/// Simulated reference for [`vaddq_s8`] (the only path off-ARM).
+#[inline]
+pub fn vaddq_s8_sim(a: I8x16, b: I8x16) -> I8x16 {
     let mut out = [0i8; 16];
     for i in 0..16 {
         out[i] = a.0[i].wrapping_add(b.0[i]);
     }
     I8x16(out)
+}
+
+/// The real `ADD Vd.16B, Vn.16B, Vm.16B`.
+// parity: native_add_s8_matches_sim
+#[cfg(target_arch = "aarch64")]
+#[inline]
+fn vaddq_s8_native(a: I8x16, b: I8x16) -> I8x16 {
+    use core::arch::aarch64 as arm;
+    // SAFETY: NEON (ASIMD) is baseline on AArch64; each ld1/st1 pointer
+    // covers exactly one 16-byte register drawn from/into a local array.
+    unsafe {
+        let va = arm::vld1q_s8(a.0.as_ptr());
+        let vb = arm::vld1q_s8(b.0.as_ptr());
+        let mut out = [0i8; 16];
+        arm::vst1q_s8(out.as_mut_ptr(), arm::vaddq_s8(va, vb));
+        I8x16(out)
+    }
 }
 
 /// `SADDW Vd.8H, Vn.8H, Vm.8B` — widening add: i16 accumulator += i8 half
@@ -761,4 +878,66 @@ mod tests {
 #[inline]
 pub fn i32x4_from_u32(a: U32x4) -> I32x4 {
     I32x4::from_bytes(a.to_bytes())
+}
+
+/// Native-vs-simulated parity, runnable only on AArch64 hosts (`cargo test`
+/// on an ARM device). Each test is named by a `// parity:` comment above
+/// and the audit's `neon-parity` lint verifies the pairing stays intact.
+#[cfg(all(test, target_arch = "aarch64"))]
+mod parity_tests {
+    use super::*;
+
+    /// Lane patterns that exercise sign boundaries, wrap, and mixed order.
+    const I8_CASES: [[i8; 16]; 4] = [
+        [0; 16],
+        [i8::MIN, i8::MAX, -1, 1, 0, 64, -64, 127, -128, 3, -3, 100, -100, 7, -7, 2],
+        [1; 16],
+        [-1, -1, 0, 0, i8::MAX, i8::MAX, i8::MIN, i8::MIN, 5, -5, 50, -50, 9, -9, 11, -11],
+    ];
+    const I16_CASES: [[i16; 8]; 4] = [
+        [0; 8],
+        [i16::MIN, i16::MAX, -1, 1, 0, 1024, -1024, 32767],
+        [1; 8],
+        [-1, 0, i16::MAX, i16::MIN, 300, -300, 7, -7],
+    ];
+
+    #[test]
+    fn native_cmgt_s8_matches_sim() {
+        for a in I8_CASES {
+            for b in I8_CASES {
+                let (a, b) = (I8x16(a), I8x16(b));
+                assert_eq!(vcgtq_s8_native(a, b), vcgtq_s8_sim(a, b), "{a:?} > {b:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn native_add_s8_matches_sim() {
+        for a in I8_CASES {
+            for b in I8_CASES {
+                let (a, b) = (I8x16(a), I8x16(b));
+                assert_eq!(vaddq_s8_native(a, b), vaddq_s8_sim(a, b), "{a:?} + {b:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn native_cmgt_s16_matches_sim() {
+        for a in I16_CASES {
+            for b in I16_CASES {
+                let (a, b) = (I16x8(a), I16x8(b));
+                assert_eq!(vcgtq_s16_native(a, b), vcgtq_s16_sim(a, b), "{a:?} > {b:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn native_add_s16_matches_sim() {
+        for a in I16_CASES {
+            for b in I16_CASES {
+                let (a, b) = (I16x8(a), I16x8(b));
+                assert_eq!(vaddq_s16_native(a, b), vaddq_s16_sim(a, b), "{a:?} + {b:?}");
+            }
+        }
+    }
 }

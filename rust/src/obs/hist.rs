@@ -159,6 +159,8 @@ impl Histogram {
         let mut cum = 0u64;
         let mut v = self.max();
         for (i, b) in self.buckets.iter().enumerate() {
+            // relaxed: bucket counters are independent statistics; a reader
+            // racing recorders gets a torn-but-valid snapshot by design.
             cum += b.load(Ordering::Relaxed);
             if cum >= rank {
                 v = Self::representative(i);
@@ -175,8 +177,10 @@ impl Histogram {
             return;
         }
         for (b, o) in self.buckets.iter().zip(other.buckets.iter()) {
+            // relaxed: statistics merge — bucket counters are independent.
             let k = o.load(Ordering::Relaxed);
             if k > 0 {
+                // relaxed: same — both sides tolerate concurrent recording.
                 b.fetch_add(k, Ordering::Relaxed);
             }
         }
@@ -191,6 +195,8 @@ impl Histogram {
     pub fn summary(&self) -> Summary {
         let (mut sum, mut sumsq, mut total) = (0.0f64, 0.0f64, 0u64);
         for (i, b) in self.buckets.iter().enumerate() {
+            // relaxed: bucket counters are independent statistics (see
+            // `quantile`) — summaries are best-effort snapshots.
             let c = b.load(Ordering::Relaxed);
             if c == 0 {
                 continue;

@@ -100,12 +100,15 @@ impl Ring {
 
 /// Turn span recording on or off, process-wide.
 pub fn set_enabled(on: bool) {
-    ENABLED.store(on, Ordering::Relaxed);
+    // Release pairs with the Acquire loads in `enabled`/`SpanTimer::start`:
+    // whatever the toggling thread set up before enabling (cleared rings,
+    // test fixtures) is visible to workers that observe the flag.
+    ENABLED.store(on, Ordering::Release);
 }
 
 /// Is span recording currently on?
 pub fn enabled() -> bool {
-    ENABLED.load(Ordering::Relaxed)
+    ENABLED.load(Ordering::Acquire)
 }
 
 /// Empty every registered ring (rings stay registered).
@@ -156,7 +159,8 @@ pub struct SpanTimer(Option<(&'static str, Instant)>);
 impl SpanTimer {
     #[inline]
     pub fn start(name: &'static str) -> SpanTimer {
-        if ENABLED.load(Ordering::Relaxed) {
+        // Acquire pairs with the Release store in `set_enabled`.
+        if ENABLED.load(Ordering::Acquire) {
             SpanTimer(Some((name, Instant::now())))
         } else {
             SpanTimer(None)

@@ -72,6 +72,7 @@ mod tests {
     }
 
     #[test]
+    #[cfg_attr(miri, ignore)] // heavy: trains a forest; no unsafe for Miri to check
     fn fraction_in_unit_interval() {
         let ds = DatasetId::Magic.generate(600, 3);
         let f = rf(&ds, 8, 1);
@@ -80,6 +81,7 @@ mod tests {
     }
 
     #[test]
+    #[cfg_attr(miri, ignore)] // heavy: trains a forest; no unsafe for Miri to check
     fn adult_merges_more_than_magic() {
         // Binary one-hot features => few unique thresholds (paper Table 4:
         // Adult 6-12% vs Magic 58-89%).
@@ -93,6 +95,7 @@ mod tests {
     }
 
     #[test]
+    #[cfg_attr(miri, ignore)] // heavy: trains a forest; no unsafe for Miri to check
     fn quantization_only_decreases_uniqueness() {
         let ds = DatasetId::Eeg.generate(800, 4);
         let f = rf(&ds, 12, 5);
@@ -103,6 +106,7 @@ mod tests {
     }
 
     #[test]
+    #[cfg_attr(miri, ignore)] // heavy: trains a forest; no unsafe for Miri to check
     fn eeg_collapses_under_quantization() {
         // The paper's EEG anomaly: quantization halves the unique-node
         // fraction (Table 4: 52.2% -> 28.6% at 128 trees).
@@ -115,6 +119,7 @@ mod tests {
     }
 
     #[test]
+    #[cfg_attr(miri, ignore)] // heavy: trains a forest; no unsafe for Miri to check
     fn i8_collapses_at_least_as_much_as_i16() {
         // 8-bit thresholds have 256 representable values: merging can only
         // increase vs the i16 tier (Table 4's effect amplified).
@@ -131,6 +136,7 @@ mod tests {
     }
 
     #[test]
+    #[cfg_attr(miri, ignore)] // heavy: trains a forest; no unsafe for Miri to check
     fn mnist_unaffected_by_quantization() {
         // Pixel grid spacing (1/255) is far above the quantization step
         // (2^-15), so uniqueness barely moves (paper: identical columns).

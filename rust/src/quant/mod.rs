@@ -807,6 +807,7 @@ mod tests {
     }
 
     #[test]
+    #[cfg_attr(miri, ignore)] // heavy: trains a forest; no unsafe for Miri to check
     fn qforest_predictions_close_to_float() {
         let (f, ds) = trained();
         let qf = QForest::from_forest(&f, QuantConfig::paper_default());
@@ -822,6 +823,7 @@ mod tests {
     }
 
     #[test]
+    #[cfg_attr(miri, ignore)] // heavy: trains a forest; no unsafe for Miri to check
     fn accuracy_parts_none_matches_float() {
         let (f, ds) = trained();
         let cfg = QuantConfig::paper_default();
@@ -831,6 +833,7 @@ mod tests {
     }
 
     #[test]
+    #[cfg_attr(miri, ignore)] // heavy: trains a forest; no unsafe for Miri to check
     fn accuracy_quantized_near_float() {
         let (f, ds) = trained();
         let cfg = QuantConfig::paper_default();
@@ -840,6 +843,7 @@ mod tests {
     }
 
     #[test]
+    #[cfg_attr(miri, ignore)] // heavy: trains a forest; no unsafe for Miri to check
     fn accuracy_i8_tier_usable() {
         let (f, ds) = trained();
         let cfg = choose_scale_i8(&f, 1.0);
@@ -849,6 +853,7 @@ mod tests {
     }
 
     #[test]
+    #[cfg_attr(miri, ignore)] // heavy: trains a forest; no unsafe for Miri to check
     fn choose_scale_bounds() {
         let (f, _) = trained();
         let cfg = choose_scale(&f, 1.0);
@@ -860,6 +865,7 @@ mod tests {
     }
 
     #[test]
+    #[cfg_attr(miri, ignore)] // heavy: trains a forest; no unsafe for Miri to check
     fn choose_scale_i8_bounds_and_native_mode() {
         let (f, _) = trained();
         let cfg = choose_scale_i8(&f, 1.0);
@@ -947,6 +953,7 @@ mod tests {
     }
 
     #[test]
+    #[cfg_attr(miri, ignore)] // heavy: trains a forest; no unsafe for Miri to check
     fn scores_fit_i16_accumulator() {
         let (f, ds) = trained();
         let cfg = choose_scale(&f, 1.0);
@@ -1025,6 +1032,7 @@ mod tests {
     /// Per-tree shifts never push stored leaves out of the storage width,
     /// and the reference prediction stays finite and close to float.
     #[test]
+    #[cfg_attr(miri, ignore)] // heavy: trains a forest; no unsafe for Miri to check
     fn per_tree_reference_close_to_float() {
         let (f, ds) = trained();
         let cfg = choose_scale_i8_per_tree(&f, 1.0);
@@ -1091,6 +1099,7 @@ mod tests {
     /// Both per-tree tiers come from one bound: i16's is the i8 one with a
     /// wider budget, so it always admits a ≥ scale.
     #[test]
+    #[cfg_attr(miri, ignore)] // heavy: trains a forest; no unsafe for Miri to check
     fn per_tree_scale_tiers_are_ordered() {
         let (f, _) = trained();
         let s8 = choose_scale_i8_per_tree(&f, 1.0).scale;
@@ -1113,6 +1122,7 @@ mod tests {
     }
 
     #[test]
+    #[cfg_attr(miri, ignore)] // heavy: trains a forest; no unsafe for Miri to check
     fn i8_qforest_reference_runs() {
         let (f, ds) = trained();
         let cfg = choose_scale_i8(&f, 1.0);

@@ -155,6 +155,9 @@ impl LoadedModel {
 // ---------------------------------------------------------------------------
 
 fn bytes_of<T: Copy>(data: &[T]) -> &[u8] {
+    // SAFETY: reinterpreting `T: Copy` values as their raw bytes — the
+    // pointer and byte length come from the same live slice, `u8` has no
+    // alignment requirement, and the returned slice borrows `data`.
     unsafe {
         std::slice::from_raw_parts(data.as_ptr() as *const u8, std::mem::size_of_val(data))
     }

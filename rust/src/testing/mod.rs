@@ -1,5 +1,7 @@
 //! In-repo property-testing harness (no proptest offline — see DESIGN.md).
 
 pub mod prop;
+pub mod sched;
 
 pub use prop::{assert_close, Runner};
+pub use sched::explore;

@@ -34,6 +34,13 @@ pub struct Runner {
 
 impl Runner {
     pub fn new(cases: usize) -> Self {
+        // Miri runs the interpreter ~2–3 orders of magnitude slower than
+        // native; 4 cases keep every property exercised (including the
+        // unsafe code paths Miri exists to check) at tractable cost. The
+        // ramp still starts at size 1, so the cases kept are the small,
+        // near-minimal ones.
+        #[cfg(miri)]
+        let cases = cases.min(4);
         Runner { config: Config { cases, ..Default::default() }, max_size: 64 }
     }
 

@@ -451,6 +451,64 @@ mod tests {
     }
 
     #[test]
+    fn every_control_char_escapes_and_roundtrips() {
+        for cp in 0u32..0x20 {
+            let c = char::from_u32(cp).unwrap();
+            let v = Json::Str(format!("a{c}b"));
+            let out = v.dump();
+            // The writer must never emit a raw control byte.
+            assert!(out.bytes().all(|b| b >= 0x20), "raw control byte in {out:?}");
+            let expected = match c {
+                '\n' => "\"a\\nb\"".to_string(),
+                '\r' => "\"a\\rb\"".to_string(),
+                '\t' => "\"a\\tb\"".to_string(),
+                _ => format!("\"a\\u{cp:04x}b\""),
+            };
+            assert_eq!(out, expected, "codepoint {cp:#04x}");
+            assert_eq!(Json::parse(&out).unwrap(), v, "codepoint {cp:#04x}");
+        }
+    }
+
+    #[test]
+    fn quotes_and_backslashes() {
+        // Adversarial backslash/quote runs, including a trailing backslash and
+        // sequences that would change meaning if escaping were off by one.
+        let cases = ["\"", "\\", "\\\"", "\"\\", "a\\", "\\\\\\", "\\u0041", "end\"", "\\n"];
+        for s in cases {
+            let v = Json::Str(s.to_string());
+            let out = v.dump();
+            assert_eq!(Json::parse(&out).unwrap(), v, "case {s:?} -> {out:?}");
+        }
+        // The literal two characters `\n` must not collapse into a newline.
+        assert_eq!(Json::Str("\\n".into()).dump(), r#""\\n""#);
+        assert_eq!(Json::Str("\"".into()).dump(), r#""\"""#);
+        assert_eq!(Json::Str("\\".into()).dump(), r#""\\""#);
+    }
+
+    #[test]
+    fn parser_accepts_all_short_escapes() {
+        let v = Json::parse(r#""q\" s\\ sol\/ b\b f\f n\n r\r t\t uA""#).unwrap();
+        assert_eq!(v.as_str().unwrap(), "q\" s\\ sol/ b\u{8} f\u{c} n\n r\r t\t uA");
+        // \b and \f have no short form on output; they round-trip via \uXXXX.
+        let back = Json::Str("\u{8}\u{c}".to_string());
+        assert_eq!(back.dump(), r#""\u0008\u000c""#);
+        assert_eq!(Json::parse(&back.dump()).unwrap(), back);
+    }
+
+    #[test]
+    fn non_ascii_passes_through_unescaped() {
+        // Multi-byte UTF-8 (2, 3 and 4 byte sequences) is emitted raw, not
+        // \u-escaped, and survives a round trip — including as object keys.
+        let s = "é → 木 🌲";
+        let v = Json::from_pairs(vec![(s, Json::Str(s.to_string()))]);
+        let out = v.dump();
+        assert!(out.contains(s), "non-ascii was escaped in {out:?}");
+        let v2 = Json::parse(&out).unwrap();
+        assert_eq!(v2.get(s).unwrap().as_str().unwrap(), s);
+        assert_eq!(v, v2);
+    }
+
+    #[test]
     fn unicode_escape() {
         let v = Json::parse(r#""Aé""#).unwrap();
         assert_eq!(v.as_str().unwrap(), "Aé");

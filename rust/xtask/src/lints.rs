@@ -1,0 +1,650 @@
+//! The audit's lint catalogue (DESIGN.md §9).
+//!
+//! Four repo-specific lints over the scanner's per-line code/comment views:
+//!
+//! * [`SAFETY`] — every `unsafe` block/impl/fn carries a `// SAFETY:`
+//!   comment on the same line or within the 6 lines above it.
+//! * [`RELAXED`] — every `Ordering::Relaxed` in non-test library code
+//!   either targets an allowlisted statistics-only counter
+//!   ([`RELAXED_ALLOWLIST`]) or carries a `// relaxed:` justification
+//!   within 3 lines above. Synchronization-bearing atomics must use
+//!   (documented) Acquire/Release/AcqRel instead.
+//! * [`NEON`] — every `#[cfg(target_arch = "aarch64")]` site in
+//!   `neon/ops.rs` pairs with a `#[cfg(not(target_arch = "aarch64"))]`
+//!   scalar fallback nearby and a `// parity: <test_fn>` reference naming
+//!   a test that exists in the file.
+//! * [`LOCK`] — in `exec/pool.rs` / `coordinator/batcher.rs`, no named
+//!   `.lock()` guard is lexically live across a user-callback or enqueue
+//!   boundary (`.spawn(`, `.run(`, `.join(`, `.send(`, `predict_batch(`).
+//!
+//! Any finding can be waived in place with
+//! `// audit-waive: <lint-id> <reason>` on the same line or the line
+//! above; waivers are reported (and the SAFETY lint is expected to carry
+//! none — see the CI gate).
+
+use crate::scan::{clean_lines, Line};
+
+pub const SAFETY: &str = "safety-comment";
+pub const RELAXED: &str = "relaxed-ordering";
+pub const NEON: &str = "neon-parity";
+pub const LOCK: &str = "lock-span";
+
+/// Statistics-only atomic counters that may use `Ordering::Relaxed` without
+/// a per-site comment. Everything here is monotone telemetry read by
+/// humans/tests after synchronization elsewhere (join, channel recv, or the
+/// pool mutex); none of it gates memory visibility of other data.
+/// DESIGN.md §9 documents the policy; adding a name here is a code-review
+/// decision, not a local convenience.
+pub const RELAXED_ALLOWLIST: &[&str] = &[
+    // coordinator::metrics — request/batch counters.
+    "requests",
+    "completed",
+    "rejected",
+    "shed_shutdown",
+    "failed",
+    "reaper_threads",
+    "batches",
+    "batched_instances",
+    // exec::pool — claim-amortization counters.
+    "claims",
+    "claimed_tasks",
+    // exec::feedback — EWMA observation counters.
+    "samples",
+    "replans",
+    // coordinator::batcher — replan tick.
+    "flushes",
+    // exec::parallel — predict counter.
+    "predicts",
+    // obs::hist — histogram cells and min/max sketch bits.
+    "buckets",
+    "count",
+    "min_bits",
+    "max_bits",
+];
+
+/// Calls that hand control to user code or cross an enqueue/teardown
+/// boundary — forbidden while a named lock guard is live ([`LOCK`]).
+const LOCK_FORBIDDEN: &[&str] = &[".spawn(", ".run(", ".join(", ".send(", "predict_batch("];
+
+/// Atomic-op tokens whose receiver names the [`RELAXED`] allowlist checks.
+const ATOMIC_OPS: &[&str] = &[
+    ".load(",
+    ".store(",
+    ".swap(",
+    ".fetch_add(",
+    ".fetch_sub(",
+    ".fetch_max(",
+    ".fetch_min(",
+    ".fetch_and(",
+    ".fetch_or(",
+    ".fetch_xor(",
+    ".compare_exchange",
+];
+
+#[derive(Debug)]
+pub struct Finding {
+    pub file: String,
+    /// 1-based source line.
+    pub line: usize,
+    pub id: &'static str,
+    pub msg: String,
+}
+
+#[derive(Debug)]
+pub struct Waiver {
+    pub file: String,
+    pub line: usize,
+    pub id: &'static str,
+    pub reason: String,
+}
+
+#[derive(Debug, Default)]
+pub struct Report {
+    pub findings: Vec<Finding>,
+    pub waivers: Vec<Waiver>,
+}
+
+/// Audit one file. `path` (repo-relative, `/`-separated) selects which
+/// lints apply: [`SAFETY`] everywhere, [`RELAXED`] under `src/` (test code
+/// — `rust/tests/`, benches, and everything at/after the file's
+/// `#[cfg(test)]` — is exempt: test counters synchronize via join/recv),
+/// [`NEON`] in `neon/ops.rs`, [`LOCK`] in the two files whose guards cross
+/// scheduler boundaries.
+pub fn audit_file(path: &str, src: &str) -> Report {
+    let lines = clean_lines(src);
+    let mut cands: Vec<Finding> = Vec::new();
+    lint_safety(path, &lines, &mut cands);
+    if path.contains("src/") && !path.contains("tests/") {
+        lint_relaxed(path, &lines, &mut cands);
+    }
+    if path.ends_with("neon/ops.rs") {
+        lint_neon(path, &lines, &mut cands);
+    }
+    if path.ends_with("exec/pool.rs") || path.ends_with("coordinator/batcher.rs") {
+        lint_lock(path, &lines, &mut cands);
+    }
+    let mut report = Report::default();
+    for f in cands {
+        match waiver_reason(&lines, f.line, f.id) {
+            Some(reason) => {
+                report.waivers.push(Waiver { file: f.file, line: f.line, id: f.id, reason })
+            }
+            None => report.findings.push(f),
+        }
+    }
+    report
+}
+
+/// `// audit-waive: <id> <reason>` on the finding's line or the line above.
+fn waiver_reason(lines: &[Line], line_1based: usize, id: &str) -> Option<String> {
+    let idx = line_1based - 1;
+    let lo = idx.saturating_sub(1);
+    for l in &lines[lo..=idx.min(lines.len() - 1)] {
+        if let Some(p) = l.comment.find("audit-waive:") {
+            let rest = l.comment[p + "audit-waive:".len()..].trim();
+            if let Some(reason) = rest.strip_prefix(id) {
+                return Some(reason.trim().to_string());
+            }
+        }
+    }
+    None
+}
+
+/// Substring match with identifier boundaries on both sides.
+fn has_word(code: &str, word: &str) -> bool {
+    let bytes = code.as_bytes();
+    let mut from = 0;
+    while let Some(p) = code[from..].find(word) {
+        let start = from + p;
+        let end = start + word.len();
+        let pre_ok = start == 0 || !is_ident_byte(bytes[start - 1]);
+        let post_ok = end == bytes.len() || !is_ident_byte(bytes[end]);
+        if pre_ok && post_ok {
+            return true;
+        }
+        from = start + 1;
+    }
+    false
+}
+
+fn is_ident_byte(b: u8) -> bool {
+    b.is_ascii_alphanumeric() || b == b'_'
+}
+
+fn lint_safety(path: &str, lines: &[Line], out: &mut Vec<Finding>) {
+    for (idx, l) in lines.iter().enumerate() {
+        if !has_word(&l.code, "unsafe") {
+            continue;
+        }
+        let lo = idx.saturating_sub(6);
+        let documented = lines[lo..=idx].iter().any(|w| w.comment.contains("SAFETY:"));
+        if !documented {
+            out.push(Finding {
+                file: path.to_string(),
+                line: idx + 1,
+                id: SAFETY,
+                msg: "`unsafe` without a `// SAFETY:` comment (same line or ≤ 6 lines above)"
+                    .to_string(),
+            });
+        }
+    }
+}
+
+fn lint_relaxed(path: &str, lines: &[Line], out: &mut Vec<Finding>) {
+    // Everything at/after the file's `#[cfg(test)]` is test code (module
+    // layout convention: test mods close the file).
+    let test_start = lines
+        .iter()
+        .position(|l| l.code.contains("#[cfg(test)]"))
+        .unwrap_or(usize::MAX);
+    for (idx, l) in lines.iter().enumerate() {
+        if idx >= test_start || !l.code.contains("Ordering::Relaxed") {
+            continue;
+        }
+        let lo = idx.saturating_sub(3);
+        let justified = lines[lo..=idx].iter().any(|w| w.comment.contains("relaxed:"));
+        if justified {
+            continue;
+        }
+        if let Some(recv) = atomic_receiver(lines, idx) {
+            if RELAXED_ALLOWLIST.contains(&recv.as_str()) {
+                continue;
+            }
+            out.push(Finding {
+                file: path.to_string(),
+                line: idx + 1,
+                id: RELAXED,
+                msg: format!(
+                    "Ordering::Relaxed on `{recv}` — not an allowlisted statistics counter \
+                     and no `// relaxed:` justification within 3 lines"
+                ),
+            });
+        } else {
+            out.push(Finding {
+                file: path.to_string(),
+                line: idx + 1,
+                id: RELAXED,
+                msg: "Ordering::Relaxed without a `// relaxed:` justification within 3 lines"
+                    .to_string(),
+            });
+        }
+    }
+}
+
+/// Receiver identifier of the nearest atomic op at/above `idx` (the same
+/// line first — multi-line `compare_exchange(…)` argument lists put the
+/// orderings on their own lines).
+fn atomic_receiver(lines: &[Line], idx: usize) -> Option<String> {
+    let lo = idx.saturating_sub(6);
+    for j in (lo..=idx).rev() {
+        let code = &lines[j].code;
+        let mut best: Option<usize> = None;
+        for op in ATOMIC_OPS {
+            if let Some(p) = code.rfind(op) {
+                best = Some(best.map_or(p, |b: usize| b.max(p)));
+            }
+        }
+        if let Some(dot) = best {
+            return ident_before(code, dot);
+        }
+    }
+    None
+}
+
+/// The identifier ending just before byte position `dot` (skipping one
+/// trailing `[…]`/`(…)` group, so `self.buckets[i].fetch_add` → `buckets`).
+fn ident_before(code: &str, dot: usize) -> Option<String> {
+    let bytes = code.as_bytes();
+    let mut k = dot;
+    if k > 0 && (bytes[k - 1] == b']' || bytes[k - 1] == b')') {
+        let close = bytes[k - 1];
+        let open = if close == b']' { b'[' } else { b'(' };
+        let mut depth = 0usize;
+        while k > 0 {
+            k -= 1;
+            if bytes[k] == close {
+                depth += 1;
+            } else if bytes[k] == open {
+                depth -= 1;
+                if depth == 0 {
+                    break;
+                }
+            }
+        }
+    }
+    let end = k;
+    while k > 0 && is_ident_byte(bytes[k - 1]) {
+        k -= 1;
+    }
+    if k == end {
+        None
+    } else {
+        Some(code[k..end].to_string())
+    }
+}
+
+fn lint_neon(path: &str, lines: &[Line], out: &mut Vec<Finding>) {
+    // Collect function names declared in this file (`fn name`).
+    let mut fns: Vec<String> = Vec::new();
+    for l in lines {
+        let code = &l.code;
+        let mut from = 0;
+        while let Some(p) = code[from..].find("fn ") {
+            let start = from + p;
+            let pre_ok = start == 0 || !is_ident_byte(code.as_bytes()[start - 1]);
+            if pre_ok {
+                let rest = &code[start + 3..];
+                let name: String =
+                    rest.chars().take_while(|&c| c.is_ascii_alphanumeric() || c == '_').collect();
+                if !name.is_empty() {
+                    fns.push(name);
+                }
+            }
+            from = start + 3;
+        }
+    }
+    let is_pos_cfg = |l: &Line| {
+        l.raw.contains("target_arch = \"aarch64\"")
+            && !l.raw.contains("not(target_arch")
+            // Test-gated aarch64 code IS the parity test — exempt.
+            && !l.raw.contains("all(test")
+            && l.code.contains("target_arch")
+    };
+    for (idx, l) in lines.iter().enumerate() {
+        if !is_pos_cfg(l) {
+            continue;
+        }
+        // A paired scalar fallback within ±60 lines.
+        let lo = idx.saturating_sub(60);
+        let hi = (idx + 60).min(lines.len() - 1);
+        let fallback = lines[lo..=hi]
+            .iter()
+            .any(|w| w.raw.contains("not(target_arch = \"aarch64\")") && w.code.contains("not("));
+        // A `// parity: <fn>` reference within ±10 lines naming a test
+        // that exists in this file.
+        let plo = idx.saturating_sub(10);
+        let phi = (idx + 10).min(lines.len() - 1);
+        let mut parity_named: Option<String> = None;
+        let mut parity_ok = false;
+        for w in &lines[plo..=phi] {
+            if let Some(p) = w.comment.find("parity:") {
+                let name: String = w.comment[p + "parity:".len()..]
+                    .trim_start()
+                    .chars()
+                    .take_while(|&c| c.is_ascii_alphanumeric() || c == '_')
+                    .collect();
+                if !name.is_empty() {
+                    parity_ok |= fns.contains(&name);
+                    parity_named = Some(name);
+                }
+            }
+        }
+        if fallback && parity_ok {
+            continue;
+        }
+        let mut missing = Vec::new();
+        if !fallback {
+            missing.push("a `#[cfg(not(target_arch = \"aarch64\"))]` scalar fallback".to_string());
+        }
+        if !parity_ok {
+            missing.push(match parity_named {
+                Some(n) => format!("`// parity:` names `{n}` but no such fn exists here"),
+                None => "a `// parity: <test_fn>` reference within 10 lines".to_string(),
+            });
+        }
+        out.push(Finding {
+            file: path.to_string(),
+            line: idx + 1,
+            id: NEON,
+            msg: format!("aarch64 intrinsic path missing {}", missing.join(" and ")),
+        });
+    }
+}
+
+fn lint_lock(path: &str, lines: &[Line], out: &mut Vec<Finding>) {
+    // Named guards: (binding, scope depth at declaration).
+    let mut guards: Vec<(String, i64)> = Vec::new();
+    let mut depth: i64 = 0;
+    for (idx, l) in lines.iter().enumerate() {
+        let code = &l.code;
+        // New guard? `let [mut] name = …lock()…` on one line, unless the
+        // initializer *derefs* the temporary guard (`= *…lock()…` copies a
+        // value out; the guard dies at the semicolon).
+        if let Some(name) = guard_binding(code) {
+            guards.retain(|(g, _)| g != &name);
+            guards.push((name, depth + open_delta(code).max(0)));
+        }
+        // Forbidden boundary calls while any guard is live.
+        if !guards.is_empty() {
+            for tok in LOCK_FORBIDDEN {
+                if code.contains(tok) {
+                    let held: Vec<&str> =
+                        guards.iter().map(|(g, _)| g.as_str()).collect();
+                    out.push(Finding {
+                        file: path.to_string(),
+                        line: idx + 1,
+                        id: LOCK,
+                        msg: format!(
+                            "`{}` reached while lock guard(s) [{}] are live — \
+                             drop or scope the guard first",
+                            tok.trim_start_matches('.').trim_end_matches('('),
+                            held.join(", ")
+                        ),
+                    });
+                    break;
+                }
+            }
+        }
+        // Explicit drops end a guard's span.
+        for (g, _) in guards.clone() {
+            if code.contains(&format!("drop({g})")) {
+                guards.retain(|(n, _)| n != &g);
+            }
+        }
+        // Scope tracking: guards die when their block closes.
+        let (min_depth, end_depth) = walk_depth(code, depth);
+        guards.retain(|(_, d)| min_depth >= *d);
+        depth = end_depth;
+    }
+}
+
+/// `Some(binding)` when `code` declares a lock guard.
+fn guard_binding(code: &str) -> Option<String> {
+    let lp = code.find("let ")?;
+    let lock_p = code.find(".lock()")?;
+    if lock_p < lp {
+        return None;
+    }
+    let mut rest = code[lp + 4..].trim_start();
+    rest = rest.strip_prefix("mut ").unwrap_or(rest).trim_start();
+    let name: String =
+        rest.chars().take_while(|&c| c.is_ascii_alphanumeric() || c == '_').collect();
+    if name.is_empty() {
+        return None;
+    }
+    // `let v = *m.lock().unwrap();` copies the value; no guard outlives
+    // the statement.
+    if let Some(eq) = code.find('=') {
+        if code[eq + 1..].trim_start().starts_with('*') {
+            return None;
+        }
+    }
+    Some(name)
+}
+
+/// Net `{`/`}` delta of a line (for the declaration depth of a guard whose
+/// own line opens a block).
+fn open_delta(code: &str) -> i64 {
+    let opens = code.matches('{').count() as i64;
+    let closes = code.matches('}').count() as i64;
+    opens - closes
+}
+
+/// Walk a line's braces: returns (minimum depth reached, depth at end).
+fn walk_depth(code: &str, start: i64) -> (i64, i64) {
+    let mut d = start;
+    let mut min = start;
+    for c in code.chars() {
+        match c {
+            '{' => d += 1,
+            '}' => {
+                d -= 1;
+                min = min.min(d);
+            }
+            _ => {}
+        }
+    }
+    (min, d)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ids(r: &Report) -> Vec<&'static str> {
+        r.findings.iter().map(|f| f.id).collect()
+    }
+
+    // ---- safety-comment -------------------------------------------------
+
+    #[test]
+    fn safety_fires_on_undocumented_unsafe() {
+        let src = "pub fn f(p: *mut u8) {\n    unsafe { *p = 1 };\n}\n";
+        let r = audit_file("src/x.rs", src);
+        assert_eq!(ids(&r), vec![SAFETY]);
+        assert_eq!(r.findings[0].line, 2);
+    }
+
+    #[test]
+    fn safety_accepts_documented_unsafe() {
+        let src = "pub fn f(p: *mut u8) {\n    // SAFETY: p is valid and exclusive\n    unsafe { *p = 1 };\n}\n";
+        let r = audit_file("src/x.rs", src);
+        assert!(r.findings.is_empty(), "{:?}", r.findings);
+    }
+
+    #[test]
+    fn safety_accepts_comment_within_window() {
+        // One intervening code line between comment and the unsafe block —
+        // the batcher's `out_ptr` pattern.
+        let src = "// SAFETY: disjoint ranges, buffer outlives tasks\nlet xs = &x[a..b];\nlet os = unsafe { std::slice::from_raw_parts_mut(p, n) };\n";
+        let r = audit_file("src/x.rs", src);
+        assert!(r.findings.is_empty(), "{:?}", r.findings);
+    }
+
+    #[test]
+    fn safety_ignores_unsafe_in_strings_and_comments() {
+        let src = "// this fn is not unsafe at all\nlet s = \"unsafe\";\n";
+        let r = audit_file("src/x.rs", src);
+        assert!(r.findings.is_empty(), "{:?}", r.findings);
+    }
+
+    #[test]
+    fn safety_waiver_is_reported_not_failed() {
+        let src = "// audit-waive: safety-comment legacy site, tracked in #42\nunsafe { ffi() };\n";
+        let r = audit_file("src/x.rs", src);
+        assert!(r.findings.is_empty(), "{:?}", r.findings);
+        assert_eq!(r.waivers.len(), 1);
+        assert_eq!(r.waivers[0].id, SAFETY);
+        assert!(r.waivers[0].reason.contains("legacy"));
+    }
+
+    // ---- relaxed-ordering -----------------------------------------------
+
+    #[test]
+    fn relaxed_fires_on_unjustified_non_allowlisted_site() {
+        let src = "fn f(flag: &AtomicBool) {\n    flag.store(true, Ordering::Relaxed);\n}\n";
+        let r = audit_file("src/x.rs", src);
+        assert_eq!(ids(&r), vec![RELAXED]);
+        assert!(r.findings[0].msg.contains("flag"));
+    }
+
+    #[test]
+    fn relaxed_accepts_justification_comment() {
+        let src = "fn f(flag: &AtomicBool) {\n    // relaxed: telemetry only; readers tolerate staleness\n    flag.store(true, Ordering::Relaxed);\n}\n";
+        let r = audit_file("src/x.rs", src);
+        assert!(r.findings.is_empty(), "{:?}", r.findings);
+    }
+
+    #[test]
+    fn relaxed_accepts_allowlisted_counter() {
+        let src = "fn f(m: &Metrics) {\n    m.claims.fetch_add(1, Ordering::Relaxed);\n}\n";
+        let r = audit_file("src/x.rs", src);
+        assert!(r.findings.is_empty(), "{:?}", r.findings);
+    }
+
+    #[test]
+    fn relaxed_resolves_indexed_receiver() {
+        let src = "fn f(&self) {\n    self.buckets[idx(v)].fetch_add(1, Ordering::Relaxed);\n}\n";
+        let r = audit_file("src/x.rs", src);
+        assert!(r.findings.is_empty(), "{:?}", r.findings);
+    }
+
+    #[test]
+    fn relaxed_resolves_multiline_compare_exchange() {
+        let src = "fn f(&self) {\n    let _ = self.min_bits.compare_exchange_weak(\n        cur,\n        v,\n        Ordering::Relaxed,\n        Ordering::Relaxed,\n    );\n}\n";
+        let r = audit_file("src/x.rs", src);
+        assert!(r.findings.is_empty(), "{:?}", r.findings);
+    }
+
+    #[test]
+    fn relaxed_exempts_test_code_and_test_files() {
+        let src = "#[cfg(test)]\nmod tests {\n    fn f(x: &AtomicU64) { x.store(1, Ordering::Relaxed); }\n}\n";
+        assert!(audit_file("src/x.rs", src).findings.is_empty());
+        let src2 = "fn f(x: &AtomicU64) { x.store(1, Ordering::Relaxed); }\n";
+        assert!(audit_file("rust/tests/x.rs", src2).findings.is_empty());
+    }
+
+    #[test]
+    fn relaxed_waiver_is_reported() {
+        let src = "fn f(x: &AtomicU64) {\n    // audit-waive: relaxed-ordering migration pending\n    x.store(1, Ordering::Relaxed);\n}\n";
+        let r = audit_file("src/x.rs", src);
+        assert!(r.findings.is_empty(), "{:?}", r.findings);
+        assert_eq!(r.waivers.len(), 1);
+    }
+
+    // ---- neon-parity ----------------------------------------------------
+
+    #[test]
+    fn neon_fires_without_fallback_or_parity() {
+        let src = "pub fn vadd(a: A, b: A) -> A {\n    #[cfg(target_arch = \"aarch64\")]\n    return native(a, b);\n    scalar(a, b)\n}\n";
+        let r = audit_file("src/neon/ops.rs", src);
+        assert_eq!(ids(&r), vec![NEON]);
+        assert!(r.findings[0].msg.contains("fallback"));
+    }
+
+    #[test]
+    fn neon_accepts_paired_fallback_with_parity_test() {
+        let src = "pub fn vadd(a: A, b: A) -> A {\n    // parity: vadd_native_matches_scalar\n    #[cfg(target_arch = \"aarch64\")]\n    return vadd_native(a, b);\n    #[cfg(not(target_arch = \"aarch64\"))]\n    vadd_scalar(a, b)\n}\nfn vadd_scalar(a: A, b: A) -> A { a }\nfn vadd_native_matches_scalar() {}\n";
+        let r = audit_file("src/neon/ops.rs", src);
+        assert!(r.findings.is_empty(), "{:?}", r.findings);
+    }
+
+    #[test]
+    fn neon_rejects_dangling_parity_reference() {
+        let src = "// parity: no_such_test\n#[cfg(target_arch = \"aarch64\")]\nreturn native(a, b);\n#[cfg(not(target_arch = \"aarch64\"))]\nscalar(a, b)\n";
+        let r = audit_file("src/neon/ops.rs", src);
+        assert_eq!(ids(&r), vec![NEON]);
+        assert!(r.findings[0].msg.contains("no_such_test"));
+    }
+
+    #[test]
+    fn neon_ignores_doc_comment_mentions() {
+        let src = "//! Mentions #[cfg(target_arch = \"aarch64\")] in prose only.\nfn f() {}\n";
+        let r = audit_file("src/neon/ops.rs", src);
+        assert!(r.findings.is_empty(), "{:?}", r.findings);
+    }
+
+    #[test]
+    fn neon_exempts_test_gated_modules() {
+        // The parity-test module's own gate is not an intrinsic path.
+        let src = "#[cfg(all(test, target_arch = \"aarch64\"))]\nmod parity_tests {}\n";
+        let r = audit_file("src/neon/ops.rs", src);
+        assert!(r.findings.is_empty(), "{:?}", r.findings);
+    }
+
+    // ---- lock-span ------------------------------------------------------
+
+    #[test]
+    fn lock_fires_on_send_under_live_guard() {
+        let src = "fn f(&self) {\n    let states = self.states.lock().unwrap();\n    for r in states.iter() {\n        r.reply.send(1).unwrap();\n    }\n}\n";
+        let r = audit_file("src/exec/pool.rs", src);
+        assert_eq!(ids(&r), vec![LOCK]);
+        assert!(r.findings[0].msg.contains("states"));
+    }
+
+    #[test]
+    fn lock_accepts_scoped_guard() {
+        let src = "fn f(&self) {\n    let planned = {\n        let weights = self.weights.lock().unwrap();\n        plan(&weights)\n    };\n    self.client.spawn(planned);\n}\n";
+        let r = audit_file("src/exec/pool.rs", src);
+        assert!(r.findings.is_empty(), "{:?}", r.findings);
+    }
+
+    #[test]
+    fn lock_accepts_explicit_drop() {
+        let src = "fn f(&self) {\n    let guard = self.state.lock().unwrap();\n    self.wakeup.notify_all();\n    drop(guard);\n    for w in self.workers.drain(..) {\n        let _ = w.join();\n    }\n}\n";
+        let r = audit_file("src/exec/pool.rs", src);
+        assert!(r.findings.is_empty(), "{:?}", r.findings);
+    }
+
+    #[test]
+    fn lock_ignores_deref_copies() {
+        let src = "fn f(&self) {\n    let t0 = *self.exec_start.lock().unwrap();\n    self.reply.send(t0).unwrap();\n}\n";
+        let r = audit_file("src/exec/pool.rs", src);
+        assert!(r.findings.is_empty(), "{:?}", r.findings);
+    }
+
+    #[test]
+    fn lock_waiver_is_reported() {
+        let src = "fn f(&self) {\n    let g = self.m.lock().unwrap();\n    // audit-waive: lock-span send is non-blocking here\n    self.tx.send(1).unwrap();\n}\n";
+        let r = audit_file("src/coordinator/batcher.rs", src);
+        assert!(r.findings.is_empty(), "{:?}", r.findings);
+        assert_eq!(r.waivers.len(), 1);
+        assert_eq!(r.waivers[0].id, LOCK);
+    }
+
+    #[test]
+    fn lock_only_applies_to_scheduler_files() {
+        let src = "fn f(&self) {\n    let g = self.m.lock().unwrap();\n    self.tx.send(1).unwrap();\n}\n";
+        assert!(audit_file("src/obs/span.rs", src).findings.is_empty());
+    }
+}

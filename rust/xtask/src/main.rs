@@ -1,0 +1,127 @@
+//! `cargo run -p xtask -- audit` — the repo's correctness audit.
+//!
+//! Walks the Rust sources (`rust/src`, `rust/tests`, `rust/benches`,
+//! `examples`) and applies the lint catalogue in [`lints`] (documented in
+//! DESIGN.md §9). Emits `file:line: [lint-id] message` findings, lists
+//! inline waivers, and exits nonzero when any finding survives. `rust/vendor`
+//! (third-party stand-ins) and `rust/xtask` itself (its sources and fixtures
+//! quote lint patterns) are out of scope.
+
+use std::path::{Path, PathBuf};
+
+mod lints;
+mod scan;
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let mut cmd: Option<&str> = None;
+    let mut root: Option<PathBuf> = None;
+    let mut i = 0;
+    while i < args.len() {
+        match args[i].as_str() {
+            "--root" => {
+                i += 1;
+                match args.get(i) {
+                    Some(p) => root = Some(PathBuf::from(p)),
+                    None => usage("--root needs a directory"),
+                }
+            }
+            "audit" if cmd.is_none() => cmd = Some("audit"),
+            other => usage(&format!("unknown argument `{other}`")),
+        }
+        i += 1;
+    }
+    match cmd {
+        Some("audit") => {
+            let root = root.unwrap_or_else(find_repo_root);
+            std::process::exit(run_audit(&root));
+        }
+        _ => usage("expected a subcommand: audit"),
+    }
+}
+
+fn usage(err: &str) -> ! {
+    eprintln!("error: {err}");
+    eprintln!("usage: cargo run -p xtask -- audit [--root <repo-root>]");
+    std::process::exit(2);
+}
+
+/// Ascend from the current directory to the first one containing `rust/src`
+/// (works from the repo root and from `rust/`, where cargo runs us).
+fn find_repo_root() -> PathBuf {
+    let mut dir = std::env::current_dir().expect("current dir");
+    loop {
+        if dir.join("rust").join("src").is_dir() {
+            return dir;
+        }
+        if !dir.pop() {
+            usage("could not locate the repo root (no rust/src above cwd); pass --root");
+        }
+    }
+}
+
+fn run_audit(root: &Path) -> i32 {
+    let mut files: Vec<PathBuf> = Vec::new();
+    for rel in ["rust/src", "rust/tests", "rust/benches", "examples"] {
+        collect_rs(&root.join(rel), &mut files);
+    }
+    files.sort();
+    if files.is_empty() {
+        eprintln!("audit: no .rs files under {} — wrong --root?", root.display());
+        return 2;
+    }
+    let mut findings = Vec::new();
+    let mut waivers = Vec::new();
+    for path in &files {
+        let src = match std::fs::read_to_string(path) {
+            Ok(s) => s,
+            Err(e) => {
+                eprintln!("audit: cannot read {}: {e}", path.display());
+                return 2;
+            }
+        };
+        let rel = path
+            .strip_prefix(root)
+            .unwrap_or(path)
+            .to_string_lossy()
+            .replace('\\', "/");
+        let report = lints::audit_file(&rel, &src);
+        findings.extend(report.findings);
+        waivers.extend(report.waivers);
+    }
+    for w in &waivers {
+        println!("{}:{}: waived [{}] {}", w.file, w.line, w.id, w.reason);
+    }
+    for f in &findings {
+        println!("{}:{}: [{}] {}", f.file, f.line, f.id, f.msg);
+    }
+    println!(
+        "audit: {} files, {} finding(s), {} waiver(s)",
+        files.len(),
+        findings.len(),
+        waivers.len()
+    );
+    if findings.is_empty() {
+        0
+    } else {
+        1
+    }
+}
+
+/// Recursively collect `.rs` files, skipping vendored code and this crate.
+fn collect_rs(dir: &Path, out: &mut Vec<PathBuf>) {
+    let Ok(entries) = std::fs::read_dir(dir) else { return };
+    for entry in entries.flatten() {
+        let path = entry.path();
+        let name = entry.file_name();
+        let name = name.to_string_lossy();
+        if path.is_dir() {
+            if name == "vendor" || name == "xtask" || name == "target" {
+                continue;
+            }
+            collect_rs(&path, out);
+        } else if name.ends_with(".rs") {
+            out.push(path);
+        }
+    }
+}

@@ -1,0 +1,212 @@
+//! Minimal Rust source scanner for the audit lints.
+//!
+//! Splits each source line into its **code** part (string-literal contents
+//! blanked, comments stripped) and its **comment** text, tracking the state
+//! that spans lines: multi-line string literals, raw strings (`r"…"`,
+//! `r#"…"#`, byte variants), and nested block comments. This is a token
+//! heuristic, not a parser — it only has to be right enough that
+//! `Ordering::Relaxed` inside a log message is not a lint site and
+//! `// SAFETY:` inside a string is not a justification. Lints that must see
+//! string literals (the `cfg(target_arch = "aarch64")` attribute) use the
+//! preserved `raw` line alongside `code`.
+
+/// One source line, split by [`clean_lines`].
+#[derive(Debug, Default, Clone)]
+pub struct Line {
+    /// The line as written.
+    pub raw: String,
+    /// Code outside comments, with string/char literal contents removed
+    /// (the delimiting quotes are kept so token shapes survive).
+    pub code: String,
+    /// Comment text (`//…` and block-comment interiors) on this line.
+    pub comment: String,
+}
+
+enum State {
+    Code,
+    /// Inside a normal (or byte) string literal.
+    Str,
+    /// Inside a raw string whose closing quote needs this many `#`s.
+    RawStr(usize),
+    /// Inside block comments, nested this deep.
+    Block(usize),
+}
+
+/// Scan `src` into per-line code/comment views (see module docs).
+pub fn clean_lines(src: &str) -> Vec<Line> {
+    let mut out = Vec::new();
+    let mut state = State::Code;
+    for raw in src.lines() {
+        let chars: Vec<char> = raw.chars().collect();
+        let mut code = String::new();
+        let mut comment = String::new();
+        let mut i = 0;
+        while i < chars.len() {
+            match state {
+                State::Code => {
+                    let c = chars[i];
+                    let next = chars.get(i + 1).copied();
+                    if c == '/' && next == Some('/') {
+                        comment.extend(chars[i..].iter());
+                        i = chars.len();
+                    } else if c == '/' && next == Some('*') {
+                        state = State::Block(1);
+                        i += 2;
+                    } else if let Some((hashes, past_quote)) = raw_string_open(&chars, i) {
+                        code.push('"');
+                        state = State::RawStr(hashes);
+                        i = past_quote;
+                    } else if c == 'b' && next == Some('"') {
+                        code.push('"');
+                        state = State::Str;
+                        i += 2;
+                    } else if c == '"' {
+                        code.push('"');
+                        state = State::Str;
+                        i += 1;
+                    } else if c == '\'' {
+                        if next == Some('\\') {
+                            // Escaped char literal ('\n', '\'', '\u{…}'):
+                            // skip the escaped char, then find the closing
+                            // quote.
+                            let mut j = i + 3;
+                            while j < chars.len() && chars[j] != '\'' && j < i + 14 {
+                                j += 1;
+                            }
+                            i = (j + 1).min(chars.len());
+                        } else if chars.get(i + 2) == Some(&'\'') {
+                            // Plain char literal, including '"' and '{'.
+                            i += 3;
+                        } else {
+                            // Lifetime ('a, 'static): keep the tick.
+                            code.push('\'');
+                            i += 1;
+                        }
+                    } else {
+                        code.push(c);
+                        i += 1;
+                    }
+                }
+                State::Str => {
+                    let c = chars[i];
+                    if c == '\\' {
+                        i += 2; // skip the escaped char (may run past EOL)
+                    } else if c == '"' {
+                        code.push('"');
+                        state = State::Code;
+                        i += 1;
+                    } else {
+                        i += 1;
+                    }
+                }
+                State::RawStr(h) => {
+                    if chars[i] == '"' && count_hashes(&chars, i + 1) >= h {
+                        code.push('"');
+                        state = State::Code;
+                        i += 1 + h;
+                    } else {
+                        i += 1;
+                    }
+                }
+                State::Block(depth) => {
+                    let c = chars[i];
+                    let next = chars.get(i + 1).copied();
+                    if c == '*' && next == Some('/') {
+                        state = if depth == 1 { State::Code } else { State::Block(depth - 1) };
+                        i += 2;
+                    } else if c == '/' && next == Some('*') {
+                        state = State::Block(depth + 1);
+                        i += 2;
+                    } else {
+                        comment.push(c);
+                        i += 1;
+                    }
+                }
+            }
+        }
+        out.push(Line { raw: raw.to_string(), code, comment });
+    }
+    out
+}
+
+/// If `chars[i..]` opens a raw string literal (`r"`, `r#"`, `br##"`, …),
+/// return `(hash count, index just past the opening quote)`.
+fn raw_string_open(chars: &[char], i: usize) -> Option<(usize, usize)> {
+    let mut j = i;
+    if chars.get(j) == Some(&'b') {
+        j += 1;
+    }
+    if chars.get(j) != Some(&'r') {
+        return None;
+    }
+    j += 1;
+    let hashes = count_hashes(chars, j);
+    j += hashes;
+    if chars.get(j) == Some(&'"') {
+        Some((hashes, j + 1))
+    } else {
+        None
+    }
+}
+
+fn count_hashes(chars: &[char], from: usize) -> usize {
+    chars[from.min(chars.len())..].iter().take_while(|&&c| c == '#').count()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn strips_line_comments_into_comment_field() {
+        let l = clean_lines("let x = 1; // SAFETY: not really code");
+        assert_eq!(l[0].code.trim(), "let x = 1;");
+        assert!(l[0].comment.contains("SAFETY:"));
+    }
+
+    #[test]
+    fn blanks_string_contents() {
+        let l = clean_lines(r#"panic!("uses Ordering::Relaxed in text");"#);
+        assert!(!l[0].code.contains("Relaxed"));
+        assert!(l[0].code.contains("panic!"));
+        assert!(l[0].raw.contains("Relaxed"));
+    }
+
+    #[test]
+    fn tracks_multiline_strings() {
+        let src = "let s = \"first\nOrdering::Relaxed still in string\";\nlet y = 2;";
+        let l = clean_lines(src);
+        assert!(!l[1].code.contains("Relaxed"));
+        assert_eq!(l[2].code.trim(), "let y = 2;");
+    }
+
+    #[test]
+    fn handles_raw_strings_and_hashes() {
+        let src = "let s = r#\"json \"quoted\" body\"#; let t = 3;";
+        let l = clean_lines(src);
+        assert!(l[0].code.contains("let t = 3;"));
+        assert!(!l[0].code.contains("quoted"));
+    }
+
+    #[test]
+    fn char_literals_do_not_open_strings() {
+        let src = "if c == b'\"' { x = '\\''; } let z = 'a'; // tail";
+        let l = clean_lines(src);
+        assert!(l[0].code.contains("let z ="));
+        assert!(l[0].comment.contains("tail"));
+    }
+
+    #[test]
+    fn lifetimes_survive() {
+        let l = clean_lines("fn f<'a>(x: &'a str) -> &'a str { x }");
+        assert!(l[0].code.contains("<'a>"));
+    }
+
+    #[test]
+    fn nested_block_comments() {
+        let src = "a /* outer /* inner */ still comment */ b";
+        let l = clean_lines(src);
+        assert_eq!(l[0].code.replace(' ', ""), "ab");
+        assert!(l[0].comment.contains("inner"));
+    }
+}

@@ -8,6 +8,9 @@ export ARBORS_SCALE=quick
 (cd rust && cargo build --release)
 arbors() { rust/target/release/arbors "$@"; }
 
+# Correctness tooling (ISSUE 7): the README's audit command, verbatim.
+(cd rust && cargo run -p xtask -- audit)
+
 arbors datasets
 
 arbors train --dataset magic --n 2000 --trees 32 --leaves 32 --out /tmp/model.json

@@ -822,6 +822,79 @@ pub fn int8_tiers(scale: &Scale) -> String {
 }
 
 // ---------------------------------------------------------------------------
+// ISSUE 8 — FLInt carrier tier: f32 vs flint latency per engine family
+// ---------------------------------------------------------------------------
+
+/// ISSUE 8 headline: per-engine f32-vs-FLInt latency. The FLInt carrier
+/// ([`crate::quant::flint`]) moves every threshold compare to the integer
+/// pipe while leaves stay f32, so outputs are bit-identical to the float
+/// tier by construction — asserted here on the measured batch (the real
+/// contract lives in `rust/tests/flint_exact.rs`), which is why the table
+/// has no accuracy column. Machine-readable JSON to `results/flint.json`.
+pub fn flint(scale: &Scale, smoke: bool) -> String {
+    use crate::util::Json;
+
+    let eval_n = if smoke { scale.eval_n.min(64) } else { scale.eval_n };
+    let repeats = if smoke { 1 } else { scale.repeats };
+    let ds = DatasetId::Magic.generate(DatasetId::Magic.default_n(), 0xD5 ^ 64);
+    let (train, _) = ds.split(0.2, 7);
+    let f = super::harness::cached_rf(&train, scale.cls_trees, 64);
+    let x = eval_batch(&ds, eval_n);
+    let n = x.len() / ds.d;
+
+    let mut out = String::new();
+    out.push_str(&format!(
+        "FLInt carrier vs f32 (scale={}, RF {} trees x 64 leaves, {} rows)\n\
+         integer threshold compares, float leaves/accumulation; outputs are\n\
+         bit-identical to f32 (asserted per engine), so this is pure latency\n\n",
+        scale.name, scale.cls_trees, n
+    ));
+    let mut tw = TableWriter::new(vec![8, 13, 15, 10]);
+    tw.row_str(&["engine", "f32 µs/inst", "flint µs/inst", "speedup"]);
+    tw.sep();
+    let mut engines_json = Vec::new();
+    for kind in EngineKind::ALL {
+        let Some(ef) = build_engine_arc(kind, Precision::F32, &f) else { continue };
+        let Some(efl) = build_engine_arc(kind, Precision::F32Flint, &f) else { continue };
+        // Bit-identity sanity on the batch we are about to time — catches a
+        // bench-side build mix-up, not a substitute for the property tests.
+        assert_eq!(
+            ef.predict(&x),
+            efl.predict(&x),
+            "{}: FLInt diverged from its f32 twin",
+            kind.short()
+        );
+        let tf = time_per_instance(ef.as_ref(), &x, repeats);
+        let tfl = time_per_instance(efl.as_ref(), &x, repeats);
+        tw.row(&[
+            kind.short().to_string(),
+            format!("{tf:.2}"),
+            format!("{tfl:.2}"),
+            format!("{:.2}x", tf / tfl),
+        ]);
+        engines_json.push(Json::from_pairs(vec![
+            ("engine", Json::Str(kind.short().to_string())),
+            ("f32_us_per_instance", Json::Num(tf)),
+            ("flint_us_per_instance", Json::Num(tfl)),
+            ("flint_speedup_vs_f32", Json::Num(tf / tfl)),
+            ("bit_identical", Json::Bool(true)),
+        ]));
+    }
+    out.push_str(&tw.finish());
+    let report = Json::from_pairs(vec![
+        ("experiment", Json::Str("flint".to_string())),
+        ("scale", Json::Str(scale.name.to_string())),
+        ("dataset", Json::Str("magic".to_string())),
+        ("trees", Json::Num(f.n_trees() as f64)),
+        ("rows", Json::Num(n as f64)),
+        ("engines", Json::Arr(engines_json)),
+    ]);
+    archive_json("flint", &report);
+    out.push_str("\narchived JSON: results/flint.json\n");
+    out
+}
+
+// ---------------------------------------------------------------------------
 // Extra F — serving: shared pool vs per-deployment pools
 // ---------------------------------------------------------------------------
 
@@ -1113,7 +1186,7 @@ pub fn adaptive(scale: &Scale, threads: usize, smoke: bool) -> String {
 /// bench-history job runs this on every push to `main` against the tracked
 /// `dev/bench/data.js`; `bench --gate` then compares PRs against the
 /// rolling median.
-pub fn smoke(scale: &Scale, data_path: &std::path::Path) -> anyhow::Result<String> {
+pub fn smoke(scale: &Scale, data_path: &std::path::Path, matrix: bool) -> anyhow::Result<String> {
     use crate::coordinator::{BatchConfig, Server};
     use crate::obs::bench_data::{self, BenchRecord};
     use crate::util::Summary;
@@ -1125,12 +1198,15 @@ pub fn smoke(scale: &Scale, data_path: &std::path::Path) -> anyhow::Result<Strin
     let x = eval_batch(&ds, scale.eval_n);
     let mut records = Vec::new();
 
-    // Engine latencies: one series per headline tier (float, int16, int8).
+    // Engine latencies: one series per headline tier (float, int16, int8,
+    // and the FLInt carrier so the PR gate tracks it from this PR on).
     let tiers = [
         (EngineKind::Rs, Precision::F32),
         (EngineKind::Vqs, Precision::F32),
         (EngineKind::Rs, Precision::I16),
         (EngineKind::Vqs, Precision::I8),
+        (EngineKind::Rs, Precision::F32Flint),
+        (EngineKind::Vqs, Precision::F32Flint),
     ];
     for (kind, precision) in tiers {
         let Some(e) = build_engine_arc(kind, precision, &f) else { continue };
@@ -1144,6 +1220,25 @@ pub fn smoke(scale: &Scale, data_path: &std::path::Path) -> anyhow::Result<Strin
             s.std,
             "µs/instance",
         ));
+    }
+
+    // `--matrix`: additionally time every named config in the version
+    // matrix (`crate::bench::matrix`), one stable `matrix/<name>` series
+    // each, so historical tiers stay comparable next to new ones.
+    if matrix {
+        for c in super::matrix::MatrixConfig::ALL {
+            let e = c.build(&f)?;
+            let runs: Vec<f64> = (0..scale.repeats.max(3))
+                .map(|_| time_per_instance(e.as_ref(), &x, 1))
+                .collect();
+            let s = Summary::of(&runs);
+            records.push(BenchRecord::new(
+                &format!("matrix/{}", c.name()),
+                s.mean,
+                s.std,
+                "µs/instance",
+            ));
+        }
     }
 
     // Serving throughput (a `/s` unit, so the gate also covers the
@@ -1505,9 +1600,11 @@ mod tests {
         let path = std::env::temp_dir()
             .join(format!("arbors_smoke_exp_{}.js", std::process::id()));
         let _ = std::fs::remove_file(&path);
-        let s = smoke(&quick(), &path).unwrap();
+        let s = smoke(&quick(), &path, false).unwrap();
         assert!(s.contains("serving/throughput"), "{s}");
         assert!(s.contains("req/s"), "{s}");
+        // The FLInt carrier series joined the gate history this PR.
+        assert!(s.contains("magic/flRS"), "flint series missing:\n{s}");
         let data = bench_data::load(&path);
         bench_data::validate(&data).unwrap();
         let entries = data.get("entries").and_then(|e| e.get("smoke")).unwrap();
@@ -1515,10 +1612,66 @@ mod tests {
         // Engine-tier series are present alongside the serving ones.
         let benches =
             entries.as_arr().unwrap()[0].get("benches").and_then(|b| b.as_arr()).unwrap();
-        assert!(benches.len() >= 4, "engine tiers + serving series");
+        assert!(benches.len() >= 6, "engine tiers (incl. flint) + serving series");
         // A single entry has no baseline, so the gate passes deterministically.
         bench_data::gate(&path).expect("fresh history must pass the gate");
         let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn smoke_matrix_appends_one_series_per_config() {
+        use crate::bench::matrix::MatrixConfig;
+        use crate::obs::bench_data;
+        let path = std::env::temp_dir()
+            .join(format!("arbors_smoke_matrix_{}.js", std::process::id()));
+        let _ = std::fs::remove_file(&path);
+        let s = smoke(&quick(), &path, true).unwrap();
+        let data = bench_data::load(&path);
+        let entries = data.get("entries").and_then(|e| e.get("smoke")).unwrap();
+        let benches =
+            entries.as_arr().unwrap()[0].get("benches").and_then(|b| b.as_arr()).unwrap();
+        // Every registry config produced its series — count derived from
+        // the enum, never a literal.
+        for c in MatrixConfig::ALL {
+            let name = format!("matrix/{}", c.name());
+            assert!(
+                benches
+                    .iter()
+                    .any(|b| b.get("name").and_then(|v| v.as_str()) == Some(name.as_str())),
+                "{name} series missing:\n{s}"
+            );
+        }
+        let n_matrix = benches
+            .iter()
+            .filter(|b| {
+                b.get("name").and_then(|v| v.as_str()).is_some_and(|n| n.starts_with("matrix/"))
+            })
+            .count();
+        assert_eq!(n_matrix, MatrixConfig::ALL.len());
+        bench_data::gate(&path).expect("fresh history must pass the gate");
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn flint_runs_and_reports() {
+        let s = flint(&quick(), true);
+        assert!(s.contains("flint µs/inst"), "{s}");
+        // All five families appear (bit-identity asserted inside).
+        for e in ["NA", "IE", "QS", "VQS", "RS"] {
+            assert!(s.contains(e), "{e} row missing:\n{s}");
+        }
+        assert!(s.contains("flint.json"), "{s}");
+        let path = super::super::harness::results_dir().join("flint.json");
+        let text = std::fs::read_to_string(&path).unwrap();
+        let j = crate::util::Json::parse(&text).unwrap();
+        assert_eq!(j.get("experiment").and_then(|v| v.as_str()), Some("flint"));
+        let engines = j.get("engines").and_then(|v| v.as_arr()).unwrap();
+        assert_eq!(engines.len(), EngineKind::ALL.len(), "one row per engine family");
+        for e in engines {
+            assert!(e.get("f32_us_per_instance").and_then(|v| v.as_f64()).unwrap() > 0.0);
+            assert!(e.get("flint_us_per_instance").and_then(|v| v.as_f64()).unwrap() > 0.0);
+            assert_eq!(e.get("bit_identical").and_then(|v| v.as_bool()), Some(true));
+        }
     }
 
     #[test]

@@ -1,0 +1,138 @@
+//! Version-matrix bench registry: named engine configurations pinned to
+//! the PR that introduced them, so historical tiers stay measurable next
+//! to new ones (`bench --exp smoke --matrix` times every entry and appends
+//! one perf-history series per config). Enum-iterated — adding a tier
+//! means adding a variant here, and every count/coverage assertion derives
+//! from [`MatrixConfig::ALL`], never from a literal.
+
+use crate::engine::{self, Engine, EngineKind, Precision};
+use crate::forest::Forest;
+
+/// One named configuration in the version matrix. Each maps to the
+/// (engine kind, precision, build path) that headlined the PR it is named
+/// after; the build paths are the same public entry points the CLI and
+/// selector use, so a matrix row measures exactly what that PR shipped.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum MatrixConfig {
+    /// PR 1 baseline: RapidScorer at plain f32.
+    Pr1F32,
+    /// PR 2 int16 tier with the saturation-fixed *global* §5 scale.
+    Pr2I16Global,
+    /// PR 4 int8 tier under the `quantize_i8_auto` policy (global scale,
+    /// upgraded to per-tree leaf scales exactly when that provably restores
+    /// a native i8 accumulator).
+    Pr4I8PerTree,
+    /// PR 5 int16 tier with per-tree leaf scales
+    /// ([`engine::build_i16_per_tree`]).
+    Pr5I16PerTree,
+    /// PR 8 FLInt carrier tier: integer threshold compares, f32 leaves,
+    /// bit-identical to [`MatrixConfig::Pr1F32`].
+    Pr8Flint,
+}
+
+impl MatrixConfig {
+    /// Every config, oldest first — the iteration order of the matrix
+    /// table and of the `matrix/<name>` perf-history series.
+    pub const ALL: [MatrixConfig; 5] = [
+        MatrixConfig::Pr1F32,
+        MatrixConfig::Pr2I16Global,
+        MatrixConfig::Pr4I8PerTree,
+        MatrixConfig::Pr5I16PerTree,
+        MatrixConfig::Pr8Flint,
+    ];
+
+    /// Stable series name (also the table row label).
+    pub fn name(&self) -> &'static str {
+        match self {
+            MatrixConfig::Pr1F32 => "pr1-f32",
+            MatrixConfig::Pr2I16Global => "pr2-i16-global",
+            MatrixConfig::Pr4I8PerTree => "pr4-i8-per-tree",
+            MatrixConfig::Pr5I16PerTree => "pr5-i16-per-tree",
+            MatrixConfig::Pr8Flint => "pr8-flint",
+        }
+    }
+
+    /// Traversal strategy this config times. Quantized tiers use VQS (the
+    /// SIMD engine their PRs centered on); float-semantics tiers use RS
+    /// (the paper's headline engine).
+    pub fn kind(&self) -> EngineKind {
+        match self {
+            MatrixConfig::Pr1F32 | MatrixConfig::Pr8Flint => EngineKind::Rs,
+            MatrixConfig::Pr2I16Global => EngineKind::Rs,
+            MatrixConfig::Pr4I8PerTree | MatrixConfig::Pr5I16PerTree => EngineKind::Vqs,
+        }
+    }
+
+    /// Numeric tier of this config.
+    pub fn precision(&self) -> Precision {
+        match self {
+            MatrixConfig::Pr1F32 => Precision::F32,
+            MatrixConfig::Pr2I16Global | MatrixConfig::Pr5I16PerTree => Precision::I16,
+            MatrixConfig::Pr4I8PerTree => Precision::I8,
+            MatrixConfig::Pr8Flint => Precision::F32Flint,
+        }
+    }
+
+    /// Build the configured engine through the same entry point the PR
+    /// shipped: `engine::build` with `quant=None` (global i16 scale /
+    /// auto-policy i8), or the dedicated per-tree i16 path.
+    pub fn build(&self, forest: &Forest) -> anyhow::Result<Box<dyn Engine>> {
+        match self {
+            MatrixConfig::Pr5I16PerTree => engine::build_i16_per_tree(self.kind(), forest),
+            _ => engine::build(self.kind(), self.precision(), forest, None),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::DatasetId;
+
+    fn small_forest() -> Forest {
+        let ds = DatasetId::Magic.generate(256, 0xA7);
+        let (train, _) = ds.split(0.2, 7);
+        super::super::harness::cached_rf(&train, 4, 16)
+    }
+
+    #[test]
+    fn names_are_unique_and_stable() {
+        let names: Vec<&str> = MatrixConfig::ALL.iter().map(|c| c.name()).collect();
+        let mut dedup = names.clone();
+        dedup.sort();
+        dedup.dedup();
+        assert_eq!(dedup.len(), MatrixConfig::ALL.len(), "duplicate matrix names");
+        // The registry is the source of truth for downstream series names —
+        // renaming a config orphans its perf history, so pin the set.
+        assert!(names.contains(&"pr2-i16-global"));
+        assert!(names.contains(&"pr4-i8-per-tree"));
+        assert!(names.contains(&"pr8-flint"));
+    }
+
+    #[test]
+    fn every_config_builds_and_predicts() {
+        let f = small_forest();
+        let x: Vec<f32> = (0..4 * f.n_features).map(|i| (i as f32 * 0.37).sin()).collect();
+        for c in MatrixConfig::ALL {
+            let e = c.build(&f).unwrap_or_else(|e| panic!("{} failed to build: {e}", c.name()));
+            assert_eq!(
+                e.name(),
+                engine::variant_name(c.kind(), c.precision()),
+                "{} built the wrong variant",
+                c.name()
+            );
+            let y = e.predict(&x);
+            assert_eq!(y.len(), 4 * f.n_classes);
+            assert!(y.iter().all(|v| v.is_finite()), "{} non-finite scores", c.name());
+        }
+    }
+
+    #[test]
+    fn flint_config_is_bit_identical_to_f32_config() {
+        let f = small_forest();
+        let x: Vec<f32> = (0..16 * f.n_features).map(|i| (i as f32 * 0.61).cos()).collect();
+        let ef = MatrixConfig::Pr1F32.build(&f).unwrap();
+        let efl = MatrixConfig::Pr8Flint.build(&f).unwrap();
+        assert_eq!(ef.predict(&x), efl.predict(&x), "pr8-flint must match pr1-f32 bit-for-bit");
+    }
+}

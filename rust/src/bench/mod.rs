@@ -8,5 +8,6 @@
 
 pub mod experiments;
 pub mod harness;
+pub mod matrix;
 
 pub use harness::{time_per_instance, Scale, TableWriter};

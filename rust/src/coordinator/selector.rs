@@ -167,9 +167,9 @@ pub fn select_engine_tier(
     let ref_argmax =
         Forest::argmax(&forest.predict_batch(calibration), forest.n_classes);
     let mut candidates = Vec::new();
-    // The paper's ten variants plus the int8 tier (q8NA/q8QS/q8VQS), each
-    // built once; plus the i16 per-tree-scale candidate (`qVQS+pt`,
-    // ISSUE 5 satellite) — same VQS traversal, leaves at per-tree scales.
+    // The paper's ten variants plus the int8 and FLInt tiers, each built
+    // once; plus the i16 per-tree-scale candidate (`qVQS+pt`) — same VQS
+    // traversal, leaves at per-tree scales.
     let mut entries: Vec<(EngineKind, Precision, bool, Arc<dyn Engine>)> = Vec::new();
     for (kind, precision) in crate::engine::all_variants_with_i8() {
         if tier.is_some_and(|p| p != precision) {
@@ -259,6 +259,25 @@ pub fn select_engine_tier(
                 device_us_per_instance: device_est,
                 agreement,
             });
+        }
+    }
+    // FLInt engines are bit-identical to their f32 twins by construction,
+    // so a flint candidate's agreement is *definitionally* its f32 twin's —
+    // assert it rather than gate on it (a mismatch is a carrier bug, not a
+    // precision trade-off). A tier filter that excludes f32 leaves no twin
+    // to compare against.
+    for fl in candidates.iter().filter(|c| c.precision == Precision::F32Flint) {
+        if let Some(twin) = candidates.iter().find(|c| {
+            c.precision == Precision::F32
+                && c.kind == fl.kind
+                && c.threads == fl.threads
+                && !c.per_tree
+        }) {
+            assert_eq!(
+                fl.agreement, twin.agreement,
+                "{}: FLInt agreement diverged from its f32 twin {}",
+                fl.name, twin.name
+            );
         }
     }
     candidates.sort_by(|a, b| {
@@ -368,6 +387,34 @@ mod tests {
         .unwrap();
         assert_eq!(sel.candidates.len(), crate::engine::i8_variants().len());
         assert!(sel.candidates.iter().all(|c| c.precision == Precision::I8));
+
+        // The flint tier filter likewise ranks exactly the five FLInt
+        // engines — and their agreement with the float reference matches
+        // plain f32 (same argmax tie-breaks, bit-identical scores).
+        let self32 = super::select_engine_tier(
+            &f,
+            &ds.x[..ds.d * 64],
+            None,
+            1,
+            &[1],
+            Some(Precision::F32),
+        )
+        .unwrap();
+        let selfl = super::select_engine_tier(
+            &f,
+            &ds.x[..ds.d * 64],
+            None,
+            1,
+            &[1],
+            Some(Precision::F32Flint),
+        )
+        .unwrap();
+        assert_eq!(selfl.candidates.len(), crate::engine::flint_variants().len());
+        assert!(selfl.candidates.iter().all(|c| c.precision == Precision::F32Flint));
+        for fl in &selfl.candidates {
+            let twin = self32.candidates.iter().find(|c| c.kind == fl.kind).unwrap();
+            assert_eq!(fl.agreement, twin.agreement, "{}", fl.name);
+        }
     }
 
     #[test]

@@ -225,6 +225,7 @@ mod tests {
             stream_load_bytes: 64_000,
             random_loads: 2_000,
             store_bytes: 8_000,
+            ..Default::default()
         }
     }
 

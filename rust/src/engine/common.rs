@@ -140,6 +140,35 @@ impl QsModel<f32, f32> {
     }
 }
 
+impl QsModel<f32, f32> {
+    /// Re-encode a prepared float model through the FLInt carrier
+    /// ([`crate::quant::flint`]): thresholds become order-preserving i32s
+    /// (`encode_threshold`, -0.0 canonicalized), everything else — masks,
+    /// offsets, f32 leaf tables, base scores — is shared verbatim, so the
+    /// carrier engines reuse the f32 score paths untouched.
+    ///
+    /// The per-feature ascending threshold order survives the re-encoding
+    /// (the map is strictly monotone and IEEE-equal thresholds encode
+    /// equal), so QuickScorer's break-at-first-false scan stays valid.
+    pub fn to_flint(&self) -> QsModel<i32, f32> {
+        QsModel {
+            n_features: self.n_features,
+            n_classes: self.n_classes,
+            n_trees: self.n_trees,
+            leaf_words: self.leaf_words,
+            offsets: self.offsets.clone(),
+            thresholds: crate::quant::flint::encode_thresholds(&self.thresholds),
+            tree_ids: self.tree_ids.clone(),
+            masks: self.masks.clone(),
+            leaf_values: self.leaf_values.clone(),
+            base_f32: self.base_f32.clone(),
+            base_i32: Vec::new(),
+            scale: 1.0,
+            tree_shifts: self.tree_shifts.clone(),
+        }
+    }
+}
+
 impl<S: QuantInt> QsModel<S, S> {
     /// Prepare the fixed-point QuickScorer structures from a quantized
     /// forest (any storage tier: i16 or i8).

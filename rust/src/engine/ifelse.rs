@@ -66,6 +66,23 @@ fn build_f32(t: &crate::forest::Tree, c: Child) -> IeNode<f32, f32> {
     }
 }
 
+/// Branch structure with FLInt-encoded immediates: thresholds become
+/// order-preserving i32s, leaf rows stay f32 — representation only.
+fn build_flint(t: &crate::forest::Tree, c: Child) -> IeNode<i32, f32> {
+    match c {
+        Child::Leaf(l) => IeNode::Leaf { value: t.leaf_row(l as usize).to_vec() },
+        Child::Inner(i) => {
+            let n = &t.nodes[i as usize];
+            IeNode::Split {
+                feature: n.feature,
+                threshold: crate::quant::flint::encode_threshold(n.threshold),
+                left: Box::new(build_flint(t, n.left)),
+                right: Box::new(build_flint(t, n.right)),
+            }
+        }
+    }
+}
+
 fn build_q<S: QuantInt>(
     t: &crate::quant::QTree<S>,
     c: Child,
@@ -174,9 +191,116 @@ impl Engine for IfElseEngine {
                 // is one load per node.
                 tr.random_loads += depth;
                 tr.scalar_fp += depth;
+                tr.cmp_fp += depth;
                 tr.branch += 2 * depth; // if + jump-over-else
                 tr.branch_mispredictable += depth / 2;
                 tr.scalar_fp += c;
+            }
+        }
+        tr
+    }
+
+    fn memory_bytes(&self) -> usize {
+        self.mem_bytes
+    }
+}
+
+/// FLInt IE engine (flIE): the [`IfElseEngine`] branch structure with
+/// integer immediates — each row is FLInt-encoded once
+/// ([`crate::quant::flint::encode_batch_le`], NaN → `i32::MAX`) and every
+/// split compares i32s; leaf accumulation is the untouched f32 path, so
+/// outputs are **bit-identical** to the float engine.
+pub struct FlintIfElseEngine {
+    roots: Vec<IeNode<i32, f32>>,
+    base: Vec<f32>,
+    n_features: usize,
+    n_classes: usize,
+    mem_bytes: usize,
+}
+
+impl FlintIfElseEngine {
+    pub fn new(f: &Forest) -> FlintIfElseEngine {
+        let roots = f
+            .trees
+            .iter()
+            .map(|t| {
+                if t.nodes.is_empty() {
+                    IeNode::Leaf { value: t.leaf_values.clone() }
+                } else {
+                    build_flint(t, Child::Inner(0))
+                }
+            })
+            .collect();
+        let splits = f.n_nodes();
+        let leaves: usize = f.trees.iter().map(|t| t.n_leaves).sum();
+        let mem_bytes = splits * 40 + leaves * (32 + f.n_classes * 4);
+        FlintIfElseEngine {
+            roots,
+            base: f.base_score.clone(),
+            n_features: f.n_features,
+            n_classes: f.n_classes,
+            mem_bytes,
+        }
+    }
+}
+
+impl Engine for FlintIfElseEngine {
+    fn name(&self) -> String {
+        "flIE".into()
+    }
+
+    fn lanes(&self) -> usize {
+        1
+    }
+
+    fn n_features(&self) -> usize {
+        self.n_features
+    }
+
+    fn n_classes(&self) -> usize {
+        self.n_classes
+    }
+
+    fn predict_batch(&self, x: &[f32], out: &mut [f32]) {
+        let d = self.n_features;
+        let c = self.n_classes;
+        let n = x.len() / d;
+        let mut ex = Vec::with_capacity(x.len());
+        crate::quant::flint::encode_batch_le(x, &mut ex);
+        for i in 0..n {
+            let row = &ex[i * d..(i + 1) * d];
+            let o = &mut out[i * c..(i + 1) * c];
+            o.copy_from_slice(&self.base);
+            let le = |f: u32, t: i32| row[f as usize] <= t;
+            for root in &self.roots {
+                for (dst, &v) in o.iter_mut().zip(root.walk(&le)) {
+                    *dst += v;
+                }
+            }
+        }
+    }
+
+    fn count_ops(&self, x: &[f32]) -> OpTrace {
+        let d = self.n_features;
+        let c = self.n_classes as u64;
+        let n = x.len() / d;
+        let mut ex = Vec::new();
+        crate::quant::flint::encode_batch_le(x, &mut ex);
+        let mut tr = OpTrace::new();
+        // Feature encoding: one integer fixup + store per value (no FP).
+        tr.scalar_alu += (n * d) as u64;
+        tr.store_bytes += (n * d * std::mem::size_of::<i32>()) as u64;
+        for i in 0..n {
+            let row = &ex[i * d..(i + 1) * d];
+            let le = |f: u32, t: i32| row[f as usize] <= t;
+            for root in &self.roots {
+                let depth = root.depth_walk(&le);
+                tr.random_loads += depth;
+                tr.scalar_alu += depth; // integer compares on immediates
+                tr.cmp_int += depth;
+                tr.branch += 2 * depth;
+                tr.branch_mispredictable += depth / 2;
+                tr.scalar_fp += c; // leaf adds stay f32
             }
         }
         tr
@@ -285,6 +409,7 @@ impl<S: QuantInt> Engine for QIfElseEngine<S> {
                 let depth = root.depth_walk(&le);
                 tr.random_loads += depth;
                 tr.scalar_alu += depth;
+                tr.cmp_int += depth;
                 tr.branch += 2 * depth;
                 tr.branch_mispredictable += depth / 2;
                 tr.scalar_alu += c;
@@ -356,6 +481,30 @@ mod tests {
         let qf = QForest::<i8>::from_forest_per_tree(&f, cfg);
         let e = QIfElseEngine::new(&qf);
         assert_eq!(e.predict(&ds.x), qf.predict_batch(&ds.x));
+    }
+
+    #[test]
+    #[cfg_attr(miri, ignore)] // heavy: trains a forest; no unsafe for Miri to check
+    fn flint_ie_bit_identical_to_float_ie() {
+        let (f, ds) = setup();
+        let fl = FlintIfElseEngine::new(&f);
+        let fe = IfElseEngine::new(&f);
+        assert_eq!(fl.name(), "flIE");
+        assert_eq!(fl.predict(&ds.x), fe.predict(&ds.x));
+
+        // Adversarial rows: NaN, -0.0, a denormal and -inf must all route
+        // exactly as the float engine routes them.
+        let mut adv = ds.x[..4 * ds.d].to_vec();
+        adv[0] = f32::NAN;
+        adv[ds.d] = -0.0;
+        adv[2 * ds.d] = f32::from_bits(0x0000_0001);
+        adv[3 * ds.d] = f32::NEG_INFINITY;
+        assert_eq!(fl.predict(&adv), fe.predict(&adv));
+
+        let tr = fl.count_ops(&ds.x[..4 * ds.d]);
+        assert!(tr.cmp_int > 0);
+        assert_eq!(tr.cmp_fp, 0);
+        assert!(tr.scalar_fp > 0); // leaf adds stay float
     }
 
     #[test]

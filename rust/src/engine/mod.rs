@@ -17,6 +17,11 @@
 //! accumulation, [`build`] re-quantizes with per-tree leaf scales
 //! ([`crate::quant::QForest::from_forest_per_tree`]) if that provably
 //! restores a native i8 accumulator.
+//! Prefix `fl` (e.g. `flVQS`) marks the FLInt carrier tier
+//! ([`crate::quant::flint`]): threshold compares move to the integer pipe
+//! via an order-preserving f32 → i32 bit trick while leaves stay f32, so
+//! outputs are bit-identical to the float variants — a virtual precision,
+//! not a quantization.
 //! All engines implement [`Engine`] and must agree with the naive reference
 //! ([`crate::forest::Forest::predict_batch`] /
 //! [`crate::quant::QForest::predict_batch`] over the same quantized
@@ -105,28 +110,38 @@ impl EngineKind {
     }
 
     pub fn from_short(s: &str) -> Option<EngineKind> {
-        let bare = s.strip_prefix("q8").or_else(|| s.strip_prefix('q')).unwrap_or(s);
+        let bare = s
+            .strip_prefix("fl")
+            .or_else(|| s.strip_prefix("q8"))
+            .or_else(|| s.strip_prefix('q'))
+            .unwrap_or(s);
         let up = bare.to_ascii_uppercase();
         Self::ALL.iter().copied().find(|k| k.short() == up)
     }
 }
 
-/// Numeric representation: float, the paper's 16-bit fixed point (§5), or
-/// the int8 tier (v = 16, half the model bytes again).
+/// Numeric representation: float, the paper's 16-bit fixed point (§5), the
+/// int8 tier (v = 16, half the model bytes again), or the FLInt carrier
+/// tier — f32 semantics carried on i32 compares ([`crate::quant::flint`]),
+/// bit-identical to [`Precision::F32`] by construction.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub enum Precision {
     F32,
     I16,
     I8,
+    /// Virtual tier: thresholds/features FLInt-encoded to i32 for the
+    /// compare, leaves and accumulation unchanged f32.
+    F32Flint,
 }
 
 impl Precision {
-    /// CLI name (`--precision {f32,i16,i8}`).
+    /// CLI name (`--precision {f32,i16,i8,flint}`).
     pub fn name(&self) -> &'static str {
         match self {
             Precision::F32 => "f32",
             Precision::I16 => "i16",
             Precision::I8 => "i8",
+            Precision::F32Flint => "flint",
         }
     }
 
@@ -135,6 +150,7 @@ impl Precision {
             "f32" | "float" => Some(Precision::F32),
             "i16" | "int16" => Some(Precision::I16),
             "i8" | "int8" => Some(Precision::I8),
+            "flint" => Some(Precision::F32Flint),
             _ => None,
         }
     }
@@ -145,6 +161,8 @@ impl Precision {
             Precision::F32 => 4,
             Precision::I16 => 2,
             Precision::I8 => 1,
+            // i32 thresholds, f32 leaves — 4 bytes either way.
+            Precision::F32Flint => 4,
         }
     }
 }
@@ -181,6 +199,15 @@ pub fn build(
             EngineKind::Qs => Box::new(quickscorer::QsEngine::new(forest)),
             EngineKind::Vqs => Box::new(vqs::VqsEngine::new(forest)),
             EngineKind::Rs => Box::new(rapidscorer::RsEngine::new(forest)),
+        },
+        // FLInt carrier: no quantization happens — `quant` is ignored like
+        // it is for plain f32.
+        Precision::F32Flint => match kind {
+            EngineKind::Naive => Box::new(naive::FlintNaiveEngine::new(forest)),
+            EngineKind::IfElse => Box::new(ifelse::FlintIfElseEngine::new(forest)),
+            EngineKind::Qs => Box::new(quickscorer::FlintQsEngine::new(forest)),
+            EngineKind::Vqs => Box::new(vqs::FlintVqsEngine::new(forest)),
+            EngineKind::Rs => Box::new(rapidscorer::FlintRsEngine::new(forest)),
         },
         Precision::I16 => {
             let cfg = quant.unwrap_or_else(|| choose_scale(forest, 1.0));
@@ -295,23 +322,31 @@ pub fn i8_variants() -> Vec<(EngineKind, Precision)> {
     EngineKind::ALL.iter().map(|&k| (k, Precision::I8)).collect()
 }
 
-/// The paper's ten variants plus the int8 tier — the selector candidate
-/// set. Tests and the selector derive expected candidate counts from this
-/// registry (`all_variants_with_i8().len()`), never from literals: the
-/// count has gone stale twice as tiers grew.
+/// The FLInt carrier variants — all five traversal strategies with
+/// integer threshold compares and bit-exact f32 outputs.
+pub fn flint_variants() -> Vec<(EngineKind, Precision)> {
+    EngineKind::ALL.iter().map(|&k| (k, Precision::F32Flint)).collect()
+}
+
+/// The paper's ten variants plus the int8 and FLInt tiers — the selector
+/// candidate set. Tests and the selector derive expected candidate counts
+/// from this registry (`all_variants_with_i8().len()`), never from
+/// literals: the count has gone stale twice as tiers grew.
 pub fn all_variants_with_i8() -> Vec<(EngineKind, Precision)> {
     let mut out = all_variants();
     out.extend(i8_variants());
+    out.extend(flint_variants());
     out
 }
 
 /// Display name for a variant, paper-style (`qRS` = quantized RapidScorer,
-/// `q8VQS` = int8 V-QuickScorer).
+/// `q8VQS` = int8 V-QuickScorer, `flRS` = FLInt RapidScorer).
 pub fn variant_name(kind: EngineKind, precision: Precision) -> String {
     match precision {
         Precision::F32 => kind.short().to_string(),
         Precision::I16 => format!("q{}", kind.short()),
         Precision::I8 => format!("q8{}", kind.short()),
+        Precision::F32Flint => format!("fl{}", kind.short()),
     }
 }
 
@@ -327,6 +362,8 @@ mod tests {
         assert_eq!(EngineKind::from_short("qRS"), Some(EngineKind::Rs));
         assert_eq!(EngineKind::from_short("q8VQS"), Some(EngineKind::Vqs));
         assert_eq!(EngineKind::from_short("q8na"), Some(EngineKind::Naive));
+        assert_eq!(EngineKind::from_short("flVQS"), Some(EngineKind::Vqs));
+        assert_eq!(EngineKind::from_short("flqs"), Some(EngineKind::Qs));
         assert_eq!(EngineKind::from_short("nope"), None);
     }
 
@@ -339,23 +376,35 @@ mod tests {
 
     #[test]
     fn i8_variant_set() {
-        // The registry IS the tier × engine matrix: 5 engine families at
-        // i8, 15 variants total (5 × {f32, i16, i8}).
+        // The registry IS the tier × engine matrix: every tier covers all
+        // five engine families, and the full set is their disjoint union —
+        // derived, never a literal.
         assert_eq!(i8_variants().len(), EngineKind::ALL.len());
-        assert_eq!(all_variants_with_i8().len(), 3 * EngineKind::ALL.len());
+        assert_eq!(flint_variants().len(), EngineKind::ALL.len());
+        assert_eq!(
+            all_variants_with_i8().len(),
+            all_variants().len() + i8_variants().len() + flint_variants().len()
+        );
         assert_eq!(variant_name(EngineKind::Vqs, Precision::I8), "q8VQS");
         assert_eq!(variant_name(EngineKind::Rs, Precision::I8), "q8RS");
         assert_eq!(variant_name(EngineKind::IfElse, Precision::I8), "q8IE");
+        assert_eq!(variant_name(EngineKind::Vqs, Precision::F32Flint), "flVQS");
+        assert_eq!(variant_name(EngineKind::Naive, Precision::F32Flint), "flNA");
+        // Every variant name round-trips back to its kind.
+        for (kind, p) in all_variants_with_i8() {
+            assert_eq!(EngineKind::from_short(&variant_name(kind, p)), Some(kind));
+        }
     }
 
     #[test]
     fn precision_names_roundtrip() {
-        for p in [Precision::F32, Precision::I16, Precision::I8] {
+        for p in [Precision::F32, Precision::I16, Precision::I8, Precision::F32Flint] {
             assert_eq!(Precision::from_name(p.name()), Some(p));
         }
         assert_eq!(Precision::from_name("int8"), Some(Precision::I8));
         assert_eq!(Precision::from_name("bf16"), None);
         assert_eq!(Precision::I8.scalar_bytes(), 1);
+        assert_eq!(Precision::F32Flint.scalar_bytes(), 4);
     }
 
     #[test]
@@ -383,6 +432,35 @@ mod tests {
         let carrier: QuantConfig = QuantConfig::new(32768.0);
         assert!(build(EngineKind::Naive, Precision::I8, &f, Some(carrier)).is_err());
         assert!(build(EngineKind::Naive, Precision::I8, &f, Some(QuantConfig::new(64.0))).is_ok());
+    }
+
+    /// The FLInt build path: every engine family builds under
+    /// `Precision::F32Flint` and is bit-identical to its f32 twin — the
+    /// tier's defining contract.
+    #[test]
+    #[cfg_attr(miri, ignore)] // heavy: trains a forest; no unsafe for Miri to check
+    fn flint_build_paths_bit_identical_to_f32() {
+        use crate::data::DatasetId;
+        use crate::forest::builder::{train_random_forest, RfParams, TreeParams};
+        let ds = DatasetId::Magic.generate(400, 21);
+        let f = train_random_forest(
+            &ds.x,
+            &ds.labels,
+            ds.d,
+            ds.n_classes,
+            RfParams {
+                n_trees: 6,
+                tree: TreeParams { max_leaves: 16, min_samples_leaf: 2, mtry: 0 },
+                ..Default::default()
+            },
+        );
+        for (kind, p) in flint_variants() {
+            let e = build(kind, p, &f, None).unwrap();
+            let twin = build(kind, Precision::F32, &f, None).unwrap();
+            assert_eq!(e.name(), variant_name(kind, p));
+            assert!(e.name().starts_with("fl"), "{}", e.name());
+            assert_eq!(e.predict(&ds.x), twin.predict(&ds.x), "{}", e.name());
+        }
     }
 
     /// The i16 per-tree build path: every engine family agrees bit-for-bit

@@ -124,6 +124,24 @@ fn flatten_f32(f: &Forest) -> FlatForest<f32, f32> {
     out
 }
 
+/// Re-encode a flattened float forest through the FLInt carrier: thresholds
+/// become order-preserving i32s ([`crate::quant::flint::encode_threshold`]),
+/// the f32 leaf tables and topology move over untouched.
+fn flatten_flint(flat: FlatForest<f32, f32>) -> FlatForest<i32, f32> {
+    FlatForest {
+        tree_offsets: flat.tree_offsets,
+        features: flat.features,
+        thresholds: crate::quant::flint::encode_thresholds(&flat.thresholds),
+        left: flat.left,
+        right: flat.right,
+        leaf_offsets: flat.leaf_offsets,
+        leaf_values: flat.leaf_values,
+        tree_shifts: flat.tree_shifts,
+        n_features: flat.n_features,
+        n_classes: flat.n_classes,
+    }
+}
+
 fn flatten_q<S: QuantInt>(qf: &QForest<S>) -> FlatForest<S, S> {
     let mut out = FlatForest {
         tree_offsets: vec![0],
@@ -211,11 +229,96 @@ impl Engine for NaiveEngine {
                 // feature, fp compare, data-dependent branch.
                 tr.random_loads += 2 * depth;
                 tr.scalar_fp += depth;
+                tr.cmp_fp += depth;
                 tr.branch += depth;
                 tr.branch_mispredictable += depth / 2; // ~random directions
                 // Leaf: load row + C adds.
                 tr.random_loads += 1;
                 tr.scalar_fp += c;
+            }
+        }
+        tr
+    }
+
+    fn memory_bytes(&self) -> usize {
+        self.flat.memory_bytes()
+    }
+}
+
+/// FLInt NA engine (flNA): the exact [`NaiveEngine`] traversal and f32
+/// leaf/score path, but thresholds are FLInt-encoded i32s and each batch is
+/// encoded once ([`crate::quant::flint::encode_batch_le`], NaN →
+/// `i32::MAX`), so every split compare runs on the integer pipe while the
+/// outputs stay **bit-identical** to the float engine.
+pub struct FlintNaiveEngine {
+    flat: FlatForest<i32, f32>,
+    base: Vec<f32>,
+}
+
+impl FlintNaiveEngine {
+    pub fn new(f: &Forest) -> FlintNaiveEngine {
+        FlintNaiveEngine { flat: flatten_flint(flatten_f32(f)), base: f.base_score.clone() }
+    }
+}
+
+impl Engine for FlintNaiveEngine {
+    fn name(&self) -> String {
+        "flNA".into()
+    }
+
+    fn lanes(&self) -> usize {
+        1
+    }
+
+    fn n_features(&self) -> usize {
+        self.flat.n_features
+    }
+
+    fn n_classes(&self) -> usize {
+        self.flat.n_classes
+    }
+
+    fn predict_batch(&self, x: &[f32], out: &mut [f32]) {
+        let d = self.flat.n_features;
+        let c = self.flat.n_classes;
+        let n = x.len() / d;
+        debug_assert_eq!(out.len(), n * c);
+        let mut ex = Vec::with_capacity(x.len());
+        crate::quant::flint::encode_batch_le(x, &mut ex);
+        for i in 0..n {
+            let row = &ex[i * d..(i + 1) * d];
+            let o = &mut out[i * c..(i + 1) * c];
+            o.copy_from_slice(&self.base);
+            for ti in 0..self.flat.n_trees() {
+                let leaf = self.flat.exit_leaf(ti, |f, t| row[f as usize] <= t);
+                for (dst, &v) in o.iter_mut().zip(self.flat.leaf_row(ti, leaf)) {
+                    *dst += v;
+                }
+            }
+        }
+    }
+
+    fn count_ops(&self, x: &[f32]) -> OpTrace {
+        let d = self.flat.n_features;
+        let c = self.flat.n_classes as u64;
+        let n = x.len() / d;
+        let mut ex = Vec::new();
+        crate::quant::flint::encode_batch_le(x, &mut ex);
+        let mut tr = OpTrace::new();
+        // Feature encoding: one integer fixup + store per value (no FP).
+        tr.scalar_alu += (n * d) as u64;
+        tr.store_bytes += (n * d * std::mem::size_of::<i32>()) as u64;
+        for i in 0..n {
+            let row = &ex[i * d..(i + 1) * d];
+            for ti in 0..self.flat.n_trees() {
+                let depth = self.flat.walk_depth(ti, |f, t| row[f as usize] <= t);
+                tr.random_loads += 2 * depth;
+                tr.scalar_alu += depth; // integer threshold compares
+                tr.cmp_int += depth;
+                tr.branch += depth;
+                tr.branch_mispredictable += depth / 2;
+                tr.random_loads += 1;
+                tr.scalar_fp += c; // leaf adds stay f32
             }
         }
         tr
@@ -298,6 +401,7 @@ impl<S: QuantInt> Engine for QNaiveEngine<S> {
                 let depth = self.flat.walk_depth(ti, |f, t| row[f as usize] <= t);
                 tr.random_loads += 2 * depth;
                 tr.scalar_alu += depth; // integer compares — no FPU
+                tr.cmp_int += depth;
                 tr.branch += depth;
                 tr.branch_mispredictable += depth / 2;
                 tr.random_loads += 1;
@@ -346,6 +450,27 @@ mod tests {
         let got = e.predict(&ds.x);
         let want = f.predict_batch(&ds.x);
         assert_eq!(got, want); // identical op order -> bitwise equal
+    }
+
+    #[test]
+    #[cfg_attr(miri, ignore)] // heavy: trains a forest; no unsafe for Miri to check
+    fn flint_na_bit_identical_to_float_na() {
+        let (f, ds) = setup();
+        let fl = FlintNaiveEngine::new(&f);
+        assert_eq!(fl.name(), "flNA");
+        let want = NaiveEngine::new(&f).predict(&ds.x);
+        assert_eq!(fl.predict(&ds.x), want); // carrier changes representation only
+        // Adversarial feature values route identically too.
+        let mut x = ds.x[..ds.d * 4].to_vec();
+        x[0] = f32::NAN;
+        x[1] = -0.0;
+        x[ds.d] = f32::from_bits(0x0000_0001); // denormal
+        x[ds.d + 1] = f32::NEG_INFINITY;
+        assert_eq!(fl.predict(&x), NaiveEngine::new(&f).predict(&x));
+        // Op mix: compares moved to the int pipe, leaf adds stayed f32.
+        let tr = fl.count_ops(&ds.x[..ds.d * 4]);
+        assert!(tr.cmp_int > 0 && tr.cmp_fp == 0);
+        assert!(tr.scalar_fp > 0, "leaf adds remain float ops");
     }
 
     #[test]

@@ -129,6 +129,69 @@ impl Engine for QsEngine {
     }
 }
 
+/// FLInt scalar QuickScorer (flQS): the float model with thresholds FLInt-
+/// encoded to i32 ([`crate::quant::flint`]); each row is encoded once with
+/// the `>`-style map (NaN → `i32::MIN`, so a NaN feature never clears masks
+/// — exactly like `NaN > t` being false in [`QsEngine`]). Mask computation
+/// runs on integer compares; leaf lookup and f32 accumulation are the
+/// untouched float path, so outputs are **bit-identical** to [`QsEngine`].
+pub struct FlintQsEngine {
+    m: QsModel<i32, f32>,
+}
+
+impl FlintQsEngine {
+    pub fn new(f: &Forest) -> FlintQsEngine {
+        FlintQsEngine { m: QsModel::from_forest(f).to_flint() }
+    }
+}
+
+impl Engine for FlintQsEngine {
+    fn name(&self) -> String {
+        "flQS".into()
+    }
+
+    fn lanes(&self) -> usize {
+        1
+    }
+
+    fn n_features(&self) -> usize {
+        self.m.n_features
+    }
+
+    fn n_classes(&self) -> usize {
+        self.m.n_classes
+    }
+
+    fn predict_batch(&self, x: &[f32], out: &mut [f32]) {
+        let d = self.m.n_features;
+        let c = self.m.n_classes;
+        let n = x.len() / d;
+        let mut ex = Vec::with_capacity(x.len());
+        crate::quant::flint::encode_batch_gt(x, &mut ex);
+        let mut leafidx = vec![u64::MAX; self.m.n_trees];
+        for i in 0..n {
+            let row = &ex[i * d..(i + 1) * d];
+            mask_computation(&self.m, |k| row[k], &mut leafidx);
+            let o = &mut out[i * c..(i + 1) * c];
+            o.copy_from_slice(&self.m.base_f32);
+            for (ti, &bits) in leafidx.iter().enumerate() {
+                let j = bits.trailing_zeros() as usize;
+                for (dst, &v) in o.iter_mut().zip(self.m.leaf_row(ti, j)) {
+                    *dst += v;
+                }
+            }
+        }
+    }
+
+    fn count_ops(&self, x: &[f32]) -> OpTrace {
+        qs_flint_trace(&self.m, x)
+    }
+
+    fn memory_bytes(&self) -> usize {
+        self.m.memory_bytes()
+    }
+}
+
 /// Quantized scalar QuickScorer (qQS / q8QS), generic over the storage tier.
 pub struct QQsEngine<S: QuantInt = i16> {
     m: QsModel<S, S>,
@@ -210,6 +273,7 @@ fn qs_trace(m: &QsModel<f32, f32>, x: &[f32], _quant: bool) -> OpTrace {
         let (visited, false_nodes) = visited_nodes(m, |k| row[k]);
         tr.stream_load_bytes += visited * entry;
         tr.scalar_fp += visited; // compares
+        tr.cmp_fp += visited;
         tr.branch += visited;
         tr.branch_mispredictable += d as u64; // one break misprediction/feature
         tr.scalar_alu += false_nodes; // AND + leafidx update
@@ -218,6 +282,34 @@ fn qs_trace(m: &QsModel<f32, f32>, x: &[f32], _quant: bool) -> OpTrace {
         tr.scalar_alu += m.n_trees as u64; // trailing_zeros
         tr.random_loads += m.n_trees as u64; // leaf rows
         tr.scalar_fp += m.n_trees as u64 * c;
+    }
+    tr
+}
+
+fn qs_flint_trace(m: &QsModel<i32, f32>, x: &[f32]) -> OpTrace {
+    let d = m.n_features;
+    let c = m.n_classes as u64;
+    let n = x.len() / d;
+    let mut ex = Vec::new();
+    crate::quant::flint::encode_batch_gt(x, &mut ex);
+    let mut tr = OpTrace::new();
+    let entry = m.node_entry_bytes();
+    // Feature encoding: one integer fixup + store per value (no FP).
+    tr.scalar_alu += (n * d) as u64;
+    tr.store_bytes += (n * d * std::mem::size_of::<i32>()) as u64;
+    for i in 0..n {
+        let row = &ex[i * d..(i + 1) * d];
+        let (visited, false_nodes) = visited_nodes(m, |k| row[k]);
+        tr.stream_load_bytes += visited * entry;
+        tr.scalar_alu += visited; // integer compares
+        tr.cmp_int += visited;
+        tr.branch += visited;
+        tr.branch_mispredictable += d as u64;
+        tr.scalar_alu += false_nodes;
+        tr.store_bytes += 8 * (m.n_trees as u64);
+        tr.scalar_alu += m.n_trees as u64;
+        tr.random_loads += m.n_trees as u64;
+        tr.scalar_fp += m.n_trees as u64 * c; // f32 leaf adds
     }
     tr
 }
@@ -232,6 +324,7 @@ fn qsi_trace<S: QuantInt>(m: &QsModel<S, S>, qx: &[S], n: usize) -> OpTrace {
         let (visited, false_nodes) = visited_nodes(m, |k| row[k]);
         tr.stream_load_bytes += visited * entry;
         tr.scalar_alu += visited; // integer compares
+        tr.cmp_int += visited;
         tr.branch += visited;
         tr.branch_mispredictable += d as u64;
         tr.scalar_alu += false_nodes;
@@ -304,6 +397,32 @@ mod tests {
             let e = QQsEngine::new(&qf);
             assert_eq!(e.name(), "q8QS");
             assert_eq!(e.predict(&ds.x), qf.predict_batch(&ds.x), "L={leaves}");
+        }
+    }
+
+    #[test]
+    #[cfg_attr(miri, ignore)] // heavy: trains a forest; no unsafe for Miri to check
+    fn flint_qs_bit_identical_to_float_qs() {
+        for leaves in [32usize, 64] {
+            let (f, ds) = setup(leaves, 6);
+            let fl = FlintQsEngine::new(&f);
+            let fe = QsEngine::new(&f);
+            assert_eq!(fl.name(), "flQS");
+            assert_eq!(fl.predict(&ds.x), fe.predict(&ds.x), "L={leaves}");
+
+            // Adversarial rows: NaN must stop mask-clearing exactly as the
+            // float engine's `NaN > t == false` does; ±0.0/denormal/-inf
+            // must take identical sides.
+            let mut adv = ds.x[..4 * ds.d].to_vec();
+            adv[0] = f32::NAN;
+            adv[ds.d] = -0.0;
+            adv[2 * ds.d] = f32::from_bits(0x0000_0001);
+            adv[3 * ds.d] = f32::NEG_INFINITY;
+            assert_eq!(fl.predict(&adv), fe.predict(&adv), "L={leaves} adversarial");
+
+            let tr = fl.count_ops(&ds.x[..4 * ds.d]);
+            assert!(tr.cmp_int > 0);
+            assert_eq!(tr.cmp_fp, 0);
         }
     }
 

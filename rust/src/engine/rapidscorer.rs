@@ -217,6 +217,35 @@ impl RsModel<f32, f32> {
     }
 }
 
+impl RsModel<i32, f32> {
+    /// FLInt model: the float prep (sort + leaf padding) re-encoded to
+    /// order-preserving i32 thresholds before merging. Equal floats encode
+    /// equal and distinct floats encode distinct (the map is injective
+    /// after −0.0 canonicalization), so the merged groups, epitomes, and
+    /// scan order are exactly the float model's.
+    pub fn from_forest(f: &Forest) -> RsModel<i32, f32> {
+        let qs = QsModel::<f32, f32>::from_forest(f).to_flint();
+        let mut nodes = Vec::with_capacity(qs.thresholds.len());
+        for k in 0..qs.n_features {
+            for idx in qs.feature_range(k) {
+                nodes.push((k as u32, qs.thresholds[idx], qs.tree_ids[idx], qs.masks[idx]));
+            }
+        }
+        build_rs(
+            qs.n_features,
+            qs.n_classes,
+            qs.n_trees,
+            qs.leaf_words,
+            &nodes,
+            qs.leaf_values,
+            qs.base_f32,
+            Vec::new(),
+            qs.tree_shifts,
+            true,
+        )
+    }
+}
+
 impl<S: QuantInt> RsModel<S, S> {
     /// Build the merged epitome model from a quantized forest — any storage
     /// tier. Quantization collapses thresholds (Table 4), so the i8 tier
@@ -306,6 +335,21 @@ fn bytes_mask_f32(xt: &[f32], k: usize, gamma: f32) -> U8x16 {
     let m1 = vcgtq_f32(vld1q_f32(&xt[k * V_RS + 4..]), g);
     let m2 = vcgtq_f32(vld1q_f32(&xt[k * V_RS + 8..]), g);
     let m3 = vcgtq_f32(vld1q_f32(&xt[k * V_RS + 12..]), g);
+    let lo = vcombine_u16(vmovn_u32(m0), vmovn_u32(m1));
+    let hi = vcombine_u16(vmovn_u32(m2), vmovn_u32(m3));
+    vcombine_u8(vmovn_u16(lo), vmovn_u16(hi))
+}
+
+/// Combine 4 FLInt i32 compare masks into a 16-lane byte mask — the float
+/// chain with `vcgtq_s32` in place of `vcgtq_f32`; the narrow/combine
+/// stages are untouched.
+#[inline]
+fn bytes_mask_s32(xt: &[i32], k: usize, gamma: i32) -> U8x16 {
+    let g = vdupq_n_s32(gamma);
+    let m0 = vcgtq_s32(vld1q_s32(&xt[k * V_RS..]), g);
+    let m1 = vcgtq_s32(vld1q_s32(&xt[k * V_RS + 4..]), g);
+    let m2 = vcgtq_s32(vld1q_s32(&xt[k * V_RS + 8..]), g);
+    let m3 = vcgtq_s32(vld1q_s32(&xt[k * V_RS + 12..]), g);
     let lo = vcombine_u16(vmovn_u32(m0), vmovn_u32(m1));
     let hi = vcombine_u16(vmovn_u32(m2), vmovn_u32(m3));
     vcombine_u8(vmovn_u16(lo), vmovn_u16(hi))
@@ -448,6 +492,117 @@ impl Engine for RsEngine {
         rs_trace(&self.m, x, |xt, k, thr| {
             (0..V_RS).any(|lane| xt[k * V_RS + lane] > thr)
         }, 4)
+    }
+
+    fn memory_bytes(&self) -> usize {
+        self.m.memory_bytes()
+    }
+}
+
+// ---------------------------------------------------------------------------
+// FLInt RS engine
+// ---------------------------------------------------------------------------
+
+/// FLInt RapidScorer (flRS): [`RsEngine`] with the 4 × `vcgtq_f32` group
+/// compare replaced by 4 × `vcgtq_s32` over FLInt-encoded features
+/// ([`crate::quant::flint`], `>`-style map, NaN → `i32::MIN`). Epitomes,
+/// Algorithm 4, and the f32 score gather are byte-for-byte the float
+/// engine's, so outputs are **bit-identical** to [`RsEngine`].
+pub struct FlintRsEngine {
+    m: RsModel<i32, f32>,
+}
+
+impl FlintRsEngine {
+    pub fn new(f: &Forest) -> FlintRsEngine {
+        FlintRsEngine { m: RsModel::<i32, f32>::from_forest(f) }
+    }
+
+    pub fn model(&self) -> &RsModel<i32, f32> {
+        &self.m
+    }
+}
+
+impl Engine for FlintRsEngine {
+    fn name(&self) -> String {
+        "flRS".into()
+    }
+
+    fn lanes(&self) -> usize {
+        V_RS
+    }
+
+    fn n_features(&self) -> usize {
+        self.m.n_features
+    }
+
+    fn n_classes(&self) -> usize {
+        self.m.n_classes
+    }
+
+    fn predict_batch(&self, x: &[f32], out: &mut [f32]) {
+        let m = &self.m;
+        let d = m.n_features;
+        let c = m.n_classes;
+        let n = x.len() / d;
+        let rows = m.rows();
+        let mut ex = Vec::with_capacity(x.len());
+        crate::quant::flint::encode_batch_gt(x, &mut ex);
+        let mut xt = vec![0i32; d * V_RS];
+        let mut leafidx = vec![U8x16([0; 16]); m.n_trees * rows];
+        let mut acc = vec![[F32x4([0.0; 4]); 4]; c];
+
+        let mut base = 0usize;
+        while base < n {
+            transpose_rs(&ex, d, n, base, &mut xt);
+            reset_leafidx(&mut leafidx);
+            for k in 0..d {
+                let gr = m.feature_groups(k);
+                if gr.is_empty() {
+                    continue;
+                }
+                for gi in gr {
+                    let g = &m.groups[gi];
+                    let mask = bytes_mask_s32(&xt, k, g.threshold);
+                    if vmaxvq_u8(mask) == 0 {
+                        break;
+                    }
+                    apply_group(m, g, mask, &mut leafidx);
+                }
+            }
+            acc.iter_mut().for_each(|a| *a = [F32x4([0.0; 4]); 4]);
+            for ti in 0..m.n_trees {
+                let leaves = find_leaf_index(&leafidx[ti * rows..(ti + 1) * rows]);
+                let mut offs = [0usize; V_RS];
+                for (lane, o) in offs.iter_mut().enumerate() {
+                    *o = (ti * m.leaf_words + vgetq_lane_u8(leaves, lane) as usize) * c;
+                }
+                for (cls, a) in acc.iter_mut().enumerate() {
+                    for q in 0..4 {
+                        let vals = F32x4([
+                            m.leaf_values[offs[q * 4] + cls],
+                            m.leaf_values[offs[q * 4 + 1] + cls],
+                            m.leaf_values[offs[q * 4 + 2] + cls],
+                            m.leaf_values[offs[q * 4 + 3] + cls],
+                        ]);
+                        a[q] = vaddq_f32(a[q], vals);
+                    }
+                }
+            }
+            for lane in 0..V_RS {
+                let i = base + lane;
+                if i >= n {
+                    break;
+                }
+                for cls in 0..c {
+                    out[i * c + cls] = acc[cls][lane / 4].0[lane % 4] + m.base_f32[cls];
+                }
+            }
+            base += V_RS;
+        }
+    }
+
+    fn count_ops(&self, x: &[f32]) -> OpTrace {
+        rs_trace_flint(&self.m, x)
     }
 
     fn memory_bytes(&self) -> usize {
@@ -722,6 +877,7 @@ fn rs_trace<V: Copy>(
             for gi in m.feature_groups(k) {
                 let g = &m.groups[gi];
                 tr.neon_fp += compares_per_group; // vcgtq per sub-register
+                tr.cmp_fp += compares_per_group;
                 tr.neon_horiz += 3; // narrow/combine chain
                 tr.neon_horiz += 1; // vmaxvq
                 tr.branch += 1;
@@ -743,6 +899,51 @@ fn rs_trace<V: Copy>(
         tr.neon_fp += m.n_trees as u64 * c * 4;
         tr.store_bytes += m.n_trees as u64 * rows * 16; // leafidx reset
         tr.scalar_alu += (d * V_RS) as u64; // transpose
+        base += V_RS;
+    }
+    tr
+}
+
+fn rs_trace_flint(m: &RsModel<i32, f32>, x: &[f32]) -> OpTrace {
+    let d = m.n_features;
+    let n = x.len() / d;
+    let c = m.n_classes as u64;
+    let mut ex = Vec::new();
+    crate::quant::flint::encode_batch_gt(x, &mut ex);
+    let mut tr = OpTrace::new();
+    // Feature encoding: one integer fixup + store per value (no FP).
+    tr.scalar_alu += (n * d) as u64;
+    tr.store_bytes += (n * d * std::mem::size_of::<i32>()) as u64;
+    let mut xt = vec![0i32; d * V_RS];
+    let rows = m.rows() as u64;
+    let mut base = 0usize;
+    while base < n {
+        transpose_rs(&ex, d, n, base, &mut xt);
+        for k in 0..d {
+            for gi in m.feature_groups(k) {
+                let g = &m.groups[gi];
+                tr.neon_alu += 4; // 4 × vcgtq_s32 (integer pipe)
+                tr.cmp_int += 4;
+                tr.neon_horiz += 3; // narrow/combine chain
+                tr.neon_horiz += 1; // vmaxvq
+                tr.branch += 1;
+                tr.stream_load_bytes += 8; // group record
+                if !(0..V_RS).any(|lane| xt[k * V_RS + lane] > g.threshold) {
+                    break;
+                }
+                for e in &m.entries[g.entries.start as usize..g.entries.end as usize] {
+                    let len = e.len as u64;
+                    tr.neon_alu += 3 * len;
+                    tr.stream_load_bytes += 16;
+                    tr.store_bytes += 16 * len;
+                }
+            }
+        }
+        tr.neon_alu += m.n_trees as u64 * (4 * rows + 3);
+        tr.random_loads += m.n_trees as u64 * V_RS as u64;
+        tr.neon_fp += m.n_trees as u64 * c * 4; // f32 leaf adds, unchanged
+        tr.store_bytes += m.n_trees as u64 * rows * 16;
+        tr.scalar_alu += (d * V_RS) as u64;
         base += V_RS;
     }
     tr
@@ -772,6 +973,7 @@ fn rs_trace_q<S: QuantInt>(
             for gi in m.feature_groups(k) {
                 let g = &m.groups[gi];
                 tr.neon_alu += compares; // vcgtq_s16 / vcgtq_s8 (§5.1)
+                tr.cmp_int += compares;
                 tr.neon_horiz += compares; // narrow/combine + vmaxvq
                 tr.branch += 1;
                 tr.stream_load_bytes += entry_bytes;
@@ -849,6 +1051,36 @@ mod tests {
         let e = RsEngine::new(&f);
         let x = &ds.x[..ds.d * 100];
         assert_close(&e.predict(x), &f.predict_batch(x), 1e-5, 1e-5).unwrap();
+    }
+
+    #[test]
+    #[cfg_attr(miri, ignore)] // heavy: trains a forest; no unsafe for Miri to check
+    fn flint_rs_bit_identical_to_float_rs() {
+        // Both leaf widths, non-multiple-of-16 batches (padding lanes), and
+        // adversarial features; the merged-group count must also match the
+        // float model's (the encoding is injective).
+        for (leaves, seed, n) in [(32usize, 1u64, 150usize), (64, 2, 100)] {
+            let (f, ds) = setup(DatasetId::Magic, leaves, seed, n);
+            let fl = FlintRsEngine::new(&f);
+            let fe = RsEngine::new(&f);
+            assert_eq!(fl.name(), "flRS");
+            assert_eq!(fl.lanes(), V_RS);
+            assert_eq!(fl.model().n_groups(), fe.model().n_groups(), "L={leaves}");
+            let x = &ds.x[..ds.d * n];
+            assert_eq!(fl.predict(x), fe.predict(x), "L={leaves}");
+
+            let mut adv = ds.x[..4 * ds.d].to_vec();
+            adv[0] = f32::NAN;
+            adv[ds.d] = -0.0;
+            adv[2 * ds.d] = f32::from_bits(0x0000_0001);
+            adv[3 * ds.d] = f32::NEG_INFINITY;
+            assert_eq!(fl.predict(&adv), fe.predict(&adv), "L={leaves} adversarial");
+
+            let tr = fl.count_ops(&ds.x[..4 * ds.d]);
+            assert!(tr.cmp_int > 0);
+            assert_eq!(tr.cmp_fp, 0);
+            assert!(tr.neon_fp > 0); // f32 leaf adds stay on the FP pipe
+        }
     }
 
     #[test]

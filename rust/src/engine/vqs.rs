@@ -234,6 +234,187 @@ fn write_scores_f32(
 }
 
 // ---------------------------------------------------------------------------
+// FLInt VQS (v = 4, integer compares with exact f32 semantics)
+// ---------------------------------------------------------------------------
+
+/// FLInt V-QuickScorer (flVQS): [`VqsEngine`] with the threshold compare
+/// moved to the integer SIMD pipe. Thresholds are FLInt-encoded i32s
+/// ([`crate::quant::flint`]), the batch is encoded once with the `>`-style
+/// map (NaN → `i32::MIN`), and `vcgtq_s32` replaces `vcgtq_f32` — the mask
+/// register and everything downstream (widen, AND, select, f32 leaf gather,
+/// `vaddq_f32`) are byte-for-byte the float engine's, so outputs are
+/// **bit-identical** to [`VqsEngine`].
+pub struct FlintVqsEngine {
+    m: QsModel<i32, f32>,
+}
+
+impl FlintVqsEngine {
+    pub fn new(f: &Forest) -> FlintVqsEngine {
+        FlintVqsEngine { m: QsModel::from_forest(f).to_flint() }
+    }
+}
+
+impl Engine for FlintVqsEngine {
+    fn name(&self) -> String {
+        "flVQS".into()
+    }
+
+    fn lanes(&self) -> usize {
+        V_F32
+    }
+
+    fn n_features(&self) -> usize {
+        self.m.n_features
+    }
+
+    fn n_classes(&self) -> usize {
+        self.m.n_classes
+    }
+
+    fn predict_batch(&self, x: &[f32], out: &mut [f32]) {
+        let m = &self.m;
+        let d = m.n_features;
+        let n = x.len() / d;
+        let mut ex = Vec::with_capacity(x.len());
+        crate::quant::flint::encode_batch_gt(x, &mut ex);
+        let mut xt = vec![0i32; d * V_F32];
+        let mut idx32 = vec![U32x4([0; 4]); if m.leaf_words == 32 { m.n_trees } else { 0 }];
+        let mut idx64 = vec![[U64x2([0; 2]); 2]; if m.leaf_words == 64 { m.n_trees } else { 0 }];
+
+        let mut base = 0usize;
+        while base < n {
+            transpose_block(&ex, d, n, base, V_F32, &mut xt);
+            if m.leaf_words == 32 {
+                self.block32(&xt, &mut idx32, out, base, n);
+            } else {
+                self.block64(&xt, &mut idx64, out, base, n);
+            }
+            base += V_F32;
+        }
+    }
+
+    fn count_ops(&self, x: &[f32]) -> OpTrace {
+        vqs_trace_flint(&self.m, x)
+    }
+
+    fn memory_bytes(&self) -> usize {
+        self.m.memory_bytes()
+    }
+}
+
+impl FlintVqsEngine {
+    /// Mask + score computation for one block of 4 instances, L ≤ 32 —
+    /// the float `block32` with `vcgtq_s32` in place of `vcgtq_f32`.
+    fn block32(&self, xt: &[i32], leafidx: &mut [U32x4], out: &mut [f32], base: usize, n: usize) {
+        let m = &self.m;
+        leafidx.fill(vdupq_n_u32(u32::MAX));
+        for k in 0..m.n_features {
+            let r = m.feature_range(k);
+            if r.is_empty() {
+                continue;
+            }
+            let xv = vld1q_s32(&xt[k * V_F32..]);
+            let ths = &m.thresholds[r.clone()];
+            let trees = &m.tree_ids[r.clone()];
+            let masks = &m.masks[r];
+            for ((&t, &tree), &mk) in ths.iter().zip(trees).zip(masks) {
+                let gamma = vdupq_n_s32(t);
+                let mask = vcgtq_s32(xv, gamma);
+                if vmaxvq_u32(mask) == 0 {
+                    break;
+                }
+                let tree = tree as usize;
+                let mvec = vdupq_n_u32(mk as u32);
+                let b = leafidx[tree];
+                let y = vandq_u32(mvec, b);
+                leafidx[tree] = vbslq_u32(mask, y, b);
+            }
+        }
+        self.score32(leafidx, out, base, n);
+    }
+
+    /// Score computation for L ≤ 32 — identical to the float engine's.
+    fn score32(&self, leafidx: &[U32x4], out: &mut [f32], base: usize, n: usize) {
+        let m = &self.m;
+        let c = m.n_classes;
+        let mut acc = vec![F32x4([0.0; 4]); c];
+        for (ti, idx) in leafidx.iter().enumerate() {
+            let mut offs = [0usize; V_F32];
+            for (lane, o) in offs.iter_mut().enumerate() {
+                let j = vgetq_lane_u32(*idx, lane).trailing_zeros() as usize;
+                *o = (ti * m.leaf_words + j) * c;
+            }
+            for (cls, a) in acc.iter_mut().enumerate() {
+                let vals = F32x4([
+                    m.leaf_values[offs[0] + cls],
+                    m.leaf_values[offs[1] + cls],
+                    m.leaf_values[offs[2] + cls],
+                    m.leaf_values[offs[3] + cls],
+                ]);
+                *a = vaddq_f32(*a, vals);
+            }
+        }
+        write_scores_f32(&acc, &m.base_f32, out, base, n, c);
+    }
+
+    /// L ≤ 64 — the float `block64` with integer compares; the u32 mask
+    /// widens through the same `vmovl_mask_u32` chain.
+    fn block64(
+        &self,
+        xt: &[i32],
+        leafidx: &mut [[U64x2; 2]],
+        out: &mut [f32],
+        base: usize,
+        n: usize,
+    ) {
+        let m = &self.m;
+        leafidx.fill([vdupq_n_u64(u64::MAX); 2]);
+        for k in 0..m.n_features {
+            let r = m.feature_range(k);
+            if r.is_empty() {
+                continue;
+            }
+            let xv = vld1q_s32(&xt[k * V_F32..]);
+            let ths = &m.thresholds[r.clone()];
+            let trees = &m.tree_ids[r.clone()];
+            let masks = &m.masks[r];
+            for ((&t, &tree), &mk) in ths.iter().zip(trees).zip(masks) {
+                let gamma = vdupq_n_s32(t);
+                let mask = vcgtq_s32(xv, gamma);
+                if vmaxvq_u32(mask) == 0 {
+                    break;
+                }
+                let mlo = vmovl_mask_u32(vget_low_u32(mask));
+                let mhi = vmovl_mask_u32(vget_high_u32(mask));
+                let tree = tree as usize;
+                let mvec = vdupq_n_u64(mk);
+                let [b0, b1] = leafidx[tree];
+                let y0 = vandq_u64(mvec, b0);
+                let y1 = vandq_u64(mvec, b1);
+                leafidx[tree] = [vbslq_u64(mlo, y0, b0), vbslq_u64(mhi, y1, b1)];
+            }
+        }
+        let c = m.n_classes;
+        let mut acc = vec![F32x4([0.0; 4]); c];
+        for (ti, regs) in leafidx.iter().enumerate() {
+            let mut js = [0usize; 4];
+            for lane in 0..2 {
+                js[lane] = vgetq_lane_u64(regs[0], lane).trailing_zeros() as usize;
+                js[2 + lane] = vgetq_lane_u64(regs[1], lane).trailing_zeros() as usize;
+            }
+            for cls in 0..c {
+                let mut vals = F32x4([0.0; 4]);
+                for lane in 0..V_F32 {
+                    vals = vsetq_lane_f32(self.m.leaf_row(ti, js[lane])[cls], vals, lane);
+                }
+                acc[cls] = vaddq_f32(acc[cls], vals);
+            }
+        }
+        write_scores_f32(&acc, &m.base_f32, out, base, n, c);
+    }
+}
+
+// ---------------------------------------------------------------------------
 // Quantized VQS (v = 8, int16)
 // ---------------------------------------------------------------------------
 
@@ -775,6 +956,7 @@ fn vqs_trace_f32(m: &QsModel<f32, f32>, x: &[f32]) -> OpTrace {
         let (visited, applied) = block_visits(m, &xt, V_F32);
         tr.stream_load_bytes += visited * m.node_entry_bytes();
         tr.neon_fp += visited; // vcgtq_f32
+        tr.cmp_fp += visited;
         tr.neon_horiz += visited; // vmaxvq
         tr.branch += visited;
         tr.neon_alu += applied * (2 * regs_per_tree + 1); // dup + and + bsl
@@ -784,6 +966,38 @@ fn vqs_trace_f32(m: &QsModel<f32, f32>, x: &[f32]) -> OpTrace {
         tr.random_loads += m.n_trees as u64 * V_F32 as u64;
         tr.neon_fp += m.n_trees as u64 * c;
         // Transpose.
+        tr.scalar_alu += (d * V_F32) as u64;
+        base += V_F32;
+    }
+    tr
+}
+
+fn vqs_trace_flint(m: &QsModel<i32, f32>, x: &[f32]) -> OpTrace {
+    let d = m.n_features;
+    let n = x.len() / d;
+    let c = m.n_classes as u64;
+    let mut ex = Vec::new();
+    crate::quant::flint::encode_batch_gt(x, &mut ex);
+    let mut tr = OpTrace::new();
+    // Feature encoding: one integer fixup + store per value (no FP).
+    tr.scalar_alu += (n * d) as u64;
+    tr.store_bytes += (n * d * std::mem::size_of::<i32>()) as u64;
+    let mut xt = vec![0i32; d * V_F32];
+    let regs_per_tree = if m.leaf_words == 32 { 1 } else { 2 };
+    let mut base = 0;
+    while base < n {
+        transpose_block(&ex, d, n, base, V_F32, &mut xt);
+        let (visited, applied) = block_visits(m, &xt, V_F32);
+        tr.stream_load_bytes += visited * m.node_entry_bytes();
+        tr.neon_alu += visited; // vcgtq_s32 (integer pipe)
+        tr.cmp_int += visited;
+        tr.neon_horiz += visited; // vmaxvq
+        tr.branch += visited;
+        tr.neon_alu += applied * (2 * regs_per_tree + 1); // dup + and + bsl
+        tr.store_bytes += 16 * regs_per_tree * m.n_trees as u64;
+        tr.scalar_alu += m.n_trees as u64 * V_F32 as u64;
+        tr.random_loads += m.n_trees as u64 * V_F32 as u64;
+        tr.neon_fp += m.n_trees as u64 * c; // f32 leaf adds, unchanged
         tr.scalar_alu += (d * V_F32) as u64;
         base += V_F32;
     }
@@ -802,6 +1016,7 @@ fn vqs_trace_i16(m: &QsModel<i16, i16>, qx: &[i16], n: usize) -> OpTrace {
         let (visited, applied) = block_visits(m, &xt, V_I16);
         tr.stream_load_bytes += visited * m.node_entry_bytes();
         tr.neon_alu += visited; // vcgtq_s16 (integer pipe)
+        tr.cmp_int += visited;
         tr.neon_horiz += visited; // vmaxvq + widening
         tr.branch += visited;
         tr.neon_horiz += applied * regs_per_tree; // vmovl widen chain
@@ -833,6 +1048,7 @@ fn vqs_trace_i8(m: &QsModel<i8, i8>, qx: &[i8], n: usize, mode: AccumMode) -> Op
         let (visited, applied) = block_visits(m, &xt, V_I8);
         tr.stream_load_bytes += visited * m.node_entry_bytes();
         tr.neon_alu += visited; // vcgtq_s8 (integer pipe)
+        tr.cmp_int += visited;
         tr.neon_horiz += visited; // vmaxvq
         tr.branch += visited;
         tr.neon_horiz += applied * regs_per_tree; // vmovl widen chain
@@ -910,6 +1126,35 @@ mod tests {
         let e = QVqsEngine::new(&qf);
         let x = &ds.x[..ds.d * 93]; // non-multiple of 8
         assert_eq!(e.predict(x), qf.predict_batch(x));
+    }
+
+    #[test]
+    #[cfg_attr(miri, ignore)] // heavy: trains a forest; no unsafe for Miri to check
+    fn flint_vqs_bit_identical_to_float_vqs() {
+        // Both leaf widths, non-multiple-of-4 batches (padding lanes), and
+        // adversarial features: the integer-compare engine must reproduce
+        // the float engine bit-for-bit.
+        for (leaves, seed, n) in [(32usize, 1u64, 203usize), (64, 2, 119)] {
+            let (f, ds) = setup(leaves, seed, n.max(120));
+            let fl = FlintVqsEngine::new(&f);
+            let fe = VqsEngine::new(&f);
+            assert_eq!(fl.name(), "flVQS");
+            assert_eq!(fl.lanes(), V_F32);
+            let x = &ds.x[..ds.d * n];
+            assert_eq!(fl.predict(x), fe.predict(x), "L={leaves}");
+
+            let mut adv = ds.x[..4 * ds.d].to_vec();
+            adv[0] = f32::NAN;
+            adv[ds.d] = -0.0;
+            adv[2 * ds.d] = f32::from_bits(0x0000_0001);
+            adv[3 * ds.d] = f32::NEG_INFINITY;
+            assert_eq!(fl.predict(&adv), fe.predict(&adv), "L={leaves} adversarial");
+
+            let tr = fl.count_ops(&ds.x[..4 * ds.d]);
+            assert!(tr.cmp_int > 0);
+            assert_eq!(tr.cmp_fp, 0);
+            assert!(tr.neon_fp > 0); // f32 leaf adds stay on the FP pipe
+        }
     }
 
     #[test]

@@ -122,7 +122,8 @@ impl ParallelEngine {
                 Precision::I8 => Some(quant.unwrap_or_else(|| {
                     QuantConfig::new(crate::quant::choose_scale_i8(forest, 1.0).scale)
                 })),
-                Precision::F32 => quant,
+                // Neither float tier quantizes; pass the argument through.
+                Precision::F32 | Precision::F32Flint => quant,
             }
         } else {
             quant

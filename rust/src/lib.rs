@@ -8,9 +8,12 @@
 //!   Naive (NA), If-Else (IE), QuickScorer (QS), V-QuickScorer (VQS),
 //!   RapidScorer (RS) — each in float32, int16 **and** int8 fixed-point
 //!   variants (precision tiers, [`quant::QuantInt`]; the i8 tier adds
-//!   per-tree leaf scales with rounding shifts at sum time), the SIMD ones
-//!   executing the paper's ARM NEON algorithms on a bit-exact NEON
-//!   simulator ([`neon`]).
+//!   per-tree leaf scales with rounding shifts at sum time), plus a
+//!   fourth *virtual* tier: the FLInt carrier ([`quant::flint`]), which
+//!   runs threshold compares on the integer SIMD pipe via an
+//!   order-preserving `f32→i32` map while staying bit-identical to f32.
+//!   The SIMD engines execute the paper's ARM NEON algorithms on a
+//!   bit-exact NEON simulator ([`neon`]).
 //! * **Execution runtime** ([`exec`]): a sharded, work-stealing parallel
 //!   execution layer — a std-only worker pool with cluster pinning
 //!   ([`exec::affinity`]) and fairness-preserving batch claiming, a

@@ -62,27 +62,32 @@ USAGE: arbors <command> [flags]
   train    --dataset <magic|adult|eeg|mnist|fashion|msn> | --data <csv>
            --trees N --leaves N --out model.json [--gbt] [--n N] [--seed S]
   predict  --model model.json --data in.csv --engine <NA|IE|QS|VQS|RS>
-           [--precision f32|i16|i8] [--quant] [--threads N] [--pin]
+           [--precision f32|i16|i8|flint] [--quant] [--threads N] [--pin]
            [--out scores.csv]
            (--quant is shorthand for --precision i16; int8 covers all five
            engines and auto-upgrades to per-tree leaf scales when the
-           global analysis would widen accumulation; --pin anchors exec
-           workers to their topology cluster, Linux only)
+           global analysis would widen accumulation; flint runs integer
+           threshold compares with bit-exact f32 outputs; --pin anchors
+           exec workers to their topology cluster, Linux only)
   accuracy --model model.json --dataset <name> | --data <csv>
   select   --model model.json [--device a53|exynos] [--n N] [--threads N]
-           [--precision f32|i16|i8]  (restricts the ranking to one tier;
-           --threads adds row-sharded candidates like RS×4t; the qVQS+pt
-           candidate ranks i16 per-tree leaf scales)
-  bench    --exp <table2|table3|table4|table5|fig1|fig2|ablation|tensor|scaling|int8|serving|adaptive|smoke|obs|engine_micro>
-           [--threads N] [--precision P] [--pin] [--smoke] | --gate
+           [--precision f32|i16|i8|flint]  (restricts the ranking to one
+           tier; --threads adds row-sharded candidates like RS×4t; the
+           qVQS+pt candidate ranks i16 per-tree leaf scales)
+  bench    --exp <table2|table3|table4|table5|fig1|fig2|ablation|tensor|scaling|int8|flint|serving|adaptive|smoke|obs|engine_micro>
+           [--threads N] [--precision P] [--pin] [--smoke] [--matrix] | --gate
            (scale via ARBORS_SCALE=quick|default|full;
-           int8 -> results/int8_tiers.json; serving drives a 2-model server,
+           int8 -> results/int8_tiers.json; flint compares f32 vs FLInt
+           per engine -> results/flint.json, --smoke shrinks it for CI;
+           serving drives a 2-model server,
            shared-pool vs separate-pools, -> results/serving.json; adaptive
            runs the static/adaptive x pinned/unpinned x claim-1/claim-k grid
            on a synthetic big.LITTLE topology -> results/adaptive.json,
            --smoke shrinks it for CI; --pin applies to scaling;
            smoke appends the perf-history grid to dev/bench/data.js, path
-           overridable via ARBORS_BENCH_DATA; obs measures serving
+           overridable via ARBORS_BENCH_DATA, --matrix widens the grid to
+           the full named version matrix (pr1-f32 .. pr8-flint); obs
+           measures serving
            throughput with tracing off vs on; engine_micro reports
            SIMD-ops/row per engine tier -> results/engine_micro.json;
            --gate skips the experiment and fails on any series >15% worse
@@ -100,12 +105,12 @@ USAGE: arbors <command> [flags]
   datasets
 ";
 
-/// The optional `--precision {f32,i16,i8}` flag.
+/// The optional `--precision {f32,i16,i8,flint}` flag.
 fn precision_flag(args: &Args) -> Result<Option<Precision>> {
     match args.get("precision") {
         Some(p) => Precision::from_name(p)
             .map(Some)
-            .ok_or_else(|| anyhow::anyhow!("unknown --precision '{p}' (f32|i16|i8)")),
+            .ok_or_else(|| anyhow::anyhow!("unknown --precision '{p}' (f32|i16|i8|flint)")),
         None => Ok(None),
     }
 }
@@ -336,7 +341,9 @@ fn cmd_bench(args: &Args) -> Result<()> {
     };
     let precision = if exp == "scaling" { precision_flag(args)? } else { None };
     let pin = if exp == "scaling" { args.switch("pin") } else { false };
-    let smoke = if exp == "adaptive" { args.switch("smoke") } else { false };
+    let smoke =
+        if exp == "adaptive" || exp == "flint" { args.switch("smoke") } else { false };
+    let matrix = if exp == "smoke" { args.switch("matrix") } else { false };
     args.finish()?;
     let s = scale();
     let text = match exp.as_str() {
@@ -351,9 +358,12 @@ fn cmd_bench(args: &Args) -> Result<()> {
         "tensor" => experiments::tensor_vs_native(s.repeats)?,
         "scaling" => experiments::scaling(&s, threads, precision, pin),
         "int8" => experiments::int8_tiers(&s),
+        "flint" => experiments::flint(&s, smoke),
         "serving" => experiments::serving(&s, threads),
         "adaptive" => experiments::adaptive(&s, threads, smoke),
-        "smoke" => experiments::smoke(&s, &arbors::obs::bench_data::default_path())?,
+        "smoke" => {
+            experiments::smoke(&s, &arbors::obs::bench_data::default_path(), matrix)?
+        }
         "obs" => experiments::obs(&s, threads),
         "engine_micro" => experiments::engine_micro(&s),
         other => bail!("unknown experiment '{other}'"),

@@ -8,8 +8,9 @@
 //!
 //! All functions are `#[inline]` and operate on plain arrays, so LLVM
 //! vectorizes them into native SSE/AVX; the *algorithms* stay exactly the
-//! NEON ones. The four hottest ops of the int8/int16 tiers (`vcgtq_s8`,
-//! `vaddq_s8`, `vcgtq_s16`, `vaddq_s16`) additionally dispatch to the real
+//! NEON ones. The hottest ops of the int tiers and the FLInt carrier
+//! (`vcgtq_s8`, `vaddq_s8`, `vcgtq_s16`, `vaddq_s16`, `vcgtq_s32`)
+//! additionally dispatch to the real
 //! `core::arch::aarch64` intrinsics on AArch64 hosts; their simulated
 //! `*_sim` twins remain the bit-exact behavior contract, enforced by the
 //! parity tests at the bottom of this file and by the `neon-parity` audit
@@ -37,6 +38,13 @@ pub fn vdupq_n_s8(v: i8) -> I8x16 {
 #[inline]
 pub fn vdupq_n_s16(v: i16) -> I16x8 {
     I16x8([v; 8])
+}
+
+/// `DUP Vd.4S, rn` — broadcast an i32 to all 4 lanes (FLInt-encoded
+/// thresholds in the f32-carrier engines).
+#[inline]
+pub fn vdupq_n_s32(v: i32) -> I32x4 {
+    I32x4([v; 4])
 }
 
 /// `DUP Vd.4S, rn` — broadcast a u32 to all 4 lanes.
@@ -83,6 +91,12 @@ pub fn vld1q_u8(p: &[u8]) -> U8x16 {
     let mut out = [0u8; 16];
     out.copy_from_slice(&p[..16]);
     U8x16(out)
+}
+
+/// `LD1 {Vt.4S}` — load 4 contiguous i32 (FLInt-encoded features).
+#[inline]
+pub fn vld1q_s32(p: &[i32]) -> I32x4 {
+    I32x4([p[0], p[1], p[2], p[3]])
 }
 
 /// `LD1 {Vt.4S}` — load 4 contiguous u32.
@@ -206,6 +220,48 @@ fn vcgtq_s16_native(a: I16x8, b: I16x8) -> U16x8 {
         let mut out = [0u16; 8];
         arm::vst1q_u16(out.as_mut_ptr(), arm::vcgtq_s16(va, vb));
         U16x8(out)
+    }
+}
+
+/// `CMGT Vd.4S` — per-lane `a > b` for i32: the FLInt carrier's threshold
+/// compare, replacing `FCMGT` (`vcgtq_f32`) with the integer pipe while
+/// producing the identical all-ones/zero `U32x4` mask, so the f32 engines'
+/// mask-widening and score paths are reused unchanged. Issues the real
+/// instruction on AArch64; [`vcgtq_s32_sim`] is the bit-exact contract
+/// everywhere else.
+#[inline]
+pub fn vcgtq_s32(a: I32x4, b: I32x4) -> U32x4 {
+    // parity: native_cmgt_s32_matches_sim
+    #[cfg(target_arch = "aarch64")]
+    return vcgtq_s32_native(a, b);
+    #[cfg(not(target_arch = "aarch64"))]
+    vcgtq_s32_sim(a, b)
+}
+
+/// Simulated reference for [`vcgtq_s32`] (the only path off-ARM).
+#[inline]
+pub fn vcgtq_s32_sim(a: I32x4, b: I32x4) -> U32x4 {
+    let mut out = [0u32; 4];
+    for i in 0..4 {
+        out[i] = if a.0[i] > b.0[i] { u32::MAX } else { 0 };
+    }
+    U32x4(out)
+}
+
+/// The real `CMGT Vd.4S, Vn.4S, Vm.4S`.
+// parity: native_cmgt_s32_matches_sim
+#[cfg(target_arch = "aarch64")]
+#[inline]
+fn vcgtq_s32_native(a: I32x4, b: I32x4) -> U32x4 {
+    use core::arch::aarch64 as arm;
+    // SAFETY: NEON (ASIMD) is baseline on AArch64; each ld1/st1 pointer
+    // covers exactly one 16-byte register drawn from/into a local array.
+    unsafe {
+        let va = arm::vld1q_s32(a.0.as_ptr());
+        let vb = arm::vld1q_s32(b.0.as_ptr());
+        let mut out = [0u32; 4];
+        arm::vst1q_u32(out.as_mut_ptr(), arm::vcgtq_s32(va, vb));
+        U32x4(out)
     }
 }
 
@@ -728,6 +784,20 @@ mod tests {
     }
 
     #[test]
+    fn i32_compare_mask_matches_f32_on_flint_encodings() {
+        // The carrier contract in miniature: CMGT over FLInt-mapped lanes
+        // produces the same U32x4 mask FCMGT produced over the floats.
+        let xs = [3.5f32, -0.0, f32::NAN, 2e-40];
+        let t = 0.5f32;
+        let want = vcgtq_f32(F32x4(xs), vdupq_n_f32(t));
+        let enc = xs.map(crate::quant::flint::encode_feature_gt);
+        let got = vcgtq_s32(vld1q_s32(&enc), vdupq_n_s32(crate::quant::flint::encode_threshold(t)));
+        assert_eq!(got, want);
+        assert_eq!(vcgtq_s32(vdupq_n_s32(1), vdupq_n_s32(1)).0, [0; 4]);
+        assert_eq!(vcgtq_s32(vdupq_n_s32(i32::MAX), vdupq_n_s32(i32::MIN)).0, [u32::MAX; 4]);
+    }
+
+    #[test]
     fn tst_vs_ceq() {
         let a = U8x16([0, 1, 2, 0, 255, 0, 0, 0, 0, 0, 0, 0, 0, 0, 0, 4]);
         let ones = vdupq_n_u8(0xFF);
@@ -900,6 +970,14 @@ mod parity_tests {
         [1; 8],
         [-1, 0, i16::MAX, i16::MIN, 300, -300, 7, -7],
     ];
+    /// Includes FLInt-mapped corner patterns: map(±0.0) = 0/-1,
+    /// map(±inf) = ±0x7f80_0000, and the NaN saturations i32::MIN/MAX.
+    const I32_CASES: [[i32; 4]; 4] = [
+        [0; 4],
+        [i32::MIN, i32::MAX, -1, 1],
+        [0x7f80_0000, -0x7f80_0000, 8, -8],
+        [-1, 0, i32::MAX, i32::MIN],
+    ];
 
     #[test]
     fn native_cmgt_s8_matches_sim() {
@@ -927,6 +1005,16 @@ mod parity_tests {
             for b in I16_CASES {
                 let (a, b) = (I16x8(a), I16x8(b));
                 assert_eq!(vcgtq_s16_native(a, b), vcgtq_s16_sim(a, b), "{a:?} > {b:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn native_cmgt_s32_matches_sim() {
+        for a in I32_CASES {
+            for b in I32_CASES {
+                let (a, b) = (I32x4(a), I32x4(b));
+                assert_eq!(vcgtq_s32_native(a, b), vcgtq_s32_sim(a, b), "{a:?} > {b:?}");
             }
         }
     }

@@ -37,6 +37,16 @@ pub struct OpTrace {
     pub random_loads: u64,
     /// Stores, in bytes.
     pub store_bytes: u64,
+    /// Threshold compares executed on the *integer* pipe (scalar or NEON;
+    /// the int tiers and the FLInt carrier). Informational sub-count: these
+    /// compares are already included in `scalar_alu`/`neon_alu`, so they
+    /// are excluded from [`OpTrace::simd_ops`]/[`OpTrace::total_ops`] and
+    /// the device cost model — they exist so `bench --exp engine_micro`
+    /// can split the op mix by compare pipe.
+    pub cmp_int: u64,
+    /// Threshold compares executed on the *float* pipe (sub-count of
+    /// `scalar_fp`/`neon_fp`, same exclusions as `cmp_int`).
+    pub cmp_fp: u64,
 }
 
 impl OpTrace {
@@ -58,6 +68,8 @@ impl OpTrace {
             stream_load_bytes: self.stream_load_bytes + other.stream_load_bytes,
             random_loads: self.random_loads + other.random_loads,
             store_bytes: self.store_bytes + other.store_bytes,
+            cmp_int: self.cmp_int + other.cmp_int,
+            cmp_fp: self.cmp_fp + other.cmp_fp,
         }
     }
 
@@ -76,6 +88,8 @@ impl OpTrace {
             stream_load_bytes: s(self.stream_load_bytes),
             random_loads: s(self.random_loads),
             store_bytes: s(self.store_bytes),
+            cmp_int: s(self.cmp_int),
+            cmp_fp: s(self.cmp_fp),
         }
     }
 
@@ -101,6 +115,8 @@ impl OpTrace {
             ("stream_load_bytes", self.stream_load_bytes),
             ("random_loads", self.random_loads),
             ("store_bytes", self.store_bytes),
+            ("cmp_int", self.cmp_int),
+            ("cmp_fp", self.cmp_fp),
         ]
     }
 
@@ -140,5 +156,19 @@ mod tests {
     fn total_counts_memory_in_lines() {
         let t = OpTrace { stream_load_bytes: 160, ..Default::default() };
         assert_eq!(t.total_ops(), 10);
+    }
+
+    /// The compare sub-counts ride along in add/scale/counters but never
+    /// perturb the aggregate figures the device cost model consumes.
+    #[test]
+    fn cmp_subcounts_are_informational_only() {
+        let a = OpTrace { neon_alu: 8, cmp_int: 8, cmp_fp: 3, ..Default::default() };
+        let b = a.add(&a).scale(0.5);
+        assert_eq!(b.cmp_int, 8);
+        assert_eq!(b.cmp_fp, 3);
+        assert_eq!(a.simd_ops(), 8, "cmp_int must not double-count into simd_ops");
+        assert_eq!(a.total_ops(), 8, "cmp sub-counts must not inflate total_ops");
+        let names: Vec<&str> = a.counters().iter().map(|(n, _)| *n).collect();
+        assert!(names.contains(&"cmp_int") && names.contains(&"cmp_fp"));
     }
 }

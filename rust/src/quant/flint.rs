@@ -1,0 +1,377 @@
+//! FLInt carrier: order-preserving `f32 → i32` mapping for integer
+//! threshold compares with **exact** float semantics (DESIGN.md §10).
+//!
+//! IEEE-754 floats of the same sign already order like integers when
+//! their bit patterns are read as sign-magnitude numbers. FLInt
+//! (Hakert et al., PAPERS.md) exploits this: one cheap fixup turns the
+//! bit pattern into a two's-complement integer whose `<`/`>` order
+//! matches the float order, so every threshold comparison in an f32
+//! engine can run on the integer SIMD pipe (`vcgtq_s32` instead of
+//! `vcgtq_f32`, or scalar int compares in if-else) with **zero**
+//! quantization error and no scale-selection machinery. This module is
+//! the whole carrier: [`map_f32`] (the fixup), [`encode_threshold`]
+//! (model-build time, once per node) and [`encode_feature_le`] /
+//! [`encode_feature_gt`] (once per row element at predict time).
+//!
+//! ## The map
+//!
+//! ```text
+//! map(x) = bits(x)                      if sign(x) = 0   (x ≥ +0.0, +NaN)
+//!          bits(x) XOR 0x7fff_ffff      if sign(x) = 1   (x ≤ -0.0, -NaN)
+//! ```
+//!
+//! Positive floats keep their pattern (already ascending as i32);
+//! negative floats get their magnitude bits flipped so bigger
+//! magnitudes order *lower*, while the intact sign bit keeps every
+//! negative below every positive. This is exactly the fixup inside
+//! `f32::total_cmp`, so `map(a) < map(b) ⇔ a.total_cmp(&b) == Less`
+//! for **all** 2³² bit patterns — including denormals (their patterns
+//! sit, already ordered, between zero and the smallest normal; the map
+//! never rounds or flushes them) and ±inf. The map is injective and an
+//! involution on its own output, so [`unmap_i32`] is exact.
+//!
+//! ## The contract (±0.0, NaN)
+//!
+//! `total_cmp` is *finer* than the IEEE compares the f32 engines
+//! execute: it separates -0.0 < +0.0 and orders NaNs, where `<=`/`>`
+//! treat -0.0 == +0.0 and return false on any NaN. Two fixups restore
+//! the engines' exact semantics:
+//!
+//! * **Thresholds** ([`encode_threshold`]): -0.0 is canonicalized to
+//!   +0.0 before mapping. After that no stored threshold encodes to
+//!   map(-0.0) = -1, and a ±0.0 *feature* (encoding to -1 or 0) falls
+//!   on the same side of every threshold either way — matching
+//!   `-0.0 == +0.0` without touching the feature hot path.
+//! * **Features**: IEEE compares are false on NaN, and the two engine
+//!   styles need opposite saturations to reproduce that. The
+//!   `x <= t` traversals (NA, IE: false ⇒ go right) use
+//!   [`encode_feature_le`], NaN → [`i32::MAX`]; the `x > t` mask scans
+//!   (QS, VQS, RS: false ⇒ stop clearing masks) use
+//!   [`encode_feature_gt`], NaN → [`i32::MIN`]. Each FLInt engine is
+//!   bit-identical to *its own* f32 twin on NaN features; NA/IE and
+//!   the QS family already disagree with each other there in plain
+//!   f32, and the carrier inherits that split verbatim.
+//! * **NaN thresholds** are out of contract (trained forests never
+//!   produce them — thresholds are midpoints of finite feature
+//!   values); they are mapped plainly, without canonicalization.
+//!
+//! Because the carrier changes *representation only*, outputs are
+//! bit-identical to the f32 tier by construction — the selector
+//! asserts 100% agreement instead of gating on it, and there is no
+//! accuracy ablation to run.
+
+/// The FLInt fixup: reinterpret `x`'s bits as i32 and flip the
+/// non-sign bits when negative. Total order identical to
+/// [`f32::total_cmp`]; injective over all bit patterns.
+#[inline(always)]
+pub fn map_f32(x: f32) -> i32 {
+    let b = x.to_bits() as i32;
+    // b >> 31 is all-ones for negatives; shifting the *unsigned* copy
+    // right by 1 clears the sign bit, leaving the 0x7fff_ffff flip mask.
+    b ^ ((((b >> 31) as u32) >> 1) as i32)
+}
+
+/// Exact inverse of [`map_f32`] (the fixup preserves the sign bit, so
+/// applying it twice is the identity).
+#[inline(always)]
+pub fn unmap_i32(m: i32) -> f32 {
+    let b = m ^ ((((m >> 31) as u32) >> 1) as i32);
+    f32::from_bits(b as u32)
+}
+
+/// Encode one split threshold at model-build time: canonicalize -0.0
+/// to +0.0 (restoring IEEE `-0.0 == +0.0` under integer compares),
+/// then apply [`map_f32`].
+#[inline(always)]
+pub fn encode_threshold(t: f32) -> i32 {
+    // `t == 0.0` is true for both zeros and false for NaN; the literal
+    // is +0.0, so exactly -0.0 is rewritten.
+    map_f32(if t == 0.0 { 0.0 } else { t })
+}
+
+/// Encode one feature value for the `x <= t` traversals (NA, IE).
+/// NaN saturates to [`i32::MAX`] so `enc(x) <= enc(t)` is false
+/// against every encoded threshold, matching IEEE `NaN <= t`.
+#[inline(always)]
+pub fn encode_feature_le(x: f32) -> i32 {
+    if x.is_nan() {
+        i32::MAX
+    } else {
+        map_f32(x)
+    }
+}
+
+/// Encode one feature value for the `x > t` mask scans (QS, VQS, RS).
+/// NaN saturates to [`i32::MIN`] so `enc(x) > enc(t)` is false
+/// against every encoded threshold, matching IEEE `NaN > t`.
+#[inline(always)]
+pub fn encode_feature_gt(x: f32) -> i32 {
+    if x.is_nan() {
+        i32::MIN
+    } else {
+        map_f32(x)
+    }
+}
+
+/// [`encode_threshold`] over a slice (model-build helper).
+pub fn encode_thresholds(ts: &[f32]) -> Vec<i32> {
+    ts.iter().map(|&t| encode_threshold(t)).collect()
+}
+
+/// [`encode_feature_le`] over a batch, reusing `out` (predict-time
+/// helper for the scalar traversals).
+pub fn encode_batch_le(x: &[f32], out: &mut Vec<i32>) {
+    out.clear();
+    out.extend(x.iter().map(|&v| encode_feature_le(v)));
+}
+
+/// [`encode_feature_gt`] over a batch, reusing `out` (predict-time
+/// helper for the mask-scan engines; the transpose kernels consume the
+/// encoded batch exactly like an f32 one).
+pub fn encode_batch_gt(x: &[f32], out: &mut Vec<i32>) {
+    out.clear();
+    out.extend(x.iter().map(|&v| encode_feature_gt(v)));
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testing::prop::Runner;
+    use std::cmp::Ordering;
+
+    /// Adversarial corner values: zeros, denormals (min positive, mid,
+    /// max), normals around 1.0, ±inf, and NaNs with varied payloads
+    /// and both signs.
+    fn corner_values() -> Vec<f32> {
+        let mut v = vec![
+            0.0,
+            -0.0,
+            f32::MIN_POSITIVE,                 // smallest normal
+            -f32::MIN_POSITIVE,
+            f32::from_bits(0x0000_0001),       // smallest denormal
+            f32::from_bits(0x8000_0001),
+            f32::from_bits(0x0040_0000),       // mid denormal
+            f32::from_bits(0x007f_ffff),       // largest denormal
+            f32::from_bits(0x807f_ffff),
+            1.0,
+            -1.0,
+            1.0 + f32::EPSILON,
+            f32::MAX,
+            f32::MIN,
+            f32::INFINITY,
+            f32::NEG_INFINITY,
+            f32::NAN,
+            -f32::NAN,
+            f32::from_bits(0x7f80_0001),       // signalling-payload NaN
+            f32::from_bits(0xffc0_1234),       // quiet -NaN, odd payload
+            f32::from_bits(0x7fff_ffff),       // max-payload NaN
+        ];
+        v.extend([1e-30f32, -1e-30, 3.5e38, -3.5e38, 0.1, -0.1]);
+        v
+    }
+
+    #[test]
+    fn map_orders_exactly_like_total_cmp_on_corners() {
+        let vals = corner_values();
+        for &a in &vals {
+            for &b in &vals {
+                let int_ord = map_f32(a).cmp(&map_f32(b));
+                assert_eq!(
+                    int_ord,
+                    a.total_cmp(&b),
+                    "map order diverged from total_cmp on {a:?} ({:#010x}) vs {b:?} ({:#010x})",
+                    a.to_bits(),
+                    b.to_bits()
+                );
+            }
+        }
+    }
+
+    /// Satellite: order preservation vs `total_cmp` over *random bit
+    /// patterns* — every float class (normals, denormals, zeros, infs,
+    /// NaN payloads) appears, nothing is excluded.
+    #[test]
+    fn property_map_matches_total_cmp_on_random_bit_patterns() {
+        Runner::new(512).with_seed(0xF11A7).run(|rng, _| {
+            let a = f32::from_bits(rng.next_u32());
+            let b = f32::from_bits(rng.next_u32());
+            let int_ord = map_f32(a).cmp(&map_f32(b));
+            if int_ord != a.total_cmp(&b) {
+                return Err(format!(
+                    "order mismatch: {:#010x} vs {:#010x}: map {int_ord:?}, total_cmp {:?}",
+                    a.to_bits(),
+                    b.to_bits(),
+                    a.total_cmp(&b)
+                ));
+            }
+            Ok(())
+        });
+    }
+
+    /// Round-trip: `unmap(map(x))` restores the exact bit pattern for
+    /// every input class (the fixup is an involution).
+    #[test]
+    fn property_map_round_trips_bit_exactly() {
+        for &v in &corner_values() {
+            assert_eq!(unmap_i32(map_f32(v)).to_bits(), v.to_bits(), "{v:?}");
+        }
+        Runner::new(512).with_seed(0xF11B).run(|rng, _| {
+            let bits = rng.next_u32();
+            let back = unmap_i32(map_f32(f32::from_bits(bits))).to_bits();
+            if back != bits {
+                return Err(format!("round-trip {bits:#010x} -> {back:#010x}"));
+            }
+            Ok(())
+        });
+    }
+
+    /// Monotonicity in the IEEE (not just total) order: for non-NaN
+    /// a < b (float compare), map(a) < map(b). Complements the
+    /// total_cmp test with the order the engines actually use.
+    #[test]
+    fn property_map_is_monotone_in_ieee_order() {
+        Runner::new(512).with_seed(0xF11C).run(|rng, _| {
+            let a = f32::from_bits(rng.next_u32());
+            let b = f32::from_bits(rng.next_u32());
+            if a.is_nan() || b.is_nan() {
+                return Ok(());
+            }
+            if a < b && map_f32(a) >= map_f32(b) {
+                return Err(format!("monotonicity broken: {a:?} < {b:?}"));
+            }
+            // IEEE equality (covers -0.0 == +0.0) must mean threshold
+            // encodings agree even when raw maps differ.
+            if a == b && encode_threshold(a) != encode_threshold(b) {
+                return Err(format!("threshold encodings of equal floats differ: {a:?} {b:?}"));
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn zero_handling_matches_ieee_compares() {
+        // map separates the zeros (that is the point of canonicalizing
+        // thresholds)...
+        assert_eq!(map_f32(-0.0), -1);
+        assert_eq!(map_f32(0.0), 0);
+        // ...and encode_threshold folds them back together.
+        assert_eq!(encode_threshold(-0.0), 0);
+        assert_eq!(encode_threshold(0.0), 0);
+        // Both encodings of a ±0.0 feature land on the same side of
+        // every canonicalized threshold, for both compare styles.
+        for &t in &corner_values() {
+            if t.is_nan() {
+                continue; // NaN thresholds are out of contract
+            }
+            let te = encode_threshold(t);
+            for x in [0.0f32, -0.0] {
+                assert_eq!(encode_feature_le(x) <= te, x <= t, "le: x={x:?} t={t:?}");
+                assert_eq!(encode_feature_gt(x) > te, x > t, "gt: x={x:?} t={t:?}");
+            }
+        }
+    }
+
+    /// The headline carrier property, stated directly: for every
+    /// feature/threshold pair (NaN features included, NaN thresholds
+    /// out of contract), the integer compare reproduces the IEEE
+    /// compare each engine style executes.
+    #[test]
+    fn property_encoded_compares_equal_float_compares() {
+        let corners = corner_values();
+        Runner::new(512).with_seed(0xF11D).run(|rng, _| {
+            // Mix random patterns with corner draws so ±0/NaN/denormal
+            // pairs appear constantly, not once in 2^32.
+            let mut draw = |rng: &mut crate::util::Pcg32| {
+                let r = rng.next_u32();
+                if r % 4 == 0 {
+                    corners[(r / 4) as usize % corners.len()]
+                } else {
+                    f32::from_bits(rng.next_u32())
+                }
+            };
+            let x = draw(rng);
+            let t = draw(rng);
+            if t.is_nan() {
+                return Ok(());
+            }
+            let te = encode_threshold(t);
+            if (encode_feature_le(x) <= te) != (x <= t) {
+                return Err(format!("le diverged: x={x:?} t={t:?}"));
+            }
+            if (encode_feature_gt(x) > te) != (x > t) {
+                return Err(format!("gt diverged: x={x:?} t={t:?}"));
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn nan_features_saturate_per_compare_style() {
+        for nan in [f32::NAN, -f32::NAN, f32::from_bits(0x7f80_0001)] {
+            assert_eq!(encode_feature_le(nan), i32::MAX);
+            assert_eq!(encode_feature_gt(nan), i32::MIN);
+        }
+        // Against every encodable threshold, both styles come out
+        // false — exactly IEEE NaN semantics (NA/IE descend right, the
+        // QS family stops clearing masks).
+        for &t in &corner_values() {
+            if t.is_nan() {
+                continue;
+            }
+            let te = encode_threshold(t);
+            assert!(encode_feature_le(f32::NAN) > te, "NaN must not go left of {t:?}");
+            assert!(encode_feature_gt(f32::NAN) <= te, "NaN must not set masks at {t:?}");
+        }
+    }
+
+    #[test]
+    fn denormals_and_infinities_are_exact() {
+        // Denormals order strictly between zero and the smallest
+        // normal, with no flush-to-zero collapse.
+        let tiny = f32::from_bits(0x0000_0001);
+        let big_denorm = f32::from_bits(0x007f_ffff);
+        assert!(map_f32(0.0) < map_f32(tiny));
+        assert!(map_f32(tiny) < map_f32(big_denorm));
+        assert!(map_f32(big_denorm) < map_f32(f32::MIN_POSITIVE));
+        assert!(map_f32(-tiny) < map_f32(-0.0));
+        assert_eq!(map_f32(tiny) - map_f32(0.0), 1, "adjacent patterns stay adjacent");
+        // ±inf sit beyond every finite value but inside the i32 range.
+        assert!(map_f32(f32::MAX) < map_f32(f32::INFINITY));
+        assert!(map_f32(f32::NEG_INFINITY) < map_f32(f32::MIN));
+        assert_eq!(map_f32(f32::INFINITY), 0x7f80_0000);
+    }
+
+    #[test]
+    fn batch_encoders_match_scalar_encoders() {
+        let vals = corner_values();
+        let mut le = Vec::new();
+        let mut gt = Vec::new();
+        encode_batch_le(&vals, &mut le);
+        encode_batch_gt(&vals, &mut gt);
+        assert_eq!(le.len(), vals.len());
+        for (i, &v) in vals.iter().enumerate() {
+            assert_eq!(le[i], encode_feature_le(v));
+            assert_eq!(gt[i], encode_feature_gt(v));
+        }
+        // Buffer reuse clears stale contents.
+        encode_batch_le(&[1.0], &mut le);
+        assert_eq!(le, vec![map_f32(1.0)]);
+        assert_eq!(encode_thresholds(&[0.5, -0.0]), vec![map_f32(0.5), 0]);
+    }
+
+    #[test]
+    fn total_cmp_equality_only_for_identical_bits() {
+        // Injectivity, spelled as the property the RS node-merging
+        // path relies on: equal maps ⇔ equal bit patterns.
+        let vals = corner_values();
+        for &a in &vals {
+            for &b in &vals {
+                assert_eq!(
+                    map_f32(a) == map_f32(b),
+                    a.total_cmp(&b) == Ordering::Equal,
+                    "{a:?} vs {b:?}"
+                );
+            }
+        }
+    }
+}

@@ -70,6 +70,7 @@
 //! final descale all stay at the common scale `s`; only leaf storage is
 //! per-tree.
 
+pub mod flint;
 pub mod merge;
 
 use std::marker::PhantomData;

@@ -76,6 +76,20 @@ fn all_engines_agree_on_all_datasets() {
                             id.name()
                         );
                     }
+                    // FLInt carrier: bit-identical to the f32 twin engine
+                    // by construction (not merely close; the dedicated
+                    // property suite is rust/tests/flint_exact.rs).
+                    Precision::F32Flint => {
+                        let twin = build(kind, Precision::F32, &f, None)
+                            .unwrap_or_else(|e| panic!("{} twin: {e}", kind.short()));
+                        assert_eq!(
+                            got,
+                            twin.predict(x),
+                            "{} on {} (L={leaves}) diverged from its f32 twin",
+                            variant_name(kind, precision),
+                            id.name()
+                        );
+                    }
                 }
             }
         }

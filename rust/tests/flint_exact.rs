@@ -1,0 +1,173 @@
+//! FLInt-carrier exactness contract (ISSUE 8 acceptance): every FLInt
+//! engine — flNA, flIE, flQS, flVQS, flRS — must be **bit-identical** to
+//! its f32 twin across random forests, batch sizes (including
+//! non-multiples of the SIMD lane widths), and 1–8 exec threads (serial
+//! `build` + `ParallelEngine` under the default `ShardPolicy::Exact`),
+//! with NaN / ±0.0 / denormal / ±inf feature values injected into every
+//! batch. Equality is on the raw f32 *bits* (`to_bits`), so a mismatch in
+//! any compare decision, mask, leaf pick or accumulation order shows up
+//! as a hard failure — the carrier is a virtual precision, not an
+//! approximation (DESIGN.md §10).
+
+use arbors::engine::{build, build_parallel, flint_variants, variant_name, Precision};
+use arbors::forest::builder::{train_random_forest, RfParams, TreeParams};
+use arbors::testing::Runner;
+use arbors::util::Pcg32;
+
+/// Adversarial f32 values every batch gets seeded with: both zeros, quiet
+/// and payload NaNs, the smallest denormals, both infinities, and values
+/// straddling the sign boundary (the regime the sign-magnitude fixup
+/// exists for).
+const ADVERSARIAL: [f32; 12] = [
+    0.0,
+    -0.0,
+    f32::NAN,
+    f32::INFINITY,
+    f32::NEG_INFINITY,
+    f32::MIN_POSITIVE,            // smallest normal
+    1.0e-40,                      // denormal
+    -1.0e-40,                     // negative denormal
+    f32::MAX,
+    f32::MIN,
+    1.0,
+    -1.0,
+];
+
+fn bits(v: &[f32]) -> Vec<u32> {
+    v.iter().map(|x| x.to_bits()).collect()
+}
+
+#[test]
+fn flint_engines_bit_identical_to_f32_twins() {
+    Runner::new(12).with_seed(0xF117).run(|rng: &mut Pcg32, size| {
+        // Random problem shape. Training features include exact zeros so
+        // split midpoints can land on the ±0.0 seam the carrier
+        // canonicalizes (quant::flint threshold contract).
+        let d = rng.range(2, 10);
+        let c = rng.range(1, 4).max(1);
+        let n_train = 100 + size;
+        let mut x = Vec::with_capacity(n_train * d);
+        let mut y = Vec::with_capacity(n_train);
+        for _ in 0..n_train {
+            for _ in 0..d {
+                x.push(match rng.below(8) {
+                    0 => 0.0,
+                    1 => -rng.f32(),
+                    _ => rng.f32(),
+                });
+            }
+            y.push(rng.below(c) as u32);
+        }
+        let f = train_random_forest(
+            &x,
+            &y,
+            d,
+            c,
+            RfParams {
+                n_trees: rng.range(1, 12),
+                tree: TreeParams {
+                    max_leaves: *rng.choose(&[4usize, 8, 16, 32, 64]),
+                    min_samples_leaf: 1,
+                    mtry: 0,
+                },
+                seed: rng.next_u64(),
+                ..Default::default()
+            },
+        );
+        // Awkward batch sizes: 1, primes, non-multiples of v=4 (flVQS)
+        // and v=16 (flRS).
+        let n_eval = *rng.choose(&[1usize, 3, 15, 16, 17, 33, 50 + size % 23]);
+        let mut xe: Vec<f32> = (0..n_eval * d)
+            .map(|_| if rng.below(4) == 0 { -rng.f32() } else { rng.f32() })
+            .collect();
+        // Inject adversarial values at random positions (≈1 in 6 entries).
+        for v in xe.iter_mut() {
+            if rng.below(6) == 0 {
+                *v = *rng.choose(&ADVERSARIAL);
+            }
+        }
+        for (kind, precision) in flint_variants() {
+            let twin = build(kind, Precision::F32, &f, None).map_err(|e| e.to_string())?;
+            let want = twin.predict(&xe);
+            let serial = build(kind, precision, &f, None).map_err(|e| e.to_string())?;
+            let got = serial.predict(&xe);
+            if bits(&got) != bits(&want) {
+                let first = got
+                    .iter()
+                    .zip(&want)
+                    .position(|(a, b)| a.to_bits() != b.to_bits())
+                    .unwrap_or(0);
+                return Err(format!(
+                    "{} differs from its f32 twin (n={n_eval}; first mismatch at \
+                     flat index {first}: {:?} vs {:?})",
+                    variant_name(kind, precision),
+                    got[first],
+                    want[first],
+                ));
+            }
+            for threads in [2usize, 3, 8] {
+                let par = build_parallel(kind, precision, &f, None, threads)
+                    .map_err(|e| e.to_string())?;
+                if bits(&par.predict(&xe)) != bits(&want) {
+                    return Err(format!(
+                        "{} × {threads}t differs from the f32 twin at n={n_eval}",
+                        variant_name(kind, precision),
+                    ));
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+/// Pure-adversarial batches: every feature is a corner value (NaN, ±0.0,
+/// denormals, ±inf). These rows never take the common compare paths, so
+/// the NaN-goes-right / -0.0-canonicalization contracts carry the whole
+/// result.
+#[test]
+fn flint_engines_bit_identical_on_pure_corner_batches() {
+    Runner::new(8).with_seed(0xF118).run(|rng: &mut Pcg32, size| {
+        let d = rng.range(2, 6);
+        let c = rng.range(1, 3).max(1);
+        let n_train = 80 + size;
+        let mut x = Vec::with_capacity(n_train * d);
+        let mut y = Vec::with_capacity(n_train);
+        for _ in 0..n_train {
+            for _ in 0..d {
+                x.push(rng.f32() - 0.5);
+            }
+            y.push(rng.below(c) as u32);
+        }
+        let f = train_random_forest(
+            &x,
+            &y,
+            d,
+            c,
+            RfParams {
+                n_trees: rng.range(1, 8),
+                tree: TreeParams { max_leaves: 16, min_samples_leaf: 1, mtry: 0 },
+                seed: rng.next_u64(),
+                ..Default::default()
+            },
+        );
+        let n_eval = *rng.choose(&[1usize, 5, 16, 19, 37]);
+        let xe: Vec<f32> =
+            (0..n_eval * d).map(|_| *rng.choose(&ADVERSARIAL)).collect();
+        for (kind, precision) in flint_variants() {
+            let want = build(kind, Precision::F32, &f, None)
+                .map_err(|e| e.to_string())?
+                .predict(&xe);
+            for threads in [1usize, 4, 8] {
+                let e = build_parallel(kind, precision, &f, None, threads)
+                    .map_err(|e| e.to_string())?;
+                if bits(&e.predict(&xe)) != bits(&want) {
+                    return Err(format!(
+                        "{} × {threads}t diverged on a pure corner batch (n={n_eval})",
+                        variant_name(kind, precision),
+                    ));
+                }
+            }
+        }
+        Ok(())
+    });
+}

@@ -580,6 +580,28 @@ mod tests {
     }
 
     #[test]
+    fn neon_accepts_dispatcher_plus_separate_native_fn() {
+        // The `vcgtq_s32` FLInt-carrier shape: a sim-default dispatcher
+        // (whose `not()` branch is the fallback) plus a standalone
+        // `#[cfg(target_arch)]` native fn carrying its own `// parity:`
+        // line — TWO positive-cfg sites, both satisfied by the one
+        // fallback within ±60 lines and the named test.
+        let src = "pub fn vcgt(a: A, b: A) -> M {\n    \
+                   // parity: native_cmgt_matches_sim\n    \
+                   #[cfg(target_arch = \"aarch64\")]\n    \
+                   return vcgt_native(a, b);\n    \
+                   #[cfg(not(target_arch = \"aarch64\"))]\n    \
+                   vcgt_sim(a, b)\n}\n\
+                   pub fn vcgt_sim(a: A, b: A) -> M { m }\n\
+                   // parity: native_cmgt_matches_sim\n\
+                   #[cfg(target_arch = \"aarch64\")]\n\
+                   fn vcgt_native(a: A, b: A) -> M { m }\n\
+                   fn native_cmgt_matches_sim() {}\n";
+        let r = audit_file("src/neon/ops.rs", src);
+        assert!(r.findings.is_empty(), "{:?}", r.findings);
+    }
+
+    #[test]
     fn neon_rejects_dangling_parity_reference() {
         let src = "// parity: no_such_test\n#[cfg(target_arch = \"aarch64\")]\nreturn native(a, b);\n#[cfg(not(target_arch = \"aarch64\"))]\nscalar(a, b)\n";
         let r = audit_file("src/neon/ops.rs", src);

@@ -30,6 +30,14 @@ arbors predict --model /tmp/model.json --data /tmp/batch.csv --engine RS \
     --precision i8 --out /tmp/preds.csv
 test -s /tmp/preds.csv
 
+# FLInt carrier tier (ISSUE 8): integer threshold compares, bit-exact f32
+# outputs — the flint predictions must equal the f32 ones byte-for-byte.
+arbors predict --model /tmp/model.json --data /tmp/batch.csv --engine RS \
+    --precision f32 --out /tmp/preds_f32.csv
+arbors predict --model /tmp/model.json --data /tmp/batch.csv --engine RS \
+    --precision flint --out /tmp/preds_flint.csv
+cmp /tmp/preds_f32.csv /tmp/preds_flint.csv
+
 arbors select --model /tmp/model.json --device a53 --threads 2
 
 # --pin anchors exec workers to their topology cluster (graceful no-op
@@ -42,6 +50,8 @@ arbors predict --model /tmp/model.json --data /tmp/batch.csv --engine RS \
 test -s /tmp/preds_pinned.csv
 
 arbors bench --exp int8
+# Per-engine f32-vs-FLInt latency table (bit-identity asserted inside).
+arbors bench --exp flint --smoke
 arbors bench --exp scaling --threads 2
 arbors bench --exp serving --threads 2
 # The adaptive-execution grid (static/adaptive × pinned/unpinned ×
@@ -55,7 +65,7 @@ arbors bench --exp adaptive --threads 2 --smoke
 # trace capture.
 export ARBORS_BENCH_DATA=/tmp/bench_data.js
 rm -f /tmp/bench_data.js
-arbors bench --exp smoke
+arbors bench --exp smoke --matrix
 arbors bench --gate
 unset ARBORS_BENCH_DATA
 arbors bench --exp obs --threads 2

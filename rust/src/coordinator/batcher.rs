@@ -657,11 +657,19 @@ fn flush_batch(ctx: &Arc<FlushCtx>, mut batch: Vec<Request>) {
                 // `shard_exec` span: the engine call itself, tagged with
                 // the executing worker's topology class at record time.
                 let exec_span = SpanTimer::start("shard_exec");
+                let t0 = feedback.is_some().then(|| st.engine.cost_counters()).flatten();
                 let sw = crate::util::Stopwatch::start();
                 st.engine.predict_batch(xs, os);
                 exec_span.finish_with("rows", (b - a) as f64);
                 if let Some(f) = feedback {
                     f.record(slot, b - a, sw.micros());
+                    // Heterogeneous per-task cost: early-exit engines report
+                    // cumulative (rows, tree evals); the EWMA delta feeds
+                    // `Feedback::trees_per_row` (concurrent chunks may blend
+                    // deltas — fine for an EWMA).
+                    if let (Some((r0, e0)), Some((r1, e1))) = (t0, st.engine.cost_counters()) {
+                        f.record_trees(e1.saturating_sub(e0), r1.saturating_sub(r0));
+                    }
                 }
             }) as Task
         })

@@ -39,7 +39,8 @@ pub use batcher::{BatchConfig, Batcher, ServeError};
 pub use metrics::Metrics;
 pub use net::{NetClient, NetServer};
 pub use selector::{
-    select_engine, select_engine_tier, select_engine_with, thread_budgets, Candidate, Selection,
+    select_engine, select_engine_early_exit, select_engine_tier, select_engine_with,
+    thread_budgets, Candidate, Selection,
 };
 
 use std::collections::HashMap;

@@ -10,7 +10,7 @@
 use std::sync::Arc;
 
 use crate::device::{model_working_set, DeviceProfile};
-use crate::engine::{build, Engine, EngineKind, Precision};
+use crate::engine::{build, build_early_exit, EarlyExitMode, Engine, EngineKind, Precision};
 use crate::exec::ParallelEngine;
 use crate::forest::Forest;
 use crate::util::Stopwatch;
@@ -26,6 +26,10 @@ pub struct Candidate {
     /// i16 per-tree-leaf-scale quantization (the `+pt` suffix): rebuilt via
     /// [`crate::engine::build_i16_per_tree`] rather than `build(kind, ..)`.
     pub per_tree: bool,
+    /// Early-exit wrapper candidate (the `ee`/`ea` prefix): rebuilt via
+    /// [`crate::engine::build_early_exit`] rather than `build(kind, ..)` —
+    /// only enumerated by [`select_engine_early_exit`].
+    pub early_exit: bool,
     /// Measured host wall-clock per instance (µs).
     pub host_us_per_instance: f64,
     /// Cost-model estimate per instance (µs) for the target device, if one
@@ -255,6 +259,7 @@ pub fn select_engine_tier(
                 precision,
                 threads,
                 per_tree,
+                early_exit: false,
                 host_us_per_instance: host,
                 device_us_per_instance: device_est,
                 agreement,
@@ -272,6 +277,7 @@ pub fn select_engine_tier(
                 && c.kind == fl.kind
                 && c.threads == fl.threads
                 && !c.per_tree
+                && !c.early_exit
         }) {
             assert_eq!(
                 fl.agreement, twin.agreement,
@@ -286,6 +292,98 @@ pub fn select_engine_tier(
         ka.partial_cmp(&kb).unwrap()
     });
     Ok(Selection { candidates, device: device.map(|d| d.name.to_string()) })
+}
+
+/// [`select_engine_tier`] plus early-exit candidates.
+///
+/// With `mode` other than [`EarlyExitMode::Off`], every variant is
+/// additionally wrapped in an [`crate::engine::EarlyExitEngine`]
+/// (calibration-ordered staged scoring, `ee`/`ea` prefix) and measured at
+/// every thread budget next to the plain candidates. The default entry
+/// points never enumerate these — early-exit is opt-in per selection — and
+/// [`Selection::recommended`]'s ≥ 99% agreement gate applies to approx-mode
+/// candidates exactly like any quantized tier, so an aggressive exit
+/// threshold cannot win a deployment it would degrade. Exit rates are
+/// data-dependent, so early-exit candidates carry no device cost-model
+/// estimate: they rank by measured host latency even under `--device`.
+pub fn select_engine_early_exit(
+    forest: &Forest,
+    calibration: &[f32],
+    device: Option<&DeviceProfile>,
+    repeats: usize,
+    thread_budgets: &[usize],
+    tier: Option<Precision>,
+    mode: EarlyExitMode,
+) -> anyhow::Result<Selection> {
+    let mut sel =
+        select_engine_tier(forest, calibration, device, repeats, thread_budgets, tier)?;
+    if mode == EarlyExitMode::Off {
+        return Ok(sel);
+    }
+    let n = calibration.len() / forest.n_features;
+    let ref_argmax =
+        Forest::argmax(&forest.predict_batch(calibration), forest.n_classes);
+    let mut budgets: Vec<usize> = thread_budgets.iter().map(|&t| t.max(1)).collect();
+    budgets.sort_unstable();
+    budgets.dedup();
+    if budgets.is_empty() {
+        budgets.push(1);
+    }
+    for (kind, precision) in crate::engine::all_variants_with_i8() {
+        if tier.is_some_and(|p| p != precision) {
+            continue;
+        }
+        // Non-classification forests and QS-family leaf caps surface here
+        // as build errors — skip the variant, exactly like the base loop.
+        let Ok(ee) = build_early_exit(kind, precision, forest, calibration, mode) else {
+            continue;
+        };
+        let serial: Arc<dyn Engine> = Arc::new(ee);
+        let display = serial.name();
+        for &threads in &budgets {
+            let engine: Arc<dyn Engine> = if threads <= 1 {
+                serial.clone()
+            } else {
+                // Row sharding keeps per-row exit decisions intact: each
+                // chunk sees its own rows, so the threaded candidate's
+                // scores are bit-identical to the serial wrapper's.
+                Arc::new(ParallelEngine::wrap(serial.clone(), threads))
+            };
+            let mut out = vec![0f32; n * forest.n_classes];
+            engine.predict_batch(calibration, &mut out);
+            let got = Forest::argmax(&out, forest.n_classes);
+            let same = got.iter().zip(&ref_argmax).filter(|(a, b)| a == b).count();
+            let agreement = same as f64 / ref_argmax.len().max(1) as f64;
+            let mut times = Vec::with_capacity(repeats);
+            for _ in 0..repeats.max(1) {
+                let sw = Stopwatch::start();
+                engine.predict_batch(calibration, &mut out);
+                times.push(sw.micros() / n as f64);
+            }
+            times.sort_by(|a, b| a.partial_cmp(b).unwrap());
+            sel.candidates.push(Candidate {
+                name: if threads <= 1 {
+                    display.clone()
+                } else {
+                    format!("{display}×{threads}t")
+                },
+                kind,
+                precision,
+                threads,
+                per_tree: false,
+                early_exit: true,
+                host_us_per_instance: times[times.len() / 2],
+                device_us_per_instance: None,
+                agreement,
+            });
+        }
+    }
+    sel.candidates.sort_by(|a, b| {
+        let ka = a.device_us_per_instance.unwrap_or(a.host_us_per_instance);
+        let kb = b.device_us_per_instance.unwrap_or(b.host_us_per_instance);
+        ka.partial_cmp(&kb).unwrap()
+    });
+    Ok(sel)
 }
 
 #[cfg(test)]
@@ -340,6 +438,7 @@ mod tests {
             precision: Precision::F32,
             threads: 1,
             per_tree: false,
+            early_exit: false,
             host_us_per_instance: us,
             device_us_per_instance: None,
             agreement,
@@ -415,6 +514,82 @@ mod tests {
             let twin = self32.candidates.iter().find(|c| c.kind == fl.kind).unwrap();
             assert_eq!(fl.agreement, twin.agreement, "{}", fl.name);
         }
+    }
+
+    /// Early-exit candidates only appear through the opt-in entry point,
+    /// mode Off is a passthrough, and exact-mode f32 candidates keep
+    /// perfect argmax agreement (the bound proof, observed end-to-end).
+    #[test]
+    fn early_exit_candidates_appended_and_exact() {
+        let ds = DatasetId::Magic.generate(500, 29);
+        let f = train_random_forest(
+            &ds.x,
+            &ds.labels,
+            ds.d,
+            ds.n_classes,
+            RfParams {
+                n_trees: 12,
+                tree: TreeParams { max_leaves: 16, min_samples_leaf: 2, mtry: 0 },
+                ..Default::default()
+            },
+        );
+        let cal = &ds.x[..ds.d * 96];
+        let base = super::select_engine_early_exit(
+            &f,
+            cal,
+            None,
+            1,
+            &[1],
+            Some(Precision::F32),
+            EarlyExitMode::Off,
+        )
+        .unwrap();
+        let n_f32 = crate::engine::all_variants_with_i8()
+            .iter()
+            .filter(|(_, p)| *p == Precision::F32)
+            .count();
+        assert_eq!(base.candidates.len(), n_f32);
+        assert!(base.candidates.iter().all(|c| !c.early_exit));
+
+        let sel = super::select_engine_early_exit(
+            &f,
+            cal,
+            None,
+            1,
+            &[1, 2],
+            Some(Precision::F32),
+            EarlyExitMode::Exact,
+        )
+        .unwrap();
+        // Base candidates at both budgets, plus one ee candidate per f32
+        // variant per budget.
+        assert_eq!(sel.candidates.len(), 4 * n_f32);
+        let ee: Vec<_> = sel.candidates.iter().filter(|c| c.early_exit).collect();
+        assert_eq!(ee.len(), 2 * n_f32);
+        assert!(ee.iter().all(|c| c.name.starts_with("ee")));
+        assert!(ee.iter().any(|c| c.threads == 2 && c.name.ends_with("×2t")));
+        // Exact mode provably preserves argmax; on the f32 tier the full
+        // scoring *is* the float reference, so agreement is exactly 1.
+        for c in &ee {
+            assert_eq!(c.agreement, 1.0, "{} lost argmax agreement", c.name);
+        }
+        // Approx candidates carry the ea prefix and rank under the same
+        // ≥99% gate as quantized tiers.
+        let approx = super::select_engine_early_exit(
+            &f,
+            cal,
+            None,
+            1,
+            &[1],
+            Some(Precision::F32),
+            EarlyExitMode::Approx,
+        )
+        .unwrap();
+        assert!(approx
+            .candidates
+            .iter()
+            .any(|c| c.early_exit && c.name.starts_with("ea")));
+        assert!(approx.recommended().agreement >= 0.99 || approx.candidates.iter().all(|c| c.agreement < 0.99));
     }
 
     #[test]

@@ -1,0 +1,600 @@
+//! Dynamic early-exit ensemble scoring (DESIGN.md §11).
+//!
+//! Daghero et al. (PAPERS.md) observe that most samples do not need the
+//! whole forest: score trees in a *confidence order* and stop a sample as
+//! soon as its partial argmax is decided. [`EarlyExitEngine`] wraps any
+//! `(EngineKind, Precision)` variant from the registry: the ordered forest
+//! is cut into geometrically growing stages, each stage is a normal
+//! [`Engine`] over a sub-forest, and between stages every still-active row
+//! is tested against a margin bound:
+//!
+//! * **Exact** — exit when the leading class's margin exceeds the maximum
+//!   mass the remaining trees could move between any two classes, plus a
+//!   float-rounding slack. The final argmax (including the first-index
+//!   tie-break of [`Forest::argmax`]) is *guaranteed* identical to scoring
+//!   every stage ([`EarlyExitMode::Off`]) — enforced by
+//!   `rust/tests/early_exit_exact.rs`.
+//! * **Approx** — exit when the margin exceeds `frac` × that remaining
+//!   mass. Faster, probabilistic; the selector gates it behind the same
+//!   ≥ 99% calibration-agreement rule as any quantized tier.
+//!
+//! The wrapper is precision-orthogonal: quantized tiers are built with an
+//! explicit full-forest scale so every stage (and the bound derivation)
+//! sees exactly the quantization full scoring would use. Per-row outputs of
+//! every registry engine are batch-composition independent, so compacting
+//! the active rows between stages — and row-sharding the wrapper under
+//! [`crate::exec::ParallelEngine`] — cannot change any row's scores.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+use crate::engine::{build, variant_name, Engine, EngineKind, Precision};
+use crate::forest::{Forest, Task};
+use crate::quant::{choose_scale, choose_scale_i8, QuantConfig};
+
+/// Early-exit policy (`--early-exit {off,exact,approx}`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum EarlyExitMode {
+    /// Score every stage — the reference the exact contract is stated
+    /// against (same stage order and accumulation, no exits).
+    Off,
+    /// Exit only when the argmax is provably decided.
+    Exact,
+    /// Exit when the margin clears `frac` × the remaining attainable mass.
+    Approx,
+}
+
+impl EarlyExitMode {
+    pub fn name(&self) -> &'static str {
+        match self {
+            EarlyExitMode::Off => "off",
+            EarlyExitMode::Exact => "exact",
+            EarlyExitMode::Approx => "approx",
+        }
+    }
+
+    pub fn from_name(s: &str) -> Option<EarlyExitMode> {
+        match s.to_ascii_lowercase().as_str() {
+            "off" => Some(EarlyExitMode::Off),
+            "exact" => Some(EarlyExitMode::Exact),
+            "approx" => Some(EarlyExitMode::Approx),
+            _ => None,
+        }
+    }
+}
+
+/// Default approx-mode margin fraction.
+pub const DEFAULT_APPROX_FRAC: f64 = 0.2;
+
+/// Trees per stage start at ⌈T/16⌉ and double — early stages are cheap
+/// (most exits happen there), late stages amortize per-stage overhead.
+const STAGE_GROWTH: usize = 2;
+
+struct Stage {
+    engine: Box<dyn Engine>,
+    n_trees: usize,
+}
+
+/// An early-exit wrapper around one engine variant. Build via
+/// [`build_early_exit`].
+pub struct EarlyExitEngine {
+    stages: Vec<Stage>,
+    /// Σ over trees *after* stage `i` of each tree's maximum inter-class
+    /// leaf gap (in the tier's dequantized value domain) — the most the
+    /// remaining forest can move any class difference.
+    gap_after: Vec<f64>,
+    /// Float-rounding slack added to `gap_after` in exact mode (§11): the
+    /// partial sums compared are f32, so a margin must clear the remaining
+    /// mass by more than every rounding step could contribute.
+    slack_after: Vec<f64>,
+    mode: EarlyExitMode,
+    frac: f64,
+    order: Vec<usize>,
+    n_features: usize,
+    n_classes: usize,
+    total_trees: usize,
+    lanes: usize,
+    name: String,
+    rows_scored: AtomicU64,
+    trees_evaluated: AtomicU64,
+}
+
+/// Build an early-exit wrapper over `(kind, precision)` for a
+/// classification forest.
+///
+/// `calibration` (row-major, may be empty) derives the confidence order:
+/// trees are sorted by how often their own leaf argmax agrees with the
+/// full-forest float argmax, most-agreeing first (ties keep the original
+/// index order; an empty calibration keeps the identity order). Quantized
+/// tiers are pinned to the full-forest scale (`choose_scale` /
+/// `choose_scale_i8`) so staging cannot change the quantization.
+pub fn build_early_exit(
+    kind: EngineKind,
+    precision: Precision,
+    forest: &Forest,
+    calibration: &[f32],
+    mode: EarlyExitMode,
+) -> anyhow::Result<EarlyExitEngine> {
+    anyhow::ensure!(
+        forest.task == Task::Classification && forest.n_classes >= 2,
+        "early exit needs a classification forest with >= 2 classes \
+         (got {:?}, {} classes): the exit test is an argmax margin",
+        forest.task,
+        forest.n_classes
+    );
+    anyhow::ensure!(!forest.trees.is_empty(), "early exit over an empty forest");
+    let d = forest.n_features;
+    let c = forest.n_classes;
+    anyhow::ensure!(
+        calibration.len() % d == 0,
+        "calibration length {} is not a multiple of n_features {d}",
+        calibration.len()
+    );
+    let t = forest.n_trees();
+
+    let order = confidence_order(forest, calibration);
+
+    // The quantization every stage shares, chosen once from the *full*
+    // forest — per-stage auto-scaling would quantize differently from full
+    // scoring and break the bound derivation.
+    let quant: Option<QuantConfig> = match precision {
+        Precision::F32 | Precision::F32Flint => None,
+        Precision::I16 => Some(choose_scale(forest, 1.0)),
+        Precision::I8 => Some(QuantConfig::new(choose_scale_i8(forest, 1.0).scale)),
+    };
+    // A tree's contribution in the value domain the engine actually sums:
+    // f32 tiers add the stored leaf, int tiers add the quantized leaf
+    // dequantized at the shared global scale (zero per-tree shifts on this
+    // build path).
+    let eff = |v: f32| -> f64 {
+        match (precision, quant) {
+            (Precision::I16, Some(cfg)) => {
+                cfg.q(v) as i32 as f64 / cfg.scale as f64
+            }
+            (Precision::I8, Some(cfg)) => {
+                let cfg8 = QuantConfig::<i8>::new(cfg.scale);
+                cfg8.q(v) as i32 as f64 / cfg8.scale as f64
+            }
+            _ => v as f64,
+        }
+    };
+
+    // Per ordered tree: the largest inter-class gap any single leaf can
+    // contribute, and the largest |value| (for the rounding slack).
+    let mut gap_t = Vec::with_capacity(t);
+    let mut hi_t = Vec::with_capacity(t);
+    for &ti in &order {
+        let tree = &forest.trees[ti];
+        let mut gap = 0f64;
+        let mut hi = 0f64;
+        for leaf in 0..tree.n_leaves {
+            let row = tree.leaf_row(leaf);
+            let mut lo_v = f64::INFINITY;
+            let mut hi_v = f64::NEG_INFINITY;
+            for &v in row {
+                let e = eff(v);
+                lo_v = lo_v.min(e);
+                hi_v = hi_v.max(e);
+                hi = hi.max(e.abs());
+            }
+            gap = gap.max(hi_v - lo_v);
+        }
+        gap_t.push(gap);
+        hi_t.push(hi);
+    }
+
+    // Stage sizes: ⌈T/16⌉, then doubling until the forest is covered.
+    let mut sizes = Vec::new();
+    let mut covered = 0usize;
+    let mut next = t.div_ceil(16).max(1);
+    while covered < t {
+        let k = next.min(t - covered);
+        sizes.push(k);
+        covered += k;
+        next = (next * STAGE_GROWTH).max(1);
+    }
+
+    // One inner engine per stage over a sub-forest in confidence order.
+    // Stage 0 keeps the base score; later stages contribute trees only, so
+    // the summed output is exactly one full scoring pass.
+    let mut stages = Vec::with_capacity(sizes.len());
+    let mut at = 0usize;
+    for (si, &k) in sizes.iter().enumerate() {
+        let mut sub = Forest::new(d, c, forest.task);
+        sub.trees = order[at..at + k].iter().map(|&ti| forest.trees[ti].clone()).collect();
+        if si == 0 {
+            sub.base_score = forest.base_score.clone();
+        }
+        let engine = build(kind, precision, &sub, quant)?;
+        stages.push(Stage { engine, n_trees: k });
+        at += k;
+    }
+
+    // Suffix bounds at each stage boundary. The slack covers every f32
+    // rounding step between the partial sum inspected at the boundary and
+    // the final sum: ≤ (trees + stage adds + base) additions per class,
+    // each off by ≤ ε·|operand| — bounded with generous headroom (§11).
+    let hi_total: f64 = hi_t.iter().sum();
+    let base_abs = forest.base_score.iter().fold(0f64, |m, &b| m.max((b as f64).abs()));
+    let adds = (t + 2 * sizes.len() + 4) as f64;
+    let n_stages = sizes.len();
+    let mut gap_after = vec![0f64; n_stages];
+    let mut slack_after = vec![0f64; n_stages];
+    let mut boundary = t; // trees scored once stage `i` completes
+    let mut suffix_gap = 0f64;
+    let mut suffix_hi = 0f64;
+    for i in (0..n_stages).rev() {
+        gap_after[i] = suffix_gap;
+        slack_after[i] =
+            adds * 4.0 * (f32::EPSILON as f64) * (hi_total + base_abs + suffix_hi + 1.0) + 1e-9;
+        boundary -= sizes[i];
+        for j in boundary..boundary + sizes[i] {
+            suffix_gap += gap_t[j];
+            suffix_hi += hi_t[j];
+        }
+    }
+
+    let prefix = match mode {
+        EarlyExitMode::Off => "e0",
+        EarlyExitMode::Exact => "ee",
+        EarlyExitMode::Approx => "ea",
+    };
+    let lanes = stages[0].engine.lanes();
+    Ok(EarlyExitEngine {
+        name: format!("{prefix}{}", variant_name(kind, precision)),
+        stages,
+        gap_after,
+        slack_after,
+        mode,
+        frac: DEFAULT_APPROX_FRAC,
+        order,
+        n_features: d,
+        n_classes: c,
+        total_trees: t,
+        lanes,
+        rows_scored: AtomicU64::new(0),
+        trees_evaluated: AtomicU64::new(0),
+    })
+}
+
+/// Trees sorted most-confident first: by calibration argmax agreement with
+/// the full-forest float argmax (descending), ties by original index.
+/// Identity order when the calibration batch is empty.
+fn confidence_order(forest: &Forest, calibration: &[f32]) -> Vec<usize> {
+    let d = forest.n_features;
+    let c = forest.n_classes;
+    let n = if d == 0 { 0 } else { calibration.len() / d };
+    let mut order: Vec<usize> = (0..forest.n_trees()).collect();
+    if n == 0 {
+        return order;
+    }
+    let reference = Forest::argmax(&forest.predict_batch(calibration), c);
+    let mut agree = vec![0usize; forest.n_trees()];
+    for (i, row) in calibration.chunks(d).enumerate() {
+        for (ti, tree) in forest.trees.iter().enumerate() {
+            let leaf = tree.leaf_row(tree.exit_leaf(row));
+            // Same strict-`>` first-index tie-break as `Forest::argmax`.
+            let mut best = 0usize;
+            for (j, &v) in leaf.iter().enumerate() {
+                if v > leaf[best] {
+                    best = j;
+                }
+            }
+            if best as u32 == reference[i] {
+                agree[ti] += 1;
+            }
+        }
+    }
+    order.sort_by(|&a, &b| agree[b].cmp(&agree[a]).then(a.cmp(&b)));
+    order
+}
+
+impl EarlyExitEngine {
+    /// Override the approx-mode margin fraction (ignored in other modes).
+    pub fn with_frac(mut self, frac: f64) -> Self {
+        self.frac = frac.max(0.0);
+        self
+    }
+
+    pub fn mode(&self) -> EarlyExitMode {
+        self.mode
+    }
+
+    /// The calibration-derived tree order (original indices).
+    pub fn order(&self) -> &[usize] {
+        &self.order
+    }
+
+    pub fn stage_sizes(&self) -> Vec<usize> {
+        self.stages.iter().map(|s| s.n_trees).collect()
+    }
+
+    pub fn total_trees(&self) -> usize {
+        self.total_trees
+    }
+
+    /// Cumulative `(rows scored, tree evaluations)` since build/reset. One
+    /// tree evaluation = one tree applied to one row, so full scoring costs
+    /// `rows × total_trees`.
+    pub fn counters(&self) -> (u64, u64) {
+        (self.rows_scored.load(Ordering::Relaxed), self.trees_evaluated.load(Ordering::Relaxed))
+    }
+
+    pub fn reset_counters(&self) {
+        self.rows_scored.store(0, Ordering::Relaxed);
+        self.trees_evaluated.store(0, Ordering::Relaxed);
+    }
+
+    /// Mean trees evaluated per row since build/reset (= `total_trees`
+    /// when nothing exited).
+    pub fn mean_trees_evaluated(&self) -> f64 {
+        let (rows, trees) = self.counters();
+        if rows == 0 {
+            0.0
+        } else {
+            trees as f64 / rows as f64
+        }
+    }
+
+    /// Margin of the current leader over the runner-up, in f64 over the f32
+    /// partial sums. Non-finite sums yield a non-exiting margin (fail-safe:
+    /// the row scores the whole forest).
+    fn margin(row: &[f32]) -> f64 {
+        let mut best = f64::NEG_INFINITY;
+        let mut second = f64::NEG_INFINITY;
+        for &v in row {
+            let v = v as f64;
+            if v > best {
+                second = best;
+                best = v;
+            } else if v > second {
+                second = v;
+            }
+        }
+        best - second
+    }
+}
+
+impl Engine for EarlyExitEngine {
+    fn name(&self) -> String {
+        self.name.clone()
+    }
+
+    fn lanes(&self) -> usize {
+        self.lanes
+    }
+
+    fn n_features(&self) -> usize {
+        self.n_features
+    }
+
+    fn n_classes(&self) -> usize {
+        self.n_classes
+    }
+
+    fn predict_batch(&self, x: &[f32], out: &mut [f32]) {
+        let d = self.n_features;
+        let c = self.n_classes;
+        let n = if d == 0 { 0 } else { x.len() / d };
+        let mut trees = 0u64;
+        let mut active: Vec<usize> = (0..n).collect();
+        let mut xs: Vec<f32> = Vec::new();
+        let mut os: Vec<f32> = Vec::new();
+        for (si, stage) in self.stages.iter().enumerate() {
+            if active.is_empty() {
+                break;
+            }
+            trees += (stage.n_trees * active.len()) as u64;
+            if si == 0 {
+                // Every row is active: the stage engine overwrites `out`
+                // directly (base score included), no gather needed.
+                stage.engine.predict_batch(x, out);
+            } else {
+                xs.clear();
+                for &r in &active {
+                    xs.extend_from_slice(&x[r * d..(r + 1) * d]);
+                }
+                os.clear();
+                os.resize(active.len() * c, 0.0);
+                stage.engine.predict_batch(&xs, &mut os);
+                for (k, &r) in active.iter().enumerate() {
+                    for j in 0..c {
+                        out[r * c + j] += os[k * c + j];
+                    }
+                }
+            }
+            if si + 1 == self.stages.len() {
+                break;
+            }
+            let bound = match self.mode {
+                EarlyExitMode::Off => continue,
+                EarlyExitMode::Exact => self.gap_after[si] + self.slack_after[si],
+                EarlyExitMode::Approx => self.frac * self.gap_after[si],
+            };
+            // Strict `>`: at the bound the runner-up could still tie, and a
+            // tie must resolve by final index order, not by exit timing.
+            // NaN margins compare false and fall through to full scoring.
+            active.retain(|&r| !(Self::margin(&out[r * c..(r + 1) * c]) > bound));
+        }
+        self.rows_scored.fetch_add(n as u64, Ordering::Relaxed);
+        self.trees_evaluated.fetch_add(trees, Ordering::Relaxed);
+    }
+
+    fn memory_bytes(&self) -> usize {
+        self.stages.iter().map(|s| s.engine.memory_bytes()).sum()
+    }
+
+    fn cost_counters(&self) -> Option<(u64, u64)> {
+        Some(self.counters())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::forest::Tree;
+
+    /// A forest of depth-0 trees (every row hits leaf 0) — exercises the
+    /// staging/margin machinery without training, so Miri can run it.
+    fn leaf_forest(leaves: &[&[f32]]) -> Forest {
+        let c = leaves[0].len();
+        let mut f = Forest::new(2, c, Task::Classification);
+        for l in leaves {
+            f.trees.push(Tree::leaf(l.to_vec()));
+        }
+        f
+    }
+
+    #[test]
+    fn mode_names_roundtrip() {
+        for m in [EarlyExitMode::Off, EarlyExitMode::Exact, EarlyExitMode::Approx] {
+            assert_eq!(EarlyExitMode::from_name(m.name()), Some(m));
+        }
+        assert_eq!(EarlyExitMode::from_name("EXACT"), Some(EarlyExitMode::Exact));
+        assert_eq!(EarlyExitMode::from_name("nope"), None);
+    }
+
+    #[test]
+    fn rejects_non_classification_and_empty() {
+        let f = Forest::new(2, 1, Task::Ranking);
+        assert!(build_early_exit(EngineKind::Naive, Precision::F32, &f, &[], EarlyExitMode::Exact)
+            .is_err());
+        let empty = Forest::new(2, 2, Task::Classification);
+        assert!(
+            build_early_exit(EngineKind::Naive, Precision::F32, &empty, &[], EarlyExitMode::Exact)
+                .is_err()
+        );
+    }
+
+    #[test]
+    fn exact_exits_after_dominant_tree() {
+        // One decisive tree + 7 tiny corrections: after stage 0 (1 tree)
+        // the margin (100) provably exceeds everything the remaining trees
+        // can move (7 × 0.001), so every row exits at the first boundary.
+        let mut leaves: Vec<&[f32]> = vec![&[100.0, 0.0]];
+        let tiny: &[f32] = &[0.001, 0.0];
+        leaves.extend(std::iter::repeat(tiny).take(7));
+        let f = leaf_forest(&leaves);
+        let ee = build_early_exit(EngineKind::Naive, Precision::F32, &f, &[], EarlyExitMode::Exact)
+            .unwrap();
+        assert_eq!(ee.stage_sizes(), vec![1, 2, 4, 1]);
+        let x = [0.3f32, 0.7, 0.9, 0.1, 0.5, 0.5];
+        let scores = ee.predict(&x);
+        let (rows, trees) = ee.counters();
+        assert_eq!(rows, 3);
+        assert_eq!(trees, 3, "every row must exit after the 1-tree stage 0");
+        assert!(ee.mean_trees_evaluated() < f.n_trees() as f64);
+        // Argmax identical to scoring every stage.
+        let off = build_early_exit(EngineKind::Naive, Precision::F32, &f, &[], EarlyExitMode::Off)
+            .unwrap();
+        assert_eq!(
+            Forest::argmax(&scores, 2),
+            Forest::argmax(&off.predict(&x), 2)
+        );
+        assert_eq!(off.counters().1, 3 * f.n_trees() as u64);
+    }
+
+    #[test]
+    fn tie_margin_forest_never_exits_early() {
+        // Two classes within one leaf weight everywhere: the margin can
+        // never provably clear the remaining mass, so exact mode scores the
+        // whole forest and the tie resolves by index — never by exit
+        // timing.
+        let l: &[f32] = &[0.5, 0.5];
+        let f = leaf_forest(&vec![l; 6]);
+        let ee = build_early_exit(EngineKind::Naive, Precision::F32, &f, &[], EarlyExitMode::Exact)
+            .unwrap();
+        let x = [0.1f32, 0.9, 0.6, 0.4];
+        let scores = ee.predict(&x);
+        assert_eq!(ee.counters(), (2, 12), "tie rows must score all 6 trees");
+        assert_eq!(Forest::argmax(&scores, 2), vec![0, 0]);
+    }
+
+    #[test]
+    fn calibration_orders_agreeing_trees_first() {
+        // Full-forest argmax is class 0; t0 votes class 1 and must sort
+        // last despite being first in the forest.
+        let f = leaf_forest(&[&[0.0, 1.0], &[5.0, 0.0], &[1.0, 0.0]]);
+        let calibration = [0.2f32, 0.8, 0.7, 0.3];
+        let ee = build_early_exit(
+            EngineKind::Naive,
+            Precision::F32,
+            &f,
+            &calibration,
+            EarlyExitMode::Exact,
+        )
+        .unwrap();
+        assert_eq!(ee.order(), &[1, 2, 0]);
+        assert_eq!(ee.stage_sizes().iter().sum::<usize>(), 3);
+        // Empty calibration keeps the identity order.
+        let id =
+            build_early_exit(EngineKind::Naive, Precision::F32, &f, &[], EarlyExitMode::Exact)
+                .unwrap();
+        assert_eq!(id.order(), &[0, 1, 2]);
+    }
+
+    #[test]
+    fn approx_frac_and_names() {
+        let f = leaf_forest(&[&[1.0, 0.0], &[0.4, 0.2], &[0.3, 0.1]]);
+        let ee = build_early_exit(EngineKind::Naive, Precision::F32, &f, &[], EarlyExitMode::Approx)
+            .unwrap()
+            .with_frac(0.1);
+        assert_eq!(ee.name(), "eaNA");
+        assert_eq!(ee.mode(), EarlyExitMode::Approx);
+        let exact =
+            build_early_exit(EngineKind::Rs, Precision::I8, &f, &[], EarlyExitMode::Exact).unwrap();
+        assert_eq!(exact.name(), "eeq8RS");
+        let off =
+            build_early_exit(EngineKind::Vqs, Precision::I16, &f, &[], EarlyExitMode::Off).unwrap();
+        assert_eq!(off.name(), "e0qVQS");
+    }
+
+    #[test]
+    fn counters_reset_and_cost_counters_surface() {
+        let f = leaf_forest(&[&[2.0, 0.0], &[0.1, 0.0]]);
+        let ee = build_early_exit(EngineKind::Naive, Precision::F32, &f, &[], EarlyExitMode::Exact)
+            .unwrap();
+        let _ = ee.predict(&[0.5, 0.5]);
+        assert_eq!(ee.cost_counters(), Some(ee.counters()));
+        assert!(ee.counters().0 > 0);
+        ee.reset_counters();
+        assert_eq!(ee.counters(), (0, 0));
+        assert_eq!(ee.mean_trees_evaluated(), 0.0);
+    }
+
+    /// Exact mode must agree with Off (same stages, no exits) on trained
+    /// forests for every registry variant — the in-module edition of the
+    /// `early_exit_exact.rs` property suite's core claim.
+    #[test]
+    #[cfg_attr(miri, ignore)] // heavy: trains a forest; no unsafe for Miri to check
+    fn exact_matches_off_across_variants() {
+        use crate::data::DatasetId;
+        use crate::forest::builder::{train_random_forest, RfParams, TreeParams};
+        let ds = DatasetId::Magic.generate(500, 0xEE9);
+        let f = train_random_forest(
+            &ds.x,
+            &ds.labels,
+            ds.d,
+            ds.n_classes,
+            RfParams {
+                n_trees: 12,
+                tree: TreeParams { max_leaves: 16, min_samples_leaf: 2, mtry: 0 },
+                ..Default::default()
+            },
+        );
+        let calibration = &ds.x[..ds.d * 64];
+        let x = &ds.x[ds.d * 64..ds.d * 192];
+        for (kind, precision) in crate::engine::all_variants_with_i8() {
+            let ee = build_early_exit(kind, precision, &f, calibration, EarlyExitMode::Exact)
+                .unwrap();
+            let off =
+                build_early_exit(kind, precision, &f, calibration, EarlyExitMode::Off).unwrap();
+            assert_eq!(
+                Forest::argmax(&ee.predict(x), f.n_classes),
+                Forest::argmax(&off.predict(x), f.n_classes),
+                "{}: exact argmax diverged from full scoring",
+                ee.name()
+            );
+            assert!(ee.mean_trees_evaluated() <= f.n_trees() as f64);
+        }
+    }
+}

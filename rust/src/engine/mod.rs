@@ -28,6 +28,7 @@
 //! forest) — enforced by the integration and property test suites.
 
 pub mod common;
+pub mod early_exit;
 pub mod ifelse;
 pub mod naive;
 pub mod quickscorer;
@@ -40,6 +41,8 @@ use crate::neon::OpTrace;
 use crate::quant::{
     choose_scale, choose_scale_i16_per_tree, quantize_i8_auto, QForest, QuantConfig,
 };
+
+pub use early_exit::{build_early_exit, EarlyExitEngine, EarlyExitMode};
 
 /// A prepared tree-ensemble inference engine.
 ///
@@ -82,6 +85,15 @@ pub trait Engine: Send + Sync {
     /// halving, §5). Default: unknown (0).
     fn memory_bytes(&self) -> usize {
         0
+    }
+
+    /// Cumulative `(rows scored, tree evaluations)` since build, for
+    /// engines whose per-row cost varies ([`EarlyExitEngine`]). The exec
+    /// feedback loop samples this around each chunk to learn the cost
+    /// distribution ([`crate::exec::Feedback::record_trees`]). Default:
+    /// fixed-cost engine, no counters.
+    fn cost_counters(&self) -> Option<(u64, u64)> {
+        None
     }
 }
 

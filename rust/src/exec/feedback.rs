@@ -76,6 +76,10 @@ struct Slots {
     class_rate: Vec<Option<f64>>,
     /// Per-slot fallback EWMA for samples without a worker class.
     slot_rate: Vec<Option<f64>>,
+    /// EWMA of trees evaluated per row — the early-exit cost signal
+    /// ([`Feedback::record_trees`]); `None` until a cost-counting engine
+    /// reports. Fixed-cost engines never write it.
+    trees_per_row: Option<f64>,
 }
 
 /// Per-deployment (or per-engine) feedback accumulator. Cheap to share:
@@ -120,6 +124,7 @@ impl Feedback {
                 pool_token,
                 class_rate: vec![None; n_classes],
                 slot_rate: vec![None; n_slots],
+                trees_per_row: None,
             }),
             samples: AtomicU64::new(0),
             replans: AtomicU64::new(0),
@@ -194,6 +199,31 @@ impl Feedback {
         }
         self.replans.fetch_add(1, Ordering::Relaxed);
         out
+    }
+
+    /// Record the per-task cost an early-exit engine actually paid: `trees`
+    /// tree evaluations across `rows` rows for one executed chunk (deltas
+    /// of [`crate::engine::Engine::cost_counters`] around the chunk). Keeps
+    /// an EWMA of trees/row so adaptive re-planning — and `stats --json`
+    /// readers — see the live cost distribution, not the nominal forest
+    /// size. Chunks run concurrently, so a delta can blend a neighbour's
+    /// trees; that noise is symmetric and the EWMA absorbs it.
+    pub fn record_trees(&self, trees: u64, rows: u64) {
+        if rows == 0 {
+            return;
+        }
+        let rate = trees as f64 / rows as f64;
+        let mut s = self.slots.lock().unwrap();
+        s.trees_per_row = Some(match s.trees_per_row {
+            Some(old) => ALPHA * rate + (1.0 - ALPHA) * old,
+            None => rate,
+        });
+    }
+
+    /// EWMA trees evaluated per row (`None`: no cost-counting engine has
+    /// reported — fixed-cost deployment).
+    pub fn trees_per_row(&self) -> Option<f64> {
+        self.slots.lock().unwrap().trees_per_row
     }
 
     /// Shards recorded so far.
@@ -282,6 +312,24 @@ mod tests {
         // A ~zero-duration chunk clamps rather than producing inf.
         f.record(0, 16, 0.0);
         assert!(f.replan().iter().all(|w| w.is_finite() && *w > 0.0));
+    }
+
+    /// ISSUE 9: the trees/row cost EWMA — seeded by the first report,
+    /// tracking a cost drop (an early-exit engine warming up on easy
+    /// traffic), ignoring degenerate zero-row reports.
+    #[test]
+    fn trees_per_row_ewma_tracks_cost() {
+        let f = Feedback::new(vec![1.0]);
+        assert_eq!(f.trees_per_row(), None, "fixed-cost engines never report");
+        f.record_trees(10, 0); // degenerate: no rows
+        assert_eq!(f.trees_per_row(), None);
+        f.record_trees(800, 100); // 8 trees/row
+        assert_eq!(f.trees_per_row(), Some(8.0));
+        for _ in 0..30 {
+            f.record_trees(200, 100); // traffic got easy: 2 trees/row
+        }
+        let t = f.trees_per_row().unwrap();
+        assert!((2.0..3.0).contains(&t), "EWMA stuck at {t}");
     }
 
     /// Class attribution end-to-end: samples recorded *on pool workers*

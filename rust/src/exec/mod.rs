@@ -59,8 +59,9 @@ pub mod topology;
 pub use feedback::Feedback;
 pub use parallel::ParallelEngine;
 pub use pool::{
-    current_worker_class, worker_threads_spawned, DeploymentStats, PoolClient, PoolConfig,
-    PoolStats, SharedPool, WorkerPool, CLAIM_SIZE_SLOTS, DEFAULT_CLAIM_LIMIT,
+    current_worker_class, worker_threads_spawned, ClaimStats, DeploymentStats, PoolClient,
+    PoolConfig, PoolStats, SharedPool, WorkerPool, CLAIM_SIZE_SLOTS, DEFAULT_CLAIM_LIMIT,
+    DEFAULT_GIVE_BACK_AFTER,
 };
 pub use shard::{
     chunk_slot_classes, chunk_weights, plan, tree_shard_bounds, weighted_row_chunks,

@@ -296,10 +296,14 @@ impl ParallelEngine {
                             std::slice::from_raw_parts_mut(op.0.add(a * c), (b - a) * c),
                         )
                     };
+                    let t0 = feedback.is_some().then(|| engine.cost_counters()).flatten();
                     let sw = Stopwatch::start();
                     engine.predict_batch(xs, os);
                     if let Some(f) = feedback {
                         f.record(slot, b - a, sw.micros());
+                        if let (Some((r0, e0)), Some((r1, e1))) = (t0, engine.cost_counters()) {
+                            f.record_trees(e1.saturating_sub(e0), r1.saturating_sub(r0));
+                        }
                     }
                 }) as Task
             })
@@ -423,6 +427,13 @@ impl Engine for ParallelEngine {
     /// engine's trace is the parallel engine's trace.
     fn count_ops(&self, x: &[f32]) -> OpTrace {
         self.inner.count_ops(x)
+    }
+
+    /// Cost counters live in the wrapped engine: concurrent chunk tasks all
+    /// bump the same atomics, so per-chunk deltas may blend across chunks —
+    /// fine for the EWMA consumer (`Feedback::record_trees`).
+    fn cost_counters(&self) -> Option<(u64, u64)> {
+        self.inner.cost_counters()
     }
 
     fn memory_bytes(&self) -> usize {

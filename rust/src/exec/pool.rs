@@ -47,6 +47,22 @@
 //! `k` is additionally capped at `ceil(queue/threads)` so one worker
 //! cannot swallow a whole flush that the other workers should parallelize.
 //!
+//! # Straggler give-back
+//!
+//! Those caps bound batch claims *statistically*; they cannot stop one
+//! claim from serializing k−1 fast tasks behind a slow first one — the
+//! systematic case being a LITTLE-pinned worker batch-claiming a flush's
+//! contiguous big-weighted chunks, or an early-exit engine's variable-cost
+//! shards (DESIGN.md §11). With [`PoolConfig::give_back_after`] set, a
+//! worker that has run at least one task of a claim checks the claim's age
+//! before each further task and, past the deadline (scaled so slower
+//! topology classes get proportionally longer), returns the **unstarted
+//! tail** to the front of its deployment's queue via
+//! [`PoolState::give_back`] — preserving FIFO order, rolling `vtime` back
+//! by `returned/budget` (the deployment must not stay charged for work it
+//! didn't receive), and waking the other workers. A give-back to a closed
+//! deployment drops the tasks, exactly like `close` discarding its queue.
+//!
 //! # Affinity
 //!
 //! With [`PoolConfig::pin`] set, worker `w` pins itself (via
@@ -77,6 +93,7 @@ use std::collections::{BTreeMap, VecDeque};
 use std::panic::{self, AssertUnwindSafe};
 use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
 use std::sync::{Arc, Condvar, Mutex};
+use std::time::{Duration, Instant};
 
 use super::affinity;
 use super::topology::CoreTopology;
@@ -113,6 +130,12 @@ pub fn worker_threads_spawned() -> usize {
 /// `ceil(queue/threads)` cap binds first on shallow queues).
 pub const DEFAULT_CLAIM_LIMIT: usize = 8;
 
+/// Default [`PoolConfig::give_back_after`]: well above any sane shard
+/// runtime (tens of µs to single-digit ms), so give-back engages only on
+/// genuine stragglers and the batching amortization is untouched on the
+/// happy path.
+pub const DEFAULT_GIVE_BACK_AFTER: Duration = Duration::from_millis(25);
+
 /// How a [`SharedPool`] is built: worker count, the core topology its
 /// workers (and every deployment's shard weights) are laid out over,
 /// whether workers pin to their assigned cluster, and the batch-claim
@@ -132,6 +155,13 @@ pub struct PoolConfig {
     /// Max tasks one claim may take from a deployment's queue (min 1;
     /// 1 = the pre-batching claim-per-task behavior).
     pub claim_limit: usize,
+    /// Return the unstarted tail of a claimed batch once the tasks already
+    /// run have overrun this deadline (module docs, "Straggler give-back").
+    /// Scaled per worker by its topology class's relative speed, so a
+    /// LITTLE worker is not declared a straggler merely for running at
+    /// LITTLE speed. `None` disables give-back (a claimed batch always
+    /// runs to completion on its claimer).
+    pub give_back_after: Option<Duration>,
 }
 
 impl PoolConfig {
@@ -143,6 +173,7 @@ impl PoolConfig {
             topology: CoreTopology::detect(),
             pin: false,
             claim_limit: DEFAULT_CLAIM_LIMIT,
+            give_back_after: Some(DEFAULT_GIVE_BACK_AFTER),
         }
     }
 
@@ -161,6 +192,13 @@ impl PoolConfig {
     /// Builder: set the batch-claim limit (min 1).
     pub fn claim_limit(mut self, k: usize) -> PoolConfig {
         self.claim_limit = k.max(1);
+        self
+    }
+
+    /// Builder: set (or disable, with `None`) the straggler give-back
+    /// deadline.
+    pub fn give_back_after(mut self, after: Option<Duration>) -> PoolConfig {
+        self.give_back_after = after;
         self
     }
 }
@@ -194,6 +232,11 @@ struct PoolState {
     /// stealing an idle budget's capacity) since pool start. Plain fields:
     /// every increment already holds the pool mutex.
     steals: u64,
+    /// Claimed batches whose unstarted tail came back on deadline overrun,
+    /// and the tasks returned across them (module docs, "Straggler
+    /// give-back"). Plain fields like `steals`: increments hold the mutex.
+    give_backs: u64,
+    given_back_tasks: u64,
     /// See [`CLAIM_SIZE_SLOTS`].
     claim_sizes: [u64; CLAIM_SIZE_SLOTS],
 }
@@ -257,6 +300,36 @@ impl PoolState {
         self.steals += 1;
         self.claim_sizes[0] += 1;
         Some((tag, vec![task]))
+    }
+
+    /// A worker returns the unstarted tail of a claimed batch (deadline
+    /// overrun — see `worker_loop` and the module docs). The tasks go back
+    /// to the *front* of their deployment's queue in original order, so
+    /// FIFO submission order is preserved for the next claimer, and vtime
+    /// rolls back by `returned/budget`: the claim charged `k/budget` up
+    /// front, and a deployment must not stay charged for service it never
+    /// received (the weighted-fair ratios would otherwise under-serve every
+    /// deployment that ever gave back). Returns how many tasks re-queued.
+    ///
+    /// A closed (or already reaped) deployment drops the tasks instead —
+    /// `close` discarded its queue, and the returned tail is reaped through
+    /// exactly the same rule, never double-executed.
+    fn give_back(&mut self, tag: u64, tasks: Vec<Task>) -> usize {
+        let n = tasks.len();
+        if n == 0 {
+            return 0;
+        }
+        let d = match self.deployments.get_mut(&tag) {
+            Some(d) if !d.closed => d,
+            _ => return 0,
+        };
+        for t in tasks.into_iter().rev() {
+            d.queue.push_front(t);
+        }
+        d.vtime -= n as f64 / d.budget as f64;
+        self.give_backs += 1;
+        self.given_back_tasks += n as u64;
+        n
     }
 
     /// Add a deployment entry ([`SharedPool::register`] under the lock).
@@ -376,7 +449,13 @@ pub fn current_worker_class() -> Option<(u64, usize)> {
     WORKER_CLASS.with(|c| c.get())
 }
 
-fn worker_loop(shared: Arc<Shared>, token: u64, class: usize, pin_cores: Vec<usize>) {
+fn worker_loop(
+    shared: Arc<Shared>,
+    token: u64,
+    class: usize,
+    pin_cores: Vec<usize>,
+    give_back_after: Option<Duration>,
+) {
     WORKER_CLASS.with(|c| c.set(Some((token, class))));
     if !pin_cores.is_empty() && affinity::pin_to_cores(&pin_cores) {
         shared.pinned.fetch_add(1, Ordering::SeqCst);
@@ -407,8 +486,34 @@ fn worker_loop(shared: Arc<Shared>, token: u64, class: usize, pin_cores: Vec<usi
         // claim): `run` observes them via its latch wrapper; `spawn`
         // callers handle completion themselves (e.g. the batcher's chunk
         // guard).
-        for task in tasks {
-            let _ = panic::catch_unwind(AssertUnwindSafe(task));
+        //
+        // Straggler give-back: once at least one task has run, the claim's
+        // age is checked before each further task; past the deadline the
+        // unstarted tail goes back to the deployment's queue for the other
+        // workers (module docs). At least one task always runs per claim,
+        // so progress is guaranteed even at `Duration::ZERO`.
+        let claimed_at = Instant::now();
+        let mut tasks = tasks.into_iter();
+        let mut ran = 0usize;
+        loop {
+            if ran > 0
+                && !tasks.as_slice().is_empty()
+                && give_back_after.map_or(false, |dl| claimed_at.elapsed() > dl)
+            {
+                let rest: Vec<Task> = tasks.collect();
+                let returned = shared.state.lock().unwrap().give_back(tag, rest);
+                if returned > 0 {
+                    shared.wakeup.notify_all();
+                }
+                break;
+            }
+            match tasks.next() {
+                Some(task) => {
+                    let _ = panic::catch_unwind(AssertUnwindSafe(task));
+                    ran += 1;
+                }
+                None => break,
+            }
         }
         shared.state.lock().unwrap().finish(tag);
     }
@@ -452,6 +557,22 @@ impl Latch {
     }
 }
 
+/// Claim-amortization and give-back counters ([`SharedPool::claim_stats`]).
+/// Cheap relative to the full [`PoolStats`] snapshot — the hot-path gauges
+/// benches poll in a loop.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct ClaimStats {
+    /// Lock acquisitions that claimed work.
+    pub claims: u64,
+    /// Tasks claimed in total (ratio to `claims` > 1 ⇔ batching engaged).
+    pub claimed_tasks: u64,
+    /// Claimed batches whose unstarted tail was returned on deadline
+    /// overrun (module docs, "Straggler give-back").
+    pub give_backs: u64,
+    /// Tasks returned across those give-backs.
+    pub given_back_tasks: u64,
+}
+
 /// Point-in-time snapshot of one deployment's scheduling state
 /// ([`SharedPool::stats`]).
 #[derive(Debug, Clone)]
@@ -483,6 +604,11 @@ pub struct PoolStats {
     pub claimed_tasks: u64,
     /// Tier-2 claims that stole an idle budget's capacity.
     pub steals: u64,
+    /// Claimed batches whose unstarted tail was returned on deadline
+    /// overrun (module docs, "Straggler give-back").
+    pub give_backs: u64,
+    /// Tasks returned across those give-backs.
+    pub given_back_tasks: u64,
     /// Claim-batch size distribution; slot `i` counts claims of `i + 1`
     /// tasks, last slot aggregates the tail ([`CLAIM_SIZE_SLOTS`]).
     pub claim_sizes: Vec<u64>,
@@ -515,6 +641,8 @@ impl PoolStats {
             ("claims", Json::Num(self.claims as f64)),
             ("claimed_tasks", Json::Num(self.claimed_tasks as f64)),
             ("steals", Json::Num(self.steals as f64)),
+            ("give_backs", Json::Num(self.give_backs as f64)),
+            ("given_back_tasks", Json::Num(self.given_back_tasks as f64)),
             ("claim_sizes", claim_sizes),
             ("deployments", deployments),
         ])
@@ -564,6 +692,11 @@ impl SharedPool {
         // memory is published under this counter.
         let token = NEXT_POOL_TOKEN.fetch_add(1, Ordering::Relaxed);
         let assignments = config.topology.worker_assignments(threads);
+        // Fastest class's weight: the give-back deadline is calibrated for
+        // it and stretched by the speed ratio for slower classes, so a
+        // LITTLE worker gets proportionally longer before its first task
+        // counts as a straggler.
+        let w_max = assignments.iter().map(|a| a.weight).fold(1.0f64, f64::max);
         let workers = (0..threads)
             .map(|w| {
                 let shared = shared.clone();
@@ -573,10 +706,13 @@ impl SharedPool {
                 } else {
                     Vec::new()
                 };
+                let give_back_after = config
+                    .give_back_after
+                    .map(|base| base.mul_f64((w_max / assignments[w].weight.max(1e-9)).max(1.0)));
                 WORKERS_SPAWNED.fetch_add(1, Ordering::SeqCst);
                 std::thread::Builder::new()
                     .name(format!("exec-worker-{w}"))
-                    .spawn(move || worker_loop(shared, token, class, pin_cores))
+                    .spawn(move || worker_loop(shared, token, class, pin_cores, give_back_after))
                     .expect("spawn exec worker")
             })
             .collect();
@@ -608,13 +744,20 @@ impl SharedPool {
         self.token
     }
 
-    /// Claim-amortization counters: `(claims, tasks claimed)`. A ratio
-    /// above 1 means batch claiming engaged.
-    pub fn claim_stats(&self) -> (u64, u64) {
-        (
-            self.shared.claims.load(Ordering::Relaxed),
-            self.shared.claimed_tasks.load(Ordering::Relaxed),
-        )
+    /// Claim-amortization and give-back counters. A `claimed_tasks /
+    /// claims` ratio above 1 means batch claiming engaged; non-zero
+    /// `give_backs` means the straggler deadline fired.
+    pub fn claim_stats(&self) -> ClaimStats {
+        let (give_backs, given_back_tasks) = {
+            let state = self.shared.state.lock().unwrap();
+            (state.give_backs, state.given_back_tasks)
+        };
+        ClaimStats {
+            claims: self.shared.claims.load(Ordering::Relaxed),
+            claimed_tasks: self.shared.claimed_tasks.load(Ordering::Relaxed),
+            give_backs,
+            given_back_tasks,
+        }
     }
 
     /// Live registered clients (deployments sharing this pool).
@@ -648,6 +791,8 @@ impl SharedPool {
             claims: self.shared.claims.load(Ordering::Relaxed),
             claimed_tasks: self.shared.claimed_tasks.load(Ordering::Relaxed),
             steals: state.steals,
+            give_backs: state.give_backs,
+            given_back_tasks: state.given_back_tasks,
             claim_sizes: state.claim_sizes.to_vec(),
             deployments,
         }
@@ -1138,7 +1283,7 @@ mod tests {
             assert!(std::time::Instant::now() < deadline, "blocker never claimed");
             std::thread::sleep(Duration::from_millis(1));
         }
-        let (claims_before, tasks_before) = pool.claim_stats();
+        let before = pool.claim_stats();
         let done = Arc::new(AtomicU64::new(0));
         let tasks: Vec<Task> = (0..64)
             .map(|_| {
@@ -1153,9 +1298,9 @@ mod tests {
         while done.load(Ordering::SeqCst) < 64 {
             std::thread::sleep(Duration::from_millis(1));
         }
-        let (claims, tasks) = pool.claim_stats();
-        let dc = claims - claims_before;
-        let dt = tasks - tasks_before;
+        let cs = pool.claim_stats();
+        let dc = cs.claims - before.claims;
+        let dt = cs.claimed_tasks - before.claimed_tasks;
         assert_eq!(dt, 64);
         assert!(dc <= 16, "64 tasks took {dc} claims — batching never engaged");
     }
@@ -1174,8 +1319,8 @@ mod tests {
             })
             .collect();
         client.run(tasks);
-        let (claims, tasks) = pool.claim_stats();
-        assert_eq!(claims, tasks, "claim_limit=1 must claim one task per lock");
+        let cs = pool.claim_stats();
+        assert_eq!(cs.claims, cs.claimed_tasks, "claim_limit=1 must claim one task per lock");
         assert_eq!(done.load(Ordering::SeqCst), 16);
     }
 
@@ -1250,7 +1395,7 @@ mod tests {
             assert!(std::time::Instant::now() < deadline, "blocker never claimed");
             std::thread::sleep(Duration::from_millis(1));
         }
-        let (claims_before, tasks_before) = pool.claim_stats();
+        let before = pool.claim_stats();
         let steals_before = pool.stats().steals;
         let done = Arc::new(AtomicU64::new(0));
         let tasks: Vec<Task> = (0..8)
@@ -1265,9 +1410,9 @@ mod tests {
         while done.load(Ordering::SeqCst) < 8 {
             std::thread::sleep(Duration::from_millis(1));
         }
-        let (claims, tasks) = pool.claim_stats();
-        let dc = claims - claims_before;
-        let dt = tasks - tasks_before;
+        let cs = pool.claim_stats();
+        let dc = cs.claims - before.claims;
+        let dt = cs.claimed_tasks - before.claimed_tasks;
         assert_eq!(dt, 8);
         assert_eq!(dc, 8, "every steal must claim exactly one task, got {dt}/{dc}");
         // Each of those gated claims went through tier 2 — the steal
@@ -1304,9 +1449,11 @@ mod tests {
             std::thread::sleep(Duration::from_millis(1));
         }
         let stats = pool.stats();
-        let (claims, claimed_tasks) = pool.claim_stats();
-        assert_eq!(stats.claims, claims);
-        assert_eq!(stats.claimed_tasks, claimed_tasks);
+        let cs = pool.claim_stats();
+        assert_eq!(stats.claims, cs.claims);
+        assert_eq!(stats.claimed_tasks, cs.claimed_tasks);
+        assert_eq!(stats.give_backs, cs.give_backs);
+        assert_eq!(stats.given_back_tasks, cs.given_back_tasks);
         assert_eq!(stats.claim_sizes.len(), CLAIM_SIZE_SLOTS);
         let dist_claims: u64 = stats.claim_sizes.iter().sum();
         // claim_limit (8) is below the aggregate tail slot, so the
@@ -1352,6 +1499,130 @@ mod tests {
             h.fetch_add(1, Ordering::Relaxed);
         })]);
         assert_eq!(hits.load(Ordering::Relaxed), 1);
+    }
+
+    /// Satellite (ISSUE 9): a give-back must roll vtime back by exactly
+    /// `returned/budget` — the claim charged the full batch up front, and
+    /// a deployment must not stay charged for service it never received.
+    /// Exact deltas, no timing.
+    #[test]
+    fn give_back_rolls_vtime_back_exactly() {
+        let runs = Arc::new(AtomicU64::new(0));
+        let mk = |runs: &Arc<AtomicU64>| -> Task {
+            let runs = runs.clone();
+            Box::new(move || {
+                runs.fetch_add(1, Ordering::SeqCst);
+            })
+        };
+        let mut state = PoolState::default();
+        state.register(1, "gb", 1);
+        state.enqueue(1, (0..4).map(|_| mk(&runs)).collect());
+        let (tag, mut tasks) = state.claim_many(8, 1).expect("queued work claims");
+        assert_eq!(tag, 1);
+        assert_eq!(tasks.len(), 4, "uncontended deep queue batches the whole flush");
+        assert_eq!(state.deployments[&1].vtime, 4.0, "claim charges k/budget up front");
+        // Run the first task; give back the unstarted tail.
+        (tasks.remove(0))();
+        assert_eq!(state.give_back(1, tasks), 3);
+        assert_eq!(
+            state.deployments[&1].vtime,
+            1.0,
+            "vtime must roll back by returned/budget — charged only for the task run"
+        );
+        assert_eq!(state.deployments[&1].queue.len(), 3);
+        assert_eq!(state.give_backs, 1);
+        assert_eq!(state.given_back_tasks, 3);
+        state.finish(1);
+        // The returned tasks are re-claimable and every task runs exactly
+        // once overall.
+        while let Some((tag, tasks)) = state.claim_many(8, 1) {
+            for t in tasks {
+                t();
+            }
+            state.finish(tag);
+        }
+        assert_eq!(runs.load(Ordering::SeqCst), 4);
+        assert_eq!(state.deployments[&1].vtime, 4.0, "full service restores the full charge");
+        // Fractional budgets too: budget 2 charges/refunds in halves.
+        state.register(2, "half", 2);
+        state.enqueue(2, (0..4).map(|_| mk(&runs)).collect());
+        let (_, mut tasks) = state.claim_many(8, 1).expect("tag 2 has lower vtime");
+        assert_eq!(tasks.len(), 4);
+        assert_eq!(state.deployments[&2].vtime, 2.0);
+        (tasks.remove(0))();
+        assert_eq!(state.give_back(2, tasks), 3);
+        assert_eq!(state.deployments[&2].vtime, 0.5);
+        // Giving back to a closed deployment drops the tasks (reaped like
+        // close's own queue discard) and counts nothing.
+        let before = (state.give_backs, state.given_back_tasks);
+        state.close(2);
+        assert_eq!(state.give_back(2, vec![mk(&runs)]), 0);
+        assert_eq!((state.give_backs, state.given_back_tasks), before);
+    }
+
+    /// Regression (ISSUE 9 satellite, ROADMAP's systematic straggler): one
+    /// worker batch-claims a flush whose first chunk is slow — think a
+    /// LITTLE-pinned worker holding big-weighted chunks — and without
+    /// give-back the k−1 fast chunks serialize behind it. With the
+    /// deadline at zero the unstarted tail must come back for the other
+    /// worker, visible in `claim_stats()` give-back counters, and every
+    /// task still runs exactly once.
+    #[test]
+    fn straggler_batch_claim_gives_back_unstarted_tail() {
+        let topo = CoreTopology::synthetic_big_little(1, 1, 3.0);
+        let pool = SharedPool::with_config(
+            PoolConfig::new(2)
+                .topology(topo)
+                .claim_limit(8)
+                .give_back_after(Some(Duration::ZERO)),
+        );
+        let client = SharedPool::register(&pool, "flush", 2);
+        // Occupy one worker so a single worker batch-claims the flush.
+        let gate = Arc::new(AtomicBool::new(false));
+        {
+            let gate = gate.clone();
+            client.spawn(vec![Box::new(move || {
+                while !gate.load(Ordering::Acquire) {
+                    std::thread::sleep(Duration::from_millis(1));
+                }
+            }) as Task]);
+        }
+        let deadline = std::time::Instant::now() + Duration::from_secs(5);
+        while pool.shared.state.lock().unwrap().deployments.values().all(|d| d.active == 0) {
+            assert!(std::time::Instant::now() < deadline, "blocker never claimed");
+            std::thread::sleep(Duration::from_millis(1));
+        }
+        // A flush whose head chunk is the straggler: deep enough that the
+        // free worker's claim takes several chunks (cap ⌈8/2⌉ = 4).
+        let done = Arc::new(AtomicU64::new(0));
+        let tasks: Vec<Task> = (0..8)
+            .map(|i| {
+                let done = done.clone();
+                Box::new(move || {
+                    if i == 0 {
+                        std::thread::sleep(Duration::from_millis(10));
+                    }
+                    done.fetch_add(1, Ordering::SeqCst);
+                }) as Task
+            })
+            .collect();
+        client.spawn(tasks);
+        // Free the gated worker so it can pick up the returned tail.
+        gate.store(true, Ordering::Release);
+        while done.load(Ordering::SeqCst) < 8 {
+            assert!(std::time::Instant::now() < deadline, "flush never drained");
+            std::thread::sleep(Duration::from_millis(1));
+        }
+        // Wait for idle so in-flight double-executions (there must be
+        // none) would have landed before the exactly-once check.
+        while pool.stats().deployments.iter().any(|d| d.active > 0) {
+            assert!(std::time::Instant::now() < deadline, "workers never went idle");
+            std::thread::sleep(Duration::from_millis(1));
+        }
+        let cs = pool.claim_stats();
+        assert!(cs.give_backs >= 1, "straggler claim never gave back: {cs:?}");
+        assert!(cs.given_back_tasks >= 1, "no tasks returned: {cs:?}");
+        assert_eq!(done.load(Ordering::SeqCst), 8, "a returned task was lost or re-run");
     }
 
     /// Exhaustive interleaving checks over the production [`PoolState`]
@@ -1538,6 +1809,222 @@ mod tests {
                 }
             });
             assert_eq!(n, 30);
+        }
+
+        /// ISSUE 9 satellite: a give-back racing a concurrent claim. Worker
+        /// A batch-claims both tasks of a budget-1 deployment, runs the
+        /// first and gives the second back; worker B's claim lands at every
+        /// merge point. While A is still active the deployment is
+        /// budget-exhausted, so B can reach the returned task only through
+        /// a tier-2 steal — `checked_claim` asserts the tier discipline and
+        /// steal counting at each position. The returned task runs exactly
+        /// once in every schedule, never twice, never zero.
+        #[test]
+        fn give_back_races_concurrent_steal_every_interleaving() {
+            let n = explore(&[3, 2], usize::MAX, |sched| {
+                let runs = counters(2);
+                let mut state = PoolState::default();
+                state.register(1, "giver", 1);
+                state.enqueue(1, vec![mk_task(&runs, 0), mk_task(&runs, 1)]);
+                let mut a_held: Vec<Task> = Vec::new();
+                let mut a_tag: Option<u64> = None;
+                let mut b_tag: Option<u64> = None;
+                let mut a_step = 0usize;
+                let mut b_step = 0usize;
+                for &w in sched {
+                    if w == 0 {
+                        match a_step {
+                            0 => {
+                                // threads=1 lifts the depth cap, so an
+                                // uncontended claim takes the whole queue.
+                                if let Some((tag, mut tasks)) = state.claim_many(4, 1) {
+                                    (tasks.remove(0))();
+                                    a_held = tasks;
+                                    a_tag = Some(tag);
+                                }
+                            }
+                            1 => {
+                                let gb = std::mem::take(&mut a_held);
+                                let expect = gb.len();
+                                let vt = state.deployments.get(&1).map(|d| d.vtime);
+                                let returned = state.give_back(1, gb);
+                                assert_eq!(returned, expect, "open entry refused the tail");
+                                if expect > 0 {
+                                    let want = vt.unwrap() - expect as f64;
+                                    assert_eq!(
+                                        state.deployments[&1].vtime,
+                                        want,
+                                        "rollback != returned/budget: {sched:?}"
+                                    );
+                                }
+                            }
+                            _ => {
+                                if let Some(tag) = a_tag.take() {
+                                    state.finish(tag);
+                                }
+                            }
+                        }
+                        a_step += 1;
+                    } else if b_step == 0 {
+                        b_tag = checked_claim(&mut state).map(|(tag, _)| tag);
+                        b_step += 1;
+                    } else if let Some(tag) = b_tag.take() {
+                        state.finish(tag);
+                    }
+                }
+                // Drain so the exactly-once check covers the returned task
+                // in schedules where B's claim came up empty.
+                while let Some((tag, tasks)) = state.claim_many(4, 1) {
+                    for t in tasks {
+                        t();
+                    }
+                    state.finish(tag);
+                }
+                for r in runs.iter() {
+                    assert_eq!(r.load(Ordering::SeqCst), 1, "task lost or re-run: {sched:?}");
+                }
+            });
+            assert_eq!(n, 10, "C(5,2) merges of a 3-step giver and a 2-step claimer");
+        }
+
+        /// ISSUE 9 satellite: a give-back racing the client's close. The
+        /// returned task must be reaped **exactly once** — discarded by
+        /// `close`'s queue clear or refused by `give_back`'s closed check,
+        /// never executed, never leaked — and the deployment entry is
+        /// reaped by whichever of close/last-finish comes last.
+        #[test]
+        fn give_back_races_close_tail_reaped_exactly_once() {
+            let n = explore(&[3, 1], usize::MAX, |sched| {
+                let runs = counters(2);
+                let mut state = PoolState::default();
+                state.register(5, "doomed", 1);
+                state.enqueue(5, vec![mk_task(&runs, 0), mk_task(&runs, 1)]);
+                let mut held: Vec<Task> = Vec::new();
+                let mut claimed_first = false;
+                let mut a_step = 0usize;
+                for &w in sched {
+                    if w == 0 {
+                        match a_step {
+                            0 => {
+                                // May come up empty if the close won the
+                                // race and discarded the queue.
+                                if let Some((_, mut tasks)) = state.claim_many(4, 1) {
+                                    assert_eq!(tasks.len(), 2);
+                                    (tasks.remove(0))();
+                                    claimed_first = true;
+                                    held = tasks;
+                                }
+                            }
+                            1 => {
+                                let closed =
+                                    state.deployments.get(&5).map_or(true, |d| d.closed);
+                                let expect = if closed { 0 } else { held.len() };
+                                let returned = state.give_back(5, std::mem::take(&mut held));
+                                assert_eq!(returned, expect, "{sched:?}");
+                            }
+                            _ => state.finish(5),
+                        }
+                        a_step += 1;
+                    } else {
+                        state.close(5);
+                    }
+                }
+                assert_eq!(runs[0].load(Ordering::SeqCst), usize::from(claimed_first));
+                assert_eq!(
+                    runs[1].load(Ordering::SeqCst),
+                    0,
+                    "doomed returned task ran: {sched:?}"
+                );
+                assert!(state.deployments.is_empty(), "entry not reaped: {sched:?}");
+            });
+            assert_eq!(n, 4, "4 positions for the close among the giver's 3 steps");
+        }
+
+        /// ISSUE 9 satellite: vtime rollback keeps the weighted-fair
+        /// accounting consistent in **every** interleaving with a second
+        /// deployment enqueueing and claiming concurrently. Invariant at
+        /// every step: each deployment's vtime equals its catch-up offset
+        /// plus tasks charged minus tasks returned (budgets are 1, so all
+        /// quantities are exact integers).
+        #[test]
+        fn vtime_rollback_fairness_in_every_interleaving() {
+            let n = explore(&[3, 2], usize::MAX, |sched| {
+                let runs = counters(4);
+                let mut state = PoolState::default();
+                state.register(1, "giver", 1);
+                state.register(2, "other", 1);
+                state.enqueue(1, vec![mk_task(&runs, 0), mk_task(&runs, 1), mk_task(&runs, 2)]);
+                let mut charged: BTreeMap<u64, f64> = BTreeMap::new();
+                charged.insert(1, 0.0);
+                charged.insert(2, 0.0);
+                let check = |state: &PoolState, charged: &BTreeMap<u64, f64>, sched: &[usize]| {
+                    for (t, d) in &state.deployments {
+                        assert_eq!(
+                            d.vtime, charged[t],
+                            "deployment {t} vtime != net service charge: {sched:?}"
+                        );
+                    }
+                };
+                let mut a_held: Vec<Task> = Vec::new();
+                let mut a_tag: Option<u64> = None;
+                let mut b_tag: Option<u64> = None;
+                let mut a_step = 0usize;
+                let mut b_step = 0usize;
+                for &w in sched {
+                    if w == 0 {
+                        match a_step {
+                            0 => {
+                                if let Some((tag, mut tasks)) = state.claim_many(8, 1) {
+                                    *charged.get_mut(&tag).unwrap() += tasks.len() as f64;
+                                    (tasks.remove(0))();
+                                    a_held = tasks;
+                                    a_tag = Some(tag);
+                                }
+                            }
+                            1 => {
+                                if let Some(tag) = a_tag {
+                                    let gb = std::mem::take(&mut a_held);
+                                    let returned = state.give_back(tag, gb);
+                                    *charged.get_mut(&tag).unwrap() -= returned as f64;
+                                }
+                            }
+                            _ => {
+                                if let Some(tag) = a_tag.take() {
+                                    state.finish(tag);
+                                }
+                            }
+                        }
+                        a_step += 1;
+                    } else if b_step == 0 {
+                        state.enqueue(2, vec![mk_task(&runs, 3)]);
+                        // Catch-up at enqueue is a legitimate charge-free
+                        // vtime raise — fold it into the expected offset.
+                        charged.insert(2, state.deployments[&2].vtime);
+                        if let Some((tag, k)) = checked_claim(&mut state) {
+                            *charged.get_mut(&tag).unwrap() += k as f64;
+                            b_tag = Some(tag);
+                        }
+                        b_step += 1;
+                    } else if let Some(tag) = b_tag.take() {
+                        state.finish(tag);
+                    }
+                    check(&state, &charged, sched);
+                }
+                // Drain: the rolled-back deployment keeps claiming under
+                // the same invariant until every task has run exactly once.
+                while let Some((tag, tasks)) = state.claim_many(8, 1) {
+                    *charged.get_mut(&tag).unwrap() += tasks.len() as f64;
+                    for t in tasks {
+                        t();
+                    }
+                    state.finish(tag);
+                    check(&state, &charged, sched);
+                }
+                for r in runs.iter() {
+                    assert_eq!(r.load(Ordering::SeqCst), 1, "task lost or re-run: {sched:?}");
+                }
+            });
+            assert_eq!(n, 10);
         }
 
         #[test]

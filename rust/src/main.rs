@@ -21,10 +21,10 @@ use anyhow::{bail, Context, Result};
 use arbors::bench::experiments;
 use arbors::bench::harness::Scale;
 use arbors::cli::Args;
-use arbors::coordinator::{select_engine_tier, thread_budgets, BatchConfig, Server};
+use arbors::coordinator::{select_engine_early_exit, thread_budgets, BatchConfig, Server};
 use arbors::data::{csv, DatasetId};
 use arbors::device::DeviceProfile;
-use arbors::engine::{build_parallel, EngineKind, Precision};
+use arbors::engine::{build_early_exit, build_parallel, EarlyExitMode, EngineKind, Precision};
 use arbors::forest::builder::{
     train_gbt, train_random_forest, GbtParams, RfParams, TreeParams,
 };
@@ -62,23 +62,30 @@ USAGE: arbors <command> [flags]
   train    --dataset <magic|adult|eeg|mnist|fashion|msn> | --data <csv>
            --trees N --leaves N --out model.json [--gbt] [--n N] [--seed S]
   predict  --model model.json --data in.csv --engine <NA|IE|QS|VQS|RS>
-           [--precision f32|i16|i8|flint] [--quant] [--threads N] [--pin]
-           [--out scores.csv]
+           [--precision f32|i16|i8|flint] [--early-exit off|exact|approx]
+           [--quant] [--threads N] [--pin] [--out scores.csv]
            (--quant is shorthand for --precision i16; int8 covers all five
            engines and auto-upgrades to per-tree leaf scales when the
            global analysis would widen accumulation; flint runs integer
-           threshold compares with bit-exact f32 outputs; --pin anchors
+           threshold compares with bit-exact f32 outputs; --early-exit
+           scores trees in confidence order and stops decided rows —
+           exact keeps the argmax identical to full scoring; --pin anchors
            exec workers to their topology cluster, Linux only)
   accuracy --model model.json --dataset <name> | --data <csv>
   select   --model model.json [--device a53|exynos] [--n N] [--threads N]
-           [--precision f32|i16|i8|flint]  (restricts the ranking to one
-           tier; --threads adds row-sharded candidates like RS×4t; the
-           qVQS+pt candidate ranks i16 per-tree leaf scales)
-  bench    --exp <table2|table3|table4|table5|fig1|fig2|ablation|tensor|scaling|int8|flint|serving|adaptive|smoke|obs|engine_micro>
+           [--precision f32|i16|i8|flint] [--early-exit off|exact|approx]
+           (--precision restricts the ranking to one tier; --threads adds
+           row-sharded candidates like RS×4t; the qVQS+pt candidate ranks
+           i16 per-tree leaf scales; --early-exit adds ee/ea staged-scoring
+           candidates under the same ≥99% agreement gate)
+  bench    --exp <table2|table3|table4|table5|fig1|fig2|ablation|tensor|scaling|int8|flint|early_exit|serving|adaptive|smoke|obs|engine_micro>
            [--threads N] [--precision P] [--pin] [--smoke] [--matrix] | --gate
            (scale via ARBORS_SCALE=quick|default|full;
            int8 -> results/int8_tiers.json; flint compares f32 vs FLInt
            per engine -> results/flint.json, --smoke shrinks it for CI;
+           early_exit ablates exact-mode agreement + the approx threshold
+           sweep, trees evaluated vs accuracy -> results/early_exit.json,
+           --smoke shrinks it, --early-exit narrows it to one mode;
            serving drives a 2-model server,
            shared-pool vs separate-pools, -> results/serving.json; adaptive
            runs the static/adaptive x pinned/unpinned x claim-1/claim-k grid
@@ -92,7 +99,8 @@ USAGE: arbors <command> [flags]
            SIMD-ops/row per engine tier -> results/engine_micro.json;
            --gate skips the experiment and fails on any series >15% worse
            than its rolling median)
-  serve    --dataset <name> [--engine E] [--precision P | --quant] [--requests N]
+  serve    --dataset <name> [--engine E] [--precision P | --quant]
+           [--early-exit off|exact|approx] [--requests N]
            [--threads N] [--budget B] [--pin] [--listen 127.0.0.1:7878]
            (--threads sizes the server-wide shared exec pool, default = host
            cores; --budget is this model's worker entitlement on it,
@@ -111,6 +119,18 @@ fn precision_flag(args: &Args) -> Result<Option<Precision>> {
         Some(p) => Precision::from_name(p)
             .map(Some)
             .ok_or_else(|| anyhow::anyhow!("unknown --precision '{p}' (f32|i16|i8|flint)")),
+        None => Ok(None),
+    }
+}
+
+/// The optional `--early-exit {off,exact,approx}` flag (`None` when
+/// absent). Orthogonal to `--precision`: any tier can be wrapped in
+/// calibration-ordered staged scoring.
+fn early_exit_flag(args: &Args) -> Result<Option<EarlyExitMode>> {
+    match args.get("early-exit") {
+        Some(m) => EarlyExitMode::from_name(m)
+            .map(Some)
+            .ok_or_else(|| anyhow::anyhow!("unknown --early-exit '{m}' (off|exact|approx)")),
         None => Ok(None),
     }
 }
@@ -205,6 +225,7 @@ fn cmd_predict(args: &Args) -> Result<()> {
     let kind = EngineKind::from_short(&args.get_or("engine", "RS"))
         .context("bad --engine")?;
     let precision = parse_precision(args)?;
+    let ee_mode = early_exit_flag(args)?.unwrap_or(EarlyExitMode::Off);
     let threads = args.usize_or("threads", 1)?;
     let pin = args.switch("pin");
     let out_path = args.get("out").map(PathBuf::from);
@@ -213,8 +234,22 @@ fn cmd_predict(args: &Args) -> Result<()> {
     // `--pin` places the exec workers onto the detected topology's
     // clusters (graceful no-op off Linux / with refused masks). Wrapping
     // the serial engine is exactly `build_parallel`'s Exact path, plus the
-    // pinned pool config.
-    let engine: Box<dyn arbors::engine::Engine> = if pin && threads > 1 {
+    // pinned pool config. `--early-exit` wraps the chosen tier in
+    // calibration-ordered staged scoring (the tree order is calibrated on
+    // the first rows of the input batch; exact mode keeps the argmax
+    // identical to full scoring for any calibration).
+    let engine: Box<dyn arbors::engine::Engine> = if ee_mode != EarlyExitMode::Off {
+        let cal = &ds.x[..ds.d * ds.n.min(256)];
+        let ee = build_early_exit(kind, precision, &model, cal, ee_mode)?;
+        if threads > 1 {
+            Box::new(arbors::exec::ParallelEngine::wrap_with(
+                std::sync::Arc::new(ee),
+                arbors::exec::PoolConfig::new(threads).pin(pin),
+            ))
+        } else {
+            Box::new(ee)
+        }
+    } else if pin && threads > 1 {
         let serial: std::sync::Arc<dyn arbors::engine::Engine> =
             std::sync::Arc::from(arbors::engine::build(kind, precision, &model, None)?);
         Box::new(arbors::exec::ParallelEngine::wrap_with(
@@ -292,18 +327,21 @@ fn cmd_select(args: &Args) -> Result<()> {
     let n = args.usize_or("n", 256)?;
     let threads = args.usize_or("threads", 1)?;
     let tier = precision_flag(args)?;
+    let ee_mode = early_exit_flag(args)?.unwrap_or(EarlyExitMode::Off);
     args.finish()?;
     let mut rng = arbors::util::Pcg32::seeded(0xCA11);
     let calibration: Vec<f32> =
         (0..n * model.n_features).map(|_| rng.f32()).collect();
-    // With a tier filter, excluded variants are never built or timed.
-    let sel = select_engine_tier(
+    // With a tier filter, excluded variants are never built or timed; with
+    // `--early-exit`, ee/ea staged-scoring candidates rank alongside.
+    let sel = select_engine_early_exit(
         &model,
         &calibration,
         device.as_ref(),
         3,
         &thread_budgets(threads),
         tier,
+        ee_mode,
     )?;
     anyhow::ensure!(
         !sel.candidates.is_empty(),
@@ -341,8 +379,14 @@ fn cmd_bench(args: &Args) -> Result<()> {
     };
     let precision = if exp == "scaling" { precision_flag(args)? } else { None };
     let pin = if exp == "scaling" { args.switch("pin") } else { false };
-    let smoke =
-        if exp == "adaptive" || exp == "flint" { args.switch("smoke") } else { false };
+    let smoke = if exp == "adaptive" || exp == "flint" || exp == "early_exit" {
+        args.switch("smoke")
+    } else {
+        false
+    };
+    // `--early-exit` narrows the ablation to one mode's rows (both by
+    // default); elsewhere the flag is rejected by `finish()`.
+    let ee_only = if exp == "early_exit" { early_exit_flag(args)? } else { None };
     let matrix = if exp == "smoke" { args.switch("matrix") } else { false };
     args.finish()?;
     let s = scale();
@@ -359,6 +403,7 @@ fn cmd_bench(args: &Args) -> Result<()> {
         "scaling" => experiments::scaling(&s, threads, precision, pin),
         "int8" => experiments::int8_tiers(&s),
         "flint" => experiments::flint(&s, smoke),
+        "early_exit" => experiments::early_exit(&s, smoke, ee_only),
         "serving" => experiments::serving(&s, threads),
         "adaptive" => experiments::adaptive(&s, threads, smoke),
         "smoke" => {
@@ -380,6 +425,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let kind = EngineKind::from_short(&args.get_or("engine", "RS"))
         .context("bad --engine")?;
     let precision = parse_precision(args)?;
+    let ee_mode = early_exit_flag(args)?.unwrap_or(EarlyExitMode::Off);
     let n_requests = args.usize_or("requests", 10_000)?;
     // --threads sizes the server-wide shared pool (default: host cores);
     // --budget is this model's worker entitlement on it (default: the whole
@@ -404,7 +450,15 @@ fn cmd_serve(args: &Args) -> Result<()> {
         println!("training {trees} x {leaves} RF on {} ...", train.name);
         let forest = arbors::bench::harness::cached_rf(&train, trees, leaves);
         let server = std::sync::Arc::new(Server::with_pool_config(pool_config.clone()));
-        server.deploy("model", &forest, kind, precision, config)?;
+        if ee_mode == EarlyExitMode::Off {
+            server.deploy("model", &forest, kind, precision, config)?;
+        } else {
+            // Staged scoring drops into the fused batcher like any engine:
+            // flush chunks are row-disjoint, so per-row exits are intact.
+            let cal = &train.x[..train.d * train.n.min(256)];
+            let ee = build_early_exit(kind, precision, &forest, cal, ee_mode)?;
+            server.deploy_engine("model", &forest, std::sync::Arc::new(ee), config)?;
+        }
         let net = arbors::coordinator::NetServer::start(server.clone(), &addr)?;
         println!(
             "serving model 'model' on {} — protocol: {{\"model\": \"model\", \"x\": [...]}}",
@@ -420,7 +474,13 @@ fn cmd_serve(args: &Args) -> Result<()> {
     println!("training {} x {} RF on {} ...", trees, leaves, train.name);
     let forest = arbors::bench::harness::cached_rf(&train, trees, leaves);
     let server = Server::with_pool_config(pool_config);
-    server.deploy("model", &forest, kind, precision, config)?;
+    if ee_mode == EarlyExitMode::Off {
+        server.deploy("model", &forest, kind, precision, config)?;
+    } else {
+        let cal = &train.x[..train.d * train.n.min(256)];
+        let ee = build_early_exit(kind, precision, &forest, cal, ee_mode)?;
+        server.deploy_engine("model", &forest, std::sync::Arc::new(ee), config)?;
+    }
     println!(
         "serving {n_requests} requests through the fused batcher \
          (pool {pool_size} workers, {} pinned, budget {budget}) ...",

@@ -1,0 +1,54 @@
+//! Shared adversarial-value injection helpers for exactness suites.
+//!
+//! Hoisted from `rust/tests/flint_exact.rs` so every bit-exactness contract
+//! (FLInt carriers, early-exit staging, future tiers) seeds batches from
+//! the *same* corner-value set — a new suite must not quietly test a
+//! weaker adversary.
+
+/// Adversarial f32 values every batch gets seeded with: both zeros, quiet
+/// NaN, the smallest denormals, both infinities, and values straddling the
+/// sign boundary (the regime sign-magnitude fixups exist for).
+pub const ADVERSARIAL: [f32; 12] = [
+    0.0,
+    -0.0,
+    f32::NAN,
+    f32::INFINITY,
+    f32::NEG_INFINITY,
+    f32::MIN_POSITIVE,            // smallest normal
+    1.0e-40,                      // denormal
+    -1.0e-40,                     // negative denormal
+    f32::MAX,
+    f32::MIN,
+    1.0,
+    -1.0,
+];
+
+/// Raw-bit view for bit-identity comparison (NaN-safe, ±0.0-distinguishing
+/// — `==` on f32 is neither).
+pub fn bits(v: &[f32]) -> Vec<u32> {
+    v.iter().map(|x| x.to_bits()).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn adversarial_covers_the_corner_classes() {
+        assert!(ADVERSARIAL.iter().any(|v| v.is_nan()));
+        assert!(ADVERSARIAL.iter().any(|v| v.is_infinite() && *v > 0.0));
+        assert!(ADVERSARIAL.iter().any(|v| v.is_infinite() && *v < 0.0));
+        assert!(ADVERSARIAL.iter().any(|v| v.to_bits() == 0)); // +0.0
+        assert!(ADVERSARIAL.iter().any(|v| v.to_bits() == 0x8000_0000)); // -0.0
+        assert!(ADVERSARIAL.iter().any(|v| *v != 0.0 && v.abs() < f32::MIN_POSITIVE));
+    }
+
+    #[test]
+    fn bits_distinguishes_what_eq_conflates() {
+        // ±0.0 compare equal but have different bits; NaN != NaN but its
+        // bits are stable.
+        assert_eq!(0.0f32, -0.0f32);
+        assert_ne!(bits(&[0.0]), bits(&[-0.0]));
+        assert_eq!(bits(&[f32::NAN]), bits(&[f32::NAN]));
+    }
+}

@@ -1,7 +1,9 @@
 //! In-repo property-testing harness (no proptest offline — see DESIGN.md).
 
+pub mod inject;
 pub mod prop;
 pub mod sched;
 
+pub use inject::{bits, ADVERSARIAL};
 pub use prop::{assert_close, Runner};
 pub use sched::explore;

@@ -1,0 +1,210 @@
+//! Early-exit exactness contract (ISSUE 9 acceptance): exact-mode staged
+//! scoring must produce the **identical argmax** to scoring every stage
+//! (mode `Off` — same confidence order, same staging, no exits) for every
+//! engine family × precision tier × batch size × 1–8 exec threads,
+//! including forests engineered so two classes sit within one leaf weight
+//! of each other and batches seeded with NaN / ±0.0 / denormal / ±inf
+//! features (the shared `testing::inject` adversary). Score equality is
+//! *not* required — skipping stages changes the f32 sums — decision
+//! equality is: early exit changes what "correct" means (DESIGN.md §11).
+//! Threaded exact-mode scores additionally stay bit-identical to serial
+//! exact-mode scores (row sharding never splits a row, so per-row exit
+//! decisions are scheduler-independent).
+
+use std::sync::Arc;
+
+use arbors::engine::{
+    all_variants_with_i8, build_early_exit, variant_name, EarlyExitMode, Engine,
+};
+use arbors::exec::ParallelEngine;
+use arbors::forest::builder::{train_random_forest, RfParams, TreeParams};
+use arbors::forest::{Child, Forest, Node, Task, Tree};
+use arbors::testing::{bits, Runner, ADVERSARIAL};
+use arbors::util::Pcg32;
+
+/// A depth-1 stump `x[feature] <= threshold ? left : right` — the smallest
+/// tree every engine family traverses (leaf-only trees skip the compare
+/// paths this suite needs to stress).
+fn stump(feature: u32, threshold: f32, left: Vec<f32>, right: Vec<f32>) -> Tree {
+    let n_classes = left.len();
+    let mut leaf_values = left;
+    leaf_values.extend(right);
+    Tree {
+        nodes: vec![Node {
+            feature,
+            threshold,
+            left: Child::Leaf(0),
+            right: Child::Leaf(1),
+        }],
+        leaf_values,
+        n_leaves: 2,
+        n_classes,
+    }
+}
+
+/// Exact-mode argmax equals off-mode (full staged scoring) argmax for every
+/// registered variant, serially and across thread counts, on `xe`.
+fn check_all_variants(f: &Forest, cal: &[f32], xe: &[f32]) -> Result<(), String> {
+    let c = f.n_classes;
+    for (kind, precision) in all_variants_with_i8() {
+        // >64-leaf forests drop the QS family — same skip as the registry.
+        let Ok(off) = build_early_exit(kind, precision, f, cal, EarlyExitMode::Off) else {
+            continue;
+        };
+        let exact = build_early_exit(kind, precision, f, cal, EarlyExitMode::Exact)
+            .map_err(|e| e.to_string())?;
+        let want = Forest::argmax(&off.predict(xe), c);
+        let serial_scores = exact.predict(xe);
+        if Forest::argmax(&serial_scores, c) != want {
+            let got = Forest::argmax(&serial_scores, c);
+            let first = got.iter().zip(&want).position(|(a, b)| a != b).unwrap_or(0);
+            return Err(format!(
+                "{}: exact early exit changed the argmax (row {first}: {} vs {})",
+                variant_name(kind, precision),
+                got[first],
+                want[first],
+            ));
+        }
+        let shared: Arc<dyn Engine> = Arc::new(exact);
+        for threads in [2usize, 3, 8] {
+            let par = ParallelEngine::wrap(shared.clone(), threads);
+            let got = par.predict(xe);
+            // Row sharding must not perturb per-row exit decisions: the
+            // threaded scores are bit-identical to the serial wrapper's.
+            if bits(&got) != bits(&serial_scores) {
+                return Err(format!(
+                    "{} × {threads}t: threaded exact scores diverged from serial",
+                    variant_name(kind, precision),
+                ));
+            }
+            if Forest::argmax(&got, c) != want {
+                return Err(format!(
+                    "{} × {threads}t: exact early exit changed the argmax",
+                    variant_name(kind, precision),
+                ));
+            }
+        }
+    }
+    Ok(())
+}
+
+/// Trained random forests × every variant × awkward batch sizes × threads,
+/// with adversarial corner values injected into every evaluation batch.
+#[test]
+fn exact_argmax_identical_on_trained_forests() {
+    Runner::new(6).with_seed(0xEE01).run(|rng: &mut Pcg32, size| {
+        let d = rng.range(2, 8);
+        let c = rng.range(2, 5);
+        let n_train = 120 + size;
+        let mut x = Vec::with_capacity(n_train * d);
+        let mut y = Vec::with_capacity(n_train);
+        for _ in 0..n_train {
+            for _ in 0..d {
+                x.push(match rng.below(8) {
+                    0 => 0.0,
+                    1 => -rng.f32(),
+                    _ => rng.f32(),
+                });
+            }
+            y.push(rng.below(c) as u32);
+        }
+        let f = train_random_forest(
+            &x,
+            &y,
+            d,
+            c,
+            RfParams {
+                n_trees: rng.range(4, 16),
+                tree: TreeParams {
+                    max_leaves: *rng.choose(&[4usize, 8, 16, 32, 64]),
+                    min_samples_leaf: 1,
+                    mtry: 0,
+                },
+                seed: rng.next_u64(),
+                ..Default::default()
+            },
+        );
+        // Calibration from the training distribution (any calibration is
+        // sound for exact mode — it only permutes the tree order).
+        let cal = &x[..d * (n_train.min(64))];
+        // Awkward batch sizes: 1, primes, non-multiples of v=4 and v=16.
+        let n_eval = *rng.choose(&[1usize, 3, 15, 16, 17, 33, 50 + size % 23]);
+        let mut xe: Vec<f32> = (0..n_eval * d)
+            .map(|_| if rng.below(4) == 0 { -rng.f32() } else { rng.f32() })
+            .collect();
+        // Inject adversarial values at random positions (≈1 in 6 entries):
+        // NaN margins must fail safe into full scoring, never a wrong exit.
+        for v in xe.iter_mut() {
+            if rng.below(6) == 0 {
+                *v = *rng.choose(&ADVERSARIAL);
+            }
+        }
+        check_all_variants(&f, cal, &xe)
+    });
+}
+
+/// Adversarial tie-margin forests: stumps whose two classes stay within one
+/// leaf weight of each other — exact ties (margin 0) and sub-leaf-weight
+/// near-ties the suffix bound must never resolve early, with routing (and
+/// thus the winner) controlled by corner-value features crossing the ±0.0
+/// threshold seam.
+#[test]
+fn exact_argmax_identical_on_tie_margin_forests() {
+    Runner::new(8).with_seed(0xEE02).run(|rng: &mut Pcg32, size| {
+        let d = 3usize;
+        let c = 2usize;
+        let w = 0.5f32; // the leaf weight all margins stay under
+        let n_trees = rng.range(3, 9).max(3);
+        let mut f = Forest::new(d, c, Task::Classification);
+        for t in 0..n_trees {
+            // Per-tree class imbalance strictly below one leaf weight —
+            // 0.0 makes the tree a pure tie contributor.
+            let delta = *rng.choose(&[0.0f32, 1e-7, 1e-3, 0.25 * w]);
+            // Threshold 0.0 puts the split on the ±0.0 seam; NaN features
+            // compare false and route right.
+            let threshold = *rng.choose(&[0.0f32, 0.5]);
+            f.trees.push(stump(
+                (t % d) as u32,
+                threshold,
+                vec![w, w - delta],
+                vec![w - delta, w],
+            ));
+        }
+        let cal: Vec<f32> = (0..d * 16).map(|_| rng.f32() - 0.5).collect();
+        let n_eval = *rng.choose(&[1usize, 7, 16, 33]);
+        let xe: Vec<f32> = (0..n_eval * d)
+            .map(|_| match rng.below(3) {
+                // Pure corner rows: every feature is an adversary value.
+                0 => *rng.choose(&ADVERSARIAL),
+                1 => rng.f32() - 0.5,
+                _ => rng.f32(),
+            })
+            .collect();
+        let _ = size;
+        check_all_variants(&f, &cal, &xe)
+    });
+}
+
+/// The tie-break direction itself: a forest summing to an exact tie must
+/// pick class 0 (first-index strict-`>` argmax) through every variant and
+/// mode — a single flipped comparison in the exit test would surface here.
+#[test]
+fn exact_ties_resolve_by_index_everywhere() {
+    let d = 2usize;
+    let mut f = Forest::new(d, 2, Task::Classification);
+    for t in 0..5 {
+        // Symmetric stumps: both branches contribute [0.4, 0.4].
+        f.trees.push(stump((t % d) as u32, 0.25, vec![0.4, 0.4], vec![0.4, 0.4]));
+    }
+    let xe: Vec<f32> = vec![0.0, 1.0, -0.0, 0.25, f32::NAN, 0.5, 1.0, -1.0];
+    for (kind, precision) in all_variants_with_i8() {
+        let exact = build_early_exit(kind, precision, &f, &[], EarlyExitMode::Exact).unwrap();
+        let preds = Forest::argmax(&exact.predict(&xe), 2);
+        assert_eq!(
+            preds,
+            vec![0u32; 4],
+            "{}: exact tie must resolve to class 0",
+            variant_name(kind, precision)
+        );
+    }
+}

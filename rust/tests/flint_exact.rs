@@ -11,31 +11,8 @@
 
 use arbors::engine::{build, build_parallel, flint_variants, variant_name, Precision};
 use arbors::forest::builder::{train_random_forest, RfParams, TreeParams};
-use arbors::testing::Runner;
+use arbors::testing::{bits, Runner, ADVERSARIAL};
 use arbors::util::Pcg32;
-
-/// Adversarial f32 values every batch gets seeded with: both zeros, quiet
-/// and payload NaNs, the smallest denormals, both infinities, and values
-/// straddling the sign boundary (the regime the sign-magnitude fixup
-/// exists for).
-const ADVERSARIAL: [f32; 12] = [
-    0.0,
-    -0.0,
-    f32::NAN,
-    f32::INFINITY,
-    f32::NEG_INFINITY,
-    f32::MIN_POSITIVE,            // smallest normal
-    1.0e-40,                      // denormal
-    -1.0e-40,                     // negative denormal
-    f32::MAX,
-    f32::MIN,
-    1.0,
-    -1.0,
-];
-
-fn bits(v: &[f32]) -> Vec<u32> {
-    v.iter().map(|x| x.to_bits()).collect()
-}
 
 #[test]
 fn flint_engines_bit_identical_to_f32_twins() {

@@ -48,6 +48,9 @@ pub const RELAXED_ALLOWLIST: &[&str] = &[
     // exec::pool — claim-amortization counters.
     "claims",
     "claimed_tasks",
+    // engine::early_exit — staged-scoring cost counters.
+    "rows_scored",
+    "trees_evaluated",
     // exec::feedback — EWMA observation counters.
     "samples",
     "replans",
@@ -530,6 +533,20 @@ mod tests {
         let src = "fn f(m: &Metrics) {\n    m.claims.fetch_add(1, Ordering::Relaxed);\n}\n";
         let r = audit_file("src/x.rs", src);
         assert!(r.findings.is_empty(), "{:?}", r.findings);
+    }
+
+    #[test]
+    fn relaxed_accepts_early_exit_cost_counters() {
+        // The `engine::early_exit` staged-scoring counters (ISSUE 9): pure
+        // monotone telemetry read back as deltas by Feedback::record_trees,
+        // so Relaxed is correct and the names ride the allowlist — the tree
+        // must stay at 0 findings / 0 waivers when they land.
+        let src = "fn f(&self, rows: u64, trees: u64) {\n    \
+                   self.rows_scored.fetch_add(rows, Ordering::Relaxed);\n    \
+                   self.trees_evaluated.fetch_add(trees, Ordering::Relaxed);\n}\n";
+        let r = audit_file("src/engine/early_exit.rs", src);
+        assert!(r.findings.is_empty(), "{:?}", r.findings);
+        assert!(r.waivers.is_empty(), "{:?}", r.waivers);
     }
 
     #[test]

@@ -38,6 +38,13 @@ arbors predict --model /tmp/model.json --data /tmp/batch.csv --engine RS \
     --precision flint --out /tmp/preds_flint.csv
 cmp /tmp/preds_f32.csv /tmp/preds_flint.csv
 
+# Early exit (ISSUE 9): exact mode scores trees in confidence order and
+# stops once the margin bound proves the argmax — predictions must equal
+# full scoring byte-for-byte.
+arbors predict --model /tmp/model.json --data /tmp/batch.csv --engine RS \
+    --early-exit exact --out /tmp/preds_ee.csv
+cmp /tmp/preds_f32.csv /tmp/preds_ee.csv
+
 arbors select --model /tmp/model.json --device a53 --threads 2
 
 # --pin anchors exec workers to their topology cluster (graceful no-op
@@ -52,6 +59,8 @@ test -s /tmp/preds_pinned.csv
 arbors bench --exp int8
 # Per-engine f32-vs-FLInt latency table (bit-identity asserted inside).
 arbors bench --exp flint --smoke
+# Exact-mode agreement (asserted) + the approx threshold sweep.
+arbors bench --exp early_exit --smoke
 arbors bench --exp scaling --threads 2
 arbors bench --exp serving --threads 2
 # The adaptive-execution grid (static/adaptive × pinned/unpinned ×

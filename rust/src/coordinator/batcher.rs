@@ -204,7 +204,20 @@ impl Default for BatchConfig {
 pub struct Request {
     pub x: Vec<f32>,
     pub enqueued: Instant,
+    /// Absolute client deadline: once passed, the request's reply is
+    /// worthless, so the collector sheds it at flush time instead of
+    /// spending pool SIMD lanes on it ([`ServeError::DeadlineExceeded`]).
+    /// `None` = wait however long serving takes (the pre-ISSUE-10
+    /// contract).
+    pub deadline: Option<Instant>,
     pub reply: mpsc::Sender<Result<Vec<f32>, ServeError>>,
+}
+
+impl Request {
+    /// Whether the client deadline has passed as of `now`.
+    pub fn expired(&self, now: Instant) -> bool {
+        self.deadline.is_some_and(|d| now >= d)
+    }
 }
 
 /// Serving errors surfaced to clients.
@@ -213,9 +226,27 @@ pub enum ServeError {
     Overloaded,
     Shutdown,
     BadInput(String),
+    /// The request's client deadline passed before execution started (at
+    /// admission, or while it waited in the queue); it was shed without
+    /// touching the pool.
+    DeadlineExceeded,
     /// A shard task died mid-batch (engine panic); the request was executed
     /// but its scores are not trustworthy.
     Internal,
+}
+
+impl ServeError {
+    /// Stable machine-readable code for the wire protocol (`net`): clients
+    /// key retry policy off this, never off the human message.
+    pub fn code(&self) -> &'static str {
+        match self {
+            ServeError::Overloaded => "overloaded",
+            ServeError::Shutdown => "shutdown",
+            ServeError::BadInput(_) => "bad_input",
+            ServeError::DeadlineExceeded => "deadline",
+            ServeError::Internal => "internal",
+        }
+    }
 }
 
 impl std::fmt::Display for ServeError {
@@ -224,6 +255,7 @@ impl std::fmt::Display for ServeError {
             ServeError::Overloaded => write!(f, "queue full (backpressure)"),
             ServeError::Shutdown => write!(f, "model is shutting down"),
             ServeError::BadInput(msg) => write!(f, "bad input: {msg}"),
+            ServeError::DeadlineExceeded => write!(f, "deadline exceeded before execution"),
             ServeError::Internal => write!(f, "internal execution error"),
         }
     }
@@ -294,9 +326,8 @@ impl Batcher {
         let feedback = Arc::new(Feedback::for_pool(client.pool(), budget));
 
         let ctx = Arc::new(FlushCtx {
-            engine: engine.clone(),
+            engine: Mutex::new(engine.clone()),
             client,
-            lanes,
             budget,
             feedback,
             weights: Mutex::new(weights),
@@ -337,6 +368,19 @@ impl Batcher {
         &self,
         x: Vec<f32>,
     ) -> Result<mpsc::Receiver<Result<Vec<f32>, ServeError>>, ServeError> {
+        self.submit_with_deadline(x, None)
+    }
+
+    /// [`Batcher::submit`] with an absolute client deadline: a request whose
+    /// deadline has passed is refused at admission, and one that expires
+    /// while queued is shed at flush time — either way it receives
+    /// [`ServeError::DeadlineExceeded`] (counted in
+    /// [`Metrics::deadline_exceeded`]) and never reaches the pool.
+    pub fn submit_with_deadline(
+        &self,
+        x: Vec<f32>,
+        deadline: Option<Instant>,
+    ) -> Result<mpsc::Receiver<Result<Vec<f32>, ServeError>>, ServeError> {
         if x.len() != self.n_features {
             return Err(ServeError::BadInput(format!(
                 "expected {} features, got {}",
@@ -345,11 +389,15 @@ impl Batcher {
             )));
         }
         self.metrics.requests.fetch_add(1, Ordering::Relaxed);
+        if deadline.is_some_and(|d| Instant::now() >= d) {
+            self.metrics.deadline_exceeded.fetch_add(1, Ordering::Relaxed);
+            return Err(ServeError::DeadlineExceeded);
+        }
         // `admission` span: validation through enqueue (recorded only for
         // accepted requests; an unfinished timer records nothing).
         let admission = SpanTimer::start("admission");
         let (reply_tx, reply_rx) = mpsc::channel();
-        let req = Request { x, enqueued: Instant::now(), reply: reply_tx };
+        let req = Request { x, enqueued: Instant::now(), deadline, reply: reply_tx };
         match self.tx.try_send(req) {
             Ok(()) => {
                 admission.finish();
@@ -384,6 +432,36 @@ impl Batcher {
     /// `None` = class never observed). Introspection for `stats --json`.
     pub fn class_rates(&self) -> Vec<Option<f64>> {
         self.ctx.as_ref().map_or_else(Vec::new, |c| c.feedback.class_rates())
+    }
+
+    /// The engine currently serving flushes — the primary, or the degrade
+    /// fallback while degraded ([`Batcher::swap_engine`]).
+    pub fn engine(&self) -> Option<Arc<dyn Engine>> {
+        self.ctx.as_ref().map(|c| c.current_engine())
+    }
+
+    /// Swap the serving engine (degradation enter/exit). In-flight flushes
+    /// finish on the engine they captured at flush time; only *later*
+    /// flushes see the replacement — so the determinism contract (replies
+    /// bit-identical to a serial `predict_batch` on the engine that served
+    /// them) holds on both sides of the swap. The replacement must serve
+    /// the same model shape (feature/class counts) or the swap is refused.
+    pub fn swap_engine(&self, engine: Arc<dyn Engine>) -> Result<(), ServeError> {
+        let Some(ctx) = self.ctx.as_ref() else {
+            return Err(ServeError::Shutdown);
+        };
+        let cur = ctx.current_engine();
+        if engine.n_features() != cur.n_features() || engine.n_classes() != cur.n_classes() {
+            return Err(ServeError::BadInput(format!(
+                "engine shape mismatch: {}×{} features/classes, deployment serves {}×{}",
+                engine.n_features(),
+                engine.n_classes(),
+                cur.n_features(),
+                cur.n_classes()
+            )));
+        }
+        *ctx.engine.lock().unwrap() = engine;
+        Ok(())
     }
 }
 
@@ -467,9 +545,14 @@ impl Drop for Batcher {
 /// inflight handles), so pool teardown can never run on, and self-join, a
 /// worker thread.
 struct FlushCtx {
-    engine: Arc<dyn Engine>,
+    /// The deployment's live engine. The degrade controller swaps this
+    /// between flushes (enter: fallback tier, exit: primary); each flush
+    /// captures one engine for its whole lifetime, and plans lane-aligned
+    /// chunks for *that* engine — the determinism contract (replies
+    /// bit-identical to a serial `predict_batch` on the same engine) holds
+    /// on both sides of a swap.
+    engine: Mutex<Arc<dyn Engine>>,
     client: PoolClient,
-    lanes: usize,
     budget: usize,
     /// Live per-chunk-slot weights (2× budget slots, big cores first).
     /// Fixed at the topology prior when `adaptive` is off; re-derived from
@@ -481,6 +564,14 @@ struct FlushCtx {
     flushes: AtomicU64,
     metrics: Arc<Metrics>,
     inflight: Arc<Inflight>,
+}
+
+impl FlushCtx {
+    /// Clone out the live engine (the guard dies inside the call — flushes
+    /// never hold the slot lock across planning or execution).
+    fn current_engine(&self) -> Arc<dyn Engine> {
+        self.engine.lock().unwrap().clone()
+    }
 }
 
 /// Shutdown-drain latch: flushed-but-incomplete batch count, plus weak
@@ -564,8 +655,13 @@ fn flush_batch(ctx: &Arc<FlushCtx>, mut batch: Vec<Request>) {
     if n == 0 {
         return;
     }
-    let d = ctx.engine.n_features();
-    let c = ctx.engine.n_classes();
+    // One engine per flush: captured here, used for planning, execution
+    // and reply pairing alike (a concurrent degrade swap only affects
+    // *later* flushes).
+    let engine = ctx.current_engine();
+    let d = engine.n_features();
+    let c = engine.n_classes();
+    let lanes = engine.lanes().max(1);
     // `flush_plan` span: input concatenation plus chunk apportionment —
     // everything between batch assembly and the tasks hitting the pool.
     let plan_span = SpanTimer::start("flush_plan");
@@ -584,7 +680,7 @@ fn flush_batch(ctx: &Arc<FlushCtx>, mut batch: Vec<Request>) {
     } else {
         let planned = {
             let weights = ctx.weights.lock().unwrap();
-            weighted_row_chunks_slotted(n, ctx.lanes, &weights)
+            weighted_row_chunks_slotted(n, lanes, &weights)
         };
         if planned.len() <= 1 {
             vec![(0, n, 0)]
@@ -600,7 +696,7 @@ fn flush_batch(ctx: &Arc<FlushCtx>, mut batch: Vec<Request>) {
     // measures batch arrival, not relative slot speed).
     let record = ctx.adaptive && chunks.len() > 1;
     let state = Arc::new(FlushState {
-        engine: ctx.engine.clone(),
+        engine,
         metrics: ctx.metrics.clone(),
         inflight: ctx.inflight.clone(),
         x,
@@ -822,8 +918,34 @@ fn collect_loop(
                 Some(("rows", pending.len() as f64)),
             );
         }
+        // Flush-time deadline shed: a reply nobody is waiting for must not
+        // burn SIMD lanes. Per-request, so the rest of the batch still
+        // executes; an empty remainder skips the flush entirely.
+        shed_expired(&ctx, &mut pending);
         flush_batch(&ctx, std::mem::take(&mut pending));
     }
+}
+
+/// Shed every expired request out of an assembled batch (the flush-time
+/// deadline check): each receives [`ServeError::DeadlineExceeded`] now, the
+/// unexpired remainder stays in `pending` in arrival order.
+fn shed_expired(ctx: &FlushCtx, pending: &mut Vec<Request>) {
+    let now = Instant::now();
+    if pending.iter().all(|r| !r.expired(now)) {
+        return; // hot path: nothing expired, no reshuffle
+    }
+    for r in std::mem::take(pending) {
+        if r.expired(now) {
+            shed_deadline(ctx, r);
+        } else {
+            pending.push(r);
+        }
+    }
+}
+
+fn shed_deadline(ctx: &FlushCtx, r: Request) {
+    ctx.metrics.deadline_exceeded.fetch_add(1, Ordering::Relaxed);
+    let _ = r.reply.send(Err(ServeError::DeadlineExceeded));
 }
 
 /// Reply `Shutdown` to every request that will never execute: the assembled
@@ -1288,6 +1410,7 @@ mod tests {
                 .map(|tx| Request {
                     x: ds.row(0).to_vec(),
                     enqueued: Instant::now(),
+                    deadline: None,
                     reply: tx,
                 })
                 .collect();
@@ -1321,5 +1444,281 @@ mod tests {
             assert_eq!(*inflight.count.lock().unwrap(), 0, "latch leaked under {sched:?}");
         });
         assert_eq!(schedules, 6, "3 distinct single-step actors");
+    }
+
+    /// Flush-time deadline shed (ISSUE 10): requests whose client deadline
+    /// passes while they sit in the assembling batch are answered
+    /// `DeadlineExceeded` at flush time and never reach the pool; unexpired
+    /// requests in the same batch still execute bit-exactly.
+    #[test]
+    fn expired_requests_are_shed_at_flush_time() {
+        let (eng, ds) = engine();
+        let direct = eng.predict(&ds.x[..ds.d * 4]);
+        let b = Batcher::start(
+            eng.clone(),
+            BatchConfig {
+                max_batch: 1024,
+                // The flush fires on this delay — well past the 5 ms client
+                // deadlines below, so those requests are expired by then.
+                max_delay: Duration::from_millis(50),
+                queue_cap: 1024,
+                workers: 1,
+                exec_threads: 1,
+                drain_timeout: None,
+                adaptive: true,
+            },
+        );
+        let doomed: Vec<_> = (0..4)
+            .map(|i| {
+                b.submit_with_deadline(
+                    ds.row(i).to_vec(),
+                    Some(Instant::now() + Duration::from_millis(5)),
+                )
+                .unwrap()
+            })
+            .collect();
+        let live: Vec<_> =
+            (0..4).map(|i| b.submit_with_deadline(ds.row(i).to_vec(), None).unwrap()).collect();
+        for r in doomed {
+            assert_eq!(r.recv().unwrap(), Err(ServeError::DeadlineExceeded));
+        }
+        for (i, r) in live.into_iter().enumerate() {
+            let scores = r.recv().unwrap().unwrap();
+            assert_eq!(&scores[..], &direct[i * ds.n_classes..(i + 1) * ds.n_classes]);
+        }
+        assert_eq!(b.metrics.deadline_exceeded.load(Ordering::Relaxed), 4);
+        assert_eq!(b.metrics.completed.load(Ordering::Relaxed), 4);
+        assert!(b.metrics.report().contains("ddl=4"), "{}", b.metrics.report());
+    }
+
+    /// A deadline already in the past is refused at admission — no queue
+    /// slot, no reply channel, counted the same as a flush-time shed.
+    #[test]
+    fn admission_refuses_already_expired_deadline() {
+        let (eng, ds) = engine();
+        let b = Batcher::start(eng, BatchConfig::default());
+        let err = b
+            .submit_with_deadline(ds.row(0).to_vec(), Some(Instant::now() - Duration::from_millis(1)))
+            .unwrap_err();
+        assert_eq!(err, ServeError::DeadlineExceeded);
+        assert_eq!(b.metrics.deadline_exceeded.load(Ordering::Relaxed), 1);
+        assert_eq!(b.metrics.requests.load(Ordering::Relaxed), 1);
+    }
+
+    /// The deadline-shed vs flush race, exhaustively interleaved: one
+    /// expired request, one "reaper" actor running the real
+    /// [`shed_deadline`] claim and one "flush" actor running the real
+    /// [`flush_batch`], racing on an owned slot (the same move-out-of-
+    /// `pending` discipline the collector uses). Whichever wins, the
+    /// requester hears back exactly once — `DeadlineExceeded` if the shed
+    /// won, real scores if the flush did — never twice, never zero times.
+    #[test]
+    fn deadline_shed_vs_flush_interleavings_reply_exactly_once() {
+        let (eng, ds) = engine();
+        let b = Batcher::start(eng.clone(), BatchConfig::default());
+        let ctx = b.ctx.as_ref().unwrap().clone();
+        let schedules = crate::testing::explore(&[1, 1], usize::MAX, |sched| {
+            let (tx, rx) = mpsc::channel();
+            let slot = Mutex::new(Some(Request {
+                x: ds.row(0).to_vec(),
+                enqueued: Instant::now(),
+                deadline: Some(Instant::now() - Duration::from_millis(1)),
+                reply: tx,
+            }));
+            for &actor in sched {
+                let claimed = slot.lock().unwrap().take();
+                let Some(r) = claimed else { continue };
+                match actor {
+                    0 => {
+                        // Reaper step: shed only if actually expired
+                        // (mirrors `shed_expired`'s per-request check).
+                        if r.expired(Instant::now()) {
+                            shed_deadline(&ctx, r);
+                        } else {
+                            *slot.lock().unwrap() = Some(r);
+                        }
+                    }
+                    _ => flush_batch(&ctx, vec![r]),
+                }
+            }
+            match rx.recv_timeout(Duration::from_secs(5)).expect("a reply must arrive") {
+                Ok(_) | Err(ServeError::DeadlineExceeded) => {}
+                other => panic!("unexpected reply {other:?} under {sched:?}"),
+            }
+            assert!(rx.try_recv().is_err(), "double reply under {sched:?}");
+        });
+        assert_eq!(schedules, 2, "shed-first and flush-first orders");
+        // Wait out in-flight flushes before `ctx` (and its pool client)
+        // drops at end of scope.
+        ctx.inflight.wait_idle();
+    }
+
+    /// Conservation law over every shed/reply path: each submission lands
+    /// in exactly one of {completed, rejected, shed_shutdown,
+    /// deadline_exceeded, failed}, the per-class counters equal the
+    /// observed replies of that class, and their sum equals `requests`.
+    #[test]
+    fn counter_conservation_over_shed_paths() {
+        let (eng, ds) = engine();
+        let b = Batcher::start(
+            eng,
+            BatchConfig {
+                max_batch: 1024,
+                max_delay: Duration::from_millis(20),
+                queue_cap: 4096,
+                workers: 1,
+                exec_threads: 1,
+                drain_timeout: None,
+                adaptive: true,
+            },
+        );
+        let metrics = b.metrics.clone();
+        let (mut done, mut ddl, mut shut) = (0u64, 0u64, 0u64);
+        // Phase A: plain requests that complete.
+        for i in 0..8 {
+            b.predict(ds.row(i).to_vec()).unwrap();
+            done += 1;
+        }
+        // Phase B: refused at admission (deadline already past).
+        for i in 0..4 {
+            let err = b
+                .submit_with_deadline(
+                    ds.row(i).to_vec(),
+                    Some(Instant::now() - Duration::from_millis(1)),
+                )
+                .unwrap_err();
+            assert_eq!(err, ServeError::DeadlineExceeded);
+            ddl += 1;
+        }
+        // Phase C: expire in the queue, shed at flush time.
+        let doomed: Vec<_> = (0..16)
+            .map(|i| {
+                b.submit_with_deadline(
+                    ds.row(i % ds.n).to_vec(),
+                    Some(Instant::now() + Duration::from_millis(2)),
+                )
+                .unwrap()
+            })
+            .collect();
+        // Phase D: no deadline — flushes alongside phase C's shed (or, if
+        // the drop wins the race, is shed as Shutdown; both are counted).
+        let racing: Vec<_> =
+            (0..8).map(|i| b.submit(ds.row(i).to_vec()).unwrap()).collect();
+        // Let the 20 ms flush fire so phase C is shed at flush time rather
+        // than swallowed by the shutdown drain.
+        std::thread::sleep(Duration::from_millis(60));
+        drop(b);
+        for r in doomed.into_iter().chain(racing) {
+            match r.recv().unwrap() {
+                Ok(_) => done += 1,
+                Err(ServeError::DeadlineExceeded) => ddl += 1,
+                Err(ServeError::Shutdown) => shut += 1,
+                Err(e) => panic!("unexpected {e}"),
+            }
+        }
+        assert_eq!(metrics.completed.load(Ordering::Relaxed), done);
+        assert_eq!(metrics.deadline_exceeded.load(Ordering::Relaxed), ddl);
+        assert_eq!(metrics.shed_shutdown.load(Ordering::Relaxed), shut);
+        assert_eq!(metrics.failed.load(Ordering::Relaxed), 0);
+        assert_eq!(metrics.rejected.load(Ordering::Relaxed), 0);
+        assert_eq!(
+            metrics.requests.load(Ordering::Relaxed),
+            done + ddl + shut,
+            "every request accounted for exactly once"
+        );
+    }
+
+    /// Engine swap mid-stream (the degrade controller's mechanism): waves
+    /// served before the swap are bit-exact to the old engine's serial
+    /// predictions, waves after to the new engine's — even though the two
+    /// engines have different lane widths (RS 16 vs naive 1), because each
+    /// flush captures one engine and plans chunks for *its* lanes.
+    #[test]
+    fn swap_engine_mid_stream_stays_bit_exact() {
+        let (rs, ds) = engine();
+        let f = train_random_forest(
+            &ds.x,
+            &ds.labels,
+            ds.d,
+            ds.n_classes,
+            RfParams {
+                n_trees: 8,
+                tree: TreeParams { max_leaves: 16, min_samples_leaf: 2, mtry: 0 },
+                ..Default::default()
+            },
+        );
+        let naive: Arc<dyn Engine> =
+            Arc::from(build(EngineKind::Naive, Precision::F32, &f, None).unwrap());
+        let rs_direct = rs.predict(&ds.x[..ds.d * 16]);
+        let naive_direct = naive.predict(&ds.x[..ds.d * 16]);
+        let b = Batcher::start(
+            rs.clone(),
+            BatchConfig {
+                max_batch: 16,
+                max_delay: Duration::from_millis(2),
+                queue_cap: 4096,
+                workers: 1,
+                exec_threads: 2,
+                drain_timeout: None,
+                adaptive: true,
+            },
+        );
+        let wave: Vec<_> = (0..16).map(|i| b.submit(ds.row(i).to_vec()).unwrap()).collect();
+        for (i, r) in wave.into_iter().enumerate() {
+            let scores = r.recv().unwrap().unwrap();
+            assert_eq!(&scores[..], &rs_direct[i * ds.n_classes..(i + 1) * ds.n_classes]);
+        }
+        b.swap_engine(naive.clone()).unwrap();
+        assert_eq!(b.engine().unwrap().name(), naive.name());
+        let wave: Vec<_> = (0..16).map(|i| b.submit(ds.row(i).to_vec()).unwrap()).collect();
+        for (i, r) in wave.into_iter().enumerate() {
+            let scores = r.recv().unwrap().unwrap();
+            assert_eq!(
+                &scores[..],
+                &naive_direct[i * ds.n_classes..(i + 1) * ds.n_classes],
+                "row {i} not served by the swapped-in engine"
+            );
+        }
+    }
+
+    /// A replacement with a different model shape is refused — the swap
+    /// must never let a deployment silently answer with the wrong width.
+    #[test]
+    fn swap_engine_refuses_shape_mismatch() {
+        let (eng, ds) = engine();
+        let b = Batcher::start(eng, BatchConfig::default());
+        // Same shape (a second forest over the same dataset) succeeds…
+        let same = train_random_forest(
+            &ds.x,
+            &ds.labels,
+            ds.d,
+            ds.n_classes,
+            RfParams {
+                n_trees: 2,
+                tree: TreeParams { max_leaves: 4, min_samples_leaf: 2, mtry: 0 },
+                ..Default::default()
+            },
+        );
+        let ok: Arc<dyn Engine> =
+            Arc::from(build(EngineKind::Naive, Precision::F32, &same, None).unwrap());
+        b.swap_engine(ok).unwrap();
+        // …but an engine over Eeg (14 features vs Magic's 10) is refused.
+        let other = DatasetId::Eeg.generate(100, 7);
+        assert_ne!(other.d, ds.d);
+        let of = train_random_forest(
+            &other.x,
+            &other.labels,
+            other.d,
+            other.n_classes,
+            RfParams {
+                n_trees: 2,
+                tree: TreeParams { max_leaves: 4, min_samples_leaf: 2, mtry: 0 },
+                ..Default::default()
+            },
+        );
+        let bad: Arc<dyn Engine> =
+            Arc::from(build(EngineKind::Naive, Precision::F32, &of, None).unwrap());
+        let err = b.swap_engine(bad).unwrap_err();
+        assert!(matches!(err, ServeError::BadInput(_)));
     }
 }

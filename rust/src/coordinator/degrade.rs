@@ -1,0 +1,443 @@
+//! Overload-triggered graceful degradation (DESIGN.md §12).
+//!
+//! Under sustained overload a deployment has exactly two levers: shed
+//! harder, or serve cheaper. The selector already knows how to serve
+//! cheaper *without* giving up accuracy — its candidate table ranks every
+//! precision tier and early-exit wrapper by measured latency with a
+//! calibration argmax-agreement column — so overload should flip the
+//! deployment onto its agreement-gated fallback engine instead of
+//! drowning in `Overloaded` rejections.
+//!
+//! A [`DegradeController`] watches two signals per deployment: the shared
+//! pool's queue depth for its label, and the **windowed** p99 of the
+//! serving latency histogram ([`Histogram::quantile_between`] between
+//! poll-tick snapshots — a cumulative p99 barely moves under a fresh burst
+//! after hours of healthy traffic, so it can neither detect overload
+//! promptly nor observe recovery). The decision itself is a small
+//! hysteresis state machine, [`Hysteresis`], kept clock-explicit so tests
+//! drive it deterministically:
+//!
+//! * **enter fast** — [`DegradeConfig::enter_after`] consecutive hot polls
+//!   (default 2, ≈40 ms at the default poll rate) flip to the fallback;
+//!   overload compounds quickly, so hesitating is expensive;
+//! * **exit slow** — [`DegradeConfig::exit_after`] consecutive cool polls
+//!   *and* [`DegradeConfig::min_dwell`] since entry are required to return
+//!   to the primary; exiting is cheap to delay and flapping re-quantizes
+//!   the serving path every few ticks.
+//!
+//! The actual engine swap is [`Batcher::swap_engine`]: in-flight flushes
+//! finish on the engine they captured, later flushes plan for the new one,
+//! and the determinism contract (replies bit-identical to a serial
+//! `predict_batch` on the engine that served them) holds on both sides.
+//! The fallback must come from the selection's ≥ 99%-agreement set
+//! ([`crate::coordinator::Selection::agreement_set`]) — degradation trades
+//! tail latency, never served accuracy.
+
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, Weak};
+use std::time::{Duration, Instant};
+
+use super::batcher::Batcher;
+use super::Deployment;
+use crate::engine::Engine;
+use crate::exec::SharedPool;
+use crate::obs::Histogram;
+use crate::util::Json;
+
+/// Overload thresholds and hysteresis shape for one deployment.
+#[derive(Debug, Clone, Copy)]
+pub struct DegradeConfig {
+    /// Pool queue depth (tasks waiting under this deployment's label) at or
+    /// above which a poll counts as hot.
+    pub queue_high: usize,
+    /// Windowed p99 request latency (µs) at or above which a poll counts
+    /// as hot. An empty window never counts.
+    pub p99_high_us: f64,
+    /// Consecutive hot polls before entering degraded mode (enter fast).
+    pub enter_after: u32,
+    /// Consecutive cool polls before exiting degraded mode (exit slow).
+    pub exit_after: u32,
+    /// Minimum time spent degraded before an exit is allowed — with
+    /// `exit_after`, the anti-flap guarantee: at most one enter/exit pair
+    /// per dwell period no matter how pathological the load pattern.
+    pub min_dwell: Duration,
+    /// Ticker poll period (also the p99 window length).
+    pub poll_every: Duration,
+}
+
+impl Default for DegradeConfig {
+    fn default() -> Self {
+        DegradeConfig {
+            queue_high: 256,
+            p99_high_us: 50_000.0,
+            enter_after: 2,
+            exit_after: 20,
+            min_dwell: Duration::from_secs(1),
+            poll_every: Duration::from_millis(20),
+        }
+    }
+}
+
+/// The pure enter-fast/exit-slow state machine. The clock is an argument,
+/// never sampled — unit tests replay exact schedules against it.
+#[derive(Debug)]
+pub struct Hysteresis {
+    cfg: DegradeConfig,
+    degraded: bool,
+    hot: u32,
+    cool: u32,
+    entered_at: Option<Instant>,
+}
+
+impl Hysteresis {
+    pub fn new(cfg: DegradeConfig) -> Hysteresis {
+        Hysteresis { cfg, degraded: false, hot: 0, cool: 0, entered_at: None }
+    }
+
+    pub fn degraded(&self) -> bool {
+        self.degraded
+    }
+
+    /// Feed one poll observation; returns `Some(true)` on the transition
+    /// into degraded mode, `Some(false)` on the transition out, `None`
+    /// otherwise.
+    pub fn observe(&mut self, overloaded: bool, now: Instant) -> Option<bool> {
+        if overloaded {
+            self.hot += 1;
+            self.cool = 0;
+        } else {
+            self.cool += 1;
+            self.hot = 0;
+        }
+        if !self.degraded {
+            if self.hot >= self.cfg.enter_after {
+                self.degraded = true;
+                self.entered_at = Some(now);
+                self.hot = 0;
+                self.cool = 0;
+                return Some(true);
+            }
+        } else if self.cool >= self.cfg.exit_after
+            && self
+                .entered_at
+                .map_or(true, |t| now.duration_since(t) >= self.cfg.min_dwell)
+        {
+            self.degraded = false;
+            self.hot = 0;
+            self.cool = 0;
+            return Some(false);
+        }
+        None
+    }
+}
+
+/// Per-deployment degradation: the primary and fallback engines, the
+/// hysteresis state, and transition counters for `stats`/`health`.
+pub struct DegradeController {
+    cfg: DegradeConfig,
+    primary: Arc<dyn Engine>,
+    fallback: Arc<dyn Engine>,
+    primary_name: String,
+    fallback_name: String,
+    /// The fallback candidate's measured calibration argmax agreement with
+    /// the float reference (≥ 0.99 by construction).
+    fallback_agreement: f64,
+    degraded: AtomicBool,
+    entries: AtomicU64,
+    exits: AtomicU64,
+    state: Mutex<Hysteresis>,
+    stop: Arc<AtomicBool>,
+    ticker: Mutex<Option<std::thread::JoinHandle<()>>>,
+}
+
+impl DegradeController {
+    pub fn new(
+        primary: Arc<dyn Engine>,
+        fallback: Arc<dyn Engine>,
+        fallback_name: String,
+        fallback_agreement: f64,
+        cfg: DegradeConfig,
+    ) -> DegradeController {
+        DegradeController {
+            cfg,
+            primary_name: primary.name(),
+            fallback_name,
+            fallback_agreement,
+            primary,
+            fallback,
+            degraded: AtomicBool::new(false),
+            entries: AtomicU64::new(0),
+            exits: AtomicU64::new(0),
+            state: Mutex::new(Hysteresis::new(cfg)),
+            stop: Arc::new(AtomicBool::new(false)),
+            ticker: Mutex::new(None),
+        }
+    }
+
+    pub fn config(&self) -> DegradeConfig {
+        self.cfg
+    }
+
+    pub fn degraded(&self) -> bool {
+        self.degraded.load(Ordering::SeqCst)
+    }
+
+    pub fn entries(&self) -> u64 {
+        self.entries.load(Ordering::SeqCst)
+    }
+
+    pub fn exits(&self) -> u64 {
+        self.exits.load(Ordering::SeqCst)
+    }
+
+    pub fn primary_name(&self) -> &str {
+        &self.primary_name
+    }
+
+    pub fn fallback_name(&self) -> &str {
+        &self.fallback_name
+    }
+
+    pub fn fallback_agreement(&self) -> f64 {
+        self.fallback_agreement
+    }
+
+    /// Feed one poll sample through the hysteresis; on a transition, update
+    /// the published flag and counters and return it (the caller performs
+    /// the engine swap — the controller never holds a batcher reference, so
+    /// drop order between it and the deployment is a non-issue).
+    pub fn tick(&self, queue_depth: usize, p99_us: f64, now: Instant) -> Option<bool> {
+        let hot = queue_depth >= self.cfg.queue_high
+            || (p99_us > 0.0 && p99_us >= self.cfg.p99_high_us);
+        let transition = self.state.lock().unwrap().observe(hot, now);
+        match transition {
+            Some(true) => {
+                self.degraded.store(true, Ordering::SeqCst);
+                self.entries.fetch_add(1, Ordering::SeqCst);
+            }
+            Some(false) => {
+                self.degraded.store(false, Ordering::SeqCst);
+                self.exits.fetch_add(1, Ordering::SeqCst);
+            }
+            None => {}
+        }
+        transition
+    }
+
+    /// Apply a [`DegradeController::tick`] transition to the deployment's
+    /// batcher: degraded → fallback engine, recovered → primary.
+    pub fn apply(&self, batcher: &Batcher, entered: bool) {
+        let engine =
+            if entered { self.fallback.clone() } else { self.primary.clone() };
+        // Shapes were validated at enable time; a failure here means the
+        // batcher is already draining, which makes the swap moot.
+        let _ = batcher.swap_engine(engine);
+    }
+
+    /// Degradation state for `stats --json` and the `health` probe.
+    pub fn to_json(&self) -> Json {
+        Json::from_pairs(vec![
+            ("degraded", Json::Bool(self.degraded())),
+            ("entries", Json::Num(self.entries() as f64)),
+            ("exits", Json::Num(self.exits() as f64)),
+            ("primary", Json::Str(self.primary_name.clone())),
+            ("fallback", Json::Str(self.fallback_name.clone())),
+            ("fallback_agreement", Json::Num(self.fallback_agreement)),
+        ])
+    }
+
+    /// One-line human status for `Server::report`.
+    pub fn status(&self) -> String {
+        format!(
+            "{} (fallback {} agree={:.1}% entries={} exits={})",
+            if self.degraded() { "DEGRADED" } else { "primary" },
+            self.fallback_name,
+            100.0 * self.fallback_agreement,
+            self.entries(),
+            self.exits(),
+        )
+    }
+
+    fn take_ticker(&self) -> Option<std::thread::JoinHandle<()>> {
+        self.ticker.lock().unwrap().take()
+    }
+}
+
+impl Drop for DegradeController {
+    fn drop(&mut self) {
+        self.stop.store(true, Ordering::SeqCst);
+        if let Some(h) = self.take_ticker() {
+            // The ticker holds only a Weak deployment handle, but its
+            // transient upgrade can make it the thread that drops the last
+            // `Arc<Deployment>` — and with it this controller. Joining
+            // *ourselves* would deadlock; the thread is already past its
+            // loop when that happens, so skipping the join is sound.
+            if h.thread().id() != std::thread::current().id() {
+                let _ = h.join();
+            }
+        }
+    }
+}
+
+/// Spawn the poll ticker for an enabled deployment. The thread samples the
+/// pool queue depth under `label` and the windowed latency p99, feeds them
+/// through the controller, and applies transitions to the batcher. It
+/// holds only a [`Weak`] deployment handle, so it can never keep a
+/// torn-down deployment (or its pool registration) alive — it exits on the
+/// first failed upgrade, or when the controller's stop flag is set.
+pub fn spawn_ticker(
+    ctrl: &Arc<DegradeController>,
+    dep: &Arc<Deployment>,
+    pool: &Arc<SharedPool>,
+    label: &str,
+) {
+    let weak: Weak<Deployment> = Arc::downgrade(dep);
+    let ctrl2 = ctrl.clone();
+    let pool = pool.clone();
+    let label = label.to_string();
+    let poll = ctrl.cfg.poll_every;
+    let stop = ctrl.stop.clone();
+    let h = std::thread::Builder::new()
+        .name("degrade-ticker".into())
+        .spawn(move || {
+            let mut prev: Vec<u64> = Vec::new();
+            loop {
+                std::thread::sleep(poll);
+                if stop.load(Ordering::SeqCst) {
+                    return;
+                }
+                let Some(dep) = weak.upgrade() else { return };
+                let cur = dep.batcher.metrics.latency_buckets();
+                let p99 = if prev.is_empty() {
+                    0.0
+                } else {
+                    Histogram::quantile_between(&prev, &cur, 0.99)
+                };
+                prev = cur;
+                let depth = pool
+                    .stats()
+                    .deployments
+                    .iter()
+                    .find(|d| d.label == label)
+                    .map_or(0, |d| d.queue_depth);
+                if let Some(entered) = ctrl2.tick(depth, p99, Instant::now()) {
+                    ctrl2.apply(&dep.batcher, entered);
+                }
+            }
+        })
+        .expect("spawn degrade ticker");
+    *ctrl.ticker.lock().unwrap() = Some(h);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cfg() -> DegradeConfig {
+        DegradeConfig {
+            queue_high: 100,
+            p99_high_us: 10_000.0,
+            enter_after: 2,
+            exit_after: 3,
+            min_dwell: Duration::from_millis(500),
+            poll_every: Duration::from_millis(20),
+        }
+    }
+
+    /// Deterministic replay of the hysteresis contract: enter after
+    /// `enter_after` consecutive hot polls (not before, and a cool poll
+    /// resets the streak), exit only after `exit_after` consecutive cool
+    /// polls *and* the dwell.
+    #[test]
+    fn hysteresis_enters_fast_and_exits_slow() {
+        let t0 = Instant::now();
+        let mut h = Hysteresis::new(cfg());
+        assert_eq!(h.observe(true, t0), None, "one hot poll is not overload");
+        assert_eq!(h.observe(false, t0), None, "cool poll resets the streak");
+        assert_eq!(h.observe(true, t0), None);
+        assert_eq!(h.observe(true, t0), Some(true), "second consecutive hot enters");
+        assert!(h.degraded());
+        // Cool polls immediately after entry: streak satisfied at the third
+        // poll, but the dwell blocks the exit…
+        let t1 = t0 + Duration::from_millis(100);
+        for _ in 0..5 {
+            assert_eq!(h.observe(false, t1), None, "dwell must block early exit");
+        }
+        // …past the dwell, the cool streak must be rebuilt consecutively: a
+        // hot poll resets it.
+        let t2 = t0 + Duration::from_secs(1);
+        assert_eq!(h.observe(false, t2), Some(false), "streak + dwell satisfied");
+        assert!(!h.degraded());
+    }
+
+    #[test]
+    fn hysteresis_hot_poll_resets_cool_streak() {
+        let t0 = Instant::now();
+        let mut h = Hysteresis::new(cfg());
+        h.observe(true, t0);
+        assert_eq!(h.observe(true, t0), Some(true));
+        let late = t0 + Duration::from_secs(2);
+        assert_eq!(h.observe(false, late), None);
+        assert_eq!(h.observe(false, late), None);
+        assert_eq!(h.observe(true, late), None, "hot poll mid-recovery");
+        assert_eq!(h.observe(false, late), None, "cool streak restarted at 1");
+        assert_eq!(h.observe(false, late), None);
+        assert_eq!(h.observe(false, late), Some(false), "3 consecutive cools");
+    }
+
+    /// The controller's published state tracks tick transitions exactly:
+    /// queue depth and windowed p99 are each sufficient to run hot, an
+    /// empty p99 window is never hot, and entries/exits count transitions
+    /// (not hot polls).
+    #[test]
+    fn controller_tick_publishes_transitions() {
+        let ds = crate::data::DatasetId::Magic.generate(200, 11);
+        let f = crate::forest::builder::train_random_forest(
+            &ds.x,
+            &ds.labels,
+            ds.d,
+            ds.n_classes,
+            crate::forest::builder::RfParams {
+                n_trees: 4,
+                tree: crate::forest::builder::TreeParams {
+                    max_leaves: 8,
+                    min_samples_leaf: 2,
+                    mtry: 0,
+                },
+                ..Default::default()
+            },
+        );
+        let eng: Arc<dyn Engine> = Arc::from(
+            crate::engine::build(
+                crate::engine::EngineKind::Rs,
+                crate::engine::Precision::F32,
+                &f,
+                None,
+            )
+            .unwrap(),
+        );
+        let c = DegradeController::new(eng.clone(), eng, "fb".into(), 1.0, cfg());
+        let t0 = Instant::now();
+        assert!(!c.degraded());
+        // p99 alone (window non-empty) runs hot; zero-window p99 does not.
+        assert_eq!(c.tick(0, 0.0, t0), None);
+        assert_eq!(c.tick(0, 20_000.0, t0), None);
+        assert_eq!(c.tick(0, 20_000.0, t0), Some(true));
+        assert!(c.degraded());
+        assert_eq!((c.entries(), c.exits()), (1, 0));
+        // Staying hot produces no further transitions.
+        assert_eq!(c.tick(500, 0.0, t0), None);
+        assert_eq!((c.entries(), c.exits()), (1, 0));
+        let late = t0 + Duration::from_secs(1);
+        assert_eq!(c.tick(0, 0.0, late), None);
+        assert_eq!(c.tick(0, 0.0, late), None);
+        assert_eq!(c.tick(0, 0.0, late), Some(false));
+        assert!(!c.degraded());
+        assert_eq!((c.entries(), c.exits()), (1, 1));
+        let j = c.to_json();
+        assert_eq!(j.get("degraded").and_then(|v| v.as_bool()), Some(false));
+        assert_eq!(j.get("entries").and_then(|v| v.as_f64()), Some(1.0));
+        assert_eq!(j.get("fallback").and_then(|v| v.as_str()), Some("fb"));
+        assert!(c.status().contains("fallback fb"));
+    }
+}

@@ -22,6 +22,10 @@ pub struct Metrics {
     /// Requests answered `ServeError::Shutdown` by the drain instead of
     /// being executed (accepted but never flushed before teardown).
     pub shed_shutdown: AtomicU64,
+    /// Requests answered `ServeError::DeadlineExceeded`: their client
+    /// deadline had already passed at admission or at flush time, so the
+    /// pool never spent SIMD time on them. Not counted in `completed`.
+    pub deadline_exceeded: AtomicU64,
     /// Requests answered `ServeError::Internal` because a shard task died
     /// mid-batch (engine panic). Not counted in `completed`.
     pub failed: AtomicU64,
@@ -64,6 +68,14 @@ impl Metrics {
         self.batch_us.summary()
     }
 
+    /// Bucket snapshot of the latency histogram. Successive snapshots give
+    /// a **windowed** p99 via [`Histogram::quantile_between`] — the degrade
+    /// controller's overload signal (a cumulative p99 barely moves under a
+    /// fresh burst after hours of healthy traffic).
+    pub fn latency_buckets(&self) -> Vec<u64> {
+        self.latencies_us.snapshot()
+    }
+
     /// Mean instances per executed batch.
     pub fn mean_batch_size(&self) -> f64 {
         let b = self.batches.load(Ordering::Relaxed);
@@ -83,6 +95,7 @@ impl Metrics {
             ("completed", self.completed.load(Ordering::Relaxed)),
             ("rejected", self.rejected.load(Ordering::Relaxed)),
             ("shed_shutdown", self.shed_shutdown.load(Ordering::Relaxed)),
+            ("deadline_exceeded", self.deadline_exceeded.load(Ordering::Relaxed)),
             ("failed", self.failed.load(Ordering::Relaxed)),
             ("reaper_threads", self.reaper_threads.load(Ordering::Relaxed)),
             ("batches", self.batches.load(Ordering::Relaxed)),
@@ -107,11 +120,12 @@ impl Metrics {
     pub fn report(&self) -> String {
         let lat = self.latency_summary();
         format!(
-            "req={} done={} rej={} shed={} failed={} reapers={} batches={} mean_batch={:.1} lat_us(p50={:.0} p95={:.0} p99={:.0} max={:.0})",
+            "req={} done={} rej={} shed={} ddl={} failed={} reapers={} batches={} mean_batch={:.1} lat_us(p50={:.0} p95={:.0} p99={:.0} max={:.0})",
             self.requests.load(Ordering::Relaxed),
             self.completed.load(Ordering::Relaxed),
             self.rejected.load(Ordering::Relaxed),
             self.shed_shutdown.load(Ordering::Relaxed),
+            self.deadline_exceeded.load(Ordering::Relaxed),
             self.failed.load(Ordering::Relaxed),
             self.reaper_threads.load(Ordering::Relaxed),
             self.batches.load(Ordering::Relaxed),

@@ -31,22 +31,24 @@
 //!   quantized tier that degrades served predictions.
 
 pub mod batcher;
+pub mod degrade;
 pub mod metrics;
 pub mod net;
 pub mod selector;
 
 pub use batcher::{BatchConfig, Batcher, ServeError};
+pub use degrade::{DegradeConfig, DegradeController};
 pub use metrics::Metrics;
-pub use net::{NetClient, NetServer};
+pub use net::{NetClient, NetConfig, NetServer};
 pub use selector::{
-    select_engine, select_engine_early_exit, select_engine_tier, select_engine_with,
-    thread_budgets, Candidate, Selection,
+    build_candidate, select_engine, select_engine_early_exit, select_engine_tier,
+    select_engine_with, thread_budgets, Candidate, Selection,
 };
 
 use std::collections::HashMap;
-use std::sync::{Arc, RwLock};
+use std::sync::{Arc, Mutex, RwLock};
 
-use crate::engine::{build, build_i16_per_tree, Engine, EngineKind, Precision};
+use crate::engine::{build, build_i16_per_tree, EarlyExitMode, Engine, EngineKind, Precision};
 use crate::exec::{PoolConfig, SharedPool};
 use crate::forest::{Forest, Task};
 use crate::util::Json;
@@ -58,6 +60,15 @@ pub struct Deployment {
     pub n_features: usize,
     pub n_classes: usize,
     pub task: Task,
+    /// Overload degradation, when enabled ([`Server::enable_degrade`]).
+    degrade: Mutex<Option<Arc<DegradeController>>>,
+}
+
+impl Deployment {
+    /// The deployment's degrade controller, if degradation is enabled.
+    pub fn degrade(&self) -> Option<Arc<DegradeController>> {
+        self.degrade.lock().unwrap().clone()
+    }
 }
 
 /// The serving coordinator: model registry + per-model batchers, all fused
@@ -151,6 +162,7 @@ impl Server {
             n_classes: engine.n_classes(),
             task: forest.task,
             batcher: Batcher::start_shared(engine, &self.pool, name, config),
+            degrade: Mutex::new(None),
         };
         // The write-guard temporary drops at the end of the `let`, so a
         // replaced deployment's teardown (batcher drain) runs *after* the
@@ -195,6 +207,85 @@ impl Server {
         Ok(sel)
     }
 
+    /// Enable overload-triggered graceful degradation for a deployed model
+    /// (`serve --degrade`). Ranks fallback candidates with the approx
+    /// early-exit dimension opened (the one cheap axis the primary
+    /// deployment didn't use), and picks the **fastest serial candidate in
+    /// the ≥ 99%-agreement set that measured cheaper than the primary** —
+    /// degradation must buy latency without selling accuracy. Fails if no
+    /// such candidate exists (the primary is already the floor). Spawns the
+    /// poll ticker; returns the fallback's candidate name.
+    pub fn enable_degrade(
+        &self,
+        name: &str,
+        forest: &Forest,
+        calibration: &[f32],
+        cfg: DegradeConfig,
+    ) -> anyhow::Result<String> {
+        let dep = self
+            .model(name)
+            .ok_or_else(|| anyhow::anyhow!("unknown model '{name}'"))?;
+        let primary = dep
+            .batcher
+            .engine()
+            .ok_or_else(|| anyhow::anyhow!("deployment '{name}' is draining"))?;
+        let sel = selector::select_engine_early_exit(
+            forest,
+            calibration,
+            None,
+            3,
+            &[1],
+            None,
+            EarlyExitMode::Approx,
+        )?;
+        // The primary's measured cost, by its serial engine name (threaded
+        // deployments wrap a serial engine; the budget lives in the pool
+        // registration, not the engine). Unknown primaries (e.g. a tensor
+        // engine the selector doesn't enumerate) rank as infinitely
+        // expensive, so any agreeing candidate qualifies.
+        let primary_cost = sel
+            .candidates
+            .iter()
+            .find(|c| c.name == primary.name())
+            .map_or(f64::INFINITY, |c| c.host_us_per_instance);
+        let fallback_c = sel
+            .agreement_set()
+            .into_iter()
+            .find(|c| {
+                c.threads == 1
+                    && c.name != primary.name()
+                    && c.host_us_per_instance < primary_cost
+            })
+            .ok_or_else(|| {
+                anyhow::anyhow!(
+                    "no ≥99%-agreement fallback cheaper than '{}' for model '{name}'",
+                    primary.name()
+                )
+            })?
+            .clone();
+        let fallback =
+            build_candidate(&fallback_c, forest, calibration, EarlyExitMode::Approx)?;
+        anyhow::ensure!(
+            fallback.n_features() == dep.n_features
+                && fallback.n_classes() == dep.n_classes,
+            "fallback '{}' shape mismatch",
+            fallback_c.name
+        );
+        let ctrl = Arc::new(DegradeController::new(
+            primary,
+            fallback,
+            fallback_c.name.clone(),
+            fallback_c.agreement,
+            cfg,
+        ));
+        degrade::spawn_ticker(&ctrl, &dep, &self.pool, name);
+        // Replacing an existing controller drops it (its ticker joins)
+        // outside any registry lock.
+        let replaced = std::mem::replace(&mut *dep.degrade.lock().unwrap(), Some(ctrl));
+        drop(replaced);
+        Ok(fallback_c.name)
+    }
+
     /// Look up a deployment.
     pub fn model(&self, name: &str) -> Option<Arc<Deployment>> {
         self.models.read().unwrap().get(name).cloned()
@@ -220,6 +311,24 @@ impl Server {
             .model(name)
             .ok_or_else(|| ServeError::BadInput(format!("unknown model '{name}'")))?;
         dep.batcher.predict(x)
+    }
+
+    /// [`Server::predict`] with an optional client deadline: if the
+    /// deadline passes before the request reaches an engine (at admission
+    /// or while queued), the batcher sheds it with
+    /// [`ServeError::DeadlineExceeded`] instead of burning pool lanes on a
+    /// reply nobody is waiting for.
+    pub fn predict_deadline(
+        &self,
+        name: &str,
+        x: Vec<f32>,
+        deadline: Option<std::time::Instant>,
+    ) -> Result<Vec<f32>, ServeError> {
+        let dep = self
+            .model(name)
+            .ok_or_else(|| ServeError::BadInput(format!("unknown model '{name}'")))?;
+        let rx = dep.batcher.submit_with_deadline(x, deadline)?;
+        rx.recv().map_err(|_| ServeError::Shutdown)?
     }
 
     /// Classification helper: argmax over the score vector.
@@ -257,6 +366,9 @@ impl Server {
                     dep.engine_name,
                     dep.batcher.metrics.report()
                 ));
+                if let Some(ctrl) = dep.degrade() {
+                    out.push_str(&format!("{name} degrade: {}\n", ctrl.status()));
+                }
             }
         }
         out
@@ -285,6 +397,10 @@ impl Server {
             if let Some(dep) = self.model(&name) {
                 let mut m = dep.batcher.metrics.to_json();
                 m.set("engine", Json::Str(dep.engine_name.clone()));
+                m.set(
+                    "degrade",
+                    dep.degrade().map_or(Json::Null, |c| c.to_json()),
+                );
                 m.set("replans", Json::Num(dep.batcher.replans() as f64));
                 m.set(
                     "class_rates",
@@ -299,6 +415,58 @@ impl Server {
                 models.set(&name, m);
             }
         }
+        j.set("models", models);
+        j
+    }
+
+    /// The `{"cmd":"health"}` probe payload: per-model pool queue depth,
+    /// the engine currently serving (the fallback while degraded), and
+    /// degradation state — the cheap snapshot a load balancer polls, next
+    /// to the full `stats_json`. `status` is `"degraded"` if any model is
+    /// degraded, else `"ok"`.
+    pub fn health_json(&self) -> Json {
+        let pool_stats = self.pool.stats();
+        let mut degraded_any = false;
+        let mut models = Json::obj();
+        for name in self.list() {
+            if let Some(dep) = self.model(&name) {
+                let queue_depth = pool_stats
+                    .deployments
+                    .iter()
+                    .find(|d| d.label == name)
+                    .map_or(0, |d| d.queue_depth);
+                let mut m = Json::obj();
+                m.set(
+                    "engine",
+                    Json::Str(
+                        dep.batcher
+                            .engine()
+                            .map_or_else(|| dep.engine_name.clone(), |e| e.name()),
+                    ),
+                );
+                m.set("queue_depth", Json::Num(queue_depth as f64));
+                match dep.degrade() {
+                    Some(ctrl) => {
+                        degraded_any |= ctrl.degraded();
+                        m.set("degrade", ctrl.to_json());
+                    }
+                    None => m.set("degrade", Json::Null),
+                }
+                models.set(&name, m);
+            }
+        }
+        let mut j = Json::obj();
+        j.set(
+            "status",
+            Json::Str(if degraded_any { "degraded".into() } else { "ok".into() }),
+        );
+        j.set(
+            "pool",
+            Json::from_pairs(vec![
+                ("threads", Json::Num(self.pool_threads() as f64)),
+                ("deployments", Json::Num(self.pool_deployments() as f64)),
+            ]),
+        );
         j.set("models", models);
         j
     }
@@ -452,6 +620,91 @@ mod tests {
         assert_eq!(m.get("completed").and_then(|v| v.as_usize()), Some(8));
         assert!(m.get("class_rates").and_then(|v| v.as_arr()).is_some());
         assert!(m.get("latency_us").and_then(|l| l.get("p99")).is_some());
+    }
+
+    /// End-to-end degradation: with a zero queue threshold every poll runs
+    /// hot, so the ticker flips the deployment onto the fallback engine —
+    /// replies become bit-exact to the *fallback's* serial predictions,
+    /// health/stats report the degraded state, and a huge `min_dwell` keeps
+    /// it latched for the test's lifetime.
+    #[test]
+    fn enable_degrade_swaps_to_fallback_under_load() {
+        let (f, ds) = forest();
+        let server = Server::new();
+        // Deploy the slowest exact engine so a cheaper ≥99% fallback is
+        // guaranteed to exist in the candidate table.
+        server
+            .deploy("m", &f, EngineKind::Naive, Precision::F32, BatchConfig::default())
+            .unwrap();
+        let cal = &ds.x[..ds.d * 96];
+        let cfg = DegradeConfig {
+            queue_high: 0, // every poll is hot
+            enter_after: 1,
+            min_dwell: std::time::Duration::from_secs(3600),
+            poll_every: std::time::Duration::from_millis(5),
+            ..DegradeConfig::default()
+        };
+        let fallback_name = server.enable_degrade("m", &f, cal, cfg).unwrap();
+        assert_ne!(fallback_name, "NA");
+        let dep = server.model("m").unwrap();
+        let ctrl = dep.degrade().expect("controller registered");
+        assert_eq!(ctrl.fallback_name(), fallback_name);
+        assert!(ctrl.fallback_agreement() >= 0.99);
+        let deadline = std::time::Instant::now() + std::time::Duration::from_secs(10);
+        while !ctrl.degraded() && std::time::Instant::now() < deadline {
+            std::thread::sleep(std::time::Duration::from_millis(5));
+        }
+        assert!(ctrl.degraded(), "ticker never entered degraded mode");
+        assert!(ctrl.entries() >= 1);
+        // Served replies now come from the fallback engine, bit-exactly.
+        let deadline = std::time::Instant::now() + std::time::Duration::from_secs(10);
+        while server.model("m").unwrap().batcher.engine().unwrap().name() == "NA"
+            && std::time::Instant::now() < deadline
+        {
+            std::thread::sleep(std::time::Duration::from_millis(5));
+        }
+        let live = dep.batcher.engine().unwrap();
+        assert_ne!(live.name(), "NA", "engine never swapped");
+        let want = live.predict(ds.row(5));
+        let got = server.predict("m", ds.row(5).to_vec()).unwrap();
+        assert_eq!(got, want, "reply not bit-exact to the fallback engine");
+        // Degradation state is visible in health, stats and the report.
+        let h = server.health_json();
+        assert_eq!(h.get("status").and_then(|s| s.as_str()), Some("degraded"));
+        let hm = h.get("models").and_then(|m| m.get("m")).unwrap();
+        assert!(hm.get("queue_depth").and_then(|v| v.as_f64()).is_some());
+        assert_eq!(
+            hm.get("degrade").and_then(|d| d.get("degraded")).and_then(|v| v.as_bool()),
+            Some(true)
+        );
+        let sm = server.stats_json();
+        let sd = sm.get("models").and_then(|m| m.get("m")).and_then(|m| m.get("degrade"));
+        assert_eq!(
+            sd.and_then(|d| d.get("fallback")).and_then(|v| v.as_str()),
+            Some(fallback_name.as_str())
+        );
+        assert!(server.report().contains("DEGRADED"), "{}", server.report());
+    }
+
+    /// Without degradation enabled, health reports ok with a null degrade
+    /// section; enabling on an unknown model fails.
+    #[test]
+    fn health_json_without_degrade() {
+        let (f, ds) = forest();
+        let server = Server::new();
+        server
+            .deploy("m", &f, EngineKind::Rs, Precision::F32, BatchConfig::default())
+            .unwrap();
+        server.predict("m", ds.row(0).to_vec()).unwrap();
+        let h = server.health_json();
+        assert_eq!(h.get("status").and_then(|s| s.as_str()), Some("ok"));
+        let hm = h.get("models").and_then(|m| m.get("m")).unwrap();
+        assert!(matches!(hm.get("degrade"), Some(Json::Null)));
+        assert_eq!(hm.get("engine").and_then(|e| e.as_str()), Some("RS"));
+        assert!(h.get("pool").and_then(|p| p.get("threads")).is_some());
+        assert!(server
+            .enable_degrade("nope", &f, &ds.x[..ds.d * 32], DegradeConfig::default())
+            .is_err());
     }
 
     #[test]

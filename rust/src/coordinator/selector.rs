@@ -67,6 +67,14 @@ impl Selection {
             .unwrap_or_else(|| self.best())
     }
 
+    /// Every candidate clearing the ≥ 99% argmax-agreement gate, in rank
+    /// order (fastest first). This is the pool the degrade controller may
+    /// pick an overload fallback from: degradation trades latency, never
+    /// served accuracy ([`crate::coordinator::degrade`]).
+    pub fn agreement_set(&self) -> Vec<&Candidate> {
+        self.candidates.iter().filter(|c| c.agreement >= 0.99).collect()
+    }
+
     pub fn report(&self) -> String {
         let mut out = String::new();
         let target = self.device.as_deref().unwrap_or("host");
@@ -386,6 +394,32 @@ pub fn select_engine_early_exit(
     Ok(sel)
 }
 
+/// Rebuild the concrete engine a [`Candidate`] was measured as — the same
+/// dispatch `deploy_auto` uses: per-tree and early-exit candidates need
+/// their special constructors, and threaded candidates wrap the serial
+/// engine in a row-sharded [`ParallelEngine`] (bit-exact with serial).
+/// `mode` only matters for early-exit candidates (the mode the selection
+/// ran with); `calibration` likewise (exit-stage ordering).
+pub fn build_candidate(
+    c: &Candidate,
+    forest: &Forest,
+    calibration: &[f32],
+    mode: EarlyExitMode,
+) -> anyhow::Result<Arc<dyn Engine>> {
+    let serial: Arc<dyn Engine> = if c.early_exit {
+        Arc::new(build_early_exit(c.kind, c.precision, forest, calibration, mode)?)
+    } else if c.per_tree {
+        Arc::from(crate::engine::build_i16_per_tree(c.kind, forest)?)
+    } else {
+        Arc::from(build(c.kind, c.precision, forest, None)?)
+    };
+    Ok(if c.threads <= 1 {
+        serial
+    } else {
+        Arc::new(ParallelEngine::wrap(serial, c.threads))
+    })
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -590,6 +624,66 @@ mod tests {
             .iter()
             .any(|c| c.early_exit && c.name.starts_with("ea")));
         assert!(approx.recommended().agreement >= 0.99 || approx.candidates.iter().all(|c| c.agreement < 0.99));
+    }
+
+    /// `agreement_set` is the rank-ordered ≥99% pool, and `build_candidate`
+    /// reconstructs an engine that reproduces the candidate's measured
+    /// scores (bit-exact for plain and threaded candidates alike).
+    #[test]
+    fn agreement_set_and_build_candidate_round_trip() {
+        let ds = DatasetId::Magic.generate(400, 27);
+        let f = train_random_forest(
+            &ds.x,
+            &ds.labels,
+            ds.d,
+            ds.n_classes,
+            RfParams {
+                n_trees: 8,
+                tree: TreeParams { max_leaves: 16, min_samples_leaf: 2, mtry: 0 },
+                ..Default::default()
+            },
+        );
+        let cal = &ds.x[..ds.d * 64];
+        let sel = super::select_engine_early_exit(
+            &f,
+            cal,
+            None,
+            1,
+            &[1, 2],
+            None,
+            EarlyExitMode::Exact,
+        )
+        .unwrap();
+        let set = sel.agreement_set();
+        assert!(!set.is_empty());
+        assert!(set.iter().all(|c| c.agreement >= 0.99));
+        assert_eq!(set[0].name, sel.recommended().name);
+        // Rebuild a plain, a threaded, a per-tree and an early-exit
+        // candidate; each must score the calibration batch identically to
+        // a fresh serial build of the same variant (the selector's own
+        // bit-exactness contract for threaded wrappers).
+        for c in [
+            sel.candidates.iter().find(|c| !c.early_exit && !c.per_tree && c.threads == 1),
+            sel.candidates.iter().find(|c| c.threads == 2),
+            sel.candidates.iter().find(|c| c.per_tree),
+            sel.candidates.iter().find(|c| c.early_exit),
+        ]
+        .into_iter()
+        .flatten()
+        {
+            let eng = super::build_candidate(c, &f, cal, EarlyExitMode::Exact).unwrap();
+            assert_eq!(eng.n_features(), ds.d, "{}", c.name);
+            let mut out = vec![0f32; 64 * ds.n_classes];
+            eng.predict_batch(cal, &mut out);
+            let got = Forest::argmax(&out, ds.n_classes);
+            let expect = Forest::argmax(&f.predict_batch(cal), ds.n_classes);
+            let same = got.iter().zip(&expect).filter(|(a, b)| a == b).count();
+            assert!(
+                same as f64 / expect.len() as f64 >= c.agreement - 1e-9,
+                "{} rebuilt below its measured agreement",
+                c.name
+            );
+        }
     }
 
     #[test]

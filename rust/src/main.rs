@@ -78,7 +78,7 @@ USAGE: arbors <command> [flags]
            row-sharded candidates like RS×4t; the qVQS+pt candidate ranks
            i16 per-tree leaf scales; --early-exit adds ee/ea staged-scoring
            candidates under the same ≥99% agreement gate)
-  bench    --exp <table2|table3|table4|table5|fig1|fig2|ablation|tensor|scaling|int8|flint|early_exit|serving|adaptive|smoke|obs|engine_micro>
+  bench    --exp <table2|table3|table4|table5|fig1|fig2|ablation|tensor|scaling|int8|flint|early_exit|serving|adaptive|overload|smoke|obs|engine_micro>
            [--threads N] [--precision P] [--pin] [--smoke] [--matrix] | --gate
            (scale via ARBORS_SCALE=quick|default|full;
            int8 -> results/int8_tiers.json; flint compares f32 vs FLInt
@@ -91,6 +91,9 @@ USAGE: arbors <command> [flags]
            runs the static/adaptive x pinned/unpinned x claim-1/claim-k grid
            on a synthetic big.LITTLE topology -> results/adaptive.json,
            --smoke shrinks it for CI; --pin applies to scaling;
+           overload sweeps offered-load multiples with degradation off vs
+           on (p50/p99/shed rate/argmax agreement) -> results/overload.json,
+           --smoke shrinks it and appends the magic/ovl* gate series;
            smoke appends the perf-history grid to dev/bench/data.js, path
            overridable via ARBORS_BENCH_DATA, --matrix widens the grid to
            the full named version matrix (pr1-f32 .. pr8-flint); obs
@@ -102,11 +105,15 @@ USAGE: arbors <command> [flags]
   serve    --dataset <name> [--engine E] [--precision P | --quant]
            [--early-exit off|exact|approx] [--requests N]
            [--threads N] [--budget B] [--pin] [--listen 127.0.0.1:7878]
+           [--degrade]
            (--threads sizes the server-wide shared exec pool, default = host
            cores; --budget is this model's worker entitlement on it,
            default = pool size; --pin pins pool workers to their cluster;
            JSON-over-TCP via coordinator::net; live introspection via
-           {\"cmd\":\"stats\",\"mode\":\"json\"} and {\"cmd\":\"stats\",\"mode\":\"trace\"})
+           {\"cmd\":\"stats\",\"mode\":\"json\"}, {\"cmd\":\"stats\",\"mode\":\"trace\"}
+           and {\"cmd\":\"health\"}; --degrade arms overload-triggered
+           graceful degradation onto a selector-ranked cheaper fallback
+           from the >=99%-agreement set)
   trace    [--out trace.json] [--requests N] [--threads N]
            (enables span tracing, drives an in-process serving workload,
            writes chrome-tracing JSON for chrome://tracing / Perfetto)
@@ -371,7 +378,11 @@ fn cmd_bench(args: &Args) -> Result<()> {
     // only scaling precision-filtered and pinnable, only adaptive
     // smokable); leaving the flags unconsumed elsewhere makes `finish()`
     // reject them loudly instead of silently ignoring them.
-    let threads = if exp == "scaling" || exp == "serving" || exp == "adaptive" || exp == "obs"
+    let threads = if exp == "scaling"
+        || exp == "serving"
+        || exp == "adaptive"
+        || exp == "obs"
+        || exp == "overload"
     {
         args.usize_or("threads", 4)?
     } else {
@@ -379,7 +390,8 @@ fn cmd_bench(args: &Args) -> Result<()> {
     };
     let precision = if exp == "scaling" { precision_flag(args)? } else { None };
     let pin = if exp == "scaling" { args.switch("pin") } else { false };
-    let smoke = if exp == "adaptive" || exp == "flint" || exp == "early_exit" {
+    let smoke = if exp == "adaptive" || exp == "flint" || exp == "early_exit" || exp == "overload"
+    {
         args.switch("smoke")
     } else {
         false
@@ -406,6 +418,7 @@ fn cmd_bench(args: &Args) -> Result<()> {
         "early_exit" => experiments::early_exit(&s, smoke, ee_only),
         "serving" => experiments::serving(&s, threads),
         "adaptive" => experiments::adaptive(&s, threads, smoke),
+        "overload" => experiments::overload(&s, threads, smoke),
         "smoke" => {
             experiments::smoke(&s, &arbors::obs::bench_data::default_path(), matrix)?
         }
@@ -437,6 +450,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let budget = args.usize_opt("budget")?.unwrap_or(pool_size).max(1);
     let pin = args.switch("pin");
     let listen = args.get("listen").map(str::to_string);
+    let degrade = args.switch("degrade");
     args.finish()?;
     let config = BatchConfig { exec_threads: budget, ..BatchConfig::default() };
     // `--pin` anchors the shared pool's workers to their topology cluster
@@ -459,6 +473,16 @@ fn cmd_serve(args: &Args) -> Result<()> {
             let ee = build_early_exit(kind, precision, &forest, cal, ee_mode)?;
             server.deploy_engine("model", &forest, std::sync::Arc::new(ee), config)?;
         }
+        if degrade {
+            let cal = &train.x[..train.d * train.n.min(256)];
+            let fb = server.enable_degrade(
+                "model",
+                &forest,
+                cal,
+                arbors::coordinator::DegradeConfig::default(),
+            )?;
+            println!("degradation armed: overload fallback is {fb}");
+        }
         let net = arbors::coordinator::NetServer::start(server.clone(), &addr)?;
         println!(
             "serving model 'model' on {} — protocol: {{\"model\": \"model\", \"x\": [...]}}",
@@ -480,6 +504,16 @@ fn cmd_serve(args: &Args) -> Result<()> {
         let cal = &train.x[..train.d * train.n.min(256)];
         let ee = build_early_exit(kind, precision, &forest, cal, ee_mode)?;
         server.deploy_engine("model", &forest, std::sync::Arc::new(ee), config)?;
+    }
+    if degrade {
+        let cal = &train.x[..train.d * train.n.min(256)];
+        let fb = server.enable_degrade(
+            "model",
+            &forest,
+            cal,
+            arbors::coordinator::DegradeConfig::default(),
+        )?;
+        println!("degradation armed: overload fallback is {fb}");
     }
     println!(
         "serving {n_requests} requests through the fused batcher \

@@ -170,6 +170,40 @@ impl Histogram {
         v.clamp(self.min(), self.max())
     }
 
+    /// Bucket-count snapshot (torn-but-valid under concurrent recording,
+    /// like [`Histogram::quantile`]): successive snapshots let a caller
+    /// compute **windowed** quantiles via [`Histogram::quantile_between`].
+    /// The lifetime quantiles are cumulative — after hours of traffic a
+    /// burst barely moves them — so overload detection (the degrade
+    /// controller, DESIGN.md §12) needs the quantile of *recent* samples.
+    pub fn snapshot(&self) -> Vec<u64> {
+        // relaxed: bucket counters are independent statistics; a reader
+        // racing recorders gets a torn-but-valid snapshot by design.
+        self.buckets.iter().map(|b| b.load(Ordering::Relaxed)).collect()
+    }
+
+    /// Quantile `q ∈ [0,1]` of the observations recorded between two
+    /// [`Histogram::snapshot`]s (bucket-wise difference). Returns 0 for an
+    /// empty window. Values are bucket representatives (the usual
+    /// [`RELATIVE_ERROR`] contract) without the exact min/max clamp — the
+    /// window has no exact extrema of its own.
+    pub fn quantile_between(prev: &[u64], cur: &[u64], q: f64) -> f64 {
+        let n: u64 =
+            cur.iter().zip(prev).map(|(c, p)| c.saturating_sub(*p)).sum();
+        if n == 0 {
+            return 0.0;
+        }
+        let rank = ((q * n as f64).ceil() as u64).clamp(1, n);
+        let mut cum = 0u64;
+        for (i, (c, p)) in cur.iter().zip(prev).enumerate() {
+            cum += c.saturating_sub(*p);
+            if cum >= rank {
+                return Self::representative(i);
+            }
+        }
+        0.0
+    }
+
     /// Fold `other`'s observations into `self` (bucket-wise addition).
     pub fn merge(&self, other: &Histogram) {
         let c = other.count();
@@ -325,5 +359,34 @@ mod tests {
         assert_eq!(h.min(), 0.0);
         // Non-finite and negative values all landed in bucket 0.
         assert!(h.quantile(1.0) <= MIN_VALUE);
+    }
+
+    /// Windowed quantiles see only the samples recorded between snapshots —
+    /// the property the degrade controller's overload signal rests on
+    /// (cumulative p99 barely moves under a fresh burst; the window p99
+    /// must).
+    #[test]
+    fn quantile_between_isolates_the_window() {
+        let h = Histogram::new();
+        // A long healthy history at ~100.
+        for _ in 0..10_000 {
+            h.record(100.0);
+        }
+        let s0 = h.snapshot();
+        // A short burst at ~10_000: cumulative p99 stays at the old level,
+        // but the window is pure burst.
+        for _ in 0..100 {
+            h.record(10_000.0);
+        }
+        let s1 = h.snapshot();
+        let cum = h.quantile(0.99);
+        assert!(cum < 150.0, "cumulative p99 should stay near 100, got {cum}");
+        let win = Histogram::quantile_between(&s0, &s1, 0.99);
+        assert!(
+            (win / 10_000.0 - 1.0).abs() < 3.0 * RELATIVE_ERROR + 0.02,
+            "window p99 must see the burst, got {win}"
+        );
+        // Empty window → 0.
+        assert_eq!(Histogram::quantile_between(&s1, &s1, 0.99), 0.0);
     }
 }

@@ -1,0 +1,214 @@
+//! Deterministic fault injection for the serving stack (ISSUE 10).
+//!
+//! The chaos test (`rust/tests/chaos.rs`) drives the full
+//! net → batcher → pool path while these injectors misbehave on purpose:
+//!
+//! * [`PanicEngine`] — panics inside `predict_batch` on exactly the n-th
+//!   batch (the pool's catch-unwind path must convert it to
+//!   `ServeError::Internal`, not kill the server);
+//! * [`StallEngine`] — stalls the first n batches for a fixed duration
+//!   (long enough to push a drain past `give_back_after` or a deadline
+//!   past its budget — a wedged model, not a dead one);
+//! * [`disconnect_mid_request`] — sends a request and drops the socket
+//!   without reading the reply (the handler's write must fail quietly and
+//!   release its registry slot);
+//! * [`poisoned_rows`] / [`POISONED_LINES`] — malformed payloads at the
+//!   vector level (NaN/∞/wrong width) and the wire level (broken JSON,
+//!   wrong types), each of which must produce exactly one typed error
+//!   reply, never a hang or a crash.
+//!
+//! Everything here is deterministic — faults fire on counted calls, not
+//! timers or randomness — so a chaos-test failure replays.
+
+use std::io::Write;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+use std::time::Duration;
+
+use crate::engine::Engine;
+
+/// Wraps an engine and panics on exactly the `panic_on`-th call to
+/// `predict_batch` (1-based); every other call delegates. The panic fires
+/// once — batches after it succeed, so a test can assert the server
+/// *recovers*, not merely that it fails.
+pub struct PanicEngine {
+    inner: Arc<dyn Engine>,
+    panic_on: u64,
+    calls: AtomicU64,
+}
+
+impl PanicEngine {
+    pub fn new(inner: Arc<dyn Engine>, panic_on: u64) -> PanicEngine {
+        PanicEngine { inner, panic_on: panic_on.max(1), calls: AtomicU64::new(0) }
+    }
+
+    /// Batches attempted so far (including the one that panicked).
+    pub fn calls(&self) -> u64 {
+        self.calls.load(Ordering::SeqCst)
+    }
+}
+
+impl Engine for PanicEngine {
+    fn name(&self) -> String {
+        format!("panic@{}({})", self.panic_on, self.inner.name())
+    }
+    fn lanes(&self) -> usize {
+        self.inner.lanes()
+    }
+    fn n_features(&self) -> usize {
+        self.inner.n_features()
+    }
+    fn n_classes(&self) -> usize {
+        self.inner.n_classes()
+    }
+    fn predict_batch(&self, x: &[f32], out: &mut [f32]) {
+        let call = self.calls.fetch_add(1, Ordering::SeqCst) + 1;
+        if call == self.panic_on {
+            panic!("injected engine panic (batch {call})");
+        }
+        self.inner.predict_batch(x, out);
+    }
+}
+
+/// Wraps an engine and stalls the first `stall_batches` calls for `stall`
+/// each before delegating — a deterministically slow model. Results stay
+/// correct; only latency is injected.
+pub struct StallEngine {
+    inner: Arc<dyn Engine>,
+    stall: Duration,
+    stall_batches: u64,
+    calls: AtomicU64,
+}
+
+impl StallEngine {
+    pub fn new(inner: Arc<dyn Engine>, stall: Duration, stall_batches: u64) -> StallEngine {
+        StallEngine { inner, stall, stall_batches, calls: AtomicU64::new(0) }
+    }
+}
+
+impl Engine for StallEngine {
+    fn name(&self) -> String {
+        format!("stall({})", self.inner.name())
+    }
+    fn lanes(&self) -> usize {
+        self.inner.lanes()
+    }
+    fn n_features(&self) -> usize {
+        self.inner.n_features()
+    }
+    fn n_classes(&self) -> usize {
+        self.inner.n_classes()
+    }
+    fn predict_batch(&self, x: &[f32], out: &mut [f32]) {
+        let call = self.calls.fetch_add(1, Ordering::SeqCst) + 1;
+        if call <= self.stall_batches {
+            std::thread::sleep(self.stall);
+        }
+        self.inner.predict_batch(x, out);
+    }
+}
+
+/// Connect, send one request line, and drop the socket without reading
+/// the reply — a client that vanished mid-request. The server handler's
+/// reply write lands on a closed/closing socket; the handler must treat
+/// that as end-of-connection, not a crash.
+pub fn disconnect_mid_request(
+    addr: std::net::SocketAddr,
+    line: &str,
+) -> std::io::Result<()> {
+    let mut s = std::net::TcpStream::connect(addr)?;
+    s.set_nodelay(true)?;
+    s.write_all(line.as_bytes())?;
+    s.write_all(b"\n")?;
+    Ok(()) // drop closes the socket with the reply unread
+}
+
+/// Malformed feature vectors for a `d`-feature model, labeled for
+/// assertion messages. Wrong-width rows must be refused (`bad_input`);
+/// non-finite rows are width-correct and must produce a normal scored
+/// reply (engines are total over f32) — either way, exactly one reply.
+pub fn poisoned_rows(d: usize) -> Vec<(&'static str, Vec<f32>)> {
+    vec![
+        ("nan-row", vec![f32::NAN; d]),
+        ("pos-inf-row", vec![f32::INFINITY; d]),
+        ("neg-inf-row", vec![f32::NEG_INFINITY; d]),
+        ("empty-row", Vec::new()),
+        ("short-row", vec![0.5; d.saturating_sub(1).max(1)]),
+        ("long-row", vec![0.5; d + 3]),
+    ]
+}
+
+/// Malformed wire lines (model-independent). Each must get exactly one
+/// typed error reply on an otherwise healthy connection.
+pub const POISONED_LINES: &[&str] = &[
+    "not json at all",
+    "{\"model\": \"magic\", \"x\": ",
+    "{\"model\": 7, \"x\": [1]}",
+    "{\"model\": \"magic\", \"x\": \"strings\"}",
+    "{\"cmd\": \"no-such-cmd\"}",
+    "{}",
+];
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::DatasetId;
+    use crate::engine::{build, EngineKind, Precision};
+    use crate::forest::builder::{train_random_forest, RfParams, TreeParams};
+
+    fn small_engine() -> (Arc<dyn Engine>, crate::data::Dataset) {
+        let ds = DatasetId::Magic.generate(64, 0xFA17);
+        let f = train_random_forest(
+            &ds.x,
+            &ds.labels,
+            ds.d,
+            ds.n_classes,
+            RfParams {
+                n_trees: 4,
+                tree: TreeParams { max_leaves: 8, min_samples_leaf: 2, mtry: 0 },
+                ..Default::default()
+            },
+        );
+        let e: Arc<dyn Engine> =
+            Arc::from(build(EngineKind::Naive, Precision::F32, &f, None).unwrap());
+        (e, ds)
+    }
+
+    #[test]
+    fn panic_engine_fires_on_exactly_the_nth_batch() {
+        let (inner, ds) = small_engine();
+        let e = PanicEngine::new(inner.clone(), 2);
+        // Batch 1 delegates and matches the inner engine bit-for-bit.
+        let got = e.predict(ds.row(0));
+        assert_eq!(got, inner.predict(ds.row(0)));
+        // Batch 2 panics.
+        let caught = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            e.predict(ds.row(1));
+        }));
+        assert!(caught.is_err(), "batch 2 must panic");
+        // Batch 3 recovers.
+        assert_eq!(e.predict(ds.row(2)), inner.predict(ds.row(2)));
+        assert_eq!(e.calls(), 3);
+    }
+
+    #[test]
+    fn stall_engine_delays_then_recovers_with_exact_results() {
+        let (inner, ds) = small_engine();
+        let e = StallEngine::new(inner.clone(), Duration::from_millis(30), 1);
+        let t0 = std::time::Instant::now();
+        let got = e.predict(ds.row(0));
+        assert!(t0.elapsed() >= Duration::from_millis(30), "first batch must stall");
+        assert_eq!(got, inner.predict(ds.row(0)));
+        let t0 = std::time::Instant::now();
+        assert_eq!(e.predict(ds.row(1)), inner.predict(ds.row(1)));
+        assert!(t0.elapsed() < Duration::from_millis(30), "second batch must not stall");
+    }
+
+    #[test]
+    fn poisoned_rows_cover_width_and_value_faults() {
+        let rows = poisoned_rows(10);
+        assert!(rows.iter().any(|(_, r)| r.iter().any(|v| v.is_nan())));
+        assert!(rows.iter().any(|(_, r)| r.len() != 10));
+        assert!(rows.iter().any(|(_, r)| r.is_empty()));
+    }
+}

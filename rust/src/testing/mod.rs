@@ -1,5 +1,6 @@
 //! In-repo property-testing harness (no proptest offline — see DESIGN.md).
 
+pub mod fault;
 pub mod inject;
 pub mod prop;
 pub mod sched;

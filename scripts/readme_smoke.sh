@@ -68,6 +68,18 @@ arbors bench --exp serving --threads 2
 # for CI while still crossing re-plan boundaries.
 arbors bench --exp adaptive --threads 2 --smoke
 
+# Robust serving (ISSUE 10): --degrade arms overload-triggered graceful
+# degradation (NA is deliberately slow, so a cheaper >=99%-agreement
+# fallback always exists for the selector to arm).
+arbors serve --dataset magic --n 2000 --engine NA \
+    --requests 500 --threads 2 --degrade
+
+# Overload sweep, degradation off vs on; the magic/ovl* gate series go
+# to a throwaway history file here, never the tracked one (direct binary
+# call: env-prefixing a shell function would leak the assignment).
+ARBORS_BENCH_DATA=/tmp/overload_data.js \
+    rust/target/release/arbors bench --exp overload --threads 2 --smoke
+
 # Observability (ISSUE 6): perf-history smoke grid + regression gate on a
 # throwaway history file (never the tracked dev/bench/data.js), the
 # tracing-overhead harness, the per-tier SIMD-op profile, and a span
